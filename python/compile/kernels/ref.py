@@ -1,0 +1,60 @@
+"""Pure-jnp reference oracle for the Pallas kernels.
+
+Everything in this module is the *specification*: the Pallas kernels in
+``gaussian_score.py`` / ``gaussian_gram.py`` must match these functions to
+float32 tolerance for every shape/dtype the AOT buckets cover. The pytest
+suite (``python/tests/test_kernels.py``) sweeps shapes with hypothesis and
+asserts allclose against this module.
+
+Math (paper eq. (13), (18)):
+
+    K(a, b)   = exp(-||a - b||^2 / (2 s^2))
+    dist2(z)  = K(z, z) - 2 sum_i alpha_i K(x_i, z) + W
+              = 1 - 2 k(z)^T alpha + W          (Gaussian => K(z,z)=1)
+
+where ``W = alpha^T K(SV, SV) alpha`` is a per-model constant that the
+caller precomputes once (the Rust coordinator does this at model-build
+time, so the scoring graph never recomputes the SV x SV gram).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sqdist(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Pairwise squared euclidean distances.
+
+    a: (n, m), b: (k, m)  ->  (n, k).
+
+    Uses the expanded form ||a||^2 + ||b||^2 - 2 a.b^T (same algebra the
+    Pallas kernel uses on the MXU) clamped at zero to kill negative
+    round-off.
+    """
+    an = jnp.sum(a * a, axis=1, keepdims=True)  # (n, 1)
+    bn = jnp.sum(b * b, axis=1)[None, :]  # (1, k)
+    d2 = an + bn - 2.0 * (a @ b.T)
+    return jnp.maximum(d2, 0.0)
+
+
+def gaussian_gram(a: jnp.ndarray, b: jnp.ndarray, bw) -> jnp.ndarray:
+    """Gaussian kernel matrix K[i, j] = exp(-||a_i - b_j||^2 / (2 bw^2))."""
+    return jnp.exp(-sqdist(a, b) / (2.0 * bw * bw))
+
+
+def svdd_dist2(
+    z: jnp.ndarray, sv: jnp.ndarray, alpha: jnp.ndarray, bw, w
+) -> jnp.ndarray:
+    """Kernel distance-to-center squared for each row of ``z``.
+
+    z: (b, m) scoring batch; sv: (s, m) support vectors (padded rows carry
+    alpha = 0 and therefore drop out); alpha: (s,); bw scalar bandwidth;
+    w scalar = alpha^T K(sv, sv) alpha. Returns (b,) float32.
+    """
+    k = gaussian_gram(z, sv, bw)  # (b, s)
+    return 1.0 - 2.0 * (k @ alpha) + w
+
+
+def svdd_w(sv: jnp.ndarray, alpha: jnp.ndarray, bw) -> jnp.ndarray:
+    """The model constant W = alpha^T K(SV, SV) alpha."""
+    return alpha @ gaussian_gram(sv, sv, bw) @ alpha

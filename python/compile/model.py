@@ -1,0 +1,43 @@
+"""L2: the JAX compute graphs the Rust coordinator executes via PJRT.
+
+Two graphs, both built on the L1 Pallas kernels:
+
+- ``score_batch`` — paper eq. (18): kernel distance of a scoring batch to
+  the model center. This is the serve-path graph (grid scoring, F1
+  evaluation, outlier streams).
+- ``gram`` — K(X, X) of a (padded) union sample, the input to the Rust
+  SMO solve inside each Algorithm-1 iteration.
+
+Shapes are static per AOT bucket (see ``aot.py``); the Rust side pads
+batches / SV sets up to the bucket and masks results. Nothing in this
+module runs at serve time — ``make artifacts`` lowers these functions to
+HLO text once, and the Rust runtime loads the text.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from compile.kernels.gaussian_gram import gaussian_gram
+from compile.kernels.gaussian_score import svdd_score
+
+
+def score_batch(z, sv, alpha, bw, w):
+    """dist2 for each row of z. All inputs f32; bw/w are shape-(1,).
+
+    Returns a 1-tuple so the HLO entry computation is a tuple and the
+    Rust side can unwrap with ``to_tuple1`` (see aot_recipe / gen_hlo).
+    """
+    return (svdd_score(z, sv, alpha, bw, w),)
+
+
+def gram(x, bw):
+    """K(X, X) of the padded sample block. Returns a 1-tuple (see above)."""
+    return (gaussian_gram(x, bw),)
+
+
+def score_batch_ref(z, sv, alpha, bw, w):
+    """Pure-jnp L2 graph (no Pallas), kept for A/B in tests and perf work."""
+    from compile.kernels import ref
+
+    return (ref.svdd_dist2(z, sv, alpha, bw[0], w[0]).astype(jnp.float32),)

@@ -1,0 +1,63 @@
+"""AOT export tests: every bucket lowers to parseable HLO text with the
+expected entry layout, and the manifest indexes all artifacts."""
+
+import json
+import os
+import re
+
+import pytest
+
+from compile import aot
+
+
+@pytest.fixture(scope="module")
+def exported(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    entries = aot.export_all(str(out))
+    return str(out), entries
+
+
+def test_all_buckets_exported(exported):
+    out, entries = exported
+    names = {e["name"] for e in entries}
+    for m in aot.FEATURE_DIMS:
+        for b in aot.SCORE_BATCHES:
+            assert f"score_m{m}_s{aot.SV_PAD}_b{b}" in names
+        assert f"gram_n{aot.GRAM_N}_m{m}" in names
+    assert len(entries) == len(aot.FEATURE_DIMS) * (len(aot.SCORE_BATCHES) + 1)
+
+
+def test_hlo_text_shape_contract(exported):
+    out, entries = exported
+    for e in entries:
+        text = open(os.path.join(out, e["file"])).read()
+        assert text.startswith("HloModule"), e["name"]
+        m = re.search(r"entry_computation_layout=\{\((.*?)\)->", text)
+        assert m, f"no entry layout in {e['name']}"
+        params = m.group(1)
+        if e["kind"] == "score":
+            assert f"f32[{e['b']},{e['m']}]" in params  # z
+            assert f"f32[{e['s']},{e['m']}]" in params  # sv
+            assert f"f32[{e['b']}]" in text.split("->")[1].split("}")[0]
+        else:
+            assert f"f32[{aot.GRAM_N},{e['m']}]" in params
+
+
+def test_hlo_output_is_tuple(exported):
+    """return_tuple=True contract: entry returns (f32[...]) as a tuple."""
+    out, entries = exported
+    for e in entries:
+        text = open(os.path.join(out, e["file"])).read()
+        layout = re.search(r"entry_computation_layout=\{\(.*?\)->\((.*?)\)\}", text)
+        assert layout, e["name"]
+
+
+def test_manifest_roundtrip(exported):
+    out, entries = exported
+    man = json.load(open(os.path.join(out, "manifest.json")))
+    assert man["version"] == 1
+    assert man["sv_pad"] == aot.SV_PAD
+    assert {e["name"] for e in man["entries"]} == {e["name"] for e in entries}
+    for e in man["entries"]:
+        assert os.path.exists(os.path.join(out, e["file"]))
+        assert len(e["sha256_16"]) == 16

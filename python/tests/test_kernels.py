@@ -1,0 +1,192 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes (within the bucket-compatible lattice: batch a
+multiple of TILE_B, gram rows a multiple of TILE_R) and data scales;
+assert_allclose against ref.py is the core correctness signal for the
+whole stack — the Rust runtime executes exactly these lowered graphs.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from compile.kernels.gaussian_gram import TILE_R, gaussian_gram
+from compile.kernels.gaussian_score import TILE_B, svdd_score
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rng(seed):
+    return np.random.default_rng(seed)
+
+
+def make_model(r, s, m, n_real=None):
+    """A random padded SVDD model: sv, alpha (zero beyond n_real), bw, w."""
+    sv = r.normal(size=(s, m)).astype(np.float32)
+    n_real = s if n_real is None else n_real
+    alpha = np.zeros(s, dtype=np.float32)
+    a = r.uniform(0.1, 1.0, size=n_real).astype(np.float32)
+    alpha[:n_real] = a / a.sum()
+    bw = np.float32(r.uniform(0.5, 3.0))
+    w = float(ref.svdd_w(jnp.asarray(sv), jnp.asarray(alpha), bw))
+    return sv, alpha, bw, np.float32(w)
+
+
+# ---------------------------------------------------------------- score
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    bt=st.integers(1, 3),
+    m=st.sampled_from([1, 2, 3, 9, 17, 41]),
+    s=st.sampled_from([8, 64, 512]),
+    n_real=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_score_matches_ref(bt, m, s, n_real, seed):
+    r = rng(seed)
+    b = bt * TILE_B
+    z = r.normal(size=(b, m)).astype(np.float32) * 2.0
+    sv, alpha, bw, w = make_model(r, s, m, n_real=min(n_real, s))
+    got = np.asarray(
+        svdd_score(z, sv, alpha, np.array([bw]), np.array([w]))
+    )
+    want = np.asarray(ref.svdd_dist2(z, sv, alpha, bw, w))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_score_padding_rows_are_inert():
+    """Extra SV rows with alpha=0 must not change any score."""
+    r = rng(7)
+    m = 2
+    z = r.normal(size=(TILE_B, m)).astype(np.float32)
+    sv8, alpha8, bw, _ = make_model(r, 8, m)
+    w = np.float32(ref.svdd_w(jnp.asarray(sv8), jnp.asarray(alpha8), bw))
+    base = np.asarray(
+        svdd_score(z, sv8, alpha8, np.array([bw]), np.array([w]))
+    )
+    # pad to 64 with huge garbage coordinates but alpha = 0
+    sv64 = np.full((64, m), 1e6, dtype=np.float32)
+    sv64[:8] = sv8
+    alpha64 = np.zeros(64, dtype=np.float32)
+    alpha64[:8] = alpha8
+    padded = np.asarray(
+        svdd_score(z, sv64, alpha64, np.array([bw]), np.array([w]))
+    )
+    np.testing.assert_allclose(padded, base, rtol=1e-6, atol=1e-6)
+
+
+def test_score_self_point_is_inside():
+    """A training point that IS the single SV has dist2 = 1 - 2 + 1 = 0."""
+    m = 3
+    sv = np.zeros((8, m), dtype=np.float32)
+    alpha = np.zeros(8, dtype=np.float32)
+    alpha[0] = 1.0
+    bw = np.float32(1.0)
+    w = np.float32(ref.svdd_w(jnp.asarray(sv), jnp.asarray(alpha), bw))
+    z = np.zeros((TILE_B, m), dtype=np.float32)
+    got = np.asarray(svdd_score(z, sv, alpha, np.array([bw]), np.array([w])))
+    np.testing.assert_allclose(got, np.zeros(TILE_B), atol=1e-6)
+
+
+def test_score_monotone_in_distance():
+    """dist2 increases as z moves away from a single-SV center."""
+    m = 2
+    sv = np.zeros((8, m), dtype=np.float32)
+    alpha = np.zeros(8, dtype=np.float32)
+    alpha[0] = 1.0
+    bw = np.float32(1.0)
+    w = np.float32(1.0)  # K(0,0) = 1
+    z = np.zeros((TILE_B, m), dtype=np.float32)
+    z[:, 0] = np.linspace(0, 5, TILE_B)
+    got = np.asarray(svdd_score(z, sv, alpha, np.array([bw]), np.array([w])))
+    assert np.all(np.diff(got) > 0)
+
+
+def test_score_rejects_bad_batch():
+    with pytest.raises(ValueError):
+        svdd_score(
+            np.zeros((100, 2), np.float32),
+            np.zeros((8, 2), np.float32),
+            np.zeros(8, np.float32),
+            np.array([1.0], np.float32),
+            np.array([1.0], np.float32),
+        )
+
+
+def test_score_rejects_dim_mismatch():
+    with pytest.raises(ValueError):
+        svdd_score(
+            np.zeros((TILE_B, 3), np.float32),
+            np.zeros((8, 2), np.float32),
+            np.zeros(8, np.float32),
+            np.array([1.0], np.float32),
+            np.array([1.0], np.float32),
+        )
+
+
+# ----------------------------------------------------------------- gram
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    nt=st.integers(1, 4),
+    m=st.sampled_from([1, 2, 5, 9, 41]),
+    scale=st.floats(0.1, 10.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gram_matches_ref(nt, m, scale, seed):
+    r = rng(seed)
+    n = nt * TILE_R
+    x = (r.normal(size=(n, m)) * scale).astype(np.float32)
+    bw = np.float32(r.uniform(0.3, 4.0))
+    got = np.asarray(gaussian_gram(x, np.array([bw])))
+    want = np.asarray(ref.gaussian_gram(x, x, bw))
+    # Both sides are f32 expanded-form distances but reduce in different
+    # orders; the cancellation error in d2 is O(||x||^2 * 1e-7) and gets
+    # amplified by exp(.../2bw^2), so the tolerance must scale with the
+    # data norm (scale <= 10, m <= 41, bw >= 0.3 -> ~1e-3 worst case).
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+def test_gram_diagonal_is_one():
+    r = rng(3)
+    x = r.normal(size=(TILE_R * 2, 9)).astype(np.float32)
+    k = np.asarray(gaussian_gram(x, np.array([1.5], np.float32)))
+    np.testing.assert_allclose(np.diag(k), np.ones(len(x)), atol=1e-6)
+
+
+def test_gram_symmetric():
+    r = rng(4)
+    x = r.normal(size=(TILE_R, 5)).astype(np.float32)
+    k = np.asarray(gaussian_gram(x, np.array([0.8], np.float32)))
+    np.testing.assert_allclose(k, k.T, atol=1e-5)
+
+
+def test_gram_values_in_unit_interval():
+    r = rng(5)
+    x = (r.normal(size=(TILE_R, 3)) * 50).astype(np.float32)
+    k = np.asarray(gaussian_gram(x, np.array([0.5], np.float32)))
+    assert np.all(k >= 0.0) and np.all(k <= 1.0 + 1e-6)
+
+
+def test_gram_bandwidth_limit_behaviour():
+    """bw -> inf: K -> all-ones. bw -> 0: K -> identity."""
+    r = rng(6)
+    x = r.normal(size=(TILE_R, 4)).astype(np.float32)
+    k_wide = np.asarray(gaussian_gram(x, np.array([1e4], np.float32)))
+    np.testing.assert_allclose(k_wide, np.ones_like(k_wide), atol=1e-4)
+    # bw = 1e-2 is the narrowest bandwidth the expanded-form f32 distance
+    # supports: cancellation error in d2 is O(1e-6), which must stay well
+    # below 2*bw^2 for exp(-d2 / 2 bw^2) to saturate correctly.
+    k_narrow = np.asarray(gaussian_gram(x, np.array([1e-2], np.float32)))
+    np.testing.assert_allclose(k_narrow, np.eye(len(x)), atol=1e-2)
+
+
+def test_gram_rejects_bad_rows():
+    with pytest.raises(ValueError):
+        gaussian_gram(np.zeros((33, 2), np.float32), np.array([1.0], np.float32))

@@ -1,0 +1,59 @@
+"""L2 graph tests: score_batch / gram wrappers + pallas-vs-jnp A/B."""
+
+import numpy as np
+
+from compile import model
+from compile.kernels import ref
+from compile.kernels.gaussian_score import TILE_B
+
+
+def test_score_batch_tuple_contract():
+    """L2 returns a 1-tuple (the AOT contract for rust to_tuple1)."""
+    z = np.zeros((TILE_B, 2), np.float32)
+    sv = np.zeros((8, 2), np.float32)
+    alpha = np.zeros(8, np.float32)
+    alpha[0] = 1.0
+    out = model.score_batch(
+        z, sv, alpha, np.array([1.0], np.float32), np.array([1.0], np.float32)
+    )
+    assert isinstance(out, tuple) and len(out) == 1
+    assert out[0].shape == (TILE_B,)
+    assert out[0].dtype == np.float32
+
+
+def test_gram_tuple_contract():
+    x = np.zeros((64, 9), np.float32)
+    out = model.gram(x, np.array([2.0], np.float32))
+    assert isinstance(out, tuple) and len(out) == 1
+    assert out[0].shape == (64, 64)
+
+
+def test_pallas_graph_matches_jnp_graph():
+    """The Pallas L2 graph and the pure-jnp L2 graph agree (A/B used in perf)."""
+    r = np.random.default_rng(11)
+    z = r.normal(size=(2 * TILE_B, 9)).astype(np.float32)
+    sv = r.normal(size=(64, 9)).astype(np.float32)
+    alpha = np.zeros(64, np.float32)
+    a = r.uniform(0.2, 1.0, size=16).astype(np.float32)
+    alpha[:16] = a / a.sum()
+    bw = np.array([1.7], np.float32)
+    w = np.array([float(ref.svdd_w(sv, alpha, bw[0]))], np.float32)
+    got = np.asarray(model.score_batch(z, sv, alpha, bw, w)[0])
+    want = np.asarray(model.score_batch_ref(z, sv, alpha, bw, w)[0])
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_score_decision_consistency():
+    """Points far outside score above points at the center (sanity of the
+    decision geometry the Rust coordinator relies on)."""
+    r = np.random.default_rng(12)
+    sv = r.normal(size=(32, 2)).astype(np.float32) * 0.3
+    alpha = np.full(32, 1 / 32, np.float32)
+    bw = np.array([1.0], np.float32)
+    w = np.array([float(ref.svdd_w(sv, alpha, bw[0]))], np.float32)
+    z = np.zeros((TILE_B, 2), np.float32)
+    z[64:, :] = 25.0  # far away
+    d = np.asarray(model.score_batch(z, sv, alpha, bw, w)[0])
+    assert d[64:].min() > d[:64].max()
+    # far points approach the asymptote 1 + W
+    np.testing.assert_allclose(d[64:], 1.0 + w[0], atol=1e-5)

@@ -1,0 +1,81 @@
+//! Figs 11 & 12 — Tennessee-Eastman-like data: F1-measure ratio and
+//! processing time vs training size (paper section V-B).
+//!
+//! Paper protocol: 41 variables, sample size 42 (= #vars + 1), training
+//! sizes 10 000..100 000 in steps of 5 000, fixed scoring mix of normal
+//! + 20 fault modes. We run a coarser ladder and cap the *full* solves
+//! (env FASTSVDD_TE_FULL_CAP, default 30 000 — the paper's own point is
+//! that full training at 100 k takes minutes; sampling runs at every
+//! size). Expected shape: ratio ~ 1 flat; full time grows, sampling flat.
+
+use fastsvdd::baselines::train_full;
+use fastsvdd::bench::{emit, scaled};
+use fastsvdd::data::tennessee::{TennesseePlant, DIM};
+use fastsvdd::sampling::{SamplingConfig, SamplingTrainer};
+use fastsvdd::scoring::{F1Score, Scorer};
+use fastsvdd::svdd::bandwidth::median_heuristic;
+use fastsvdd::svdd::SvddParams;
+use fastsvdd::util::tables::{f, i, Table};
+use fastsvdd::util::timer::Stopwatch;
+
+fn main() {
+    let full_cap: usize = std::env::var("FASTSVDD_TE_FULL_CAP")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(100_000);
+    let sizes: Vec<usize> = [10_000, 20_000, 40_000, 70_000, 100_000]
+        .iter()
+        .map(|&n| scaled(n, 2000))
+        .collect();
+    let plant = TennesseePlant::default();
+    let scoring = plant.scoring(scaled(10_000, 1000), scaled(10_000, 1000), 99);
+    let bw = median_heuristic(&plant.training(2000, 1), 20_000, 1);
+    let params = SvddParams::gaussian(bw, 0.005);
+    println!("tennessee: bw={bw:.2} f=0.005 sample_size={}", DIM + 1);
+
+    let mut t = Table::new(
+        "Figs 11+12: Tennessee Eastman — F1 ratio & time vs training size",
+        &["#train", "F1_full", "F1_sampling", "ratio", "t_full_s", "t_sampling_s", "speedup"],
+    );
+    for &n in &sizes {
+        let train_data = plant.training(n, 42);
+
+        let cfg = SamplingConfig { sample_size: DIM + 1, ..Default::default() };
+        let sw = Stopwatch::start();
+        let samp = SamplingTrainer::new(params, cfg).train(&train_data, 7).unwrap().model;
+        let t_samp = sw.elapsed_secs();
+        let f1_samp = F1Score::compute(
+            &scoring.labels,
+            &Scorer::native(&samp).inside_batch(&scoring.data).unwrap(),
+        );
+
+        let (f1_full_s, t_full_s, ratio_s, speedup_s) = if n <= full_cap {
+            let sw = Stopwatch::start();
+            let full = train_full(&train_data, &params).unwrap().model;
+            let t_full = sw.elapsed_secs();
+            let f1_full = F1Score::compute(
+                &scoring.labels,
+                &Scorer::native(&full).inside_batch(&scoring.data).unwrap(),
+            );
+            (
+                f(f1_full.f1, 4),
+                f(t_full, 3),
+                f(f1_samp.f1 / f1_full.f1.max(1e-12), 4),
+                f(t_full / t_samp.max(1e-9), 1),
+            )
+        } else {
+            ("(capped)".into(), "(capped)".into(), "-".into(), "-".into())
+        };
+
+        t.row(vec![
+            i(n),
+            f1_full_s,
+            f(f1_samp.f1, 4),
+            ratio_s,
+            t_full_s,
+            f(t_samp, 3),
+            speedup_s,
+        ]);
+    }
+    emit("fig1112_tennessee", &t);
+}

@@ -1,0 +1,148 @@
+//! Figs 13–16 — the random-polygon simulation study (paper section VI).
+//!
+//! Protocol: for each vertex count k in {5..30}, generate random
+//! polygons (paper: 20 per k), sample 600 interior training points,
+//! label the 200x200 grid of the bounding box by true polygon
+//! membership, train full + sampling (n = 5) for each Gaussian
+//! bandwidth s in the paper's list, compute F1 of "inside", and report
+//! box-whisker stats of the ratio F1_sampling / F1_full:
+//!
+//! - Fig 13: two example polygons (ASCII + CSV)
+//! - Fig 14: ratio of the *best-s* F1 per polygon
+//! - Fig 15: ratio per fixed s (six panels)
+//! - Fig 16: pooled over all s
+
+use fastsvdd::baselines::train_full;
+use fastsvdd::bench::{emit, emit_text, scaled};
+use fastsvdd::data::grid::Grid;
+use fastsvdd::data::polygon::Polygon;
+use fastsvdd::sampling::{SamplingConfig, SamplingTrainer};
+use fastsvdd::scoring::{F1Score, Scorer};
+use fastsvdd::svdd::{SvddModel, SvddParams};
+use fastsvdd::util::stats::BoxStats;
+use fastsvdd::util::tables::{f, i, Table};
+
+const S_VALUES: [f64; 10] = [1.0, 1.44, 1.88, 2.33, 2.77, 3.22, 3.66, 4.11, 4.55, 5.0];
+const VERTEX_COUNTS: [usize; 6] = [5, 10, 15, 20, 25, 30];
+const TRAIN_POINTS: usize = 600;
+const OUTLIER_FRACTION: f64 = 0.01;
+const SAMPLE_SIZE: usize = 5;
+
+fn f1_on_grid(model: &SvddModel, grid: &Grid, truth: &[bool]) -> f64 {
+    let inside = Scorer::native(model).inside_batch(&grid.points()).unwrap();
+    F1Score::compute(truth, &inside).f1
+}
+
+fn boxstats_row(label: String, xs: &[f64]) -> Vec<String> {
+    let b = BoxStats::from(xs);
+    vec![
+        label,
+        f(b.min, 3),
+        f(b.q1, 3),
+        f(b.median, 3),
+        f(b.q3, 3),
+        f(b.max, 3),
+        f(b.mean, 3),
+        i(b.n),
+    ]
+}
+
+const BOX_HEADERS: [&str; 8] = ["group", "min", "q1", "median", "q3", "max", "mean", "n"];
+
+fn main() {
+    let polys_per_k: usize = std::env::var("FASTSVDD_POLY_REPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or_else(|| scaled(20, 3));
+    // grid matches the paper's 200x200; can be shrunk for smoke runs
+    let grid_n: usize = std::env::var("FASTSVDD_POLY_GRID")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(200);
+
+    // ---- Fig 13: example polygons ----
+    for (idx, k) in [(0u64, 7usize), (1u64, 25usize)] {
+        let p = Polygon::random(k, 3.0, 5.0, 1000 + idx);
+        let mut csv = String::from("x,y\n");
+        for &(x, y) in p.vertices() {
+            csv.push_str(&format!("{x},{y}\n"));
+        }
+        emit_text(&format!("fig13_polygon_k{k}.csv"), &csv);
+    }
+    println!("Fig 13: example polygon vertex CSVs written to results/");
+
+    // ---- the sweep ----
+    // ratios[k_index][s_index][poly] = F1_sampling / F1_full
+    let mut ratios = vec![vec![Vec::new(); S_VALUES.len()]; VERTEX_COUNTS.len()];
+    let mut best_ratio = vec![Vec::new(); VERTEX_COUNTS.len()]; // Fig 14
+
+    for (ki, &k) in VERTEX_COUNTS.iter().enumerate() {
+        for poly_idx in 0..polys_per_k {
+            let seed = (k * 1000 + poly_idx) as u64;
+            let poly = Polygon::random(k, 3.0, 5.0, seed);
+            let train = poly.sample_interior(TRAIN_POINTS, seed ^ 0xABCD);
+            let ((x0, y0), (x1, y1)) = poly.bbox();
+            let grid = Grid { nx: grid_n, ny: grid_n, x0, x1, y0, y1 };
+            let truth = grid.labels_from(|x, y| poly.contains(x, y));
+
+            let mut best_full = f64::NEG_INFINITY;
+            let mut best_samp = f64::NEG_INFINITY;
+            for (si, &s) in S_VALUES.iter().enumerate() {
+                let params = SvddParams::gaussian(s, OUTLIER_FRACTION);
+                let full = train_full(&train, &params).unwrap().model;
+                let cfg = SamplingConfig { sample_size: SAMPLE_SIZE, ..Default::default() };
+                let samp = SamplingTrainer::new(params, cfg)
+                    .train(&train, seed ^ 0x5A5A)
+                    .unwrap()
+                    .model;
+                let f1f = f1_on_grid(&full, &grid, &truth);
+                let f1s = f1_on_grid(&samp, &grid, &truth);
+                ratios[ki][si].push(f1s / f1f.max(1e-12));
+                best_full = best_full.max(f1f);
+                best_samp = best_samp.max(f1s);
+            }
+            best_ratio[ki].push(best_samp / best_full.max(1e-12));
+        }
+    }
+
+    // ---- Fig 14: best-s ratio ----
+    let mut t14 = Table::new(
+        format!("Fig 14: ratio of max-F1 (best s) vs #vertices ({polys_per_k} polygons/k)"),
+        &BOX_HEADERS,
+    );
+    for (ki, &k) in VERTEX_COUNTS.iter().enumerate() {
+        t14.row(boxstats_row(format!("k={k}"), &best_ratio[ki]));
+    }
+    emit("fig14_poly_best_s", &t14);
+
+    // ---- Fig 15: per fixed s (the paper shows six panels) ----
+    for (si, &s) in S_VALUES.iter().enumerate() {
+        // paper panels: s = 1, 1.4, 2.3, 3.2(?), 4.1, 5 — we emit all 10
+        let mut t15 = Table::new(
+            format!("Fig 15 panel: F1 ratio vs #vertices at s={s}"),
+            &BOX_HEADERS,
+        );
+        for (ki, &k) in VERTEX_COUNTS.iter().enumerate() {
+            t15.row(boxstats_row(format!("k={k}"), &ratios[ki][si]));
+        }
+        emit(&format!("fig15_poly_s{si}"), &t15);
+    }
+
+    // ---- Fig 16: pooled over s ----
+    let mut t16 = Table::new("Fig 16: F1 ratio vs #vertices pooled over all s", &BOX_HEADERS);
+    let mut all_ratios = Vec::new();
+    for (ki, &k) in VERTEX_COUNTS.iter().enumerate() {
+        let pooled: Vec<f64> = ratios[ki].iter().flatten().copied().collect();
+        all_ratios.extend_from_slice(&pooled);
+        t16.row(boxstats_row(format!("k={k}"), &pooled));
+    }
+    emit("fig16_poly_overall", &t16);
+
+    let frac_above_09 =
+        all_ratios.iter().filter(|&&r| r > 0.9).count() as f64 / all_ratios.len() as f64;
+    println!(
+        "overall: {:.1}% of F1 ratios > 0.9 (paper: all but one outlier)  n={}",
+        frac_above_09 * 100.0,
+        all_ratios.len()
+    );
+}

@@ -1,0 +1,66 @@
+//! Fig 1 — full-SVDD training time vs training-set size (Two-Donut).
+//!
+//! The paper shows the cost curve climbing to ~32 min at 1.33 M rows.
+//! We measure the solver on a doubling ladder of sizes, fit a power law
+//! `time = c * n^p` (log-log least squares), and report the
+//! extrapolation to the paper's 1.33 M alongside the paper's value —
+//! absolute numbers differ (different solver + hardware), the *shape*
+//! (superlinear growth, prohibitive at millions of rows) is the claim
+//! under test.
+
+use fastsvdd::baselines::train_full;
+use fastsvdd::bench::{emit, emit_text, paper, scaled};
+use fastsvdd::util::stats::power_fit;
+use fastsvdd::util::tables::{f, i, Table};
+use fastsvdd::util::timer::fmt_duration;
+
+fn main() {
+    let d = paper::TWO_DONUT;
+    let max: usize = std::env::var("FASTSVDD_FIG1_MAX")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(160_000);
+    let mut sizes = vec![];
+    let mut n = 5_000usize;
+    while n <= max {
+        sizes.push(scaled(n, 1000));
+        n *= 2;
+    }
+
+    let mut t = Table::new(
+        "Fig 1: full-SVDD training time vs size (Two-Donut)",
+        &["#Obs", "Time", "R^2", "#SV"],
+    );
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for &rows in &sizes {
+        let data = d.generate(rows, 42);
+        let out = train_full(&data, &d.params()).expect("train failed");
+        xs.push(rows as f64);
+        ys.push(out.seconds);
+        t.row(vec![
+            i(rows),
+            fmt_duration(out.seconds),
+            f(out.model.r2(), 4),
+            i(out.model.num_sv()),
+        ]);
+    }
+    emit("fig1_training_time", &t);
+
+    let (c, p) = power_fit(&xs, &ys);
+    let extrapolated = c * (d.full_rows as f64).powf(p);
+    let summary = format!(
+        "power fit: time ~ {c:.3e} * n^{p:.2}\n\
+         extrapolated full solve at n={}: {}  (paper's LIBSVM: {})\n\
+         shape check: full-method cost grows with n while Table II's\n\
+         sampling run on the same n is measured in milliseconds — the\n\
+         gap the paper's Fig 1 motivates (exponent p depends on the\n\
+         solver; LIBSVM's was superlinear, our WSS2+cache SMO fits\n\
+         p = {p:.2} over this range).\n",
+        d.full_rows,
+        fmt_duration(extrapolated),
+        d.paper_time_full,
+    );
+    print!("{summary}");
+    emit_text("fig1_extrapolation.txt", &summary);
+}

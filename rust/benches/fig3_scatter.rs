@@ -1,0 +1,41 @@
+//! Fig 3 — scatter plots of the three data sets. Emits a CSV per data
+//! set (for plotting) plus a coarse ASCII render so the shapes can be
+//! eyeballed directly in the bench log.
+
+use fastsvdd::bench::{emit_text, paper};
+use fastsvdd::data::grid::Grid;
+use fastsvdd::util::matrix::Matrix;
+
+fn ascii_render(data: &Matrix, w: usize, h: usize) -> String {
+    let g = Grid::covering(data, w, h, 0.05);
+    let mut cells = vec![false; w * h];
+    for r in 0..data.rows() {
+        let (x, y) = (data.get(r, 0), data.get(r, 1));
+        let jx = (((x - g.x0) / (g.x1 - g.x0)) * (w - 1) as f64).round() as usize;
+        let jy = (((y - g.y0) / (g.y1 - g.y0)) * (h - 1) as f64).round() as usize;
+        cells[jy.min(h - 1) * w + jx.min(w - 1)] = true;
+    }
+    let mut s = String::new();
+    for row in (0..h).rev() {
+        for col in 0..w {
+            s.push(if cells[row * w + col] { '*' } else { ' ' });
+        }
+        s.push('\n');
+    }
+    s
+}
+
+fn main() {
+    for d in paper::ALL {
+        let data = d.generate(4000, 42);
+        let mut csv = String::from("x,y\n");
+        for i in 0..data.rows() {
+            csv.push_str(&format!("{},{}\n", data.get(i, 0), data.get(i, 1)));
+        }
+        emit_text(&format!("fig3_scatter_{}.csv", d.name), &csv);
+        let art = ascii_render(&data, 72, 28);
+        println!("--- Fig 3: {} ---\n{art}", d.name);
+        emit_text(&format!("fig3_scatter_{}.txt", d.name), &art);
+    }
+    println!("scatter CSVs written to results/");
+}

@@ -1,0 +1,63 @@
+//! Figs 4, 5, 6 — sampling-method run time and iteration count vs
+//! sample size n (x-axis 3..=20), one figure per data set (Banana,
+//! Star, Two-Donut). The paper marks the minimum-time sample size with
+//! a reference line; we print it per table.
+//!
+//! Expected shape: time has a U-ish curve (tiny n -> many iterations;
+//! large n -> costlier solves), iterations decrease in n.
+
+use fastsvdd::bench::{emit, paper, scaled};
+use fastsvdd::sampling::{SamplingConfig, SamplingTrainer};
+use fastsvdd::util::stats::mean;
+use fastsvdd::util::tables::{f, i, Table};
+use fastsvdd::util::timer::Stopwatch;
+
+fn main() {
+    let reps: usize = std::env::var("FASTSVDD_SWEEP_REPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(5);
+    for (fig, d) in [(4, paper::BANANA), (5, paper::STAR), (6, paper::TWO_DONUT)] {
+        let rows = scaled(d.full_rows.min(100_000), 5000);
+        let data = d.generate(rows, 42);
+        let mut t = Table::new(
+            format!("Fig {fig}: {} — run time & iterations vs sample size (rows={rows}, reps={reps})", d.name),
+            &["n", "time_mean_s", "time_min_s", "iters_mean", "R2_mean", "SV_mean"],
+        );
+        let mut best = (f64::INFINITY, 0usize);
+        for n in 3..=20 {
+            let mut times = Vec::new();
+            let mut iters = Vec::new();
+            let mut r2s = Vec::new();
+            let mut svs = Vec::new();
+            for rep in 0..reps {
+                let cfg = SamplingConfig { sample_size: n, ..Default::default() };
+                let sw = Stopwatch::start();
+                let out = SamplingTrainer::new(d.params(), cfg)
+                    .train(&data, 1000 + rep as u64)
+                    .expect("sampling failed");
+                times.push(sw.elapsed_secs());
+                iters.push(out.iterations as f64);
+                r2s.push(out.model.r2());
+                svs.push(out.model.num_sv() as f64);
+            }
+            let tm = mean(&times);
+            if tm < best.0 {
+                best = (tm, n);
+            }
+            t.row(vec![
+                i(n),
+                f(tm, 4),
+                f(times.iter().cloned().fold(f64::INFINITY, f64::min), 4),
+                f(mean(&iters), 1),
+                f(mean(&r2s), 4),
+                f(mean(&svs), 1),
+            ]);
+        }
+        emit(&format!("fig{fig}_{}_sweep", d.name), &t);
+        println!(
+            "minimum-time sample size for {}: n={} ({:.3}s)  [paper: n={}]\n",
+            d.name, best.1, best.0, d.sample_size
+        );
+    }
+}

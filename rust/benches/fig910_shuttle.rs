@@ -1,0 +1,66 @@
+//! Figs 9 & 10 — Shuttle-like data: F1-measure ratio
+//! (sampling / full) and processing time vs training-set size.
+//!
+//! Paper protocol (section V-A): train on class-1 rows only, score a
+//! held-out mix, sample size = #variables + 1 = 10, training sizes
+//! 3 000..40 000. Expected shape: ratio ~ 1 flat; full time grows with
+//! n while sampling time stays flat.
+
+use fastsvdd::baselines::train_full;
+use fastsvdd::bench::{emit, scaled};
+use fastsvdd::data::shuttle::{Shuttle, DIM};
+use fastsvdd::sampling::{SamplingConfig, SamplingTrainer};
+use fastsvdd::scoring::{F1Score, Scorer};
+use fastsvdd::svdd::bandwidth::median_heuristic;
+use fastsvdd::svdd::SvddParams;
+use fastsvdd::util::tables::{f, i, Table};
+use fastsvdd::util::timer::Stopwatch;
+
+fn main() {
+    let sizes: Vec<usize> = [3_000, 5_000, 10_000, 15_000, 20_000, 30_000, 40_000]
+        .iter()
+        .map(|&n| scaled(n, 1000))
+        .collect();
+    let scoring = Shuttle.scoring(scaled(20_000, 2000), 99);
+    // bandwidth from the data scale (paper does not state s); fixed
+    // across sizes so the ratio is apples-to-apples
+    let bw = median_heuristic(&Shuttle.training(2000, 1), 20_000, 1);
+    let params = SvddParams::gaussian(bw, 0.005);
+    println!("shuttle: bw={bw:.2} f=0.005 sample_size={}", DIM + 1);
+
+    let mut t = Table::new(
+        "Figs 9+10: Shuttle — F1 ratio & processing time vs training size",
+        &["#train", "F1_full", "F1_sampling", "ratio", "t_full_s", "t_sampling_s", "speedup"],
+    );
+    for &n in &sizes {
+        let train_data = Shuttle.training(n, 42);
+
+        let sw = Stopwatch::start();
+        let full = train_full(&train_data, &params).unwrap().model;
+        let t_full = sw.elapsed_secs();
+        let f1_full = F1Score::compute(
+            &scoring.labels,
+            &Scorer::native(&full).inside_batch(&scoring.data).unwrap(),
+        );
+
+        let cfg = SamplingConfig { sample_size: DIM + 1, ..Default::default() };
+        let sw = Stopwatch::start();
+        let samp = SamplingTrainer::new(params, cfg).train(&train_data, 7).unwrap().model;
+        let t_samp = sw.elapsed_secs();
+        let f1_samp = F1Score::compute(
+            &scoring.labels,
+            &Scorer::native(&samp).inside_batch(&scoring.data).unwrap(),
+        );
+
+        t.row(vec![
+            i(n),
+            f(f1_full.f1, 4),
+            f(f1_samp.f1, 4),
+            f(f1_samp.f1 / f1_full.f1.max(1e-12), 4),
+            f(t_full, 3),
+            f(t_samp, 3),
+            f(t_full / t_samp.max(1e-9), 1),
+        ]);
+    }
+    emit("fig910_shuttle", &t);
+}

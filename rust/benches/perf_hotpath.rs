@@ -1,0 +1,113 @@
+//! Hot-path micro-benchmarks feeding EXPERIMENTS.md section Perf:
+//!
+//! - L3 solver: small-union SMO solve rate (the Algorithm-1 inner loop)
+//! - L3 trainer: sampling iterations/second end-to-end
+//! - scoring: native rows/s vs XLA rows/s per bucket
+//! - runtime: gram-artifact executions/second
+//! - kernel cache: solve time with vs without cache on a mid-size solve
+
+use std::path::Path;
+
+use fastsvdd::bench::{emit, measure, paper};
+use fastsvdd::runtime::SharedRuntime;
+use fastsvdd::sampling::{GramBackend, SamplingConfig, SamplingTrainer};
+use fastsvdd::scoring::Scorer;
+use fastsvdd::svdd::{train, Kernel};
+use fastsvdd::util::tables::{f, Table};
+
+fn main() {
+    let d = paper::BANANA;
+    let data = d.generate(20_000, 42);
+    let params = d.params();
+    let mut t = Table::new(
+        "Perf: hot paths (mean over measured iters)",
+        &["path", "mean_ms", "min_ms", "throughput"],
+    );
+
+    // L3: small-union solve (typical Algorithm-1 union: ~40 rows)
+    let union = data.gather(&(0..40).collect::<Vec<_>>());
+    let m = measure(3, 30, || train(&union, &params).unwrap());
+    t.row(vec![
+        "smo solve, 40-row union".into(),
+        f(m.mean * 1e3, 3),
+        f(m.min * 1e3, 3),
+        format!("{:.0} solves/s", 1.0 / m.mean),
+    ]);
+
+    // L3: one full sampling train
+    let cfg = SamplingConfig { sample_size: d.sample_size, ..Default::default() };
+    let m = measure(1, 5, || SamplingTrainer::new(params, cfg).train(&data, 7).unwrap());
+    let iters = SamplingTrainer::new(params, cfg).train(&data, 7).unwrap().iterations;
+    t.row(vec![
+        "sampling train, banana 20k".into(),
+        f(m.mean * 1e3, 1),
+        f(m.min * 1e3, 1),
+        format!("{:.0} iters/s", iters as f64 / m.mean),
+    ]);
+
+    // scoring: native
+    let model = train(&data.gather(&(0..3000).collect::<Vec<_>>()), &params).unwrap();
+    let zs = d.generate(8192, 9);
+    let m = measure(2, 10, || Scorer::native(&model).dist2_batch(&zs).unwrap());
+    t.row(vec![
+        format!("native scoring ({} SVs)", model.num_sv()),
+        f(m.mean * 1e3, 2),
+        f(m.min * 1e3, 2),
+        format!("{:.0} rows/s", zs.rows() as f64 / m.mean),
+    ]);
+
+    // scoring + gram: XLA (if artifacts are built)
+    match SharedRuntime::new(Path::new("artifacts")) {
+        Ok(rt) => {
+            let scorer = Scorer::xla(&model, &rt);
+            assert!(scorer.is_accelerated());
+            let m = measure(2, 10, || scorer.dist2_batch(&zs).unwrap());
+            t.row(vec![
+                "xla scoring (b4096 bucket)".into(),
+                f(m.mean * 1e3, 2),
+                f(m.min * 1e3, 2),
+                format!("{:.0} rows/s", zs.rows() as f64 / m.mean),
+            ]);
+
+            let small = d.generate(256, 3);
+            let m = measure(2, 20, || scorer.dist2_batch(&small).unwrap());
+            t.row(vec![
+                "xla scoring (b256 bucket)".into(),
+                f(m.mean * 1e3, 3),
+                f(m.min * 1e3, 3),
+                format!("{:.0} rows/s", small.rows() as f64 / m.mean),
+            ]);
+
+            let sample = d.generate(48, 5);
+            let m = measure(2, 20, || rt.gram(&sample, Kernel::gaussian(d.bw)).unwrap());
+            t.row(vec![
+                "xla gram (n64 bucket, 48 rows)".into(),
+                f(m.mean * 1e3, 3),
+                f(m.min * 1e3, 3),
+                format!("{:.0} grams/s", 1.0 / m.mean),
+            ]);
+        }
+        Err(_) => println!("(no artifacts/ — XLA rows skipped; run `make artifacts`)"),
+    }
+
+    // kernel cache ablation: mid-size full solve, tiny vs large cache
+    let mid = data.gather(&(0..4000).collect::<Vec<_>>());
+    let mut p_small = params;
+    p_small.cache_bytes = 1; // one column only
+    let m_nocache = measure(1, 3, || train(&mid, &p_small).unwrap());
+    let m_cache = measure(1, 3, || train(&mid, &params).unwrap());
+    t.row(vec![
+        "full solve 4k rows, 1-col cache".into(),
+        f(m_nocache.mean * 1e3, 1),
+        f(m_nocache.min * 1e3, 1),
+        "-".into(),
+    ]);
+    t.row(vec![
+        "full solve 4k rows, 256MB cache".into(),
+        f(m_cache.mean * 1e3, 1),
+        f(m_cache.min * 1e3, 1),
+        format!("{:.2}x faster", m_nocache.mean / m_cache.mean),
+    ]);
+
+    emit("perf_hotpath", &t);
+}

@@ -1,0 +1,36 @@
+//! The paper's "full SVDD method": train on every observation in one
+//! solve. This is the Table-I / Fig-1 baseline.
+
+use crate::error::Result;
+use crate::svdd::model::SvddModel;
+use crate::svdd::trainer::{train, SvddParams};
+use crate::util::matrix::Matrix;
+use crate::util::timer::Stopwatch;
+
+/// Outcome with timing, for the bench harnesses.
+#[derive(Clone, Debug)]
+pub struct FullOutcome {
+    pub model: SvddModel,
+    pub seconds: f64,
+}
+
+/// Train on all rows, timing the solve.
+pub fn train_full(data: &Matrix, params: &SvddParams) -> Result<FullOutcome> {
+    let sw = Stopwatch::start();
+    let model = train(data, params)?;
+    Ok(FullOutcome { model, seconds: sw.elapsed_secs() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{banana::Banana, Generator};
+
+    #[test]
+    fn full_training_works_and_times() {
+        let data = Banana::default().generate(800, 1);
+        let out = train_full(&data, &SvddParams::gaussian(0.35, 0.005)).unwrap();
+        assert!(out.seconds > 0.0);
+        assert!(out.model.num_sv() >= 3);
+    }
+}

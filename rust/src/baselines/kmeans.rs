@@ -1,0 +1,161 @@
+//! Lloyd's k-means — the clustering substrate for Kim et al.'s
+//! divide-and-conquer SVDD baseline (no clustering crate in the
+//! vendored set, so built from scratch). k-means++ seeding, fixed
+//! iteration cap, deterministic under a seed.
+
+use crate::util::matrix::Matrix;
+use crate::util::rng::Xoshiro256;
+
+/// k-means result: per-point assignment + centroids.
+#[derive(Clone, Debug)]
+pub struct KMeans {
+    pub assignment: Vec<usize>,
+    pub centroids: Matrix,
+    pub iterations: usize,
+}
+
+/// Run Lloyd's algorithm with k-means++ seeding.
+pub fn kmeans(data: &Matrix, k: usize, max_iter: usize, seed: u64) -> KMeans {
+    let n = data.rows();
+    let k = k.max(1).min(n);
+    let mut rng = Xoshiro256::new(seed);
+
+    // --- k-means++ seeding ---
+    let mut centers: Vec<Vec<f64>> = Vec::with_capacity(k);
+    centers.push(data.row(rng.index(n)).to_vec());
+    let mut d2 = vec![f64::INFINITY; n];
+    while centers.len() < k {
+        let last = centers.last().unwrap();
+        let mut total = 0.0;
+        for i in 0..n {
+            let d = Matrix::sqdist(data.row(i), last);
+            if d < d2[i] {
+                d2[i] = d;
+            }
+            total += d2[i];
+        }
+        let pick = if total <= 0.0 {
+            rng.index(n)
+        } else {
+            let mut target = rng.f64() * total;
+            let mut idx = n - 1;
+            for (i, &d) in d2.iter().enumerate() {
+                target -= d;
+                if target <= 0.0 {
+                    idx = i;
+                    break;
+                }
+            }
+            idx
+        };
+        centers.push(data.row(pick).to_vec());
+    }
+
+    // --- Lloyd iterations ---
+    let mut assignment = vec![0usize; n];
+    let mut iterations = 0;
+    for it in 0..max_iter {
+        iterations = it + 1;
+        let mut changed = false;
+        for i in 0..n {
+            let mut best = 0;
+            let mut best_d = f64::INFINITY;
+            for (c, center) in centers.iter().enumerate() {
+                let d = Matrix::sqdist(data.row(i), center);
+                if d < best_d {
+                    best_d = d;
+                    best = c;
+                }
+            }
+            if assignment[i] != best {
+                assignment[i] = best;
+                changed = true;
+            }
+        }
+        if !changed && it > 0 {
+            break;
+        }
+        // recompute centroids (empty cluster keeps its previous center)
+        let mut sums = vec![vec![0.0; data.cols()]; centers.len()];
+        let mut counts = vec![0usize; centers.len()];
+        for i in 0..n {
+            counts[assignment[i]] += 1;
+            for (s, v) in sums[assignment[i]].iter_mut().zip(data.row(i)) {
+                *s += v;
+            }
+        }
+        for (c, center) in centers.iter_mut().enumerate() {
+            if counts[c] > 0 {
+                for (cv, sv) in center.iter_mut().zip(&sums[c]) {
+                    *cv = sv / counts[c] as f64;
+                }
+            }
+        }
+    }
+
+    KMeans {
+        assignment,
+        centroids: Matrix::from_rows(&centers).unwrap(),
+        iterations,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_blobs(n: usize) -> Matrix {
+        let mut rng = Xoshiro256::new(5);
+        let rows: Vec<Vec<f64>> = (0..n)
+            .map(|i| {
+                let cx = if i % 2 == 0 { -5.0 } else { 5.0 };
+                vec![cx + rng.normal() * 0.5, rng.normal() * 0.5]
+            })
+            .collect();
+        Matrix::from_rows(&rows).unwrap()
+    }
+
+    #[test]
+    fn separates_two_blobs() {
+        let data = two_blobs(400);
+        let km = kmeans(&data, 2, 100, 1);
+        // all even-index points together, all odd together
+        let a0 = km.assignment[0];
+        for i in (0..400).step_by(2) {
+            assert_eq!(km.assignment[i], a0);
+        }
+        for i in (1..400).step_by(2) {
+            assert_ne!(km.assignment[i], a0);
+        }
+        // centroids near +-5
+        let cx: Vec<f64> = (0..2).map(|c| km.centroids.get(c, 0)).collect();
+        assert!((cx[0].abs() - 5.0).abs() < 0.5);
+        assert!((cx[1].abs() - 5.0).abs() < 0.5);
+    }
+
+    #[test]
+    fn k_clamped_to_n() {
+        let data = two_blobs(4);
+        let km = kmeans(&data, 100, 10, 2);
+        assert!(km.centroids.rows() <= 4);
+        assert!(km.assignment.iter().all(|&a| a < km.centroids.rows()));
+    }
+
+    #[test]
+    fn deterministic() {
+        let data = two_blobs(100);
+        let a = kmeans(&data, 3, 50, 9);
+        let b = kmeans(&data, 3, 50, 9);
+        assert_eq!(a.assignment, b.assignment);
+    }
+
+    #[test]
+    fn single_cluster_centroid_is_mean() {
+        let data = two_blobs(50);
+        let km = kmeans(&data, 1, 10, 3);
+        let means = data.col_means();
+        for j in 0..data.cols() {
+            assert!((km.centroids.get(0, j) - means[j]).abs() < 1e-9);
+        }
+    }
+}

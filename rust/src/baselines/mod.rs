@@ -1,0 +1,17 @@
+//! Baseline trainers the paper compares against (section III):
+//!
+//! - [`full`] — the "full SVDD method": one solve over all observations
+//!   (what Table I / Fig 1 measure);
+//! - [`luo`] — Luo et al. [7], decomposition + combination: needs one
+//!   full-data scoring pass per iteration (the cost the paper removes);
+//! - [`kim`] — Kim et al. [5], k-means divide-and-conquer: touches every
+//!   observation (built on our own Lloyd's k-means in [`kmeans`]).
+
+pub mod full;
+pub mod kim;
+pub mod kmeans;
+pub mod luo;
+
+pub use full::train_full;
+pub use kim::{train_kim, KimConfig};
+pub use luo::{train_luo, LuoConfig};

@@ -1,0 +1,127 @@
+//! Measurement harness for the paper-reproduction benches (criterion is
+//! not in the vendored crate set, so this provides the same core loop:
+//! warmup, timed iterations, robust summary stats) plus a results sink
+//! that writes each bench's table as text + CSV under `results/`.
+
+pub mod paper;
+
+use std::path::{Path, PathBuf};
+
+use crate::util::stats;
+use crate::util::tables::Table;
+use crate::util::timer::Stopwatch;
+
+/// Summary of repeated timed runs.
+#[derive(Clone, Copy, Debug)]
+pub struct Measurement {
+    pub mean: f64,
+    pub std_dev: f64,
+    pub min: f64,
+    pub median: f64,
+    pub max: f64,
+    pub iters: usize,
+}
+
+/// Time `f` with `warmup` unmeasured runs and `iters` measured runs.
+pub fn measure<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> Measurement {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let sw = Stopwatch::start();
+        std::hint::black_box(f());
+        times.push(sw.elapsed_secs());
+    }
+    Measurement {
+        mean: stats::mean(&times),
+        std_dev: stats::std_dev(&times),
+        min: stats::quantile(&times, 0.0),
+        median: stats::quantile(&times, 0.5),
+        max: stats::quantile(&times, 1.0),
+        iters,
+    }
+}
+
+/// Time a single run (for expensive end-to-end cells where repeating is
+/// wasteful — the paper's own tables are single runs).
+pub fn measure_once<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let sw = Stopwatch::start();
+    let out = std::hint::black_box(f());
+    (out, sw.elapsed_secs())
+}
+
+/// Where bench outputs land: `$FASTSVDD_RESULTS` or `./results`.
+pub fn results_dir() -> PathBuf {
+    let dir = std::env::var_os("FASTSVDD_RESULTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("results"));
+    std::fs::create_dir_all(&dir).ok();
+    dir
+}
+
+/// Print a table and persist it (text + CSV) under the results dir.
+pub fn emit(name: &str, table: &Table) {
+    let rendered = table.render();
+    println!("{rendered}");
+    let dir = results_dir();
+    let _ = std::fs::write(dir.join(format!("{name}.txt")), &rendered);
+    let _ = std::fs::write(dir.join(format!("{name}.csv")), table.to_csv());
+}
+
+/// Persist an arbitrary text blob alongside the tables.
+pub fn emit_text(name: &str, text: &str) {
+    let _ = std::fs::write(results_dir().join(name), text);
+}
+
+/// Quick/full switch: benches honour `FASTSVDD_BENCH_SCALE` in (0, 1]
+/// to shrink workloads for smoke runs (1.0 = paper scale).
+pub fn bench_scale() -> f64 {
+    std::env::var("FASTSVDD_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse::<f64>().ok())
+        .filter(|&s| s > 0.0 && s <= 1.0)
+        .unwrap_or(1.0)
+}
+
+/// Scale an observation count by [`bench_scale`], keeping a floor.
+pub fn scaled(n: usize, floor: usize) -> usize {
+    ((n as f64 * bench_scale()) as usize).max(floor)
+}
+
+/// True when a path looks like a built artifact dir (skip-with-message
+/// guard for benches that need `make artifacts`).
+pub fn artifacts_available(dir: &Path) -> bool {
+    dir.join("manifest.json").exists()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_returns_sane_stats() {
+        let m = measure(1, 5, || {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        });
+        assert_eq!(m.iters, 5);
+        assert!(m.min >= 0.002);
+        assert!(m.mean >= m.min && m.mean <= m.max);
+        assert!(m.median >= m.min && m.median <= m.max);
+    }
+
+    #[test]
+    fn measure_once_returns_value() {
+        let (v, t) = measure_once(|| 7);
+        assert_eq!(v, 7);
+        assert!(t >= 0.0);
+    }
+
+    #[test]
+    fn scale_defaults_to_one() {
+        // (cannot set env safely in parallel tests; just check default path)
+        assert!(bench_scale() > 0.0 && bench_scale() <= 1.0);
+        assert_eq!(scaled(100, 10).max(10), scaled(100, 10));
+    }
+}

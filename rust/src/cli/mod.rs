@@ -1,0 +1,202 @@
+//! Command-line argument parsing (clap is not in the vendored crate
+//! set). Supports `--key value`, `--flag`, positional subcommands and
+//! generated help text.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// Parsed arguments: one subcommand + options.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`. The first non-flag token is the subcommand.
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = argv.iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err(Error::Config("bare '--' not supported".into()));
+                }
+                // --key=value or --key value or --flag
+                if let Some((k, v)) = name.split_once('=') {
+                    args.opts.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    args.opts.insert(name.to_string(), it.next().unwrap().clone());
+                } else {
+                    args.flags.push(name.to_string());
+                }
+            } else if args.command.is_empty() {
+                args.command = tok.clone();
+            } else {
+                return Err(Error::Config(format!("unexpected positional '{tok}'")));
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{name}: '{v}' is not an integer"))),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{name}: '{v}' is not a number"))),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{name}: '{v}' is not an integer"))),
+        }
+    }
+
+    /// Reject any option/flag not in the allowed list (typo guard).
+    pub fn expect_only(&self, allowed: &[&str]) -> Result<()> {
+        for k in self.opts.keys().chain(self.flags.iter()) {
+            if !allowed.contains(&k.as_str()) {
+                return Err(Error::Config(format!(
+                    "unknown option '--{k}' for '{}' (allowed: {})",
+                    self.command,
+                    allowed.join(", ")
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Top-level help text for the launcher.
+pub const HELP: &str = "\
+fastsvdd — sampling-based SVDD training (Chaudhuri et al., SAS 2016)
+
+USAGE:
+    fastsvdd <COMMAND> [OPTIONS]
+
+COMMANDS:
+    train        Train a model (sampling | full | luo | kim | distributed)
+    score        Score data against a saved model
+    grid         Score a 200x200 grid, write a PGM + agreement stats
+    worker       Run a TCP worker daemon for distributed training
+    serve        Run a TCP scoring server (dynamic batching over the
+                 native or XLA engine)
+    artifacts    Inspect the AOT artifact manifest
+    help         Show this help
+
+COMMON OPTIONS (train):
+    --config <file.json>      load a RunConfig (CLI overrides apply on top)
+    --data <name>             banana | star | two-donut | shuttle | tennessee
+    --rows <n>                training rows to generate
+    --method <m>              sampling | full | luo | kim | distributed
+    --bw <s>                  Gaussian bandwidth
+    --f <frac>                expected outlier fraction
+    --sample-size <n>         Algorithm-1 sample size
+    --workers <p>             distributed worker count
+    --seed <u64>              RNG seed
+    --out <model.json>        save the trained model
+    --trace <csv>             write the R^2 iteration trace (Fig 7)
+
+score:
+    --model <model.json> --data <name> --rows <n> [--xla] [--artifacts <dir>]
+
+worker:
+    --listen <addr:port>
+
+serve:
+    --model <model.json> --listen <addr:port> [--xla] [--batch <rows>]
+    [--linger-ms <ms>]
+
+EXAMPLES:
+    fastsvdd train --data banana --rows 11016 --method sampling --sample-size 6
+    fastsvdd train --data two-donut --rows 1333334 --method distributed --workers 8
+    fastsvdd score --model m.json --data shuttle --rows 10000 --xla
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(tokens: &[&str]) -> Args {
+        Args::parse(&tokens.iter().map(|s| s.to_string()).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn parses_command_options_flags() {
+        let a = parse(&["train", "--data", "banana", "--rows", "100", "--xla"]);
+        assert_eq!(a.command, "train");
+        assert_eq!(a.get("data"), Some("banana"));
+        assert_eq!(a.get_usize("rows", 0).unwrap(), 100);
+        assert!(a.flag("xla"));
+        assert!(!a.flag("other"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse(&["score", "--rows=42", "--bw=0.5"]);
+        assert_eq!(a.get_usize("rows", 0).unwrap(), 42);
+        assert_eq!(a.get_f64("bw", 0.0).unwrap(), 0.5);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&["train"]);
+        assert_eq!(a.get_or("data", "banana"), "banana");
+        assert_eq!(a.get_u64("seed", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn bad_number_rejected() {
+        let a = parse(&["train", "--rows", "abc"]);
+        assert!(a.get_usize("rows", 0).is_err());
+    }
+
+    #[test]
+    fn double_positional_rejected() {
+        let argv: Vec<String> = ["train", "extra"].iter().map(|s| s.to_string()).collect();
+        assert!(Args::parse(&argv).is_err());
+    }
+
+    #[test]
+    fn expect_only_guards_typos() {
+        let a = parse(&["train", "--rowz", "5"]);
+        assert!(a.expect_only(&["rows"]).is_err());
+        let b = parse(&["train", "--rows", "5"]);
+        assert!(b.expect_only(&["rows"]).is_ok());
+    }
+
+    #[test]
+    fn trailing_flag_then_option() {
+        let a = parse(&["train", "--xla", "--rows", "9"]);
+        assert!(a.flag("xla"));
+        assert_eq!(a.get_usize("rows", 0).unwrap(), 9);
+    }
+}

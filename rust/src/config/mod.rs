@@ -1,0 +1,231 @@
+//! Run configuration: a single struct covering train/score/distributed
+//! runs, loadable from a JSON file (`--config run.json`) with CLI
+//! overrides applied on top. This is the "real config system" the
+//! launcher (`fastsvdd` binary) consumes.
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::sampling::SamplingConfig;
+use crate::svdd::trainer::SvddParams;
+use crate::svdd::Kernel;
+use crate::util::json::Json;
+
+/// Which training algorithm to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    /// The paper's Algorithm 1.
+    Sampling,
+    /// Full SVDD (baseline).
+    Full,
+    /// Distributed sampling (paper section III-1).
+    Distributed,
+    /// Luo et al. decomposition/combination baseline.
+    Luo,
+    /// Kim et al. k-means baseline.
+    Kim,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Result<Method> {
+        Ok(match s {
+            "sampling" => Method::Sampling,
+            "full" => Method::Full,
+            "distributed" => Method::Distributed,
+            "luo" => Method::Luo,
+            "kim" => Method::Kim,
+            other => return Err(Error::Config(format!("unknown method '{other}'"))),
+        })
+    }
+}
+
+/// Complete run configuration with defaults.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// Data set name (see [`crate::data::SHAPE_NAMES`] plus "shuttle",
+    /// "tennessee") or a CSV path.
+    pub dataset: String,
+    pub rows: usize,
+    pub bandwidth: f64,
+    pub outlier_fraction: f64,
+    pub method: Method,
+    pub sample_size: usize,
+    pub max_iter: usize,
+    pub eps: f64,
+    pub consecutive: usize,
+    pub workers: usize,
+    pub seed: u64,
+    /// "native" | "xla" (scoring engine).
+    pub scorer: String,
+    pub artifact_dir: String,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            dataset: "banana".into(),
+            rows: 11_016,
+            bandwidth: 0.35,
+            outlier_fraction: 0.001,
+            method: Method::Sampling,
+            sample_size: 6,
+            max_iter: 1000,
+            eps: 1e-3,
+            consecutive: 5,
+            workers: 4,
+            seed: 7,
+            scorer: "native".into(),
+            artifact_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn params(&self) -> SvddParams {
+        SvddParams {
+            kernel: Kernel::gaussian(self.bandwidth),
+            outlier_fraction: self.outlier_fraction,
+            ..Default::default()
+        }
+    }
+
+    pub fn sampling(&self) -> SamplingConfig {
+        SamplingConfig {
+            sample_size: self.sample_size,
+            max_iter: self.max_iter,
+            eps_center: self.eps,
+            eps_r2: self.eps,
+            consecutive: self.consecutive,
+            record_trace: false,
+        }
+    }
+
+    /// Load from a JSON file; unknown keys are rejected (typo guard).
+    pub fn load(path: &Path) -> Result<RunConfig> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json_text(&text)
+    }
+
+    pub fn from_json_text(text: &str) -> Result<RunConfig> {
+        let v = Json::parse(text)?;
+        let obj = match &v {
+            Json::Obj(m) => m,
+            _ => return Err(Error::Config("config root must be an object".into())),
+        };
+        let mut cfg = RunConfig::default();
+        for (key, val) in obj {
+            match key.as_str() {
+                "dataset" => cfg.dataset = req_str(val, key)?,
+                "rows" => cfg.rows = req_num(val, key)? as usize,
+                "bandwidth" => cfg.bandwidth = req_num(val, key)?,
+                "outlier_fraction" => cfg.outlier_fraction = req_num(val, key)?,
+                "method" => cfg.method = Method::parse(&req_str(val, key)?)?,
+                "sample_size" => cfg.sample_size = req_num(val, key)? as usize,
+                "max_iter" => cfg.max_iter = req_num(val, key)? as usize,
+                "eps" => cfg.eps = req_num(val, key)?,
+                "consecutive" => cfg.consecutive = req_num(val, key)? as usize,
+                "workers" => cfg.workers = req_num(val, key)? as usize,
+                "seed" => cfg.seed = req_num(val, key)? as u64,
+                "scorer" => cfg.scorer = req_str(val, key)?,
+                "artifact_dir" => cfg.artifact_dir = req_str(val, key)?,
+                other => {
+                    return Err(Error::Config(format!("unknown config key '{other}'")))
+                }
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.bandwidth <= 0.0 {
+            return Err(Error::Config("bandwidth must be > 0".into()));
+        }
+        if !(0.0..=1.0).contains(&self.outlier_fraction) || self.outlier_fraction == 0.0 {
+            return Err(Error::Config("outlier_fraction must be in (0, 1]".into()));
+        }
+        if self.rows == 0 {
+            return Err(Error::Config("rows must be > 0".into()));
+        }
+        if self.sample_size < 2 {
+            return Err(Error::Config("sample_size must be >= 2".into()));
+        }
+        if !matches!(self.scorer.as_str(), "native" | "xla") {
+            return Err(Error::Config(format!("unknown scorer '{}'", self.scorer)));
+        }
+        Ok(())
+    }
+}
+
+fn req_str(v: &Json, key: &str) -> Result<String> {
+    v.as_str()
+        .map(|s| s.to_string())
+        .ok_or_else(|| Error::Config(format!("'{key}' must be a string")))
+}
+
+fn req_num(v: &Json, key: &str) -> Result<f64> {
+    v.as_f64()
+        .ok_or_else(|| Error::Config(format!("'{key}' must be a number")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_valid() {
+        RunConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn parses_full_config() {
+        let cfg = RunConfig::from_json_text(
+            r#"{"dataset": "two-donut", "rows": 50000, "bandwidth": 0.4,
+                "method": "distributed", "workers": 8, "sample_size": 11,
+                "scorer": "xla", "seed": 42}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.dataset, "two-donut");
+        assert_eq!(cfg.method, Method::Distributed);
+        assert_eq!(cfg.workers, 8);
+        assert_eq!(cfg.seed, 42);
+        // untouched keys keep defaults
+        assert_eq!(cfg.max_iter, 1000);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        assert!(RunConfig::from_json_text(r#"{"bananana": 1}"#).is_err());
+    }
+
+    #[test]
+    fn bad_values_rejected() {
+        assert!(RunConfig::from_json_text(r#"{"bandwidth": -1}"#).is_err());
+        assert!(RunConfig::from_json_text(r#"{"outlier_fraction": 2}"#).is_err());
+        assert!(RunConfig::from_json_text(r#"{"sample_size": 1}"#).is_err());
+        assert!(RunConfig::from_json_text(r#"{"scorer": "gpu"}"#).is_err());
+        assert!(RunConfig::from_json_text(r#"{"method": "magic"}"#).is_err());
+    }
+
+    #[test]
+    fn method_parse_all() {
+        for (s, m) in [
+            ("sampling", Method::Sampling),
+            ("full", Method::Full),
+            ("distributed", Method::Distributed),
+            ("luo", Method::Luo),
+            ("kim", Method::Kim),
+        ] {
+            assert_eq!(Method::parse(s).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn params_roundtrip() {
+        let cfg = RunConfig::default();
+        let p = cfg.params();
+        assert_eq!(p.kernel.bw(), Some(0.35));
+        let s = cfg.sampling();
+        assert_eq!(s.sample_size, 6);
+    }
+}

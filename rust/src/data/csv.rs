@@ -1,0 +1,143 @@
+//! Tiny CSV reader/writer for result sinks and external data exchange.
+//!
+//! Deliberately minimal: numeric matrices with an optional header row.
+//! Quoted fields are supported on read for robustness; writes never
+//! need quoting (numbers only).
+
+use crate::error::{Error, Result};
+use crate::util::matrix::Matrix;
+use std::io::Write;
+use std::path::Path;
+
+/// Write `data` as CSV with the given header row.
+pub fn write_matrix(path: &Path, headers: &[&str], data: &Matrix) -> Result<()> {
+    if !headers.is_empty() && headers.len() != data.cols() {
+        return Err(Error::invalid(format!(
+            "{} headers for {} columns",
+            headers.len(),
+            data.cols()
+        )));
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    if !headers.is_empty() {
+        writeln!(f, "{}", headers.join(","))?;
+    }
+    for i in 0..data.rows() {
+        let row: Vec<String> = data.row(i).iter().map(|v| format!("{v}")).collect();
+        writeln!(f, "{}", row.join(","))?;
+    }
+    Ok(())
+}
+
+/// Read a numeric CSV. `has_header` skips the first line. Returns the
+/// matrix and the header names (empty if none).
+pub fn read_matrix(path: &Path, has_header: bool) -> Result<(Matrix, Vec<String>)> {
+    let text = std::fs::read_to_string(path)?;
+    let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+    let headers: Vec<String> = if has_header {
+        match lines.next() {
+            Some(h) => split_line(h).into_iter().collect(),
+            None => return Err(Error::invalid("empty csv")),
+        }
+    } else {
+        Vec::new()
+    };
+    let mut rows: Vec<Vec<f64>> = Vec::new();
+    for (ln, line) in lines.enumerate() {
+        let mut row = Vec::new();
+        for cell in split_line(line) {
+            row.push(
+                cell.trim()
+                    .parse::<f64>()
+                    .map_err(|_| Error::invalid(format!("line {}: bad number '{cell}'", ln + 1)))?,
+            );
+        }
+        rows.push(row);
+    }
+    if rows.is_empty() {
+        return Err(Error::invalid("csv has no data rows"));
+    }
+    Ok((Matrix::from_rows(&rows)?, headers))
+}
+
+fn split_line(line: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    let mut in_quotes = false;
+    let mut chars = line.chars().peekable();
+    while let Some(c) = chars.next() {
+        match c {
+            '"' if in_quotes && chars.peek() == Some(&'"') => {
+                cur.push('"');
+                chars.next();
+            }
+            '"' => in_quotes = !in_quotes,
+            ',' if !in_quotes => {
+                out.push(std::mem::take(&mut cur));
+            }
+            c => cur.push(c),
+        }
+    }
+    out.push(cur);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("fastsvdd_csv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip_with_header() {
+        let m = Matrix::from_rows(&[vec![1.0, -2.5], vec![3.25, 4.0]]).unwrap();
+        let p = tmp("a.csv");
+        write_matrix(&p, &["x", "y"], &m).unwrap();
+        let (back, headers) = read_matrix(&p, true).unwrap();
+        assert_eq!(back, m);
+        assert_eq!(headers, vec!["x", "y"]);
+    }
+
+    #[test]
+    fn roundtrip_without_header() {
+        let m = Matrix::from_rows(&[vec![1e-7, 2e9]]).unwrap();
+        let p = tmp("b.csv");
+        write_matrix(&p, &[], &m).unwrap();
+        let (back, headers) = read_matrix(&p, false).unwrap();
+        assert_eq!(back, m);
+        assert!(headers.is_empty());
+    }
+
+    #[test]
+    fn header_count_mismatch_rejected() {
+        let m = Matrix::zeros(1, 3);
+        assert!(write_matrix(&tmp("c.csv"), &["only-one"], &m).is_err());
+    }
+
+    #[test]
+    fn quoted_cells_parse() {
+        let p = tmp("d.csv");
+        std::fs::write(&p, "a,b\n\"1.5\",2\n").unwrap();
+        let (m, h) = read_matrix(&p, true).unwrap();
+        assert_eq!(h, vec!["a", "b"]);
+        assert_eq!(m.row(0), &[1.5, 2.0]);
+    }
+
+    #[test]
+    fn bad_number_rejected() {
+        let p = tmp("e.csv");
+        std::fs::write(&p, "1,hello\n").unwrap();
+        assert!(read_matrix(&p, false).is_err());
+    }
+
+    #[test]
+    fn empty_rejected() {
+        let p = tmp("f.csv");
+        std::fs::write(&p, "\n\n").unwrap();
+        assert!(read_matrix(&p, false).is_err());
+    }
+}

@@ -1,0 +1,105 @@
+//! Two-Donut data (paper Fig. 3c): two disjoint annuli.
+//!
+//! The paper's largest workload (1,333,334 observations) is this shape;
+//! the full-SVDD cost curve of Fig. 1 is measured on it.
+
+use crate::data::Generator;
+use crate::util::matrix::Matrix;
+use crate::util::rng::Xoshiro256;
+
+#[derive(Clone, Copy, Debug)]
+pub struct TwoDonut {
+    /// Centers of the two donuts.
+    pub c1: (f64, f64),
+    pub c2: (f64, f64),
+    /// Ring radius.
+    pub radius: f64,
+    /// Radial half-thickness.
+    pub thickness: f64,
+}
+
+impl Default for TwoDonut {
+    fn default() -> Self {
+        TwoDonut {
+            c1: (-1.5, 0.0),
+            c2: (1.5, 0.0),
+            radius: 1.0,
+            thickness: 0.25,
+        }
+    }
+}
+
+impl Generator for TwoDonut {
+    fn generate(&self, n: usize, seed: u64) -> Matrix {
+        let mut rng = Xoshiro256::new(seed);
+        let rows: Vec<Vec<f64>> = (0..n)
+            .map(|i| {
+                let (cx, cy) = if i % 2 == 0 { self.c1 } else { self.c2 };
+                let th = rng.range(0.0, std::f64::consts::TAU);
+                // uniform over the annulus area: r = sqrt(U(r0^2, r1^2))
+                let r0 = self.radius - self.thickness;
+                let r1 = self.radius + self.thickness;
+                let r = rng.range(r0 * r0, r1 * r1).sqrt();
+                vec![cx + r * th.cos(), cy + r * th.sin()]
+            })
+            .collect();
+        Matrix::from_rows(&rows).unwrap()
+    }
+
+    fn dim(&self) -> usize {
+        2
+    }
+
+    fn name(&self) -> &'static str {
+        "two-donut"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_shaped() {
+        let g = TwoDonut::default();
+        let a = g.generate(1000, 9);
+        assert_eq!(a, g.generate(1000, 9));
+        assert_eq!(a.cols(), 2);
+    }
+
+    #[test]
+    fn points_on_one_of_two_rings() {
+        let g = TwoDonut::default();
+        let m = g.generate(3000, 11);
+        for i in 0..m.rows() {
+            let d1 = ((m.get(i, 0) - g.c1.0).powi(2) + (m.get(i, 1) - g.c1.1).powi(2)).sqrt();
+            let d2 = ((m.get(i, 0) - g.c2.0).powi(2) + (m.get(i, 1) - g.c2.1).powi(2)).sqrt();
+            let lo = g.radius - g.thickness - 1e-9;
+            let hi = g.radius + g.thickness + 1e-9;
+            let on1 = (lo..=hi).contains(&d1);
+            let on2 = (lo..=hi).contains(&d2);
+            assert!(on1 || on2, "point {i} off both rings: d1={d1} d2={d2}");
+        }
+    }
+
+    #[test]
+    fn both_rings_populated_evenly() {
+        let g = TwoDonut::default();
+        let m = g.generate(2000, 13);
+        let left = (0..m.rows()).filter(|&i| m.get(i, 0) < 0.0).count();
+        // alternating assignment -> exact half (centers are symmetric and
+        // rings don't overlap x=0)
+        assert!((left as i64 - 1000).abs() < 50, "left={left}");
+    }
+
+    #[test]
+    fn hole_is_empty() {
+        let g = TwoDonut::default();
+        let m = g.generate(5000, 17);
+        for i in 0..m.rows() {
+            let d1 = ((m.get(i, 0) - g.c1.0).powi(2) + (m.get(i, 1) - g.c1.1).powi(2)).sqrt();
+            let d2 = ((m.get(i, 0) - g.c2.0).powi(2) + (m.get(i, 1) - g.c2.1).powi(2)).sqrt();
+            assert!(d1.min(d2) > g.radius - g.thickness - 1e-9);
+        }
+    }
+}

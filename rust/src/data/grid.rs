@@ -1,0 +1,164 @@
+//! The 200x200 scoring grid the paper uses for Figs 8 and the polygon
+//! study: a regular lattice over a bounding box, plus a PGM writer so
+//! grid scorings can be eyeballed (Fig 8's black/gray images).
+
+use crate::error::Result;
+use crate::util::matrix::Matrix;
+
+/// A regular `nx` x `ny` lattice over `[x0, x1] x [y0, y1]`.
+#[derive(Clone, Copy, Debug)]
+pub struct Grid {
+    pub nx: usize,
+    pub ny: usize,
+    pub x0: f64,
+    pub x1: f64,
+    pub y0: f64,
+    pub y1: f64,
+}
+
+impl Grid {
+    /// The paper's 200x200 grid.
+    pub fn square200(x0: f64, x1: f64, y0: f64, y1: f64) -> Grid {
+        Grid { nx: 200, ny: 200, x0, x1, y0, y1 }
+    }
+
+    /// Grid over the bounding box of `data` expanded by `margin`
+    /// (relative to the box size).
+    pub fn covering(data: &Matrix, nx: usize, ny: usize, margin: f64) -> Grid {
+        assert_eq!(data.cols(), 2, "grid covers 2-d data only");
+        let (mut x0, mut x1) = (f64::INFINITY, f64::NEG_INFINITY);
+        let (mut y0, mut y1) = (f64::INFINITY, f64::NEG_INFINITY);
+        for i in 0..data.rows() {
+            x0 = x0.min(data.get(i, 0));
+            x1 = x1.max(data.get(i, 0));
+            y0 = y0.min(data.get(i, 1));
+            y1 = y1.max(data.get(i, 1));
+        }
+        let (dx, dy) = ((x1 - x0) * margin, (y1 - y0) * margin);
+        Grid { nx, ny, x0: x0 - dx, x1: x1 + dx, y0: y0 - dy, y1: y1 + dy }
+    }
+
+    pub fn len(&self) -> usize {
+        self.nx * self.ny
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The grid point at lattice index `(i, j)` (row i along y, col j
+    /// along x).
+    pub fn point(&self, i: usize, j: usize) -> (f64, f64) {
+        let fx = if self.nx > 1 { j as f64 / (self.nx - 1) as f64 } else { 0.5 };
+        let fy = if self.ny > 1 { i as f64 / (self.ny - 1) as f64 } else { 0.5 };
+        (self.x0 + fx * (self.x1 - self.x0), self.y0 + fy * (self.y1 - self.y0))
+    }
+
+    /// All lattice points as an `(nx*ny) x 2` matrix, row-major in `i`.
+    pub fn points(&self) -> Matrix {
+        let mut data = Vec::with_capacity(self.len() * 2);
+        for i in 0..self.ny {
+            for j in 0..self.nx {
+                let (x, y) = self.point(i, j);
+                data.push(x);
+                data.push(y);
+            }
+        }
+        Matrix::from_vec(data, self.len(), 2).unwrap()
+    }
+
+    /// Label every lattice point with `f(x, y)` (e.g. polygon membership
+    /// for the simulation study's ground truth).
+    pub fn labels_from(&self, f: impl Fn(f64, f64) -> bool) -> Vec<bool> {
+        let mut labels = Vec::with_capacity(self.len());
+        for i in 0..self.ny {
+            for j in 0..self.nx {
+                let (x, y) = self.point(i, j);
+                labels.push(f(x, y));
+            }
+        }
+        labels
+    }
+
+    /// Write a binary inside/outside map as a PGM image (Fig 8 style:
+    /// black = inside, light gray = outside).
+    pub fn write_pgm(&self, labels: &[bool], path: &std::path::Path) -> Result<()> {
+        assert_eq!(labels.len(), self.len());
+        let mut buf = format!("P5\n{} {}\n255\n", self.nx, self.ny).into_bytes();
+        // flip vertically so +y is up in the image
+        for i in (0..self.ny).rev() {
+            for j in 0..self.nx {
+                buf.push(if labels[i * self.nx + j] { 0 } else { 200 });
+            }
+        }
+        std::fs::write(path, buf)?;
+        Ok(())
+    }
+}
+
+/// Fraction of positions where the two label maps agree — the metric we
+/// report for Fig 8's "full vs sampling boundary similarity".
+pub fn agreement(a: &[bool], b: &[bool]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 1.0;
+    }
+    a.iter().zip(b).filter(|(x, y)| x == y).count() as f64 / a.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_corners() {
+        let g = Grid::square200(-1.0, 1.0, 0.0, 2.0);
+        assert_eq!(g.len(), 40_000);
+        assert_eq!(g.point(0, 0), (-1.0, 0.0));
+        assert_eq!(g.point(199, 199), (1.0, 2.0));
+    }
+
+    #[test]
+    fn points_matrix_layout() {
+        let g = Grid { nx: 3, ny: 2, x0: 0.0, x1: 2.0, y0: 0.0, y1: 1.0 };
+        let m = g.points();
+        assert_eq!(m.rows(), 6);
+        assert_eq!(m.row(0), &[0.0, 0.0]);
+        assert_eq!(m.row(2), &[2.0, 0.0]);
+        assert_eq!(m.row(3), &[0.0, 1.0]);
+    }
+
+    #[test]
+    fn covering_box_includes_margin() {
+        let data = Matrix::from_rows(&[vec![0.0, 0.0], vec![10.0, 4.0]]).unwrap();
+        let g = Grid::covering(&data, 50, 50, 0.1);
+        assert_eq!(g.x0, -1.0);
+        assert_eq!(g.x1, 11.0);
+        assert_eq!(g.y0, -0.4);
+        assert_eq!(g.y1, 4.4);
+    }
+
+    #[test]
+    fn labels_and_agreement() {
+        let g = Grid { nx: 10, ny: 10, x0: 0.0, x1: 1.0, y0: 0.0, y1: 1.0 };
+        let a = g.labels_from(|x, _| x < 0.5);
+        let b = g.labels_from(|x, _| x < 0.5);
+        assert_eq!(agreement(&a, &b), 1.0);
+        let c = g.labels_from(|x, _| x >= 0.5);
+        assert!(agreement(&a, &c) < 0.2);
+    }
+
+    #[test]
+    fn pgm_writes_header_and_pixels() {
+        let g = Grid { nx: 4, ny: 3, x0: 0.0, x1: 1.0, y0: 0.0, y1: 1.0 };
+        let labels = vec![true; 12];
+        let dir = std::env::temp_dir().join("fastsvdd_grid_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.pgm");
+        g.write_pgm(&labels, &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert!(bytes.starts_with(b"P5\n4 3\n255\n"));
+        assert_eq!(bytes.len(), b"P5\n4 3\n255\n".len() + 12);
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,435 @@
+//! Random polygons (paper section VI) and the polygon substrate the
+//! Star data set and the simulation study both build on:
+//!
+//! - random polygon generation: vertices `r_i exp(i theta_(i))` with
+//!   `theta_(i)` the order statistics of a uniform sample on `(0, 2pi)`
+//!   and `r_i ~ U[r_min, r_max]` (exactly the paper's construction);
+//! - **ear-clipping triangulation** (simple polygons, no holes) so we
+//!   can sample the interior uniformly by area-weighted triangles;
+//! - point-in-polygon (ray casting) for labeling the 200x200 grid.
+
+use crate::util::matrix::Matrix;
+use crate::util::rng::Xoshiro256;
+
+/// A simple polygon (counter-clockwise vertex order).
+#[derive(Clone, Debug)]
+pub struct Polygon {
+    verts: Vec<(f64, f64)>,
+}
+
+impl Polygon {
+    pub fn new(verts: Vec<(f64, f64)>) -> Polygon {
+        assert!(verts.len() >= 3, "polygon needs >= 3 vertices");
+        Polygon { verts }
+    }
+
+    /// The paper's random polygon: `k` vertices, angles sorted uniform
+    /// order statistics, radii uniform in `[r_min, r_max]`.
+    ///
+    /// The raw construction can self-intersect when the largest angular
+    /// gap exceeds pi (the chord across the gap sweeps other sectors),
+    /// which happens with noticeable probability at small `k`. The
+    /// paper's polygons (Fig. 13) are simple, so we rejection-sample:
+    /// redraw (deterministically, seed+attempt) until simple.
+    pub fn random(k: usize, r_min: f64, r_max: f64, seed: u64) -> Polygon {
+        assert!(k >= 3);
+        for attempt in 0..1000u64 {
+            let mut rng = Xoshiro256::new(seed ^ attempt.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+            let mut thetas: Vec<f64> = (0..k)
+                .map(|_| rng.range(0.0, std::f64::consts::TAU))
+                .collect();
+            thetas.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let verts: Vec<(f64, f64)> = thetas
+                .into_iter()
+                .map(|th| {
+                    let r = rng.range(r_min, r_max);
+                    (r * th.cos(), r * th.sin())
+                })
+                .collect();
+            let p = Polygon { verts };
+            if p.is_simple() {
+                return p;
+            }
+        }
+        unreachable!("1000 consecutive self-intersecting polygons (k={k})");
+    }
+
+    /// True iff no two non-adjacent edges intersect (simple polygon).
+    pub fn is_simple(&self) -> bool {
+        let n = self.verts.len();
+        let edge = |i: usize| (self.verts[i], self.verts[(i + 1) % n]);
+        for i in 0..n {
+            for j in (i + 1)..n {
+                // skip adjacent edges (they share a vertex)
+                if j == i + 1 || (i == 0 && j == n - 1) {
+                    continue;
+                }
+                let (a, b) = edge(i);
+                let (c, d) = edge(j);
+                if segments_intersect(a, b, c, d) {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    pub fn vertices(&self) -> &[(f64, f64)] {
+        &self.verts
+    }
+
+    pub fn num_vertices(&self) -> usize {
+        self.verts.len()
+    }
+
+    /// Signed area (positive for CCW). Star-shaped-by-construction
+    /// polygons from [`Polygon::random`] are always CCW.
+    pub fn signed_area(&self) -> f64 {
+        let n = self.verts.len();
+        let mut s = 0.0;
+        for i in 0..n {
+            let (x1, y1) = self.verts[i];
+            let (x2, y2) = self.verts[(i + 1) % n];
+            s += x1 * y2 - x2 * y1;
+        }
+        s / 2.0
+    }
+
+    pub fn area(&self) -> f64 {
+        self.signed_area().abs()
+    }
+
+    /// Axis-aligned bounding box `((min_x, min_y), (max_x, max_y))`.
+    pub fn bbox(&self) -> ((f64, f64), (f64, f64)) {
+        let mut lo = (f64::INFINITY, f64::INFINITY);
+        let mut hi = (f64::NEG_INFINITY, f64::NEG_INFINITY);
+        for &(x, y) in &self.verts {
+            lo.0 = lo.0.min(x);
+            lo.1 = lo.1.min(y);
+            hi.0 = hi.0.max(x);
+            hi.1 = hi.1.max(y);
+        }
+        (lo, hi)
+    }
+
+    /// Ray-casting point-in-polygon (boundary counts as inside-ish; exact
+    /// boundary behaviour is irrelevant for measure-zero grid points).
+    pub fn contains(&self, x: f64, y: f64) -> bool {
+        let n = self.verts.len();
+        let mut inside = false;
+        let mut j = n - 1;
+        for i in 0..n {
+            let (xi, yi) = self.verts[i];
+            let (xj, yj) = self.verts[j];
+            if ((yi > y) != (yj > y))
+                && (x < (xj - xi) * (y - yi) / (yj - yi) + xi)
+            {
+                inside = !inside;
+            }
+            j = i;
+        }
+        inside
+    }
+
+    /// Ear-clipping triangulation of a simple polygon. Returns triangles
+    /// as vertex triples. O(n^2), fine for n <= a few hundred.
+    pub fn triangulate(&self) -> Vec<[(f64, f64); 3]> {
+        let ccw = self.signed_area() > 0.0;
+        let mut idx: Vec<usize> = if ccw {
+            (0..self.verts.len()).collect()
+        } else {
+            (0..self.verts.len()).rev().collect()
+        };
+        let v = &self.verts;
+        let mut tris = Vec::with_capacity(v.len().saturating_sub(2));
+
+        let cross = |a: (f64, f64), b: (f64, f64), c: (f64, f64)| -> f64 {
+            (b.0 - a.0) * (c.1 - a.1) - (b.1 - a.1) * (c.0 - a.0)
+        };
+        let in_tri = |p: (f64, f64), a: (f64, f64), b: (f64, f64), c: (f64, f64)| -> bool {
+            let d1 = cross(a, b, p);
+            let d2 = cross(b, c, p);
+            let d3 = cross(c, a, p);
+            let has_neg = d1 < 0.0 || d2 < 0.0 || d3 < 0.0;
+            let has_pos = d1 > 0.0 || d2 > 0.0 || d3 > 0.0;
+            !(has_neg && has_pos)
+        };
+
+        let mut guard = 0usize;
+        while idx.len() > 3 {
+            let n = idx.len();
+            let mut clipped = false;
+            for k in 0..n {
+                let ia = idx[(k + n - 1) % n];
+                let ib = idx[k];
+                let ic = idx[(k + 1) % n];
+                let (a, b, c) = (v[ia], v[ib], v[ic]);
+                if cross(a, b, c) <= 1e-14 {
+                    continue; // reflex or degenerate corner
+                }
+                // no other active vertex inside the candidate ear
+                let blocked = idx.iter().any(|&m| {
+                    m != ia && m != ib && m != ic && in_tri(v[m], a, b, c)
+                });
+                if blocked {
+                    continue;
+                }
+                tris.push([a, b, c]);
+                idx.remove(k);
+                clipped = true;
+                break;
+            }
+            guard += 1;
+            if !clipped || guard > 10 * self.verts.len() {
+                // numerically degenerate input: fall back to a fan, which
+                // is correct for the star-shaped polygons Polygon::random
+                // produces.
+                tris.clear();
+                for k in 1..self.verts.len() - 1 {
+                    tris.push([v[0], v[k], v[k + 1]]);
+                }
+                return tris;
+            }
+        }
+        tris.push([v[idx[0]], v[idx[1]], v[idx[2]]]);
+        tris
+    }
+
+    /// `n` points uniform over the interior: pick a triangle with
+    /// probability proportional to area, then a uniform point inside it.
+    pub fn sample_interior(&self, n: usize, seed: u64) -> Matrix {
+        let tris = self.triangulate();
+        let areas: Vec<f64> = tris
+            .iter()
+            .map(|t| {
+                0.5 * ((t[1].0 - t[0].0) * (t[2].1 - t[0].1)
+                    - (t[1].1 - t[0].1) * (t[2].0 - t[0].0))
+                    .abs()
+            })
+            .collect();
+        let total: f64 = areas.iter().sum();
+        let mut cum = Vec::with_capacity(areas.len());
+        let mut acc = 0.0;
+        for a in &areas {
+            acc += a / total;
+            cum.push(acc);
+        }
+        let mut rng = Xoshiro256::new(seed);
+        let rows: Vec<Vec<f64>> = (0..n)
+            .map(|_| {
+                let u = rng.f64();
+                let ti = cum.partition_point(|&c| c < u).min(tris.len() - 1);
+                let t = &tris[ti];
+                // uniform in triangle via sqrt trick
+                let r1 = rng.f64().sqrt();
+                let r2 = rng.f64();
+                let x = (1.0 - r1) * t[0].0 + r1 * (1.0 - r2) * t[1].0 + r1 * r2 * t[2].0;
+                let y = (1.0 - r1) * t[0].1 + r1 * (1.0 - r2) * t[1].1 + r1 * r2 * t[2].1;
+                vec![x, y]
+            })
+            .collect();
+        Matrix::from_rows(&rows).unwrap()
+    }
+}
+
+/// Segment intersection including touching/collinear-overlap (any
+/// contact counts — used to *reject* polygons, so conservative is good).
+fn segments_intersect(a: (f64, f64), b: (f64, f64), c: (f64, f64), d: (f64, f64)) -> bool {
+    let orient = |p: (f64, f64), q: (f64, f64), r: (f64, f64)| -> f64 {
+        (q.0 - p.0) * (r.1 - p.1) - (q.1 - p.1) * (r.0 - p.0)
+    };
+    let on_seg = |p: (f64, f64), q: (f64, f64), r: (f64, f64)| -> bool {
+        r.0 >= p.0.min(q.0) && r.0 <= p.0.max(q.0) && r.1 >= p.1.min(q.1) && r.1 <= p.1.max(q.1)
+    };
+    let d1 = orient(a, b, c);
+    let d2 = orient(a, b, d);
+    let d3 = orient(c, d, a);
+    let d4 = orient(c, d, b);
+    if ((d1 > 0.0 && d2 < 0.0) || (d1 < 0.0 && d2 > 0.0))
+        && ((d3 > 0.0 && d4 < 0.0) || (d3 < 0.0 && d4 > 0.0))
+    {
+        return true;
+    }
+    (d1 == 0.0 && on_seg(a, b, c))
+        || (d2 == 0.0 && on_seg(a, b, d))
+        || (d3 == 0.0 && on_seg(c, d, a))
+        || (d4 == 0.0 && on_seg(c, d, b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn segment_intersection_cases() {
+        let o = (0.0, 0.0);
+        assert!(segments_intersect(o, (2.0, 2.0), (0.0, 2.0), (2.0, 0.0)));
+        assert!(!segments_intersect(o, (1.0, 0.0), (0.0, 1.0), (1.0, 1.0)));
+        // touching endpoint counts
+        assert!(segments_intersect(o, (1.0, 0.0), (1.0, 0.0), (2.0, 5.0)));
+        // collinear overlap counts
+        assert!(segments_intersect(o, (2.0, 0.0), (1.0, 0.0), (3.0, 0.0)));
+    }
+
+    #[test]
+    fn random_polygons_are_simple() {
+        for k in [5, 8, 12, 30] {
+            for seed in 0..10 {
+                assert!(Polygon::random(k, 3.0, 5.0, seed).is_simple(), "k={k} seed={seed}");
+            }
+        }
+    }
+
+    fn square() -> Polygon {
+        Polygon::new(vec![(0.0, 0.0), (2.0, 0.0), (2.0, 2.0), (0.0, 2.0)])
+    }
+
+    /// Non-convex "L" shape.
+    fn ell() -> Polygon {
+        Polygon::new(vec![
+            (0.0, 0.0),
+            (2.0, 0.0),
+            (2.0, 1.0),
+            (1.0, 1.0),
+            (1.0, 2.0),
+            (0.0, 2.0),
+        ])
+    }
+
+    #[test]
+    fn area_of_square_and_ell() {
+        assert!((square().area() - 4.0).abs() < 1e-12);
+        assert!((ell().area() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn contains_basic() {
+        let sq = square();
+        assert!(sq.contains(1.0, 1.0));
+        assert!(!sq.contains(3.0, 1.0));
+        assert!(!sq.contains(-0.1, 1.0));
+        let l = ell();
+        assert!(l.contains(0.5, 1.5));
+        assert!(!l.contains(1.5, 1.5)); // the notch
+    }
+
+    #[test]
+    fn triangulation_preserves_area() {
+        for poly in [square(), ell()] {
+            let tris = poly.triangulate();
+            assert_eq!(tris.len(), poly.num_vertices() - 2);
+            let sum: f64 = tris
+                .iter()
+                .map(|t| {
+                    0.5 * ((t[1].0 - t[0].0) * (t[2].1 - t[0].1)
+                        - (t[1].1 - t[0].1) * (t[2].0 - t[0].0))
+                        .abs()
+                })
+                .sum();
+            assert!((sum - poly.area()).abs() < 1e-9, "area {} != {}", sum, poly.area());
+        }
+    }
+
+    #[test]
+    fn triangulation_of_random_polygons_preserves_area() {
+        for k in [5, 9, 17, 30] {
+            for seed in 0..5 {
+                let p = Polygon::random(k, 3.0, 5.0, seed);
+                let tris = p.triangulate();
+                let sum: f64 = tris
+                    .iter()
+                    .map(|t| {
+                        0.5 * ((t[1].0 - t[0].0) * (t[2].1 - t[0].1)
+                            - (t[1].1 - t[0].1) * (t[2].0 - t[0].0))
+                            .abs()
+                    })
+                    .sum();
+                assert!(
+                    (sum - p.area()).abs() < 1e-6 * p.area().max(1.0),
+                    "k={k} seed={seed}: {sum} vs {}",
+                    p.area()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn random_polygon_matches_paper_construction() {
+        let p = Polygon::random(12, 3.0, 5.0, 7);
+        assert_eq!(p.num_vertices(), 12);
+        // radii within [3, 5]
+        for &(x, y) in p.vertices() {
+            let r = (x * x + y * y).sqrt();
+            assert!((3.0 - 1e-9..=5.0 + 1e-9).contains(&r), "r={r}");
+        }
+        // angles strictly increasing (order statistics)
+        let angles: Vec<f64> = p
+            .vertices()
+            .iter()
+            .map(|&(x, y)| y.atan2(x).rem_euclid(std::f64::consts::TAU))
+            .collect();
+        for w in angles.windows(2) {
+            assert!(w[1] >= w[0], "angles not sorted: {angles:?}");
+        }
+    }
+
+    #[test]
+    fn interior_samples_are_inside() {
+        for poly in [square(), ell(), Polygon::random(15, 3.0, 5.0, 3)] {
+            let pts = poly.sample_interior(600, 4);
+            for i in 0..pts.rows() {
+                assert!(
+                    poly.contains(pts.get(i, 0), pts.get(i, 1)),
+                    "sample {i} escaped the polygon"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn interior_sampling_is_uniform_ish() {
+        // square [0,2]^2: quadrant counts should be ~ n/4 each
+        let pts = square().sample_interior(8000, 5);
+        let mut counts = [0usize; 4];
+        for i in 0..pts.rows() {
+            let qx = (pts.get(i, 0) >= 1.0) as usize;
+            let qy = (pts.get(i, 1) >= 1.0) as usize;
+            counts[2 * qy + qx] += 1;
+        }
+        for c in counts {
+            assert!((c as f64 - 2000.0).abs() < 200.0, "counts={counts:?}");
+        }
+    }
+
+    #[test]
+    fn bbox_is_tight() {
+        let ((lx, ly), (hx, hy)) = ell().bbox();
+        assert_eq!((lx, ly, hx, hy), (0.0, 0.0, 2.0, 2.0));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = Polygon::random(8, 3.0, 5.0, 11);
+        let b = Polygon::random(8, 3.0, 5.0, 11);
+        assert_eq!(a.vertices(), b.vertices());
+        assert_eq!(
+            a.sample_interior(50, 2).as_slice(),
+            b.sample_interior(50, 2).as_slice()
+        );
+    }
+
+    #[test]
+    fn clockwise_polygon_still_triangulates() {
+        let cw = Polygon::new(vec![(0.0, 2.0), (2.0, 2.0), (2.0, 0.0), (0.0, 0.0)]);
+        let tris = cw.triangulate();
+        let sum: f64 = tris
+            .iter()
+            .map(|t| {
+                0.5 * ((t[1].0 - t[0].0) * (t[2].1 - t[0].1)
+                    - (t[1].1 - t[0].1) * (t[2].0 - t[0].0))
+                    .abs()
+            })
+            .sum();
+        assert!((sum - 4.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,153 @@
+//! Shuttle-like data (paper section V-A).
+//!
+//! The paper uses the UCI Statlog (Shuttle) set: 58 000 observations,
+//! nine numeric attributes, ~80 % belonging to class 1. This environment
+//! has no network access, so we generate a seeded synthetic equivalent
+//! that preserves what the experiment exercises (DESIGN.md section 2):
+//! a dominant class occupying a structured region of R^9 (mixture of
+//! three operating modes with correlated, integer-rounded features —
+//! the UCI attributes are integer telemetry counts) and six minority
+//! classes offset from it. Train on class-1 rows, score on a mix,
+//! measure F1 of "is class 1".
+
+use crate::data::LabeledData;
+use crate::util::matrix::Matrix;
+use crate::util::rng::Xoshiro256;
+
+pub const DIM: usize = 9;
+
+/// Fraction of class-1 (normal) rows in the scoring mix, matching the
+/// UCI class balance.
+pub const NORMAL_FRACTION: f64 = 0.8;
+
+/// Seed salts so training and scoring streams never collide even with
+/// equal user seeds.
+const TRAIN_SALT: u64 = 0x5331_7454_7261_494e; // "S1tTraIN"
+const SCORE_SALT: u64 = 0x5331_7453_436f_5245; // "S1tSCoRE"
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Shuttle;
+
+/// The three class-1 "operating modes": (mean, per-axis scale).
+const MODES: [([f64; DIM], f64); 3] = [
+    ([40.0, 0.0, 80.0, 0.0, 28.0, 0.0, 40.0, 52.0, 12.0], 3.0),
+    ([42.0, -2.0, 84.0, 2.0, 24.0, 2.0, 44.0, 56.0, 8.0], 2.5),
+    ([36.0, 2.0, 76.0, -2.0, 32.0, -2.0, 36.0, 48.0, 16.0], 3.5),
+];
+
+/// Offsets that define the six anomaly classes (class ids 2..=7).
+const ANOMALY_SHIFTS: [[f64; DIM]; 6] = [
+    [18.0, 0.0, 0.0, 9.0, 0.0, 0.0, -14.0, 0.0, 0.0],
+    [0.0, 16.0, -16.0, 0.0, 9.0, 0.0, 0.0, 11.0, 0.0],
+    [-15.0, 0.0, 12.0, 0.0, -16.0, 7.0, 0.0, 0.0, 12.0],
+    [0.0, -9.0, 0.0, 18.0, 0.0, -12.0, 9.0, 0.0, -9.0],
+    [11.0, 11.0, 0.0, 0.0, 13.0, 0.0, 0.0, -16.0, 7.0],
+    [0.0, 0.0, -18.0, -9.0, 0.0, 14.0, -9.0, 9.0, 0.0],
+];
+
+impl Shuttle {
+    fn class1_row(rng: &mut Xoshiro256) -> Vec<f64> {
+        let mode = &MODES[rng.index(MODES.len())];
+        (0..DIM)
+            .map(|j| (mode.0[j] + rng.normal() * mode.1).round())
+            .collect()
+    }
+
+    fn anomaly_row(rng: &mut Xoshiro256) -> Vec<f64> {
+        let mode = &MODES[rng.index(MODES.len())];
+        let shift = &ANOMALY_SHIFTS[rng.index(ANOMALY_SHIFTS.len())];
+        (0..DIM)
+            .map(|j| (mode.0[j] + shift[j] + rng.normal() * mode.1 * 1.4).round())
+            .collect()
+    }
+
+    /// `n` rows of class-1 data — the training set of the experiment.
+    pub fn training(&self, n: usize, seed: u64) -> Matrix {
+        let mut rng = Xoshiro256::new(seed ^ TRAIN_SALT);
+        let rows: Vec<Vec<f64>> = (0..n).map(|_| Self::class1_row(&mut rng)).collect();
+        Matrix::from_rows(&rows).unwrap()
+    }
+
+    /// `n` rows mixing class 1 (label true, ~[`NORMAL_FRACTION`]) and
+    /// anomaly classes (label false) — the scoring set.
+    pub fn scoring(&self, n: usize, seed: u64) -> LabeledData {
+        let mut rng = Xoshiro256::new(seed ^ SCORE_SALT);
+        let mut rows = Vec::with_capacity(n);
+        let mut labels = Vec::with_capacity(n);
+        for _ in 0..n {
+            if rng.f64() < NORMAL_FRACTION {
+                rows.push(Self::class1_row(&mut rng));
+                labels.push(true);
+            } else {
+                rows.push(Self::anomaly_row(&mut rng));
+                labels.push(false);
+            }
+        }
+        LabeledData::new(Matrix::from_rows(&rows).unwrap(), labels)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::mean;
+
+    #[test]
+    fn shapes_and_determinism() {
+        let s = Shuttle;
+        let t = s.training(500, 1);
+        assert_eq!(t.rows(), 500);
+        assert_eq!(t.cols(), DIM);
+        assert_eq!(t, s.training(500, 1));
+        let sc = s.scoring(400, 1);
+        assert_eq!(sc.len(), 400);
+        assert_eq!(sc.data, s.scoring(400, 1).data);
+    }
+
+    #[test]
+    fn class_balance_near_eighty_percent() {
+        let sc = Shuttle.scoring(20_000, 2);
+        let frac = sc.num_normal() as f64 / sc.len() as f64;
+        assert!((frac - NORMAL_FRACTION).abs() < 0.02, "frac={frac}");
+    }
+
+    #[test]
+    fn features_are_integers() {
+        let t = Shuttle.training(200, 3);
+        for v in t.as_slice() {
+            assert_eq!(v.fract(), 0.0);
+        }
+    }
+
+    #[test]
+    fn anomalies_are_shifted_away() {
+        // mean distance of anomaly rows to the class-1 centroid is larger
+        let sc = Shuttle.scoring(5000, 4);
+        let t = Shuttle.training(5000, 4);
+        let centroid = t.col_means();
+        let mut d_norm = Vec::new();
+        let mut d_anom = Vec::new();
+        for i in 0..sc.len() {
+            let d = Matrix::sqdist(sc.data.row(i), &centroid).sqrt();
+            if sc.labels[i] {
+                d_norm.push(d);
+            } else {
+                d_anom.push(d);
+            }
+        }
+        assert!(
+            mean(&d_anom) > mean(&d_norm) + 5.0,
+            "norm={} anom={}",
+            mean(&d_norm),
+            mean(&d_anom)
+        );
+    }
+
+    #[test]
+    fn train_and_score_streams_are_distinct() {
+        let s = Shuttle;
+        let t = s.training(10, 7);
+        let sc = s.scoring(10, 7);
+        assert_ne!(t.row(0), sc.data.row(0));
+    }
+}

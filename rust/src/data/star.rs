@@ -1,0 +1,86 @@
+//! Star-shaped data (paper Fig. 3b): uniform samples from the interior
+//! of a five-pointed star polygon, built on the [`crate::data::polygon`]
+//! substrate.
+
+use crate::data::polygon::Polygon;
+use crate::data::Generator;
+use crate::util::matrix::Matrix;
+
+#[derive(Clone, Copy, Debug)]
+pub struct Star {
+    /// Number of star points.
+    pub points: usize,
+    /// Outer vertex radius.
+    pub r_outer: f64,
+    /// Inner (concave) vertex radius.
+    pub r_inner: f64,
+}
+
+impl Default for Star {
+    fn default() -> Self {
+        Star { points: 5, r_outer: 1.0, r_inner: 0.45 }
+    }
+}
+
+impl Star {
+    pub fn polygon(&self) -> Polygon {
+        let k = self.points;
+        let mut verts = Vec::with_capacity(2 * k);
+        for i in 0..2 * k {
+            let th = std::f64::consts::FRAC_PI_2 + i as f64 * std::f64::consts::PI / k as f64;
+            let r = if i % 2 == 0 { self.r_outer } else { self.r_inner };
+            verts.push((r * th.cos(), r * th.sin()));
+        }
+        Polygon::new(verts)
+    }
+}
+
+impl Generator for Star {
+    fn generate(&self, n: usize, seed: u64) -> Matrix {
+        self.polygon().sample_interior(n, seed)
+    }
+
+    fn dim(&self) -> usize {
+        2
+    }
+
+    fn name(&self) -> &'static str {
+        "star"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn samples_inside_star() {
+        let g = Star::default();
+        let poly = g.polygon();
+        let m = g.generate(1500, 21);
+        for i in 0..m.rows() {
+            assert!(poly.contains(m.get(i, 0), m.get(i, 1)));
+        }
+    }
+
+    #[test]
+    fn star_is_concave() {
+        // midpoint between two adjacent outer tips lies outside the star
+        let g = Star::default();
+        let poly = g.polygon();
+        let v = poly.vertices();
+        let mid = ((v[0].0 + v[2].0) / 2.0, (v[0].1 + v[2].1) / 2.0);
+        assert!(!poly.contains(mid.0, mid.1), "star is not concave?");
+    }
+
+    #[test]
+    fn ten_vertices_for_five_points() {
+        assert_eq!(Star::default().polygon().num_vertices(), 10);
+    }
+
+    #[test]
+    fn deterministic() {
+        let g = Star::default();
+        assert_eq!(g.generate(100, 1), g.generate(100, 1));
+    }
+}

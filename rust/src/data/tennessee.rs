@@ -1,0 +1,348 @@
+//! Tennessee-Eastman-like process simulator (paper section V-B).
+//!
+//! The paper generates data from Ricker's MATLAB simulation of the
+//! Tennessee Eastman chemical plant (Downs & Vogel 1993): 41 measured
+//! variables (22 continuous process measurements + 19 sampled analyzer
+//! compositions), one normal operating mode and twenty fault modes.
+//! That simulator is MATLAB-only, so per the substitution rule we build
+//! the closest synthetic equivalent exercising the same code path: a
+//! stable linear state-space plant
+//!
+//! ```text
+//! x[k+1] = A x[k] + B u + w[k]        (8 internal states)
+//! y[k]   = C x[k] + y0 + v[k]         (41 measurements)
+//! ```
+//!
+//! with seeded random (A, B, C), zero-order-hold resampling of the 19
+//! analyzer channels (the paper's 0.1 h / 0.25 h sampled variables),
+//! and twenty fault families grouped exactly like TE's documented
+//! faults: step disturbances (1–7), slow drifts (8–12), measurement
+//! bias/sticking (13–16), oscillations (17–18) and variance inflation
+//! (19–20).
+
+use crate::data::LabeledData;
+use crate::util::matrix::Matrix;
+use crate::util::rng::Xoshiro256;
+
+/// Total measured variables (22 continuous + 19 sampled).
+pub const DIM: usize = 41;
+/// Continuous channels y[0..22); analyzer channels y[22..41).
+pub const CONTINUOUS: usize = 22;
+/// Internal plant state dimension.
+const STATE: usize = 8;
+/// Analyzer channels update every HOLD steps (zero-order hold).
+const HOLD: usize = 10;
+/// Number of fault modes.
+pub const NUM_FAULTS: usize = 20;
+
+/// The synthetic plant. Construction is deterministic in `plant_seed`
+/// (the paper uses one plant; keep the default).
+#[derive(Clone, Debug)]
+pub struct TennesseePlant {
+    a: [[f64; STATE]; STATE],
+    b: [f64; STATE],
+    c: Vec<[f64; STATE]>, // DIM rows
+    y0: Vec<f64>,         // operating-point offsets
+    noise_y: f64,
+    noise_x: f64,
+}
+
+impl Default for TennesseePlant {
+    fn default() -> Self {
+        TennesseePlant::new(0x7E55EE)
+    }
+}
+
+/// Which fault family a fault id belongs to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    Step,
+    Drift,
+    Bias,
+    Oscillation,
+    Variance,
+}
+
+/// Fault family of fault `id` (1-based, 1..=20).
+pub fn fault_kind(id: usize) -> FaultKind {
+    match id {
+        1..=7 => FaultKind::Step,
+        8..=12 => FaultKind::Drift,
+        13..=16 => FaultKind::Bias,
+        17..=18 => FaultKind::Oscillation,
+        19..=20 => FaultKind::Variance,
+        _ => panic!("fault id {id} out of 1..=20"),
+    }
+}
+
+impl TennesseePlant {
+    pub fn new(plant_seed: u64) -> Self {
+        let mut rng = Xoshiro256::new(plant_seed);
+        // Stable A = 0.6 I + R with zero-diagonal R whose absolute row
+        // sums are 0.3: Gershgorin discs are centered at 0.6 with radius
+        // 0.3, so every eigenvalue satisfies |lambda| <= 0.9 < 1.
+        let mut a = [[0.0; STATE]; STATE];
+        for (i, row) in a.iter_mut().enumerate() {
+            let mut sum = 0.0;
+            for (j, v) in row.iter_mut().enumerate() {
+                if j != i {
+                    *v = rng.normal();
+                    sum += v.abs();
+                }
+            }
+            for (j, v) in row.iter_mut().enumerate() {
+                if j != i {
+                    *v *= 0.3 / sum;
+                }
+            }
+            row[i] = 0.6;
+        }
+        let mut b = [0.0; STATE];
+        for v in &mut b {
+            *v = rng.range(0.5, 1.5);
+        }
+        let c: Vec<[f64; STATE]> = (0..DIM)
+            .map(|_| {
+                let mut row = [0.0; STATE];
+                for v in &mut row {
+                    *v = rng.normal();
+                }
+                row
+            })
+            .collect();
+        let y0: Vec<f64> = (0..DIM).map(|_| rng.range(-5.0, 5.0)).collect();
+        TennesseePlant { a, b, c, y0, noise_y: 0.25, noise_x: 0.05 }
+    }
+
+    fn steady_state(&self) -> [f64; STATE] {
+        // iterate x = A x + B u to convergence (u = 1)
+        let mut x = [0.0; STATE];
+        for _ in 0..500 {
+            x = self.step_state(&x, 1.0, None);
+        }
+        x
+    }
+
+    fn step_state(&self, x: &[f64; STATE], u: f64, rng: Option<&mut Xoshiro256>) -> [f64; STATE] {
+        let mut nx = [0.0; STATE];
+        for i in 0..STATE {
+            let mut s = self.b[i] * u;
+            for j in 0..STATE {
+                s += self.a[i][j] * x[j];
+            }
+            nx[i] = s;
+        }
+        if let Some(r) = rng {
+            for v in &mut nx {
+                *v += r.normal() * self.noise_x;
+            }
+        }
+        nx
+    }
+
+    fn measure(&self, x: &[f64; STATE], rng: &mut Xoshiro256, noise_scale: f64) -> Vec<f64> {
+        (0..DIM)
+            .map(|i| {
+                let mut s = self.y0[i];
+                for j in 0..STATE {
+                    s += self.c[i][j] * x[j];
+                }
+                s + rng.normal() * self.noise_y * noise_scale
+            })
+            .collect()
+    }
+
+    /// Simulate `n` observations of a run. `fault = None` for normal
+    /// operation, `Some(1..=20)` for a fault mode active from step 0.
+    pub fn simulate(&self, n: usize, fault: Option<usize>, seed: u64) -> Matrix {
+        let mut rng = Xoshiro256::new(seed ^ 0x7EA5_0000);
+        let mut x = self.steady_state();
+        // fault configuration, deterministic in the fault id
+        let (kind, mag, chan, freq) = match fault {
+            None => (None, 0.0, 0, 0.0),
+            Some(id) => {
+                let mut frng = Xoshiro256::new(0xFA17 + id as u64);
+                (
+                    Some(fault_kind(id)),
+                    frng.range(2.0, 5.0),
+                    frng.index(DIM),
+                    frng.range(0.05, 0.3),
+                )
+            }
+        };
+        let mut held = vec![0.0; DIM]; // analyzer ZOH register
+        let mut rows = Vec::with_capacity(n);
+        for k in 0..n {
+            let u = match kind {
+                Some(FaultKind::Step) => 1.0 + 0.4 * mag / 3.0,
+                Some(FaultKind::Drift) => 1.0 + 0.002 * mag * k as f64 / 10.0,
+                Some(FaultKind::Oscillation) => 1.0 + 0.3 * (freq * k as f64).sin(),
+                _ => 1.0,
+            };
+            x = self.step_state(&x, u, Some(&mut rng));
+            let noise_scale = match kind {
+                Some(FaultKind::Variance) => 1.0 + mag,
+                _ => 1.0,
+            };
+            let mut y = self.measure(&x, &mut rng, noise_scale);
+            if let Some(FaultKind::Bias) = kind {
+                y[chan] += mag * 2.0;
+                y[(chan + 7) % DIM] -= mag;
+            }
+            // zero-order hold on analyzer channels
+            if k % HOLD == 0 {
+                held[CONTINUOUS..DIM].copy_from_slice(&y[CONTINUOUS..DIM]);
+            }
+            y[CONTINUOUS..DIM].copy_from_slice(&held[CONTINUOUS..DIM]);
+            rows.push(y);
+        }
+        Matrix::from_rows(&rows).unwrap()
+    }
+
+    /// Training set: `n` normal-operation observations.
+    pub fn training(&self, n: usize, seed: u64) -> Matrix {
+        self.simulate(n, None, seed)
+    }
+
+    /// Scoring set: `n_normal` normal rows (label true) + `n_fault`
+    /// rows spread across all twenty faults (label false), shuffled.
+    pub fn scoring(&self, n_normal: usize, n_fault: usize, seed: u64) -> LabeledData {
+        let normal = self.simulate(n_normal, None, seed ^ 0x0bb5);
+        let per_fault = (n_fault / NUM_FAULTS).max(1);
+        let mut rows: Vec<(Vec<f64>, bool)> = Vec::with_capacity(n_normal + n_fault);
+        for i in 0..n_normal {
+            rows.push((normal.row(i).to_vec(), true));
+        }
+        let mut added = 0;
+        'outer: for id in 1..=NUM_FAULTS {
+            let m = self.simulate(per_fault, Some(id), seed ^ (0xF000 + id as u64));
+            for i in 0..m.rows() {
+                rows.push((m.row(i).to_vec(), false));
+                added += 1;
+                if added >= n_fault {
+                    break 'outer;
+                }
+            }
+        }
+        let mut rng = Xoshiro256::new(seed ^ 0x5473_F1E5); // shuffle salt
+        let mut order: Vec<usize> = (0..rows.len()).collect();
+        rng.shuffle(&mut order);
+        let data = Matrix::from_rows(&order.iter().map(|&i| rows[i].0.clone()).collect::<Vec<_>>())
+            .unwrap();
+        let labels = order.iter().map(|&i| rows[i].1).collect();
+        LabeledData::new(data, labels)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::{mean, std_dev};
+
+    #[test]
+    fn shapes_and_determinism() {
+        let p = TennesseePlant::default();
+        let t = p.training(200, 1);
+        assert_eq!(t.rows(), 200);
+        assert_eq!(t.cols(), DIM);
+        assert_eq!(t, p.training(200, 1));
+    }
+
+    #[test]
+    fn plant_is_stable() {
+        // normal-run measurements stay bounded over a long horizon
+        let p = TennesseePlant::default();
+        let t = p.training(5000, 2);
+        for v in t.as_slice() {
+            assert!(v.is_finite() && v.abs() < 1e3, "unstable plant: {v}");
+        }
+    }
+
+    #[test]
+    fn analyzer_channels_are_zero_order_held() {
+        let p = TennesseePlant::default();
+        let t = p.training(40, 3);
+        // within a hold window, analyzer channels are constant
+        for k in 0..HOLD - 1 {
+            for j in CONTINUOUS..DIM {
+                assert_eq!(t.get(k, j), t.get(k + 1, j), "step {k} chan {j}");
+            }
+        }
+        // continuous channels do change step to step
+        assert_ne!(t.get(0, 0), t.get(1, 0));
+        // and a new hold window latches new analyzer values
+        assert_ne!(t.get(HOLD - 1, CONTINUOUS), t.get(HOLD, CONTINUOUS));
+    }
+
+    #[test]
+    fn fault_kinds_partition_ids() {
+        let mut counts = [0usize; 5];
+        for id in 1..=NUM_FAULTS {
+            counts[match fault_kind(id) {
+                FaultKind::Step => 0,
+                FaultKind::Drift => 1,
+                FaultKind::Bias => 2,
+                FaultKind::Oscillation => 3,
+                FaultKind::Variance => 4,
+            }] += 1;
+        }
+        assert_eq!(counts, [7, 5, 4, 2, 2]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn fault_zero_rejected() {
+        fault_kind(0);
+    }
+
+    #[test]
+    fn every_fault_shifts_the_distribution() {
+        let p = TennesseePlant::default();
+        let normal = p.training(800, 4);
+        let centroid = normal.col_means();
+        let d_norm: Vec<f64> = (0..normal.rows())
+            .map(|i| Matrix::sqdist(normal.row(i), &centroid).sqrt())
+            .collect();
+        let thresh = mean(&d_norm) + 2.0 * std_dev(&d_norm);
+        for id in 1..=NUM_FAULTS {
+            let m = p.simulate(300, Some(id), 5);
+            // drop the first 50 rows: drifts take time to develop
+            let d_fault: Vec<f64> = (50..m.rows())
+                .map(|i| Matrix::sqdist(m.row(i), &centroid).sqrt())
+                .collect();
+            let frac_far = d_fault.iter().filter(|&&d| d > thresh).count() as f64
+                / d_fault.len() as f64;
+            assert!(
+                frac_far > 0.10,
+                "fault {id} ({:?}) indistinguishable: frac_far={frac_far}",
+                fault_kind(id)
+            );
+        }
+    }
+
+    #[test]
+    fn scoring_mix_has_both_labels() {
+        let p = TennesseePlant::default();
+        let sc = p.scoring(500, 400, 6);
+        assert_eq!(sc.len(), 900);
+        let n_norm = sc.num_normal();
+        assert_eq!(n_norm, 500);
+    }
+
+    #[test]
+    fn variance_fault_inflates_spread() {
+        let p = TennesseePlant::default();
+        let normal = p.training(1000, 7);
+        let noisy = p.simulate(1000, Some(19), 7);
+        let col = |m: &Matrix, j: usize| -> Vec<f64> {
+            (0..m.rows()).map(|i| m.get(i, j)).collect()
+        };
+        // averaged over continuous channels, std must inflate clearly
+        let mut ratio = 0.0;
+        for j in 0..CONTINUOUS {
+            ratio += std_dev(&col(&noisy, j)) / std_dev(&col(&normal, j));
+        }
+        ratio /= CONTINUOUS as f64;
+        assert!(ratio > 1.5, "ratio={ratio}");
+    }
+}

@@ -1,0 +1,129 @@
+//! Controller-side logic shared by the local and TCP transports:
+//! sharding, SV-set union, the final combining solve, and run stats.
+
+use crate::error::{Error, Result};
+use crate::sampling::SamplingConfig;
+use crate::svdd::model::SvddModel;
+use crate::svdd::trainer::{train, SvddParams};
+use crate::util::matrix::Matrix;
+
+/// Distributed run configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct DistributedConfig {
+    /// Worker count `p`.
+    pub workers: usize,
+    pub sampling: SamplingConfig,
+    pub seed: u64,
+}
+
+impl Default for DistributedConfig {
+    fn default() -> Self {
+        DistributedConfig {
+            workers: 4,
+            sampling: SamplingConfig::default(),
+            seed: 0,
+        }
+    }
+}
+
+/// Per-worker report.
+#[derive(Clone, Debug)]
+pub struct WorkerReport {
+    pub worker: usize,
+    pub shard_rows: usize,
+    pub sv_count: usize,
+    pub iterations: usize,
+    pub converged: bool,
+}
+
+/// Result of a distributed run.
+#[derive(Clone, Debug)]
+pub struct DistributedOutcome {
+    pub model: SvddModel,
+    pub reports: Vec<WorkerReport>,
+    /// Rows in the union set S' the controller solved.
+    pub union_rows: usize,
+}
+
+/// Split `data` into `p` contiguous shards of near-equal size.
+/// (Generators produce i.i.d. rows, so contiguous == random split; data
+/// with ordered rows should be shuffled upstream.)
+pub fn shard(data: &Matrix, p: usize) -> Vec<Matrix> {
+    let p = p.max(1).min(data.rows().max(1));
+    let n = data.rows();
+    let base = n / p;
+    let extra = n % p;
+    let mut shards = Vec::with_capacity(p);
+    let mut start = 0;
+    for i in 0..p {
+        let len = base + usize::from(i < extra);
+        let idx: Vec<usize> = (start..start + len).collect();
+        shards.push(data.gather(&idx));
+        start += len;
+    }
+    shards
+}
+
+/// Combine worker SV sets: union + dedup + one final SVDD (Fig 2's
+/// controller box).
+pub fn combine(
+    sv_sets: Vec<Matrix>,
+    params: &SvddParams,
+) -> Result<(SvddModel, usize)> {
+    let mut union: Option<Matrix> = None;
+    for sv in sv_sets {
+        union = Some(match union {
+            None => sv,
+            Some(u) => u.vstack(&sv)?,
+        });
+    }
+    let union = union
+        .ok_or_else(|| Error::Distributed("no worker SV sets to combine".into()))?
+        .dedup_rows();
+    let rows = union.rows();
+    let model = train(&union, params)?;
+    Ok((model, rows))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{banana::Banana, Generator};
+
+    #[test]
+    fn shard_sizes_balanced_and_complete() {
+        let data = Banana::default().generate(103, 1);
+        let shards = shard(&data, 4);
+        assert_eq!(shards.len(), 4);
+        let sizes: Vec<usize> = shards.iter().map(|s| s.rows()).collect();
+        assert_eq!(sizes.iter().sum::<usize>(), 103);
+        assert_eq!(sizes, vec![26, 26, 26, 25]);
+    }
+
+    #[test]
+    fn shard_more_workers_than_rows() {
+        let data = Banana::default().generate(3, 2);
+        let shards = shard(&data, 10);
+        assert_eq!(shards.len(), 3);
+        assert!(shards.iter().all(|s| s.rows() == 1));
+    }
+
+    #[test]
+    fn combine_unions_and_solves() {
+        let params = SvddParams::gaussian(0.35, 0.01);
+        let a = Banana::default().generate(60, 3);
+        let b = Banana::default().generate(60, 4);
+        let (model, rows) = combine(vec![a.clone(), b], &params).unwrap();
+        assert!(rows <= 120);
+        assert!(model.num_sv() >= 3);
+        // duplicate sets collapse
+        let (_, rows2) = combine(vec![a.clone(), a.clone()], &params).unwrap();
+        assert_eq!(rows2, 60);
+    }
+
+    #[test]
+    fn combine_empty_rejected() {
+        let params = SvddParams::gaussian(0.35, 0.01);
+        assert!(combine(vec![], &params).is_err());
+    }
+}

@@ -1,0 +1,118 @@
+//! In-process cluster: one thread per worker, channels for transport.
+//! This is the default distributed mode (multi-machine topology, single
+//! machine execution) and the reference the TCP transport is tested
+//! against.
+
+use crate::error::Result;
+use crate::sampling::SamplingTrainer;
+use crate::svdd::trainer::SvddParams;
+use crate::util::matrix::Matrix;
+use crate::util::rng::Xoshiro256;
+use rand_core::RngCore;
+
+use super::controller::{combine, shard, DistributedConfig, DistributedOutcome, WorkerReport};
+
+/// Run the paper's distributed scheme with in-process workers.
+pub fn train_local_cluster(
+    data: &Matrix,
+    params: &SvddParams,
+    cfg: &DistributedConfig,
+) -> Result<DistributedOutcome> {
+    let shards = shard(data, cfg.workers);
+    // independent per-worker RNG streams via xoshiro jumps
+    let base = Xoshiro256::new(cfg.seed);
+    let worker_seeds: Vec<u64> = (0..shards.len())
+        .map(|k| {
+            let mut s = base.stream(k as u64);
+            s.next_u64()
+        })
+        .collect();
+
+    let results: Vec<Result<(Matrix, WorkerReport)>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = shards
+            .iter()
+            .enumerate()
+            .map(|(i, shard_data)| {
+                let params = *params;
+                let sampling = cfg.sampling;
+                let seed = worker_seeds[i];
+                scope.spawn(move || {
+                    let out = SamplingTrainer::new(params, sampling).train(shard_data, seed)?;
+                    let report = WorkerReport {
+                        worker: i,
+                        shard_rows: shard_data.rows(),
+                        sv_count: out.model.num_sv(),
+                        iterations: out.iterations,
+                        converged: out.converged,
+                    };
+                    Ok((out.model.support_vectors().clone(), report))
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+    });
+
+    let mut sv_sets = Vec::with_capacity(results.len());
+    let mut reports = Vec::with_capacity(results.len());
+    for r in results {
+        let (sv, report) = r?;
+        sv_sets.push(sv);
+        reports.push(report);
+    }
+    let (model, union_rows) = combine(sv_sets, params)?;
+    Ok(DistributedOutcome { model, reports, union_rows })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{donut::TwoDonut, Generator};
+    use crate::sampling::SamplingConfig;
+    use crate::svdd::train;
+
+    #[test]
+    fn distributed_close_to_full() {
+        let data = TwoDonut::default().generate(8000, 5);
+        let params = SvddParams::gaussian(0.4, 0.001);
+        let cfg = DistributedConfig {
+            workers: 4,
+            sampling: SamplingConfig { sample_size: 11, ..Default::default() },
+            seed: 3,
+        };
+        let dist = train_local_cluster(&data, &params, &cfg).unwrap();
+        assert_eq!(dist.reports.len(), 4);
+        assert!(dist.reports.iter().all(|r| r.shard_rows == 2000));
+        let full = train(&data, &params).unwrap();
+        let rel = (dist.model.r2() - full.r2()).abs() / full.r2();
+        assert!(rel < 0.05, "R^2 gap {rel}");
+    }
+
+    #[test]
+    fn single_worker_degenerates_to_sampling() {
+        let data = TwoDonut::default().generate(3000, 6);
+        let params = SvddParams::gaussian(0.4, 0.001);
+        let cfg = DistributedConfig {
+            workers: 1,
+            sampling: SamplingConfig { sample_size: 11, ..Default::default() },
+            seed: 4,
+        };
+        let out = train_local_cluster(&data, &params, &cfg).unwrap();
+        assert_eq!(out.reports.len(), 1);
+        assert!(out.model.r2() > 0.0);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let data = TwoDonut::default().generate(2000, 7);
+        let params = SvddParams::gaussian(0.4, 0.001);
+        let cfg = DistributedConfig {
+            workers: 3,
+            sampling: SamplingConfig { sample_size: 8, ..Default::default() },
+            seed: 11,
+        };
+        let a = train_local_cluster(&data, &params, &cfg).unwrap();
+        let b = train_local_cluster(&data, &params, &cfg).unwrap();
+        assert_eq!(a.model.r2(), b.model.r2());
+        assert_eq!(a.union_rows, b.union_rows);
+    }
+}

@@ -1,0 +1,375 @@
+//! Wire protocol for the distributed cluster: versioned, length-prefixed
+//! binary frames with explicit little-endian scalar encoding. Shared by
+//! the TCP transport (serialized) and unit-tested independently of any
+//! socket.
+
+use std::io::{Read, Write};
+
+use crate::error::{Error, Result};
+use crate::sampling::SamplingConfig;
+use crate::svdd::trainer::SvddParams;
+use crate::svdd::Kernel;
+use crate::util::matrix::Matrix;
+
+/// Protocol version — bumped on any frame-layout change; mismatches are
+/// rejected at Hello time.
+pub const PROTOCOL_VERSION: u32 = 1;
+
+/// Frames exchanged between controller and worker.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Message {
+    /// Controller -> worker handshake.
+    Hello { version: u32 },
+    /// Worker -> controller handshake ack.
+    HelloAck { version: u32 },
+    /// Controller -> worker: run the sampling method on this shard.
+    Train {
+        shard: Matrix,
+        bw: f64,
+        outlier_fraction: f64,
+        sample_size: u32,
+        max_iter: u32,
+        seed: u64,
+    },
+    /// Worker -> controller: the shard's master SV set + stats.
+    TrainDone {
+        sv: Matrix,
+        r2: f64,
+        iterations: u32,
+        converged: bool,
+    },
+    /// Worker -> controller: failure report.
+    TrainFailed { reason: String },
+    /// Controller -> worker: shut down cleanly.
+    Shutdown,
+    /// Client -> scoring server: score these observations.
+    ScoreRequest { rows: Matrix },
+    /// Scoring server -> client: dist^2 per row + the model threshold.
+    ScoreReply { dist2: Vec<f64>, r2: f64 },
+}
+
+impl Message {
+    /// Build a Train message from typed params.
+    pub fn train(shard: Matrix, params: &SvddParams, cfg: &SamplingConfig, seed: u64) -> Message {
+        Message::Train {
+            shard,
+            bw: params.kernel.bw().unwrap_or(1.0),
+            outlier_fraction: params.outlier_fraction,
+            sample_size: cfg.sample_size as u32,
+            max_iter: cfg.max_iter as u32,
+            seed,
+        }
+    }
+
+    /// Recover typed params from a Train message.
+    pub fn train_params(bw: f64, f: f64) -> SvddParams {
+        SvddParams {
+            kernel: Kernel::gaussian(bw),
+            ..SvddParams { outlier_fraction: f, ..Default::default() }
+        }
+    }
+
+    // ---------------------------------------------------------- codec
+
+    fn tag(&self) -> u8 {
+        match self {
+            Message::Hello { .. } => 0,
+            Message::HelloAck { .. } => 1,
+            Message::Train { .. } => 2,
+            Message::TrainDone { .. } => 3,
+            Message::TrainFailed { .. } => 4,
+            Message::Shutdown => 5,
+            Message::ScoreRequest { .. } => 6,
+            Message::ScoreReply { .. } => 7,
+        }
+    }
+
+    /// Serialize to a byte buffer (without the outer length prefix).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut b = vec![self.tag()];
+        match self {
+            Message::Hello { version } | Message::HelloAck { version } => {
+                put_u32(&mut b, *version);
+            }
+            Message::Train { shard, bw, outlier_fraction, sample_size, max_iter, seed } => {
+                put_matrix(&mut b, shard);
+                put_f64(&mut b, *bw);
+                put_f64(&mut b, *outlier_fraction);
+                put_u32(&mut b, *sample_size);
+                put_u32(&mut b, *max_iter);
+                put_u64(&mut b, *seed);
+            }
+            Message::TrainDone { sv, r2, iterations, converged } => {
+                put_matrix(&mut b, sv);
+                put_f64(&mut b, *r2);
+                put_u32(&mut b, *iterations);
+                b.push(*converged as u8);
+            }
+            Message::TrainFailed { reason } => {
+                put_bytes(&mut b, reason.as_bytes());
+            }
+            Message::Shutdown => {}
+            Message::ScoreRequest { rows } => {
+                put_matrix(&mut b, rows);
+            }
+            Message::ScoreReply { dist2, r2 } => {
+                put_u32(&mut b, dist2.len() as u32);
+                for &v in dist2 {
+                    put_f64(&mut b, v);
+                }
+                put_f64(&mut b, *r2);
+            }
+        }
+        b
+    }
+
+    /// Inverse of [`Message::encode`].
+    pub fn decode(buf: &[u8]) -> Result<Message> {
+        let mut c = Cursor { buf, pos: 0 };
+        let tag = c.u8()?;
+        let msg = match tag {
+            0 => Message::Hello { version: c.u32()? },
+            1 => Message::HelloAck { version: c.u32()? },
+            2 => Message::Train {
+                shard: c.matrix()?,
+                bw: c.f64()?,
+                outlier_fraction: c.f64()?,
+                sample_size: c.u32()?,
+                max_iter: c.u32()?,
+                seed: c.u64()?,
+            },
+            3 => Message::TrainDone {
+                sv: c.matrix()?,
+                r2: c.f64()?,
+                iterations: c.u32()?,
+                converged: c.u8()? != 0,
+            },
+            4 => Message::TrainFailed {
+                reason: String::from_utf8_lossy(&c.bytes()?).into_owned(),
+            },
+            5 => Message::Shutdown,
+            6 => Message::ScoreRequest { rows: c.matrix()? },
+            7 => {
+                let n = c.u32()? as usize;
+                if n > MAX_FRAME / 8 {
+                    return Err(Error::Distributed(format!("reply too large: {n}")));
+                }
+                let mut dist2 = Vec::with_capacity(n);
+                for _ in 0..n {
+                    dist2.push(c.f64()?);
+                }
+                Message::ScoreReply { dist2, r2: c.f64()? }
+            }
+            t => return Err(Error::Distributed(format!("unknown tag {t}"))),
+        };
+        if c.pos != buf.len() {
+            return Err(Error::Distributed(format!(
+                "{} trailing bytes after tag {tag}",
+                buf.len() - c.pos
+            )));
+        }
+        Ok(msg)
+    }
+
+    /// Write `self` as a length-prefixed frame.
+    pub fn write_to(&self, w: &mut impl Write) -> Result<()> {
+        let body = self.encode();
+        if body.len() > MAX_FRAME {
+            return Err(Error::Distributed(format!("frame too large: {}", body.len())));
+        }
+        w.write_all(&(body.len() as u32).to_le_bytes())?;
+        w.write_all(&body)?;
+        w.flush()?;
+        Ok(())
+    }
+
+    /// Read one length-prefixed frame.
+    pub fn read_from(r: &mut impl Read) -> Result<Message> {
+        let mut len_bytes = [0u8; 4];
+        r.read_exact(&mut len_bytes)?;
+        let len = u32::from_le_bytes(len_bytes) as usize;
+        if len > MAX_FRAME {
+            return Err(Error::Distributed(format!("incoming frame too large: {len}")));
+        }
+        let mut body = vec![0u8; len];
+        r.read_exact(&mut body)?;
+        Message::decode(&body)
+    }
+}
+
+/// 256 MiB frame cap (a 1M x 16 f64 shard is 128 MiB; shards beyond the
+/// cap should be split across more workers).
+pub const MAX_FRAME: usize = 256 << 20;
+
+// -------------------------------------------------------- primitives
+
+fn put_u32(b: &mut Vec<u8>, v: u32) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(b: &mut Vec<u8>, v: u64) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(b: &mut Vec<u8>, v: f64) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_bytes(b: &mut Vec<u8>, v: &[u8]) {
+    put_u32(b, v.len() as u32);
+    b.extend_from_slice(v);
+}
+
+fn put_matrix(b: &mut Vec<u8>, m: &Matrix) {
+    put_u32(b, m.rows() as u32);
+    put_u32(b, m.cols() as u32);
+    for &v in m.as_slice() {
+        put_f64(b, v);
+    }
+}
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            return Err(Error::Distributed("truncated frame".into()));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.u32()? as usize;
+        Ok(self.take(n)?.to_vec())
+    }
+
+    fn matrix(&mut self) -> Result<Matrix> {
+        let rows = self.u32()? as usize;
+        let cols = self.u32()? as usize;
+        if rows.saturating_mul(cols) > MAX_FRAME / 8 {
+            return Err(Error::Distributed(format!("matrix too large: {rows}x{cols}")));
+        }
+        let mut data = Vec::with_capacity(rows * cols);
+        for _ in 0..rows * cols {
+            data.push(self.f64()?);
+        }
+        Matrix::from_vec(data, rows, cols)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_matrix() -> Matrix {
+        Matrix::from_rows(&[vec![1.5, -2.0], vec![0.0, 3.25]]).unwrap()
+    }
+
+    #[test]
+    fn roundtrip_all_variants() {
+        let msgs = vec![
+            Message::Hello { version: 1 },
+            Message::HelloAck { version: 7 },
+            Message::Train {
+                shard: sample_matrix(),
+                bw: 0.8,
+                outlier_fraction: 0.001,
+                sample_size: 11,
+                max_iter: 500,
+                seed: 0xDEADBEEF,
+            },
+            Message::TrainDone {
+                sv: sample_matrix(),
+                r2: 0.93,
+                iterations: 42,
+                converged: true,
+            },
+            Message::TrainFailed { reason: "boom 💥".into() },
+            Message::Shutdown,
+            Message::ScoreRequest { rows: sample_matrix() },
+            Message::ScoreReply { dist2: vec![0.25, 1.5, -0.0], r2: 0.9 },
+        ];
+        for m in msgs {
+            let enc = m.encode();
+            let dec = Message::decode(&enc).unwrap();
+            assert_eq!(m, dec);
+        }
+    }
+
+    #[test]
+    fn framed_roundtrip_via_buffer() {
+        let m = Message::TrainDone {
+            sv: sample_matrix(),
+            r2: 0.5,
+            iterations: 3,
+            converged: false,
+        };
+        let mut buf = Vec::new();
+        m.write_to(&mut buf).unwrap();
+        let mut cursor = std::io::Cursor::new(buf);
+        let back = Message::read_from(&mut cursor).unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn multiple_frames_stream() {
+        let mut buf = Vec::new();
+        Message::Hello { version: 1 }.write_to(&mut buf).unwrap();
+        Message::Shutdown.write_to(&mut buf).unwrap();
+        let mut cursor = std::io::Cursor::new(buf);
+        assert_eq!(
+            Message::read_from(&mut cursor).unwrap(),
+            Message::Hello { version: 1 }
+        );
+        assert_eq!(Message::read_from(&mut cursor).unwrap(), Message::Shutdown);
+    }
+
+    #[test]
+    fn truncated_frame_rejected() {
+        let m = Message::Hello { version: 1 };
+        let enc = m.encode();
+        assert!(Message::decode(&enc[..enc.len() - 1]).is_err());
+    }
+
+    #[test]
+    fn trailing_bytes_rejected() {
+        let mut enc = Message::Shutdown.encode();
+        enc.push(0);
+        assert!(Message::decode(&enc).is_err());
+    }
+
+    #[test]
+    fn unknown_tag_rejected() {
+        assert!(Message::decode(&[99]).is_err());
+    }
+
+    #[test]
+    fn oversized_declared_matrix_rejected() {
+        // tag=2 (Train) with absurd rows*cols
+        let mut b = vec![2u8];
+        b.extend_from_slice(&u32::MAX.to_le_bytes());
+        b.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(Message::decode(&b).is_err());
+    }
+}

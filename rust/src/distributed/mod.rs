@@ -1,0 +1,21 @@
+//! Distributed training (paper section III-1, Fig 2).
+//!
+//! Topology: the controller shards the training data over `p` workers;
+//! each worker runs the sampling method (Algorithm 1) on its shard and
+//! promotes its master SV set `SV_i*` to the controller; the controller
+//! unions all worker SV sets into `S'` and computes one final SVDD on
+//! it.
+//!
+//! Two transports share one message protocol ([`message`]):
+//! - [`local`] — in-process workers (threads + channels), the default;
+//! - [`tcp`] — a length-prefixed binary protocol over TCP for actual
+//!   multi-process clusters (no tokio in the vendored crate set, so
+//!   std::net + a thread per connection).
+
+pub mod controller;
+pub mod local;
+pub mod message;
+pub mod tcp;
+
+pub use controller::{DistributedConfig, DistributedOutcome};
+pub use local::train_local_cluster;

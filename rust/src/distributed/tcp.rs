@@ -1,0 +1,250 @@
+//! TCP transport: a worker daemon (`fastsvdd worker --listen ...`) and
+//! a controller client, speaking the [`super::message`] protocol over
+//! length-prefixed frames. One thread per accepted connection; the
+//! handshake pins the protocol version.
+
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::sampling::{SamplingConfig, SamplingTrainer};
+use crate::svdd::trainer::SvddParams;
+use crate::svdd::Kernel;
+use crate::util::matrix::Matrix;
+use crate::util::rng::Xoshiro256;
+use rand_core::RngCore;
+
+use super::controller::{combine, shard, DistributedConfig, DistributedOutcome, WorkerReport};
+use super::message::{Message, PROTOCOL_VERSION};
+
+/// A running worker server (owns its listener thread).
+pub struct WorkerServer {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerServer {
+    /// Bind `addr` (e.g. "127.0.0.1:0") and serve train requests until
+    /// [`WorkerServer::stop`] or process exit.
+    pub fn spawn(addr: impl ToSocketAddrs) -> Result<WorkerServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = std::thread::spawn(move || {
+            while !stop2.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        stream.set_nonblocking(false).ok();
+                        let stop3 = stop2.clone();
+                        std::thread::spawn(move || {
+                            let _ = handle_connection(stream, &stop3);
+                        });
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(10));
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+        Ok(WorkerServer { addr: local, stop, handle: Some(handle) })
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    /// Ask the accept loop to exit (in-flight connections finish).
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            h.join().ok();
+        }
+    }
+}
+
+impl Drop for WorkerServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn handle_connection(mut stream: TcpStream, stop: &AtomicBool) -> Result<()> {
+    // handshake
+    match Message::read_from(&mut stream)? {
+        Message::Hello { version } if version == PROTOCOL_VERSION => {
+            Message::HelloAck { version: PROTOCOL_VERSION }.write_to(&mut stream)?;
+        }
+        Message::Hello { version } => {
+            Message::TrainFailed {
+                reason: format!("version mismatch: {version} != {PROTOCOL_VERSION}"),
+            }
+            .write_to(&mut stream)?;
+            return Err(Error::Distributed("handshake version mismatch".into()));
+        }
+        other => {
+            return Err(Error::Distributed(format!("expected Hello, got {other:?}")));
+        }
+    }
+    // serve
+    while !stop.load(Ordering::Relaxed) {
+        match Message::read_from(&mut stream) {
+            Ok(Message::Train { shard, bw, outlier_fraction, sample_size, max_iter, seed }) => {
+                let params = SvddParams {
+                    kernel: Kernel::gaussian(bw),
+                    outlier_fraction,
+                    ..Default::default()
+                };
+                let cfg = SamplingConfig {
+                    sample_size: sample_size as usize,
+                    max_iter: max_iter as usize,
+                    ..Default::default()
+                };
+                let reply = match SamplingTrainer::new(params, cfg).train(&shard, seed) {
+                    Ok(out) => Message::TrainDone {
+                        sv: out.model.support_vectors().clone(),
+                        r2: out.model.r2(),
+                        iterations: out.iterations as u32,
+                        converged: out.converged,
+                    },
+                    Err(e) => Message::TrainFailed { reason: e.to_string() },
+                };
+                reply.write_to(&mut stream)?;
+            }
+            Ok(Message::Shutdown) => break,
+            Ok(other) => {
+                return Err(Error::Distributed(format!("unexpected {other:?}")));
+            }
+            Err(_) => break, // peer went away
+        }
+    }
+    Ok(())
+}
+
+/// Controller over TCP workers: shard the data, send one Train per
+/// worker (round-robin over addresses), gather SV sets, combine.
+pub fn train_tcp_cluster(
+    data: &Matrix,
+    params: &SvddParams,
+    cfg: &DistributedConfig,
+    addrs: &[std::net::SocketAddr],
+) -> Result<DistributedOutcome> {
+    if addrs.is_empty() {
+        return Err(Error::Distributed("no worker addresses".into()));
+    }
+    let shards = shard(data, cfg.workers);
+    let base = Xoshiro256::new(cfg.seed);
+
+    let results: Vec<Result<(Matrix, WorkerReport)>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = shards
+            .into_iter()
+            .enumerate()
+            .map(|(i, shard_data)| {
+                let addr = addrs[i % addrs.len()];
+                let params = *params;
+                let sampling = cfg.sampling;
+                let mut rng = base.stream(i as u64);
+                let seed = rng.next_u64();
+                scope.spawn(move || -> Result<(Matrix, WorkerReport)> {
+                    let mut stream = TcpStream::connect(addr)?;
+                    Message::Hello { version: PROTOCOL_VERSION }.write_to(&mut stream)?;
+                    match Message::read_from(&mut stream)? {
+                        Message::HelloAck { version } if version == PROTOCOL_VERSION => {}
+                        other => {
+                            return Err(Error::Distributed(format!(
+                                "bad handshake reply: {other:?}"
+                            )))
+                        }
+                    }
+                    let rows = shard_data.rows();
+                    Message::train(shard_data, &params, &sampling, seed)
+                        .write_to(&mut stream)?;
+                    match Message::read_from(&mut stream)? {
+                        Message::TrainDone { sv, iterations, converged, .. } => {
+                            let report = WorkerReport {
+                                worker: i,
+                                shard_rows: rows,
+                                sv_count: sv.rows(),
+                                iterations: iterations as usize,
+                                converged,
+                            };
+                            Message::Shutdown.write_to(&mut stream).ok();
+                            Ok((sv, report))
+                        }
+                        Message::TrainFailed { reason } => {
+                            Err(Error::Distributed(format!("worker {i}: {reason}")))
+                        }
+                        other => Err(Error::Distributed(format!("unexpected {other:?}"))),
+                    }
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("controller thread panicked")).collect()
+    });
+
+    let mut sv_sets = Vec::new();
+    let mut reports = Vec::new();
+    for r in results {
+        let (sv, report) = r?;
+        sv_sets.push(sv);
+        reports.push(report);
+    }
+    let (model, union_rows) = combine(sv_sets, params)?;
+    Ok(DistributedOutcome { model, reports, union_rows })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{donut::TwoDonut, Generator};
+
+    #[test]
+    fn tcp_cluster_end_to_end() {
+        let mut w1 = WorkerServer::spawn("127.0.0.1:0").unwrap();
+        let mut w2 = WorkerServer::spawn("127.0.0.1:0").unwrap();
+        let addrs = vec![w1.addr(), w2.addr()];
+
+        let data = TwoDonut::default().generate(4000, 8);
+        let params = SvddParams::gaussian(0.4, 0.001);
+        let cfg = DistributedConfig {
+            workers: 4, // 4 shards over 2 workers (round robin)
+            sampling: SamplingConfig { sample_size: 11, ..Default::default() },
+            seed: 5,
+        };
+        let out = train_tcp_cluster(&data, &params, &cfg, &addrs).unwrap();
+        assert_eq!(out.reports.len(), 4);
+        assert!(out.model.r2() > 0.5);
+        w1.stop();
+        w2.stop();
+    }
+
+    #[test]
+    fn tcp_matches_local_cluster() {
+        let mut w = WorkerServer::spawn("127.0.0.1:0").unwrap();
+        let data = TwoDonut::default().generate(2000, 9);
+        let params = SvddParams::gaussian(0.4, 0.001);
+        let cfg = DistributedConfig {
+            workers: 2,
+            sampling: SamplingConfig { sample_size: 8, ..Default::default() },
+            seed: 21,
+        };
+        let tcp = train_tcp_cluster(&data, &params, &cfg, &[w.addr()]).unwrap();
+        let local = super::super::local::train_local_cluster(&data, &params, &cfg).unwrap();
+        // same shards, same seeds, same algorithm -> identical result
+        assert_eq!(tcp.union_rows, local.union_rows);
+        assert!((tcp.model.r2() - local.model.r2()).abs() < 1e-12);
+        w.stop();
+    }
+
+    #[test]
+    fn no_addresses_rejected() {
+        let data = TwoDonut::default().generate(100, 1);
+        let params = SvddParams::gaussian(0.4, 0.01);
+        let cfg = DistributedConfig::default();
+        assert!(train_tcp_cluster(&data, &params, &cfg, &[]).is_err());
+    }
+}

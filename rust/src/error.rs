@@ -1,0 +1,51 @@
+//! Crate-wide error type.
+
+/// All fallible public APIs in this crate return [`Result<T>`].
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// Invalid user input (bad config value, empty data set, ...).
+    #[error("invalid input: {0}")]
+    InvalidInput(String),
+
+    /// The QP solver failed to make progress / converge.
+    #[error("solver failure: {0}")]
+    Solver(String),
+
+    /// AOT artifact registry / PJRT runtime problems.
+    #[error("runtime: {0}")]
+    Runtime(String),
+
+    /// Distributed protocol errors (framing, version, channel death).
+    #[error("distributed: {0}")]
+    Distributed(String),
+
+    /// Configuration file / CLI parsing problems.
+    #[error("config: {0}")]
+    Config(String),
+
+    /// JSON parse errors from the mini parser.
+    #[error("json: {0}")]
+    Json(String),
+
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+
+    /// Errors bubbled out of the `xla` crate (PJRT).
+    #[error("xla: {0}")]
+    Xla(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl Error {
+    /// Shorthand used all over the crate.
+    pub fn invalid(msg: impl Into<String>) -> Self {
+        Error::InvalidInput(msg.into())
+    }
+}

@@ -1,0 +1,51 @@
+//! # fastsvdd — sampling-based SVDD training
+//!
+//! A production-quality reproduction of *"Sampling Method for Fast
+//! Training of Support Vector Data Description"* (Chaudhuri et al., SAS
+//! Institute, 2016) as a three-layer Rust + JAX + Pallas system:
+//!
+//! - **Layer 3 (this crate)** — the paper's contribution: the iterative
+//!   sampling trainer ([`sampling`]), master-SV-set state management,
+//!   convergence detection, the distributed controller/worker topology
+//!   ([`distributed`]) and the batch scoring service ([`scoring`]).
+//! - **Layer 2/1 (build-time Python)** — the SVDD compute graphs
+//!   (batched kernel-distance scoring, sample gram matrices) written in
+//!   JAX on top of Pallas kernels, AOT-lowered once to HLO text and
+//!   executed from Rust through the PJRT CPU client ([`runtime`]).
+//!
+//! Python never runs on the train/serve path: after `make artifacts`
+//! the Rust binary is self-contained.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use fastsvdd::data::{banana::Banana, Generator};
+//! use fastsvdd::sampling::{SamplingConfig, SamplingTrainer};
+//! use fastsvdd::svdd::SvddParams;
+//!
+//! let data = Banana::default().generate(11_016, 42);
+//! let params = SvddParams::gaussian(0.8, 0.001);
+//! let cfg = SamplingConfig { sample_size: 6, ..Default::default() };
+//! let outcome = SamplingTrainer::new(params, cfg).train(&data, 7).unwrap();
+//! println!("R^2 = {:.4}, #SV = {}", outcome.model.r2(), outcome.model.num_sv());
+//! ```
+//!
+//! See `examples/` for end-to-end drivers and `rust/benches/` for the
+//! harnesses that regenerate every table and figure of the paper.
+
+pub mod baselines;
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod data;
+pub mod distributed;
+pub mod error;
+pub mod metrics;
+pub mod runtime;
+pub mod sampling;
+pub mod scoring;
+pub mod svdd;
+pub mod testutil;
+pub mod util;
+
+pub use error::{Error, Result};

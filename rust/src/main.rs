@@ -1,0 +1,350 @@
+//! `fastsvdd` — the launcher binary: train/score/serve entry points
+//! over the library (see `cli::HELP`).
+
+use std::path::Path;
+
+use fastsvdd::baselines::{train_full, train_kim, train_luo, KimConfig, LuoConfig};
+use fastsvdd::cli::{Args, HELP};
+use fastsvdd::config::{Method, RunConfig};
+use fastsvdd::data::grid::Grid;
+use fastsvdd::data::shuttle::Shuttle;
+use fastsvdd::data::tennessee::TennesseePlant;
+use fastsvdd::data::{shape_by_name, LabeledData};
+use fastsvdd::distributed::tcp::{train_tcp_cluster, WorkerServer};
+use fastsvdd::distributed::{train_local_cluster, DistributedConfig};
+use fastsvdd::error::{Error, Result};
+use fastsvdd::runtime::SharedRuntime;
+use fastsvdd::sampling::SamplingTrainer;
+use fastsvdd::scoring::{F1Score, Scorer};
+use fastsvdd::svdd::SvddModel;
+use fastsvdd::util::matrix::Matrix;
+use fastsvdd::util::timer::{fmt_duration, Stopwatch};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&argv) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv)?;
+    match args.command.as_str() {
+        "train" => cmd_train(&args),
+        "score" => cmd_score(&args),
+        "grid" => cmd_grid(&args),
+        "worker" => cmd_worker(&args),
+        "serve" => cmd_serve(&args),
+        "artifacts" => cmd_artifacts(&args),
+        "" | "help" => {
+            print!("{HELP}");
+            Ok(())
+        }
+        other => Err(Error::Config(format!("unknown command '{other}'; try help"))),
+    }
+}
+
+/// Materialize a named training set.
+fn training_data(name: &str, rows: usize, seed: u64) -> Result<Matrix> {
+    if let Some(g) = shape_by_name(name) {
+        return Ok(g.generate(rows, seed));
+    }
+    match name {
+        "shuttle" => Ok(Shuttle.training(rows, seed)),
+        "tennessee" => Ok(TennesseePlant::default().training(rows, seed)),
+        path if Path::new(path).exists() => {
+            let (m, _) = fastsvdd::data::csv::read_matrix(Path::new(path), true)?;
+            Ok(m)
+        }
+        other => Err(Error::Config(format!("unknown dataset '{other}'"))),
+    }
+}
+
+/// Labeled scoring set for the F1 data sets.
+fn scoring_data(name: &str, rows: usize, seed: u64) -> Result<LabeledData> {
+    match name {
+        "shuttle" => Ok(Shuttle.scoring(rows, seed)),
+        "tennessee" => {
+            let normal = rows / 2;
+            Ok(TennesseePlant::default().scoring(normal, rows - normal, seed))
+        }
+        other => {
+            // geometric sets: every generated point is a true inside point
+            let data = training_data(other, rows, seed)?;
+            let labels = vec![true; data.rows()];
+            Ok(LabeledData::new(data, labels))
+        }
+    }
+}
+
+fn config_from_args(args: &Args) -> Result<RunConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => RunConfig::load(Path::new(path))?,
+        None => RunConfig::default(),
+    };
+    if let Some(v) = args.get("data") {
+        cfg.dataset = v.to_string();
+    }
+    if let Some(v) = args.get("method") {
+        cfg.method = Method::parse(v)?;
+    }
+    cfg.rows = args.get_usize("rows", cfg.rows)?;
+    cfg.bandwidth = args.get_f64("bw", cfg.bandwidth)?;
+    cfg.outlier_fraction = args.get_f64("f", cfg.outlier_fraction)?;
+    cfg.sample_size = args.get_usize("sample-size", cfg.sample_size)?;
+    cfg.max_iter = args.get_usize("max-iter", cfg.max_iter)?;
+    cfg.workers = args.get_usize("workers", cfg.workers)?;
+    cfg.seed = args.get_u64("seed", cfg.seed)?;
+    if args.flag("xla") {
+        cfg.scorer = "xla".into();
+    }
+    if let Some(v) = args.get("artifacts") {
+        cfg.artifact_dir = v.to_string();
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    args.expect_only(&[
+        "config", "data", "rows", "method", "bw", "f", "sample-size", "max-iter",
+        "workers", "seed", "out", "trace", "xla", "artifacts", "addrs",
+    ])?;
+    let cfg = config_from_args(args)?;
+    let data = training_data(&cfg.dataset, cfg.rows, cfg.seed)?;
+    let params = cfg.params();
+    println!(
+        "training: data={} rows={} method={:?} kernel={} f={}",
+        cfg.dataset,
+        data.rows(),
+        cfg.method,
+        params.kernel,
+        cfg.outlier_fraction
+    );
+
+    let sw = Stopwatch::start();
+    let (model, extra) = match cfg.method {
+        Method::Full => {
+            let out = train_full(&data, &params)?;
+            (out.model, format!("solve={}", fmt_duration(out.seconds)))
+        }
+        Method::Sampling => {
+            let mut scfg = cfg.sampling();
+            scfg.record_trace = args.get("trace").is_some();
+            let out = SamplingTrainer::new(params, scfg).train(&data, cfg.seed)?;
+            if let Some(path) = args.get("trace") {
+                let mut csv = String::from("iteration,r2,num_sv,center_delta\n");
+                for t in &out.trace {
+                    csv.push_str(&format!(
+                        "{},{},{},{}\n",
+                        t.iteration, t.r2, t.num_sv, t.center_delta
+                    ));
+                }
+                std::fs::write(path, csv)?;
+            }
+            (
+                out.model,
+                format!(
+                    "iterations={} converged={} rows_touched={}",
+                    out.iterations, out.converged, out.rows_touched
+                ),
+            )
+        }
+        Method::Distributed => {
+            let dcfg = DistributedConfig {
+                workers: cfg.workers,
+                sampling: cfg.sampling(),
+                seed: cfg.seed,
+            };
+            let out = match args.get("addrs") {
+                Some(addrs) => {
+                    let parsed: Vec<std::net::SocketAddr> = addrs
+                        .split(',')
+                        .map(|a| {
+                            a.parse().map_err(|_| {
+                                Error::Config(format!("bad worker address '{a}'"))
+                            })
+                        })
+                        .collect::<Result<_>>()?;
+                    train_tcp_cluster(&data, &params, &dcfg, &parsed)?
+                }
+                None => train_local_cluster(&data, &params, &dcfg)?,
+            };
+            for r in &out.reports {
+                println!(
+                    "  worker {}: shard={} svs={} iters={} converged={}",
+                    r.worker, r.shard_rows, r.sv_count, r.iterations, r.converged
+                );
+            }
+            (out.model, format!("union_rows={}", out.union_rows))
+        }
+        Method::Luo => {
+            let out = train_luo(&data, &params, &LuoConfig::default())?;
+            (out.model, format!("rounds={} scoring_passes={}", out.rounds, out.scoring_passes))
+        }
+        Method::Kim => {
+            let out = train_kim(&data, &params, &KimConfig::default())?;
+            (out.model, format!("pooled_svs={}", out.pooled_svs))
+        }
+    };
+    let secs = sw.elapsed_secs();
+    println!(
+        "done in {}: R^2={:.4} #SV={} {extra}",
+        fmt_duration(secs),
+        model.r2(),
+        model.num_sv()
+    );
+    if let Some(path) = args.get("out") {
+        model.save(Path::new(path))?;
+        println!("model saved to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_score(args: &Args) -> Result<()> {
+    args.expect_only(&["model", "data", "rows", "seed", "xla", "artifacts", "out"])?;
+    let model_path = args
+        .get("model")
+        .ok_or_else(|| Error::Config("--model required".into()))?;
+    let model = SvddModel::load(Path::new(model_path))?;
+    let dataset = args.get_or("data", "banana");
+    let rows = args.get_usize("rows", 10_000)?;
+    let seed = args.get_u64("seed", 1)?;
+    let labeled = scoring_data(dataset, rows, seed)?;
+
+    let runtime;
+    let scorer = if args.flag("xla") {
+        let dir = args.get_or("artifacts", "artifacts");
+        runtime = SharedRuntime::new(Path::new(dir))?;
+        Scorer::xla(&model, &runtime)
+    } else {
+        Scorer::native(&model)
+    };
+    let sw = Stopwatch::start();
+    let inside = scorer.inside_batch(&labeled.data)?;
+    let secs = sw.elapsed_secs();
+    let f1 = F1Score::compute(&labeled.labels, &inside);
+    let outliers = inside.iter().filter(|&&i| !i).count();
+    println!(
+        "scored {} rows in {} ({:.0} rows/s, engine={}): outliers={} precision={:.4} recall={:.4} F1={:.4}",
+        rows,
+        fmt_duration(secs),
+        rows as f64 / secs,
+        if scorer.is_accelerated() { "xla" } else { "native" },
+        outliers,
+        f1.precision,
+        f1.recall,
+        f1.f1,
+    );
+    if let Some(path) = args.get("out") {
+        let dist2 = scorer.dist2_batch(&labeled.data)?;
+        let mut csv = String::from("dist2,inside,label\n");
+        for i in 0..dist2.len() {
+            csv.push_str(&format!("{},{},{}\n", dist2[i], inside[i], labeled.labels[i]));
+        }
+        std::fs::write(path, csv)?;
+    }
+    Ok(())
+}
+
+fn cmd_grid(args: &Args) -> Result<()> {
+    args.expect_only(&["model", "out", "xla", "artifacts", "nx", "ny", "margin"])?;
+    let model_path = args
+        .get("model")
+        .ok_or_else(|| Error::Config("--model required".into()))?;
+    let model = SvddModel::load(Path::new(model_path))?;
+    if model.dim() != 2 {
+        return Err(Error::Config("grid scoring needs a 2-d model".into()));
+    }
+    let nx = args.get_usize("nx", 200)?;
+    let ny = args.get_usize("ny", 200)?;
+    let margin = args.get_f64("margin", 0.2)?;
+    let grid = Grid::covering(model.support_vectors(), nx, ny, margin);
+    let runtime;
+    let scorer = if args.flag("xla") {
+        let dir = args.get_or("artifacts", "artifacts");
+        runtime = SharedRuntime::new(Path::new(dir))?;
+        Scorer::xla(&model, &runtime)
+    } else {
+        Scorer::native(&model)
+    };
+    let inside = scorer.inside_batch(&grid.points())?;
+    let frac = inside.iter().filter(|&&b| b).count() as f64 / inside.len() as f64;
+    let out = args.get_or("out", "grid.pgm");
+    grid.write_pgm(&inside, Path::new(out))?;
+    println!(
+        "grid {}x{} scored (engine={}): {:.1}% inside -> {out}",
+        nx,
+        ny,
+        if scorer.is_accelerated() { "xla" } else { "native" },
+        frac * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_worker(args: &Args) -> Result<()> {
+    args.expect_only(&["listen"])?;
+    let addr = args.get_or("listen", "127.0.0.1:7700");
+    let server = WorkerServer::spawn(addr)?;
+    println!("worker listening on {} (ctrl-c to stop)", server.addr());
+    // park forever; the accept loop runs on its own thread
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    args.expect_only(&["model", "listen", "xla", "artifacts", "batch", "linger-ms"])?;
+    let model_path = args
+        .get("model")
+        .ok_or_else(|| Error::Config("--model required".into()))?;
+    let model = SvddModel::load(Path::new(model_path))?;
+    let addr = args.get_or("listen", "127.0.0.1:7800");
+    let policy = fastsvdd::scoring::BatchPolicy {
+        target_batch: args.get_usize("batch", 256)?,
+        linger: std::time::Duration::from_millis(args.get_u64("linger-ms", 2)?),
+        ..Default::default()
+    };
+    // engine: XLA when requested + artifacts are present, else native
+    let server = if args.flag("xla") {
+        let dir = args.get_or("artifacts", "artifacts").to_string();
+        let rt = std::sync::Arc::new(SharedRuntime::new(Path::new(&dir))?);
+        let m = model.clone();
+        fastsvdd::scoring::ScoreServer::spawn(addr, model.clone(), policy, move |zs| {
+            Scorer::xla(&m, &rt).dist2_batch(zs)
+        })?
+    } else {
+        let m = model.clone();
+        fastsvdd::scoring::ScoreServer::spawn(addr, model.clone(), policy, move |zs| {
+            Ok(m.dist2_batch(zs))
+        })?
+    };
+    println!(
+        "scoring server on {} (model: {} SVs, R^2={:.4}; engine={})",
+        server.addr(),
+        model.num_sv(),
+        model.r2(),
+        if args.flag("xla") { "xla" } else { "native" }
+    );
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(60));
+        println!("metrics: {}", server.metrics.render());
+    }
+}
+
+fn cmd_artifacts(args: &Args) -> Result<()> {
+    args.expect_only(&["artifacts"])?;
+    let dir = args.get_or("artifacts", "artifacts");
+    let manifest = fastsvdd::runtime::Manifest::load(Path::new(dir))?;
+    println!(
+        "manifest: {} artifacts (sv_pad={}, gram_n={})",
+        manifest.entries.len(),
+        manifest.sv_pad,
+        manifest.gram_n
+    );
+    for e in &manifest.entries {
+        println!("  {:30} {:?}", e.name, e.kind);
+    }
+    Ok(())
+}

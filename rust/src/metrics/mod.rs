@@ -1,0 +1,194 @@
+//! Lightweight metrics for the serve/train paths: monotonic counters
+//! and fixed-bucket latency histograms, all lock-free (atomics) so the
+//! hot path never blocks on observability.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Monotonic counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub const fn new() -> Counter {
+        Counter(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    #[inline]
+    pub fn add(&self, v: u64) {
+        self.0.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Latency histogram with exponential bucket edges (microseconds):
+/// 1us, 2us, 4us, ... ~ 1hr, plus a running sum/count for the mean.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    sum_us: AtomicU64,
+    count: AtomicU64,
+}
+
+const BUCKETS: usize = 42;
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: (0..BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            sum_us: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+
+    /// Record a duration in seconds.
+    pub fn observe(&self, secs: f64) {
+        let us = (secs * 1e6).max(0.0) as u64;
+        let idx = (64 - us.max(1).leading_zeros() as usize - 1).min(BUCKETS - 1);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_secs(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            return 0.0;
+        }
+        self.sum_us.load(Ordering::Relaxed) as f64 / c as f64 / 1e6
+    }
+
+    /// Approximate quantile from the bucket midpoints.
+    pub fn quantile_secs(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * total as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            acc += b.load(Ordering::Relaxed);
+            if acc >= target {
+                // bucket i covers [2^i, 2^(i+1)) us; report midpoint
+                return (3 << i) as f64 / 2.0 / 1e6;
+            }
+        }
+        (1u64 << (BUCKETS - 1)) as f64 / 1e6
+    }
+}
+
+/// Metrics registry for a serve/train process.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub batches_scored: Counter,
+    pub rows_scored: Counter,
+    pub xla_executions: Counter,
+    pub solver_calls: Counter,
+    pub train_iterations: Counter,
+    pub score_latency: Histogram,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    /// One-line render for logs / CLI output.
+    pub fn render(&self) -> String {
+        format!(
+            "batches={} rows={} xla_execs={} solves={} iters={} score_mean={:.3}ms score_p99={:.3}ms",
+            self.batches_scored.get(),
+            self.rows_scored.get(),
+            self.xla_executions.get(),
+            self.solver_calls.get(),
+            self.train_iterations.get(),
+            self.score_latency.mean_secs() * 1e3,
+            self.score_latency.quantile_secs(0.99) * 1e3,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_accumulates() {
+        let c = Counter::new();
+        c.inc();
+        c.add(5);
+        assert_eq!(c.get(), 6);
+    }
+
+    #[test]
+    fn histogram_mean_and_count() {
+        let h = Histogram::new();
+        h.observe(0.001);
+        h.observe(0.003);
+        assert_eq!(h.count(), 2);
+        assert!((h.mean_secs() - 0.002).abs() < 1e-4);
+    }
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let h = Histogram::new();
+        for i in 1..=1000 {
+            h.observe(i as f64 * 1e-5);
+        }
+        let p50 = h.quantile_secs(0.5);
+        let p99 = h.quantile_secs(0.99);
+        assert!(p50 <= p99);
+        assert!(p50 > 1e-4 && p99 < 0.1, "p50={p50} p99={p99}");
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = Histogram::new();
+        assert_eq!(h.mean_secs(), 0.0);
+        assert_eq!(h.quantile_secs(0.5), 0.0);
+    }
+
+    #[test]
+    fn metrics_render_contains_fields() {
+        let m = Metrics::new();
+        m.rows_scored.add(7);
+        let s = m.render();
+        assert!(s.contains("rows=7"));
+    }
+
+    #[test]
+    fn counters_are_thread_safe() {
+        let c = std::sync::Arc::new(Counter::new());
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let c = c.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        c.inc();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(c.get(), 8000);
+    }
+}

@@ -1,0 +1,169 @@
+//! AOT artifact manifest: the contract between `python/compile/aot.py`
+//! and the Rust runtime. The Python side writes `manifest.json` next to
+//! the `*.hlo.txt` modules; this module parses and indexes it.
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Shape bucket of one AOT module.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// Batched scoring: z[b,m], sv[s,m], alpha[s], bw[1], w[1] -> dist2[b].
+    Score { m: usize, s: usize, b: usize },
+    /// Sample gram: x[n,m], bw[1] -> k[n,n].
+    Gram { n: usize, m: usize },
+}
+
+/// One entry of the manifest.
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub kind: ArtifactKind,
+    pub path: PathBuf,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub entries: Vec<ArtifactInfo>,
+    pub sv_pad: usize,
+    pub gram_n: usize,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json")).map_err(|e| {
+            Error::Runtime(format!(
+                "no artifact manifest in {} (run `make artifacts`): {e}",
+                dir.display()
+            ))
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let v = Json::parse(text)?;
+        let version = v.req("version")?.as_usize().unwrap_or(0);
+        if version != 1 {
+            return Err(Error::Runtime(format!("manifest version {version} != 1")));
+        }
+        let sv_pad = v.req("sv_pad")?.as_usize().unwrap_or(0);
+        let gram_n = v.req("gram_n")?.as_usize().unwrap_or(0);
+        let mut entries = Vec::new();
+        for e in v
+            .req("entries")?
+            .as_arr()
+            .ok_or_else(|| Error::Json("entries not an array".into()))?
+        {
+            let name = e.req("name")?.as_str().unwrap_or_default().to_string();
+            let file = e.req("file")?.as_str().unwrap_or_default().to_string();
+            let kind = match e.req("kind")?.as_str() {
+                Some("score") => ArtifactKind::Score {
+                    m: e.req("m")?.as_usize().unwrap_or(0),
+                    s: e.req("s")?.as_usize().unwrap_or(0),
+                    b: e.req("b")?.as_usize().unwrap_or(0),
+                },
+                Some("gram") => ArtifactKind::Gram {
+                    n: e.req("n")?.as_usize().unwrap_or(0),
+                    m: e.req("m")?.as_usize().unwrap_or(0),
+                },
+                other => {
+                    return Err(Error::Runtime(format!("unknown artifact kind {other:?}")))
+                }
+            };
+            entries.push(ArtifactInfo { name, kind, path: dir.join(file) });
+        }
+        Ok(Manifest { entries, sv_pad, gram_n })
+    }
+
+    /// Smallest score bucket that fits `(m, needed_s, needed_b)`.
+    pub fn find_score(&self, m: usize, needed_s: usize, needed_b: usize) -> Option<&ArtifactInfo> {
+        self.entries
+            .iter()
+            .filter(|e| match e.kind {
+                ArtifactKind::Score { m: am, s, b } => am == m && s >= needed_s && b >= needed_b,
+                _ => false,
+            })
+            .min_by_key(|e| match e.kind {
+                ArtifactKind::Score { b, .. } => b,
+                _ => usize::MAX,
+            })
+    }
+
+    /// Largest score bucket for `(m, needed_s)` — used when a batch
+    /// exceeds every bucket and must be chunked.
+    pub fn find_score_largest(&self, m: usize, needed_s: usize) -> Option<&ArtifactInfo> {
+        self.entries
+            .iter()
+            .filter(|e| match e.kind {
+                ArtifactKind::Score { m: am, s, .. } => am == m && s >= needed_s,
+                _ => false,
+            })
+            .max_by_key(|e| match e.kind {
+                ArtifactKind::Score { b, .. } => b,
+                _ => 0,
+            })
+    }
+
+    /// Gram bucket for `(n, m)` if any.
+    pub fn find_gram(&self, needed_n: usize, m: usize) -> Option<&ArtifactInfo> {
+        self.entries.iter().find(|e| match e.kind {
+            ArtifactKind::Gram { n, m: am } => am == m && n >= needed_n,
+            _ => false,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1, "sv_pad": 512, "gram_n": 64,
+      "entries": [
+        {"name": "score_m2_s512_b256", "kind": "score", "file": "a.hlo.txt",
+         "sha256_16": "x", "m": 2, "s": 512, "b": 256},
+        {"name": "score_m2_s512_b4096", "kind": "score", "file": "b.hlo.txt",
+         "sha256_16": "x", "m": 2, "s": 512, "b": 4096},
+        {"name": "gram_n64_m2", "kind": "gram", "file": "c.hlo.txt",
+         "sha256_16": "x", "n": 64, "m": 2}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_entries() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.entries.len(), 3);
+        assert_eq!(m.sv_pad, 512);
+        assert_eq!(m.gram_n, 64);
+        assert_eq!(m.entries[0].path, Path::new("/tmp/a/a.hlo.txt"));
+    }
+
+    #[test]
+    fn find_score_picks_smallest_sufficient_bucket() {
+        let m = Manifest::parse(SAMPLE, Path::new("/")).unwrap();
+        let e = m.find_score(2, 40, 200).unwrap();
+        assert_eq!(e.name, "score_m2_s512_b256");
+        let e = m.find_score(2, 40, 1000).unwrap();
+        assert_eq!(e.name, "score_m2_s512_b4096");
+        assert!(m.find_score(2, 1000, 10).is_none()); // too many SVs
+        assert!(m.find_score(9, 10, 10).is_none()); // no such dim
+    }
+
+    #[test]
+    fn find_gram_checks_capacity() {
+        let m = Manifest::parse(SAMPLE, Path::new("/")).unwrap();
+        assert!(m.find_gram(64, 2).is_some());
+        assert!(m.find_gram(65, 2).is_none());
+        assert!(m.find_gram(10, 9).is_none());
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let bad = SAMPLE.replace("\"version\": 1", "\"version\": 9");
+        assert!(Manifest::parse(&bad, Path::new("/")).is_err());
+    }
+}

@@ -1,0 +1,208 @@
+//! PJRT runtime: load the AOT HLO-text artifacts and execute them on
+//! the request path.
+//!
+//! This is the only place the `xla` crate is touched. The flow per
+//! artifact (see `/opt/xla-example/load_hlo` and DESIGN.md section 7):
+//! `HloModuleProto::from_text_file` -> `XlaComputation::from_proto` ->
+//! `PjRtClient::compile` (cached) -> `execute`. HLO *text* is the
+//! interchange format — serialized protos from jax >= 0.5 carry 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects.
+
+pub mod artifacts;
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+pub use artifacts::{ArtifactInfo, ArtifactKind, Manifest};
+
+use crate::error::{Error, Result};
+use crate::sampling::GramBackend;
+use crate::svdd::kernel::Kernel;
+use crate::svdd::model::SvddModel;
+use crate::util::matrix::Matrix;
+
+/// A PJRT CPU runtime holding compiled executables for every artifact
+/// it has been asked for (compile once, execute many).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Executions performed, by artifact name (perf observability).
+    exec_counts: HashMap<String, u64>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client over the artifact directory.
+    pub fn new(artifact_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: HashMap::new(),
+            exec_counts: HashMap::new(),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn exec_count(&self, name: &str) -> u64 {
+        self.exec_counts.get(name).copied().unwrap_or(0)
+    }
+
+    fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(name) {
+            let info = self
+                .manifest
+                .entries
+                .iter()
+                .find(|e| e.name == name)
+                .ok_or_else(|| Error::Runtime(format!("unknown artifact '{name}'")))?;
+            let proto = xla::HloModuleProto::from_text_file(&info.path)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(self.cache.get(name).unwrap())
+    }
+
+    fn run1(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<xla::Literal> {
+        // split borrow: bump the counter first
+        *self.exec_counts.entry(name.to_string()).or_insert(0) += 1;
+        let exe = self.executable(name)?;
+        let result = exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        // AOT modules are lowered with return_tuple=True
+        Ok(result.to_tuple1()?)
+    }
+
+    // ----------------------------------------------------------- score
+
+    /// Score `z` (rows x m, f32 flattened) against a padded model.
+    /// `z` must exactly match the bucket shape `(b, m)`; the higher-level
+    /// [`crate::scoring::Scorer`] handles padding/chunking.
+    #[allow(clippy::too_many_arguments)]
+    pub fn score_bucket(
+        &mut self,
+        artifact: &str,
+        b: usize,
+        m: usize,
+        s: usize,
+        z: &[f32],
+        sv: &[f32],
+        alpha: &[f32],
+        bw: f32,
+        w: f32,
+    ) -> Result<Vec<f32>> {
+        if z.len() != b * m || sv.len() != s * m || alpha.len() != s {
+            return Err(Error::Runtime(format!(
+                "score_bucket shape mismatch: z={} sv={} alpha={} for b={b} m={m} s={s}",
+                z.len(),
+                sv.len(),
+                alpha.len()
+            )));
+        }
+        let zl = xla::Literal::vec1(z).reshape(&[b as i64, m as i64])?;
+        let svl = xla::Literal::vec1(sv).reshape(&[s as i64, m as i64])?;
+        let al = xla::Literal::vec1(alpha);
+        let bwl = xla::Literal::vec1(&[bw]);
+        let wl = xla::Literal::vec1(&[w]);
+        let out = self.run1(artifact, &[zl, svl, al, bwl, wl])?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    // ------------------------------------------------------------ gram
+
+    /// K(X, X) through the gram artifact: pads `data` (n x m, n <= bucket)
+    /// with zero rows, executes, and returns the top-left n*n block as f64.
+    pub fn gram_padded(&mut self, data: &Matrix, bw: f64) -> Result<Option<Vec<f64>>> {
+        let n = data.rows();
+        let m = data.cols();
+        let info = match self.manifest.find_gram(n, m) {
+            Some(i) => i.clone(),
+            None => return Ok(None),
+        };
+        let bucket_n = match info.kind {
+            ArtifactKind::Gram { n, .. } => n,
+            _ => unreachable!(),
+        };
+        let mut x = vec![0.0f32; bucket_n * m];
+        for i in 0..n {
+            for (j, &v) in data.row(i).iter().enumerate() {
+                x[i * m + j] = v as f32;
+            }
+        }
+        let xl = xla::Literal::vec1(&x).reshape(&[bucket_n as i64, m as i64])?;
+        let bwl = xla::Literal::vec1(&[bw as f32]);
+        let out = self.run1(&info.name, &[xl, bwl])?;
+        let full = out.to_vec::<f32>()?;
+        let mut gram = vec![0.0f64; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                gram[i * n + j] = full[i * bucket_n + j] as f64;
+            }
+        }
+        Ok(Some(gram))
+    }
+}
+
+/// Thread-shareable runtime handle.
+///
+/// SAFETY: the `xla` crate's types wrap raw C++ pointers without Send /
+/// Sync markers. The PJRT CPU client is internally synchronized, and we
+/// additionally serialize *all* access through the `Mutex`, so no two
+/// threads ever touch the underlying objects concurrently.
+pub struct SharedRuntime(Mutex<Runtime>);
+
+unsafe impl Send for SharedRuntime {}
+unsafe impl Sync for SharedRuntime {}
+
+impl SharedRuntime {
+    pub fn new(artifact_dir: &Path) -> Result<SharedRuntime> {
+        Ok(SharedRuntime(Mutex::new(Runtime::new(artifact_dir)?)))
+    }
+
+    pub fn with<T>(&self, f: impl FnOnce(&mut Runtime) -> T) -> T {
+        let mut rt = self.0.lock().expect("runtime mutex poisoned");
+        f(&mut rt)
+    }
+
+    /// Pad `model`'s SVs/alphas to the manifest's SV bucket; returns
+    /// `(sv, alpha, s)` as f32 or None if the model exceeds the bucket.
+    pub fn pad_model(&self, model: &SvddModel) -> Option<(Vec<f32>, Vec<f32>, usize)> {
+        let s = self.with(|rt| rt.manifest.sv_pad);
+        if model.num_sv() > s {
+            return None;
+        }
+        let m = model.dim();
+        let mut sv = vec![0.0f32; s * m];
+        let mut alpha = vec![0.0f32; s];
+        for i in 0..model.num_sv() {
+            for (j, &v) in model.support_vectors().row(i).iter().enumerate() {
+                sv[i * m + j] = v as f32;
+            }
+            alpha[i] = model.alpha()[i] as f32;
+        }
+        Some((sv, alpha, s))
+    }
+}
+
+impl GramBackend for SharedRuntime {
+    fn gram(&self, data: &Matrix, kernel: Kernel) -> Option<Vec<f64>> {
+        let bw = kernel.bw()?; // only the Gaussian artifact exists
+        self.with(|rt| rt.gram_padded(data, bw).ok().flatten())
+    }
+}
+
+/// Default artifact directory: `$FASTSVDD_ARTIFACTS` or `./artifacts`.
+pub fn default_artifact_dir() -> std::path::PathBuf {
+    std::env::var_os("FASTSVDD_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| std::path::PathBuf::from("artifacts"))
+}

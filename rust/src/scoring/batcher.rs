@@ -1,0 +1,319 @@
+//! Dynamic batching for the serve path.
+//!
+//! The XLA scoring artifact runs at fixed bucket shapes (256 / 4096
+//! rows); single-observation requests would waste 255/256 of every
+//! execution. [`Batcher`] coalesces concurrent score requests into
+//! bucket-sized batches: requests enqueue rows and block on a receiver;
+//! the dispatch loop drains the queue when either the target batch
+//! fills or the linger deadline passes, scores once, and fans results
+//! back out. This is the standard dynamic-batching coordinator of
+//! serving systems (vLLM-style), applied to SVDD scoring.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+use crate::metrics::Metrics;
+use crate::svdd::model::SvddModel;
+use crate::util::matrix::Matrix;
+
+/// Batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Dispatch as soon as this many rows are queued.
+    pub target_batch: usize,
+    /// Dispatch a partial batch after this long (latency bound).
+    pub linger: Duration,
+    /// Queue capacity in rows (backpressure: enqueue errors beyond it).
+    pub capacity: usize,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            target_batch: 256,
+            linger: Duration::from_millis(2),
+            capacity: 1 << 16,
+        }
+    }
+}
+
+struct Request {
+    rows: Vec<f64>, // flattened
+    n: usize,
+    reply: mpsc::Sender<Vec<f64>>,
+}
+
+struct Queue {
+    requests: Vec<Request>,
+    queued_rows: usize,
+    shutdown: bool,
+}
+
+/// A dynamic-batching scoring front end. Clone the handle freely; call
+/// [`BatcherHandle::score`] from any thread.
+pub struct Batcher {
+    shared: Arc<(Mutex<Queue>, Condvar)>,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+#[derive(Clone)]
+pub struct BatcherHandle {
+    shared: Arc<(Mutex<Queue>, Condvar)>,
+    dim: usize,
+    capacity: usize,
+}
+
+impl Batcher {
+    /// Spawn the dispatch loop over a scoring closure. The closure
+    /// receives a `(rows, dim)` matrix and returns dist^2 per row; it
+    /// runs on the dispatch thread (e.g. wraps `Scorer::xla`).
+    pub fn spawn<F>(
+        model: &SvddModel,
+        policy: BatchPolicy,
+        metrics: Arc<Metrics>,
+        score_fn: F,
+    ) -> (Batcher, BatcherHandle)
+    where
+        F: Fn(&Matrix) -> Result<Vec<f64>> + Send + 'static,
+    {
+        let dim = model.dim();
+        let shared = Arc::new((
+            Mutex::new(Queue { requests: Vec::new(), queued_rows: 0, shutdown: false }),
+            Condvar::new(),
+        ));
+        let shared2 = shared.clone();
+        let worker = std::thread::spawn(move || {
+            dispatch_loop(shared2, policy, dim, metrics, score_fn);
+        });
+        let handle = BatcherHandle {
+            shared: shared.clone(),
+            dim,
+            capacity: policy.capacity,
+        };
+        (Batcher { shared, worker: Some(worker) }, handle)
+    }
+
+    /// Stop the dispatch loop after draining the queue.
+    pub fn shutdown(&mut self) {
+        {
+            let (lock, cv) = &*self.shared;
+            lock.lock().unwrap().shutdown = true;
+            cv.notify_all();
+        }
+        if let Some(h) = self.worker.take() {
+            h.join().ok();
+        }
+    }
+}
+
+impl Drop for Batcher {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+impl BatcherHandle {
+    /// Score a batch of observations; blocks until the dispatch loop
+    /// returns this request's scores.
+    pub fn score(&self, zs: &Matrix) -> Result<Vec<f64>> {
+        if zs.cols() != self.dim {
+            return Err(Error::invalid(format!(
+                "batcher expects dim {}, got {}",
+                self.dim,
+                zs.cols()
+            )));
+        }
+        let (tx, rx) = mpsc::channel();
+        {
+            let (lock, cv) = &*self.shared;
+            let mut q = lock.lock().unwrap();
+            if q.shutdown {
+                return Err(Error::invalid("batcher is shut down"));
+            }
+            if q.queued_rows + zs.rows() > self.capacity {
+                return Err(Error::invalid("scoring queue full (backpressure)"));
+            }
+            q.queued_rows += zs.rows();
+            q.requests.push(Request {
+                rows: zs.as_slice().to_vec(),
+                n: zs.rows(),
+                reply: tx,
+            });
+            cv.notify_all();
+        }
+        rx.recv()
+            .map_err(|_| Error::invalid("batcher dropped the request"))
+    }
+}
+
+fn dispatch_loop<F>(
+    shared: Arc<(Mutex<Queue>, Condvar)>,
+    policy: BatchPolicy,
+    dim: usize,
+    metrics: Arc<Metrics>,
+    score_fn: F,
+) where
+    F: Fn(&Matrix) -> Result<Vec<f64>>,
+{
+    let (lock, cv) = &*shared;
+    loop {
+        // wait until there is work (or shutdown)
+        let mut q = lock.lock().unwrap();
+        while q.requests.is_empty() && !q.shutdown {
+            q = cv.wait(q).unwrap();
+        }
+        if q.requests.is_empty() && q.shutdown {
+            return;
+        }
+        // linger for more work up to the deadline or the target batch
+        let deadline = Instant::now() + policy.linger;
+        while q.queued_rows < policy.target_batch && !q.shutdown {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (nq, timeout) = cv.wait_timeout(q, deadline - now).unwrap();
+            q = nq;
+            if timeout.timed_out() {
+                break;
+            }
+        }
+        let batch: Vec<Request> = std::mem::take(&mut q.requests);
+        q.queued_rows = 0;
+        drop(q);
+
+        // assemble one matrix for the whole batch
+        let total: usize = batch.iter().map(|r| r.n).sum();
+        let mut flat = Vec::with_capacity(total * dim);
+        for r in &batch {
+            flat.extend_from_slice(&r.rows);
+        }
+        let zs = Matrix::from_vec(flat, total, dim).expect("batch assembly");
+        let sw = crate::util::timer::Stopwatch::start();
+        let scores = score_fn(&zs).unwrap_or_else(|_| vec![f64::NAN; total]);
+        metrics.score_latency.observe(sw.elapsed_secs());
+        metrics.batches_scored.inc();
+        metrics.rows_scored.add(total as u64);
+
+        // fan out
+        let mut offset = 0;
+        for r in batch {
+            let slice = scores[offset..offset + r.n].to_vec();
+            offset += r.n;
+            let _ = r.reply.send(slice); // receiver may have gone away
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{banana::Banana, Generator};
+    use crate::svdd::{train, SvddParams};
+
+    fn model() -> SvddModel {
+        let data = Banana::default().generate(500, 1);
+        train(&data, &SvddParams::gaussian(0.35, 0.01)).unwrap()
+    }
+
+    #[test]
+    fn single_request_roundtrip() {
+        let m = model();
+        let metrics = Arc::new(Metrics::new());
+        let m2 = m.clone();
+        let (_b, h) = Batcher::spawn(&m, BatchPolicy::default(), metrics.clone(), move |zs| {
+            Ok(m2.dist2_batch(zs))
+        });
+        let zs = Banana::default().generate(17, 2);
+        let got = h.score(&zs).unwrap();
+        assert_eq!(got, m.dist2_batch(&zs));
+        assert_eq!(metrics.rows_scored.get(), 17);
+    }
+
+    #[test]
+    fn concurrent_requests_coalesce_and_return_correctly() {
+        let m = model();
+        let metrics = Arc::new(Metrics::new());
+        let m2 = m.clone();
+        let policy = BatchPolicy {
+            target_batch: 64,
+            linger: Duration::from_millis(20),
+            capacity: 1 << 16,
+        };
+        let (_b, h) = Batcher::spawn(&m, policy, metrics.clone(), move |zs| {
+            Ok(m2.dist2_batch(zs))
+        });
+        let handles: Vec<_> = (0..8)
+            .map(|i| {
+                let h = h.clone();
+                let m = m.clone();
+                std::thread::spawn(move || {
+                    let zs = Banana::default().generate(16, 100 + i);
+                    let got = h.score(&zs).unwrap();
+                    assert_eq!(got, m.dist2_batch(&zs), "thread {i} got wrong rows");
+                })
+            })
+            .collect();
+        for t in handles {
+            t.join().unwrap();
+        }
+        // 8 * 16 = 128 rows; with a 64-row target they must have been
+        // dispatched in >= 1 but << 8 executions
+        assert_eq!(metrics.rows_scored.get(), 128);
+        assert!(
+            metrics.batches_scored.get() <= 4,
+            "coalescing failed: {} batches",
+            metrics.batches_scored.get()
+        );
+    }
+
+    #[test]
+    fn dimension_mismatch_rejected() {
+        let m = model();
+        let metrics = Arc::new(Metrics::new());
+        let m2 = m.clone();
+        let (_b, h) = Batcher::spawn(&m, BatchPolicy::default(), metrics, move |zs| {
+            Ok(m2.dist2_batch(zs))
+        });
+        let bad = Matrix::zeros(4, 5);
+        assert!(h.score(&bad).is_err());
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        let m = model();
+        let metrics = Arc::new(Metrics::new());
+        let m2 = m.clone();
+        let policy = BatchPolicy {
+            target_batch: 1 << 20,              // never fills
+            linger: Duration::from_millis(200), // long linger holds the queue
+            capacity: 32,
+        };
+        let (_b, h) = Batcher::spawn(&m, policy, metrics, move |zs| Ok(m2.dist2_batch(zs)));
+        // first request parks in the queue
+        let h2 = h.clone();
+        let t = std::thread::spawn(move || {
+            let zs = Banana::default().generate(30, 3);
+            h2.score(&zs).unwrap()
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        // second request overflows the 32-row capacity while the first lingers
+        let zs = Banana::default().generate(10, 4);
+        assert!(h.score(&zs).is_err(), "backpressure did not trip");
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn shutdown_rejects_new_work() {
+        let m = model();
+        let metrics = Arc::new(Metrics::new());
+        let m2 = m.clone();
+        let (mut b, h) = Batcher::spawn(&m, BatchPolicy::default(), metrics, move |zs| {
+            Ok(m2.dist2_batch(zs))
+        });
+        b.shutdown();
+        assert!(h.score(&Banana::default().generate(1, 5)).is_err());
+    }
+}

@@ -1,0 +1,117 @@
+//! Classification accuracy metrics (paper eqs. (19)–(21)).
+//!
+//! The paper's convention for the high-dimensional experiments: the
+//! *positive* class is the target (normal) class, a prediction is
+//! positive when the observation scores **inside** the description, and
+//! quality is summarized by the F1-measure. The headline metric of
+//! Figs 9/11/14–16 is the ratio `F1_sampling / F1_full`.
+
+/// Confusion counts for the positive ("normal / inside") class.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Confusion {
+    pub tp: usize,
+    pub fp: usize,
+    pub tn: usize,
+    pub fn_: usize,
+}
+
+/// Build confusion counts from ground-truth labels (`true` = normal)
+/// and predictions (`true` = predicted normal / inside).
+pub fn confusion(truth: &[bool], predicted: &[bool]) -> Confusion {
+    assert_eq!(truth.len(), predicted.len());
+    let mut c = Confusion::default();
+    for (&t, &p) in truth.iter().zip(predicted) {
+        match (t, p) {
+            (true, true) => c.tp += 1,
+            (false, true) => c.fp += 1,
+            (false, false) => c.tn += 1,
+            (true, false) => c.fn_ += 1,
+        }
+    }
+    c
+}
+
+/// Precision / recall / F1 (paper eqs. (19)–(21)).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct F1Score {
+    pub precision: f64,
+    pub recall: f64,
+    pub f1: f64,
+}
+
+impl F1Score {
+    pub fn from_confusion(c: Confusion) -> F1Score {
+        let precision = if c.tp + c.fp == 0 {
+            0.0
+        } else {
+            c.tp as f64 / (c.tp + c.fp) as f64
+        };
+        let recall = if c.tp + c.fn_ == 0 {
+            0.0
+        } else {
+            c.tp as f64 / (c.tp + c.fn_) as f64
+        };
+        let f1 = if precision + recall == 0.0 {
+            0.0
+        } else {
+            2.0 * precision * recall / (precision + recall)
+        };
+        F1Score { precision, recall, f1 }
+    }
+
+    pub fn compute(truth: &[bool], predicted: &[bool]) -> F1Score {
+        Self::from_confusion(confusion(truth, predicted))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_prediction() {
+        let truth = [true, true, false, false];
+        let s = F1Score::compute(&truth, &truth);
+        assert_eq!(s.precision, 1.0);
+        assert_eq!(s.recall, 1.0);
+        assert_eq!(s.f1, 1.0);
+    }
+
+    #[test]
+    fn textbook_counts() {
+        // tp=2 fp=1 fn=1 tn=1 -> P=2/3, R=2/3, F1=2/3
+        let truth = [true, true, true, false, false];
+        let pred = [true, true, false, true, false];
+        let c = confusion(&truth, &pred);
+        assert_eq!(c, Confusion { tp: 2, fp: 1, tn: 1, fn_: 1 });
+        let s = F1Score::from_confusion(c);
+        assert!((s.f1 - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degenerate_all_negative_prediction() {
+        let truth = [true, false];
+        let pred = [false, false];
+        let s = F1Score::compute(&truth, &pred);
+        assert_eq!(s.precision, 0.0);
+        assert_eq!(s.recall, 0.0);
+        assert_eq!(s.f1, 0.0);
+    }
+
+    #[test]
+    fn precision_recall_asymmetry() {
+        // predict everything positive: recall 1, precision = base rate
+        let truth = [true, false, false, false];
+        let pred = [true, true, true, true];
+        let s = F1Score::compute(&truth, &pred);
+        assert_eq!(s.recall, 1.0);
+        assert_eq!(s.precision, 0.25);
+        assert!((s.f1 - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_lengths_panic() {
+        confusion(&[true], &[true, false]);
+    }
+}

@@ -1,0 +1,161 @@
+//! Batch scoring service: the serve-path component that evaluates
+//! `dist2(z)` for streams of observations (paper eq. (18)) and labels
+//! outliers against the model threshold.
+//!
+//! Two interchangeable engines:
+//! - [`Scorer::native`] — pure-Rust evaluation (the reference);
+//! - [`Scorer::xla`] — batches through the AOT Pallas scoring artifact
+//!   via [`crate::runtime::SharedRuntime`], padding the final chunk and
+//!   picking the smallest bucket (256 latency / 4096 throughput) per
+//!   chunk.
+//!
+//! Integration tests cross-check the two engines on every bucket.
+
+pub mod batcher;
+pub mod f1;
+pub mod server;
+
+pub use batcher::{BatchPolicy, Batcher, BatcherHandle};
+pub use server::{ScoreClient, ScoreServer};
+pub use f1::{confusion, F1Score};
+
+use crate::error::Result;
+use crate::runtime::SharedRuntime;
+use crate::svdd::model::SvddModel;
+use crate::util::matrix::Matrix;
+
+/// Scoring engine over a fitted model.
+pub struct Scorer<'a> {
+    model: &'a SvddModel,
+    runtime: Option<&'a SharedRuntime>,
+    /// Model data padded for the XLA path (computed lazily once).
+    padded: Option<(Vec<f32>, Vec<f32>, usize)>,
+}
+
+impl<'a> Scorer<'a> {
+    /// Pure-Rust scorer.
+    pub fn native(model: &'a SvddModel) -> Scorer<'a> {
+        Scorer { model, runtime: None, padded: None }
+    }
+
+    /// XLA-backed scorer (falls back to native when no bucket fits —
+    /// e.g. a model with more SVs than the bucket, or a non-Gaussian
+    /// kernel, which the artifacts don't cover).
+    pub fn xla(model: &'a SvddModel, runtime: &'a SharedRuntime) -> Scorer<'a> {
+        let padded = if model.kernel().bw().is_some() {
+            runtime.pad_model(model)
+        } else {
+            None
+        };
+        Scorer { model, runtime: Some(runtime), padded }
+    }
+
+    /// True when scores go through the PJRT executable.
+    pub fn is_accelerated(&self) -> bool {
+        self.runtime.is_some() && self.padded.is_some()
+    }
+
+    /// `dist2` for every row of `zs`.
+    pub fn dist2_batch(&self, zs: &Matrix) -> Result<Vec<f64>> {
+        match (&self.runtime, &self.padded) {
+            (Some(rt), Some((sv, alpha, s))) => {
+                self.dist2_xla(rt, sv, alpha, *s, zs)
+            }
+            _ => Ok(self.model.dist2_batch(zs)),
+        }
+    }
+
+    /// Outlier labels (`dist2 > R^2`) for every row.
+    pub fn label_batch(&self, zs: &Matrix) -> Result<Vec<bool>> {
+        let r2 = self.model.r2();
+        Ok(self.dist2_batch(zs)?.into_iter().map(|d| d > r2).collect())
+    }
+
+    /// Inside labels (`dist2 <= R^2`) — the "belongs to the target
+    /// class" predicate the F1 experiments use.
+    pub fn inside_batch(&self, zs: &Matrix) -> Result<Vec<bool>> {
+        let r2 = self.model.r2();
+        Ok(self.dist2_batch(zs)?.into_iter().map(|d| d <= r2).collect())
+    }
+
+    fn dist2_xla(
+        &self,
+        rt: &SharedRuntime,
+        sv: &[f32],
+        alpha: &[f32],
+        s: usize,
+        zs: &Matrix,
+    ) -> Result<Vec<f64>> {
+        let m = self.model.dim();
+        let bw = self.model.kernel().bw().expect("xla scorer requires gaussian") as f32;
+        let w = self.model.w() as f32;
+        let n = zs.rows();
+        let mut out = Vec::with_capacity(n);
+        let flat = zs.to_f32();
+        let mut offset = 0usize;
+        while offset < n {
+            let remaining = n - offset;
+            // smallest bucket that covers the remainder, else the largest
+            // bucket repeatedly
+            let (artifact, b) = {
+                let info = rt.with(|r| {
+                    r.manifest()
+                        .find_score(m, self.model.num_sv(), remaining)
+                        .or_else(|| r.manifest().find_score_largest(m, self.model.num_sv()))
+                        .map(|i| (i.name.clone(), i.kind))
+                });
+                match info {
+                    Some((name, crate::runtime::ArtifactKind::Score { b, .. })) => (name, b),
+                    _ => {
+                        // no artifact for this dim: native fallback for the rest
+                        for i in offset..n {
+                            out.push(self.model.dist2(zs.row(i)));
+                        }
+                        return Ok(out);
+                    }
+                }
+            };
+            let take = remaining.min(b);
+            let mut z = vec![0.0f32; b * m];
+            z[..take * m].copy_from_slice(&flat[offset * m..(offset + take) * m]);
+            let scores = rt.with(|r| {
+                r.score_bucket(&artifact, b, m, s, &z, sv, alpha, bw, w)
+            })?;
+            out.extend(scores[..take].iter().map(|&x| x as f64));
+            offset += take;
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{banana::Banana, Generator};
+    use crate::svdd::{train, SvddParams};
+
+    #[test]
+    fn native_scorer_matches_model() {
+        let data = Banana::default().generate(300, 1);
+        let model = train(&data, &SvddParams::gaussian(0.35, 0.01)).unwrap();
+        let scorer = Scorer::native(&model);
+        assert!(!scorer.is_accelerated());
+        let zs = Banana::default().generate(64, 2);
+        let got = scorer.dist2_batch(&zs).unwrap();
+        let want = model.dist2_batch(&zs);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn label_and_inside_are_complementary() {
+        let data = Banana::default().generate(300, 3);
+        let model = train(&data, &SvddParams::gaussian(0.35, 0.01)).unwrap();
+        let scorer = Scorer::native(&model);
+        let zs = Banana::default().generate(128, 4);
+        let out = scorer.label_batch(&zs).unwrap();
+        let ins = scorer.inside_batch(&zs).unwrap();
+        for (o, i) in out.iter().zip(&ins) {
+            assert_ne!(o, i);
+        }
+    }
+}

@@ -1,0 +1,242 @@
+//! TCP scoring service: the serve-path daemon.
+//!
+//! `fastsvdd serve --model m.json --listen addr` runs a [`ScoreServer`]:
+//! one accept loop, one connection thread per client, all connections
+//! feeding a single [`super::batcher::Batcher`] so concurrent clients'
+//! rows coalesce into bucket-sized XLA (or native) scoring executions.
+//! Protocol: framed [`Message::ScoreRequest`] / [`Message::ScoreReply`]
+//! (shared with the distributed trainer; version-checked handshake).
+
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use crate::distributed::message::{Message, PROTOCOL_VERSION};
+use crate::error::{Error, Result};
+use crate::metrics::Metrics;
+use crate::scoring::batcher::{BatchPolicy, Batcher, BatcherHandle};
+use crate::svdd::model::SvddModel;
+use crate::util::matrix::Matrix;
+
+/// A running scoring server.
+pub struct ScoreServer {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+    batcher: Batcher,
+    pub metrics: Arc<Metrics>,
+}
+
+impl ScoreServer {
+    /// Bind and serve. `score_fn` is the batch engine (wrap
+    /// `Scorer::native` or `Scorer::xla` — the latter cannot be moved
+    /// across threads directly, so wrap a `SharedRuntime` call).
+    pub fn spawn<F>(
+        addr: impl ToSocketAddrs,
+        model: SvddModel,
+        policy: BatchPolicy,
+        score_fn: F,
+    ) -> Result<ScoreServer>
+    where
+        F: Fn(&Matrix) -> Result<Vec<f64>> + Send + 'static,
+    {
+        let metrics = Arc::new(Metrics::new());
+        let (batcher, handle) = Batcher::spawn(&model, policy, metrics.clone(), score_fn);
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let r2 = model.r2();
+        let accept_thread = std::thread::spawn(move || {
+            while !stop2.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        stream.set_nonblocking(false).ok();
+                        let h = handle.clone();
+                        std::thread::spawn(move || {
+                            let _ = serve_connection(stream, h, r2);
+                        });
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(5));
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+        Ok(ScoreServer {
+            addr: local,
+            stop,
+            accept_thread: Some(accept_thread),
+            batcher,
+            metrics,
+        })
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept_thread.take() {
+            h.join().ok();
+        }
+        self.batcher.shutdown();
+    }
+}
+
+impl Drop for ScoreServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn serve_connection(mut stream: TcpStream, handle: BatcherHandle, r2: f64) -> Result<()> {
+    match Message::read_from(&mut stream)? {
+        Message::Hello { version } if version == PROTOCOL_VERSION => {
+            Message::HelloAck { version: PROTOCOL_VERSION }.write_to(&mut stream)?;
+        }
+        other => {
+            return Err(Error::Distributed(format!("expected Hello, got {other:?}")));
+        }
+    }
+    loop {
+        match Message::read_from(&mut stream) {
+            Ok(Message::ScoreRequest { rows }) => {
+                let dist2 = handle.score(&rows)?;
+                Message::ScoreReply { dist2, r2 }.write_to(&mut stream)?;
+            }
+            Ok(Message::Shutdown) | Err(_) => return Ok(()),
+            Ok(other) => {
+                return Err(Error::Distributed(format!("unexpected {other:?}")));
+            }
+        }
+    }
+}
+
+/// Blocking client for the scoring service.
+pub struct ScoreClient {
+    stream: TcpStream,
+}
+
+impl ScoreClient {
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<ScoreClient> {
+        let mut stream = TcpStream::connect(addr)?;
+        Message::Hello { version: PROTOCOL_VERSION }.write_to(&mut stream)?;
+        match Message::read_from(&mut stream)? {
+            Message::HelloAck { version } if version == PROTOCOL_VERSION => {}
+            other => {
+                return Err(Error::Distributed(format!("bad handshake: {other:?}")));
+            }
+        }
+        Ok(ScoreClient { stream })
+    }
+
+    /// Score a batch; returns (dist2 per row, model R^2).
+    pub fn score(&mut self, rows: &Matrix) -> Result<(Vec<f64>, f64)> {
+        Message::ScoreRequest { rows: rows.clone() }.write_to(&mut self.stream)?;
+        match Message::read_from(&mut self.stream)? {
+            Message::ScoreReply { dist2, r2 } => Ok((dist2, r2)),
+            other => Err(Error::Distributed(format!("unexpected {other:?}"))),
+        }
+    }
+
+    pub fn close(mut self) {
+        Message::Shutdown.write_to(&mut self.stream).ok();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{banana::Banana, Generator};
+    use crate::svdd::{train, SvddParams};
+
+    fn model() -> SvddModel {
+        let data = Banana::default().generate(600, 1);
+        train(&data, &SvddParams::gaussian(0.35, 0.01)).unwrap()
+    }
+
+    #[test]
+    fn serve_score_roundtrip() {
+        let m = model();
+        let m2 = m.clone();
+        let mut server = ScoreServer::spawn(
+            "127.0.0.1:0",
+            m.clone(),
+            BatchPolicy::default(),
+            move |zs| Ok(m2.dist2_batch(zs)),
+        )
+        .unwrap();
+        let mut client = ScoreClient::connect(server.addr()).unwrap();
+        let zs = Banana::default().generate(33, 2);
+        let (dist2, r2) = client.score(&zs).unwrap();
+        assert_eq!(dist2, m.dist2_batch(&zs));
+        assert_eq!(r2, m.r2());
+        client.close();
+        server.stop();
+        assert_eq!(server.metrics.rows_scored.get(), 33);
+    }
+
+    #[test]
+    fn concurrent_clients_coalesce() {
+        let m = model();
+        let m2 = m.clone();
+        let policy = BatchPolicy {
+            target_batch: 64,
+            linger: std::time::Duration::from_millis(20),
+            capacity: 1 << 16,
+        };
+        let mut server = ScoreServer::spawn("127.0.0.1:0", m.clone(), policy, move |zs| {
+            Ok(m2.dist2_batch(zs))
+        })
+        .unwrap();
+        let addr = server.addr();
+        let threads: Vec<_> = (0..6)
+            .map(|i| {
+                let m = m.clone();
+                std::thread::spawn(move || {
+                    let mut c = ScoreClient::connect(addr).unwrap();
+                    let zs = Banana::default().generate(16, 50 + i);
+                    let (dist2, _) = c.score(&zs).unwrap();
+                    assert_eq!(dist2, m.dist2_batch(&zs), "client {i} mismatch");
+                    c.close();
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(server.metrics.rows_scored.get(), 96);
+        assert!(
+            server.metrics.batches_scored.get() <= 4,
+            "no coalescing: {} batches",
+            server.metrics.batches_scored.get()
+        );
+        server.stop();
+    }
+
+    #[test]
+    fn multiple_requests_per_connection() {
+        let m = model();
+        let m2 = m.clone();
+        let mut server = ScoreServer::spawn(
+            "127.0.0.1:0",
+            m.clone(),
+            BatchPolicy::default(),
+            move |zs| Ok(m2.dist2_batch(zs)),
+        )
+        .unwrap();
+        let mut client = ScoreClient::connect(server.addr()).unwrap();
+        for seed in 0..5 {
+            let zs = Banana::default().generate(8, seed);
+            let (dist2, _) = client.score(&zs).unwrap();
+            assert_eq!(dist2, m.dist2_batch(&zs));
+        }
+        client.close();
+        server.stop();
+        assert_eq!(server.metrics.rows_scored.get(), 40);
+    }
+}

@@ -1,0 +1,113 @@
+//! Gaussian bandwidth selection heuristics.
+//!
+//! The paper treats `s` as given (and sweeps it in the simulation
+//! study); a practical library needs a default. Two standard choices:
+//! the **median heuristic** (median pairwise distance of a subsample)
+//! and a **mean-distance** variant; both are cheap and deterministic
+//! given a seed.
+
+use crate::util::matrix::Matrix;
+use crate::util::rng::Xoshiro256;
+
+/// Median pairwise euclidean distance over at most `max_pairs` sampled
+/// pairs. The classic kernel-method default.
+pub fn median_heuristic(data: &Matrix, max_pairs: usize, seed: u64) -> f64 {
+    pairwise_stat(data, max_pairs, seed, |mut d| {
+        d.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        d[d.len() / 2]
+    })
+}
+
+/// Root-mean-square pairwise distance / sqrt(2) — matches the scale at
+/// which the Gaussian exponent `||a-b||^2 / (2 s^2)` is O(1).
+pub fn mean_heuristic(data: &Matrix, max_pairs: usize, seed: u64) -> f64 {
+    pairwise_stat(data, max_pairs, seed, |d| {
+        let ms = d.iter().map(|x| x * x).sum::<f64>() / d.len() as f64;
+        (ms / 2.0).sqrt()
+    })
+}
+
+fn pairwise_stat(
+    data: &Matrix,
+    max_pairs: usize,
+    seed: u64,
+    reduce: impl FnOnce(Vec<f64>) -> f64,
+) -> f64 {
+    let n = data.rows();
+    assert!(n >= 2, "need at least two observations");
+    let mut rng = Xoshiro256::new(seed);
+    let total_pairs = n * (n - 1) / 2;
+    let mut dists = Vec::with_capacity(max_pairs.min(total_pairs));
+    if total_pairs <= max_pairs {
+        for i in 0..n {
+            for j in (i + 1)..n {
+                dists.push(Matrix::sqdist(data.row(i), data.row(j)).sqrt());
+            }
+        }
+    } else {
+        while dists.len() < max_pairs {
+            let i = rng.index(n);
+            let j = rng.index(n);
+            if i != j {
+                dists.push(Matrix::sqdist(data.row(i), data.row(j)).sqrt());
+            }
+        }
+    }
+    let v = reduce(dists);
+    if v > 0.0 {
+        v
+    } else {
+        1.0 // degenerate data (all points identical): any bw works
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cloud(scale: f64, n: usize) -> Matrix {
+        let mut rng = Xoshiro256::new(9);
+        let rows: Vec<Vec<f64>> = (0..n)
+            .map(|_| vec![rng.normal() * scale, rng.normal() * scale])
+            .collect();
+        Matrix::from_rows(&rows).unwrap()
+    }
+
+    #[test]
+    fn median_scales_with_data() {
+        let small = median_heuristic(&cloud(1.0, 200), 5000, 1);
+        let big = median_heuristic(&cloud(10.0, 200), 5000, 1);
+        assert!(big > 5.0 * small, "small={small} big={big}");
+    }
+
+    #[test]
+    fn exact_vs_sampled_close() {
+        let data = cloud(2.0, 120);
+        let exact = median_heuristic(&data, usize::MAX, 1);
+        let sampled = median_heuristic(&data, 2000, 2);
+        assert!((exact - sampled).abs() / exact < 0.15);
+    }
+
+    #[test]
+    fn mean_heuristic_positive_and_sane() {
+        let data = cloud(1.0, 100);
+        let s = mean_heuristic(&data, 4000, 3);
+        // std ~1 per axis -> typical pairwise distance ~2; s ~ sqrt(2)
+        assert!(s > 0.5 && s < 4.0, "s={s}");
+    }
+
+    #[test]
+    fn degenerate_data_falls_back() {
+        let data = Matrix::from_rows(&vec![vec![1.0, 1.0]; 5]).unwrap();
+        assert_eq!(median_heuristic(&data, 100, 1), 1.0);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let data = cloud(1.5, 500);
+        assert_eq!(
+            median_heuristic(&data, 1000, 42),
+            median_heuristic(&data, 1000, 42)
+        );
+    }
+}

@@ -1,0 +1,137 @@
+//! LRU kernel-column cache, the same role as LIBSVM's `Cache` class.
+//!
+//! The SMO solver touches two kernel columns per iteration and revisits
+//! the same (small) active set many times; caching columns converts the
+//! per-iteration cost from O(n·m) kernel evaluations to an O(n) copy
+//! for cached columns. The budget is expressed in bytes and evicts the
+//! least-recently-used column.
+
+use std::collections::HashMap;
+
+/// LRU cache of `n`-length kernel columns keyed by column index.
+pub struct ColumnCache {
+    n: usize,
+    capacity_cols: usize,
+    map: HashMap<usize, (u64, Vec<f64>)>, // col -> (last-use tick, data)
+    tick: u64,
+    hits: u64,
+    misses: u64,
+}
+
+impl ColumnCache {
+    /// `budget_bytes` is rounded down to whole columns; at least one
+    /// column is always cached.
+    pub fn new(n: usize, budget_bytes: usize) -> Self {
+        let col_bytes = (n * std::mem::size_of::<f64>()).max(1);
+        let capacity_cols = (budget_bytes / col_bytes).max(1);
+        ColumnCache {
+            n,
+            capacity_cols,
+            map: HashMap::with_capacity(capacity_cols.min(1 << 20)),
+            tick: 0,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// Fetch column `i` into `out`, computing it with `fill` on a miss.
+    pub fn get_into(
+        &mut self,
+        i: usize,
+        out: &mut [f64],
+        fill: impl FnOnce(&mut [f64]),
+    ) {
+        debug_assert_eq!(out.len(), self.n);
+        self.tick += 1;
+        if let Some((t, col)) = self.map.get_mut(&i) {
+            *t = self.tick;
+            out.copy_from_slice(col);
+            self.hits += 1;
+            return;
+        }
+        self.misses += 1;
+        fill(out);
+        if self.map.len() >= self.capacity_cols {
+            // evict LRU
+            if let Some((&lru, _)) = self.map.iter().min_by_key(|(_, (t, _))| *t) {
+                self.map.remove(&lru);
+            }
+        }
+        self.map.insert(i, (self.tick, out.to_vec()));
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn capacity_cols(&self) -> usize {
+        self.capacity_cols
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fill_with(v: f64) -> impl FnOnce(&mut [f64]) {
+        move |out| out.iter_mut().for_each(|x| *x = v)
+    }
+
+    #[test]
+    fn hit_after_miss() {
+        let mut c = ColumnCache::new(4, 1024);
+        let mut buf = vec![0.0; 4];
+        c.get_into(0, &mut buf, fill_with(1.0));
+        assert_eq!(buf, vec![1.0; 4]);
+        // second fetch must not call fill
+        c.get_into(0, &mut buf, |_| panic!("fill on hit"));
+        assert_eq!(buf, vec![1.0; 4]);
+        assert!(c.hit_rate() > 0.4);
+    }
+
+    #[test]
+    fn evicts_lru_not_mru() {
+        // budget of exactly 2 columns of n=2
+        let mut c = ColumnCache::new(2, 2 * 2 * 8);
+        let mut buf = vec![0.0; 2];
+        c.get_into(0, &mut buf, fill_with(0.0));
+        c.get_into(1, &mut buf, fill_with(1.0));
+        c.get_into(0, &mut buf, |_| panic!("0 should be cached")); // refresh 0
+        c.get_into(2, &mut buf, fill_with(2.0)); // evicts 1 (LRU)
+        c.get_into(0, &mut buf, |_| panic!("0 must survive eviction"));
+        let mut filled = false;
+        c.get_into(1, &mut buf, |out| {
+            filled = true;
+            out.iter_mut().for_each(|x| *x = 9.0);
+        });
+        assert!(filled, "column 1 must have been evicted");
+    }
+
+    #[test]
+    fn capacity_at_least_one() {
+        let c = ColumnCache::new(1_000_000, 1);
+        assert_eq!(c.capacity_cols(), 1);
+    }
+
+    #[test]
+    fn len_tracks_inserts() {
+        let mut c = ColumnCache::new(2, 1024);
+        assert!(c.is_empty());
+        let mut buf = vec![0.0; 2];
+        c.get_into(5, &mut buf, fill_with(5.0));
+        assert_eq!(c.len(), 1);
+    }
+}

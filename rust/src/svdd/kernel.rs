@@ -1,0 +1,144 @@
+//! Kernel functions (paper eq. (13) uses the Gaussian; linear recovers
+//! the plain hypersphere of eq. (4); polynomial is included for
+//! completeness of the substrate).
+
+use crate::util::matrix::Matrix;
+
+/// A positive-definite kernel K(a, b).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Kernel {
+    /// `exp(-||a-b||^2 / (2 s^2))` — the paper's kernel. `bw` is the
+    /// Gaussian bandwidth parameter `s`.
+    Gaussian { bw: f64 },
+    /// `a . b` — recovers the primal minimum-enclosing-ball description.
+    Linear,
+    /// `(a . b + coef)^degree`.
+    Polynomial { degree: u32, coef: f64 },
+}
+
+impl Kernel {
+    pub fn gaussian(bw: f64) -> Kernel {
+        assert!(bw > 0.0, "bandwidth must be positive, got {bw}");
+        Kernel::Gaussian { bw }
+    }
+
+    /// Evaluate K(a, b).
+    #[inline]
+    pub fn eval(&self, a: &[f64], b: &[f64]) -> f64 {
+        match *self {
+            Kernel::Gaussian { bw } => {
+                let d2 = Matrix::sqdist(a, b);
+                (-d2 / (2.0 * bw * bw)).exp()
+            }
+            Kernel::Linear => dot(a, b),
+            Kernel::Polynomial { degree, coef } => (dot(a, b) + coef).powi(degree as i32),
+        }
+    }
+
+    /// K(x, x) without touching a second row.
+    #[inline]
+    pub fn diag(&self, x: &[f64]) -> f64 {
+        match *self {
+            Kernel::Gaussian { .. } => 1.0,
+            Kernel::Linear => dot(x, x),
+            Kernel::Polynomial { degree, coef } => (dot(x, x) + coef).powi(degree as i32),
+        }
+    }
+
+    /// The Gaussian bandwidth, if this is a Gaussian kernel.
+    pub fn bw(&self) -> Option<f64> {
+        match *self {
+            Kernel::Gaussian { bw } => Some(bw),
+            _ => None,
+        }
+    }
+
+    /// Whether K(x, x) is the constant 1 (lets the scorer skip work).
+    pub fn unit_diag(&self) -> bool {
+        matches!(self, Kernel::Gaussian { .. })
+    }
+}
+
+#[inline]
+fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+impl std::fmt::Display for Kernel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            Kernel::Gaussian { bw } => write!(f, "gaussian(s={bw})"),
+            Kernel::Linear => write!(f, "linear"),
+            Kernel::Polynomial { degree, coef } => write!(f, "poly(d={degree},c={coef})"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gaussian_properties() {
+        let k = Kernel::gaussian(1.0);
+        let a = [0.0, 0.0];
+        let b = [3.0, 4.0];
+        assert_eq!(k.eval(&a, &a), 1.0);
+        assert!((k.eval(&a, &b) - (-12.5f64).exp()).abs() < 1e-15);
+        // symmetry
+        assert_eq!(k.eval(&a, &b), k.eval(&b, &a));
+        assert_eq!(k.diag(&b), 1.0);
+        assert!(k.unit_diag());
+    }
+
+    #[test]
+    fn gaussian_bandwidth_scales() {
+        let near = Kernel::gaussian(0.5);
+        let wide = Kernel::gaussian(5.0);
+        let a = [0.0];
+        let b = [1.0];
+        assert!(near.eval(&a, &b) < wide.eval(&a, &b));
+    }
+
+    #[test]
+    #[should_panic]
+    fn gaussian_rejects_nonpositive_bw() {
+        Kernel::gaussian(0.0);
+    }
+
+    #[test]
+    fn linear_is_dot() {
+        let k = Kernel::Linear;
+        assert_eq!(k.eval(&[1.0, 2.0], &[3.0, 4.0]), 11.0);
+        assert_eq!(k.diag(&[3.0, 4.0]), 25.0);
+        assert!(!k.unit_diag());
+    }
+
+    #[test]
+    fn polynomial_eval() {
+        let k = Kernel::Polynomial { degree: 2, coef: 1.0 };
+        assert_eq!(k.eval(&[1.0], &[2.0]), 9.0);
+        assert_eq!(k.diag(&[2.0]), 25.0);
+    }
+
+    #[test]
+    fn gaussian_psd_on_random_points() {
+        // 3x3 gram of distinct points must be PSD: check det of leading
+        // minors > 0 (Sylvester) for a hand-picked configuration.
+        let k = Kernel::gaussian(1.3);
+        let pts = [[0.0, 0.0], [1.0, 0.2], [-0.4, 0.9]];
+        let mut g = [[0.0; 3]; 3];
+        for i in 0..3 {
+            for j in 0..3 {
+                g[i][j] = k.eval(&pts[i], &pts[j]);
+            }
+        }
+        let d1 = g[0][0];
+        let d2 = g[0][0] * g[1][1] - g[0][1] * g[1][0];
+        let d3 = g[0][0] * (g[1][1] * g[2][2] - g[1][2] * g[2][1])
+            - g[0][1] * (g[1][0] * g[2][2] - g[1][2] * g[2][0])
+            + g[0][2] * (g[1][0] * g[2][1] - g[1][1] * g[2][0]);
+        assert!(d1 > 0.0 && d2 > 0.0 && d3 > 0.0);
+    }
+}

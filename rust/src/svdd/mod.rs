@@ -1,0 +1,16 @@
+//! Core SVDD: kernels, the SMO dual solver, the trained model and the
+//! training front-end. This is the substrate the paper builds on
+//! (LIBSVM in the original; reimplemented from scratch here — see
+//! DESIGN.md section 2).
+
+pub mod bandwidth;
+pub mod cache;
+pub mod kernel;
+pub mod model;
+pub mod smo;
+pub mod trainer;
+
+pub use kernel::Kernel;
+pub use model::SvddModel;
+pub use smo::{KernelProvider, SmoOptions, SmoSolution};
+pub use trainer::{train, train_with_gram, SvddParams};

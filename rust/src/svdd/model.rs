@@ -1,0 +1,279 @@
+//! The trained SVDD model: master support-vector set, dual weights,
+//! threshold radius and the input-space center the convergence test
+//! tracks (paper defines `a = sum_i alpha_i x_i` even under a kernel).
+
+use crate::error::{Error, Result};
+use crate::svdd::kernel::Kernel;
+use crate::util::json::{arr, num, obj, s, Json};
+use crate::util::matrix::Matrix;
+
+/// A fitted data description. Scoring (paper eq. (18)) is
+/// `dist2(z) = K(z,z) - 2 sum_i alpha_i K(x_i, z) + W`,
+/// outlier iff `dist2(z) > R^2`.
+#[derive(Clone, Debug)]
+pub struct SvddModel {
+    sv: Matrix,
+    alpha: Vec<f64>,
+    kernel: Kernel,
+    r2: f64,
+    /// W = alpha' K(SV, SV) alpha — precomputed model constant.
+    w: f64,
+    center: Vec<f64>,
+}
+
+impl SvddModel {
+    pub fn new(
+        sv: Matrix,
+        alpha: Vec<f64>,
+        kernel: Kernel,
+        r2: f64,
+        w: f64,
+    ) -> Result<SvddModel> {
+        if sv.rows() != alpha.len() {
+            return Err(Error::invalid(format!(
+                "{} SVs but {} alphas",
+                sv.rows(),
+                alpha.len()
+            )));
+        }
+        if sv.is_empty() {
+            return Err(Error::invalid("model with no support vectors"));
+        }
+        let mut center = vec![0.0; sv.cols()];
+        for (i, &a) in alpha.iter().enumerate() {
+            for (c, x) in center.iter_mut().zip(sv.row(i)) {
+                *c += a * x;
+            }
+        }
+        Ok(SvddModel { sv, alpha, kernel, r2, w, center })
+    }
+
+    // ------------------------------------------------------- accessors
+
+    pub fn num_sv(&self) -> usize {
+        self.sv.rows()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.sv.cols()
+    }
+
+    pub fn support_vectors(&self) -> &Matrix {
+        &self.sv
+    }
+
+    pub fn alpha(&self) -> &[f64] {
+        &self.alpha
+    }
+
+    pub fn kernel(&self) -> Kernel {
+        self.kernel
+    }
+
+    pub fn r2(&self) -> f64 {
+        self.r2
+    }
+
+    pub fn w(&self) -> f64 {
+        self.w
+    }
+
+    /// Input-space center `sum_i alpha_i x_i` (the `a` of the paper's
+    /// convergence criterion).
+    pub fn center(&self) -> &[f64] {
+        &self.center
+    }
+
+    // --------------------------------------------------------- scoring
+
+    /// Kernel distance-to-center squared for a single observation.
+    pub fn dist2(&self, z: &[f64]) -> f64 {
+        let mut k_sum = 0.0;
+        for (i, &a) in self.alpha.iter().enumerate() {
+            k_sum += a * self.kernel.eval(self.sv.row(i), z);
+        }
+        self.kernel.diag(z) - 2.0 * k_sum + self.w
+    }
+
+    /// `dist2(z) > R^2`.
+    pub fn is_outlier(&self, z: &[f64]) -> bool {
+        self.dist2(z) > self.r2
+    }
+
+    /// Native batch scoring (the XLA-backed path lives in
+    /// [`crate::scoring`]; this is the reference it is checked against).
+    pub fn dist2_batch(&self, zs: &Matrix) -> Vec<f64> {
+        (0..zs.rows()).map(|i| self.dist2(zs.row(i))).collect()
+    }
+
+    // --------------------------------------------------- serialization
+
+    pub fn to_json(&self) -> Json {
+        let kernel = match self.kernel {
+            Kernel::Gaussian { bw } => obj(vec![("type", s("gaussian")), ("bw", num(bw))]),
+            Kernel::Linear => obj(vec![("type", s("linear"))]),
+            Kernel::Polynomial { degree, coef } => obj(vec![
+                ("type", s("polynomial")),
+                ("degree", num(degree as f64)),
+                ("coef", num(coef)),
+            ]),
+        };
+        obj(vec![
+            ("format", s("fastsvdd-model-v1")),
+            ("kernel", kernel),
+            ("r2", num(self.r2)),
+            ("w", num(self.w)),
+            ("dim", num(self.sv.cols() as f64)),
+            ("alpha", arr(self.alpha.iter().map(|&a| num(a)).collect())),
+            (
+                "sv",
+                arr(self
+                    .sv
+                    .as_slice()
+                    .iter()
+                    .map(|&v| num(v))
+                    .collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<SvddModel> {
+        if v.req("format")?.as_str() != Some("fastsvdd-model-v1") {
+            return Err(Error::invalid("unknown model format"));
+        }
+        let kj = v.req("kernel")?;
+        let kernel = match kj.req("type")?.as_str() {
+            Some("gaussian") => Kernel::gaussian(
+                kj.req("bw")?
+                    .as_f64()
+                    .ok_or_else(|| Error::invalid("bw not a number"))?,
+            ),
+            Some("linear") => Kernel::Linear,
+            Some("polynomial") => Kernel::Polynomial {
+                degree: kj.req("degree")?.as_f64().unwrap_or(2.0) as u32,
+                coef: kj.req("coef")?.as_f64().unwrap_or(1.0),
+            },
+            other => return Err(Error::invalid(format!("bad kernel type {other:?}"))),
+        };
+        let r2 = v.req("r2")?.as_f64().ok_or_else(|| Error::invalid("r2"))?;
+        let w = v.req("w")?.as_f64().ok_or_else(|| Error::invalid("w"))?;
+        let dim = v.req("dim")?.as_usize().ok_or_else(|| Error::invalid("dim"))?;
+        let alpha: Vec<f64> = v
+            .req("alpha")?
+            .as_arr()
+            .ok_or_else(|| Error::invalid("alpha"))?
+            .iter()
+            .filter_map(|x| x.as_f64())
+            .collect();
+        let flat: Vec<f64> = v
+            .req("sv")?
+            .as_arr()
+            .ok_or_else(|| Error::invalid("sv"))?
+            .iter()
+            .filter_map(|x| x.as_f64())
+            .collect();
+        let rows = alpha.len();
+        let sv = Matrix::from_vec(flat, rows, dim)?;
+        SvddModel::new(sv, alpha, kernel, r2, w)
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<SvddModel> {
+        let text = std::fs::read_to_string(path)?;
+        SvddModel::from_json(&Json::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_model() -> SvddModel {
+        // Two symmetric SVs around the origin, bw 1.
+        let sv = Matrix::from_rows(&[vec![-1.0, 0.0], vec![1.0, 0.0]]).unwrap();
+        let alpha = vec![0.5, 0.5];
+        let kernel = Kernel::gaussian(1.0);
+        let k12 = (-2.0f64).exp();
+        let w = 0.5 * (1.0 + k12);
+        // boundary point = an SV: dist2 = 1 - 2*(0.5*1 + 0.5*k12) + w
+        let r2 = 1.0 - (1.0 + k12) + w;
+        SvddModel::new(sv, alpha, kernel, r2, w).unwrap()
+    }
+
+    #[test]
+    fn center_is_alpha_weighted_mean() {
+        let m = toy_model();
+        assert_eq!(m.center(), &[0.0, 0.0]);
+        assert_eq!(m.dim(), 2);
+        assert_eq!(m.num_sv(), 2);
+    }
+
+    #[test]
+    fn svs_are_on_boundary() {
+        let m = toy_model();
+        assert!((m.dist2(&[1.0, 0.0]) - m.r2()).abs() < 1e-12);
+        assert!((m.dist2(&[-1.0, 0.0]) - m.r2()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn origin_inside_far_outside() {
+        let m = toy_model();
+        assert!(!m.is_outlier(&[0.0, 0.0]));
+        assert!(m.is_outlier(&[10.0, 10.0]));
+    }
+
+    #[test]
+    fn far_point_dist2_approaches_one_plus_w() {
+        let m = toy_model();
+        let d = m.dist2(&[100.0, 0.0]);
+        assert!((d - (1.0 + m.w())).abs() < 1e-12);
+    }
+
+    #[test]
+    fn batch_matches_single() {
+        let m = toy_model();
+        let zs = Matrix::from_rows(&[vec![0.0, 0.0], vec![2.0, 1.0], vec![-3.0, 0.5]])
+            .unwrap();
+        let batch = m.dist2_batch(&zs);
+        for i in 0..zs.rows() {
+            assert_eq!(batch[i], m.dist2(zs.row(i)));
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let m = toy_model();
+        let j = m.to_json();
+        let back = SvddModel::from_json(&j).unwrap();
+        assert_eq!(back.num_sv(), m.num_sv());
+        assert!((back.r2() - m.r2()).abs() < 1e-15);
+        assert!((back.w() - m.w()).abs() < 1e-15);
+        assert_eq!(back.alpha(), m.alpha());
+        assert_eq!(back.support_vectors(), m.support_vectors());
+        // scoring identical
+        let z = [0.3, -0.7];
+        assert!((back.dist2(&z) - m.dist2(&z)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn mismatched_construction_rejected() {
+        let sv = Matrix::from_rows(&[vec![0.0]]).unwrap();
+        assert!(SvddModel::new(sv, vec![0.5, 0.5], Kernel::Linear, 1.0, 1.0).is_err());
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let m = toy_model();
+        let dir = std::env::temp_dir().join("fastsvdd_model_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("model.json");
+        m.save(&path).unwrap();
+        let back = SvddModel::load(&path).unwrap();
+        assert_eq!(back.num_sv(), 2);
+        std::fs::remove_file(&path).ok();
+    }
+}

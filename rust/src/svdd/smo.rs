@@ -1,0 +1,591 @@
+//! SMO solver for the SVDD dual (paper eqs. (14)–(16)):
+//!
+//! ```text
+//! min  f(a) = a' K a - sum_i a_i K_ii
+//! s.t. sum_i a_i = 1,   0 <= a_i <= C,   C = 1 / (n f)
+//! ```
+//!
+//! (The paper states the equivalent maximization.) Working-set selection
+//! is the classic maximal-violating-pair rule (LIBSVM WSS1): with
+//! gradient `g_i = 2 (K a)_i - K_ii`, the KKT conditions say there is a
+//! multiplier `lambda` with `g_i >= lambda` when `a_i = 0`,
+//! `g_i <= lambda` when `a_i = C`, and `g_i = lambda` inside. The most
+//! violating pair is `i = argmin{ g_i : a_i < C }`,
+//! `j = argmax{ g_j : a_j > 0 }`; optimality gap is `g_j - g_i`.
+//!
+//! The pair sub-problem moves mass `delta` from `j` to `i`:
+//! `delta = (g_j - g_i) / (2 (K_ii + K_jj - 2 K_ij))`, clipped to the
+//! box `[0, min(C - a_i, a_j)]`, followed by a rank-1 gradient update
+//! `g += 2 delta (K[:,i] - K[:,j])`.
+
+use crate::error::{Error, Result};
+use crate::svdd::cache::ColumnCache;
+use crate::svdd::kernel::Kernel;
+use crate::util::matrix::Matrix;
+
+/// Abstract access to the kernel matrix so the solver runs both on
+/// lazily computed kernels (large full-SVDD solves, LRU-cached) and on
+/// dense gram matrices produced by the XLA `gram` artifact (the
+/// Algorithm-1 sample solves).
+pub trait KernelProvider {
+    fn n(&self) -> usize;
+    /// K(x_i, x_i).
+    fn diag(&self, i: usize) -> f64;
+    /// Copy column `i` (== row `i`; kernels are symmetric) into `out`.
+    fn col_into(&mut self, i: usize, out: &mut [f64]);
+}
+
+/// Lazily evaluated kernel over a data matrix with an LRU column cache.
+pub struct LazyKernel<'a> {
+    data: &'a Matrix,
+    kernel: Kernel,
+    cache: ColumnCache,
+    diag: Vec<f64>,
+}
+
+impl<'a> LazyKernel<'a> {
+    pub fn new(data: &'a Matrix, kernel: Kernel, cache_bytes: usize) -> Self {
+        let diag = (0..data.rows()).map(|i| kernel.diag(data.row(i))).collect();
+        LazyKernel {
+            data,
+            kernel,
+            cache: ColumnCache::new(data.rows(), cache_bytes),
+            diag,
+        }
+    }
+
+    pub fn cache_hit_rate(&self) -> f64 {
+        self.cache.hit_rate()
+    }
+}
+
+impl<'a> KernelProvider for LazyKernel<'a> {
+    fn n(&self) -> usize {
+        self.data.rows()
+    }
+
+    fn diag(&self, i: usize) -> f64 {
+        self.diag[i]
+    }
+
+    fn col_into(&mut self, i: usize, out: &mut [f64]) {
+        let data = self.data;
+        let kernel = self.kernel;
+        self.cache.get_into(i, out, |buf| {
+            let xi = data.row(i);
+            for (k, slot) in buf.iter_mut().enumerate() {
+                *slot = kernel.eval(xi, data.row(k));
+            }
+        });
+    }
+}
+
+/// Dense precomputed kernel matrix (row-major n*n). This is what the
+/// XLA gram artifact feeds the sample solves with.
+pub struct DenseKernel {
+    n: usize,
+    k: Vec<f64>,
+}
+
+impl DenseKernel {
+    pub fn new(k: Vec<f64>, n: usize) -> Result<Self> {
+        if k.len() != n * n {
+            return Err(Error::invalid(format!(
+                "dense kernel: {} values for n={n}",
+                k.len()
+            )));
+        }
+        Ok(DenseKernel { n, k })
+    }
+
+    /// Compute the full gram matrix natively (test/reference path).
+    pub fn from_data(data: &Matrix, kernel: Kernel) -> Self {
+        let n = data.rows();
+        let mut k = vec![0.0; n * n];
+        for i in 0..n {
+            for j in i..n {
+                let v = kernel.eval(data.row(i), data.row(j));
+                k[i * n + j] = v;
+                k[j * n + i] = v;
+            }
+        }
+        DenseKernel { n, k }
+    }
+}
+
+impl KernelProvider for DenseKernel {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn diag(&self, i: usize) -> f64 {
+        self.k[i * self.n + i]
+    }
+
+    fn col_into(&mut self, i: usize, out: &mut [f64]) {
+        out.copy_from_slice(&self.k[i * self.n..(i + 1) * self.n]);
+    }
+}
+
+/// Solver options.
+#[derive(Clone, Copy, Debug)]
+pub struct SmoOptions {
+    /// KKT violation tolerance (stopping threshold on `g_j - g_i`).
+    pub tol: f64,
+    /// Hard cap on pair iterations (scaled guard; the solver normally
+    /// stops on the gap long before this).
+    pub max_iter: usize,
+    /// alpha values below this are treated as zero when extracting SVs.
+    pub sv_eps: f64,
+}
+
+impl Default for SmoOptions {
+    fn default() -> Self {
+        SmoOptions { tol: 1e-6, max_iter: 0, sv_eps: 1e-9 }
+    }
+}
+
+/// Solution of the dual problem.
+#[derive(Clone, Debug)]
+pub struct SmoSolution {
+    /// Dual variables, length n, summing to 1.
+    pub alpha: Vec<f64>,
+    /// Final gradient `g_i = 2 (K a)_i - K_ii` (used for R^2).
+    pub gradient: Vec<f64>,
+    /// `a' K a` at the solution.
+    pub quad: f64,
+    /// Squared threshold radius (mean over boundary SVs; see below).
+    pub r2: f64,
+    /// Pair iterations executed.
+    pub iterations: usize,
+    /// Final optimality gap.
+    pub gap: f64,
+}
+
+impl SmoSolution {
+    /// Indices with `alpha > sv_eps` — the support vectors.
+    pub fn sv_indices(&self, sv_eps: f64) -> Vec<usize> {
+        (0..self.alpha.len())
+            .filter(|&i| self.alpha[i] > sv_eps)
+            .collect()
+    }
+}
+
+/// Solve the SVDD dual by SMO. `c` is the box bound `C = 1/(n f)`.
+pub fn solve(kp: &mut dyn KernelProvider, c: f64, opts: &SmoOptions) -> Result<SmoSolution> {
+    let n = kp.n();
+    if n == 0 {
+        return Err(Error::invalid("SMO: empty problem"));
+    }
+    if c * (n as f64) < 1.0 - 1e-12 {
+        return Err(Error::Solver(format!(
+            "infeasible: n*C = {} < 1 (f > 1?)",
+            c * n as f64
+        )));
+    }
+    // Feasible start. Two regimes:
+    // - small problems (the Algorithm-1 sample/union solves): uniform
+    //   alpha = 1/n starts near the solution and the O(n^2 m) gradient
+    //   init is trivial;
+    // - large problems: concentrate the mass on the first ceil(1/C)
+    //   points (the LIBSVM one-class init) so the initial gradient
+    //   needs only those columns — O(k n m) instead of O(n^2 m), which
+    //   otherwise dominates total time.
+    const UNIFORM_INIT_MAX_N: usize = 256;
+    let mut alpha = vec![0.0; n];
+    if n <= UNIFORM_INIT_MAX_N {
+        for a in &mut alpha {
+            *a = 1.0 / n as f64;
+        }
+    } else {
+        let mut remaining: f64 = 1.0;
+        let mut i = 0;
+        while remaining > 0.0 && i < n {
+            let a = remaining.min(c);
+            alpha[i] = a;
+            remaining -= a;
+            i += 1;
+        }
+    }
+
+    // g_i = 2 (K a)_i - K_ii from the nonzero-alpha columns only (for
+    // the uniform start that is every column; for the concentrated
+    // start just the first ceil(1/C)).
+    let mut g: Vec<f64> = (0..n).map(|i| -kp.diag(i)).collect();
+    let mut col = vec![0.0; n];
+    for j in 0..n {
+        if alpha[j] <= 0.0 {
+            continue;
+        }
+        kp.col_into(j, &mut col);
+        let two_aj = 2.0 * alpha[j];
+        for k in 0..n {
+            g[k] += two_aj * col[k];
+        }
+    }
+
+    // Index set { k : alpha_k > 0 }, maintained incrementally so the
+    // second-order j-scan is O(|positive|), not O(n).
+    let mut pos: Vec<usize> = (0..n).filter(|&k| alpha[k] > 0.0).collect();
+    let mut pos_slot: Vec<usize> = vec![usize::MAX; n];
+    for (slot, &k) in pos.iter().enumerate() {
+        pos_slot[k] = slot;
+    }
+
+    let max_iter = if opts.max_iter > 0 {
+        opts.max_iter
+    } else {
+        (100 * n).max(10_000)
+    };
+
+    let mut col_i = vec![0.0; n];
+    let mut col_j = vec![0.0; n];
+    let mut iterations = 0;
+    let mut gap = f64::INFINITY;
+
+    // i-candidate (argmin g over alpha < C) is maintained across
+    // iterations by fusing the scan with the rank-1 gradient update.
+    let mut i_sel = usize::MAX;
+    let mut g_min = f64::INFINITY;
+    for k in 0..n {
+        if alpha[k] < c - 1e-14 && g[k] < g_min {
+            g_min = g[k];
+            i_sel = k;
+        }
+    }
+
+    for it in 0..max_iter {
+        iterations = it;
+        // --- optimality gap: max g over the positive set ---
+        let mut g_max = f64::NEG_INFINITY;
+        for &k in &pos {
+            if g[k] > g_max {
+                g_max = g[k];
+            }
+        }
+        gap = g_max - g_min;
+        if i_sel == usize::MAX || pos.is_empty() || gap < opts.tol {
+            break;
+        }
+
+        // --- second-order pick of j (LIBSVM WSS2): maximize the
+        // objective decrease (g_j - g_i)^2 / (2 eta_j) over the positive
+        // set. K[:, i] is needed for eta_j anyway, so fetch it first.
+        kp.col_into(i_sel, &mut col_i);
+        let diag_i = kp.diag(i_sel);
+        let mut j_sel = usize::MAX;
+        let mut best_gain = 0.0;
+        for &k in &pos {
+            if k == i_sel {
+                continue;
+            }
+            let d = g[k] - g_min;
+            if d <= 0.0 {
+                continue;
+            }
+            let eta = (2.0 * (diag_i + kp.diag(k) - 2.0 * col_i[k])).max(1e-12);
+            let gain = d * d / eta;
+            if gain > best_gain {
+                best_gain = gain;
+                j_sel = k;
+            }
+        }
+        if j_sel == usize::MAX {
+            break;
+        }
+
+        // --- pair sub-problem ---
+        kp.col_into(j_sel, &mut col_j);
+        let eta = (2.0 * (diag_i + kp.diag(j_sel) - 2.0 * col_i[j_sel])).max(1e-12);
+        let raw = (g[j_sel] - g_min) / eta;
+        let delta = raw.min(c - alpha[i_sel]).min(alpha[j_sel]);
+        if delta <= 0.0 {
+            // numerically stuck pair; nothing can move
+            break;
+        }
+        let was_zero = alpha[i_sel] <= 1e-14;
+        alpha[i_sel] += delta;
+        alpha[j_sel] -= delta;
+        // maintain the positive set
+        if was_zero {
+            pos_slot[i_sel] = pos.len();
+            pos.push(i_sel);
+        }
+        if alpha[j_sel] <= 1e-14 {
+            alpha[j_sel] = 0.0;
+            let slot = pos_slot[j_sel];
+            let last = *pos.last().unwrap();
+            pos.swap_remove(slot);
+            if slot < pos.len() {
+                pos_slot[last] = slot;
+            }
+            pos_slot[j_sel] = usize::MAX;
+        }
+
+        // --- rank-1 gradient update fused with the next i-scan ---
+        let two_d = 2.0 * delta;
+        g_min = f64::INFINITY;
+        i_sel = usize::MAX;
+        for k in 0..n {
+            let gk = g[k] + two_d * (col_i[k] - col_j[k]);
+            g[k] = gk;
+            if gk < g_min && alpha[k] < c - 1e-14 {
+                g_min = gk;
+                i_sel = k;
+            }
+        }
+    }
+
+    // Renormalize tiny drift on the equality constraint.
+    let sum: f64 = alpha.iter().sum();
+    if (sum - 1.0).abs() > 1e-9 {
+        for a in &mut alpha {
+            *a /= sum;
+        }
+    }
+
+    // quad = a' K a = sum_i a_i (K a)_i with (K a)_i = (g_i + K_ii)/2.
+    let quad: f64 = (0..n)
+        .map(|i| alpha[i] * (g[i] + kp.diag(i)) * 0.5)
+        .sum();
+
+    // R^2: dist^2(x_k) = K_kk - 2 (K a)_k + quad = quad - g_k.
+    // Average over boundary SVs (0 < a_k < C); fall back to all SVs.
+    let mut r2_sum = 0.0;
+    let mut r2_cnt = 0usize;
+    for k in 0..n {
+        if alpha[k] > opts.sv_eps && alpha[k] < c - opts.sv_eps {
+            r2_sum += quad - g[k];
+            r2_cnt += 1;
+        }
+    }
+    if r2_cnt == 0 {
+        for k in 0..n {
+            if alpha[k] > opts.sv_eps {
+                r2_sum += quad - g[k];
+                r2_cnt += 1;
+            }
+        }
+    }
+    let r2 = if r2_cnt > 0 { (r2_sum / r2_cnt as f64).max(0.0) } else { 0.0 };
+
+    Ok(SmoSolution { alpha, gradient: g, quad, r2, iterations, gap })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gaussian_dense(pts: &[Vec<f64>], bw: f64) -> DenseKernel {
+        let m = Matrix::from_rows(pts).unwrap();
+        DenseKernel::from_data(&m, Kernel::gaussian(bw))
+    }
+
+    /// Brute-force reference: projected gradient descent on the simplex
+    /// with box constraints, used to validate SMO on small problems.
+    fn reference_objective(k: &DenseKernel, alpha: &[f64]) -> f64 {
+        let n = k.n();
+        let mut q = 0.0;
+        for i in 0..n {
+            for j in 0..n {
+                q += alpha[i] * alpha[j] * k.k[i * n + j];
+            }
+        }
+        let lin: f64 = (0..n).map(|i| alpha[i] * k.diag(i)).sum();
+        q - lin
+    }
+
+    #[test]
+    fn two_identical_points_split_mass() {
+        // K = [[1,1],[1,1]]: any feasible alpha is optimal, f = 1 - 1 = 0.
+        let k = gaussian_dense(&[vec![0.0], vec![0.0]], 1.0);
+        let mut kp = k;
+        let sol = solve(&mut kp, 1.0, &SmoOptions::default()).unwrap();
+        assert!((sol.alpha.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(sol.r2.abs() < 1e-9, "r2={}", sol.r2);
+    }
+
+    #[test]
+    fn two_distant_points_symmetric_solution() {
+        // Symmetric problem: optimum is alpha = (1/2, 1/2) when C >= 1/2.
+        let mut kp = gaussian_dense(&[vec![0.0], vec![2.0]], 1.0);
+        let sol = solve(&mut kp, 1.0, &SmoOptions::default()).unwrap();
+        assert!((sol.alpha[0] - 0.5).abs() < 1e-8, "{:?}", sol.alpha);
+        assert!((sol.alpha[1] - 0.5).abs() < 1e-8);
+        // R^2 = 1 - 2(a K)_k + quad with K12 = exp(-2)
+        let k12 = (-2.0f64).exp();
+        let quad = 0.5 * (1.0 + k12);
+        let expect = 1.0 - (1.0 + k12) + quad;
+        assert!((sol.r2 - expect).abs() < 1e-8, "r2={} expect={expect}", sol.r2);
+    }
+
+    #[test]
+    fn interior_point_gets_zero_alpha() {
+        // Three collinear points; the middle one is inside the description
+        // and must end with alpha ~ 0 (duality condition eq. (8)).
+        let mut kp = gaussian_dense(&[vec![-1.0], vec![0.0], vec![1.0]], 1.0);
+        let sol = solve(&mut kp, 1.0, &SmoOptions::default()).unwrap();
+        assert!(sol.alpha[1] < 1e-8, "middle alpha = {}", sol.alpha[1]);
+        assert!((sol.alpha[0] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn box_constraint_caps_outlier() {
+        // An extreme outlier with C < 1 must saturate at alpha = C
+        // (duality condition eq. (10)).
+        let pts = vec![
+            vec![0.0],
+            vec![0.1],
+            vec![-0.1],
+            vec![0.05],
+            vec![100.0], // outlier
+        ];
+        // The outlier is kernel-orthogonal to the cluster, so without the
+        // box it would take alpha ~ 1/2 (minimizing (1-a)^2 + a^2).
+        // C = 0.4 < 1/2 therefore binds and the outlier pins at C
+        // (duality condition eq. (10)).
+        let c = 1.0 / (5.0 * 0.5); // f = 0.5 -> C = 0.4
+        let mut kp = gaussian_dense(&pts, 1.0);
+        let sol = solve(&mut kp, c, &SmoOptions::default()).unwrap();
+        assert!((sol.alpha[4] - c).abs() < 1e-8, "alpha={:?}", sol.alpha);
+    }
+
+    #[test]
+    fn kkt_conditions_hold() {
+        let pts: Vec<Vec<f64>> = (0..20)
+            .map(|i| vec![(i as f64 * 0.37).sin(), (i as f64 * 0.61).cos()])
+            .collect();
+        let c = 1.0 / (20.0 * 0.1);
+        let mut kp = gaussian_dense(&pts, 0.8);
+        let sol = solve(&mut kp, c, &SmoOptions::default()).unwrap();
+        // lambda from any interior SV; check eps-KKT for all points.
+        let interior: Vec<usize> = (0..20)
+            .filter(|&i| sol.alpha[i] > 1e-8 && sol.alpha[i] < c - 1e-8)
+            .collect();
+        assert!(!interior.is_empty());
+        let lambda = sol.gradient[interior[0]];
+        for i in 0..20 {
+            let gi = sol.gradient[i];
+            if sol.alpha[i] < 1e-8 {
+                assert!(gi >= lambda - 1e-5, "g[{i}]={gi} < lambda={lambda}");
+            } else if sol.alpha[i] > c - 1e-8 {
+                assert!(gi <= lambda + 1e-5);
+            } else {
+                assert!((gi - lambda).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn matches_projected_gradient_reference() {
+        // Random-ish 12-point problem; compare objective to a dense
+        // projected-gradient solve (simplex projection with box).
+        let pts: Vec<Vec<f64>> = (0..12)
+            .map(|i| {
+                let t = i as f64;
+                vec![(t * 1.3).sin() * 2.0, (t * 0.7).cos() * 1.5]
+            })
+            .collect();
+        let c = 1.0 / (12.0 * 0.15);
+        let dense = gaussian_dense(&pts, 1.1);
+        let mut kp = gaussian_dense(&pts, 1.1);
+        let sol = solve(&mut kp, c, &SmoOptions::default()).unwrap();
+        let smo_obj = reference_objective(&dense, &sol.alpha);
+
+        // crude projected gradient with many iterations
+        let n = 12;
+        let mut a = vec![1.0 / n as f64; n];
+        for _ in 0..200_000 {
+            // gradient
+            let mut grad = vec![0.0; n];
+            for i in 0..n {
+                let mut s = 0.0;
+                for j in 0..n {
+                    s += dense.k[i * n + j] * a[j];
+                }
+                grad[i] = 2.0 * s - dense.diag(i);
+            }
+            for i in 0..n {
+                a[i] -= 0.01 * grad[i];
+            }
+            // project to { sum = 1, 0 <= a <= C } by iterative clipping
+            for _ in 0..50 {
+                let free: Vec<usize> = (0..n).collect();
+                let sum: f64 = a.iter().sum();
+                let shift = (sum - 1.0) / free.len() as f64;
+                for i in 0..n {
+                    a[i] = (a[i] - shift).clamp(0.0, c);
+                }
+                if (a.iter().sum::<f64>() - 1.0).abs() < 1e-12 {
+                    break;
+                }
+            }
+        }
+        let ref_obj = reference_objective(&dense, &a);
+        assert!(
+            smo_obj <= ref_obj + 1e-6,
+            "SMO objective {smo_obj} worse than reference {ref_obj}"
+        );
+    }
+
+    #[test]
+    fn infeasible_c_rejected() {
+        let mut kp = gaussian_dense(&[vec![0.0], vec![1.0]], 1.0);
+        assert!(solve(&mut kp, 0.2, &SmoOptions::default()).is_err());
+    }
+
+    #[test]
+    fn empty_problem_rejected() {
+        let m = Matrix::zeros(0, 1);
+        let mut kp = DenseKernel::from_data(&m, Kernel::gaussian(1.0));
+        assert!(solve(&mut kp, 1.0, &SmoOptions::default()).is_err());
+    }
+
+    #[test]
+    fn lazy_and_dense_agree() {
+        let pts: Vec<Vec<f64>> = (0..30)
+            .map(|i| {
+                let t = i as f64 * 0.41;
+                vec![t.sin() * 3.0, (t * 1.9).cos()]
+            })
+            .collect();
+        let m = Matrix::from_rows(&pts).unwrap();
+        let c = 1.0 / (30.0 * 0.1);
+        let mut dense = DenseKernel::from_data(&m, Kernel::gaussian(1.0));
+        let mut lazy = LazyKernel::new(&m, Kernel::gaussian(1.0), 1 << 20);
+        let sd = solve(&mut dense, c, &SmoOptions::default()).unwrap();
+        let sl = solve(&mut lazy, c, &SmoOptions::default()).unwrap();
+        assert!((sd.r2 - sl.r2).abs() < 1e-10);
+        for (a, b) in sd.alpha.iter().zip(&sl.alpha) {
+            assert!((a - b).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn tiny_cache_still_correct() {
+        let pts: Vec<Vec<f64>> = (0..25)
+            .map(|i| vec![(i as f64 * 0.77).sin(), (i as f64 * 0.31).cos()])
+            .collect();
+        let m = Matrix::from_rows(&pts).unwrap();
+        let c = 1.0 / (25.0 * 0.2);
+        let mut dense = DenseKernel::from_data(&m, Kernel::gaussian(0.9));
+        // cache of a single column forces constant eviction
+        let mut lazy = LazyKernel::new(&m, Kernel::gaussian(0.9), 1);
+        let sd = solve(&mut dense, c, &SmoOptions::default()).unwrap();
+        let sl = solve(&mut lazy, c, &SmoOptions::default()).unwrap();
+        assert!((sd.r2 - sl.r2).abs() < 1e-10);
+    }
+
+    #[test]
+    fn alpha_sums_to_one_and_in_box() {
+        let pts: Vec<Vec<f64>> = (0..40)
+            .map(|i| vec![(i as f64).sin(), (i as f64 * 2.0).cos(), i as f64 % 3.0])
+            .collect();
+        let c = 1.0 / (40.0 * 0.05);
+        let mut kp = gaussian_dense(&pts, 1.5);
+        let sol = solve(&mut kp, c, &SmoOptions::default()).unwrap();
+        assert!((sol.alpha.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        assert!(sol.alpha.iter().all(|&a| (-1e-12..=c + 1e-12).contains(&a)));
+        assert!(sol.gap < 1e-5);
+    }
+}

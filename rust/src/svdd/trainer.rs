@@ -1,0 +1,235 @@
+//! Training front-end: data + parameters -> [`SvddModel`].
+//!
+//! Two entry points:
+//! - [`train`] — computes kernel entries natively (lazily, LRU-cached);
+//!   used for the full-SVDD baseline on large data.
+//! - [`train_with_gram`] — consumes a precomputed dense gram matrix;
+//!   this is how the XLA `gram` artifact (L1 Pallas kernel) feeds the
+//!   sample solves inside Algorithm 1.
+
+use crate::error::{Error, Result};
+use crate::svdd::kernel::Kernel;
+use crate::svdd::model::SvddModel;
+use crate::svdd::smo::{self, DenseKernel, LazyKernel, SmoOptions};
+use crate::util::matrix::Matrix;
+
+/// Everything the solver needs besides the data.
+#[derive(Clone, Copy, Debug)]
+pub struct SvddParams {
+    pub kernel: Kernel,
+    /// Expected outlier fraction `f`; the box bound is `C = 1/(n f)`.
+    pub outlier_fraction: f64,
+    pub smo: SmoOptions,
+    /// LRU kernel cache budget for the lazy path.
+    pub cache_bytes: usize,
+}
+
+impl SvddParams {
+    /// Gaussian kernel with bandwidth `bw`, outlier fraction `f`.
+    pub fn gaussian(bw: f64, f: f64) -> SvddParams {
+        SvddParams {
+            kernel: Kernel::gaussian(bw),
+            outlier_fraction: f,
+            smo: SmoOptions::default(),
+            cache_bytes: 256 << 20,
+        }
+    }
+
+    pub fn with_bandwidth(mut self, bw: f64) -> SvddParams {
+        self.kernel = Kernel::gaussian(bw);
+        self
+    }
+
+    /// `C = 1/(n f)` for a given training size.
+    pub fn c_for(&self, n: usize) -> Result<f64> {
+        if !(0.0..=1.0).contains(&self.outlier_fraction) || self.outlier_fraction == 0.0 {
+            return Err(Error::invalid(format!(
+                "outlier fraction must be in (0, 1], got {}",
+                self.outlier_fraction
+            )));
+        }
+        if n == 0 {
+            return Err(Error::invalid("empty training set"));
+        }
+        Ok(1.0 / (n as f64 * self.outlier_fraction))
+    }
+}
+
+impl Default for SvddParams {
+    fn default() -> Self {
+        SvddParams::gaussian(1.0, 0.001)
+    }
+}
+
+/// Train on `data` with natively computed kernels.
+pub fn train(data: &Matrix, params: &SvddParams) -> Result<SvddModel> {
+    let c = params.c_for(data.rows())?;
+    let mut kp = LazyKernel::new(data, params.kernel, params.cache_bytes);
+    let sol = smo::solve(&mut kp, c, &params.smo)?;
+    finalize(data, params, sol)
+}
+
+/// Train on `data` whose gram matrix `K(data, data)` was computed
+/// elsewhere (the XLA artifact path). `gram` is row-major n*n.
+pub fn train_with_gram(data: &Matrix, gram: Vec<f64>, params: &SvddParams) -> Result<SvddModel> {
+    let c = params.c_for(data.rows())?;
+    let mut kp = DenseKernel::new(gram, data.rows())?;
+    let sol = smo::solve(&mut kp, c, &params.smo)?;
+    finalize(data, params, sol)
+}
+
+fn finalize(data: &Matrix, params: &SvddParams, sol: smo::SmoSolution) -> Result<SvddModel> {
+    let idx = sol.sv_indices(params.smo.sv_eps);
+    if idx.is_empty() {
+        return Err(Error::Solver("no support vectors extracted".into()));
+    }
+    let sv = data.gather(&idx);
+    let mut alpha: Vec<f64> = idx.iter().map(|&i| sol.alpha[i]).collect();
+    // Dropping alphas <= sv_eps loses a sliver of mass; renormalize so
+    // the model invariant sum(alpha) == 1 holds exactly.
+    let total: f64 = alpha.iter().sum();
+    for a in &mut alpha {
+        *a /= total;
+    }
+    // W = alpha' K alpha over the retained SVs (recomputed exactly on
+    // the reduced set rather than reusing sol.quad, so the scoring
+    // identity dist2(sv_boundary) == R^2 holds for the *stored* model).
+    let mut w = 0.0;
+    for (i, &ai) in alpha.iter().enumerate() {
+        for (j, &aj) in alpha.iter().enumerate() {
+            w += ai * aj * params.kernel.eval(sv.row(i), sv.row(j));
+        }
+    }
+    SvddModel::new(sv, alpha, params.kernel, sol.r2, w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn ring_data(n: usize, seed: u64) -> Matrix {
+        // points on an annulus radius ~[0.8, 1.2]
+        let mut rng = Xoshiro256::new(seed);
+        let rows: Vec<Vec<f64>> = (0..n)
+            .map(|_| {
+                let th = rng.range(0.0, std::f64::consts::TAU);
+                let r = rng.range(0.8, 1.2);
+                vec![r * th.cos(), r * th.sin()]
+            })
+            .collect();
+        Matrix::from_rows(&rows).unwrap()
+    }
+
+    #[test]
+    fn train_produces_valid_model() {
+        let data = ring_data(200, 1);
+        let params = SvddParams::gaussian(0.5, 0.05);
+        let m = train(&data, &params).unwrap();
+        assert!(m.num_sv() >= 3);
+        assert!(m.num_sv() < 200, "all points became SVs");
+        assert!(m.r2() > 0.0);
+        assert!((m.alpha().iter().sum::<f64>() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn training_points_mostly_inside() {
+        let data = ring_data(300, 2);
+        let params = SvddParams::gaussian(0.6, 0.02);
+        let m = train(&data, &params).unwrap();
+        let inside = (0..data.rows())
+            .filter(|&i| !m.is_outlier(data.row(i)))
+            .count();
+        // at most ~f fraction may fall outside (plus margin slack)
+        assert!(
+            inside as f64 >= 0.9 * data.rows() as f64,
+            "only {inside}/300 inside"
+        );
+    }
+
+    #[test]
+    fn center_of_ring_is_inside_far_point_outside() {
+        let data = ring_data(300, 3);
+        let params = SvddParams::gaussian(0.8, 0.02);
+        let m = train(&data, &params).unwrap();
+        assert!(!m.is_outlier(&[0.0, 0.0])); // bw .8 bridges the hole
+        assert!(m.is_outlier(&[5.0, 5.0]));
+    }
+
+    #[test]
+    fn gram_path_matches_native_path() {
+        let data = ring_data(64, 4);
+        let params = SvddParams::gaussian(0.7, 0.05);
+        let native = train(&data, &params).unwrap();
+        // gram computed exactly as the XLA artifact would
+        let n = data.rows();
+        let mut gram = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                gram[i * n + j] = params.kernel.eval(data.row(i), data.row(j));
+            }
+        }
+        let viagram = train_with_gram(&data, gram, &params).unwrap();
+        assert_eq!(native.num_sv(), viagram.num_sv());
+        assert!((native.r2() - viagram.r2()).abs() < 1e-10);
+    }
+
+    #[test]
+    fn boundary_sv_scores_at_r2() {
+        let data = ring_data(150, 5);
+        let params = SvddParams::gaussian(0.5, 0.05);
+        let m = train(&data, &params).unwrap();
+        // at least one retained SV must sit on the boundary:
+        // |dist2(sv) - R^2| small
+        let min_gap = (0..m.num_sv())
+            .map(|i| (m.dist2(m.support_vectors().row(i)) - m.r2()).abs())
+            .fold(f64::INFINITY, f64::min);
+        assert!(min_gap < 1e-4, "closest SV gap to boundary: {min_gap}");
+    }
+
+    #[test]
+    fn bad_fraction_rejected() {
+        let data = ring_data(10, 6);
+        let mut params = SvddParams::gaussian(1.0, 0.0);
+        assert!(train(&data, &params).is_err());
+        params.outlier_fraction = 1.5;
+        assert!(train(&data, &params).is_err());
+    }
+
+    #[test]
+    fn c_for_formula() {
+        let p = SvddParams::gaussian(1.0, 0.001);
+        assert!((p.c_for(1000).unwrap() - 1.0).abs() < 1e-12);
+        assert!(p.c_for(0).is_err());
+    }
+
+    #[test]
+    fn single_point_training() {
+        let data = Matrix::from_rows(&[vec![1.0, 2.0]]).unwrap();
+        let params = SvddParams::gaussian(1.0, 0.5);
+        let m = train(&data, &params).unwrap();
+        assert_eq!(m.num_sv(), 1);
+        assert!(m.dist2(&[1.0, 2.0]).abs() < 1e-9);
+    }
+
+    #[test]
+    fn smaller_fraction_allows_fewer_outliers() {
+        // with tiny f (huge C) the description must cover everything,
+        // including a mild outlier; with big f it may exclude it.
+        let mut rows: Vec<Vec<f64>> = (0..100)
+            .map(|i| {
+                let t = i as f64 * 0.0628;
+                vec![t.cos() * 0.2, t.sin() * 0.2]
+            })
+            .collect();
+        rows.push(vec![1.5, 0.0]);
+        let data = Matrix::from_rows(&rows).unwrap();
+        let tight = train(&data, &SvddParams::gaussian(0.4, 0.001)).unwrap();
+        // With C > 1 the box never binds, so the isolated point becomes a
+        // *boundary* SV: dist2 == R^2 up to solver tolerance.
+        let gap = tight.dist2(&[1.5, 0.0]) - tight.r2();
+        assert!(gap < 1e-5, "C>1 must keep the point on/inside the boundary, gap={gap}");
+        let loose = train(&data, &SvddParams::gaussian(0.4, 0.2)).unwrap();
+        assert!(loose.is_outlier(&[1.5, 0.0]));
+    }
+}

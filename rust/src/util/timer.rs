@@ -1,0 +1,92 @@
+//! Timing helpers shared by the bench harness and the trainers.
+
+use std::time::{Duration, Instant};
+
+/// A simple stopwatch.
+#[derive(Clone, Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    pub fn restart(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Human-friendly duration rendering for the bench tables
+/// ("1.98 sec", "32.0 min", "412 us" ...).
+pub fn fmt_duration(secs: f64) -> String {
+    if secs < 0.0 {
+        return format!("-{}", fmt_duration(-secs));
+    }
+    if secs < 1e-3 {
+        format!("{:.0} us", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.1} ms", secs * 1e3)
+    } else if secs < 120.0 {
+        format!("{secs:.2} sec")
+    } else if secs < 7200.0 {
+        format!("{:.1} min", secs / 60.0)
+    } else {
+        format!("{:.2} hr", secs / 3600.0)
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let sw = Stopwatch::start();
+    let out = f();
+    (out, sw.elapsed_secs())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_monotone() {
+        let sw = Stopwatch::start();
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(sw.elapsed_secs() >= 0.005);
+    }
+
+    #[test]
+    fn restart_resets() {
+        let mut sw = Stopwatch::start();
+        std::thread::sleep(Duration::from_millis(3));
+        let first = sw.restart();
+        assert!(first.as_secs_f64() >= 0.003);
+        assert!(sw.elapsed_secs() < first.as_secs_f64());
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_duration(0.0000005), "0 us");
+        assert_eq!(fmt_duration(0.0123), "12.3 ms");
+        assert_eq!(fmt_duration(1.98), "1.98 sec");
+        assert_eq!(fmt_duration(1920.0), "32.0 min");
+        assert_eq!(fmt_duration(8000.0), "2.22 hr");
+    }
+
+    #[test]
+    fn timed_returns_value() {
+        let (v, secs) = timed(|| 21 * 2);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+}

@@ -1,0 +1,181 @@
+//! Cross-module integration tests: whole training/scoring/distribution
+//! pipelines wired together the way the examples and benches use them
+//! (no artifacts needed — the XLA paths have their own suite).
+
+use fastsvdd::baselines::{train_full, train_kim, train_luo, KimConfig, LuoConfig};
+use fastsvdd::config::{Method, RunConfig};
+use fastsvdd::data::grid::{agreement, Grid};
+use fastsvdd::data::polygon::Polygon;
+use fastsvdd::data::shuttle::Shuttle;
+use fastsvdd::data::tennessee::TennesseePlant;
+use fastsvdd::data::{banana::Banana, star::Star, Generator};
+use fastsvdd::distributed::{train_local_cluster, DistributedConfig};
+use fastsvdd::sampling::{SamplingConfig, SamplingTrainer};
+use fastsvdd::scoring::{F1Score, Scorer};
+use fastsvdd::svdd::{SvddModel, SvddParams};
+
+/// The paper's central claim on a full pipeline: the sampling method's
+/// grid decision map closely matches the full method's (Fig 8).
+#[test]
+fn sampling_grid_agreement_with_full() {
+    let data = Star::default().generate(6000, 42);
+    let params = SvddParams::gaussian(0.17, 0.001);
+    let full = train_full(&data, &params).unwrap().model;
+    let cfg = SamplingConfig { sample_size: 11, ..Default::default() };
+    let samp = SamplingTrainer::new(params, cfg).train(&data, 7).unwrap().model;
+
+    let grid = Grid::covering(&data, 100, 100, 0.15);
+    let pts = grid.points();
+    let a = Scorer::native(&full).inside_batch(&pts).unwrap();
+    let b = Scorer::native(&samp).inside_batch(&pts).unwrap();
+    let agr = agreement(&a, &b);
+    assert!(agr > 0.95, "grid agreement only {agr}");
+}
+
+/// Model save -> load -> score must be bit-stable (the serve workflow).
+#[test]
+fn train_save_load_score_roundtrip() {
+    let data = Banana::default().generate(2000, 1);
+    let params = SvddParams::gaussian(0.35, 0.001);
+    let cfg = SamplingConfig { sample_size: 6, ..Default::default() };
+    let model = SamplingTrainer::new(params, cfg).train(&data, 3).unwrap().model;
+
+    let dir = std::env::temp_dir().join("fastsvdd_pipeline_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("model.json");
+    model.save(&path).unwrap();
+    let loaded = SvddModel::load(&path).unwrap();
+
+    let probes = Banana::default().generate(500, 2);
+    let a = model.dist2_batch(&probes);
+    let b = loaded.dist2_batch(&probes);
+    assert_eq!(a, b);
+    std::fs::remove_file(&path).ok();
+}
+
+/// Distributed == near-full quality on sharded data (paper section III-1).
+#[test]
+fn distributed_pipeline_quality() {
+    let data = Banana::default().generate(12_000, 9);
+    let params = SvddParams::gaussian(0.35, 0.001);
+    let dcfg = DistributedConfig {
+        workers: 4,
+        sampling: SamplingConfig { sample_size: 6, ..Default::default() },
+        seed: 5,
+    };
+    let dist = train_local_cluster(&data, &params, &dcfg).unwrap();
+    let full = train_full(&data, &params).unwrap();
+    let rel = (dist.model.r2() - full.model.r2()).abs() / full.model.r2();
+    assert!(rel < 0.05, "distributed R^2 off by {rel}");
+    assert!(dist.union_rows < 400, "union unexpectedly large: {}", dist.union_rows);
+}
+
+/// Shuttle-like high-dimensional pipeline: F1 ratio ~ 1 (Fig 9).
+#[test]
+fn shuttle_f1_ratio_near_one() {
+    let train_data = Shuttle.training(4000, 42);
+    let scoring = Shuttle.scoring(6000, 99);
+    let bw = fastsvdd::svdd::bandwidth::median_heuristic(&train_data, 10_000, 1);
+    let params = SvddParams::gaussian(bw, 0.005);
+
+    let full = train_full(&train_data, &params).unwrap().model;
+    let f1_full = F1Score::compute(
+        &scoring.labels,
+        &Scorer::native(&full).inside_batch(&scoring.data).unwrap(),
+    );
+    let cfg = SamplingConfig { sample_size: 10, ..Default::default() };
+    let samp = SamplingTrainer::new(params, cfg).train(&train_data, 7).unwrap().model;
+    let f1_samp = F1Score::compute(
+        &scoring.labels,
+        &Scorer::native(&samp).inside_batch(&scoring.data).unwrap(),
+    );
+    let ratio = f1_samp.f1 / f1_full.f1;
+    assert!(
+        (0.9..=1.1).contains(&ratio),
+        "F1 ratio {ratio}: full={} samp={}",
+        f1_full.f1,
+        f1_samp.f1
+    );
+    // and the models are actually good, not both degenerate
+    assert!(f1_full.f1 > 0.8, "full F1 only {}", f1_full.f1);
+}
+
+/// Tennessee pipeline: faults are detected, normals mostly pass.
+#[test]
+fn tennessee_monitoring_pipeline() {
+    let plant = TennesseePlant::default();
+    let train_data = plant.training(5000, 42);
+    let bw = fastsvdd::svdd::bandwidth::median_heuristic(&train_data, 10_000, 1);
+    let params = SvddParams::gaussian(bw, 0.005);
+    let cfg = SamplingConfig { sample_size: 42, ..Default::default() };
+    let model = SamplingTrainer::new(params, cfg).train(&train_data, 7).unwrap().model;
+    let scorer = Scorer::native(&model);
+
+    let normal = plant.simulate(2000, None, 77);
+    let fa = scorer
+        .label_batch(&normal)
+        .unwrap()
+        .iter()
+        .filter(|&&o| o)
+        .count();
+    assert!(fa < 200, "false alarm rate too high: {fa}/2000");
+
+    // a strong step fault must be flagged most of the time
+    let faulty = plant.simulate(500, Some(1), 78);
+    let detected = scorer
+        .label_batch(&faulty)
+        .unwrap()[100..]
+        .iter()
+        .filter(|&&o| o)
+        .count();
+    assert!(detected > 200, "step fault barely detected: {detected}/400");
+}
+
+/// The two prior-art baselines produce full-quality models (they are
+/// *slow*, not wrong — the paper's comparison).
+#[test]
+fn baselines_match_full_quality() {
+    let data = Banana::default().generate(3000, 4);
+    let params = SvddParams::gaussian(0.35, 0.001);
+    let full = train_full(&data, &params).unwrap().model;
+    let luo = train_luo(&data, &params, &LuoConfig::default()).unwrap();
+    let kim = train_kim(&data, &params, &KimConfig::default()).unwrap();
+    for (name, m) in [("luo", &luo.model), ("kim", &kim.model)] {
+        let rel = (m.r2() - full.r2()).abs() / full.r2();
+        assert!(rel < 0.1, "{name} R^2 off by {rel}");
+    }
+    assert!(luo.scoring_passes >= 1);
+}
+
+/// Config-driven run: the launcher workflow in library form.
+#[test]
+fn config_driven_training() {
+    let cfg = RunConfig::from_json_text(
+        r#"{"dataset": "banana", "rows": 2000, "bandwidth": 0.35,
+            "outlier_fraction": 0.001, "method": "sampling",
+            "sample_size": 6, "seed": 11}"#,
+    )
+    .unwrap();
+    assert_eq!(cfg.method, Method::Sampling);
+    let data = Banana::default().generate(cfg.rows, cfg.seed);
+    let out = SamplingTrainer::new(cfg.params(), cfg.sampling())
+        .train(&data, cfg.seed)
+        .unwrap();
+    assert!(out.model.r2() > 0.5);
+}
+
+/// Polygon-study pipeline: ground truth from the polygon substrate,
+/// F1 of the trained description against it (Fig 14-16 inner loop).
+#[test]
+fn polygon_f1_pipeline() {
+    let poly = Polygon::random(10, 3.0, 5.0, 3);
+    let train_pts = poly.sample_interior(600, 4);
+    let params = SvddParams::gaussian(1.88, 0.01);
+    let full = train_full(&train_pts, &params).unwrap().model;
+    let ((x0, y0), (x1, y1)) = poly.bbox();
+    let grid = Grid { nx: 80, ny: 80, x0, x1, y0, y1 };
+    let truth = grid.labels_from(|x, y| poly.contains(x, y));
+    let inside = Scorer::native(&full).inside_batch(&grid.points()).unwrap();
+    let f1 = F1Score::compute(&truth, &inside);
+    assert!(f1.f1 > 0.8, "polygon description F1 only {}", f1.f1);
+}

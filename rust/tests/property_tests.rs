@@ -1,0 +1,284 @@
+//! Property-based tests over the core invariants, driven by the
+//! in-house `testutil::prop` framework (seeded, reproducible, failure
+//! messages carry the case seed).
+
+use fastsvdd::data::polygon::Polygon;
+use fastsvdd::distributed::message::Message;
+use fastsvdd::sampling::{ConvergenceCriteria, ConvergenceTracker};
+use fastsvdd::scoring::F1Score;
+use fastsvdd::svdd::smo::{solve, DenseKernel, SmoOptions};
+use fastsvdd::svdd::{Kernel, SvddParams};
+use fastsvdd::testutil::prop::{forall, Gen};
+use fastsvdd::util::json::Json;
+use fastsvdd::util::matrix::Matrix;
+use fastsvdd::util::stats::{quantile, BoxStats};
+
+fn random_points(g: &mut Gen, n: usize, m: usize, scale: f64) -> Matrix {
+    let rows: Vec<Vec<f64>> = (0..n)
+        .map(|_| (0..m).map(|_| g.normal() * scale).collect())
+        .collect();
+    Matrix::from_rows(&rows).unwrap()
+}
+
+/// SMO solutions satisfy the dual feasibility + eps-KKT conditions for
+/// arbitrary point clouds, bandwidths and box bounds.
+#[test]
+fn prop_smo_kkt_and_feasibility() {
+    forall("smo kkt", 40, |g| {
+        let n = g.usize_in(3, 40);
+        let m = g.usize_in(1, 5);
+        let bw = g.f64_in(0.2, 3.0);
+        let f = g.f64_in(0.02, 0.5);
+        let data = random_points(g, n, m, 1.5);
+        let c = 1.0 / (n as f64 * f);
+        let kernel = Kernel::gaussian(bw);
+        let mut kp = DenseKernel::from_data(&data, kernel);
+        let sol = solve(&mut kp, c, &SmoOptions::default()).unwrap();
+
+        // feasibility
+        let sum: f64 = sol.alpha.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-9, "sum={sum}");
+        for &a in &sol.alpha {
+            assert!((-1e-12..=c + 1e-9).contains(&a), "alpha={a} outside [0,{c}]");
+        }
+        // R^2 sane
+        assert!(sol.r2 >= 0.0 && sol.r2 <= 2.0, "r2={}", sol.r2);
+        // eps-KKT via the final gap
+        assert!(sol.gap < 1e-4, "gap={}", sol.gap);
+    });
+}
+
+/// Training-point classification respects the f-budget: at most ~f*n
+/// points end up strictly outside (plus solver slack).
+#[test]
+fn prop_outlier_budget() {
+    forall("outlier budget", 15, |g| {
+        let n = g.usize_in(50, 250);
+        let f = *g.choose(&[0.05, 0.1, 0.2]);
+        let data = random_points(g, n, 2, 1.0);
+        let params = SvddParams::gaussian(g.f64_in(0.5, 2.0), f);
+        let model = fastsvdd::svdd::train(&data, &params).unwrap();
+        // Outside points carry alpha = C (eq. 10) and sum(alpha) = 1, so
+        // in exact arithmetic #outside <= 1/C = n*f. The solver is
+        // eps-KKT (gap < 1e-6), which lets near-boundary points sit
+        // O(tol) outside — use a kernel-scale slack, not 1e-9.
+        let outside = (0..n)
+            .filter(|&i| model.dist2(data.row(i)) > model.r2() + 1e-4)
+            .count();
+        let budget = (n as f64 * f).ceil() as usize + 1;
+        assert!(outside <= budget, "{outside} outside > budget {budget}");
+    });
+}
+
+/// Scoring identity: dist2 is invariant under permutation of the SV
+/// rows (the model is a set, not a sequence).
+#[test]
+fn prop_model_permutation_invariance() {
+    forall("sv permutation", 20, |g| {
+        let n = g.usize_in(20, 60);
+        let data = random_points(g, n, 3, 1.0);
+        let params = SvddParams::gaussian(1.0, 0.1);
+        let model = fastsvdd::svdd::train(&data, &params).unwrap();
+        let z: Vec<f64> = (0..3).map(|_| g.normal()).collect();
+        let d = model.dist2(&z);
+        // rebuild with rows reversed
+        let k = model.num_sv();
+        let rev_idx: Vec<usize> = (0..k).rev().collect();
+        let sv2 = model.support_vectors().gather(&rev_idx);
+        let alpha2: Vec<f64> = rev_idx.iter().map(|&i| model.alpha()[i]).collect();
+        let model2 = fastsvdd::svdd::SvddModel::new(
+            sv2,
+            alpha2,
+            model.kernel(),
+            model.r2(),
+            model.w(),
+        )
+        .unwrap();
+        assert!((model2.dist2(&z) - d).abs() < 1e-12);
+    });
+}
+
+/// The message codec is total on its domain: encode . decode == id.
+#[test]
+fn prop_message_codec_roundtrip() {
+    forall("message codec", 50, |g| {
+        let rows = g.usize_in(0, 12);
+        let cols = g.usize_in(1, 6);
+        let m = if rows == 0 {
+            Matrix::zeros(0, cols)
+        } else {
+            random_points(g, rows, cols, 100.0)
+        };
+        let msg = if g.bool() {
+            Message::Train {
+                shard: m,
+                bw: g.f64_in(1e-6, 1e6),
+                outlier_fraction: g.f64_in(0.0, 1.0),
+                sample_size: g.usize_in(0, 1 << 20) as u32,
+                max_iter: g.usize_in(0, 1 << 30) as u32,
+                seed: (g.usize_in(0, usize::MAX / 2)) as u64,
+            }
+        } else {
+            Message::TrainDone {
+                sv: m,
+                r2: g.normal() * 10.0,
+                iterations: g.usize_in(0, 10_000) as u32,
+                converged: g.bool(),
+            }
+        };
+        let back = Message::decode(&msg.encode()).unwrap();
+        assert_eq!(msg, back);
+    });
+}
+
+/// JSON writer output always re-parses to the same value.
+#[test]
+fn prop_json_roundtrip() {
+    fn random_json(g: &mut Gen, depth: usize) -> Json {
+        let pick = if depth == 0 { g.usize_in(0, 3) } else { g.usize_in(0, 5) };
+        match pick {
+            0 => Json::Null,
+            1 => Json::Bool(g.bool()),
+            2 => Json::Num((g.normal() * 1e6).round() / 64.0),
+            3 => Json::Str(format!("s{}-\"q\"-\n-{}", g.usize_in(0, 99), g.usize_in(0, 99))),
+            4 => Json::Arr((0..g.usize_in(0, 4)).map(|_| random_json(g, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..g.usize_in(0, 4))
+                    .map(|i| (format!("k{i}"), random_json(g, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    forall("json roundtrip", 100, |g| {
+        let v = random_json(g, 3);
+        assert_eq!(Json::parse(&v.to_string()).unwrap(), v);
+        assert_eq!(Json::parse(&v.to_string_pretty()).unwrap(), v);
+    });
+}
+
+/// Random polygons: simple, area-consistent triangulation, interior
+/// samples contained (the Fig 13-16 substrate invariants).
+#[test]
+fn prop_polygon_invariants() {
+    forall("polygon invariants", 25, |g| {
+        let k = g.usize_in(3, 30);
+        let seed = g.usize_in(0, 1 << 30) as u64;
+        let p = Polygon::random(k, 3.0, 5.0, seed);
+        assert!(p.is_simple());
+        let tris = p.triangulate();
+        assert_eq!(tris.len(), p.num_vertices() - 2);
+        let tri_area: f64 = tris
+            .iter()
+            .map(|t| {
+                0.5 * ((t[1].0 - t[0].0) * (t[2].1 - t[0].1)
+                    - (t[1].1 - t[0].1) * (t[2].0 - t[0].0))
+                    .abs()
+            })
+            .sum();
+        assert!((tri_area - p.area()).abs() < 1e-6 * p.area());
+        let pts = p.sample_interior(50, seed ^ 1);
+        for i in 0..pts.rows() {
+            assert!(p.contains(pts.get(i, 0), pts.get(i, 1)));
+        }
+    });
+}
+
+/// Convergence tracker: converged() fires iff `t` consecutive stable
+/// observations occur, for arbitrary interleavings.
+#[test]
+fn prop_convergence_streaks() {
+    forall("convergence streaks", 50, |g| {
+        let t = g.usize_in(1, 6);
+        let mut tracker = ConvergenceTracker::new(ConvergenceCriteria {
+            eps_center: 1e-6,
+            eps_r2: 1e-6,
+            consecutive: t,
+            scale_floor: 0.0,
+        });
+        let mut streak = 0usize;
+        let mut r2 = 1.0;
+        tracker.observe(r2, &[1.0]);
+        let mut expect_converged = false;
+        for _ in 0..30 {
+            let stable = g.bool();
+            if !stable {
+                r2 += 1.0; // huge jump resets
+            }
+            tracker.observe(r2, &[1.0]);
+            streak = if stable { streak + 1 } else { 0 };
+            if streak >= t {
+                expect_converged = true;
+            }
+            assert_eq!(
+                tracker.converged(),
+                expect_converged,
+                "streak={streak} t={t}"
+            );
+            if expect_converged {
+                break;
+            }
+        }
+    });
+}
+
+/// F1 is bounded and symmetric under swapping prediction with truth.
+#[test]
+fn prop_f1_bounds_and_symmetry() {
+    forall("f1 bounds", 100, |g| {
+        let n = g.usize_in(1, 50);
+        let truth: Vec<bool> = (0..n).map(|_| g.bool()).collect();
+        let pred: Vec<bool> = (0..n).map(|_| g.bool()).collect();
+        let a = F1Score::compute(&truth, &pred);
+        assert!((0.0..=1.0).contains(&a.f1));
+        assert!((0.0..=1.0).contains(&a.precision));
+        assert!((0.0..=1.0).contains(&a.recall));
+        // F1 is symmetric in (truth, pred): swapping transposes FP/FN
+        let b = F1Score::compute(&pred, &truth);
+        assert!((a.f1 - b.f1).abs() < 1e-12);
+    });
+}
+
+/// Quantiles are monotone in q and bounded by min/max.
+#[test]
+fn prop_quantile_monotone() {
+    forall("quantile monotone", 50, |g| {
+        let n = g.usize_in(1, 60);
+        let xs = g.vec_f64(n, -100.0, 100.0);
+        let qs = [0.0, 0.1, 0.25, 0.5, 0.75, 0.9, 1.0];
+        let mut prev = f64::NEG_INFINITY;
+        for &q in &qs {
+            let v = quantile(&xs, q);
+            assert!(v >= prev);
+            prev = v;
+        }
+        let b = BoxStats::from(&xs);
+        assert!(b.min <= b.q1 && b.q1 <= b.median && b.median <= b.q3 && b.q3 <= b.max);
+        assert!(b.mean >= b.min - 1e-12 && b.mean <= b.max + 1e-12);
+    });
+}
+
+/// Matrix dedup/gather algebra: dedup is idempotent; gather(idx) keeps
+/// row content; vstack length adds.
+#[test]
+fn prop_matrix_algebra() {
+    forall("matrix algebra", 60, |g| {
+        let n = g.usize_in(1, 30);
+        let m = g.usize_in(1, 5);
+        // draw from a tiny value set to force duplicates
+        let rows: Vec<Vec<f64>> = (0..n)
+            .map(|_| (0..m).map(|_| *g.choose(&[0.0, 1.0, 2.0])).collect())
+            .collect();
+        let mat = Matrix::from_rows(&rows).unwrap();
+        let d1 = mat.dedup_rows();
+        let d2 = d1.dedup_rows();
+        assert_eq!(d1, d2, "dedup not idempotent");
+        assert!(d1.rows() <= mat.rows());
+        let idx: Vec<usize> = (0..g.usize_in(1, 10)).map(|_| g.usize_in(0, n - 1)).collect();
+        let gathered = mat.gather(&idx);
+        for (out_row, &src) in idx.iter().enumerate() {
+            assert_eq!(gathered.row(out_row), mat.row(src));
+        }
+        let stacked = mat.vstack(&d1).unwrap();
+        assert_eq!(stacked.rows(), mat.rows() + d1.rows());
+    });
+}

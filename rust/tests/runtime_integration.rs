@@ -1,0 +1,158 @@
+//! Integration: the PJRT runtime executing the AOT Pallas artifacts
+//! must agree with the native Rust scorer/kernel evaluation.
+//!
+//! These tests need `artifacts/` (run `make artifacts` first); they
+//! skip with a message when the manifest is missing so `cargo test`
+//! stays green on a fresh checkout.
+
+use std::path::{Path, PathBuf};
+
+use fastsvdd::data::shuttle::Shuttle;
+use fastsvdd::data::tennessee::TennesseePlant;
+use fastsvdd::data::{banana::Banana, donut::TwoDonut, Generator};
+use fastsvdd::runtime::SharedRuntime;
+use fastsvdd::sampling::{GramBackend, SamplingConfig, SamplingTrainer};
+use fastsvdd::scoring::Scorer;
+use fastsvdd::svdd::{train, Kernel, SvddParams};
+use fastsvdd::util::matrix::Matrix;
+
+fn artifact_dir() -> Option<PathBuf> {
+    let dir = std::env::var_os("FASTSVDD_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| {
+            Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+        });
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts at {} (run `make artifacts`)", dir.display());
+        None
+    }
+}
+
+#[test]
+fn xla_scorer_matches_native_m2() {
+    let Some(dir) = artifact_dir() else { return };
+    let rt = SharedRuntime::new(&dir).unwrap();
+    let data = Banana::default().generate(2000, 1);
+    let model = train(&data, &SvddParams::gaussian(0.35, 0.001)).unwrap();
+    let zs = Banana::default().generate(777, 2); // odd size: forces padding
+    let native = Scorer::native(&model).dist2_batch(&zs).unwrap();
+    let scorer = Scorer::xla(&model, &rt);
+    assert!(scorer.is_accelerated());
+    let xla = scorer.dist2_batch(&zs).unwrap();
+    assert_eq!(native.len(), xla.len());
+    for (i, (a, b)) in native.iter().zip(&xla).enumerate() {
+        assert!(
+            (a - b).abs() < 5e-5,
+            "row {i}: native={a} xla={b}"
+        );
+    }
+}
+
+#[test]
+fn xla_scorer_matches_native_m9_and_m41() {
+    let Some(dir) = artifact_dir() else { return };
+    let rt = SharedRuntime::new(&dir).unwrap();
+
+    // m=9 (shuttle-like)
+    let data = Shuttle.training(1500, 3);
+    let model = train(&data, &SvddParams::gaussian(8.0, 0.01)).unwrap();
+    let zs = Shuttle.scoring(500, 4).data;
+    let native = Scorer::native(&model).dist2_batch(&zs).unwrap();
+    let xla = Scorer::xla(&model, &rt).dist2_batch(&zs).unwrap();
+    for (a, b) in native.iter().zip(&xla) {
+        assert!((a - b).abs() < 5e-4, "m9: native={a} xla={b}");
+    }
+
+    // m=41 (TE-like)
+    let plant = TennesseePlant::default();
+    let data = plant.training(1200, 5);
+    let model = train(&data, &SvddParams::gaussian(12.0, 0.01)).unwrap();
+    let zs = plant.scoring(200, 200, 6).data;
+    let native = Scorer::native(&model).dist2_batch(&zs).unwrap();
+    let xla = Scorer::xla(&model, &rt).dist2_batch(&zs).unwrap();
+    for (a, b) in native.iter().zip(&xla) {
+        assert!((a - b).abs() < 5e-3, "m41: native={a} xla={b}");
+    }
+}
+
+#[test]
+fn gram_backend_matches_native_kernel() {
+    let Some(dir) = artifact_dir() else { return };
+    let rt = SharedRuntime::new(&dir).unwrap();
+    let kernel = Kernel::gaussian(0.7);
+    for n in [3, 17, 64] {
+        let data = TwoDonut::default().generate(n, 7);
+        let gram = rt.gram(&data, kernel).expect("bucket must cover n<=64, m=2");
+        assert_eq!(gram.len(), n * n);
+        for i in 0..n {
+            for j in 0..n {
+                let want = kernel.eval(data.row(i), data.row(j));
+                let got = gram[i * n + j];
+                assert!(
+                    (want - got).abs() < 1e-5,
+                    "K[{i},{j}]: native={want} xla={got}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn gram_backend_declines_oversized_or_unknown_shapes() {
+    let Some(dir) = artifact_dir() else { return };
+    let rt = SharedRuntime::new(&dir).unwrap();
+    let kernel = Kernel::gaussian(1.0);
+    // 65 rows exceeds the n=64 bucket
+    let big = TwoDonut::default().generate(65, 1);
+    assert!(rt.gram(&big, kernel).is_none());
+    // m=3 has no artifact
+    let odd = Matrix::from_rows(&[vec![0.0; 3], vec![1.0; 3]]).unwrap();
+    assert!(rt.gram(&odd, kernel).is_none());
+    // linear kernel is not covered
+    assert!(rt
+        .gram(&TwoDonut::default().generate(8, 2), Kernel::Linear)
+        .is_none());
+}
+
+#[test]
+fn sampling_trainer_via_xla_backend_matches_native() {
+    let Some(dir) = artifact_dir() else { return };
+    let rt = SharedRuntime::new(&dir).unwrap();
+    let data = Banana::default().generate(3000, 11);
+    let params = SvddParams::gaussian(0.35, 0.001);
+    let cfg = SamplingConfig { sample_size: 6, ..Default::default() };
+    let native = SamplingTrainer::new(params, cfg).train(&data, 99).unwrap();
+    let xla = SamplingTrainer::new(params, cfg)
+        .with_backend(&rt)
+        .train(&data, 99)
+        .unwrap();
+    // f32 gram vs f64 native: same trajectory, near-identical result
+    assert_eq!(native.iterations, xla.iterations);
+    assert!(
+        (native.model.r2() - xla.model.r2()).abs() < 1e-4,
+        "native={} xla={}",
+        native.model.r2(),
+        xla.model.r2()
+    );
+    // the runtime must actually have executed gram artifacts
+    let execs = rt.with(|r| r.exec_count("gram_n64_m2"));
+    assert!(execs > 0, "gram artifact never executed");
+}
+
+#[test]
+fn scorer_exec_counts_and_bucket_choice() {
+    let Some(dir) = artifact_dir() else { return };
+    let rt = SharedRuntime::new(&dir).unwrap();
+    let data = Banana::default().generate(500, 13);
+    let model = train(&data, &SvddParams::gaussian(0.35, 0.01)).unwrap();
+    let scorer = Scorer::xla(&model, &rt);
+    // 100 rows -> latency bucket (256)
+    scorer.dist2_batch(&Banana::default().generate(100, 1)).unwrap();
+    assert_eq!(rt.with(|r| r.exec_count("score_m2_s512_b256")), 1);
+    // 5000 rows -> one 4096 batch + one 256-padded tail... the tail
+    // (904 rows) exceeds 256 so it reuses the 4096 bucket
+    scorer.dist2_batch(&Banana::default().generate(5000, 2)).unwrap();
+    assert_eq!(rt.with(|r| r.exec_count("score_m2_s512_b4096")), 2);
+}
