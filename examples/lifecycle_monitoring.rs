@@ -1,0 +1,200 @@
+//! End-to-end model lifecycle on the Tennessee-Eastman-like plant:
+//! drift → warm-start retrain → versioned registry promote → zero-
+//! downtime hot-swap — the production loop the paper's conclusion
+//! motivates ("fast periodic training using large data sets").
+//!
+//! The loop exercised:
+//!   1. train v1 on normal operations, publish + promote it into a
+//!      content-addressed registry (`fastsvdd train --registry`),
+//!   2. serve v1 over TCP while background clients score continuously,
+//!   3. a `StreamingSvdd` drift monitor watches a stream whose
+//!      operating point has shifted (TE fault 1, a step disturbance)
+//!      and reports `Drifted`,
+//!   4. the `Lifecycle` driver retrains *warm* (SV* seeded from the
+//!      champion), publishes v2, promotes it and hot-swaps the serving
+//!      slot — the clients never see an error,
+//!   5. the operator lists the registry and rolls back to v1, again
+//!      without a restart.
+//!
+//! Run: `cargo run --release --example lifecycle_monitoring`
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use fastsvdd::data::tennessee::{TennesseePlant, DIM};
+use fastsvdd::registry::{Lifecycle, Registry};
+use fastsvdd::sampling::{SamplingConfig, StreamingConfig, StreamingSvdd};
+use fastsvdd::scoring::{BatchPolicy, ScoreClient, ScoreServer};
+use fastsvdd::svdd::bandwidth::median_heuristic;
+use fastsvdd::svdd::SvddParams;
+use fastsvdd::util::timer::fmt_duration;
+
+fn main() -> fastsvdd::Result<()> {
+    let plant = TennesseePlant::default();
+    let registry_dir = std::env::temp_dir().join(format!(
+        "fastsvdd_lifecycle_demo_{}",
+        std::process::id()
+    ));
+    std::fs::remove_dir_all(&registry_dir).ok();
+
+    // ---- v1: train on normal operations, publish + promote ----
+    let normal = plant.training(8_000, 42);
+    let bw = median_heuristic(&normal, 8_000, 1);
+    let params = SvddParams::gaussian(bw, 0.005);
+    let cfg = SamplingConfig { sample_size: DIM + 1, ..Default::default() };
+    let mut lifecycle = Lifecycle::new(Registry::open(&registry_dir)?, params, cfg);
+    let v1 = lifecycle.retrain(&normal, 7)?;
+    println!(
+        "v1 {} promoted: R^2={:.4}, {} iterations (cold start), {}",
+        v1.id,
+        v1.r2,
+        v1.iterations,
+        fmt_duration(v1.seconds)
+    );
+
+    // ---- serve the champion; hand the slot to the lifecycle ----
+    let (_, champion) = lifecycle.registry().champion_model()?.expect("just promoted");
+    let server = ScoreServer::spawn(
+        "127.0.0.1:0",
+        champion,
+        BatchPolicy::default(),
+        |m, zs| Ok(m.dist2_batch(zs)),
+    )?;
+    lifecycle = lifecycle
+        .with_slot(server.slot())
+        .with_metrics(server.metrics.clone());
+    println!("serving on {} (hot-swappable slot attached)", server.addr());
+
+    // ---- background clients score the live stream throughout ----
+    let stop = Arc::new(AtomicBool::new(false));
+    let errors = Arc::new(AtomicU64::new(0));
+    let replies = Arc::new(AtomicU64::new(0));
+    let addr = server.addr();
+    let clients: Vec<_> = (0..2)
+        .map(|c| {
+            let stop = stop.clone();
+            let errors = errors.clone();
+            let replies = replies.clone();
+            let plant = plant.clone();
+            std::thread::spawn(move || {
+                let mut client = match ScoreClient::connect(addr) {
+                    Ok(cl) => cl,
+                    Err(_) => {
+                        errors.fetch_add(1, Ordering::Relaxed);
+                        return;
+                    }
+                };
+                let mut seed = 900 + c as u64;
+                while !stop.load(Ordering::Relaxed) {
+                    let zs = plant.simulate(16, None, seed);
+                    seed += 1;
+                    match client.score(&zs) {
+                        Ok(_) => {
+                            replies.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(_) => {
+                            errors.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+                client.close();
+            })
+        })
+        .collect();
+
+    // ---- drift monitor sees the operating point shift (fault 1) ----
+    let monitor_cfg = StreamingConfig {
+        window: 256,
+        sample_size: DIM + 1,
+        drift_threshold: 0.05,
+        drift_patience: 2,
+    };
+    let mut monitor = StreamingSvdd::new(params, monitor_cfg, 11);
+    let _ = monitor.push_batch(&plant.simulate(1_024, None, 77))?;
+    println!("\nstreaming a step-disturbance regime (TE fault 1) into the monitor...");
+    let drifted_stream = plant.simulate(4_096, Some(1), 78);
+    let mut v2 = None;
+    for i in 0..drifted_stream.rows() {
+        if let Some(status) = monitor.push(drifted_stream.row(i))? {
+            println!("  window update {:2}: {status:?}", monitor.updates());
+            if let Some(report) = lifecycle.observe(status, &drifted_stream, 13)? {
+                v2 = Some(report);
+                break;
+            }
+        }
+    }
+    let v2 = match v2 {
+        Some(report) => report,
+        None => {
+            println!("(monitor stayed stable; retraining on the new regime anyway)");
+            lifecycle.retrain(&drifted_stream, 13)?
+        }
+    };
+    // judge future windows against the fresh champion
+    monitor.adopt_model(lifecycle.registry().load(&v2.id)?)?;
+    println!(
+        "v2 {} promoted + hot-swapped (epoch {:?}): R^2={:.4}, {} iterations ({} start), {}",
+        v2.id,
+        v2.epoch,
+        v2.r2,
+        v2.iterations,
+        if v2.warm_start { "warm" } else { "cold" },
+        fmt_duration(v2.seconds)
+    );
+    println!(
+        "warm-start retrain: {} iterations vs {} for the cold start",
+        v2.iterations, v1.iterations
+    );
+
+    // let the clients score against v2, then stop them
+    std::thread::sleep(Duration::from_millis(200));
+    stop.store(true, Ordering::Relaxed);
+    for t in clients {
+        t.join().ok();
+    }
+    println!(
+        "clients across the swap: {} replies, {} errors (zero-downtime claim)",
+        replies.load(Ordering::Relaxed),
+        errors.load(Ordering::Relaxed)
+    );
+
+    let mut probe = ScoreClient::connect(addr)?;
+    let info = probe.model_info()?;
+    println!(
+        "server reports model {} (epoch {}), R^2={:.4}",
+        info.version, info.epoch, info.r2
+    );
+
+    // ---- the operator's view: registry list + rollback ----
+    println!(
+        "\nregistry contents (= fastsvdd registry list --dir {}):",
+        registry_dir.display()
+    );
+    let champ = lifecycle.registry().champion()?.map(|e| e.id);
+    for e in lifecycle.registry().list()? {
+        println!(
+            "  {} {} R^2={:.4} #SV={} rows={} iters={} {}",
+            e.id,
+            if Some(&e.id) == champ.as_ref() { "*" } else { " " },
+            e.meta.r2,
+            e.meta.num_sv,
+            e.meta.rows,
+            e.meta.iterations,
+            if e.meta.warm_start { "warm" } else { "cold" }
+        );
+    }
+
+    let back = lifecycle.rollback()?;
+    let info = probe.model_info()?;
+    println!(
+        "\nrolled back to {back}; server now reports {} (epoch {}) — no restart",
+        info.version, info.epoch
+    );
+    probe.close();
+
+    println!("\nmetrics: {}", server.metrics.render());
+    drop(server);
+    std::fs::remove_dir_all(&registry_dir).ok();
+    Ok(())
+}

@@ -1,0 +1,151 @@
+//! Lifecycle perf: what a model hot-swap costs the serve path, and what
+//! a warm start saves the retrain path.
+//!
+//! - p50/p99 single-request score latency against a live `ScoreServer`,
+//!   first with a quiet model slot, then while a swap storm replaces
+//!   the served model every ~500us — the zero-downtime claim, measured;
+//! - cold-start vs warm-start sampling retrain wall time + iteration
+//!   count on the banana set (the drift-retrain path of
+//!   `registry::Lifecycle`).
+//!
+//! Emits the usual table plus `results/BENCH_perf_hotswap.json`.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use fastsvdd::bench::{emit, emit_text, measure_once, scaled};
+use fastsvdd::data::{banana::Banana, Generator};
+use fastsvdd::sampling::{SamplingConfig, SamplingTrainer};
+use fastsvdd::scoring::{BatchPolicy, ScoreClient, ScoreServer};
+use fastsvdd::svdd::SvddParams;
+use fastsvdd::util::json::{num, obj, s, Json};
+use fastsvdd::util::stats::quantile;
+use fastsvdd::util::tables::{f, Table};
+use fastsvdd::util::timer::Stopwatch;
+
+fn main() {
+    let rows = scaled(20_000, 2_000);
+    let data = Banana::default().generate(rows, 42);
+    let params = SvddParams::gaussian(0.35, 0.001);
+    let cfg = SamplingConfig { sample_size: 6, ..Default::default() };
+    let trainer = SamplingTrainer::new(params, cfg);
+
+    // ---- retrain: cold vs warm (the Lifecycle drift path) ----
+    let (cold, t_cold) = measure_once(|| trainer.train(&data, 7).unwrap());
+    let (warm, t_warm) = measure_once(|| trainer.train_warm(&data, 13, &cold.model).unwrap());
+    assert!(warm.warm_start && !cold.warm_start);
+
+    // a second model (shifted regime) to swap against
+    let mut shifted = Banana::default().generate(rows.min(4_000), 2);
+    for i in 0..shifted.rows() {
+        shifted.row_mut(i)[0] += 6.0;
+    }
+    let other = trainer.train(&shifted, 5).unwrap().model;
+
+    // ---- serve-path latency across swaps ----
+    let policy = BatchPolicy {
+        target_batch: 64,
+        linger: Duration::from_micros(200),
+        capacity: 1 << 16,
+    };
+    let server = ScoreServer::spawn("127.0.0.1:0", cold.model.clone(), policy, |m, zs| {
+        Ok(m.dist2_batch(zs))
+    })
+    .unwrap();
+    let mut client = ScoreClient::connect(server.addr()).unwrap();
+    let zs = Banana::default().generate(8, 9);
+    let requests = scaled(400, 50);
+
+    let lap = |client: &mut ScoreClient, n: usize| -> Vec<f64> {
+        let mut lat = Vec::with_capacity(n);
+        for _ in 0..n {
+            let sw = Stopwatch::start();
+            client.score(&zs).unwrap();
+            lat.push(sw.elapsed_secs());
+        }
+        lat
+    };
+    // warm the connection + batcher, then the quiet baseline
+    lap(&mut client, requests / 10);
+    let quiet = lap(&mut client, requests);
+
+    // swap storm: the slot flips models every ~500us while we measure
+    let stop = Arc::new(AtomicBool::new(false));
+    let slot = server.slot();
+    let swapper = {
+        let stop = stop.clone();
+        let slot = slot.clone();
+        let (a, b) = (cold.model.clone(), other.clone());
+        std::thread::spawn(move || {
+            let mut flip = false;
+            while !stop.load(Ordering::Relaxed) {
+                slot.swap(if flip { a.clone() } else { b.clone() }).unwrap();
+                flip = !flip;
+                std::thread::sleep(Duration::from_micros(500));
+            }
+        })
+    };
+    let storm = lap(&mut client, requests);
+    stop.store(true, Ordering::Relaxed);
+    swapper.join().unwrap();
+    let swaps = slot.epoch();
+    client.close();
+
+    let p = |xs: &[f64], q: f64| quantile(xs, q) * 1e6; // -> us
+    let mut t = Table::new(
+        "Perf: hot-swap serving + warm-start retrain",
+        &["path", "p50_us", "p99_us", "notes"],
+    );
+    t.row(vec![
+        format!("score 8 rows, quiet slot ({requests} reqs)"),
+        f(p(&quiet, 0.5), 1),
+        f(p(&quiet, 0.99), 1),
+        "-".into(),
+    ]);
+    t.row(vec![
+        format!("score 8 rows, swap storm ({requests} reqs)"),
+        f(p(&storm, 0.5), 1),
+        f(p(&storm, 0.99), 1),
+        format!("{swaps} swaps, zero errors"),
+    ]);
+    t.row(vec![
+        "cold sampling retrain".into(),
+        f(t_cold * 1e3, 1),
+        "-".into(),
+        format!("{} iterations (ms in p50 col)", cold.iterations),
+    ]);
+    t.row(vec![
+        "warm sampling retrain".into(),
+        f(t_warm * 1e3, 1),
+        "-".into(),
+        format!(
+            "{} iterations, {:.2}x faster (ms in p50 col)",
+            warm.iterations,
+            t_cold / t_warm
+        ),
+    ]);
+    emit("perf_hotswap", &t);
+
+    let json = obj(vec![
+        ("bench", s("perf_hotswap")),
+        ("rows", num(rows as f64)),
+        ("requests", num(requests as f64)),
+        ("p50_quiet_us", num(p(&quiet, 0.5))),
+        ("p99_quiet_us", num(p(&quiet, 0.99))),
+        ("p50_swap_us", num(p(&storm, 0.5))),
+        ("p99_swap_us", num(p(&storm, 0.99))),
+        ("swaps_during_storm", num(swaps as f64)),
+        ("score_errors", num(0.0)),
+        ("cold_retrain_ms", num(t_cold * 1e3)),
+        ("warm_retrain_ms", num(t_warm * 1e3)),
+        ("cold_iterations", num(cold.iterations as f64)),
+        ("warm_iterations", num(warm.iterations as f64)),
+        ("warm_speedup", num(t_cold / t_warm)),
+        ("cold_r2", num(cold.model.r2())),
+        ("warm_r2", num(warm.model.r2())),
+        ("converged", Json::Bool(cold.converged && warm.converged)),
+    ]);
+    emit_text("BENCH_perf_hotswap.json", &json.to_string_pretty());
+    println!("wrote results/BENCH_perf_hotswap.json");
+}

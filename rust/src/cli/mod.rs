@@ -6,16 +6,20 @@ use std::collections::BTreeMap;
 
 use crate::error::{Error, Result};
 
-/// Parsed arguments: one subcommand + options.
+/// Parsed arguments: command (+ optional action) + options.
 #[derive(Clone, Debug, Default)]
 pub struct Args {
     pub command: String,
+    /// Second positional, for verbs with actions
+    /// (`fastsvdd registry list|promote|rollback|gc`). Empty otherwise.
+    pub action: String,
     opts: BTreeMap<String, String>,
     flags: Vec<String>,
 }
 
 impl Args {
-    /// Parse `argv[1..]`. The first non-flag token is the subcommand.
+    /// Parse `argv[1..]`. The first non-flag token is the command, the
+    /// second (if any) the action; a third positional is an error.
     pub fn parse(argv: &[String]) -> Result<Args> {
         let mut args = Args::default();
         let mut it = argv.iter().peekable();
@@ -34,6 +38,8 @@ impl Args {
                 }
             } else if args.command.is_empty() {
                 args.command = tok.clone();
+            } else if args.action.is_empty() {
+                args.action = tok.clone();
             } else {
                 return Err(Error::Config(format!("unexpected positional '{tok}'")));
             }
@@ -108,7 +114,9 @@ COMMANDS:
     grid         Score a 200x200 grid, write a PGM + agreement stats
     worker       Run a TCP worker daemon for distributed training
     serve        Run a TCP scoring server (dynamic batching over the
-                 native or XLA engine)
+                 native or XLA engine; hot-swappable model)
+    registry     Manage a versioned model registry
+                 (list | promote | rollback | gc)
     artifacts    Inspect the AOT artifact manifest
     help         Show this help
 
@@ -124,6 +132,8 @@ COMMON OPTIONS (train):
     --seed <u64>              RNG seed
     --out <model.json>        save the trained model
     --trace <csv>             write the R^2 iteration trace (Fig 7)
+    --registry <dir>          publish the trained model to a registry
+    --promote                 also promote it to champion
 
 score:
     --model <model.json> --data <name> --rows <n> [--xla] [--artifacts <dir>]
@@ -134,11 +144,27 @@ worker:
 serve:
     --model <model.json> --listen <addr:port> [--xla] [--batch <rows>]
     [--linger-ms <ms>]
+    --registry <dir>          serve the registry champion instead of a file
+    --watch                   poll the registry; hot-swap on promote
+                              (zero dropped connections)
+    --watch-interval-ms <ms>  champion poll interval (default 1000)
+    --allow-remote-swap       accept the unauthenticated v2 SwapModel
+                              frame from clients (off by default)
+
+registry (directory layout: manifest.json + models/v-<16 hex>.json,
+content-addressed; see src/registry/):
+    list      --dir <dir>                    all versions + champion marker
+    promote   --dir <dir> --version <v-...>  make a version the champion
+    rollback  --dir <dir>                    restore the previous champion
+    gc        --dir <dir> [--keep <n>]       prune old versions (default 5)
 
 EXAMPLES:
     fastsvdd train --data banana --rows 11016 --method sampling --sample-size 6
     fastsvdd train --data two-donut --rows 1333334 --method distributed --workers 8
     fastsvdd score --model m.json --data shuttle --rows 10000 --xla
+    fastsvdd train --data tennessee --rows 20000 --registry reg/ --promote
+    fastsvdd serve --registry reg/ --watch --listen 0.0.0.0:7800
+    fastsvdd registry list --dir reg/
 ";
 
 #[cfg(test)]
@@ -180,8 +206,21 @@ mod tests {
     }
 
     #[test]
-    fn double_positional_rejected() {
-        let argv: Vec<String> = ["train", "extra"].iter().map(|s| s.to_string()).collect();
+    fn action_positional_parsed() {
+        let a = parse(&["registry", "promote", "--dir", "reg", "--version", "v-1"]);
+        assert_eq!(a.command, "registry");
+        assert_eq!(a.action, "promote");
+        assert_eq!(a.get("dir"), Some("reg"));
+        let b = parse(&["train"]);
+        assert!(b.action.is_empty());
+    }
+
+    #[test]
+    fn triple_positional_rejected() {
+        let argv: Vec<String> = ["registry", "list", "extra"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
         assert!(Args::parse(&argv).is_err());
     }
 

@@ -11,9 +11,25 @@ use crate::svdd::trainer::SvddParams;
 use crate::svdd::Kernel;
 use crate::util::matrix::Matrix;
 
-/// Protocol version — bumped on any frame-layout change; mismatches are
-/// rejected at Hello time.
-pub const PROTOCOL_VERSION: u32 = 1;
+/// Protocol version — bumped on any frame-layout or vocabulary change.
+/// v2 added the model-lifecycle frames (`ModelInfoRequest`/`ModelInfo`/
+/// `SwapModel`/`SwapAck`); every v1 frame is encoded identically, so v2
+/// servers still speak to v1 clients (see [`negotiate`]).
+pub const PROTOCOL_VERSION: u32 = 2;
+
+/// Oldest peer version this build still understands.
+pub const MIN_PROTOCOL_VERSION: u32 = 1;
+
+/// Version negotiation at Hello time: the session runs at the lower of
+/// the two versions, provided the peer is not older than
+/// [`MIN_PROTOCOL_VERSION`]. `None` means the peer must be rejected.
+pub fn negotiate(peer_version: u32) -> Option<u32> {
+    if peer_version < MIN_PROTOCOL_VERSION {
+        None
+    } else {
+        Some(peer_version.min(PROTOCOL_VERSION))
+    }
+}
 
 /// Frames exchanged between controller and worker.
 #[derive(Clone, Debug, PartialEq)]
@@ -45,7 +61,36 @@ pub enum Message {
     /// Client -> scoring server: score these observations.
     ScoreRequest { rows: Matrix },
     /// Scoring server -> client: dist^2 per row + the model threshold.
+    /// `r2` is always the threshold of the model that scored *this*
+    /// batch, so a reply is internally consistent across a hot-swap.
     ScoreReply { dist2: Vec<f64>, r2: f64 },
+    /// Client -> scoring server (v2): describe the active model.
+    ModelInfoRequest,
+    /// Scoring server -> client (v2): active model identity + stats.
+    /// `version` is the content-addressed id ([`content_id`]); `epoch`
+    /// counts hot-swaps since the server started.
+    ///
+    /// [`content_id`]: crate::svdd::model::SvddModel::content_id
+    ModelInfo {
+        version: String,
+        r2: f64,
+        num_sv: u32,
+        dim: u32,
+        epoch: u64,
+    },
+    /// Client -> scoring server (v2): hot-swap the active model. The
+    /// payload is the model's JSON (`SvddModel::to_json`) — in-flight
+    /// batches finish on the old model, later batches use the new one.
+    SwapModel { model_json: String },
+    /// Scoring server -> client (v2): swap verdict. On rejection
+    /// (`swapped == false`) `epoch`/`r2` describe the unchanged active
+    /// model and `reason` says why.
+    SwapAck {
+        epoch: u64,
+        swapped: bool,
+        r2: f64,
+        reason: String,
+    },
 }
 
 impl Message {
@@ -81,6 +126,10 @@ impl Message {
             Message::Shutdown => 5,
             Message::ScoreRequest { .. } => 6,
             Message::ScoreReply { .. } => 7,
+            Message::ModelInfoRequest => 8,
+            Message::ModelInfo { .. } => 9,
+            Message::SwapModel { .. } => 10,
+            Message::SwapAck { .. } => 11,
         }
     }
 
@@ -118,6 +167,23 @@ impl Message {
                     put_f64(&mut b, v);
                 }
                 put_f64(&mut b, *r2);
+            }
+            Message::ModelInfoRequest => {}
+            Message::ModelInfo { version, r2, num_sv, dim, epoch } => {
+                put_bytes(&mut b, version.as_bytes());
+                put_f64(&mut b, *r2);
+                put_u32(&mut b, *num_sv);
+                put_u32(&mut b, *dim);
+                put_u64(&mut b, *epoch);
+            }
+            Message::SwapModel { model_json } => {
+                put_bytes(&mut b, model_json.as_bytes());
+            }
+            Message::SwapAck { epoch, swapped, r2, reason } => {
+                put_u64(&mut b, *epoch);
+                b.push(*swapped as u8);
+                put_f64(&mut b, *r2);
+                put_bytes(&mut b, reason.as_bytes());
             }
         }
         b
@@ -160,6 +226,23 @@ impl Message {
                 }
                 Message::ScoreReply { dist2, r2: c.f64()? }
             }
+            8 => Message::ModelInfoRequest,
+            9 => Message::ModelInfo {
+                version: String::from_utf8_lossy(&c.bytes()?).into_owned(),
+                r2: c.f64()?,
+                num_sv: c.u32()?,
+                dim: c.u32()?,
+                epoch: c.u64()?,
+            },
+            10 => Message::SwapModel {
+                model_json: String::from_utf8_lossy(&c.bytes()?).into_owned(),
+            },
+            11 => Message::SwapAck {
+                epoch: c.u64()?,
+                swapped: c.u8()? != 0,
+                r2: c.f64()?,
+                reason: String::from_utf8_lossy(&c.bytes()?).into_owned(),
+            },
             t => return Err(Error::Distributed(format!("unknown tag {t}"))),
         };
         if c.pos != buf.len() {
@@ -309,6 +392,27 @@ mod tests {
             Message::Shutdown,
             Message::ScoreRequest { rows: sample_matrix() },
             Message::ScoreReply { dist2: vec![0.25, 1.5, -0.0], r2: 0.9 },
+            Message::ModelInfoRequest,
+            Message::ModelInfo {
+                version: "v-00f3a9c2deadbeef".into(),
+                r2: 0.87,
+                num_sv: 23,
+                dim: 41,
+                epoch: 5,
+            },
+            Message::SwapModel { model_json: r#"{"format":"fastsvdd-model-v1"}"#.into() },
+            Message::SwapAck {
+                epoch: 6,
+                swapped: true,
+                r2: 0.91,
+                reason: String::new(),
+            },
+            Message::SwapAck {
+                epoch: 6,
+                swapped: false,
+                r2: 0.91,
+                reason: "dim mismatch 🙅".into(),
+            },
         ];
         for m in msgs {
             let enc = m.encode();
@@ -362,6 +466,18 @@ mod tests {
     #[test]
     fn unknown_tag_rejected() {
         assert!(Message::decode(&[99]).is_err());
+    }
+
+    #[test]
+    fn negotiation_is_backward_compatible() {
+        // a v1 peer keeps working at v1
+        assert_eq!(negotiate(1), Some(1));
+        // same-version peers run at the current version
+        assert_eq!(negotiate(PROTOCOL_VERSION), Some(PROTOCOL_VERSION));
+        // a newer peer is capped at our version, never rejected
+        assert_eq!(negotiate(PROTOCOL_VERSION + 5), Some(PROTOCOL_VERSION));
+        // prehistoric peers are rejected
+        assert_eq!(negotiate(MIN_PROTOCOL_VERSION.saturating_sub(1)), None);
     }
 
     #[test]

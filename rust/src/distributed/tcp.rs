@@ -16,7 +16,7 @@ use crate::util::rng::Xoshiro256;
 use rand_core::RngCore;
 
 use super::controller::{combine, shard, DistributedConfig, DistributedOutcome, WorkerReport};
-use super::message::{Message, PROTOCOL_VERSION};
+use super::message::{negotiate, Message, PROTOCOL_VERSION};
 
 /// A running worker server (owns its listener thread).
 pub struct WorkerServer {
@@ -76,16 +76,16 @@ impl Drop for WorkerServer {
 fn handle_connection(mut stream: TcpStream, stop: &AtomicBool) -> Result<()> {
     // handshake
     match Message::read_from(&mut stream)? {
-        Message::Hello { version } if version == PROTOCOL_VERSION => {
-            Message::HelloAck { version: PROTOCOL_VERSION }.write_to(&mut stream)?;
-        }
-        Message::Hello { version } => {
-            Message::TrainFailed {
-                reason: format!("version mismatch: {version} != {PROTOCOL_VERSION}"),
+        Message::Hello { version } => match negotiate(version) {
+            Some(v) => Message::HelloAck { version: v }.write_to(&mut stream)?,
+            None => {
+                Message::TrainFailed {
+                    reason: format!("peer version {version} too old (< min supported)"),
+                }
+                .write_to(&mut stream)?;
+                return Err(Error::Distributed("handshake version mismatch".into()));
             }
-            .write_to(&mut stream)?;
-            return Err(Error::Distributed("handshake version mismatch".into()));
-        }
+        },
         other => {
             return Err(Error::Distributed(format!("expected Hello, got {other:?}")));
         }
@@ -153,7 +153,7 @@ pub fn train_tcp_cluster(
                     let mut stream = TcpStream::connect(addr)?;
                     Message::Hello { version: PROTOCOL_VERSION }.write_to(&mut stream)?;
                     match Message::read_from(&mut stream)? {
-                        Message::HelloAck { version } if version == PROTOCOL_VERSION => {}
+                        Message::HelloAck { version } if negotiate(version).is_some() => {}
                         other => {
                             return Err(Error::Distributed(format!(
                                 "bad handshake reply: {other:?}"

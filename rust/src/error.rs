@@ -1,38 +1,69 @@
 //! Crate-wide error type.
+//!
+//! Hand-rolled `Display`/`Error` impls (the offline build vendors no
+//! proc-macro crates, so no `thiserror`).
+
+use std::fmt;
 
 /// All fallible public APIs in this crate return [`Result<T>`].
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum Error {
     /// Invalid user input (bad config value, empty data set, ...).
-    #[error("invalid input: {0}")]
     InvalidInput(String),
 
     /// The QP solver failed to make progress / converge.
-    #[error("solver failure: {0}")]
     Solver(String),
 
     /// AOT artifact registry / PJRT runtime problems.
-    #[error("runtime: {0}")]
     Runtime(String),
 
     /// Distributed protocol errors (framing, version, channel death).
-    #[error("distributed: {0}")]
     Distributed(String),
 
     /// Configuration file / CLI parsing problems.
-    #[error("config: {0}")]
     Config(String),
 
     /// JSON parse errors from the mini parser.
-    #[error("json: {0}")]
     Json(String),
 
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    /// Model registry problems (missing version, corrupt manifest, ...).
+    Registry(String),
+
+    Io(std::io::Error),
 
     /// Errors bubbled out of the `xla` crate (PJRT).
-    #[error("xla: {0}")]
     Xla(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::InvalidInput(m) => write!(f, "invalid input: {m}"),
+            Error::Solver(m) => write!(f, "solver failure: {m}"),
+            Error::Runtime(m) => write!(f, "runtime: {m}"),
+            Error::Distributed(m) => write!(f, "distributed: {m}"),
+            Error::Config(m) => write!(f, "config: {m}"),
+            Error::Json(m) => write!(f, "json: {m}"),
+            Error::Registry(m) => write!(f, "registry: {m}"),
+            Error::Io(e) => write!(f, "{e}"),
+            Error::Xla(m) => write!(f, "xla: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl From<xla::Error> for Error {
@@ -47,5 +78,25 @@ impl Error {
     /// Shorthand used all over the crate.
     pub fn invalid(msg: impl Into<String>) -> Self {
         Error::InvalidInput(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_prefixes_match_variants() {
+        assert_eq!(Error::invalid("x").to_string(), "invalid input: x");
+        assert_eq!(Error::Registry("gone".into()).to_string(), "registry: gone");
+        assert_eq!(Error::Json("bad".into()).to_string(), "json: bad");
+    }
+
+    #[test]
+    fn io_errors_are_transparent() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "missing");
+        let e: Error = io.into();
+        assert_eq!(e.to_string(), "missing");
+        assert!(std::error::Error::source(&e).is_some());
     }
 }

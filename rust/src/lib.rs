@@ -16,6 +16,34 @@
 //! Python never runs on the train/serve path: after `make artifacts`
 //! the Rust binary is self-contained.
 //!
+//! ## Model lifecycle (drift → warm retrain → promote → swap)
+//!
+//! Because a sampling retrain is cheap, the system is built to retrain
+//! *continuously* in production. The [`registry`] subsystem provides
+//! the operational loop around the trainer:
+//!
+//! 1. [`sampling::StreamingSvdd`] maintains the master SV set online
+//!    and raises [`sampling::DriftStatus::Drifted`] when the
+//!    description moves;
+//! 2. [`registry::Lifecycle`] retrains on the recent window —
+//!    [`sampling::SamplingTrainer::train_warm`], seeding `SV*` from
+//!    the current champion's support vectors so the run converges in
+//!    far fewer iterations than a cold start;
+//! 3. the result is published to the content-addressed, versioned
+//!    [`registry::Registry`] (per-version `R^2`/`#SV`/sample-size/
+//!    iteration/fingerprint metadata; atomic promote and rollback);
+//! 4. the promoted model is hot-swapped into the serving
+//!    [`scoring::ModelSlot`] — in-flight batches finish on the old
+//!    model, new batches score on the new one, zero dropped
+//!    connections (remotely: the v2 `SwapModel`/`ModelInfo` frames of
+//!    [`distributed::message`]).
+//!
+//! See [`registry`] for the on-disk layout and the
+//! `fastsvdd registry list|promote|rollback|gc` / `fastsvdd serve
+//! --registry DIR --watch` CLI verbs, and
+//! `examples/lifecycle_monitoring.rs` for the end-to-end loop on the
+//! Tennessee-Eastman-like plant.
+//!
 //! ## Quick start
 //!
 //! ```no_run
@@ -41,6 +69,7 @@ pub mod data;
 pub mod distributed;
 pub mod error;
 pub mod metrics;
+pub mod registry;
 pub mod runtime;
 pub mod sampling;
 pub mod scoring;

@@ -13,11 +13,13 @@ use fastsvdd::data::{shape_by_name, LabeledData};
 use fastsvdd::distributed::tcp::{train_tcp_cluster, WorkerServer};
 use fastsvdd::distributed::{train_local_cluster, DistributedConfig};
 use fastsvdd::error::{Error, Result};
+use fastsvdd::registry::{sync_champion, Registry, VersionId, VersionMeta};
 use fastsvdd::runtime::SharedRuntime;
 use fastsvdd::sampling::SamplingTrainer;
 use fastsvdd::scoring::{F1Score, Scorer};
 use fastsvdd::svdd::SvddModel;
 use fastsvdd::util::matrix::Matrix;
+use fastsvdd::util::tables::{f, Table};
 use fastsvdd::util::timer::{fmt_duration, Stopwatch};
 
 fn main() {
@@ -30,12 +32,19 @@ fn main() {
 
 fn run(argv: &[String]) -> Result<()> {
     let args = Args::parse(argv)?;
+    if args.command != "registry" && !args.action.is_empty() {
+        return Err(Error::Config(format!(
+            "unexpected positional '{}'",
+            args.action
+        )));
+    }
     match args.command.as_str() {
         "train" => cmd_train(&args),
         "score" => cmd_score(&args),
         "grid" => cmd_grid(&args),
         "worker" => cmd_worker(&args),
         "serve" => cmd_serve(&args),
+        "registry" => cmd_registry(&args),
         "artifacts" => cmd_artifacts(&args),
         "" | "help" => {
             print!("{HELP}");
@@ -109,7 +118,8 @@ fn config_from_args(args: &Args) -> Result<RunConfig> {
 fn cmd_train(args: &Args) -> Result<()> {
     args.expect_only(&[
         "config", "data", "rows", "method", "bw", "f", "sample-size", "max-iter",
-        "workers", "seed", "out", "trace", "xla", "artifacts", "addrs",
+        "workers", "seed", "out", "trace", "xla", "artifacts", "addrs", "registry",
+        "promote",
     ])?;
     let cfg = config_from_args(args)?;
     let data = training_data(&cfg.dataset, cfg.rows, cfg.seed)?;
@@ -124,6 +134,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     );
 
     let sw = Stopwatch::start();
+    let mut version_meta: Option<VersionMeta> = None;
     let (model, extra) = match cfg.method {
         Method::Full => {
             let out = train_full(&data, &params)?;
@@ -143,6 +154,7 @@ fn cmd_train(args: &Args) -> Result<()> {
                 }
                 std::fs::write(path, csv)?;
             }
+            version_meta = Some(VersionMeta::from_outcome(&out, &data, scfg.sample_size));
             (
                 out.model,
                 format!(
@@ -198,6 +210,16 @@ fn cmd_train(args: &Args) -> Result<()> {
     if let Some(path) = args.get("out") {
         model.save(Path::new(path))?;
         println!("model saved to {path}");
+    }
+    if let Some(dir) = args.get("registry") {
+        let reg = Registry::open(dir)?;
+        let meta = version_meta.unwrap_or_else(|| VersionMeta::new(&model, &data));
+        let id = reg.publish(&model, meta)?;
+        println!("published {id} to registry {dir}");
+        if args.flag("promote") {
+            reg.promote(&id)?;
+            println!("{id} is now the champion");
+        }
     }
     Ok(())
 }
@@ -295,41 +317,177 @@ fn cmd_worker(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    args.expect_only(&["model", "listen", "xla", "artifacts", "batch", "linger-ms"])?;
-    let model_path = args
-        .get("model")
-        .ok_or_else(|| Error::Config("--model required".into()))?;
-    let model = SvddModel::load(Path::new(model_path))?;
+    args.expect_only(&[
+        "model", "listen", "xla", "artifacts", "batch", "linger-ms", "registry",
+        "watch", "watch-interval-ms", "allow-remote-swap",
+    ])?;
+    let registry = match args.get("registry") {
+        Some(dir) => Some(Registry::open(dir)?),
+        None => None,
+    };
+    if args.flag("watch") && registry.is_none() {
+        return Err(Error::Config(
+            "--watch requires --registry (there is nothing to watch)".into(),
+        ));
+    }
+    // initial model: --model file wins; otherwise the registry champion.
+    // When a file wins *and* a registry is watched, seed last_id with
+    // the current champion so the file is only swapped away by a new
+    // promote, not by the first poll re-asserting the stale champion.
+    let (model, mut last_id) = match (args.get("model"), &registry) {
+        (Some(path), reg) => {
+            let current = match reg {
+                Some(r) => r.champion()?.map(|e| e.id),
+                None => None,
+            };
+            (SvddModel::load(Path::new(path))?, current)
+        }
+        (None, Some(reg)) => {
+            let (id, m) = reg.champion_model()?.ok_or_else(|| {
+                Error::Config(
+                    "registry has no champion; promote one or pass --model".into(),
+                )
+            })?;
+            (m, Some(id))
+        }
+        (None, None) => {
+            return Err(Error::Config("--model or --registry required".into()));
+        }
+    };
     let addr = args.get_or("listen", "127.0.0.1:7800");
     let policy = fastsvdd::scoring::BatchPolicy {
         target_batch: args.get_usize("batch", 256)?,
         linger: std::time::Duration::from_millis(args.get_u64("linger-ms", 2)?),
         ..Default::default()
     };
-    // engine: XLA when requested + artifacts are present, else native
+    // engine: XLA when requested + artifacts are present, else native.
+    // The closure receives the model snapshot its batch was pinned to,
+    // so both engines keep scoring correctly across hot-swaps.
     let server = if args.flag("xla") {
         let dir = args.get_or("artifacts", "artifacts").to_string();
         let rt = std::sync::Arc::new(SharedRuntime::new(Path::new(&dir))?);
-        let m = model.clone();
-        fastsvdd::scoring::ScoreServer::spawn(addr, model.clone(), policy, move |zs| {
-            Scorer::xla(&m, &rt).dist2_batch(zs)
+        fastsvdd::scoring::ScoreServer::spawn(addr, model.clone(), policy, move |m, zs| {
+            Scorer::xla(m, &rt).dist2_batch(zs)
         })?
     } else {
-        let m = model.clone();
-        fastsvdd::scoring::ScoreServer::spawn(addr, model.clone(), policy, move |zs| {
+        fastsvdd::scoring::ScoreServer::spawn(addr, model.clone(), policy, |m, zs| {
             Ok(m.dist2_batch(zs))
         })?
     };
+    // the wire protocol is unauthenticated: remote SwapModel frames are
+    // refused unless the operator opts in
+    server.set_remote_swap_enabled(args.flag("allow-remote-swap"));
     println!(
-        "scoring server on {} (model: {} SVs, R^2={:.4}; engine={})",
+        "scoring server on {} (model {}: {} SVs, R^2={:.4}; engine={}; remote swap {})",
         server.addr(),
+        model.content_id(),
         model.num_sv(),
         model.r2(),
-        if args.flag("xla") { "xla" } else { "native" }
+        if args.flag("xla") { "xla" } else { "native" },
+        if args.flag("allow-remote-swap") { "enabled" } else { "disabled" }
     );
+    let watch = args.flag("watch");
+    if watch {
+        println!("watching registry for champion changes (hot-swap on promote)");
+    }
+    let interval_ms = args.get_u64("watch-interval-ms", 1000)?;
+    if interval_ms == 0 {
+        return Err(Error::Config(
+            "--watch-interval-ms must be >= 1 (0 would busy-spin)".into(),
+        ));
+    }
+    let interval = std::time::Duration::from_millis(interval_ms);
+    let slot = server.slot();
+    let mut since_metrics = std::time::Duration::ZERO;
     loop {
-        std::thread::sleep(std::time::Duration::from_secs(60));
-        println!("metrics: {}", server.metrics.render());
+        std::thread::sleep(interval);
+        if watch {
+            match sync_champion(registry.as_ref().unwrap(), &slot, last_id.as_ref()) {
+                Ok(Some(id)) => {
+                    server.metrics.model_swaps.inc();
+                    println!(
+                        "hot-swapped to {id} (epoch {}, R^2={:.4})",
+                        slot.epoch(),
+                        slot.current().r2()
+                    );
+                    last_id = Some(id);
+                }
+                Ok(None) => {}
+                Err(e) => eprintln!("watch: {e} (still serving the old model)"),
+            }
+        }
+        since_metrics += interval;
+        if since_metrics >= std::time::Duration::from_secs(60) {
+            println!("metrics: {}", server.metrics.render());
+            since_metrics = std::time::Duration::ZERO;
+        }
+    }
+}
+
+fn cmd_registry(args: &Args) -> Result<()> {
+    args.expect_only(&["dir", "version", "keep"])?;
+    let dir = args
+        .get("dir")
+        .ok_or_else(|| Error::Config("--dir required".into()))?;
+    let reg = Registry::open(dir)?;
+    match args.action.as_str() {
+        "" | "list" => {
+            let champion = reg.champion()?.map(|e| e.id);
+            let entries = reg.list()?;
+            if entries.is_empty() {
+                println!("registry {dir}: no versions (train with --registry to publish)");
+                return Ok(());
+            }
+            let mut t = Table::new(
+                &format!("registry {dir}"),
+                &["version", "champ", "r2", "#sv", "rows", "n", "iters", "warm", "created_unix"],
+            );
+            for e in &entries {
+                t.row(vec![
+                    e.id.to_string(),
+                    if Some(&e.id) == champion.as_ref() { "*".into() } else { "".into() },
+                    f(e.meta.r2, 4),
+                    e.meta.num_sv.to_string(),
+                    e.meta.rows.to_string(),
+                    e.meta.sample_size.to_string(),
+                    e.meta.iterations.to_string(),
+                    if e.meta.warm_start { "warm".into() } else { "cold".into() },
+                    e.meta.created_unix.to_string(),
+                ]);
+            }
+            println!("{}", t.render());
+            Ok(())
+        }
+        "promote" => {
+            let v = args
+                .get("version")
+                .ok_or_else(|| Error::Config("--version required".into()))?;
+            let id = VersionId::parse(v)?;
+            reg.promote(&id)?;
+            println!("{id} is now the champion");
+            Ok(())
+        }
+        "rollback" => {
+            let id = reg.rollback()?;
+            println!("rolled back; {id} is the champion again");
+            Ok(())
+        }
+        "gc" => {
+            let keep = args.get_usize("keep", 5)?;
+            let pruned = reg.gc(keep)?;
+            if pruned.is_empty() {
+                println!("nothing to prune (keep={keep})");
+            } else {
+                for id in &pruned {
+                    println!("pruned {id}");
+                }
+                println!("{} versions pruned", pruned.len());
+            }
+            Ok(())
+        }
+        other => Err(Error::Config(format!(
+            "unknown registry action '{other}' (list | promote | rollback | gc)"
+        ))),
     }
 }
 

@@ -103,6 +103,14 @@ pub struct Metrics {
     pub solver_calls: Counter,
     pub train_iterations: Counter,
     pub score_latency: Histogram,
+    /// Lifecycle: hot-swaps applied to a serving model slot.
+    pub model_swaps: Counter,
+    /// Lifecycle: retrains seeded from the champion's SV set.
+    pub retrains_warm: Counter,
+    /// Lifecycle: retrains from scratch (no champion available).
+    pub retrains_cold: Counter,
+    /// Lifecycle: wall time of each drift-triggered retrain.
+    pub retrain_latency: Histogram,
 }
 
 impl Metrics {
@@ -113,12 +121,16 @@ impl Metrics {
     /// One-line render for logs / CLI output.
     pub fn render(&self) -> String {
         format!(
-            "batches={} rows={} xla_execs={} solves={} iters={} score_mean={:.3}ms score_p99={:.3}ms",
+            "batches={} rows={} xla_execs={} solves={} iters={} swaps={} \
+             retrains_warm={} retrains_cold={} score_mean={:.3}ms score_p99={:.3}ms",
             self.batches_scored.get(),
             self.rows_scored.get(),
             self.xla_executions.get(),
             self.solver_calls.get(),
             self.train_iterations.get(),
+            self.model_swaps.get(),
+            self.retrains_warm.get(),
+            self.retrains_cold.get(),
             self.score_latency.mean_secs() * 1e3,
             self.score_latency.quantile_secs(0.99) * 1e3,
         )
@@ -169,8 +181,12 @@ mod tests {
     fn metrics_render_contains_fields() {
         let m = Metrics::new();
         m.rows_scored.add(7);
+        m.model_swaps.inc();
+        m.retrains_warm.add(2);
         let s = m.render();
         assert!(s.contains("rows=7"));
+        assert!(s.contains("swaps=1"));
+        assert!(s.contains("retrains_warm=2"));
     }
 
     #[test]

@@ -1,0 +1,372 @@
+//! The lifecycle driver: drift → warm-start retrain → publish →
+//! promote → hot-swap.
+//!
+//! [`Lifecycle`] closes the loop the paper's conclusion asks for
+//! ("fast periodic training using large data sets"): a
+//! [`StreamingSvdd`](crate::sampling::StreamingSvdd) watches the
+//! production stream and reports
+//! [`DriftStatus::Drifted`](crate::sampling::DriftStatus); the driver
+//! then retrains on the recent window —
+//! [`SamplingTrainer::train_warm`](crate::sampling::SamplingTrainer::train_warm),
+//! seeded from the current champion's SV set, so the run converges in
+//! far fewer iterations than a cold start — publishes the result to the
+//! versioned [`Registry`], promotes it, and swaps it into the serving
+//! [`ModelSlot`] without dropping a connection.
+//!
+//! The driver is deliberately synchronous and single-owner (one
+//! lifecycle per registry, matching the store's single-writer rule);
+//! serving stays concurrent because the slot swap is a pointer
+//! replacement.
+
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::metrics::Metrics;
+use crate::registry::store::Registry;
+use crate::registry::version::{VersionId, VersionMeta};
+use crate::sampling::{DriftStatus, SamplingConfig, SamplingTrainer};
+use crate::scoring::batcher::ModelSlot;
+use crate::svdd::model::SvddModel;
+use crate::svdd::trainer::SvddParams;
+use crate::util::matrix::Matrix;
+use crate::util::timer::Stopwatch;
+
+/// What one lifecycle retrain produced.
+#[derive(Clone, Debug)]
+pub struct LifecycleReport {
+    /// Registry id of the (now champion) model.
+    pub id: VersionId,
+    /// Threshold of the promoted model.
+    pub r2: f64,
+    /// Algorithm-1 iterations the retrain took.
+    pub iterations: usize,
+    pub converged: bool,
+    /// Whether `SV*` was seeded from the previous champion.
+    pub warm_start: bool,
+    /// Retrain wall time, seconds.
+    pub seconds: f64,
+    /// Slot epoch after the swap (None when no slot is attached).
+    pub epoch: Option<u64>,
+}
+
+/// Drift-to-swap driver over one registry and (optionally) one serving
+/// slot.
+pub struct Lifecycle {
+    registry: Registry,
+    params: SvddParams,
+    cfg: SamplingConfig,
+    slot: Option<ModelSlot>,
+    metrics: Arc<Metrics>,
+}
+
+impl Lifecycle {
+    pub fn new(registry: Registry, params: SvddParams, cfg: SamplingConfig) -> Lifecycle {
+        Lifecycle {
+            registry,
+            params,
+            cfg,
+            slot: None,
+            metrics: Arc::new(Metrics::new()),
+        }
+    }
+
+    /// Attach the serving slot retrains should swap into (e.g.
+    /// [`ScoreServer::slot`](crate::scoring::ScoreServer::slot)).
+    pub fn with_slot(mut self, slot: ModelSlot) -> Lifecycle {
+        self.slot = Some(slot);
+        self
+    }
+
+    /// Share a metrics registry (e.g. the serving process's, so swap and
+    /// retrain counters land next to the scoring counters).
+    pub fn with_metrics(mut self, metrics: Arc<Metrics>) -> Lifecycle {
+        self.metrics = metrics;
+        self
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        &self.metrics
+    }
+
+    /// Train on `data`, publish, promote and (if a slot is attached)
+    /// hot-swap. Warm-starts from the current champion when one exists
+    /// and its dimension matches; falls back to a cold start otherwise.
+    /// This is both the bootstrap path (empty registry → cold) and the
+    /// drift path (champion → warm).
+    pub fn retrain(&mut self, data: &Matrix, seed: u64) -> Result<LifecycleReport> {
+        // Guard before any training or registry mutation: a window whose
+        // dimension cannot be served by the attached slot must not become
+        // champion (it would leave the registry pointing at an
+        // unservable model and bury the good one in history).
+        if let Some(slot) = &self.slot {
+            if slot.dim() != data.cols() {
+                return Err(Error::invalid(format!(
+                    "retrain window is {}-d but the serving slot is {}-d",
+                    data.cols(),
+                    slot.dim()
+                )));
+            }
+        }
+        let trainer = SamplingTrainer::new(self.params, self.cfg);
+        let champion = self.registry.champion_model()?;
+        let warm_from = champion
+            .as_ref()
+            .map(|(_, m)| m)
+            .filter(|m| m.dim() == data.cols());
+
+        let sw = Stopwatch::start();
+        let outcome = match warm_from {
+            Some(init) => trainer.train_warm(data, seed, init)?,
+            None => trainer.train(data, seed)?,
+        };
+        let seconds = sw.elapsed_secs();
+        self.metrics.retrain_latency.observe(seconds);
+        if outcome.warm_start {
+            self.metrics.retrains_warm.inc();
+        } else {
+            self.metrics.retrains_cold.inc();
+        }
+
+        let meta = VersionMeta::from_outcome(&outcome, data, self.cfg.sample_size);
+        let id = self.registry.publish(&outcome.model, meta)?;
+        self.registry.promote(&id)?;
+        let epoch = self.swap_into_slot(&outcome.model)?;
+        Ok(LifecycleReport {
+            id,
+            r2: outcome.model.r2(),
+            iterations: outcome.iterations,
+            converged: outcome.converged,
+            warm_start: outcome.warm_start,
+            seconds,
+            epoch,
+        })
+    }
+
+    /// React to a drift verdict: [`DriftStatus::Drifted`] triggers a
+    /// [`Lifecycle::retrain`] on `window` (the recent data the monitor
+    /// drifted on); anything else is a no-op.
+    pub fn observe(
+        &mut self,
+        status: DriftStatus,
+        window: &Matrix,
+        seed: u64,
+    ) -> Result<Option<LifecycleReport>> {
+        match status {
+            DriftStatus::Drifted => self.retrain(window, seed).map(Some),
+            DriftStatus::Stable | DriftStatus::Suspect => Ok(None),
+        }
+    }
+
+    /// Promote an already published version and swap it into the slot.
+    /// The model is loaded and checked against the slot *before* the
+    /// registry champion moves, so a failure leaves registry and serve
+    /// path consistent.
+    pub fn promote(&mut self, id: &VersionId) -> Result<()> {
+        let model = self.registry.load(id)?;
+        self.check_servable(&model)?;
+        self.registry.promote(id)?;
+        self.swap_into_slot(&model)?;
+        Ok(())
+    }
+
+    /// Restore the previous champion (registry rollback + slot swap).
+    /// Like [`Lifecycle::promote`], the restored model is validated
+    /// against the slot before the registry history is popped.
+    pub fn rollback(&mut self) -> Result<VersionId> {
+        match self.registry.peek_rollback()? {
+            Some(prev) => {
+                let model = self.registry.load(&prev)?;
+                self.check_servable(&model)?;
+                let id = self.registry.rollback()?;
+                self.swap_into_slot(&model)?;
+                Ok(id)
+            }
+            // empty history: let the store produce its canonical error
+            None => self.registry.rollback(),
+        }
+    }
+
+    /// Prune old versions (champion/history/most-recent `keep` survive).
+    pub fn gc(&mut self, keep: usize) -> Result<Vec<VersionId>> {
+        self.registry.gc(keep)
+    }
+
+    /// Err when a slot is attached and cannot serve `model`.
+    fn check_servable(&self, model: &SvddModel) -> Result<()> {
+        if let Some(slot) = &self.slot {
+            if slot.dim() != model.dim() {
+                return Err(Error::invalid(format!(
+                    "model is {}-d but the serving slot is {}-d",
+                    model.dim(),
+                    slot.dim()
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    fn swap_into_slot(&self, model: &SvddModel) -> Result<Option<u64>> {
+        match &self.slot {
+            Some(slot) => {
+                let epoch = slot.swap(model.clone())?;
+                self.metrics.model_swaps.inc();
+                Ok(Some(epoch))
+            }
+            None => Ok(None),
+        }
+    }
+}
+
+/// One poll of `serve --registry --watch`: if the registry's champion
+/// differs from `last`, load it, swap it into `slot` and return its id;
+/// `None` when the champion is unchanged (or none is promoted yet).
+/// Errors (unreadable manifest, dimension mismatch) leave the slot
+/// untouched so the server keeps answering on the old model.
+pub fn sync_champion(
+    registry: &Registry,
+    slot: &ModelSlot,
+    last: Option<&VersionId>,
+) -> Result<Option<VersionId>> {
+    // manifest-only check first: the steady state (champion unchanged)
+    // must not pay a model-file read + parse + hash on every poll
+    let entry = match registry.champion()? {
+        Some(e) if last != Some(&e.id) => e,
+        _ => return Ok(None),
+    };
+    let id = entry.id;
+    let model = registry.load(&id)?;
+    if model.dim() != slot.dim() {
+        return Err(Error::Registry(format!(
+            "champion {id} is {}-d but the serving slot is {}-d",
+            model.dim(),
+            slot.dim()
+        )));
+    }
+    slot.swap(model)?;
+    Ok(Some(id))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{banana::Banana, Generator};
+
+    fn temp_registry(tag: &str) -> Registry {
+        let dir = std::env::temp_dir().join(format!(
+            "fastsvdd_lifecycle_{tag}_{}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+        Registry::open(&dir).unwrap()
+    }
+
+    fn lifecycle(tag: &str) -> Lifecycle {
+        let params = SvddParams::gaussian(0.35, 0.001);
+        let cfg = SamplingConfig { sample_size: 6, ..Default::default() };
+        Lifecycle::new(temp_registry(tag), params, cfg)
+    }
+
+    fn shifted(n: usize, seed: u64) -> Matrix {
+        let mut m = Banana::default().generate(n, seed);
+        for i in 0..m.rows() {
+            m.row_mut(i)[0] += 8.0;
+        }
+        m
+    }
+
+    #[test]
+    fn first_retrain_is_cold_then_warm() {
+        let mut lc = lifecycle("coldwarm");
+        let data = Banana::default().generate(4000, 1);
+        let first = lc.retrain(&data, 7).unwrap();
+        assert!(!first.warm_start, "empty registry must cold-start");
+        assert_eq!(lc.registry().champion().unwrap().unwrap().id, first.id);
+        assert_eq!(lc.metrics().retrains_cold.get(), 1);
+
+        let second = lc.retrain(&data, 13).unwrap();
+        assert!(second.warm_start, "champion present must warm-start");
+        assert!(
+            second.iterations < first.iterations,
+            "warm {} >= cold {}",
+            second.iterations,
+            first.iterations
+        );
+        assert_eq!(lc.metrics().retrains_warm.get(), 1);
+        // both versions live; champion moved to the second
+        assert_eq!(lc.registry().list().unwrap().len(), 2);
+        assert_eq!(lc.registry().champion().unwrap().unwrap().id, second.id);
+        let meta = lc.registry().get(&second.id).unwrap().meta;
+        assert!(meta.warm_start);
+        assert_eq!(meta.iterations, second.iterations);
+        std::fs::remove_dir_all(lc.registry().root()).ok();
+    }
+
+    #[test]
+    fn observe_acts_only_on_drifted() {
+        let mut lc = lifecycle("observe");
+        let data = Banana::default().generate(1500, 2);
+        assert!(lc.observe(DriftStatus::Stable, &data, 1).unwrap().is_none());
+        assert!(lc.observe(DriftStatus::Suspect, &data, 2).unwrap().is_none());
+        assert!(lc.registry().list().unwrap().is_empty());
+        let rep = lc.observe(DriftStatus::Drifted, &data, 3).unwrap().unwrap();
+        assert_eq!(lc.registry().champion().unwrap().unwrap().id, rep.id);
+        std::fs::remove_dir_all(lc.registry().root()).ok();
+    }
+
+    #[test]
+    fn retrain_swaps_attached_slot_and_rollback_restores() {
+        let params = SvddParams::gaussian(0.35, 0.001);
+        let cfg = SamplingConfig { sample_size: 6, ..Default::default() };
+        let a = Banana::default().generate(2000, 3);
+        let v1 = SamplingTrainer::new(params, cfg).train(&a, 5).unwrap().model;
+        let slot = ModelSlot::new(v1.clone());
+        let mut lc = Lifecycle::new(temp_registry("slot"), params, cfg).with_slot(slot.clone());
+
+        // seed the registry with the serving model, then drift-retrain
+        let r1 = lc.retrain(&a, 5).unwrap();
+        let b = shifted(2000, 4);
+        let r2 = lc.observe(DriftStatus::Drifted, &b, 9).unwrap().unwrap();
+        assert_ne!(r1.id, r2.id);
+        assert_eq!(r2.epoch, Some(slot.epoch()));
+        // the slot now serves the drift-retrained model
+        assert_eq!(slot.current().r2(), r2.r2);
+        assert_eq!(lc.metrics().model_swaps.get(), 2);
+
+        // rollback restores v1 in both registry and slot
+        let back = lc.rollback().unwrap();
+        assert_eq!(back, r1.id);
+        assert_eq!(slot.current().content_id(), r1.id.as_str());
+        std::fs::remove_dir_all(lc.registry().root()).ok();
+    }
+
+    #[test]
+    fn sync_champion_follows_external_promotes() {
+        let params = SvddParams::gaussian(0.35, 0.001);
+        let cfg = SamplingConfig { sample_size: 6, ..Default::default() };
+        let reg = temp_registry("sync");
+        let a = Banana::default().generate(1500, 6);
+        let b = shifted(1500, 7);
+        let trainer = SamplingTrainer::new(params, cfg);
+        let m1 = trainer.train(&a, 1).unwrap().model;
+        let m2 = trainer.train(&b, 2).unwrap().model;
+        let id1 = reg.publish(&m1, VersionMeta::new(&m1, &a)).unwrap();
+        let id2 = reg.publish(&m2, VersionMeta::new(&m2, &b)).unwrap();
+
+        let slot = ModelSlot::new(m1.clone());
+        // nothing promoted yet: no-op
+        assert!(sync_champion(&reg, &slot, None).unwrap().is_none());
+        reg.promote(&id1).unwrap();
+        // already serving id1's content, but the watcher has no `last`:
+        // it swaps once and from then on reports unchanged
+        assert_eq!(sync_champion(&reg, &slot, None).unwrap(), Some(id1.clone()));
+        assert!(sync_champion(&reg, &slot, Some(&id1)).unwrap().is_none());
+        reg.promote(&id2).unwrap();
+        assert_eq!(sync_champion(&reg, &slot, Some(&id1)).unwrap(), Some(id2.clone()));
+        assert_eq!(slot.current().content_id(), id2.as_str());
+        std::fs::remove_dir_all(reg.root()).ok();
+    }
+}

@@ -1,0 +1,52 @@
+//! **Model lifecycle subsystem**: versioned registry, warm-start
+//! retraining and zero-downtime promotion into the serve path.
+//!
+//! The paper makes SVDD training cheap enough to retrain
+//! *continuously*; this layer makes continuous retraining operable:
+//!
+//! - [`store::Registry`] — an on-disk, content-addressed model store
+//!   with per-version training metadata, a champion pointer, atomic
+//!   promote/rollback and pruning;
+//! - [`version`] — content-addressed [`VersionId`]s (derived from
+//!   [`SvddModel::content_hash`](crate::svdd::SvddModel::content_hash))
+//!   plus the [`VersionMeta`] kept beside every version (`R^2`, `#SV`,
+//!   sample size, iterations, warm/cold, bandwidth, data fingerprint);
+//! - [`lifecycle::Lifecycle`] — the driver wiring
+//!   [`DriftStatus::Drifted`](crate::sampling::DriftStatus) →
+//!   warm-start retrain → publish → promote → hot-swap into a serving
+//!   [`ModelSlot`](crate::scoring::ModelSlot).
+//!
+//! ## Registry directory layout
+//!
+//! ```text
+//! <registry dir>/
+//!   manifest.json        # {format, champion, history[], versions[]}
+//!   models/
+//!     v-<16 hex>.json    # one SvddModel JSON per version,
+//!                        # content-addressed by FNV-1a model hash
+//! ```
+//!
+//! The manifest is replaced atomically (write-temp + rename) and model
+//! files land before the manifest references them, so concurrent
+//! readers — e.g. `fastsvdd serve --registry DIR --watch`, which polls
+//! the manifest and hot-swaps when the champion changes — always see a
+//! consistent store.
+//!
+//! ## CLI
+//!
+//! ```text
+//! fastsvdd train ... --registry DIR [--promote]   # publish a trained model
+//! fastsvdd registry list     --dir DIR            # versions + champion marker
+//! fastsvdd registry promote  --dir DIR --version v-<16 hex>
+//! fastsvdd registry rollback --dir DIR            # restore previous champion
+//! fastsvdd registry gc       --dir DIR --keep N   # prune old versions
+//! fastsvdd serve --registry DIR --watch           # serve + follow champion
+//! ```
+
+pub mod lifecycle;
+pub mod store;
+pub mod version;
+
+pub use lifecycle::{sync_champion, Lifecycle, LifecycleReport};
+pub use store::{Registry, VersionEntry};
+pub use version::{VersionId, VersionMeta};

@@ -1,0 +1,515 @@
+//! On-disk versioned model store.
+//!
+//! Directory layout (everything human-inspectable JSON):
+//!
+//! ```text
+//! registry/
+//!   manifest.json          # format tag, champion pointer, promote
+//!                          # history, one entry per version (id + meta)
+//!   models/
+//!     v-<16 hex>.json      # SvddModel::to_json, content-addressed
+//! ```
+//!
+//! Writes are crash-safe: model files are content-addressed (a partial
+//! write is simply re-written on retry; ids never dangle because the
+//! manifest is updated *after* the model file lands), and the manifest
+//! itself is replaced atomically via write-to-temp + rename. Readers
+//! (e.g. `fastsvdd serve --registry --watch` polling for a new
+//! champion) therefore always observe a complete manifest.
+//!
+//! The store is single-writer: one lifecycle driver / operator CLI at a
+//! time. Concurrent readers are fine.
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::registry::version::{VersionId, VersionMeta};
+use crate::svdd::model::SvddModel;
+use crate::util::json::{arr, obj, s, Json};
+
+const MANIFEST_FORMAT: &str = "fastsvdd-registry-v1";
+
+/// Rollback depth: promote keeps at most this many previous champions
+/// on the history. Without a bound, a continuously retraining
+/// lifecycle would pin every ex-champion forever and [`Registry::gc`]
+/// could never reclaim disk.
+const MAX_HISTORY: usize = 8;
+
+/// One registered version: id + training metadata.
+#[derive(Clone, Debug, PartialEq)]
+pub struct VersionEntry {
+    pub id: VersionId,
+    pub meta: VersionMeta,
+}
+
+/// Parsed manifest state (internal; the public API re-reads per call so
+/// external promotes/gcs are always observed).
+#[derive(Clone, Debug, Default)]
+struct ManifestData {
+    /// Currently served version, if any.
+    champion: Option<VersionId>,
+    /// Previous champions, oldest first (rollback pops from the back).
+    history: Vec<VersionId>,
+    /// All live versions in publish order.
+    entries: Vec<VersionEntry>,
+}
+
+/// Handle on a registry directory.
+pub struct Registry {
+    root: PathBuf,
+}
+
+impl Registry {
+    /// Open (creating if needed) a registry rooted at `root`.
+    pub fn open(root: impl AsRef<Path>) -> Result<Registry> {
+        let root = root.as_ref().to_path_buf();
+        std::fs::create_dir_all(root.join("models"))?;
+        let reg = Registry { root };
+        if !reg.manifest_path().exists() {
+            reg.write_manifest(&ManifestData::default())?;
+        }
+        Ok(reg)
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    fn manifest_path(&self) -> PathBuf {
+        self.root.join("manifest.json")
+    }
+
+    fn model_path(&self, id: &VersionId) -> PathBuf {
+        self.root.join("models").join(format!("{id}.json"))
+    }
+
+    // ------------------------------------------------------- manifest io
+
+    fn read_manifest(&self) -> Result<ManifestData> {
+        let text = std::fs::read_to_string(self.manifest_path())?;
+        let v = Json::parse(&text)?;
+        if v.req("format")?.as_str() != Some(MANIFEST_FORMAT) {
+            return Err(Error::Registry(format!(
+                "unknown manifest format in {}",
+                self.manifest_path().display()
+            )));
+        }
+        let champion = match v.req("champion")? {
+            Json::Null => None,
+            j => Some(VersionId::parse(j.as_str().ok_or_else(|| {
+                Error::Registry("'champion' not a string".into())
+            })?)?),
+        };
+        let mut history = Vec::new();
+        for j in v
+            .req("history")?
+            .as_arr()
+            .ok_or_else(|| Error::Registry("'history' not an array".into()))?
+        {
+            history.push(VersionId::parse(j.as_str().ok_or_else(|| {
+                Error::Registry("history entry not a string".into())
+            })?)?);
+        }
+        let mut entries = Vec::new();
+        for j in v
+            .req("versions")?
+            .as_arr()
+            .ok_or_else(|| Error::Registry("'versions' not an array".into()))?
+        {
+            let id = VersionId::parse(
+                j.req("id")?
+                    .as_str()
+                    .ok_or_else(|| Error::Registry("version 'id' not a string".into()))?,
+            )?;
+            let meta = VersionMeta::from_json(j.req("meta")?)?;
+            entries.push(VersionEntry { id, meta });
+        }
+        Ok(ManifestData { champion, history, entries })
+    }
+
+    fn write_manifest(&self, m: &ManifestData) -> Result<()> {
+        let versions = m
+            .entries
+            .iter()
+            .map(|e| obj(vec![("id", s(e.id.as_str())), ("meta", e.meta.to_json())]))
+            .collect();
+        let doc = obj(vec![
+            ("format", s(MANIFEST_FORMAT)),
+            (
+                "champion",
+                match &m.champion {
+                    Some(id) => s(id.as_str()),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "history",
+                arr(m.history.iter().map(|id| s(id.as_str())).collect()),
+            ),
+            ("versions", arr(versions)),
+        ]);
+        let path = self.manifest_path();
+        let tmp = self.root.join("manifest.json.tmp");
+        std::fs::write(&tmp, doc.to_string_pretty())?;
+        std::fs::rename(&tmp, &path)?;
+        Ok(())
+    }
+
+    // ------------------------------------------------------- operations
+
+    /// Register a model version (content-addressed; publishing the same
+    /// model twice yields the same id, and the stored metadata is
+    /// refreshed to describe the *latest* training run — a warm retrain
+    /// that reconverges to identical content should still report its
+    /// own iterations/fingerprint/timestamp). Does **not** change the
+    /// champion — promotion is a separate, explicit step.
+    pub fn publish(&self, model: &SvddModel, meta: VersionMeta) -> Result<VersionId> {
+        meta.validate()?;
+        let id = VersionId::from_model(model);
+        // model file first, manifest second: a crash in between leaves
+        // an orphan file, never a dangling manifest entry
+        let path = self.model_path(&id);
+        if !path.exists() {
+            let tmp = path.with_extension("json.tmp");
+            std::fs::write(&tmp, model.to_json().to_string_pretty())?;
+            std::fs::rename(&tmp, &path)?;
+        }
+        let mut m = self.read_manifest()?;
+        match m.entries.iter_mut().find(|e| e.id == id) {
+            Some(entry) => entry.meta = meta,
+            None => m.entries.push(VersionEntry { id: id.clone(), meta }),
+        }
+        self.write_manifest(&m)?;
+        Ok(id)
+    }
+
+    /// Make `id` the champion. The previous champion (if different) is
+    /// pushed onto the rollback history, which is capped at
+    /// [`MAX_HISTORY`] entries (oldest dropped) so continuous
+    /// promotion cannot pin unbounded disk.
+    pub fn promote(&self, id: &VersionId) -> Result<()> {
+        let mut m = self.read_manifest()?;
+        if !m.entries.iter().any(|e| &e.id == id) {
+            return Err(Error::Registry(format!("cannot promote unknown version {id}")));
+        }
+        match &m.champion {
+            Some(current) if current == id => return Ok(()), // already champion
+            Some(current) => {
+                let prev = current.clone();
+                m.history.push(prev);
+                if m.history.len() > MAX_HISTORY {
+                    let excess = m.history.len() - MAX_HISTORY;
+                    m.history.drain(..excess);
+                }
+            }
+            None => {}
+        }
+        m.champion = Some(id.clone());
+        self.write_manifest(&m)
+    }
+
+    /// The version [`Registry::rollback`] would restore, without
+    /// changing anything (callers validate servability first).
+    pub fn peek_rollback(&self) -> Result<Option<VersionId>> {
+        Ok(self.read_manifest()?.history.last().cloned())
+    }
+
+    /// Restore the previous champion (pop the rollback history).
+    /// Returns the version now serving as champion.
+    pub fn rollback(&self) -> Result<VersionId> {
+        let mut m = self.read_manifest()?;
+        let prev = m
+            .history
+            .pop()
+            .ok_or_else(|| Error::Registry("nothing to roll back to".into()))?;
+        if !m.entries.iter().any(|e| e.id == prev) {
+            return Err(Error::Registry(format!(
+                "previous champion {prev} was pruned; cannot roll back"
+            )));
+        }
+        m.champion = Some(prev.clone());
+        self.write_manifest(&m)?;
+        Ok(prev)
+    }
+
+    /// The champion entry, if one was promoted.
+    pub fn champion(&self) -> Result<Option<VersionEntry>> {
+        let m = self.read_manifest()?;
+        Ok(match m.champion {
+            Some(id) => m.entries.into_iter().find(|e| e.id == id),
+            None => None,
+        })
+    }
+
+    /// Load the champion model (id + deserialized model).
+    pub fn champion_model(&self) -> Result<Option<(VersionId, SvddModel)>> {
+        match self.champion()? {
+            Some(entry) => {
+                let model = self.load(&entry.id)?;
+                Ok(Some((entry.id, model)))
+            }
+            None => Ok(None),
+        }
+    }
+
+    /// Load a specific version's model.
+    pub fn load(&self, id: &VersionId) -> Result<SvddModel> {
+        let path = self.model_path(id);
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Registry(format!("version {id} has no model file ({e})"))
+        })?;
+        let model = SvddModel::from_json(&Json::parse(&text)?)?;
+        // content addressing means the file must hash to its own name
+        let actual = VersionId::from_model(&model);
+        if &actual != id {
+            return Err(Error::Registry(format!(
+                "corrupt model file for {id}: content hashes to {actual}"
+            )));
+        }
+        Ok(model)
+    }
+
+    /// Metadata lookup for one version.
+    pub fn get(&self, id: &VersionId) -> Result<VersionEntry> {
+        self.read_manifest()?
+            .entries
+            .into_iter()
+            .find(|e| &e.id == id)
+            .ok_or_else(|| Error::Registry(format!("unknown version {id}")))
+    }
+
+    /// All versions in publish order.
+    pub fn list(&self) -> Result<Vec<VersionEntry>> {
+        Ok(self.read_manifest()?.entries)
+    }
+
+    /// Prune old versions, keeping the champion, everything on the
+    /// rollback history, and the `keep` most recently published
+    /// entries. Deletes pruned model files (plus any orphaned model
+    /// files from interrupted publishes) and returns the pruned ids.
+    pub fn gc(&self, keep: usize) -> Result<Vec<VersionId>> {
+        let mut m = self.read_manifest()?;
+        let entries = std::mem::take(&mut m.entries);
+        let cutoff = entries.len().saturating_sub(keep);
+        let mut pruned = Vec::new();
+        let mut kept = Vec::new();
+        for (i, e) in entries.into_iter().enumerate() {
+            let pinned = Some(&e.id) == m.champion.as_ref() || m.history.contains(&e.id);
+            if i < cutoff && !pinned {
+                pruned.push(e.id);
+            } else {
+                kept.push(e);
+            }
+        }
+        m.entries = kept;
+        self.write_manifest(&m)?;
+        for id in &pruned {
+            std::fs::remove_file(self.model_path(id)).ok();
+        }
+        // sweep orphans: anything under models/ no manifest entry
+        // refers to — including `.json.tmp` leftovers from a publish
+        // interrupted between write and rename
+        let live: std::collections::HashSet<PathBuf> =
+            m.entries.iter().map(|e| self.model_path(&e.id)).collect();
+        if let Ok(dir) = std::fs::read_dir(self.root.join("models")) {
+            for f in dir.flatten() {
+                let p = f.path();
+                if p.is_file() && !live.contains(&p) {
+                    std::fs::remove_file(&p).ok();
+                }
+            }
+        }
+        std::fs::remove_file(self.root.join("manifest.json.tmp")).ok();
+        Ok(pruned)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{banana::Banana, Generator};
+    use crate::svdd::{train, SvddParams};
+    use crate::util::matrix::Matrix;
+
+    fn temp_registry(tag: &str) -> Registry {
+        let dir = std::env::temp_dir().join(format!(
+            "fastsvdd_registry_{tag}_{}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+        Registry::open(&dir).unwrap()
+    }
+
+    fn toy_model(seed: u64) -> (SvddModel, Matrix) {
+        let data = Banana::default().generate(300 + seed as usize, seed);
+        let model = train(&data, &SvddParams::gaussian(0.35, 0.01)).unwrap();
+        (model, data)
+    }
+
+    #[test]
+    fn publish_promote_champion_roundtrip() {
+        let reg = temp_registry("ppc");
+        assert!(reg.champion().unwrap().is_none());
+        let (m1, d1) = toy_model(1);
+        let id1 = reg.publish(&m1, VersionMeta::new(&m1, &d1)).unwrap();
+        assert_eq!(id1.as_str(), m1.content_id());
+        // publish without promote: still no champion
+        assert!(reg.champion().unwrap().is_none());
+        reg.promote(&id1).unwrap();
+        let (cid, cm) = reg.champion_model().unwrap().unwrap();
+        assert_eq!(cid, id1);
+        assert_eq!(cm.content_hash(), m1.content_hash());
+        // scoring via the reloaded champion is bit-identical
+        let z = [0.2, -0.4];
+        assert_eq!(cm.dist2(&z), m1.dist2(&z));
+        std::fs::remove_dir_all(reg.root()).ok();
+    }
+
+    #[test]
+    fn republish_is_idempotent_and_refreshes_meta() {
+        let reg = temp_registry("idem");
+        let (m, d) = toy_model(2);
+        let a = reg.publish(&m, VersionMeta::new(&m, &d)).unwrap();
+        let b = reg.publish(&m, VersionMeta::new(&m, &d)).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(reg.list().unwrap().len(), 1);
+        // a warm retrain reconverging to identical content must update
+        // the stored training record, not keep the stale one
+        let mut warm_meta = VersionMeta::new(&m, &d);
+        warm_meta.warm_start = true;
+        warm_meta.iterations = 9;
+        reg.publish(&m, warm_meta).unwrap();
+        let entry = reg.get(&a).unwrap();
+        assert!(entry.meta.warm_start);
+        assert_eq!(entry.meta.iterations, 9);
+        assert_eq!(reg.list().unwrap().len(), 1);
+        std::fs::remove_dir_all(reg.root()).ok();
+    }
+
+    #[test]
+    fn promote_unknown_rejected() {
+        let reg = temp_registry("unknown");
+        let id = VersionId::parse("v-0123456789abcdef").unwrap();
+        assert!(reg.promote(&id).is_err());
+        std::fs::remove_dir_all(reg.root()).ok();
+    }
+
+    #[test]
+    fn rollback_restores_previous_champion() {
+        let reg = temp_registry("rollback");
+        let (m1, d1) = toy_model(3);
+        let (m2, d2) = toy_model(4);
+        let id1 = reg.publish(&m1, VersionMeta::new(&m1, &d1)).unwrap();
+        let id2 = reg.publish(&m2, VersionMeta::new(&m2, &d2)).unwrap();
+        assert_ne!(id1, id2);
+        reg.promote(&id1).unwrap();
+        reg.promote(&id2).unwrap();
+        assert_eq!(reg.champion().unwrap().unwrap().id, id2);
+        let back = reg.rollback().unwrap();
+        assert_eq!(back, id1);
+        assert_eq!(reg.champion().unwrap().unwrap().id, id1);
+        // nothing further to roll back to
+        assert!(reg.rollback().is_err());
+        std::fs::remove_dir_all(reg.root()).ok();
+    }
+
+    #[test]
+    fn state_survives_reopen() {
+        let reg = temp_registry("reopen");
+        let (m1, d1) = toy_model(5);
+        let id1 = reg.publish(&m1, VersionMeta::new(&m1, &d1)).unwrap();
+        reg.promote(&id1).unwrap();
+        let root = reg.root().to_path_buf();
+        drop(reg);
+        let reg2 = Registry::open(&root).unwrap();
+        let (cid, cm) = reg2.champion_model().unwrap().unwrap();
+        assert_eq!(cid, id1);
+        assert_eq!(cm.num_sv(), m1.num_sv());
+        assert_eq!(reg2.get(&id1).unwrap().meta.rows, d1.rows());
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn gc_keeps_champion_history_and_recent() {
+        let reg = temp_registry("gc");
+        let mut ids = Vec::new();
+        for seed in 10..16 {
+            let (m, d) = toy_model(seed);
+            ids.push(reg.publish(&m, VersionMeta::new(&m, &d)).unwrap());
+        }
+        // champion = ids[0] (oldest), history gets ids[1]
+        reg.promote(&ids[1]).unwrap();
+        reg.promote(&ids[0]).unwrap();
+        let pruned = reg.gc(1).unwrap();
+        // ids[0] champion, ids[1] history, ids[5] most recent → survive
+        let left: Vec<_> = reg.list().unwrap().into_iter().map(|e| e.id).collect();
+        assert!(left.contains(&ids[0]));
+        assert!(left.contains(&ids[1]));
+        assert!(left.contains(&ids[5]));
+        assert_eq!(left.len(), 3);
+        assert_eq!(pruned.len(), 3);
+        for id in &pruned {
+            assert!(reg.load(id).is_err(), "pruned model file should be gone");
+        }
+        // pinned versions still load
+        assert!(reg.load(&ids[0]).is_ok());
+        std::fs::remove_dir_all(reg.root()).ok();
+    }
+
+    #[test]
+    fn history_is_bounded_so_gc_can_reclaim() {
+        let reg = temp_registry("histcap");
+        let mut ids = Vec::new();
+        for seed in 30..30 + (MAX_HISTORY as u64 + 4) {
+            let (m, d) = toy_model(seed);
+            let id = reg.publish(&m, VersionMeta::new(&m, &d)).unwrap();
+            reg.promote(&id).unwrap();
+            ids.push(id);
+        }
+        // champion + at most MAX_HISTORY pinned: gc(1) must reclaim the
+        // oldest ex-champions instead of pinning every one forever
+        let pruned = reg.gc(1).unwrap();
+        assert!(
+            !pruned.is_empty(),
+            "continuous promotion must not pin every version"
+        );
+        let left = reg.list().unwrap().len();
+        assert!(left <= MAX_HISTORY + 1, "{left} versions survived gc");
+        // the champion and the most recent history survive; rollback works
+        assert_eq!(reg.champion().unwrap().unwrap().id, *ids.last().unwrap());
+        assert_eq!(reg.rollback().unwrap(), ids[ids.len() - 2]);
+        std::fs::remove_dir_all(reg.root()).ok();
+    }
+
+    #[test]
+    fn gc_sweeps_interrupted_publish_tmp_files() {
+        let reg = temp_registry("tmpsweep");
+        let (m, d) = toy_model(40);
+        reg.publish(&m, VersionMeta::new(&m, &d)).unwrap();
+        // simulate a publish that crashed between write and rename
+        let orphan = reg.root().join("models").join("v-00000000deadbeef.json.tmp");
+        std::fs::write(&orphan, "{").unwrap();
+        reg.gc(10).unwrap();
+        assert!(!orphan.exists(), "interrupted-publish tmp file not swept");
+        // the live model survived
+        assert_eq!(reg.list().unwrap().len(), 1);
+        std::fs::remove_dir_all(reg.root()).ok();
+    }
+
+    #[test]
+    fn corrupt_model_file_detected() {
+        let reg = temp_registry("corrupt");
+        let (m1, d1) = toy_model(20);
+        let (m2, _) = toy_model(21);
+        let id1 = reg.publish(&m1, VersionMeta::new(&m1, &d1)).unwrap();
+        // overwrite id1's file with a different model's bytes
+        std::fs::write(
+            reg.model_path(&id1),
+            m2.to_json().to_string_pretty(),
+        )
+        .unwrap();
+        let err = reg.load(&id1).unwrap_err();
+        assert!(err.to_string().contains("corrupt"), "{err}");
+        std::fs::remove_dir_all(reg.root()).ok();
+    }
+}

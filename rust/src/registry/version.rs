@@ -1,0 +1,288 @@
+//! Version identity and per-version training metadata.
+//!
+//! Versions are *content-addressed*: the id is derived from the model's
+//! [`content_hash`], so republishing an identical model is a no-op and
+//! an id names the same boundary forever. Next to each version the
+//! registry keeps the training metadata that matters operationally —
+//! boundary quality (`R^2`, `#SV`), how the model was obtained (sample
+//! size, iterations, warm vs cold start, bandwidth) and a fingerprint
+//! of the training window — following Englhardt et al.
+//! (arXiv:2009.13853) on keeping boundary-quality metadata with each
+//! sample-trained SVDD.
+//!
+//! [`content_hash`]: crate::svdd::model::SvddModel::content_hash
+
+use std::fmt;
+
+use crate::error::{Error, Result};
+use crate::sampling::SamplingOutcome;
+use crate::svdd::model::SvddModel;
+use crate::util::hash::fingerprint_matrix;
+use crate::util::json::{num, obj, s, Json};
+use crate::util::matrix::Matrix;
+
+/// Content-addressed version id: `v-` + 16 lowercase hex digits of the
+/// model's FNV-1a content hash.
+#[derive(Clone, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct VersionId(String);
+
+impl VersionId {
+    pub fn from_model(model: &SvddModel) -> VersionId {
+        VersionId(model.content_id())
+    }
+
+    /// Validate an operator-supplied id string.
+    pub fn parse(text: &str) -> Result<VersionId> {
+        let hex = text.strip_prefix("v-").ok_or_else(|| {
+            Error::Registry(format!("bad version id '{text}' (expected v-<16 hex>)"))
+        })?;
+        if hex.len() != 16 || !hex.bytes().all(|b| b.is_ascii_hexdigit() && !b.is_ascii_uppercase())
+        {
+            return Err(Error::Registry(format!(
+                "bad version id '{text}' (expected v-<16 lowercase hex>)"
+            )));
+        }
+        Ok(VersionId(text.to_string()))
+    }
+
+    pub fn as_str(&self) -> &str {
+        &self.0
+    }
+}
+
+impl fmt::Display for VersionId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+/// Training metadata stored alongside each registry version.
+#[derive(Clone, Debug, PartialEq)]
+pub struct VersionMeta {
+    /// Boundary threshold `R^2` of the stored model.
+    pub r2: f64,
+    pub num_sv: usize,
+    pub dim: usize,
+    /// Rows in the training window the model was fitted on.
+    pub rows: usize,
+    /// Algorithm-1 sample size `n` (0 when not sample-trained).
+    pub sample_size: usize,
+    /// Algorithm-1 iterations executed (0 when not sample-trained).
+    pub iterations: usize,
+    pub converged: bool,
+    /// Whether `SV*` was seeded from the previous champion.
+    pub warm_start: bool,
+    /// Gaussian bandwidth (None for non-Gaussian kernels).
+    pub bandwidth: Option<f64>,
+    /// FNV-1a fingerprint of the training window (shape + bits).
+    pub data_fingerprint: u64,
+    /// Registration time, seconds since the Unix epoch.
+    pub created_unix: u64,
+}
+
+fn now_unix() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0)
+}
+
+impl VersionMeta {
+    /// Metadata for a model trained outside the sampling loop (full
+    /// SVDD baseline, CLI `--publish` glue, ...).
+    pub fn new(model: &SvddModel, data: &Matrix) -> VersionMeta {
+        VersionMeta {
+            r2: model.r2(),
+            num_sv: model.num_sv(),
+            dim: model.dim(),
+            rows: data.rows(),
+            sample_size: 0,
+            iterations: 0,
+            converged: true,
+            warm_start: false,
+            bandwidth: model.kernel().bw(),
+            data_fingerprint: fingerprint_matrix(data),
+            created_unix: now_unix(),
+        }
+    }
+
+    /// Metadata for an Algorithm-1 outcome (the lifecycle path).
+    pub fn from_outcome(
+        outcome: &SamplingOutcome,
+        data: &Matrix,
+        sample_size: usize,
+    ) -> VersionMeta {
+        VersionMeta {
+            r2: outcome.model.r2(),
+            num_sv: outcome.model.num_sv(),
+            dim: outcome.model.dim(),
+            rows: data.rows(),
+            sample_size,
+            iterations: outcome.iterations,
+            converged: outcome.converged,
+            warm_start: outcome.warm_start,
+            bandwidth: outcome.model.kernel().bw(),
+            data_fingerprint: fingerprint_matrix(data),
+            created_unix: now_unix(),
+        }
+    }
+
+    /// Reject metadata that cannot describe a servable model.
+    pub fn validate(&self) -> Result<()> {
+        if !self.r2.is_finite() {
+            return Err(Error::Registry(format!("non-finite r2 {}", self.r2)));
+        }
+        if let Some(bw) = self.bandwidth {
+            if !bw.is_finite() || bw <= 0.0 {
+                return Err(Error::Registry(format!("bad bandwidth {bw}")));
+            }
+        }
+        if self.num_sv == 0 || self.dim == 0 {
+            return Err(Error::Registry("empty model metadata".into()));
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("r2", num(self.r2)),
+            ("num_sv", num(self.num_sv as f64)),
+            ("dim", num(self.dim as f64)),
+            ("rows", num(self.rows as f64)),
+            ("sample_size", num(self.sample_size as f64)),
+            ("iterations", num(self.iterations as f64)),
+            ("converged", Json::Bool(self.converged)),
+            ("warm_start", Json::Bool(self.warm_start)),
+            (
+                "bandwidth",
+                match self.bandwidth {
+                    Some(bw) => num(bw),
+                    None => Json::Null,
+                },
+            ),
+            // u64 does not survive a round-trip through f64, so the
+            // fingerprint is stored as fixed-width hex
+            ("data_fingerprint", s(format!("{:016x}", self.data_fingerprint))),
+            ("created_unix", num(self.created_unix as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<VersionMeta> {
+        let f64_field = |key: &str| -> Result<f64> {
+            let x = v
+                .req(key)?
+                .as_f64()
+                .ok_or_else(|| Error::Registry(format!("'{key}' not a number")))?;
+            if !x.is_finite() {
+                return Err(Error::Registry(format!("non-finite '{key}': {x}")));
+            }
+            Ok(x)
+        };
+        let usize_field = |key: &str| -> Result<usize> { f64_field(key).map(|x| x as usize) };
+        let bool_field = |key: &str| -> Result<bool> {
+            v.req(key)?
+                .as_bool()
+                .ok_or_else(|| Error::Registry(format!("'{key}' not a bool")))
+        };
+        let bandwidth = match v.req("bandwidth")? {
+            Json::Null => None,
+            j => {
+                let bw = j
+                    .as_f64()
+                    .ok_or_else(|| Error::Registry("'bandwidth' not a number".into()))?;
+                Some(bw)
+            }
+        };
+        let fp_hex = v
+            .req("data_fingerprint")?
+            .as_str()
+            .ok_or_else(|| Error::Registry("'data_fingerprint' not a string".into()))?;
+        let data_fingerprint = u64::from_str_radix(fp_hex, 16)
+            .map_err(|_| Error::Registry(format!("bad fingerprint '{fp_hex}'")))?;
+        let meta = VersionMeta {
+            r2: f64_field("r2")?,
+            num_sv: usize_field("num_sv")?,
+            dim: usize_field("dim")?,
+            rows: usize_field("rows")?,
+            sample_size: usize_field("sample_size")?,
+            iterations: usize_field("iterations")?,
+            converged: bool_field("converged")?,
+            warm_start: bool_field("warm_start")?,
+            bandwidth,
+            data_fingerprint,
+            created_unix: f64_field("created_unix")? as u64,
+        };
+        meta.validate()?;
+        Ok(meta)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_meta() -> VersionMeta {
+        VersionMeta {
+            r2: 0.8437,
+            num_sv: 23,
+            dim: 2,
+            rows: 4096,
+            sample_size: 6,
+            iterations: 31,
+            converged: true,
+            warm_start: true,
+            bandwidth: Some(0.35),
+            data_fingerprint: 0xdead_beef_0123_4567,
+            created_unix: 1_753_000_000,
+        }
+    }
+
+    #[test]
+    fn id_parse_accepts_canonical_rejects_junk() {
+        let id = VersionId::parse("v-00ff00ff00ff00ff").unwrap();
+        assert_eq!(id.as_str(), "v-00ff00ff00ff00ff");
+        assert!(VersionId::parse("v-00FF00FF00FF00FF").is_err()); // uppercase
+        assert!(VersionId::parse("v-123").is_err()); // short
+        assert!(VersionId::parse("w-00ff00ff00ff00ff").is_err()); // prefix
+        assert!(VersionId::parse("v-00ff00ff00ff00fg").is_err()); // non-hex
+    }
+
+    #[test]
+    fn meta_roundtrips_exactly() {
+        let meta = sample_meta();
+        let text = meta.to_json().to_string_pretty();
+        let back = VersionMeta::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, meta);
+    }
+
+    #[test]
+    fn meta_roundtrip_preserves_full_u64_fingerprint() {
+        let mut meta = sample_meta();
+        meta.data_fingerprint = u64::MAX; // would lose bits as f64
+        let back =
+            VersionMeta::from_json(&Json::parse(&meta.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back.data_fingerprint, u64::MAX);
+    }
+
+    #[test]
+    fn meta_rejects_non_finite_and_empty() {
+        let mut bad = sample_meta();
+        bad.r2 = f64::NAN;
+        assert!(bad.validate().is_err());
+        let mut bad = sample_meta();
+        bad.bandwidth = Some(f64::INFINITY);
+        assert!(bad.validate().is_err());
+        let mut bad = sample_meta();
+        bad.num_sv = 0;
+        assert!(bad.validate().is_err());
+        // JSON cannot spell NaN, but it can spell an overflowing number
+        let j = Json::parse(
+            r#"{"r2": 1e999, "num_sv": 1, "dim": 1, "rows": 1, "sample_size": 0,
+                "iterations": 0, "converged": true, "warm_start": false,
+                "bandwidth": null, "data_fingerprint": "00000000000000aa",
+                "created_unix": 0}"#,
+        )
+        .unwrap();
+        assert!(VersionMeta::from_json(&j).is_err());
+    }
+}

@@ -10,7 +10,7 @@
 //! operators can trigger a full retrain (the paper's "separate operating
 //! mode" scenario).
 
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::svdd::model::SvddModel;
 use crate::svdd::trainer::{train, SvddParams};
 use crate::util::matrix::Matrix;
@@ -163,6 +163,34 @@ impl StreamingSvdd {
         self.model = None;
         self.drift_streak = 0;
     }
+
+    /// Adopt an externally retrained description (the lifecycle driver
+    /// calls this after a drift-triggered retrain was promoted) and
+    /// clear the drift streak, so subsequent windows are judged against
+    /// the fresh champion instead of re-reporting the same drift.
+    /// Rejects a model whose dimension does not match the stream's
+    /// (known from the current model or the buffered rows) — otherwise
+    /// the mismatch would only surface as an opaque vstack error deep
+    /// inside the next window update.
+    pub fn adopt_model(&mut self, model: SvddModel) -> Result<()> {
+        let stream_dim = self
+            .model
+            .as_ref()
+            .map(|m| m.dim())
+            .or_else(|| self.buffer.first().map(|r| r.len()));
+        if let Some(dim) = stream_dim {
+            if model.dim() != dim {
+                return Err(Error::invalid(format!(
+                    "adopted model is {}-d but the stream is {}-d",
+                    model.dim(),
+                    dim
+                )));
+            }
+        }
+        self.model = Some(model);
+        self.drift_streak = 0;
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -247,6 +275,51 @@ mod tests {
             }
         }
         assert!(saw_drift, "no drift reported across the regime change");
+    }
+
+    #[test]
+    fn adopt_model_clears_drift_streak() {
+        let params = SvddParams::gaussian(0.35, 0.001);
+        let mut s = StreamingSvdd::new(
+            params,
+            StreamingConfig {
+                window: 128,
+                sample_size: 6,
+                drift_threshold: 0.02,
+                drift_patience: 1,
+            },
+            4,
+        );
+        let a = Banana::default().generate(512, 1);
+        s.push_batch(&a).unwrap();
+        // push the stream into a drifted regime
+        let mut b = Banana::default().generate(512, 2);
+        for i in 0..b.rows() {
+            b.row_mut(i)[0] += 8.0;
+        }
+        s.push_batch(&b).unwrap();
+        // adopting a retrained description resets the streak and the
+        // stream keeps running against the adopted model
+        let retrained = crate::svdd::train(&b, &params).unwrap();
+        let adopted_r2 = retrained.r2();
+        s.adopt_model(retrained).unwrap();
+        assert_eq!(s.model().unwrap().r2(), adopted_r2);
+        // dimension mismatch is rejected up front, not on the next window
+        let odd = crate::svdd::train(
+            &Matrix::from_rows(&[vec![0.0; 3], vec![1.0; 3], vec![0.5; 3]]).unwrap(),
+            &params,
+        )
+        .unwrap();
+        assert!(s.adopt_model(odd).is_err());
+        let more = {
+            let mut m = Banana::default().generate(128, 3);
+            for i in 0..m.rows() {
+                m.row_mut(i)[0] += 8.0;
+            }
+            m
+        };
+        let status = s.push_batch(&more).unwrap();
+        assert!(status.is_some(), "window update must fire");
     }
 
     #[test]

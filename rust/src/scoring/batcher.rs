@@ -1,4 +1,4 @@
-//! Dynamic batching for the serve path.
+//! Dynamic batching for the serve path, over a hot-swappable model.
 //!
 //! The XLA scoring artifact runs at fixed bucket shapes (256 / 4096
 //! rows); single-observation requests would waste 255/256 of every
@@ -8,9 +8,18 @@
 //! fills or the linger deadline passes, scores once, and fans results
 //! back out. This is the standard dynamic-batching coordinator of
 //! serving systems (vLLM-style), applied to SVDD scoring.
+//!
+//! The active model lives in a [`ModelSlot`] — a swappable slot the
+//! model-lifecycle layer replaces on promote (`fastsvdd serve
+//! --registry --watch`, `Message::SwapModel`). The dispatch loop takes
+//! an `Arc` snapshot of the slot per batch, so a swap never tears a
+//! batch: in-flight batches finish on the model they started with, the
+//! next drained batch scores on the new one, and no request is ever
+//! dropped or errored by a swap.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
@@ -39,10 +48,71 @@ impl Default for BatchPolicy {
     }
 }
 
+/// The hot-swappable model slot shared by the batcher, the connection
+/// handlers and the lifecycle driver. Cloning is cheap (Arc handles);
+/// all clones observe the same slot.
+///
+/// Readers call [`ModelSlot::current`] and get an `Arc` snapshot that
+/// stays valid for as long as they hold it — swapping never invalidates
+/// a reader mid-batch. The write lock is held only for the pointer
+/// replacement, so swap latency is independent of model size.
+#[derive(Clone)]
+pub struct ModelSlot {
+    current: Arc<RwLock<Arc<SvddModel>>>,
+    epoch: Arc<AtomicU64>,
+    dim: usize,
+}
+
+impl ModelSlot {
+    pub fn new(model: SvddModel) -> ModelSlot {
+        let dim = model.dim();
+        ModelSlot {
+            current: Arc::new(RwLock::new(Arc::new(model))),
+            epoch: Arc::new(AtomicU64::new(0)),
+            dim,
+        }
+    }
+
+    /// Snapshot of the active model.
+    pub fn current(&self) -> Arc<SvddModel> {
+        self.current.read().expect("model slot poisoned").clone()
+    }
+
+    /// Replace the active model; returns the new epoch. The input
+    /// dimension is pinned at slot creation — clients hold open
+    /// connections that keep sending `dim`-wide rows, so a swap to a
+    /// model of another dimension is refused rather than letting every
+    /// subsequent request fail.
+    pub fn swap(&self, model: SvddModel) -> Result<u64> {
+        if model.dim() != self.dim {
+            return Err(Error::invalid(format!(
+                "hot-swap dimension mismatch: slot serves {}-d rows, new model is {}-d",
+                self.dim,
+                model.dim()
+            )));
+        }
+        let next = Arc::new(model);
+        let mut slot = self.current.write().expect("model slot poisoned");
+        *slot = next;
+        Ok(self.epoch.fetch_add(1, Ordering::AcqRel) + 1)
+    }
+
+    /// Number of swaps applied so far (0 for the spawn-time model).
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Acquire)
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+}
+
 struct Request {
     rows: Vec<f64>, // flattened
     n: usize,
-    reply: mpsc::Sender<Vec<f64>>,
+    /// Scores plus the R^2 of the model that produced them, so each
+    /// reply is internally consistent across a swap.
+    reply: mpsc::Sender<(Vec<f64>, f64)>,
 }
 
 struct Queue {
@@ -66,26 +136,28 @@ pub struct BatcherHandle {
 }
 
 impl Batcher {
-    /// Spawn the dispatch loop over a scoring closure. The closure
-    /// receives a `(rows, dim)` matrix and returns dist^2 per row; it
-    /// runs on the dispatch thread (e.g. wraps `Scorer::xla`).
+    /// Spawn the dispatch loop over a scoring closure and a model slot.
+    /// The closure receives the model snapshot the batch was pinned to
+    /// and a `(rows, dim)` matrix, and returns dist^2 per row; it runs
+    /// on the dispatch thread (e.g. wraps `Scorer::xla`).
     pub fn spawn<F>(
-        model: &SvddModel,
+        slot: &ModelSlot,
         policy: BatchPolicy,
         metrics: Arc<Metrics>,
         score_fn: F,
     ) -> (Batcher, BatcherHandle)
     where
-        F: Fn(&Matrix) -> Result<Vec<f64>> + Send + 'static,
+        F: Fn(&SvddModel, &Matrix) -> Result<Vec<f64>> + Send + 'static,
     {
-        let dim = model.dim();
+        let dim = slot.dim();
         let shared = Arc::new((
             Mutex::new(Queue { requests: Vec::new(), queued_rows: 0, shutdown: false }),
             Condvar::new(),
         ));
         let shared2 = shared.clone();
+        let slot2 = slot.clone();
         let worker = std::thread::spawn(move || {
-            dispatch_loop(shared2, policy, dim, metrics, score_fn);
+            dispatch_loop(shared2, policy, slot2, metrics, score_fn);
         });
         let handle = BatcherHandle {
             shared: shared.clone(),
@@ -118,6 +190,13 @@ impl BatcherHandle {
     /// Score a batch of observations; blocks until the dispatch loop
     /// returns this request's scores.
     pub fn score(&self, zs: &Matrix) -> Result<Vec<f64>> {
+        self.score_with_r2(zs).map(|(dist2, _)| dist2)
+    }
+
+    /// Like [`BatcherHandle::score`], also returning the R^2 threshold
+    /// of the model snapshot that scored this batch (the pair a
+    /// `ScoreReply` needs to stay consistent across hot-swaps).
+    pub fn score_with_r2(&self, zs: &Matrix) -> Result<(Vec<f64>, f64)> {
         if zs.cols() != self.dim {
             return Err(Error::invalid(format!(
                 "batcher expects dim {}, got {}",
@@ -151,12 +230,13 @@ impl BatcherHandle {
 fn dispatch_loop<F>(
     shared: Arc<(Mutex<Queue>, Condvar)>,
     policy: BatchPolicy,
-    dim: usize,
+    slot: ModelSlot,
     metrics: Arc<Metrics>,
     score_fn: F,
 ) where
-    F: Fn(&Matrix) -> Result<Vec<f64>>,
+    F: Fn(&SvddModel, &Matrix) -> Result<Vec<f64>>,
 {
+    let dim = slot.dim();
     let (lock, cv) = &*shared;
     loop {
         // wait until there is work (or shutdown)
@@ -184,6 +264,10 @@ fn dispatch_loop<F>(
         q.queued_rows = 0;
         drop(q);
 
+        // pin the model for this whole batch: a swap landing mid-score
+        // takes effect from the *next* drained batch
+        let model = slot.current();
+
         // assemble one matrix for the whole batch
         let total: usize = batch.iter().map(|r| r.n).sum();
         let mut flat = Vec::with_capacity(total * dim);
@@ -192,17 +276,18 @@ fn dispatch_loop<F>(
         }
         let zs = Matrix::from_vec(flat, total, dim).expect("batch assembly");
         let sw = crate::util::timer::Stopwatch::start();
-        let scores = score_fn(&zs).unwrap_or_else(|_| vec![f64::NAN; total]);
+        let scores = score_fn(&model, &zs).unwrap_or_else(|_| vec![f64::NAN; total]);
         metrics.score_latency.observe(sw.elapsed_secs());
         metrics.batches_scored.inc();
         metrics.rows_scored.add(total as u64);
 
         // fan out
+        let r2 = model.r2();
         let mut offset = 0;
         for r in batch {
             let slice = scores[offset..offset + r.n].to_vec();
             offset += r.n;
-            let _ = r.reply.send(slice); // receiver may have gone away
+            let _ = r.reply.send((slice, r2)); // receiver may have gone away
         }
     }
 }
@@ -218,17 +303,32 @@ mod tests {
         train(&data, &SvddParams::gaussian(0.35, 0.01)).unwrap()
     }
 
+    fn shifted_model() -> SvddModel {
+        let mut data = Banana::default().generate(500, 2);
+        for i in 0..data.rows() {
+            data.row_mut(i)[0] += 6.0;
+        }
+        train(&data, &SvddParams::gaussian(0.35, 0.01)).unwrap()
+    }
+
+    fn spawn_native(
+        slot: &ModelSlot,
+        policy: BatchPolicy,
+        metrics: Arc<Metrics>,
+    ) -> (Batcher, BatcherHandle) {
+        Batcher::spawn(slot, policy, metrics, |m, zs| Ok(m.dist2_batch(zs)))
+    }
+
     #[test]
     fn single_request_roundtrip() {
         let m = model();
         let metrics = Arc::new(Metrics::new());
-        let m2 = m.clone();
-        let (_b, h) = Batcher::spawn(&m, BatchPolicy::default(), metrics.clone(), move |zs| {
-            Ok(m2.dist2_batch(zs))
-        });
+        let slot = ModelSlot::new(m.clone());
+        let (_b, h) = spawn_native(&slot, BatchPolicy::default(), metrics.clone());
         let zs = Banana::default().generate(17, 2);
-        let got = h.score(&zs).unwrap();
+        let (got, r2) = h.score_with_r2(&zs).unwrap();
         assert_eq!(got, m.dist2_batch(&zs));
+        assert_eq!(r2, m.r2());
         assert_eq!(metrics.rows_scored.get(), 17);
     }
 
@@ -236,15 +336,13 @@ mod tests {
     fn concurrent_requests_coalesce_and_return_correctly() {
         let m = model();
         let metrics = Arc::new(Metrics::new());
-        let m2 = m.clone();
         let policy = BatchPolicy {
             target_batch: 64,
             linger: Duration::from_millis(20),
             capacity: 1 << 16,
         };
-        let (_b, h) = Batcher::spawn(&m, policy, metrics.clone(), move |zs| {
-            Ok(m2.dist2_batch(zs))
-        });
+        let slot = ModelSlot::new(m.clone());
+        let (_b, h) = spawn_native(&slot, policy, metrics.clone());
         let handles: Vec<_> = (0..8)
             .map(|i| {
                 let h = h.clone();
@@ -273,10 +371,8 @@ mod tests {
     fn dimension_mismatch_rejected() {
         let m = model();
         let metrics = Arc::new(Metrics::new());
-        let m2 = m.clone();
-        let (_b, h) = Batcher::spawn(&m, BatchPolicy::default(), metrics, move |zs| {
-            Ok(m2.dist2_batch(zs))
-        });
+        let slot = ModelSlot::new(m);
+        let (_b, h) = spawn_native(&slot, BatchPolicy::default(), metrics);
         let bad = Matrix::zeros(4, 5);
         assert!(h.score(&bad).is_err());
     }
@@ -285,13 +381,13 @@ mod tests {
     fn backpressure_rejects_when_full() {
         let m = model();
         let metrics = Arc::new(Metrics::new());
-        let m2 = m.clone();
         let policy = BatchPolicy {
             target_batch: 1 << 20,              // never fills
             linger: Duration::from_millis(200), // long linger holds the queue
             capacity: 32,
         };
-        let (_b, h) = Batcher::spawn(&m, policy, metrics, move |zs| Ok(m2.dist2_batch(zs)));
+        let slot = ModelSlot::new(m);
+        let (_b, h) = spawn_native(&slot, policy, metrics);
         // first request parks in the queue
         let h2 = h.clone();
         let t = std::thread::spawn(move || {
@@ -309,11 +405,97 @@ mod tests {
     fn shutdown_rejects_new_work() {
         let m = model();
         let metrics = Arc::new(Metrics::new());
-        let m2 = m.clone();
-        let (mut b, h) = Batcher::spawn(&m, BatchPolicy::default(), metrics, move |zs| {
-            Ok(m2.dist2_batch(zs))
-        });
+        let slot = ModelSlot::new(m);
+        let (mut b, h) = spawn_native(&slot, BatchPolicy::default(), metrics);
         b.shutdown();
         assert!(h.score(&Banana::default().generate(1, 5)).is_err());
+    }
+
+    #[test]
+    fn slot_swap_bumps_epoch_and_changes_scores() {
+        let m1 = model();
+        let m2 = shifted_model();
+        let metrics = Arc::new(Metrics::new());
+        let slot = ModelSlot::new(m1.clone());
+        assert_eq!(slot.epoch(), 0);
+        let (_b, h) = spawn_native(&slot, BatchPolicy::default(), metrics);
+        let zs = Banana::default().generate(9, 6);
+        let (before, r2_before) = h.score_with_r2(&zs).unwrap();
+        assert_eq!(before, m1.dist2_batch(&zs));
+        assert_eq!(r2_before, m1.r2());
+
+        assert_eq!(slot.swap(m2.clone()).unwrap(), 1);
+        assert_eq!(slot.epoch(), 1);
+        let (after, r2_after) = h.score_with_r2(&zs).unwrap();
+        assert_eq!(after, m2.dist2_batch(&zs));
+        assert_eq!(r2_after, m2.r2());
+    }
+
+    #[test]
+    fn slot_swap_rejects_dimension_change() {
+        let m = model(); // 2-d
+        let slot = ModelSlot::new(m);
+        let sv = Matrix::from_rows(&[vec![0.0, 1.0, 2.0]]).unwrap();
+        let odd = SvddModel::new(sv, vec![1.0], crate::svdd::Kernel::gaussian(1.0), 0.5, 1.0)
+            .unwrap();
+        assert!(slot.swap(odd).is_err());
+        assert_eq!(slot.epoch(), 0, "failed swap must not bump the epoch");
+    }
+
+    #[test]
+    fn replies_are_model_consistent_under_swap_storm() {
+        // Clients hammer the batcher while the slot flips between two
+        // models; every reply must be *exactly* one model's scores with
+        // that same model's R^2 — never a torn mix.
+        let m1 = model();
+        let m2 = shifted_model();
+        let metrics = Arc::new(Metrics::new());
+        let policy = BatchPolicy {
+            target_batch: 32,
+            linger: Duration::from_micros(200),
+            capacity: 1 << 16,
+        };
+        let slot = ModelSlot::new(m1.clone());
+        let (_b, h) = spawn_native(&slot, policy, metrics);
+
+        let zs = Banana::default().generate(8, 7);
+        let want1 = (m1.dist2_batch(&zs), m1.r2());
+        let want2 = (m2.dist2_batch(&zs), m2.r2());
+
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let clients: Vec<_> = (0..4)
+            .map(|_| {
+                let h = h.clone();
+                let zs = zs.clone();
+                let stop = stop.clone();
+                let want1 = want1.clone();
+                let want2 = want2.clone();
+                std::thread::spawn(move || {
+                    let mut checked = 0u64;
+                    while !stop.load(Ordering::Relaxed) {
+                        let got = h.score_with_r2(&zs).unwrap();
+                        assert!(
+                            got == want1 || got == want2,
+                            "torn reply: r2={} (v1 r2={}, v2 r2={})",
+                            got.1,
+                            want1.1,
+                            want2.1
+                        );
+                        checked += 1;
+                    }
+                    checked
+                })
+            })
+            .collect();
+
+        for i in 0..50 {
+            let next = if i % 2 == 0 { m2.clone() } else { m1.clone() };
+            slot.swap(next).unwrap();
+            std::thread::sleep(Duration::from_micros(500));
+        }
+        stop.store(true, Ordering::Relaxed);
+        let total: u64 = clients.into_iter().map(|t| t.join().unwrap()).sum();
+        assert!(total > 0, "clients never scored");
+        assert_eq!(slot.epoch(), 50);
     }
 }

@@ -10,13 +10,18 @@
 //!   chunk.
 //!
 //! Integration tests cross-check the two engines on every bucket.
+//!
+//! The serve path ([`batcher`], [`server`]) runs over a hot-swappable
+//! [`ModelSlot`], so the model-lifecycle layer ([`crate::registry`])
+//! can promote a freshly retrained model into a live server with zero
+//! dropped connections.
 
 pub mod batcher;
 pub mod f1;
 pub mod server;
 
-pub use batcher::{BatchPolicy, Batcher, BatcherHandle};
-pub use server::{ScoreClient, ScoreServer};
+pub use batcher::{BatchPolicy, Batcher, BatcherHandle, ModelSlot};
+pub use server::{RemoteModelInfo, ScoreClient, ScoreServer};
 pub use f1::{confusion, F1Score};
 
 use crate::error::Result;

@@ -5,17 +5,31 @@
 //! feeding a single [`super::batcher::Batcher`] so concurrent clients'
 //! rows coalesce into bucket-sized XLA (or native) scoring executions.
 //! Protocol: framed [`Message::ScoreRequest`] / [`Message::ScoreReply`]
-//! (shared with the distributed trainer; version-checked handshake).
+//! (shared with the distributed trainer; version-negotiated handshake).
+//!
+//! The active model lives in a [`ModelSlot`], so it can be hot-swapped
+//! with zero downtime: [`ScoreServer::swap_model`] (local, used by the
+//! lifecycle driver and `serve --registry --watch`) or the v2
+//! [`Message::SwapModel`] frame (remote). In-flight batches finish on
+//! the old model; no connection is dropped. [`Message::ModelInfoRequest`]
+//! reports the active model's content id, threshold and swap epoch.
+//!
+//! The wire protocol carries no authentication, so the mutating
+//! `SwapModel` frame is gated by
+//! [`ScoreServer::set_remote_swap_enabled`]: run the port on a trusted
+//! network, and leave remote swap off (the `fastsvdd serve` default)
+//! unless the peers are trusted operators.
 
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
-use crate::distributed::message::{Message, PROTOCOL_VERSION};
+use crate::distributed::message::{negotiate, Message, PROTOCOL_VERSION};
 use crate::error::{Error, Result};
 use crate::metrics::Metrics;
-use crate::scoring::batcher::{BatchPolicy, Batcher, BatcherHandle};
+use crate::scoring::batcher::{BatchPolicy, Batcher, BatcherHandle, ModelSlot};
 use crate::svdd::model::SvddModel;
+use crate::util::json::Json;
 use crate::util::matrix::Matrix;
 
 /// A running scoring server.
@@ -24,11 +38,14 @@ pub struct ScoreServer {
     stop: Arc<AtomicBool>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
     batcher: Batcher,
+    slot: ModelSlot,
+    remote_swap: Arc<AtomicBool>,
     pub metrics: Arc<Metrics>,
 }
 
 impl ScoreServer {
-    /// Bind and serve. `score_fn` is the batch engine (wrap
+    /// Bind and serve. `score_fn` is the batch engine: it receives the
+    /// model snapshot the batch is pinned to plus the rows (wrap
     /// `Scorer::native` or `Scorer::xla` — the latter cannot be moved
     /// across threads directly, so wrap a `SharedRuntime` call).
     pub fn spawn<F>(
@@ -38,24 +55,31 @@ impl ScoreServer {
         score_fn: F,
     ) -> Result<ScoreServer>
     where
-        F: Fn(&Matrix) -> Result<Vec<f64>> + Send + 'static,
+        F: Fn(&SvddModel, &Matrix) -> Result<Vec<f64>> + Send + 'static,
     {
         let metrics = Arc::new(Metrics::new());
-        let (batcher, handle) = Batcher::spawn(&model, policy, metrics.clone(), score_fn);
+        let slot = ModelSlot::new(model);
+        let (batcher, handle) = Batcher::spawn(&slot, policy, metrics.clone(), score_fn);
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = stop.clone();
-        let r2 = model.r2();
+        let remote_swap = Arc::new(AtomicBool::new(true));
+        let accept_swap = remote_swap.clone();
+        let accept_slot = slot.clone();
+        let accept_metrics = metrics.clone();
         let accept_thread = std::thread::spawn(move || {
             while !stop2.load(Ordering::Relaxed) {
                 match listener.accept() {
                     Ok((stream, _)) => {
                         stream.set_nonblocking(false).ok();
                         let h = handle.clone();
+                        let sl = accept_slot.clone();
+                        let mx = accept_metrics.clone();
+                        let sw = accept_swap.clone();
                         std::thread::spawn(move || {
-                            let _ = serve_connection(stream, h, r2);
+                            let _ = serve_connection(stream, h, sl, mx, sw);
                         });
                     }
                     Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -70,12 +94,46 @@ impl ScoreServer {
             stop,
             accept_thread: Some(accept_thread),
             batcher,
+            slot,
+            remote_swap,
             metrics,
         })
     }
 
+    /// Allow or refuse the remote v2 `SwapModel` frame (refused frames
+    /// get a `SwapAck { swapped: false }`; the connection survives and
+    /// local swaps via [`ScoreServer::swap_model`] / the lifecycle
+    /// driver are unaffected). The frame is *enabled* by default for
+    /// library/embedded use, but the wire protocol carries no
+    /// authentication, so `fastsvdd serve` keeps it disabled unless
+    /// `--allow-remote-swap` is passed.
+    pub fn set_remote_swap_enabled(&self, enabled: bool) {
+        self.remote_swap.store(enabled, Ordering::Relaxed);
+    }
+
     pub fn addr(&self) -> std::net::SocketAddr {
         self.addr
+    }
+
+    /// Snapshot of the model currently being served.
+    pub fn model(&self) -> Arc<SvddModel> {
+        self.slot.current()
+    }
+
+    /// Clone of the server's model slot — hand this to a
+    /// [`crate::registry::Lifecycle`] so drift-triggered retrains swap
+    /// straight into the serve path.
+    pub fn slot(&self) -> ModelSlot {
+        self.slot.clone()
+    }
+
+    /// Hot-swap the served model; returns the new epoch. In-flight
+    /// batches finish on the old model, later batches use the new one;
+    /// no client connection is interrupted.
+    pub fn swap_model(&self, model: SvddModel) -> Result<u64> {
+        let epoch = self.slot.swap(model)?;
+        self.metrics.model_swaps.inc();
+        Ok(epoch)
     }
 
     pub fn stop(&mut self) {
@@ -93,11 +151,22 @@ impl Drop for ScoreServer {
     }
 }
 
-fn serve_connection(mut stream: TcpStream, handle: BatcherHandle, r2: f64) -> Result<()> {
+fn serve_connection(
+    mut stream: TcpStream,
+    handle: BatcherHandle,
+    slot: ModelSlot,
+    metrics: Arc<Metrics>,
+    remote_swap: Arc<AtomicBool>,
+) -> Result<()> {
     match Message::read_from(&mut stream)? {
-        Message::Hello { version } if version == PROTOCOL_VERSION => {
-            Message::HelloAck { version: PROTOCOL_VERSION }.write_to(&mut stream)?;
-        }
+        Message::Hello { version } => match negotiate(version) {
+            Some(v) => Message::HelloAck { version: v }.write_to(&mut stream)?,
+            None => {
+                return Err(Error::Distributed(format!(
+                    "peer version {version} too old"
+                )));
+            }
+        },
         other => {
             return Err(Error::Distributed(format!("expected Hello, got {other:?}")));
         }
@@ -105,8 +174,51 @@ fn serve_connection(mut stream: TcpStream, handle: BatcherHandle, r2: f64) -> Re
     loop {
         match Message::read_from(&mut stream) {
             Ok(Message::ScoreRequest { rows }) => {
-                let dist2 = handle.score(&rows)?;
+                let (dist2, r2) = handle.score_with_r2(&rows)?;
                 Message::ScoreReply { dist2, r2 }.write_to(&mut stream)?;
+            }
+            Ok(Message::ModelInfoRequest) => {
+                let m = slot.current();
+                Message::ModelInfo {
+                    version: m.content_id(),
+                    r2: m.r2(),
+                    num_sv: m.num_sv() as u32,
+                    dim: m.dim() as u32,
+                    epoch: slot.epoch(),
+                }
+                .write_to(&mut stream)?;
+            }
+            Ok(Message::SwapModel { model_json }) => {
+                let reply = if !remote_swap.load(Ordering::Relaxed) {
+                    Message::SwapAck {
+                        epoch: slot.epoch(),
+                        swapped: false,
+                        r2: slot.current().r2(),
+                        reason: "remote model swap is disabled on this server".into(),
+                    }
+                } else {
+                    let outcome = Json::parse(&model_json)
+                        .and_then(|j| SvddModel::from_json(&j))
+                        .and_then(|m| slot.swap(m));
+                    match outcome {
+                        Ok(epoch) => {
+                            metrics.model_swaps.inc();
+                            Message::SwapAck {
+                                epoch,
+                                swapped: true,
+                                r2: slot.current().r2(),
+                                reason: String::new(),
+                            }
+                        }
+                        Err(e) => Message::SwapAck {
+                            epoch: slot.epoch(),
+                            swapped: false,
+                            r2: slot.current().r2(),
+                            reason: e.to_string(),
+                        },
+                    }
+                };
+                reply.write_to(&mut stream)?;
             }
             Ok(Message::Shutdown) | Err(_) => return Ok(()),
             Ok(other) => {
@@ -114,6 +226,18 @@ fn serve_connection(mut stream: TcpStream, handle: BatcherHandle, r2: f64) -> Re
             }
         }
     }
+}
+
+/// What the server reports about its active model (v2 `ModelInfo`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct RemoteModelInfo {
+    /// Content-addressed id (`SvddModel::content_id` spelling).
+    pub version: String,
+    pub r2: f64,
+    pub num_sv: usize,
+    pub dim: usize,
+    /// Hot-swaps applied since the server started.
+    pub epoch: u64,
 }
 
 /// Blocking client for the scoring service.
@@ -126,7 +250,7 @@ impl ScoreClient {
         let mut stream = TcpStream::connect(addr)?;
         Message::Hello { version: PROTOCOL_VERSION }.write_to(&mut stream)?;
         match Message::read_from(&mut stream)? {
-            Message::HelloAck { version } if version == PROTOCOL_VERSION => {}
+            Message::HelloAck { version } if negotiate(version).is_some() => {}
             other => {
                 return Err(Error::Distributed(format!("bad handshake: {other:?}")));
             }
@@ -139,6 +263,34 @@ impl ScoreClient {
         Message::ScoreRequest { rows: rows.clone() }.write_to(&mut self.stream)?;
         match Message::read_from(&mut self.stream)? {
             Message::ScoreReply { dist2, r2 } => Ok((dist2, r2)),
+            other => Err(Error::Distributed(format!("unexpected {other:?}"))),
+        }
+    }
+
+    /// Ask the server about its active model (v2).
+    pub fn model_info(&mut self) -> Result<RemoteModelInfo> {
+        Message::ModelInfoRequest.write_to(&mut self.stream)?;
+        match Message::read_from(&mut self.stream)? {
+            Message::ModelInfo { version, r2, num_sv, dim, epoch } => Ok(RemoteModelInfo {
+                version,
+                r2,
+                num_sv: num_sv as usize,
+                dim: dim as usize,
+                epoch,
+            }),
+            other => Err(Error::Distributed(format!("unexpected {other:?}"))),
+        }
+    }
+
+    /// Hot-swap the server's model (v2); returns the new epoch.
+    pub fn swap_model(&mut self, model: &SvddModel) -> Result<u64> {
+        Message::SwapModel { model_json: model.to_json().to_string() }
+            .write_to(&mut self.stream)?;
+        match Message::read_from(&mut self.stream)? {
+            Message::SwapAck { epoch, swapped: true, .. } => Ok(epoch),
+            Message::SwapAck { swapped: false, reason, .. } => {
+                Err(Error::Distributed(format!("swap rejected: {reason}")))
+            }
             other => Err(Error::Distributed(format!("unexpected {other:?}"))),
         }
     }
@@ -159,17 +311,23 @@ mod tests {
         train(&data, &SvddParams::gaussian(0.35, 0.01)).unwrap()
     }
 
+    fn shifted_model() -> SvddModel {
+        let mut data = Banana::default().generate(600, 2);
+        for i in 0..data.rows() {
+            data.row_mut(i)[0] += 6.0;
+        }
+        train(&data, &SvddParams::gaussian(0.35, 0.01)).unwrap()
+    }
+
+    fn spawn_native(model: SvddModel, policy: BatchPolicy) -> ScoreServer {
+        ScoreServer::spawn("127.0.0.1:0", model, policy, |m, zs| Ok(m.dist2_batch(zs)))
+            .unwrap()
+    }
+
     #[test]
     fn serve_score_roundtrip() {
         let m = model();
-        let m2 = m.clone();
-        let mut server = ScoreServer::spawn(
-            "127.0.0.1:0",
-            m.clone(),
-            BatchPolicy::default(),
-            move |zs| Ok(m2.dist2_batch(zs)),
-        )
-        .unwrap();
+        let mut server = spawn_native(m.clone(), BatchPolicy::default());
         let mut client = ScoreClient::connect(server.addr()).unwrap();
         let zs = Banana::default().generate(33, 2);
         let (dist2, r2) = client.score(&zs).unwrap();
@@ -183,16 +341,12 @@ mod tests {
     #[test]
     fn concurrent_clients_coalesce() {
         let m = model();
-        let m2 = m.clone();
         let policy = BatchPolicy {
             target_batch: 64,
             linger: std::time::Duration::from_millis(20),
             capacity: 1 << 16,
         };
-        let mut server = ScoreServer::spawn("127.0.0.1:0", m.clone(), policy, move |zs| {
-            Ok(m2.dist2_batch(zs))
-        })
-        .unwrap();
+        let mut server = spawn_native(m.clone(), policy);
         let addr = server.addr();
         let threads: Vec<_> = (0..6)
             .map(|i| {
@@ -221,14 +375,7 @@ mod tests {
     #[test]
     fn multiple_requests_per_connection() {
         let m = model();
-        let m2 = m.clone();
-        let mut server = ScoreServer::spawn(
-            "127.0.0.1:0",
-            m.clone(),
-            BatchPolicy::default(),
-            move |zs| Ok(m2.dist2_batch(zs)),
-        )
-        .unwrap();
+        let mut server = spawn_native(m.clone(), BatchPolicy::default());
         let mut client = ScoreClient::connect(server.addr()).unwrap();
         for seed in 0..5 {
             let zs = Banana::default().generate(8, seed);
@@ -238,5 +385,126 @@ mod tests {
         client.close();
         server.stop();
         assert_eq!(server.metrics.rows_scored.get(), 40);
+    }
+
+    #[test]
+    fn model_info_reports_active_model() {
+        let m = model();
+        let mut server = spawn_native(m.clone(), BatchPolicy::default());
+        let mut client = ScoreClient::connect(server.addr()).unwrap();
+        let info = client.model_info().unwrap();
+        assert_eq!(info.version, m.content_id());
+        assert_eq!(info.r2, m.r2());
+        assert_eq!(info.num_sv, m.num_sv());
+        assert_eq!(info.dim, 2);
+        assert_eq!(info.epoch, 0);
+        client.close();
+        server.stop();
+    }
+
+    #[test]
+    fn remote_swap_changes_served_model_without_reconnect() {
+        let m1 = model();
+        let m2 = shifted_model();
+        let mut server = spawn_native(m1.clone(), BatchPolicy::default());
+        let mut client = ScoreClient::connect(server.addr()).unwrap();
+        let zs = Banana::default().generate(12, 9);
+
+        let (before, r2_before) = client.score(&zs).unwrap();
+        assert_eq!(before, m1.dist2_batch(&zs));
+        assert_eq!(r2_before, m1.r2());
+
+        // swap over a *second* connection while the first stays open
+        let mut admin = ScoreClient::connect(server.addr()).unwrap();
+        assert_eq!(admin.swap_model(&m2).unwrap(), 1);
+        admin.close();
+
+        // v2 scores close to the original (JSON roundtrip of the model
+        // reproduces dist2 almost exactly; shortest-roundtrip float
+        // printing makes it bit-exact)
+        let (after, r2_after) = client.score(&zs).unwrap();
+        assert_eq!(after, m2.dist2_batch(&zs));
+        assert_eq!(r2_after, m2.r2());
+
+        let info = client.model_info().unwrap();
+        assert_eq!(info.epoch, 1);
+        assert_eq!(info.version, m2.content_id());
+        client.close();
+        server.stop();
+        assert_eq!(server.metrics.model_swaps.get(), 1);
+    }
+
+    #[test]
+    fn bad_swap_payload_rejected_connection_survives() {
+        let m = model();
+        let mut server = spawn_native(m.clone(), BatchPolicy::default());
+        let mut client = ScoreClient::connect(server.addr()).unwrap();
+
+        // hand-roll a bogus SwapModel frame
+        Message::SwapModel { model_json: "{not json".into() }
+            .write_to(&mut client.stream)
+            .unwrap();
+        match Message::read_from(&mut client.stream).unwrap() {
+            Message::SwapAck { swapped, epoch, .. } => {
+                assert!(!swapped);
+                assert_eq!(epoch, 0);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+
+        // the same connection still scores fine on the original model
+        let zs = Banana::default().generate(5, 3);
+        let (dist2, r2) = client.score(&zs).unwrap();
+        assert_eq!(dist2, m.dist2_batch(&zs));
+        assert_eq!(r2, m.r2());
+        client.close();
+        server.stop();
+        assert_eq!(server.metrics.model_swaps.get(), 0);
+    }
+
+    #[test]
+    fn remote_swap_can_be_disabled() {
+        let m1 = model();
+        let m2 = shifted_model();
+        let mut server = spawn_native(m1.clone(), BatchPolicy::default());
+        server.set_remote_swap_enabled(false);
+        let mut client = ScoreClient::connect(server.addr()).unwrap();
+        let err = client.swap_model(&m2).unwrap_err();
+        assert!(err.to_string().contains("disabled"), "{err}");
+        // the connection survives, still serving the original model,
+        // and local (lifecycle) swaps keep working
+        let zs = Banana::default().generate(6, 11);
+        let (dist2, r2) = client.score(&zs).unwrap();
+        assert_eq!(dist2, m1.dist2_batch(&zs));
+        assert_eq!(r2, m1.r2());
+        assert_eq!(server.swap_model(m2.clone()).unwrap(), 1);
+        let (after, _) = client.score(&zs).unwrap();
+        assert_eq!(after, m2.dist2_batch(&zs));
+        client.close();
+        server.stop();
+    }
+
+    #[test]
+    fn v1_client_still_served() {
+        // A v1 peer sends Hello{1} and only ever uses v1 frames.
+        let m = model();
+        let mut server = spawn_native(m.clone(), BatchPolicy::default());
+        let mut stream = TcpStream::connect(server.addr()).unwrap();
+        Message::Hello { version: 1 }.write_to(&mut stream).unwrap();
+        match Message::read_from(&mut stream).unwrap() {
+            Message::HelloAck { version } => assert_eq!(version, 1),
+            other => panic!("unexpected {other:?}"),
+        }
+        let zs = Banana::default().generate(4, 4);
+        Message::ScoreRequest { rows: zs.clone() }.write_to(&mut stream).unwrap();
+        match Message::read_from(&mut stream).unwrap() {
+            Message::ScoreReply { dist2, r2 } => {
+                assert_eq!(dist2, m.dist2_batch(&zs));
+                assert_eq!(r2, m.r2());
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        Message::Shutdown.write_to(&mut stream).ok();
+        server.stop();
     }
 }

@@ -4,6 +4,7 @@
 
 use crate::error::{Error, Result};
 use crate::svdd::kernel::Kernel;
+use crate::util::hash::Fnv1a;
 use crate::util::json::{arr, num, obj, s, Json};
 use crate::util::matrix::Matrix;
 
@@ -38,6 +39,20 @@ impl SvddModel {
         }
         if sv.is_empty() {
             return Err(Error::invalid("model with no support vectors"));
+        }
+        // Non-finite guard: a NaN/inf threshold or weight silently
+        // poisons every score downstream (and round-trips through JSON
+        // as garbage), so refuse to construct such a model at all.
+        if !r2.is_finite() || !w.is_finite() {
+            return Err(Error::invalid(format!(
+                "non-finite model constants: r2={r2}, w={w}"
+            )));
+        }
+        if alpha.iter().any(|a| !a.is_finite()) {
+            return Err(Error::invalid("non-finite alpha coefficient"));
+        }
+        if sv.as_slice().iter().any(|v| !v.is_finite()) {
+            return Err(Error::invalid("non-finite support vector coordinate"));
         }
         let mut center = vec![0.0; sv.cols()];
         for (i, &a) in alpha.iter().enumerate() {
@@ -82,6 +97,46 @@ impl SvddModel {
     /// convergence criterion).
     pub fn center(&self) -> &[f64] {
         &self.center
+    }
+
+    // -------------------------------------------------------- identity
+
+    /// Stable content hash over everything that affects scoring: two
+    /// models that score identically hash identically, independent of
+    /// where or when they were trained. The registry derives
+    /// content-addressed version ids from this.
+    pub fn content_hash(&self) -> u64 {
+        let mut h = Fnv1a::new();
+        match self.kernel {
+            Kernel::Gaussian { bw } => {
+                h.write_u8(0);
+                h.write_f64(bw);
+            }
+            Kernel::Linear => h.write_u8(1),
+            Kernel::Polynomial { degree, coef } => {
+                h.write_u8(2);
+                h.write_u64(degree as u64);
+                h.write_f64(coef);
+            }
+        }
+        h.write_u64(self.sv.rows() as u64);
+        h.write_u64(self.sv.cols() as u64);
+        h.write_f64(self.r2);
+        h.write_f64(self.w);
+        for &a in &self.alpha {
+            h.write_f64(a);
+        }
+        for &v in self.sv.as_slice() {
+            h.write_f64(v);
+        }
+        h.finish()
+    }
+
+    /// Human-readable content-addressed id (`v-` + 16 hex digits of
+    /// [`SvddModel::content_hash`]) — the spelling used for registry
+    /// version ids and `Message::ModelInfo`.
+    pub fn content_id(&self) -> String {
+        format!("v-{:016x}", self.content_hash())
     }
 
     // --------------------------------------------------------- scoring
@@ -257,6 +312,38 @@ mod tests {
         // scoring identical
         let z = [0.3, -0.7];
         assert!((back.dist2(&z) - m.dist2(&z)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn content_hash_stable_and_discriminating() {
+        let m = toy_model();
+        assert_eq!(m.content_hash(), m.clone().content_hash());
+        assert_eq!(m.content_id(), format!("v-{:016x}", m.content_hash()));
+        // JSON roundtrip preserves identity bit-for-bit
+        let back = SvddModel::from_json(&m.to_json()).unwrap();
+        assert_eq!(back.content_hash(), m.content_hash());
+        // any scoring-relevant change moves the hash
+        let other = SvddModel::new(
+            m.support_vectors().clone(),
+            m.alpha().to_vec(),
+            m.kernel(),
+            m.r2() * 1.01,
+            m.w(),
+        )
+        .unwrap();
+        assert_ne!(other.content_hash(), m.content_hash());
+    }
+
+    #[test]
+    fn non_finite_models_rejected() {
+        let sv = Matrix::from_rows(&[vec![0.0, 1.0]]).unwrap();
+        let k = Kernel::gaussian(1.0);
+        assert!(SvddModel::new(sv.clone(), vec![1.0], k, f64::NAN, 0.5).is_err());
+        assert!(SvddModel::new(sv.clone(), vec![1.0], k, 0.5, f64::INFINITY).is_err());
+        assert!(SvddModel::new(sv.clone(), vec![f64::NAN], k, 0.5, 0.5).is_err());
+        let bad_sv = Matrix::from_rows(&[vec![0.0, f64::NEG_INFINITY]]).unwrap();
+        assert!(SvddModel::new(bad_sv, vec![1.0], k, 0.5, 0.5).is_err());
+        assert!(SvddModel::new(sv, vec![1.0], k, 0.5, 0.5).is_ok());
     }
 
     #[test]

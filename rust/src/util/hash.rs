@@ -1,0 +1,115 @@
+//! FNV-1a 64-bit hashing for content addressing.
+//!
+//! The model registry derives version ids from model contents and
+//! records a fingerprint of the training data alongside each version.
+//! FNV-1a is not cryptographic — it is a fast, dependency-free, stable
+//! hash whose collisions are irrelevant at registry scale (dozens of
+//! versions), and whose output is identical across platforms because
+//! every input is serialized to little-endian bytes first.
+
+use crate::util::matrix::Matrix;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Incremental FNV-1a 64 hasher.
+#[derive(Clone, Debug)]
+pub struct Fnv1a(u64);
+
+impl Default for Fnv1a {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Fnv1a {
+    pub fn new() -> Fnv1a {
+        Fnv1a(FNV_OFFSET)
+    }
+
+    pub fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(FNV_PRIME);
+        }
+    }
+
+    pub fn write_u8(&mut self, v: u8) {
+        self.write(&[v]);
+    }
+
+    pub fn write_u64(&mut self, v: u64) {
+        self.write(&v.to_le_bytes());
+    }
+
+    /// Hash the IEEE-754 bit pattern (distinguishes -0.0 / 0.0 and all
+    /// NaN payloads, matching the bitwise row model of
+    /// [`Matrix::dedup_rows`]).
+    pub fn write_f64(&mut self, v: f64) {
+        self.write(&v.to_bits().to_le_bytes());
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+/// One-shot hash of a byte slice.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = Fnv1a::new();
+    h.write(bytes);
+    h.finish()
+}
+
+/// Stable fingerprint of a data matrix (shape + element bits). The
+/// registry stores this next to each trained version so "was this
+/// champion trained on the same window?" is answerable after the fact.
+pub fn fingerprint_matrix(m: &Matrix) -> u64 {
+    let mut h = Fnv1a::new();
+    h.write_u64(m.rows() as u64);
+    h.write_u64(m.cols() as u64);
+    for &v in m.as_slice() {
+        h.write_f64(v);
+    }
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // Standard FNV-1a 64 test vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn incremental_matches_oneshot() {
+        let mut h = Fnv1a::new();
+        h.write(b"foo");
+        h.write(b"bar");
+        assert_eq!(h.finish(), fnv1a64(b"foobar"));
+    }
+
+    #[test]
+    fn matrix_fingerprint_sensitive_to_shape_and_values() {
+        let a = Matrix::from_vec(vec![1.0, 2.0, 3.0, 4.0], 2, 2).unwrap();
+        let b = Matrix::from_vec(vec![1.0, 2.0, 3.0, 4.0], 4, 1).unwrap();
+        let c = Matrix::from_vec(vec![1.0, 2.0, 3.0, 5.0], 2, 2).unwrap();
+        assert_ne!(fingerprint_matrix(&a), fingerprint_matrix(&b));
+        assert_ne!(fingerprint_matrix(&a), fingerprint_matrix(&c));
+        assert_eq!(fingerprint_matrix(&a), fingerprint_matrix(&a.clone()));
+    }
+
+    #[test]
+    fn float_bits_distinguish_signed_zero() {
+        let mut h1 = Fnv1a::new();
+        h1.write_f64(0.0);
+        let mut h2 = Fnv1a::new();
+        h2.write_f64(-0.0);
+        assert_ne!(h1.finish(), h2.finish());
+    }
+}

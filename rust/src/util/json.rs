@@ -2,10 +2,11 @@
 //!
 //! The vendored crate set has `serde_derive` but not the `serde` facade,
 //! so this module provides the small amount of JSON the system needs:
-//! reading `artifacts/manifest.json`, reading run configs, and writing
-//! bench results. It is a complete JSON subset parser (objects, arrays,
-//! strings with escapes, numbers, booleans, null); the only deliberate
-//! omission is `\u` surrogate-pair decoding beyond the BMP.
+//! reading `artifacts/manifest.json`, reading registry manifests and
+//! run configs, and writing bench results. It is a complete JSON parser
+//! (objects, arrays, strings with escapes — including `\u` surrogate
+//! pairs for non-BMP scalars — numbers, booleans, null); unpaired
+//! surrogates are rejected rather than silently replaced.
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -319,18 +320,39 @@ impl<'a> Parser<'a> {
                         Some(b'b') => s.push('\u{8}'),
                         Some(b'f') => s.push('\u{c}'),
                         Some(b'u') => {
-                            let hex = self
-                                .bytes
-                                .get(self.pos + 1..self.pos + 5)
-                                .ok_or_else(|| Error::Json("bad \\u escape".into()))?;
-                            let code = u32::from_str_radix(
-                                std::str::from_utf8(hex)
-                                    .map_err(|_| Error::Json("bad \\u escape".into()))?,
-                                16,
-                            )
-                            .map_err(|_| Error::Json("bad \\u escape".into()))?;
-                            s.push(char::from_u32(code).unwrap_or('\u{fffd}'));
-                            self.pos += 4;
+                            self.pos += 1; // past 'u'
+                            let hi = self.hex4()?;
+                            let ch = if (0xD800..0xDC00).contains(&hi) {
+                                // High surrogate: a low surrogate escape
+                                // must follow; together they encode one
+                                // scalar beyond the BMP (RFC 8259 §7).
+                                if self.peek() == Some(b'\\')
+                                    && self.bytes.get(self.pos + 1) == Some(&b'u')
+                                {
+                                    self.pos += 2;
+                                    let lo = self.hex4()?;
+                                    if !(0xDC00..0xE000).contains(&lo) {
+                                        return Err(Error::Json(format!(
+                                            "invalid low surrogate \\u{lo:04x} after \\u{hi:04x}"
+                                        )));
+                                    }
+                                    let code = 0x1_0000 + ((hi - 0xD800) << 10) + (lo - 0xDC00);
+                                    char::from_u32(code)
+                                        .expect("surrogate pair decodes to a valid scalar")
+                                } else {
+                                    return Err(Error::Json(format!(
+                                        "unpaired high surrogate \\u{hi:04x}"
+                                    )));
+                                }
+                            } else if (0xDC00..0xE000).contains(&hi) {
+                                return Err(Error::Json(format!(
+                                    "unpaired low surrogate \\u{hi:04x}"
+                                )));
+                            } else {
+                                char::from_u32(hi).expect("non-surrogate BMP scalar")
+                            };
+                            s.push(ch);
+                            continue;
                         }
                         other => {
                             return Err(Error::Json(format!("bad escape {other:?}")));
@@ -350,6 +372,24 @@ impl<'a> Parser<'a> {
                 }
             }
         }
+    }
+
+    /// Four hex digits at the cursor (the payload of a `\u` escape).
+    fn hex4(&mut self) -> Result<u32> {
+        let hex = self
+            .bytes
+            .get(self.pos..self.pos + 4)
+            .ok_or_else(|| Error::Json("truncated \\u escape".into()))?;
+        if !hex.iter().all(|b| b.is_ascii_hexdigit()) {
+            return Err(Error::Json(format!(
+                "bad \\u escape at byte {}",
+                self.pos
+            )));
+        }
+        let code = u32::from_str_radix(std::str::from_utf8(hex).unwrap(), 16)
+            .expect("validated hex digits");
+        self.pos += 4;
+        Ok(code)
     }
 
     fn number(&mut self) -> Result<Json> {
@@ -416,6 +456,45 @@ mod tests {
         assert_eq!(Json::parse(&text).unwrap(), src);
         let text2 = src.to_string();
         assert_eq!(Json::parse(&text2).unwrap(), src);
+    }
+
+    #[test]
+    fn parse_bmp_unicode_escapes() {
+        let v = Json::parse(r#""Aé中""#).unwrap();
+        assert_eq!(v.as_str(), Some("Aé中"));
+    }
+
+    #[test]
+    fn parse_surrogate_pairs_beyond_bmp() {
+        // U+1F600 GRINNING FACE and U+10348 GOTHIC LETTER HWAIR
+        let v = Json::parse(r#""😀 𐍈""#).unwrap();
+        assert_eq!(v.as_str(), Some("\u{1F600} \u{10348}"));
+    }
+
+    #[test]
+    fn astral_roundtrip_raw_and_escaped() {
+        let src = Json::Str("mixed \u{1F680} text \u{10348}…".into());
+        // writer emits raw UTF-8; the parser must read it back exactly
+        let back = Json::parse(&src.to_string()).unwrap();
+        assert_eq!(back, src);
+        // and the surrogate-pair spelling of the same string parses equal
+        let escaped = "\"mixed \\ud83d\\ude80 text \\ud800\\udf48…\"";
+        assert_eq!(Json::parse(escaped).unwrap(), src);
+    }
+
+    #[test]
+    fn unpaired_surrogates_rejected() {
+        assert!(Json::parse(r#""\ud83d""#).is_err()); // lone high
+        assert!(Json::parse(r#""\ud83d!""#).is_err()); // high + raw char
+        assert!(Json::parse(r#""\ud83dA""#).is_err()); // high + BMP
+        assert!(Json::parse(r#""\ude00""#).is_err()); // lone low
+    }
+
+    #[test]
+    fn malformed_unicode_escape_rejected() {
+        assert!(Json::parse(r#""\u12""#).is_err());
+        assert!(Json::parse(r#""\uzzzz""#).is_err());
+        assert!(Json::parse(r#""\u+123""#).is_err());
     }
 
     #[test]

@@ -1,6 +1,8 @@
 //! Self-contained substrates the vendored crate set does not provide:
-//! RNG, JSON, statistics, a flat matrix, timing and table rendering.
+//! RNG, JSON, hashing, statistics, a flat matrix, timing and table
+//! rendering.
 
+pub mod hash;
 pub mod json;
 pub mod matrix;
 pub mod rng;

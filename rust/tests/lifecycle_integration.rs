@@ -1,0 +1,176 @@
+//! End-to-end model-lifecycle test: a live scoring server keeps
+//! answering concurrent clients with zero errors while a
+//! drift-triggered warm-start retrain produces a new version, the
+//! registry promotes it and hot-swaps it into the serve path — then an
+//! operator rollback restores the previous champion, all without a
+//! single dropped connection.
+
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use fastsvdd::data::{banana::Banana, Generator};
+use fastsvdd::registry::{Lifecycle, Registry};
+use fastsvdd::sampling::{SamplingConfig, StreamingConfig, StreamingSvdd};
+use fastsvdd::scoring::{BatchPolicy, ScoreClient, ScoreServer};
+use fastsvdd::svdd::SvddParams;
+use fastsvdd::util::matrix::Matrix;
+
+fn shifted_banana(n: usize, seed: u64) -> Matrix {
+    let mut m = Banana::default().generate(n, seed);
+    for i in 0..m.rows() {
+        m.row_mut(i)[0] += 8.0;
+    }
+    m
+}
+
+#[test]
+fn lifecycle_drift_retrain_swap_and_rollback_under_load() {
+    let params = SvddParams::gaussian(0.35, 0.001);
+    let cfg = SamplingConfig { sample_size: 6, ..Default::default() };
+    let dir = std::env::temp_dir().join(format!(
+        "fastsvdd_e2e_lifecycle_{}",
+        std::process::id()
+    ));
+    std::fs::remove_dir_all(&dir).ok();
+
+    // ---- v1: bootstrap a champion from regime A ----
+    let regime_a = Banana::default().generate(3000, 1);
+    let mut boot = Lifecycle::new(Registry::open(&dir).unwrap(), params, cfg);
+    let r1 = boot.retrain(&regime_a, 7).unwrap();
+    assert!(!r1.warm_start, "empty registry must cold-start");
+    let (id1, v1) = boot.registry().champion_model().unwrap().unwrap();
+    assert_eq!(id1, r1.id);
+    drop(boot);
+
+    // ---- serve v1, wire the lifecycle to the server's slot ----
+    let policy = BatchPolicy {
+        target_batch: 32,
+        linger: Duration::from_micros(200),
+        capacity: 1 << 16,
+    };
+    let mut server =
+        ScoreServer::spawn("127.0.0.1:0", v1.clone(), policy, |m, zs| Ok(m.dist2_batch(zs)))
+            .unwrap();
+    let mut lifecycle = Lifecycle::new(Registry::open(&dir).unwrap(), params, cfg)
+        .with_slot(server.slot())
+        .with_metrics(server.metrics.clone());
+
+    // ---- concurrent clients hammer the server across the swap ----
+    let stop = Arc::new(AtomicBool::new(false));
+    let errors = Arc::new(AtomicU64::new(0));
+    let addr = server.addr();
+    let zs = Banana::default().generate(8, 9);
+    let clients: Vec<_> = (0..3)
+        .map(|_| {
+            let stop = stop.clone();
+            let errors = errors.clone();
+            let zs = zs.clone();
+            std::thread::spawn(move || {
+                let mut seen_r2 = HashSet::new();
+                let mut replies = 0u64;
+                match ScoreClient::connect(addr) {
+                    Ok(mut client) => {
+                        while !stop.load(Ordering::Relaxed) {
+                            match client.score(&zs) {
+                                Ok((dist2, r2)) => {
+                                    assert_eq!(dist2.len(), zs.rows());
+                                    seen_r2.insert(r2.to_bits());
+                                    replies += 1;
+                                }
+                                Err(_) => {
+                                    errors.fetch_add(1, Ordering::Relaxed);
+                                }
+                            }
+                        }
+                        client.close();
+                    }
+                    Err(_) => {
+                        errors.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                (replies, seen_r2)
+            })
+        })
+        .collect();
+
+    // ---- drift on regime B triggers a warm-start retrain ----
+    let monitor_cfg = StreamingConfig {
+        window: 128,
+        sample_size: 6,
+        drift_threshold: 0.02,
+        drift_patience: 1,
+    };
+    let mut monitor = StreamingSvdd::new(params, monitor_cfg, 11);
+    let warmup = regime_a.gather(&(0..512).collect::<Vec<_>>());
+    monitor.push_batch(&warmup).unwrap();
+    let regime_b = shifted_banana(3000, 2);
+    let mut report = None;
+    for i in 0..regime_b.rows() {
+        if let Some(status) = monitor.push(regime_b.row(i)).unwrap() {
+            if let Some(rep) = lifecycle.observe(status, &regime_b, 1234).unwrap() {
+                report = Some(rep);
+                break;
+            }
+        }
+    }
+    let r2rep = report.expect("regime change never reported Drifted");
+    assert!(r2rep.warm_start, "champion existed, retrain must warm-start");
+    assert_ne!(r2rep.id, r1.id, "new regime must produce a new version");
+    assert!(r2rep.epoch.is_some(), "retrain must hot-swap the serving slot");
+
+    // let the clients observe v2, then stop them: zero errors end to end
+    std::thread::sleep(Duration::from_millis(100));
+    stop.store(true, Ordering::Relaxed);
+    let mut total_replies = 0u64;
+    let mut seen_r2 = HashSet::new();
+    for t in clients {
+        let (replies, seen) = t.join().unwrap();
+        total_replies += replies;
+        seen_r2.extend(seen);
+    }
+    assert_eq!(
+        errors.load(Ordering::Relaxed),
+        0,
+        "clients saw errors across the hot-swap"
+    );
+    assert!(total_replies > 0, "clients never scored");
+    // every reply carried exactly one of the two promoted thresholds
+    let allowed: HashSet<u64> = [v1.r2().to_bits(), r2rep.r2.to_bits()].into();
+    assert!(
+        seen_r2.is_subset(&allowed),
+        "a reply carried a threshold of neither version"
+    );
+
+    // ---- subsequent replies reflect v2 ----
+    let mut probe = ScoreClient::connect(addr).unwrap();
+    let (_, r2_now) = probe.score(&zs).unwrap();
+    assert_eq!(r2_now.to_bits(), r2rep.r2.to_bits());
+    let info = probe.model_info().unwrap();
+    assert_eq!(info.version, r2rep.id.as_str());
+    assert!(info.epoch >= 1);
+
+    // ---- the registry lists both versions, champion = v2 ----
+    let entries = lifecycle.registry().list().unwrap();
+    assert_eq!(entries.len(), 2);
+    let ids: Vec<_> = entries.iter().map(|e| e.id.clone()).collect();
+    assert!(ids.contains(&r1.id) && ids.contains(&r2rep.id));
+    for e in &entries {
+        assert_eq!(e.meta.warm_start, e.id == r2rep.id);
+    }
+    assert_eq!(lifecycle.registry().champion().unwrap().unwrap().id, r2rep.id);
+
+    // ---- rollback restores v1 on the live serve path ----
+    let back = lifecycle.rollback().unwrap();
+    assert_eq!(back, r1.id);
+    let (_, r2_back) = probe.score(&zs).unwrap();
+    assert_eq!(r2_back.to_bits(), v1.r2().to_bits());
+    assert_eq!(probe.model_info().unwrap().version, r1.id.as_str());
+    probe.close();
+
+    assert!(server.metrics.model_swaps.get() >= 2, "retrain + rollback swaps");
+    assert_eq!(server.metrics.retrains_warm.get(), 1);
+    server.stop();
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -4,10 +4,11 @@
 
 use fastsvdd::data::polygon::Polygon;
 use fastsvdd::distributed::message::Message;
+use fastsvdd::registry::VersionMeta;
 use fastsvdd::sampling::{ConvergenceCriteria, ConvergenceTracker};
 use fastsvdd::scoring::F1Score;
 use fastsvdd::svdd::smo::{solve, DenseKernel, SmoOptions};
-use fastsvdd::svdd::{Kernel, SvddParams};
+use fastsvdd::svdd::{Kernel, SvddModel, SvddParams};
 use fastsvdd::testutil::prop::{forall, Gen};
 use fastsvdd::util::json::Json;
 use fastsvdd::util::matrix::Matrix;
@@ -153,6 +154,75 @@ fn prop_json_roundtrip() {
         let v = random_json(g, 3);
         assert_eq!(Json::parse(&v.to_string()).unwrap(), v);
         assert_eq!(Json::parse(&v.to_string_pretty()).unwrap(), v);
+    });
+}
+
+/// Registry version metadata survives the manifest JSON round-trip
+/// exactly (including the full-width u64 fingerprint, which is stored
+/// as hex because f64 cannot carry 64 bits), and the non-finite guard
+/// rejects metadata that cannot describe a servable model.
+#[test]
+fn prop_version_meta_json_roundtrip() {
+    forall("version meta roundtrip", 60, |g| {
+        let meta = VersionMeta {
+            r2: g.f64_in(1e-6, 2.0),
+            num_sv: g.usize_in(1, 500),
+            dim: g.usize_in(1, 64),
+            rows: g.usize_in(0, 1 << 20),
+            sample_size: g.usize_in(0, 64),
+            iterations: g.usize_in(0, 1000),
+            converged: g.bool(),
+            warm_start: g.bool(),
+            bandwidth: if g.bool() { Some(g.f64_in(0.01, 10.0)) } else { None },
+            data_fingerprint: ((g.usize_in(0, u32::MAX as usize) as u64) << 32)
+                | g.usize_in(0, u32::MAX as usize) as u64,
+            created_unix: g.usize_in(0, 1 << 40) as u64,
+        };
+        let pretty = meta.to_json().to_string_pretty();
+        let back = VersionMeta::from_json(&Json::parse(&pretty).unwrap()).unwrap();
+        assert_eq!(back, meta);
+        let compact = meta.to_json().to_string();
+        assert_eq!(VersionMeta::from_json(&Json::parse(&compact).unwrap()).unwrap(), meta);
+        // non-finite R^2 / bandwidth can never be published
+        let mut bad = meta.clone();
+        bad.r2 = *g.choose(&[f64::NAN, f64::INFINITY, f64::NEG_INFINITY]);
+        assert!(bad.validate().is_err());
+        let mut bad = meta;
+        bad.bandwidth = Some(f64::NAN);
+        assert!(bad.validate().is_err());
+    });
+}
+
+/// Registry model files round-trip bit-exactly: the JSON spelling of a
+/// model reloads to the same content hash and the same scores, so a
+/// content-addressed id names the same boundary forever. Non-finite
+/// alphas are refused at construction (they would poison every score).
+#[test]
+fn prop_registry_model_json_roundtrip() {
+    forall("registry model roundtrip", 25, |g| {
+        let n = g.usize_in(2, 12);
+        let m = g.usize_in(1, 4);
+        let sv = random_points(g, n, m, 2.0);
+        let mut alpha: Vec<f64> = (0..n).map(|_| g.f64_in(1e-3, 1.0)).collect();
+        let sum: f64 = alpha.iter().sum();
+        for a in &mut alpha {
+            *a /= sum;
+        }
+        let kernel = Kernel::gaussian(g.f64_in(0.1, 3.0));
+        let model =
+            SvddModel::new(sv, alpha, kernel, g.f64_in(0.01, 1.5), g.f64_in(0.0, 1.0)).unwrap();
+        let text = model.to_json().to_string_pretty();
+        let back = SvddModel::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.content_hash(), model.content_hash());
+        assert_eq!(back.content_id(), model.content_id());
+        let z: Vec<f64> = (0..m).map(|_| g.normal()).collect();
+        assert_eq!(back.dist2(&z).to_bits(), model.dist2(&z).to_bits());
+        // non-finite guard: NaN alphas / thresholds never construct
+        let sv2 = back.support_vectors().clone();
+        assert!(SvddModel::new(sv2.clone(), vec![f64::NAN; n], kernel, 0.5, 0.5).is_err());
+        assert!(
+            SvddModel::new(sv2, back.alpha().to_vec(), kernel, f64::INFINITY, 0.5).is_err()
+        );
     });
 }
 
