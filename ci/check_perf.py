@@ -1,0 +1,117 @@
+#!/usr/bin/env python3
+"""Perf-regression gate for the CI bench-smoke job.
+
+Compares a bench's BENCH_*.json output against a committed baseline and
+fails (exit 1) when any gated metric regresses beyond tolerance.
+
+Checks (all optional, combined):
+  --higher-is-better k1,k2  current[k] >= baseline[k] * (1 - max_regression);
+                            reported as SKIP when the current run used
+                            fewer threads than the baseline capture
+                            (current["threads_mt"] < baseline["threads_mt"])
+                            — a weaker runner's absolute throughput is not
+                            comparable to a multi-thread baseline
+  --max-regression 0.20     tolerated fractional drop for the above
+  --min key=value           current[key] >= value (absolute floor,
+                            machine-independent — e.g. a speedup ratio)
+  --min-mt key=value        like --min, but skipped (reported as SKIP)
+                            when current["threads_mt"] <= 1 — a
+                            single-core machine cannot demonstrate a
+                            parallel speedup, and the bench's thread
+                            ladder degenerates to [1] there
+  --require-true k1,k2      current[k] must be boolean true (correctness
+                            flags the bench computes, e.g. bit-identity)
+
+Baselines live in ci/baselines/. To re-baseline after an intentional
+perf change, copy the bench JSON from a green run's artifacts over the
+baseline file and commit it alongside the change that justifies it.
+
+Stdlib only; runs on any python3.
+"""
+
+import argparse
+import json
+import sys
+
+
+def load(path):
+    with open(path) as fh:
+        return json.load(fh)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--current", required=True)
+    ap.add_argument("--higher-is-better", default="",
+                    help="comma-separated metric keys gated vs the baseline")
+    ap.add_argument("--max-regression", type=float, default=0.20,
+                    help="tolerated fractional drop vs baseline (default 0.20)")
+    ap.add_argument("--min", action="append", default=[],
+                    metavar="KEY=VALUE",
+                    help="absolute floor for a metric (repeatable)")
+    ap.add_argument("--min-mt", action="append", default=[],
+                    metavar="KEY=VALUE",
+                    help="absolute floor enforced only when "
+                         "current['threads_mt'] > 1 (repeatable)")
+    ap.add_argument("--require-true", default="",
+                    help="comma-separated keys that must be true")
+    args = ap.parse_args()
+
+    baseline = load(args.baseline)
+    current = load(args.current)
+    failures = []
+
+    def report(ok, line):
+        print(("PASS  " if ok else "FAIL  ") + line)
+        if not ok:
+            failures.append(line)
+
+    cur_threads = float(current.get("threads_mt", 1))
+    base_threads = float(baseline.get("threads_mt", 1))
+    comparable = cur_threads >= base_threads
+    for key in filter(None, args.higher_is_better.split(",")):
+        if not comparable:
+            print(f"SKIP  {key}: run used {cur_threads:.0f} thread(s) vs "
+                  f"baseline's {base_threads:.0f} — throughput not comparable")
+            continue
+        if key not in baseline:
+            report(False, f"{key}: missing from baseline {args.baseline}")
+            continue
+        if key not in current:
+            report(False, f"{key}: missing from current {args.current}")
+            continue
+        base, cur = float(baseline[key]), float(current[key])
+        floor = base * (1.0 - args.max_regression)
+        report(cur >= floor,
+               f"{key}: current {cur:.4g} vs baseline {base:.4g} "
+               f"(floor {floor:.4g}, -{args.max_regression:.0%} allowed)")
+
+    multi_threaded = float(current.get("threads_mt", 0)) > 1
+    for spec, mt_only in [(s, False) for s in args.min] + \
+                         [(s, True) for s in args.min_mt]:
+        key, _, value = spec.partition("=")
+        if mt_only and not multi_threaded:
+            print(f"SKIP  {key}: threads_mt <= 1, speedup floor not applicable")
+            continue
+        if key not in current:
+            report(False, f"{key}: missing from current {args.current}")
+            continue
+        cur, floor = float(current[key]), float(value)
+        report(cur >= floor, f"{key}: current {cur:.4g} vs absolute floor {floor:.4g}")
+
+    for key in filter(None, args.require_true.split(",")):
+        val = current.get(key)
+        report(val is True, f"{key}: expected true, got {val!r}")
+
+    if failures:
+        print(f"\nperf gate FAILED ({len(failures)} check(s)); "
+              "if this regression is intentional, re-baseline ci/baselines/ "
+              "(see ci/check_perf.py docstring)")
+        return 1
+    print("\nperf gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -8,16 +8,18 @@
 
 use std::path::Path;
 
-use fastsvdd::bench::{emit, measure, paper};
+use fastsvdd::bench::{emit, emit_text, measure, paper, scaled};
 use fastsvdd::runtime::SharedRuntime;
 use fastsvdd::sampling::{GramBackend, SamplingConfig, SamplingTrainer};
 use fastsvdd::scoring::Scorer;
 use fastsvdd::svdd::{train, Kernel};
+use fastsvdd::util::json::{num, obj, s};
 use fastsvdd::util::tables::{f, Table};
 
 fn main() {
     let d = paper::BANANA;
-    let data = d.generate(20_000, 42);
+    let rows = scaled(20_000, 2_000);
+    let data = d.generate(rows, 42);
     let params = d.params();
     let mut t = Table::new(
         "Perf: hot paths (mean over measured iters)",
@@ -26,34 +28,38 @@ fn main() {
 
     // L3: small-union solve (typical Algorithm-1 union: ~40 rows)
     let union = data.gather(&(0..40).collect::<Vec<_>>());
-    let m = measure(3, 30, || train(&union, &params).unwrap());
+    let m_solve = measure(3, 30, || train(&union, &params).unwrap());
     t.row(vec![
         "smo solve, 40-row union".into(),
-        f(m.mean * 1e3, 3),
-        f(m.min * 1e3, 3),
-        format!("{:.0} solves/s", 1.0 / m.mean),
+        f(m_solve.mean * 1e3, 3),
+        f(m_solve.min * 1e3, 3),
+        format!("{:.0} solves/s", 1.0 / m_solve.mean),
     ]);
 
     // L3: one full sampling train
     let cfg = SamplingConfig { sample_size: d.sample_size, ..Default::default() };
-    let m = measure(1, 5, || SamplingTrainer::new(params, cfg).train(&data, 7).unwrap());
+    let m_train = measure(1, 5, || SamplingTrainer::new(params, cfg).train(&data, 7).unwrap());
     let iters = SamplingTrainer::new(params, cfg).train(&data, 7).unwrap().iterations;
     t.row(vec![
-        "sampling train, banana 20k".into(),
-        f(m.mean * 1e3, 1),
-        f(m.min * 1e3, 1),
-        format!("{:.0} iters/s", iters as f64 / m.mean),
+        format!("sampling train, banana {rows}"),
+        f(m_train.mean * 1e3, 1),
+        f(m_train.min * 1e3, 1),
+        format!("{:.0} iters/s", iters as f64 / m_train.mean),
     ]);
 
     // scoring: native
-    let model = train(&data.gather(&(0..3000).collect::<Vec<_>>()), &params).unwrap();
+    let model = train(
+        &data.gather(&(0..scaled(3_000, 600).min(rows)).collect::<Vec<_>>()),
+        &params,
+    )
+    .unwrap();
     let zs = d.generate(8192, 9);
-    let m = measure(2, 10, || Scorer::native(&model).dist2_batch(&zs).unwrap());
+    let m_score = measure(2, 10, || Scorer::native(&model).dist2_batch(&zs).unwrap());
     t.row(vec![
         format!("native scoring ({} SVs)", model.num_sv()),
-        f(m.mean * 1e3, 2),
-        f(m.min * 1e3, 2),
-        format!("{:.0} rows/s", zs.rows() as f64 / m.mean),
+        f(m_score.mean * 1e3, 2),
+        f(m_score.min * 1e3, 2),
+        format!("{:.0} rows/s", zs.rows() as f64 / m_score.mean),
     ]);
 
     // scoring + gram: XLA (if artifacts are built)
@@ -91,7 +97,7 @@ fn main() {
     }
 
     // kernel cache ablation: mid-size full solve, tiny vs large cache
-    let mid = data.gather(&(0..4000).collect::<Vec<_>>());
+    let mid = data.gather(&(0..scaled(4_000, 800).min(rows)).collect::<Vec<_>>());
     let mut p_small = params;
     p_small.cache_bytes = 1; // one column only
     let m_nocache = measure(1, 3, || train(&mid, &p_small).unwrap());
@@ -110,4 +116,17 @@ fn main() {
     ]);
 
     emit("perf_hotpath", &t);
+
+    // machine-readable summary for the CI bench-smoke artifacts
+    let json = obj(vec![
+        ("bench", s("perf_hotpath")),
+        ("rows", num(rows as f64)),
+        ("smo_solve_ms", num(m_solve.mean * 1e3)),
+        ("sampling_train_ms", num(m_train.mean * 1e3)),
+        ("sampling_iters", num(iters as f64)),
+        ("native_score_rows_per_s", num(zs.rows() as f64 / m_score.mean)),
+        ("cache_speedup", num(m_nocache.mean / m_cache.mean)),
+    ]);
+    emit_text("BENCH_perf_hotpath.json", &json.to_string_pretty());
+    println!("wrote results/BENCH_perf_hotpath.json");
 }

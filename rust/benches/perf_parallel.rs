@@ -1,0 +1,162 @@
+//! Parallel execution subsystem perf: single- vs multi-thread
+//! throughput of the pooled hot paths, on a Tennessee-Eastman-sized
+//! workload (41-dim plant telemetry).
+//!
+//! - Gram matrix: `parallel::gram` rows/blocks at 1/2/4/auto threads,
+//!   entries/s + speedup vs 1 thread, with a bit-identity check against
+//!   the serial upper-triangle reference;
+//! - batch scoring: `SvddModel::dist2_batch_pooled` rows/s at 1 vs
+//!   multi threads, bit-identity across thread counts;
+//! - multi-candidate training: `candidates_per_iter` K=4 vs the
+//!   sequential K=1 Algorithm 1 (wall time + iterations to converge).
+//!
+//! Emits the usual table plus `results/BENCH_perf_parallel.json` — the
+//! file the CI `bench-smoke` job diffs against
+//! `ci/baselines/BENCH_perf_parallel.json` (see ci/check_perf.py).
+
+use fastsvdd::bench::{emit, emit_text, measure, measure_once, scaled};
+use fastsvdd::data::tennessee::TennesseePlant;
+use fastsvdd::parallel::{gram, Pool};
+use fastsvdd::sampling::{SamplingConfig, SamplingTrainer};
+use fastsvdd::svdd::bandwidth::median_heuristic;
+use fastsvdd::svdd::smo::DenseKernel;
+use fastsvdd::svdd::{train, SvddParams};
+use fastsvdd::util::json::{num, obj, s, Json};
+use fastsvdd::util::tables::{f, Table};
+
+fn main() {
+    let plant = TennesseePlant::default();
+    let rows = scaled(1_500, 384);
+    let data = plant.training(rows, 42);
+    let dim = data.cols();
+    let bw = median_heuristic(&data, 20_000, 1);
+    let kernel = fastsvdd::svdd::Kernel::gaussian(bw);
+
+    let auto = Pool::auto().threads();
+    // thread ladder: 1, then 2/4 where the machine has them, then auto.
+    // The last entry is the "mt" number the CI gate consumes, so never
+    // oversubscribe a tiny runner into a meaningless mt measurement —
+    // on a single core the ladder is just [1] and threads_mt = 1 tells
+    // ci/check_perf.py to skip the speedup floor.
+    let mut counts = vec![1usize];
+    for t in [2usize, 4] {
+        if t <= auto {
+            counts.push(t);
+        }
+    }
+    if auto > 4 {
+        counts.push(auto);
+    }
+
+    let mut t = Table::new(
+        &format!("Perf: parallel subsystem ({rows}x{dim} tennessee, {auto} cores)"),
+        &["path", "threads", "mean_ms", "throughput", "vs 1 thread"],
+    );
+
+    // ---- Gram matrix: parallel row blocks ----
+    let entries = (rows * rows) as f64;
+    let serial_ref = DenseKernel::from_data_serial(&data, kernel);
+    let mut gram_tp = Vec::new(); // (threads, entries/s)
+    let mut gram_identical = true;
+    for &threads in &counts {
+        let pool = Pool::new(threads);
+        let g = gram(&data, kernel, pool);
+        gram_identical &= g == serial_ref.as_slice();
+        let m = measure(1, 3, || gram(&data, kernel, pool));
+        let tp = entries / m.mean;
+        gram_tp.push((threads, tp));
+        let base = gram_tp[0].1;
+        t.row(vec![
+            "gram (row blocks)".into(),
+            threads.to_string(),
+            f(m.mean * 1e3, 1),
+            format!("{:.2}M entries/s", tp / 1e6),
+            format!("{:.2}x", tp / base),
+        ]);
+    }
+    assert!(gram_identical, "parallel gram diverged from serial reference");
+
+    // ---- batch scoring: parallel row chunks ----
+    let model = train(
+        &data.gather(&(0..rows.min(600)).collect::<Vec<_>>()),
+        &SvddParams::gaussian(bw, 0.01),
+    )
+    .unwrap();
+    let zs = plant.training(scaled(16_384, 4_096), 9);
+    let score_serial = model.dist2_batch_pooled(&zs, Pool::serial());
+    let mut score_tp = Vec::new();
+    let mut score_identical = true;
+    for &threads in &counts {
+        let pool = Pool::new(threads);
+        score_identical &= model.dist2_batch_pooled(&zs, pool) == score_serial;
+        let m = measure(1, 5, || model.dist2_batch_pooled(&zs, pool));
+        let tp = zs.rows() as f64 / m.mean;
+        score_tp.push((threads, tp));
+        let base = score_tp[0].1;
+        t.row(vec![
+            format!("scoring ({} SVs)", model.num_sv()),
+            threads.to_string(),
+            f(m.mean * 1e3, 2),
+            format!("{:.0}k rows/s", tp / 1e3),
+            format!("{:.2}x", tp / base),
+        ]);
+    }
+    assert!(score_identical, "parallel scoring diverged from serial");
+
+    // ---- multi-candidate training: K=4 concurrent samples/iter ----
+    let params = SvddParams::gaussian(bw, 0.005);
+    let cfg1 = SamplingConfig { sample_size: dim + 1, ..Default::default() };
+    let cfg4 = SamplingConfig { candidates_per_iter: 4, ..cfg1 };
+    let (k1, t_k1) = measure_once(|| SamplingTrainer::new(params, cfg1).train(&data, 7).unwrap());
+    let (k4, t_k4) = measure_once(|| SamplingTrainer::new(params, cfg4).train(&data, 7).unwrap());
+    t.row(vec![
+        "sampling train K=1".into(),
+        "1".into(),
+        f(t_k1 * 1e3, 1),
+        format!("{} iters", k1.iterations),
+        "1.00x".into(),
+    ]);
+    t.row(vec![
+        "sampling train K=4 (best R^2)".into(),
+        auto.to_string(),
+        f(t_k4 * 1e3, 1),
+        format!("{} iters", k4.iterations),
+        format!("{:.2}x iters", k1.iterations as f64 / k4.iterations.max(1) as f64),
+    ]);
+
+    emit("perf_parallel", &t);
+
+    let mt = *gram_tp.last().unwrap();
+    let mt_score = *score_tp.last().unwrap();
+    let mut fields = vec![
+        ("bench", s("perf_parallel")),
+        ("rows", num(rows as f64)),
+        ("dim", num(dim as f64)),
+        ("cores", num(auto as f64)),
+        ("threads_mt", num(mt.0 as f64)),
+        ("gram_entries_per_s_1t", num(gram_tp[0].1)),
+    ];
+    // only emit the 4-thread rung if it actually ran — re-baselines copy
+    // this file verbatim, so no mislabeled fallbacks
+    if let Some(&(_, tp4)) = gram_tp.iter().find(|(th, _)| *th == 4) {
+        fields.push(("gram_entries_per_s_4t", num(tp4)));
+    }
+    fields.extend([
+        ("gram_entries_per_s_mt", num(mt.1)),
+        ("gram_speedup_mt", num(mt.1 / gram_tp[0].1)),
+        ("gram_bit_identical", Json::Bool(gram_identical)),
+        ("score_rows_per_s_1t", num(score_tp[0].1)),
+        ("score_rows_per_s_mt", num(mt_score.1)),
+        ("score_speedup_mt", num(mt_score.1 / score_tp[0].1)),
+        ("score_bit_identical", Json::Bool(score_identical)),
+        ("k1_iterations", num(k1.iterations as f64)),
+        ("k4_iterations", num(k4.iterations as f64)),
+        ("k1_train_ms", num(t_k1 * 1e3)),
+        ("k4_train_ms", num(t_k4 * 1e3)),
+        ("k1_r2", num(k1.model.r2())),
+        ("k4_r2", num(k4.model.r2())),
+    ]);
+    let json = obj(fields);
+    emit_text("BENCH_perf_parallel.json", &json.to_string_pretty());
+    println!("wrote results/BENCH_perf_parallel.json");
+}

@@ -128,7 +128,13 @@ COMMON OPTIONS (train):
     --bw <s>                  Gaussian bandwidth
     --f <frac>                expected outlier fraction
     --sample-size <n>         Algorithm-1 sample size
+    --candidates <k>          independent candidate samples per iteration,
+                              solved concurrently; best R^2 wins (default 1)
     --workers <p>             distributed worker count
+    --threads <auto|n>        worker threads for the shared parallel pool
+                              (Gram rows, SMO kernel columns, batch scoring;
+                              default auto = all cores). Results are
+                              bit-identical at any thread count.
     --seed <u64>              RNG seed
     --out <model.json>        save the trained model
     --trace <csv>             write the R^2 iteration trace (Fig 7)
@@ -137,13 +143,14 @@ COMMON OPTIONS (train):
 
 score:
     --model <model.json> --data <name> --rows <n> [--xla] [--artifacts <dir>]
+    [--threads auto|n]
 
 worker:
     --listen <addr:port>
 
 serve:
     --model <model.json> --listen <addr:port> [--xla] [--batch <rows>]
-    [--linger-ms <ms>]
+    [--linger-ms <ms>] [--threads auto|n]
     --registry <dir>          serve the registry champion instead of a file
     --watch                   poll the registry; hot-swap on promote
                               (zero dropped connections)

@@ -11,6 +11,8 @@ use crate::svdd::trainer::SvddParams;
 use crate::svdd::Kernel;
 use crate::util::json::Json;
 
+pub use crate::parallel::{ParallelismConfig, ThreadCount};
+
 /// Which training algorithm to run.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Method {
@@ -53,7 +55,12 @@ pub struct RunConfig {
     pub max_iter: usize,
     pub eps: f64,
     pub consecutive: usize,
+    /// Candidate samples solved concurrently per iteration (K >= 1;
+    /// 1 = the paper's sequential Algorithm 1).
+    pub candidates_per_iter: usize,
     pub workers: usize,
+    /// Worker threads for the shared parallel pool (`"auto"` or N).
+    pub threads: ThreadCount,
     pub seed: u64,
     /// "native" | "xla" (scoring engine).
     pub scorer: String,
@@ -72,7 +79,9 @@ impl Default for RunConfig {
             max_iter: 1000,
             eps: 1e-3,
             consecutive: 5,
+            candidates_per_iter: 1,
             workers: 4,
+            threads: ThreadCount::Auto,
             seed: 7,
             scorer: "native".into(),
             artifact_dir: "artifacts".into(),
@@ -96,8 +105,14 @@ impl RunConfig {
             eps_center: self.eps,
             eps_r2: self.eps,
             consecutive: self.consecutive,
+            candidates_per_iter: self.candidates_per_iter,
             record_trace: false,
         }
+    }
+
+    /// The pool configuration the launcher installs process-wide.
+    pub fn parallelism(&self) -> ParallelismConfig {
+        ParallelismConfig { threads: self.threads }
     }
 
     /// Load from a JSON file; unknown keys are rejected (typo guard).
@@ -124,7 +139,16 @@ impl RunConfig {
                 "max_iter" => cfg.max_iter = req_num(val, key)? as usize,
                 "eps" => cfg.eps = req_num(val, key)?,
                 "consecutive" => cfg.consecutive = req_num(val, key)? as usize,
+                "candidates_per_iter" => {
+                    cfg.candidates_per_iter = req_num(val, key)? as usize
+                }
                 "workers" => cfg.workers = req_num(val, key)? as usize,
+                "threads" => {
+                    cfg.threads = match val.as_str() {
+                        Some(s) => ThreadCount::parse(s)?,
+                        None => ThreadCount::Fixed(req_num(val, key)? as usize),
+                    }
+                }
                 "seed" => cfg.seed = req_num(val, key)? as u64,
                 "scorer" => cfg.scorer = req_str(val, key)?,
                 "artifact_dir" => cfg.artifact_dir = req_str(val, key)?,
@@ -149,6 +173,12 @@ impl RunConfig {
         }
         if self.sample_size < 2 {
             return Err(Error::Config("sample_size must be >= 2".into()));
+        }
+        if self.candidates_per_iter == 0 {
+            return Err(Error::Config("candidates_per_iter must be >= 1".into()));
+        }
+        if self.threads == ThreadCount::Fixed(0) {
+            return Err(Error::Config("threads must be 'auto' or >= 1".into()));
         }
         if !matches!(self.scorer.as_str(), "native" | "xla") {
             return Err(Error::Config(format!("unknown scorer '{}'", self.scorer)));
@@ -205,6 +235,23 @@ mod tests {
         assert!(RunConfig::from_json_text(r#"{"sample_size": 1}"#).is_err());
         assert!(RunConfig::from_json_text(r#"{"scorer": "gpu"}"#).is_err());
         assert!(RunConfig::from_json_text(r#"{"method": "magic"}"#).is_err());
+        assert!(RunConfig::from_json_text(r#"{"candidates_per_iter": 0}"#).is_err());
+        assert!(RunConfig::from_json_text(r#"{"threads": 0}"#).is_err());
+        assert!(RunConfig::from_json_text(r#"{"threads": "lots"}"#).is_err());
+    }
+
+    #[test]
+    fn threads_and_candidates_parse() {
+        let cfg = RunConfig::from_json_text(
+            r#"{"threads": "auto", "candidates_per_iter": 4}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.threads, ThreadCount::Auto);
+        assert_eq!(cfg.candidates_per_iter, 4);
+        assert_eq!(cfg.sampling().candidates_per_iter, 4);
+        let cfg = RunConfig::from_json_text(r#"{"threads": 8}"#).unwrap();
+        assert_eq!(cfg.threads, ThreadCount::Fixed(8));
+        assert_eq!(cfg.parallelism().threads, ThreadCount::Fixed(8));
     }
 
     #[test]

@@ -7,7 +7,9 @@
 //! - **Layer 3 (this crate)** — the paper's contribution: the iterative
 //!   sampling trainer ([`sampling`]), master-SV-set state management,
 //!   convergence detection, the distributed controller/worker topology
-//!   ([`distributed`]) and the batch scoring service ([`scoring`]).
+//!   ([`distributed`]) and the batch scoring service ([`scoring`]),
+//!   all running over a shared chunked thread pool ([`parallel`]) that
+//!   keeps seeded runs bit-identical at any thread count.
 //! - **Layer 2/1 (build-time Python)** — the SVDD compute graphs
 //!   (batched kernel-distance scoring, sample gram matrices) written in
 //!   JAX on top of Pallas kernels, AOT-lowered once to HLO text and
@@ -69,6 +71,7 @@ pub mod data;
 pub mod distributed;
 pub mod error;
 pub mod metrics;
+pub mod parallel;
 pub mod registry;
 pub mod runtime;
 pub mod sampling;

@@ -13,6 +13,7 @@ use fastsvdd::data::{shape_by_name, LabeledData};
 use fastsvdd::distributed::tcp::{train_tcp_cluster, WorkerServer};
 use fastsvdd::distributed::{train_local_cluster, DistributedConfig};
 use fastsvdd::error::{Error, Result};
+use fastsvdd::parallel::{self, ParallelismConfig, ThreadCount};
 use fastsvdd::registry::{sync_champion, Registry, VersionId, VersionMeta};
 use fastsvdd::runtime::SharedRuntime;
 use fastsvdd::sampling::SamplingTrainer;
@@ -52,6 +53,15 @@ fn run(argv: &[String]) -> Result<()> {
         }
         other => Err(Error::Config(format!("unknown command '{other}'; try help"))),
     }
+}
+
+/// Install the global thread pool from a bare `--threads` flag (the
+/// commands that don't go through `RunConfig`).
+fn install_threads_arg(args: &Args) -> Result<()> {
+    if let Some(v) = args.get("threads") {
+        parallel::install(ParallelismConfig { threads: ThreadCount::parse(v)? });
+    }
+    Ok(())
 }
 
 /// Materialize a named training set.
@@ -103,7 +113,11 @@ fn config_from_args(args: &Args) -> Result<RunConfig> {
     cfg.outlier_fraction = args.get_f64("f", cfg.outlier_fraction)?;
     cfg.sample_size = args.get_usize("sample-size", cfg.sample_size)?;
     cfg.max_iter = args.get_usize("max-iter", cfg.max_iter)?;
+    cfg.candidates_per_iter = args.get_usize("candidates", cfg.candidates_per_iter)?;
     cfg.workers = args.get_usize("workers", cfg.workers)?;
+    if let Some(v) = args.get("threads") {
+        cfg.threads = ThreadCount::parse(v)?;
+    }
     cfg.seed = args.get_u64("seed", cfg.seed)?;
     if args.flag("xla") {
         cfg.scorer = "xla".into();
@@ -118,19 +132,21 @@ fn config_from_args(args: &Args) -> Result<RunConfig> {
 fn cmd_train(args: &Args) -> Result<()> {
     args.expect_only(&[
         "config", "data", "rows", "method", "bw", "f", "sample-size", "max-iter",
-        "workers", "seed", "out", "trace", "xla", "artifacts", "addrs", "registry",
-        "promote",
+        "candidates", "workers", "threads", "seed", "out", "trace", "xla",
+        "artifacts", "addrs", "registry", "promote",
     ])?;
     let cfg = config_from_args(args)?;
+    parallel::install(cfg.parallelism());
     let data = training_data(&cfg.dataset, cfg.rows, cfg.seed)?;
     let params = cfg.params();
     println!(
-        "training: data={} rows={} method={:?} kernel={} f={}",
+        "training: data={} rows={} method={:?} kernel={} f={} threads={}",
         cfg.dataset,
         data.rows(),
         cfg.method,
         params.kernel,
-        cfg.outlier_fraction
+        cfg.outlier_fraction,
+        parallel::global().threads(),
     );
 
     let sw = Stopwatch::start();
@@ -143,7 +159,18 @@ fn cmd_train(args: &Args) -> Result<()> {
         Method::Sampling => {
             let mut scfg = cfg.sampling();
             scfg.record_trace = args.get("trace").is_some();
-            let out = SamplingTrainer::new(params, scfg).train(&data, cfg.seed)?;
+            // sample/union grams on the shared pool (bit-identical to
+            // the lazy path; the tiny solves are cost-gated to serial)
+            let pooled = fastsvdd::parallel::PooledGram::new();
+            let out = SamplingTrainer::new(params, scfg)
+                .with_backend(&pooled)
+                .train(&data, cfg.seed)?;
+            if scfg.candidates_per_iter > 1 {
+                println!(
+                    "  candidates: {} per iteration (best-R^2 promotion)",
+                    scfg.candidates_per_iter
+                );
+            }
             if let Some(path) = args.get("trace") {
                 let mut csv = String::from("iteration,r2,num_sv,center_delta\n");
                 for t in &out.trace {
@@ -225,7 +252,10 @@ fn cmd_train(args: &Args) -> Result<()> {
 }
 
 fn cmd_score(args: &Args) -> Result<()> {
-    args.expect_only(&["model", "data", "rows", "seed", "xla", "artifacts", "out"])?;
+    args.expect_only(&[
+        "model", "data", "rows", "seed", "xla", "artifacts", "out", "threads",
+    ])?;
+    install_threads_arg(args)?;
     let model_path = args
         .get("model")
         .ok_or_else(|| Error::Config("--model required".into()))?;
@@ -271,7 +301,10 @@ fn cmd_score(args: &Args) -> Result<()> {
 }
 
 fn cmd_grid(args: &Args) -> Result<()> {
-    args.expect_only(&["model", "out", "xla", "artifacts", "nx", "ny", "margin"])?;
+    args.expect_only(&[
+        "model", "out", "xla", "artifacts", "nx", "ny", "margin", "threads",
+    ])?;
+    install_threads_arg(args)?;
     let model_path = args
         .get("model")
         .ok_or_else(|| Error::Config("--model required".into()))?;
@@ -319,8 +352,9 @@ fn cmd_worker(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     args.expect_only(&[
         "model", "listen", "xla", "artifacts", "batch", "linger-ms", "registry",
-        "watch", "watch-interval-ms", "allow-remote-swap",
+        "watch", "watch-interval-ms", "allow-remote-swap", "threads",
     ])?;
+    install_threads_arg(args)?;
     let registry = match args.get("registry") {
         Some(dir) => Some(Registry::open(dir)?),
         None => None,

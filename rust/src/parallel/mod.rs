@@ -1,0 +1,545 @@
+//! Parallel execution subsystem: a dependency-free chunked thread pool
+//! the hot paths share.
+//!
+//! The paper's structure makes its dominant costs embarrassingly
+//! parallel — every iteration's Gram computation, every SMO kernel
+//! column, every scoring batch is a set of independent per-index
+//! evaluations. This module turns that independence into wall-clock
+//! speed without giving up the repo's reproducibility contract:
+//!
+//! - **Chunked, deterministically ordered.** Work is split into
+//!   fixed-size chunks of the output buffer; each chunk's destination
+//!   slice is determined by its index alone, so results land in the
+//!   same place no matter which worker computes them. Every per-index
+//!   computation the pool runs is a pure function of the index, which
+//!   makes parallel output **bit-identical** to the serial path at any
+//!   thread count (asserted by `tests/parallel_determinism.rs`).
+//! - **Scoped workers.** [`Pool::run_chunks`] spawns workers with
+//!   [`std::thread::scope`], so closures may borrow the data matrix and
+//!   model directly — no `Arc` wrapping, no `'static` bounds, no
+//!   third-party crate. Worker panics propagate to the caller.
+//! - **Cost-gated.** [`Pool::for_work`] falls back to the serial path
+//!   below [`MIN_PAR_WORK`] scalar operations, so the small
+//!   Algorithm-1 sample/union solves never pay thread-spawn overhead.
+//!
+//! The active degree of parallelism is process-global
+//! ([`install`] / [`global`]), configured from `--threads auto|N` or
+//! the `threads` config key, so every layer — trainer, SMO solver,
+//! batcher, score server — draws from one knob.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::error::{Error, Result};
+use crate::svdd::kernel::Kernel;
+use crate::util::matrix::Matrix;
+
+/// Below this many scalar operations a parallel region runs serially —
+/// scoped-thread spawn costs tens of microseconds, which dominates tiny
+/// workloads like the Algorithm-1 union solves (~40 rows x few dims).
+pub const MIN_PAR_WORK: usize = 1 << 16;
+
+/// Requested degree of parallelism: `auto` (all available cores) or a
+/// fixed thread count.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum ThreadCount {
+    /// Use `std::thread::available_parallelism()`.
+    #[default]
+    Auto,
+    /// Exactly this many worker threads (>= 1).
+    Fixed(usize),
+}
+
+impl ThreadCount {
+    /// Parse `"auto"` or a positive integer.
+    pub fn parse(s: &str) -> Result<ThreadCount> {
+        if s == "auto" {
+            return Ok(ThreadCount::Auto);
+        }
+        match s.parse::<usize>() {
+            Ok(n) if n >= 1 => Ok(ThreadCount::Fixed(n)),
+            _ => Err(Error::Config(format!(
+                "threads must be 'auto' or a positive integer, got '{s}'"
+            ))),
+        }
+    }
+
+    /// Resolve to a concrete thread count.
+    pub fn resolve(self) -> usize {
+        match self {
+            ThreadCount::Auto => available_cores(),
+            ThreadCount::Fixed(n) => n.max(1),
+        }
+    }
+}
+
+impl std::fmt::Display for ThreadCount {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ThreadCount::Auto => write!(f, "auto"),
+            ThreadCount::Fixed(n) => write!(f, "{n}"),
+        }
+    }
+}
+
+/// Process-wide parallelism settings (the `config/` face of this
+/// module; `RunConfig` carries one and the CLI `--threads` flag maps
+/// onto it).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ParallelismConfig {
+    pub threads: ThreadCount,
+}
+
+fn available_cores() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Global thread-count override: 0 = auto (resolve at use), else fixed.
+static GLOBAL_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    /// True on threads spawned by a pool region. Nested code that asks
+    /// for the [`global`] pool from inside a worker (e.g. a candidate
+    /// solve calling into the Gram path) gets the serial pool instead,
+    /// so fan-outs never multiply into `K x cores` oversubscription.
+    /// Explicit pools ([`Pool::new`], `with_pool`) are never demoted.
+    static IN_POOL_WORKER: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+/// Install the process-global parallelism config (idempotent; cheap).
+pub fn install(cfg: ParallelismConfig) {
+    let t = match cfg.threads {
+        ThreadCount::Auto => 0,
+        ThreadCount::Fixed(n) => n.max(1),
+    };
+    GLOBAL_THREADS.store(t, Ordering::Relaxed);
+}
+
+/// The pool every hot path uses unless handed an explicit override.
+/// Inside a pool worker this is the serial pool (see `IN_POOL_WORKER`),
+/// so nested parallel regions don't oversubscribe the machine.
+pub fn global() -> Pool {
+    if IN_POOL_WORKER.with(|c| c.get()) {
+        return Pool::serial();
+    }
+    match GLOBAL_THREADS.load(Ordering::Relaxed) {
+        0 => Pool::auto(),
+        t => Pool::new(t),
+    }
+}
+
+/// A chunked scoped-thread pool. `Pool` is a lightweight handle (just a
+/// degree of parallelism); workers are scoped to each call, so there is
+/// no shutdown protocol and borrowed data flows straight into workers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Pool {
+    threads: usize,
+}
+
+impl Pool {
+    /// Pool with exactly `threads` workers (clamped to >= 1).
+    pub fn new(threads: usize) -> Pool {
+        Pool { threads: threads.max(1) }
+    }
+
+    /// Pool sized to the machine.
+    pub fn auto() -> Pool {
+        Pool::new(available_cores())
+    }
+
+    /// Single-threaded pool (the serial reference path).
+    pub fn serial() -> Pool {
+        Pool { threads: 1 }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// This pool if `work_ops` (estimated scalar operations) is worth
+    /// parallelizing, else the serial pool.
+    pub fn for_work(self, work_ops: usize) -> Pool {
+        if work_ops < MIN_PAR_WORK {
+            Pool::serial()
+        } else {
+            self
+        }
+    }
+
+    /// Run `f(chunk_start, chunk)` over `out` split into consecutive
+    /// chunks of `chunk_len` (the final chunk may be shorter).
+    ///
+    /// Chunks are assigned to workers in contiguous blocks, but the
+    /// `(chunk_start, chunk)` pairs handed to `f` are exactly the same
+    /// set the serial path produces, and each output element belongs to
+    /// exactly one chunk — so any `f` that writes `chunk[i]` as a pure
+    /// function of `chunk_start + i` yields bit-identical output at
+    /// every thread count.
+    pub fn run_chunks<T, F>(&self, out: &mut [T], chunk_len: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        let len = out.len();
+        if len == 0 {
+            return;
+        }
+        let chunk_len = chunk_len.max(1);
+        let n_chunks = (len + chunk_len - 1) / chunk_len;
+        let workers = self.threads.min(n_chunks);
+        if workers <= 1 {
+            for (ci, chunk) in out.chunks_mut(chunk_len).enumerate() {
+                f(ci * chunk_len, chunk);
+            }
+            return;
+        }
+        std::thread::scope(|scope| {
+            let f = &f;
+            let mut rest = out;
+            let mut consumed = 0usize; // elements handed to workers so far
+            for w in 0..workers {
+                // worker w owns chunks [n_chunks*w/workers, n_chunks*(w+1)/workers)
+                let chunk_end = n_chunks * (w + 1) / workers;
+                let end_el = (chunk_end * chunk_len).min(len);
+                let (mine, tail) = std::mem::take(&mut rest).split_at_mut(end_el - consumed);
+                rest = tail;
+                let base = consumed;
+                consumed = end_el;
+                scope.spawn(move || {
+                    IN_POOL_WORKER.with(|c| c.set(true));
+                    for (ci, chunk) in mine.chunks_mut(chunk_len).enumerate() {
+                        f(base + ci * chunk_len, chunk);
+                    }
+                });
+            }
+        });
+    }
+
+    /// Like [`Pool::run_chunks`], but worker block boundaries equalize
+    /// cumulative per-chunk `weight` instead of chunk count. The chunk
+    /// set and every chunk's destination slice are unchanged — only
+    /// which worker runs which block differs — so output is identical
+    /// to [`Pool::run_chunks`] for the same `f`. Use when chunk costs
+    /// are systematically skewed (e.g. triangular Gram rows).
+    pub fn run_chunks_weighted<T, F, W>(&self, out: &mut [T], chunk_len: usize, weight: W, f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+        W: Fn(usize) -> usize,
+    {
+        let len = out.len();
+        if len == 0 {
+            return;
+        }
+        let chunk_len = chunk_len.max(1);
+        let n_chunks = (len + chunk_len - 1) / chunk_len;
+        let workers = self.threads.min(n_chunks);
+        if workers <= 1 {
+            for (ci, chunk) in out.chunks_mut(chunk_len).enumerate() {
+                f(ci * chunk_len, chunk);
+            }
+            return;
+        }
+        // close block b after the first chunk where cumulative weight
+        // reaches b/workers of the total (weights of 0 are fine)
+        let total: usize = (0..n_chunks).map(&weight).sum();
+        let mut bounds = Vec::with_capacity(workers + 1);
+        bounds.push(0usize);
+        let mut acc = 0usize;
+        let mut next = 1usize;
+        for ci in 0..n_chunks {
+            acc += weight(ci);
+            while next < workers && acc * workers >= total * next {
+                bounds.push(ci + 1);
+                next += 1;
+            }
+        }
+        while bounds.len() < workers {
+            bounds.push(n_chunks);
+        }
+        bounds.push(n_chunks);
+        std::thread::scope(|scope| {
+            let f = &f;
+            let mut rest = out;
+            let mut consumed = 0usize;
+            for w in 0..workers {
+                let end_el = (bounds[w + 1] * chunk_len).min(len);
+                if end_el <= consumed {
+                    continue; // empty block (heavily skewed weights)
+                }
+                let (mine, tail) = std::mem::take(&mut rest).split_at_mut(end_el - consumed);
+                rest = tail;
+                let base = consumed;
+                consumed = end_el;
+                scope.spawn(move || {
+                    IN_POOL_WORKER.with(|c| c.set(true));
+                    for (ci, chunk) in mine.chunks_mut(chunk_len).enumerate() {
+                        f(base + ci * chunk_len, chunk);
+                    }
+                });
+            }
+        });
+    }
+
+    /// `[f(0), f(1), ..., f(n-1)]` computed concurrently, collected in
+    /// index order. Used for coarse-grained tasks (one item = one model
+    /// solve), so no work gate is applied.
+    pub fn map<R, F>(&self, n: usize, f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(usize) -> R + Sync,
+    {
+        let mut out: Vec<Option<R>> = Vec::with_capacity(n);
+        out.resize_with(n, || None);
+        self.run_chunks(&mut out, 1, |start, chunk| {
+            for (off, slot) in chunk.iter_mut().enumerate() {
+                *slot = Some(f(start + off));
+            }
+        });
+        out.into_iter()
+            .map(|r| r.expect("pool map: index not produced"))
+            .collect()
+    }
+}
+
+impl Default for Pool {
+    fn default() -> Self {
+        global()
+    }
+}
+
+/// Row-major Gram matrix `K(data, data)`: the upper triangle is
+/// computed in parallel row blocks (row `i` is one chunk, evaluating
+/// `j >= i` into `k[i*n+j]`), then the strict lower triangle is
+/// mirrored with cheap copies. Exactly the same kernel evaluations as
+/// the serial reference ([`crate::svdd::smo::DenseKernel::from_data_serial`]),
+/// in the same per-entry arithmetic, so the result is bitwise identical
+/// at any thread count — and the serial path does no redundant
+/// symmetric work.
+pub fn gram(data: &Matrix, kernel: Kernel, pool: Pool) -> Vec<f64> {
+    let n = data.rows();
+    let mut k = vec![0.0; n * n];
+    if n == 0 {
+        return k;
+    }
+    // triangle halves the eval count; row i costs (n - i) evals, so
+    // worker blocks are weighted to keep the split balanced
+    let work = n * n * data.cols().max(1) / 2;
+    pool.for_work(work).run_chunks_weighted(&mut k, n, |ci| n - ci, |start, row| {
+        let i = start / n;
+        let xi = data.row(i);
+        for (j, slot) in row.iter_mut().enumerate().skip(i) {
+            *slot = kernel.eval(xi, data.row(j));
+        }
+    });
+    for i in 1..n {
+        for j in 0..i {
+            k[i * n + j] = k[j * n + i];
+        }
+    }
+    k
+}
+
+/// Native [`crate::sampling::GramBackend`] that computes sample/union
+/// Gram matrices on the pool — the multi-core fallback when no XLA
+/// artifact covers the shape.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PooledGram {
+    pool: Option<Pool>,
+}
+
+impl PooledGram {
+    /// Backend on the global pool.
+    pub fn new() -> PooledGram {
+        PooledGram { pool: None }
+    }
+
+    /// Backend pinned to an explicit pool (tests, benches).
+    pub fn with_pool(pool: Pool) -> PooledGram {
+        PooledGram { pool: Some(pool) }
+    }
+
+    fn pool(&self) -> Pool {
+        self.pool.unwrap_or_else(global)
+    }
+}
+
+impl crate::sampling::GramBackend for PooledGram {
+    fn gram(&self, data: &Matrix, kernel: Kernel) -> Option<Vec<f64>> {
+        Some(gram(data, kernel, self.pool()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thread_count_parses() {
+        assert_eq!(ThreadCount::parse("auto").unwrap(), ThreadCount::Auto);
+        assert_eq!(ThreadCount::parse("4").unwrap(), ThreadCount::Fixed(4));
+        assert!(ThreadCount::parse("0").is_err());
+        assert!(ThreadCount::parse("-1").is_err());
+        assert!(ThreadCount::parse("many").is_err());
+    }
+
+    #[test]
+    fn thread_count_resolves_positive() {
+        assert!(ThreadCount::Auto.resolve() >= 1);
+        assert_eq!(ThreadCount::Fixed(3).resolve(), 3);
+        assert_eq!(ThreadCount::Fixed(0).resolve(), 1);
+    }
+
+    #[test]
+    fn pool_clamps_to_one() {
+        assert_eq!(Pool::new(0).threads(), 1);
+        assert_eq!(Pool::serial().threads(), 1);
+        assert!(Pool::auto().threads() >= 1);
+    }
+
+    #[test]
+    fn for_work_gates_small_jobs() {
+        let p = Pool::new(8);
+        assert_eq!(p.for_work(10).threads(), 1);
+        assert_eq!(p.for_work(MIN_PAR_WORK).threads(), 8);
+    }
+
+    #[test]
+    fn run_chunks_fills_every_index() {
+        for &threads in &[1usize, 2, 3, 8] {
+            for &len in &[0usize, 1, 7, 64, 1000] {
+                for &chunk in &[1usize, 7, 64, 4096] {
+                    let mut out = vec![usize::MAX; len];
+                    Pool::new(threads).run_chunks(&mut out, chunk, |start, c| {
+                        for (off, slot) in c.iter_mut().enumerate() {
+                            *slot = start + off;
+                        }
+                    });
+                    for (i, &v) in out.iter().enumerate() {
+                        assert_eq!(v, i, "threads={threads} len={len} chunk={chunk}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn run_chunks_starts_are_chunk_aligned() {
+        let starts = std::sync::Mutex::new(Vec::new());
+        let mut out = vec![0u8; 103];
+        Pool::new(4).run_chunks(&mut out, 10, |start, chunk| {
+            assert_eq!(start % 10, 0);
+            assert!(chunk.len() == 10 || start + chunk.len() == 103);
+            starts.lock().unwrap().push(start);
+        });
+        let mut got = starts.into_inner().unwrap();
+        got.sort_unstable();
+        assert_eq!(got, (0..11).map(|c| c * 10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn weighted_chunks_match_uniform_chunks() {
+        let fill = |start: usize, c: &mut [usize]| {
+            for (off, slot) in c.iter_mut().enumerate() {
+                *slot = start + off;
+            }
+        };
+        for &threads in &[1usize, 2, 3, 8] {
+            for &len in &[1usize, 64, 1000] {
+                let mut a = vec![usize::MAX; len];
+                let mut b = vec![usize::MAX; len];
+                Pool::new(threads).run_chunks(&mut a, 10, fill);
+                Pool::new(threads).run_chunks_weighted(&mut b, 10, |ci| ci * ci + 1, fill);
+                assert_eq!(a, b, "threads={threads} len={len}");
+            }
+        }
+    }
+
+    #[test]
+    fn weighted_chunks_handle_skewed_and_zero_weights() {
+        let mut out = vec![usize::MAX; 57];
+        let huge_first = |ci: usize| if ci == 0 { 1000 } else { 0 };
+        Pool::new(4).run_chunks_weighted(&mut out, 5, huge_first, |start, c| {
+            for (off, slot) in c.iter_mut().enumerate() {
+                *slot = start + off;
+            }
+        });
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i);
+        }
+    }
+
+    #[test]
+    fn map_preserves_index_order() {
+        for &threads in &[1usize, 2, 8] {
+            let got = Pool::new(threads).map(100, |i| i * i);
+            let want: Vec<usize> = (0..100).map(|i| i * i).collect();
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn map_empty_is_empty() {
+        let got: Vec<usize> = Pool::new(4).map(0, |i| i);
+        assert!(got.is_empty());
+    }
+
+    #[test]
+    fn gram_matches_serial_triangle() {
+        // 41-d rows mimic the Tennessee plant shape; compare the
+        // parallel row-block gram to an explicit triangle+mirror.
+        let mut rng = crate::util::rng::Xoshiro256::new(9);
+        let rows: Vec<Vec<f64>> = (0..37)
+            .map(|_| (0..41).map(|_| rng.normal()).collect())
+            .collect();
+        let data = Matrix::from_rows(&rows).unwrap();
+        let kernel = Kernel::gaussian(1.7);
+        let n = data.rows();
+        let mut want = vec![0.0; n * n];
+        for i in 0..n {
+            for j in i..n {
+                let v = kernel.eval(data.row(i), data.row(j));
+                want[i * n + j] = v;
+                want[j * n + i] = v;
+            }
+        }
+        for &threads in &[1usize, 2, 8] {
+            let got = gram(&data, kernel, Pool::new(threads));
+            assert_eq!(got, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn global_install_roundtrip() {
+        // default (nothing installed) resolves to >= 1 threads
+        assert!(global().threads() >= 1);
+        install(ParallelismConfig { threads: ThreadCount::Fixed(3) });
+        assert_eq!(global().threads(), 3);
+        install(ParallelismConfig { threads: ThreadCount::Auto });
+        assert!(global().threads() >= 1);
+    }
+
+    #[test]
+    fn global_pool_is_serial_inside_pool_workers() {
+        // nested fan-outs must not multiply: a worker asking for the
+        // global pool gets the serial one
+        let inner = Pool::new(4).map(4, |_| global().threads());
+        assert!(inner.iter().all(|&t| t == 1), "nested global pools: {inner:?}");
+        // the calling thread is unaffected
+        assert!(global().threads() >= 1);
+    }
+
+    #[test]
+    fn worker_panic_propagates() {
+        let caught = std::panic::catch_unwind(|| {
+            let mut out = vec![0usize; 64];
+            Pool::new(4).run_chunks(&mut out, 1, |start, _| {
+                if start == 63 {
+                    panic!("worker boom");
+                }
+            });
+        });
+        assert!(caught.is_err());
+    }
+}

@@ -75,6 +75,7 @@ pub fn choose_sample_size(
             eps_center: cfg.probe_eps,
             eps_r2: cfg.probe_eps,
             consecutive: 5,
+            candidates_per_iter: 1,
             record_trace: false,
         };
         let sw = Stopwatch::start();

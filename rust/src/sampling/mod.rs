@@ -38,11 +38,12 @@ pub mod convergence;
 pub mod streaming;
 
 use crate::error::Result;
+use crate::parallel::Pool;
 use crate::svdd::kernel::Kernel;
 use crate::svdd::model::SvddModel;
 use crate::svdd::trainer::{train, train_with_gram, SvddParams};
 use crate::util::matrix::Matrix;
-use crate::util::rng::Xoshiro256;
+use crate::util::rng::{derive_stream_seed, Xoshiro256};
 
 pub use adaptive::{choose_sample_size, AdaptiveChoice, AdaptiveConfig};
 pub use convergence::{ConvergenceCriteria, ConvergenceTracker};
@@ -70,6 +71,16 @@ pub struct SamplingConfig {
     pub eps_r2: f64,
     /// `t` — consecutive satisfied checks required.
     pub consecutive: usize,
+    /// `K` — independent candidate samples drawn (and solved) per
+    /// iteration. With `K = 1` this is exactly the paper's Algorithm 1
+    /// on a single sequential RNG stream. With `K > 1` the iteration
+    /// draws K samples on independent RNG streams (derived from
+    /// `(seed, iter, candidate)`), solves sample + union for each
+    /// concurrently on the pool, and promotes the candidate whose union
+    /// solve has the largest `R^2` — a scenario the paper's independence
+    /// structure directly licenses, trading parallel compute for fewer
+    /// sequential iterations.
+    pub candidates_per_iter: usize,
     /// Record a per-iteration trace (Fig 7).
     pub record_trace: bool,
 }
@@ -82,6 +93,7 @@ impl Default for SamplingConfig {
             eps_center: 3e-4,
             eps_r2: 3e-4,
             consecutive: 8,
+            candidates_per_iter: 1,
             record_trace: false,
         }
     }
@@ -121,17 +133,29 @@ pub struct SamplingTrainer<'a> {
     params: SvddParams,
     cfg: SamplingConfig,
     backend: Option<&'a dyn GramBackend>,
+    pool: Option<Pool>,
 }
 
 impl<'a> SamplingTrainer<'a> {
     pub fn new(params: SvddParams, cfg: SamplingConfig) -> Self {
-        SamplingTrainer { params, cfg, backend: None }
+        SamplingTrainer { params, cfg, backend: None, pool: None }
     }
 
     /// Route union/sample gram computations through an XLA backend.
     pub fn with_backend(mut self, backend: &'a dyn GramBackend) -> Self {
         self.backend = Some(backend);
         self
+    }
+
+    /// Train candidate models on an explicit pool instead of the global
+    /// one (tests, benches).
+    pub fn with_pool(mut self, pool: Pool) -> Self {
+        self.pool = Some(pool);
+        self
+    }
+
+    fn pool(&self) -> Pool {
+        self.pool.unwrap_or_else(crate::parallel::global)
     }
 
     fn solve(&self, data: &Matrix, counters: &mut (usize, usize)) -> Result<SvddModel> {
@@ -222,20 +246,30 @@ impl<'a> SamplingTrainer<'a> {
         }
 
         // Step 2: iterate until convergence.
+        let k_cands = self.cfg.candidates_per_iter.max(1);
         let mut iterations = 0;
         let mut converged = false;
         for i in 1..=self.cfg.max_iter {
             iterations = i;
-            // 2.1 random sample + its SVDD
-            let si = data.gather(&rng.sample_with_replacement(data.rows(), n));
-            let sv_i = self.solve(&si.dedup_rows(), &mut counters)?;
-            // 2.2 union with the master SV set
-            let union = sv_i
-                .support_vectors()
-                .vstack(master.support_vectors())?
-                .dedup_rows();
-            // 2.3 SVDD of the union becomes the new master
-            master = self.solve(&union, &mut counters)?;
+            master = if k_cands == 1 {
+                // Single-candidate path: the paper's Algorithm 1 on one
+                // sequential RNG stream. This branch is kept exactly as
+                // it was before candidates existed so seeded K=1 runs
+                // reproduce historical outputs bit-for-bit (regression
+                // test in tests/parallel_determinism.rs).
+                // 2.1 random sample + its SVDD
+                let si = data.gather(&rng.sample_with_replacement(data.rows(), n));
+                let sv_i = self.solve(&si.dedup_rows(), &mut counters)?;
+                // 2.2 union with the master SV set
+                let union = sv_i
+                    .support_vectors()
+                    .vstack(master.support_vectors())?
+                    .dedup_rows();
+                // 2.3 SVDD of the union becomes the new master
+                self.solve(&union, &mut counters)?
+            } else {
+                self.best_candidate(data, seed, i, n, &master, &mut counters)?
+            };
 
             let delta = tracker.observe(master.r2(), master.center());
             if self.cfg.record_trace {
@@ -261,6 +295,46 @@ impl<'a> SamplingTrainer<'a> {
             warm_start: warm.is_some(),
             trace,
         })
+    }
+
+    /// One multi-candidate iteration: draw K independent samples on
+    /// derived RNG streams, solve sample + union for each concurrently,
+    /// keep the candidate whose union solve has the largest `R^2`
+    /// (ties break to the lowest candidate index). Candidate results
+    /// are collected in index order and the pick is a pure comparison,
+    /// so the outcome is identical at every thread count.
+    fn best_candidate(
+        &self,
+        data: &Matrix,
+        seed: u64,
+        iter: usize,
+        n: usize,
+        master: &SvddModel,
+        counters: &mut (usize, usize),
+    ) -> Result<SvddModel> {
+        let k = self.cfg.candidates_per_iter;
+        let results = self.pool().map(k, |c| -> Result<(SvddModel, usize, usize)> {
+            let mut crng = Xoshiro256::new(derive_stream_seed(seed, iter as u64, c as u64));
+            let si = data.gather(&crng.sample_with_replacement(data.rows(), n));
+            let mut cnt = (0usize, 0usize);
+            let sv_c = self.solve(&si.dedup_rows(), &mut cnt)?;
+            let union = sv_c
+                .support_vectors()
+                .vstack(master.support_vectors())?
+                .dedup_rows();
+            let cand = self.solve(&union, &mut cnt)?;
+            Ok((cand, cnt.0, cnt.1))
+        });
+        let mut best: Option<SvddModel> = None;
+        for r in results {
+            let (cand, solves, rows) = r?;
+            counters.0 += solves;
+            counters.1 += rows;
+            if best.as_ref().map_or(true, |b| cand.r2() > b.r2()) {
+                best = Some(cand);
+            }
+        }
+        Ok(best.expect("candidates_per_iter >= 1"))
     }
 }
 
@@ -412,6 +486,74 @@ mod tests {
         assert!(SamplingTrainer::new(params, cfg)
             .train_warm(&odd, 2, &model)
             .is_err());
+    }
+
+    #[test]
+    fn candidates_mode_converges_and_is_deterministic_across_pools() {
+        let data = banana(4000);
+        let params = SvddParams::gaussian(0.35, 0.001);
+        let cfg = SamplingConfig {
+            sample_size: 6,
+            candidates_per_iter: 4,
+            ..Default::default()
+        };
+        let serial = SamplingTrainer::new(params, cfg)
+            .with_pool(crate::parallel::Pool::serial())
+            .train(&data, 21)
+            .unwrap();
+        let wide = SamplingTrainer::new(params, cfg)
+            .with_pool(crate::parallel::Pool::new(8))
+            .train(&data, 21)
+            .unwrap();
+        assert!(serial.converged);
+        // bit-identical promotion decisions at every thread count
+        assert_eq!(serial.iterations, wide.iterations);
+        assert_eq!(serial.model.r2().to_bits(), wide.model.r2().to_bits());
+        assert_eq!(serial.model.alpha(), wide.model.alpha());
+        assert_eq!(serial.solver_calls, wide.solver_calls);
+        assert_eq!(serial.rows_touched, wide.rows_touched);
+    }
+
+    #[test]
+    fn candidates_do_more_work_per_iteration() {
+        let data = banana(3000);
+        let params = SvddParams::gaussian(0.35, 0.001);
+        let base = SamplingConfig {
+            sample_size: 6,
+            max_iter: 5,
+            consecutive: 100,
+            ..Default::default()
+        };
+        let k1 = SamplingTrainer::new(params, base).train(&data, 3).unwrap();
+        let cfg4 = SamplingConfig { candidates_per_iter: 4, ..base };
+        let k4 = SamplingTrainer::new(params, cfg4).train(&data, 3).unwrap();
+        // 2 solves per candidate per iteration (+1 seed solve)
+        assert_eq!(k1.solver_calls, 1 + 2 * 5);
+        assert_eq!(k4.solver_calls, 1 + 4 * 2 * 5);
+        assert!(k4.rows_touched > k1.rows_touched);
+    }
+
+    #[test]
+    fn candidate_zero_stream_differs_from_sequential_stream() {
+        // The K>1 path derives candidate streams rather than splitting
+        // the sequential stream, so K=4 must not accidentally replay
+        // the K=1 draw schedule.
+        let data = banana(2000);
+        let params = SvddParams::gaussian(0.35, 0.001);
+        let base = SamplingConfig {
+            sample_size: 6,
+            max_iter: 4,
+            consecutive: 100,
+            ..Default::default()
+        };
+        let k1 = SamplingTrainer::new(params, base).train(&data, 11).unwrap();
+        let cfg4 = SamplingConfig { candidates_per_iter: 4, ..base };
+        let k4 = SamplingTrainer::new(params, cfg4).train(&data, 11).unwrap();
+        assert_ne!(
+            k1.model.r2().to_bits(),
+            k4.model.r2().to_bits(),
+            "K=4 replayed the K=1 stream"
+        );
     }
 
     struct CountingBackend(std::sync::atomic::AtomicUsize);

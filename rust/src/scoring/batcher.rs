@@ -9,6 +9,13 @@
 //! back out. This is the standard dynamic-batching coordinator of
 //! serving systems (vLLM-style), applied to SVDD scoring.
 //!
+//! Coalescing composes with the parallel execution subsystem: the
+//! native engine's [`SvddModel::dist2_batch`] scores a drained batch in
+//! row chunks on the shared [`crate::parallel`] pool, so one large
+//! coalesced batch uses every core while tiny batches stay on the
+//! dispatch thread (cost gate) — and either way the scores are
+//! bit-identical to the serial path.
+//!
 //! The active model lives in a [`ModelSlot`] — a swappable slot the
 //! model-lifecycle layer replaces on promote (`fastsvdd serve
 //! --registry --watch`, `Message::SwapModel`). The dispatch loop takes

@@ -157,8 +157,25 @@ impl SvddModel {
 
     /// Native batch scoring (the XLA-backed path lives in
     /// [`crate::scoring`]; this is the reference it is checked against).
+    /// Rows are scored in parallel chunks on the global pool when the
+    /// batch is large enough to pay for it; each row's score is an
+    /// independent [`SvddModel::dist2`], so the output is bit-identical
+    /// to the serial loop at any thread count.
     pub fn dist2_batch(&self, zs: &Matrix) -> Vec<f64> {
-        (0..zs.rows()).map(|i| self.dist2(zs.row(i))).collect()
+        self.dist2_batch_pooled(zs, crate::parallel::global())
+    }
+
+    /// [`SvddModel::dist2_batch`] on an explicit pool.
+    pub fn dist2_batch_pooled(&self, zs: &Matrix, pool: crate::parallel::Pool) -> Vec<f64> {
+        let n = zs.rows();
+        let mut out = vec![0.0; n];
+        let work = n * self.num_sv() * self.sv.cols().max(1);
+        pool.for_work(work).run_chunks(&mut out, 64, |start, chunk| {
+            for (off, slot) in chunk.iter_mut().enumerate() {
+                *slot = self.dist2(zs.row(start + off));
+            }
+        });
+        out
     }
 
     // --------------------------------------------------- serialization

@@ -19,9 +19,22 @@
 //! `g += 2 delta (K[:,i] - K[:,j])`.
 
 use crate::error::{Error, Result};
+use crate::parallel::Pool;
 use crate::svdd::cache::ColumnCache;
 use crate::svdd::kernel::Kernel;
 use crate::util::matrix::Matrix;
+
+/// Rows per parallel chunk when evaluating a kernel column.
+const COL_CHUNK: usize = 512;
+
+/// Column evaluation runs inside the SMO inner loop (up to three
+/// columns per pair iteration on a cache miss), so a scoped-thread
+/// spawn must be amortized over much more math than a one-shot region:
+/// require ~0.5M scalar ops (roughly a millisecond of kernel
+/// arithmetic) before going parallel. A 20k x 41 Tennessee solve
+/// clears this; a 20k x 2 banana column stays serial, where it is
+/// faster anyway.
+const COL_PAR_MIN_WORK: usize = 1 << 19;
 
 /// Abstract access to the kernel matrix so the solver runs both on
 /// lazily computed kernels (large full-SVDD solves, LRU-cached) and on
@@ -36,11 +49,15 @@ pub trait KernelProvider {
 }
 
 /// Lazily evaluated kernel over a data matrix with an LRU column cache.
+/// Column evaluation on a cache miss runs in parallel chunks on the
+/// pool (each entry is an independent `K(x_i, x_k)`, so the column is
+/// bit-identical to the serial evaluation at any thread count).
 pub struct LazyKernel<'a> {
     data: &'a Matrix,
     kernel: Kernel,
     cache: ColumnCache,
     diag: Vec<f64>,
+    pool: Option<Pool>,
 }
 
 impl<'a> LazyKernel<'a> {
@@ -51,7 +68,15 @@ impl<'a> LazyKernel<'a> {
             kernel,
             cache: ColumnCache::new(data.rows(), cache_bytes),
             diag,
+            pool: None,
         }
+    }
+
+    /// Pin column evaluation to an explicit pool instead of the global
+    /// one (tests, benches).
+    pub fn with_pool(mut self, pool: Pool) -> Self {
+        self.pool = Some(pool);
+        self
     }
 
     pub fn cache_hit_rate(&self) -> f64 {
@@ -71,11 +96,24 @@ impl<'a> KernelProvider for LazyKernel<'a> {
     fn col_into(&mut self, i: usize, out: &mut [f64]) {
         let data = self.data;
         let kernel = self.kernel;
+        // An explicitly pinned pool (`with_pool`) is used as-is — the
+        // caller took control, and the determinism tests rely on it to
+        // force parallel columns on small problems. The global pool is
+        // cost-gated at COL_PAR_MIN_WORK.
+        let pool = match self.pool {
+            Some(p) => p,
+            None => crate::parallel::global(),
+        };
+        let gated = self.pool.is_none();
         self.cache.get_into(i, out, |buf| {
             let xi = data.row(i);
-            for (k, slot) in buf.iter_mut().enumerate() {
-                *slot = kernel.eval(xi, data.row(k));
-            }
+            let work = buf.len() * data.cols().max(1);
+            let run = if gated && work < COL_PAR_MIN_WORK { Pool::serial() } else { pool };
+            run.run_chunks(buf, COL_CHUNK, |start, chunk| {
+                for (off, slot) in chunk.iter_mut().enumerate() {
+                    *slot = kernel.eval(xi, data.row(start + off));
+                }
+            });
         });
     }
 }
@@ -98,8 +136,24 @@ impl DenseKernel {
         Ok(DenseKernel { n, k })
     }
 
-    /// Compute the full gram matrix natively (test/reference path).
+    /// Compute the full gram matrix natively, in parallel row blocks on
+    /// the global pool. Bit-identical to [`DenseKernel::from_data_serial`]
+    /// at any thread count (kernel evaluation is exactly symmetric).
     pub fn from_data(data: &Matrix, kernel: Kernel) -> Self {
+        Self::from_data_pooled(data, kernel, crate::parallel::global())
+    }
+
+    /// [`DenseKernel::from_data`] on an explicit pool.
+    pub fn from_data_pooled(data: &Matrix, kernel: Kernel, pool: Pool) -> Self {
+        DenseKernel {
+            n: data.rows(),
+            k: crate::parallel::gram(data, kernel, pool),
+        }
+    }
+
+    /// Single-threaded upper-triangle + mirror computation — the
+    /// reference the determinism tests compare the pooled path against.
+    pub fn from_data_serial(data: &Matrix, kernel: Kernel) -> Self {
         let n = data.rows();
         let mut k = vec![0.0; n * n];
         for i in 0..n {
@@ -110,6 +164,11 @@ impl DenseKernel {
             }
         }
         DenseKernel { n, k }
+    }
+
+    /// Row-major flat view of the kernel matrix.
+    pub fn as_slice(&self) -> &[f64] {
+        &self.k
     }
 }
 

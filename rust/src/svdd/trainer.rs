@@ -2,10 +2,15 @@
 //!
 //! Two entry points:
 //! - [`train`] — computes kernel entries natively (lazily, LRU-cached);
-//!   used for the full-SVDD baseline on large data.
+//!   used for the full-SVDD baseline on large data. Kernel columns are
+//!   evaluated in parallel chunks on the global [`crate::parallel`]
+//!   pool once the problem is large enough to pay for it — the result
+//!   is bit-identical to the serial path at any thread count.
 //! - [`train_with_gram`] — consumes a precomputed dense gram matrix;
 //!   this is how the XLA `gram` artifact (L1 Pallas kernel) feeds the
-//!   sample solves inside Algorithm 1.
+//!   sample solves inside Algorithm 1 (and how
+//!   [`crate::parallel::PooledGram`] feeds them on the native
+//!   multi-core path).
 
 use crate::error::{Error, Result};
 use crate::svdd::kernel::Kernel;

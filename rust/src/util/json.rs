@@ -9,6 +9,7 @@
 //! surrogates are rejected rather than silently replaced.
 
 use std::collections::BTreeMap;
+use std::fmt;
 use std::fmt::Write as _;
 
 use crate::error::{Error, Result};
@@ -84,12 +85,8 @@ impl Json {
     }
 
     // --------------------------------------------------------- writing
-
-    pub fn to_string(&self) -> String {
-        let mut s = String::new();
-        self.write(&mut s, None, 0);
-        s
-    }
+    // (compact writing is `Display`, so `json.to_string()` comes from
+    // the blanket `ToString` impl)
 
     pub fn to_string_pretty(&self) -> String {
         let mut s = String::new();
@@ -143,6 +140,15 @@ impl Json {
                 out.push('}');
             }
         }
+    }
+}
+
+impl fmt::Display for Json {
+    /// Compact (single-line) JSON serialization.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut s = String::new();
+        self.write(&mut s, None, 0);
+        f.write_str(&s)
     }
 }
 

@@ -1,0 +1,215 @@
+//! Determinism guarantees of the parallel execution subsystem.
+//!
+//! The pool's contract is that seeded runs are **bit-identical at any
+//! thread count**: parallel Gram rows, parallel SMO kernel columns,
+//! parallel batch scoring and multi-candidate training must all produce
+//! exactly the serial path's bytes. These tests pin that contract
+//! across thread counts {1, 2, 8}, and pin the K=1 sampling trainer to
+//! a golden re-implementation of the pre-candidate sequential loop so
+//! the per-candidate RNG stream derivation can never silently change
+//! historical seeded outputs.
+
+use fastsvdd::data::banana::Banana;
+use fastsvdd::data::tennessee::TennesseePlant;
+use fastsvdd::data::Generator;
+use fastsvdd::parallel::{gram, Pool, PooledGram};
+use fastsvdd::sampling::{
+    ConvergenceCriteria, ConvergenceTracker, SamplingConfig, SamplingTrainer,
+};
+use fastsvdd::svdd::smo::{self, DenseKernel, LazyKernel, SmoOptions};
+use fastsvdd::svdd::{train, Kernel, SvddModel, SvddParams};
+use fastsvdd::util::matrix::Matrix;
+use fastsvdd::util::rng::Xoshiro256;
+
+const THREAD_COUNTS: [usize; 3] = [1, 2, 8];
+
+fn tennessee(rows: usize) -> Matrix {
+    TennesseePlant::default().training(rows, 42)
+}
+
+#[test]
+fn parallel_gram_bit_identical_across_thread_counts() {
+    for (data, bw) in [
+        (Banana::default().generate(301, 7), 0.35),
+        (tennessee(97), 6.0),
+    ] {
+        let kernel = Kernel::gaussian(bw);
+        let want = DenseKernel::from_data_serial(&data, kernel);
+        for threads in THREAD_COUNTS {
+            let got = gram(&data, kernel, Pool::new(threads));
+            assert_eq!(
+                got,
+                want.as_slice(),
+                "gram diverged at {threads} threads ({}x{})",
+                data.rows(),
+                data.cols()
+            );
+        }
+    }
+}
+
+#[test]
+fn pooled_gram_backend_matches_serial_reference() {
+    let data = tennessee(64);
+    let kernel = Kernel::gaussian(4.0);
+    let want = DenseKernel::from_data_serial(&data, kernel);
+    for threads in THREAD_COUNTS {
+        let be = PooledGram::with_pool(Pool::new(threads));
+        let got = fastsvdd::sampling::GramBackend::gram(&be, &data, kernel).unwrap();
+        assert_eq!(got, want.as_slice());
+    }
+}
+
+#[test]
+fn parallel_scoring_bit_identical_across_thread_counts() {
+    let data = Banana::default().generate(800, 1);
+    let model = train(&data, &SvddParams::gaussian(0.35, 0.01)).unwrap();
+    let zs = Banana::default().generate(4097, 2); // odd size: ragged last chunk
+    let want = model.dist2_batch_pooled(&zs, Pool::serial());
+    for threads in THREAD_COUNTS {
+        let got = model.dist2_batch_pooled(&zs, Pool::new(threads));
+        assert_eq!(got, want, "scoring diverged at {threads} threads");
+    }
+}
+
+#[test]
+fn parallel_lazy_columns_give_identical_smo_solution() {
+    // An explicitly pinned pool bypasses the column work gate, so this
+    // forces genuinely parallel column evaluation on a test-sized
+    // problem and checks the full SMO solve is bit-identical to the
+    // dense serial solve.
+    let data = tennessee(800);
+    let kernel = Kernel::gaussian(6.0);
+    let c = 1.0 / (data.rows() as f64 * 0.05);
+    let mut dense = DenseKernel::from_data_serial(&data, kernel);
+    let want = smo::solve(&mut dense, c, &SmoOptions::default()).unwrap();
+    for threads in THREAD_COUNTS {
+        let mut lazy = LazyKernel::new(&data, kernel, 256 << 20).with_pool(Pool::new(threads));
+        let got = smo::solve(&mut lazy, c, &SmoOptions::default()).unwrap();
+        assert_eq!(got.r2.to_bits(), want.r2.to_bits());
+        assert_eq!(got.iterations, want.iterations);
+        for (a, b) in got.alpha.iter().zip(&want.alpha) {
+            assert_eq!(a.to_bits(), b.to_bits(), "alpha diverged at {threads} threads");
+        }
+    }
+}
+
+/// Golden re-implementation of the sampling loop exactly as it existed
+/// before `candidates_per_iter`: one sequential Xoshiro stream, one
+/// sample + union solve per iteration. `SamplingTrainer` with K=1 must
+/// reproduce this bit-for-bit — if stream derivation ever leaks into
+/// the K=1 path, seeded historical runs change and this fails.
+fn legacy_sampling_train(
+    data: &Matrix,
+    params: &SvddParams,
+    cfg: &SamplingConfig,
+    seed: u64,
+) -> (SvddModel, usize, bool) {
+    let n = cfg.sample_size.max(2).min(data.rows());
+    let mut rng = Xoshiro256::new(seed);
+    let s0 = data.gather(&rng.sample_with_replacement(data.rows(), n));
+    let mut master = train(&s0.dedup_rows(), params).unwrap();
+
+    let sv0 = master.support_vectors();
+    let scale_floor = (0..sv0.rows())
+        .map(|i| sv0.row(i).iter().map(|x| x * x).sum::<f64>().sqrt())
+        .sum::<f64>()
+        / sv0.rows() as f64;
+    let mut tracker = ConvergenceTracker::new(ConvergenceCriteria {
+        eps_center: cfg.eps_center,
+        eps_r2: cfg.eps_r2,
+        consecutive: cfg.consecutive,
+        scale_floor,
+    });
+    tracker.observe(master.r2(), master.center());
+
+    let mut iterations = 0;
+    let mut converged = false;
+    for i in 1..=cfg.max_iter {
+        iterations = i;
+        let si = data.gather(&rng.sample_with_replacement(data.rows(), n));
+        let sv_i = train(&si.dedup_rows(), params).unwrap();
+        let union = sv_i
+            .support_vectors()
+            .vstack(master.support_vectors())
+            .unwrap()
+            .dedup_rows();
+        master = train(&union, params).unwrap();
+        tracker.observe(master.r2(), master.center());
+        if tracker.converged() {
+            converged = true;
+            break;
+        }
+    }
+    (master, iterations, converged)
+}
+
+#[test]
+fn k1_reproduces_legacy_sequential_outputs_exactly() {
+    let data = Banana::default().generate(2500, 3);
+    let params = SvddParams::gaussian(0.35, 0.001);
+    let cfg = SamplingConfig { sample_size: 6, ..Default::default() };
+    assert_eq!(cfg.candidates_per_iter, 1, "default K must stay 1");
+    for seed in [7u64, 123, 9999] {
+        let (want_model, want_iters, want_conv) =
+            legacy_sampling_train(&data, &params, &cfg, seed);
+        let got = SamplingTrainer::new(params, cfg).train(&data, seed).unwrap();
+        assert_eq!(got.iterations, want_iters, "seed {seed}");
+        assert_eq!(got.converged, want_conv, "seed {seed}");
+        assert_eq!(got.model.r2().to_bits(), want_model.r2().to_bits(), "seed {seed}");
+        assert_eq!(got.model.num_sv(), want_model.num_sv(), "seed {seed}");
+        for (a, b) in got.model.alpha().iter().zip(want_model.alpha()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "seed {seed}");
+        }
+        assert_eq!(
+            got.model.support_vectors().as_slice(),
+            want_model.support_vectors().as_slice(),
+            "seed {seed}"
+        );
+    }
+}
+
+#[test]
+fn multi_candidate_training_identical_across_thread_counts() {
+    let data = Banana::default().generate(3000, 5);
+    let params = SvddParams::gaussian(0.35, 0.001);
+    let cfg = SamplingConfig {
+        sample_size: 6,
+        candidates_per_iter: 3,
+        max_iter: 60,
+        ..Default::default()
+    };
+    let reference = SamplingTrainer::new(params, cfg)
+        .with_pool(Pool::serial())
+        .train(&data, 17)
+        .unwrap();
+    for threads in THREAD_COUNTS {
+        let got = SamplingTrainer::new(params, cfg)
+            .with_pool(Pool::new(threads))
+            .train(&data, 17)
+            .unwrap();
+        assert_eq!(got.iterations, reference.iterations, "{threads} threads");
+        let (a, b) = (got.model.r2().to_bits(), reference.model.r2().to_bits());
+        assert_eq!(a, b, "{threads} threads");
+        assert_eq!(got.model.alpha(), reference.model.alpha(), "{threads} threads");
+        assert_eq!(got.solver_calls, reference.solver_calls, "{threads} threads");
+        assert_eq!(got.rows_touched, reference.rows_touched, "{threads} threads");
+    }
+}
+
+#[test]
+fn dense_from_data_equals_serial_reference() {
+    // The default (pooled, global) constructor and the serial triangle
+    // reference must agree on an asymmetric-looking but exactly
+    // symmetric kernel evaluation.
+    let data = tennessee(83);
+    for kernel in [
+        Kernel::gaussian(3.0),
+        Kernel::Linear,
+        Kernel::Polynomial { degree: 3, coef: 0.5 },
+    ] {
+        let a = DenseKernel::from_data(&data, kernel);
+        let b = DenseKernel::from_data_serial(&data, kernel);
+        assert_eq!(a.as_slice(), b.as_slice(), "kernel {kernel}");
+    }
+}

@@ -352,3 +352,52 @@ fn prop_matrix_algebra() {
         assert_eq!(stacked.rows(), mat.rows() + d1.rows());
     });
 }
+
+/// Pool chunking covers every output index exactly once, for arbitrary
+/// buffer lengths, chunk sizes and thread counts: chunk starts are
+/// aligned, no index is skipped, no index is written twice.
+#[test]
+fn prop_pool_chunking_covers_every_index_exactly_once() {
+    use fastsvdd::parallel::Pool;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    forall("pool chunk cover", 60, |g| {
+        let len = g.usize_in(0, 700);
+        let chunk = g.usize_in(1, 80);
+        let threads = *g.choose(&[1usize, 2, 3, 8]);
+        let touched: Vec<AtomicUsize> = (0..len).map(|_| AtomicUsize::new(0)).collect();
+        let mut out = vec![usize::MAX; len];
+        Pool::new(threads).run_chunks(&mut out, chunk, |start, c| {
+            assert_eq!(start % chunk, 0, "unaligned chunk start {start}");
+            assert!(
+                c.len() == chunk || start + c.len() == len,
+                "short chunk not at the tail: start={start} len={}",
+                c.len()
+            );
+            for (off, slot) in c.iter_mut().enumerate() {
+                touched[start + off].fetch_add(1, Ordering::Relaxed);
+                *slot = start + off;
+            }
+        });
+        for (i, t) in touched.iter().enumerate() {
+            assert_eq!(t.load(Ordering::Relaxed), 1, "index {i} touched != once");
+        }
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i, "index {i} holds {v}");
+        }
+        // the weighted variant must produce the same coverage for any
+        // weight function (only worker scheduling may differ)
+        let skew = g.usize_in(0, 3);
+        let mut out_w = vec![usize::MAX; len];
+        Pool::new(threads).run_chunks_weighted(
+            &mut out_w,
+            chunk,
+            |ci| ci.wrapping_mul(31).wrapping_add(skew) % 7,
+            |start, c| {
+                for (off, slot) in c.iter_mut().enumerate() {
+                    *slot = start + off;
+                }
+            },
+        );
+        assert_eq!(out, out_w, "weighted coverage diverged");
+    });
+}
