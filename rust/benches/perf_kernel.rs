@@ -1,0 +1,152 @@
+//! Batched kernel-compute layer perf: the norm-cached, tile-blocked
+//! block path (`linalg` + `Kernel::eval_block`) against the scalar
+//! per-pair `Kernel::eval` reference, on a Tennessee-Eastman-sized
+//! workload (41-dim plant telemetry).
+//!
+//! - Gram matrix: block path (`parallel::gram`) vs the scalar serial
+//!   triangle (`DenseKernel::from_data_serial`) at 1 thread — the
+//!   single-core speedup the layer exists for — plus the block path at
+//!   auto threads, with bit-identity asserted across thread counts
+//!   {1, 2, 8} and block-vs-scalar closeness checked to tight
+//!   tolerance;
+//! - batch scoring: `SvddModel::dist2_batch_pooled` (block panels) at 1
+//!   and auto threads, bit-identity across thread counts.
+//!
+//! Emits the usual table plus `results/BENCH_perf_kernel.json` — the
+//! file the CI `bench-smoke` job gates against
+//! `ci/baselines/BENCH_perf_kernel.json` (see ci/check_perf.py and
+//! ci/baselines/README.md for the capture procedure).
+
+use fastsvdd::bench::{emit, emit_text, measure, scaled};
+use fastsvdd::data::tennessee::TennesseePlant;
+use fastsvdd::parallel::{gram, Pool};
+use fastsvdd::svdd::bandwidth::median_heuristic;
+use fastsvdd::svdd::smo::DenseKernel;
+use fastsvdd::svdd::{train, Kernel, SvddParams};
+use fastsvdd::util::json::{num, obj, s, Json};
+use fastsvdd::util::tables::{f, Table};
+
+fn main() {
+    let plant = TennesseePlant::default();
+    let rows = scaled(1_200, 384);
+    let data = plant.training(rows, 42);
+    let dim = data.cols();
+    let bw = median_heuristic(&data, 20_000, 1);
+    let kernel = Kernel::gaussian(bw);
+    let auto = Pool::auto().threads();
+    let entries = (rows * rows) as f64;
+
+    let mut t = Table::new(
+        &format!("Perf: kernel compute layer ({rows}x{dim} tennessee, {auto} cores)"),
+        &["path", "threads", "mean_ms", "throughput", "vs scalar 1t"],
+    );
+
+    // ---- correctness before timing: block bit-identity + scalar gap ----
+    let block_1t = gram(&data, kernel, Pool::serial());
+    let mut block_identical = true;
+    for threads in [2usize, 8] {
+        block_identical &= gram(&data, kernel, Pool::new(threads)) == block_1t;
+    }
+    assert!(block_identical, "block gram diverged across thread counts");
+    let scalar_ref = DenseKernel::from_data_serial(&data, kernel);
+    let mut block_vs_scalar_close = true;
+    let mut max_gap = 0.0f64;
+    for (b, sc) in block_1t.iter().zip(scalar_ref.as_slice()) {
+        let gap = (b - sc).abs() / sc.abs().max(1.0);
+        max_gap = max_gap.max(gap);
+        block_vs_scalar_close &= gap <= 1e-10;
+    }
+    assert!(
+        block_vs_scalar_close,
+        "block path drifted from the scalar reference (max rel gap {max_gap:.3e})"
+    );
+
+    // ---- Gram throughput: scalar reference vs block, 1 thread ----
+    let m_scalar = measure(1, 3, || DenseKernel::from_data_serial(&data, kernel));
+    let scalar_tp = entries / m_scalar.mean;
+    t.row(vec![
+        "gram scalar (eval reference)".into(),
+        "1".into(),
+        f(m_scalar.mean * 1e3, 1),
+        format!("{:.2}M entries/s", scalar_tp / 1e6),
+        "1.00x".into(),
+    ]);
+
+    let m_block1 = measure(1, 3, || gram(&data, kernel, Pool::serial()));
+    let block_tp_1t = entries / m_block1.mean;
+    let speedup_1t = block_tp_1t / scalar_tp;
+    t.row(vec![
+        "gram block (norm-cache + tiles)".into(),
+        "1".into(),
+        f(m_block1.mean * 1e3, 1),
+        format!("{:.2}M entries/s", block_tp_1t / 1e6),
+        format!("{speedup_1t:.2}x"),
+    ]);
+
+    // ---- Gram throughput: block, all cores ----
+    let threads_mt = auto;
+    let pool_mt = Pool::new(threads_mt);
+    let m_blockmt = measure(1, 3, || gram(&data, kernel, pool_mt));
+    let block_tp_mt = entries / m_blockmt.mean;
+    t.row(vec![
+        "gram block (norm-cache + tiles)".into(),
+        threads_mt.to_string(),
+        f(m_blockmt.mean * 1e3, 1),
+        format!("{:.2}M entries/s", block_tp_mt / 1e6),
+        format!("{:.2}x", block_tp_mt / scalar_tp),
+    ]);
+
+    // ---- batch scoring on the block path ----
+    let model = train(
+        &data.gather(&(0..rows.min(600)).collect::<Vec<_>>()),
+        &SvddParams::gaussian(bw, 0.01),
+    )
+    .unwrap();
+    let zs = plant.training(scaled(16_384, 4_096), 9);
+    let score_1t = model.dist2_batch_pooled(&zs, Pool::serial());
+    let mut score_identical = true;
+    for threads in [2usize, 8] {
+        score_identical &= model.dist2_batch_pooled(&zs, Pool::new(threads)) == score_1t;
+    }
+    assert!(score_identical, "block scoring diverged across thread counts");
+    let mut score_tp = Vec::new();
+    for threads in [1usize, threads_mt] {
+        let pool = Pool::new(threads);
+        let m = measure(1, 5, || model.dist2_batch_pooled(&zs, pool));
+        let tp = zs.rows() as f64 / m.mean;
+        score_tp.push(tp);
+        t.row(vec![
+            format!("scoring block ({} SVs)", model.num_sv()),
+            threads.to_string(),
+            f(m.mean * 1e3, 2),
+            format!("{:.0}k rows/s", tp / 1e3),
+            format!("{:.2}x", tp / score_tp[0]),
+        ]);
+    }
+
+    emit("perf_kernel", &t);
+    println!(
+        "block vs scalar gram at 1 thread: {speedup_1t:.2}x \
+         (max rel gap {max_gap:.2e}; target >= 2x)"
+    );
+
+    let json = obj(vec![
+        ("bench", s("perf_kernel")),
+        ("rows", num(rows as f64)),
+        ("dim", num(dim as f64)),
+        ("cores", num(auto as f64)),
+        ("threads_mt", num(threads_mt as f64)),
+        ("gram_scalar_entries_per_s_1t", num(scalar_tp)),
+        ("gram_block_entries_per_s_1t", num(block_tp_1t)),
+        ("gram_block_vs_scalar_1t", num(speedup_1t)),
+        ("gram_block_entries_per_s_mt", num(block_tp_mt)),
+        ("gram_block_identical", Json::Bool(block_identical)),
+        ("gram_block_vs_scalar_close", Json::Bool(block_vs_scalar_close)),
+        ("gram_block_vs_scalar_max_rel_gap", num(max_gap)),
+        ("score_rows_per_s_1t", num(score_tp[0])),
+        ("score_rows_per_s_mt", num(score_tp[1])),
+        ("score_bit_identical", Json::Bool(score_identical)),
+    ]);
+    emit_text("BENCH_perf_kernel.json", &json.to_string_pretty());
+    println!("wrote results/BENCH_perf_kernel.json");
+}

@@ -74,14 +74,16 @@ pub fn train_luo(data: &Matrix, params: &SvddParams, cfg: &LuoConfig) -> Result<
     let mut model = train(&data.gather(&working), params)?;
     for _ in 0..cfg.max_rounds {
         rounds += 1;
-        // the full-data scoring pass the paper's method avoids
+        // the full-data scoring pass the paper's method avoids — run it
+        // on the batched (norm-cached, pooled) scoring path; rows
+        // already in the working set are skipped when collecting
+        let d2s = model.dist2_batch(data);
         let mut violators: Vec<(f64, usize)> = Vec::new();
         let in_working: std::collections::HashSet<usize> = working.iter().copied().collect();
-        for i in 0..n {
+        for (i, &d2) in d2s.iter().enumerate() {
             if in_working.contains(&i) {
                 continue;
             }
-            let d2 = model.dist2(data.row(i));
             if d2 > model.r2() + cfg.margin {
                 violators.push((d2, i));
             }

@@ -131,6 +131,9 @@ COMMON OPTIONS (train):
     --candidates <k>          independent candidate samples per iteration,
                               solved concurrently; best R^2 wins (default 1)
     --workers <p>             distributed worker count
+    --shuffle-seed <s>        seeded pre-shuffle of the row order before
+                              distributed sharding (for ordered datasets;
+                              default: shard rows as given)
     --threads <auto|n>        worker threads for the shared parallel pool
                               (Gram rows, SMO kernel columns, batch scoring;
                               default auto = all cores). Results are

@@ -59,6 +59,9 @@ pub struct RunConfig {
     /// 1 = the paper's sequential Algorithm 1).
     pub candidates_per_iter: usize,
     pub workers: usize,
+    /// Seeded pre-shuffle of the row order before distributed sharding
+    /// (`None` = shard rows as given; set for ordered/sorted datasets).
+    pub shuffle_seed: Option<u64>,
     /// Worker threads for the shared parallel pool (`"auto"` or N).
     pub threads: ThreadCount,
     pub seed: u64,
@@ -81,6 +84,7 @@ impl Default for RunConfig {
             consecutive: 5,
             candidates_per_iter: 1,
             workers: 4,
+            shuffle_seed: None,
             threads: ThreadCount::Auto,
             seed: 7,
             scorer: "native".into(),
@@ -143,6 +147,12 @@ impl RunConfig {
                     cfg.candidates_per_iter = req_num(val, key)? as usize
                 }
                 "workers" => cfg.workers = req_num(val, key)? as usize,
+                "shuffle_seed" => {
+                    cfg.shuffle_seed = match val {
+                        Json::Null => None,
+                        _ => Some(req_num(val, key)? as u64),
+                    }
+                }
                 "threads" => {
                     cfg.threads = match val.as_str() {
                         Some(s) => ThreadCount::parse(s)?,
@@ -238,6 +248,15 @@ mod tests {
         assert!(RunConfig::from_json_text(r#"{"candidates_per_iter": 0}"#).is_err());
         assert!(RunConfig::from_json_text(r#"{"threads": 0}"#).is_err());
         assert!(RunConfig::from_json_text(r#"{"threads": "lots"}"#).is_err());
+    }
+
+    #[test]
+    fn shuffle_seed_parses_and_defaults_off() {
+        assert_eq!(RunConfig::default().shuffle_seed, None);
+        let cfg = RunConfig::from_json_text(r#"{"shuffle_seed": 99}"#).unwrap();
+        assert_eq!(cfg.shuffle_seed, Some(99));
+        let cfg = RunConfig::from_json_text(r#"{"shuffle_seed": null}"#).unwrap();
+        assert_eq!(cfg.shuffle_seed, None);
     }
 
     #[test]

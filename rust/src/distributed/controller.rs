@@ -6,6 +6,7 @@ use crate::sampling::SamplingConfig;
 use crate::svdd::model::SvddModel;
 use crate::svdd::trainer::{train, SvddParams};
 use crate::util::matrix::Matrix;
+use crate::util::rng::Xoshiro256;
 
 /// Distributed run configuration.
 #[derive(Clone, Copy, Debug)]
@@ -14,6 +15,12 @@ pub struct DistributedConfig {
     pub workers: usize,
     pub sampling: SamplingConfig,
     pub seed: u64,
+    /// Seeded pre-shuffle of the row order before contiguous sharding.
+    /// `None` (the default) shards the rows as given — correct for the
+    /// i.i.d. generators; pass `Some(seed)` when the dataset may be
+    /// ordered (sorted by a feature, grouped by regime), where
+    /// contiguous shards would hand each worker a biased slice.
+    pub shuffle_seed: Option<u64>,
 }
 
 impl Default for DistributedConfig {
@@ -22,6 +29,7 @@ impl Default for DistributedConfig {
             workers: 4,
             sampling: SamplingConfig::default(),
             seed: 0,
+            shuffle_seed: None,
         }
     }
 }
@@ -46,9 +54,28 @@ pub struct DistributedOutcome {
 }
 
 /// Split `data` into `p` contiguous shards of near-equal size.
-/// (Generators produce i.i.d. rows, so contiguous == random split; data
-/// with ordered rows should be shuffled upstream.)
+/// (Generators produce i.i.d. rows, so contiguous == random split;
+/// ordered data wants [`shard_with_shuffle`] with a seed, which
+/// permutes the rows first.)
 pub fn shard(data: &Matrix, p: usize) -> Vec<Matrix> {
+    shard_with_shuffle(data, p, None)
+}
+
+/// [`shard`] with an optional seeded Fisher–Yates pre-shuffle of the
+/// row order (`DistributedConfig::shuffle_seed`). `None` preserves the
+/// historical contiguous split exactly; `Some(seed)` deterministically
+/// permutes the rows before slicing, so a dataset sorted by a feature
+/// still gives every worker an unbiased sample. Shard sizes are
+/// identical in both modes.
+pub fn shard_with_shuffle(data: &Matrix, p: usize, shuffle_seed: Option<u64>) -> Vec<Matrix> {
+    let mut order: Vec<usize> = (0..data.rows()).collect();
+    if let Some(seed) = shuffle_seed {
+        Xoshiro256::new(seed).shuffle(&mut order);
+    }
+    shard_order(data, p, &order)
+}
+
+fn shard_order(data: &Matrix, p: usize, order: &[usize]) -> Vec<Matrix> {
     let p = p.max(1).min(data.rows().max(1));
     let n = data.rows();
     let base = n / p;
@@ -57,8 +84,7 @@ pub fn shard(data: &Matrix, p: usize) -> Vec<Matrix> {
     let mut start = 0;
     for i in 0..p {
         let len = base + usize::from(i < extra);
-        let idx: Vec<usize> = (start..start + len).collect();
-        shards.push(data.gather(&idx));
+        shards.push(data.gather(&order[start..start + len]));
         start += len;
     }
     shards
@@ -106,6 +132,50 @@ mod tests {
         let shards = shard(&data, 10);
         assert_eq!(shards.len(), 3);
         assert!(shards.iter().all(|s| s.rows() == 1));
+    }
+
+    #[test]
+    fn shuffle_none_preserves_contiguous_split_exactly() {
+        let data = Banana::default().generate(103, 7);
+        let plain = shard(&data, 4);
+        let none = shard_with_shuffle(&data, 4, None);
+        assert_eq!(plain.len(), none.len());
+        for (a, b) in plain.iter().zip(&none) {
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn shuffle_fixes_sorted_dataset_sharding() {
+        // a dataset sorted by its feature: contiguous shards are
+        // disjoint value ranges, so per-shard means are wildly apart
+        let rows: Vec<Vec<f64>> = (0..400).map(|i| vec![i as f64]).collect();
+        let data = Matrix::from_rows(&rows).unwrap();
+        let p = 4;
+
+        let biased = shard_with_shuffle(&data, p, None);
+        let mean = |s: &Matrix| s.col_means()[0];
+        assert!(mean(&biased[0]) < 60.0 && mean(&biased[p - 1]) > 340.0);
+
+        let shuffled = shard_with_shuffle(&data, p, Some(42));
+        // sizes unchanged, all rows present exactly once
+        let mut all: Vec<f64> = Vec::new();
+        for (s, b) in shuffled.iter().zip(&biased) {
+            assert_eq!(s.rows(), b.rows());
+            all.extend(s.as_slice());
+        }
+        all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(all, (0..400).map(|i| i as f64).collect::<Vec<_>>());
+        // every shard now sees the full range: means near the global 199.5
+        for s in &shuffled {
+            let m = mean(s);
+            assert!((m - 199.5).abs() < 60.0, "shard mean {m} still biased");
+        }
+        // deterministic given the seed
+        let again = shard_with_shuffle(&data, p, Some(42));
+        for (a, b) in shuffled.iter().zip(&again) {
+            assert_eq!(a, b);
+        }
     }
 
     #[test]

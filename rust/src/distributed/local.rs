@@ -10,7 +10,9 @@ use crate::util::matrix::Matrix;
 use crate::util::rng::Xoshiro256;
 use rand_core::RngCore;
 
-use super::controller::{combine, shard, DistributedConfig, DistributedOutcome, WorkerReport};
+use super::controller::{
+    combine, shard_with_shuffle, DistributedConfig, DistributedOutcome, WorkerReport,
+};
 
 /// Run the paper's distributed scheme with in-process workers.
 pub fn train_local_cluster(
@@ -18,7 +20,7 @@ pub fn train_local_cluster(
     params: &SvddParams,
     cfg: &DistributedConfig,
 ) -> Result<DistributedOutcome> {
-    let shards = shard(data, cfg.workers);
+    let shards = shard_with_shuffle(data, cfg.workers, cfg.shuffle_seed);
     // independent per-worker RNG streams via xoshiro jumps
     let base = Xoshiro256::new(cfg.seed);
     let worker_seeds: Vec<u64> = (0..shards.len())
@@ -78,6 +80,7 @@ mod tests {
             workers: 4,
             sampling: SamplingConfig { sample_size: 11, ..Default::default() },
             seed: 3,
+            shuffle_seed: None,
         };
         let dist = train_local_cluster(&data, &params, &cfg).unwrap();
         assert_eq!(dist.reports.len(), 4);
@@ -95,6 +98,7 @@ mod tests {
             workers: 1,
             sampling: SamplingConfig { sample_size: 11, ..Default::default() },
             seed: 4,
+            shuffle_seed: None,
         };
         let out = train_local_cluster(&data, &params, &cfg).unwrap();
         assert_eq!(out.reports.len(), 1);
@@ -109,6 +113,7 @@ mod tests {
             workers: 3,
             sampling: SamplingConfig { sample_size: 8, ..Default::default() },
             seed: 11,
+            shuffle_seed: None,
         };
         let a = train_local_cluster(&data, &params, &cfg).unwrap();
         let b = train_local_cluster(&data, &params, &cfg).unwrap();

@@ -15,7 +15,9 @@ use crate::util::matrix::Matrix;
 use crate::util::rng::Xoshiro256;
 use rand_core::RngCore;
 
-use super::controller::{combine, shard, DistributedConfig, DistributedOutcome, WorkerReport};
+use super::controller::{
+    combine, shard_with_shuffle, DistributedConfig, DistributedOutcome, WorkerReport,
+};
 use super::message::{negotiate, Message, PROTOCOL_VERSION};
 
 /// A running worker server (owns its listener thread).
@@ -136,7 +138,7 @@ pub fn train_tcp_cluster(
     if addrs.is_empty() {
         return Err(Error::Distributed("no worker addresses".into()));
     }
-    let shards = shard(data, cfg.workers);
+    let shards = shard_with_shuffle(data, cfg.workers, cfg.shuffle_seed);
     let base = Xoshiro256::new(cfg.seed);
 
     let results: Vec<Result<(Matrix, WorkerReport)>> = std::thread::scope(|scope| {
@@ -214,6 +216,7 @@ mod tests {
             workers: 4, // 4 shards over 2 workers (round robin)
             sampling: SamplingConfig { sample_size: 11, ..Default::default() },
             seed: 5,
+            shuffle_seed: None,
         };
         let out = train_tcp_cluster(&data, &params, &cfg, &addrs).unwrap();
         assert_eq!(out.reports.len(), 4);
@@ -231,6 +234,7 @@ mod tests {
             workers: 2,
             sampling: SamplingConfig { sample_size: 8, ..Default::default() },
             seed: 21,
+            shuffle_seed: None,
         };
         let tcp = train_tcp_cluster(&data, &params, &cfg, &[w.addr()]).unwrap();
         let local = super::super::local::train_local_cluster(&data, &params, &cfg).unwrap();

@@ -70,6 +70,7 @@ pub mod config;
 pub mod data;
 pub mod distributed;
 pub mod error;
+pub mod linalg;
 pub mod metrics;
 pub mod parallel;
 pub mod registry;

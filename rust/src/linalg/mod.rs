@@ -1,0 +1,320 @@
+//! Batched kernel-compute substrate: cached squared row norms and a
+//! tile-blocked panel-dot microkernel.
+//!
+//! Every kernel the library evaluates reduces to row dot products:
+//!
+//! ```text
+//! gaussian    K_ij = exp(-||a_i - b_j||^2 / (2 s^2))
+//!                  = exp(-((||a_i||^2 - a_i.b_j) + (||b_j||^2 - a_i.b_j)) / (2 s^2))
+//! linear      K_ij = a_i . b_j
+//! polynomial  K_ij = (a_i . b_j + c)^d
+//! ```
+//!
+//! The per-pair scalar path ([`crate::svdd::Kernel::eval`]) re-derives
+//! `||a - b||^2` with a latency-bound subtract-square-accumulate loop on
+//! every call. This module instead caches `||x||^2` per row once
+//! ([`NormCache`]) and evaluates whole panels of pairwise dots with a
+//! fixed-order unrolled kernel ([`dot_block`]) the compiler can
+//! vectorize — turning Gram construction, SMO kernel columns and batch
+//! scoring into GEMM-shaped row-panel sweeps.
+//!
+//! ## Determinism policy
+//!
+//! Every entry a block path produces is a **pure function of the two
+//! rows involved**, independent of panel shape, tile boundaries, thread
+//! count or which entry point asked:
+//!
+//! - [`dot`] fixes the per-pair summation order (4 interleaved
+//!   accumulators combined as `(s0+s1)+(s2+s3)`, then the tail in
+//!   order). [`dot_block`] and [`NormCache`] are defined in terms of it,
+//!   so a dot computed inside a 1x1 panel equals the same dot inside a
+//!   512-row panel, bit for bit.
+//! - `dot(a, b) == dot(b, a)` exactly (per-term products commute, the
+//!   summation order is positional), and the Gaussian combination
+//!   `(na - d) + (nb - d)` is an IEEE addition of the same two values in
+//!   either role — so block-path kernels are exactly symmetric, which is
+//!   what lets the Gram triangle mirror and the SMO column path agree
+//!   bitwise.
+//! - The block value differs from the scalar [`crate::svdd::Kernel::eval`]
+//!   reference only in summation order / algebraic form (ULP-level;
+//!   property-tested to tight relative tolerance in
+//!   `tests/property_tests.rs`). The scalar path remains the reference
+//!   implementation and is never mixed into block-path outputs.
+//!
+//! The norm-cache form never squares a coordinate *difference*, so its
+//! intermediates stay finite wherever the row norms do (coordinates up
+//! to ~1e150 are exercised by the property tests); catastrophic
+//! cancellation for near-identical rows is clamped at zero, which the
+//! Gaussian maps to `K = 1` — the correct limit.
+
+use crate::util::matrix::Matrix;
+
+/// Rows of the `b` panel evaluated per register tile in [`dot_block`].
+/// Small enough that a tile of `TILE_J` rows x 64 features stays in L1
+/// alongside the streaming `a` row, large enough to amortize the loop
+/// overhead.
+pub const TILE_J: usize = 8;
+
+/// Fixed-order unrolled dot product — **the** per-pair summation order
+/// of the block compute layer. Four interleaved accumulators break the
+/// add dependency chain (the scalar bottleneck), combined as
+/// `(s0 + s1) + (s2 + s3)` plus an in-order tail; the order depends only
+/// on the row length, never on panel or tile geometry.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len().min(b.len());
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    let quads = n / 4;
+    for q in 0..quads {
+        let k = q * 4;
+        s0 += a[k] * b[k];
+        s1 += a[k + 1] * b[k + 1];
+        s2 += a[k + 2] * b[k + 2];
+        s3 += a[k + 3] * b[k + 3];
+    }
+    let mut tail = 0.0;
+    for k in quads * 4..n {
+        tail += a[k] * b[k];
+    }
+    ((s0 + s1) + (s2 + s3)) + tail
+}
+
+/// Squared distance from cached norms and a dot:
+/// `||a - b||^2 = (||a||^2 - a.b) + (||b||^2 - a.b)`, clamped at zero
+/// (cancellation for near-identical rows can go epsilon-negative).
+/// Grouping the subtraction per operand keeps every intermediate within
+/// a factor ~4 of the largest norm, so nothing overflows before the
+/// true distance would.
+///
+/// Non-finite inputs are handled conservatively, not swallowed: a NaN
+/// input propagates (`f64::max(NaN, 0.0)` would silently return 0,
+/// i.e. "identical rows" — a corrupt row must never score as a deep
+/// inlier), and an `inf - inf` from an overflowed norm resolves to
+/// `+inf`, matching the scalar `||a-b||^2 = +inf` for distinct rows
+/// (for the degenerate overflowed-norm *self*-pair, where the scalar
+/// form gives 0, this errs on the saturate-to-outlier side).
+#[inline]
+pub fn sqdist_from_norms(na: f64, nb: f64, d: f64) -> f64 {
+    let s = (na - d) + (nb - d);
+    if s.is_nan() {
+        if na.is_nan() || nb.is_nan() || d.is_nan() {
+            return f64::NAN;
+        }
+        return f64::INFINITY;
+    }
+    s.max(0.0)
+}
+
+/// Cached squared euclidean norms `||x_i||^2` of every row of a matrix,
+/// computed with [`dot`] so they combine bit-consistently with
+/// [`dot_block`] panels.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NormCache {
+    norms: Vec<f64>,
+}
+
+impl NormCache {
+    /// Compute all row norms of `m` (one pass, O(rows x cols)).
+    pub fn new(m: &Matrix) -> NormCache {
+        NormCache {
+            norms: (0..m.rows()).map(|i| dot(m.row(i), m.row(i))).collect(),
+        }
+    }
+
+    /// `||x_i||^2`.
+    #[inline]
+    pub fn get(&self, i: usize) -> f64 {
+        self.norms[i]
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[f64] {
+        &self.norms
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.norms.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.norms.is_empty()
+    }
+}
+
+/// Panel of pairwise dots: `out[ia * b_rows.len() + ib] =
+/// dot(a.row(a_rows.start + ia), b.row(b_rows.start + ib))`, row-major
+/// over the panel. Blocked over `b` in [`TILE_J`]-row tiles so a tile
+/// stays cache-hot while the `a` rows stream past it; per-entry values
+/// are exactly [`dot`] regardless of tiling (see the module's
+/// determinism policy). Ragged shapes (1x1, 1xn, non-multiples of the
+/// tile size, empty ranges) are all fine.
+pub fn dot_block(
+    a: &Matrix,
+    a_rows: std::ops::Range<usize>,
+    b: &Matrix,
+    b_rows: std::ops::Range<usize>,
+    out: &mut [f64],
+) {
+    let (a0, la) = (a_rows.start, a_rows.len());
+    let (b0, lb) = (b_rows.start, b_rows.len());
+    debug_assert_eq!(a.cols(), b.cols());
+    debug_assert_eq!(out.len(), la * lb);
+    let mut jt = 0;
+    while jt < lb {
+        let jt_end = (jt + TILE_J).min(lb);
+        for ia in 0..la {
+            let arow = a.row(a0 + ia);
+            let row_out = &mut out[ia * lb..(ia + 1) * lb];
+            for (jb, slot) in row_out.iter_mut().enumerate().take(jt_end).skip(jt) {
+                *slot = dot(arow, b.row(b0 + jb));
+            }
+        }
+        jt = jt_end;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn random(rows: usize, cols: usize, seed: u64) -> Matrix {
+        let mut rng = Xoshiro256::new(seed);
+        let r: Vec<Vec<f64>> = (0..rows)
+            .map(|_| (0..cols).map(|_| rng.normal() * 2.0).collect())
+            .collect();
+        Matrix::from_rows(&r).unwrap()
+    }
+
+    /// Straight sequential dot — the order-free oracle (tolerance only).
+    fn naive_dot(a: &[f64], b: &[f64]) -> f64 {
+        a.iter().zip(b).map(|(x, y)| x * y).sum()
+    }
+
+    #[test]
+    fn dot_matches_naive_to_tolerance() {
+        let m = random(4, 23, 1);
+        for i in 0..4 {
+            for j in 0..4 {
+                let got = dot(m.row(i), m.row(j));
+                let want = naive_dot(m.row(i), m.row(j));
+                assert!((got - want).abs() <= 1e-12 * want.abs().max(1.0));
+            }
+        }
+    }
+
+    #[test]
+    fn dot_is_exactly_symmetric() {
+        // every lengths class: multiple of 4, remainder 1..3, tiny
+        for cols in [1usize, 2, 3, 4, 5, 7, 8, 41] {
+            let m = random(6, cols, cols as u64);
+            for i in 0..6 {
+                for j in 0..6 {
+                    let ab = dot(m.row(i), m.row(j));
+                    let ba = dot(m.row(j), m.row(i));
+                    assert_eq!(ab.to_bits(), ba.to_bits(), "cols={cols} i={i} j={j}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn norm_cache_equals_self_dot() {
+        let m = random(17, 5, 3);
+        let nc = NormCache::new(&m);
+        assert_eq!(nc.len(), 17);
+        for i in 0..17 {
+            assert_eq!(nc.get(i).to_bits(), dot(m.row(i), m.row(i)).to_bits());
+            assert!(nc.get(i) >= 0.0);
+        }
+    }
+
+    #[test]
+    fn norm_cache_empty_matrix() {
+        let m = Matrix::zeros(0, 3);
+        let nc = NormCache::new(&m);
+        assert!(nc.is_empty());
+        assert_eq!(nc.as_slice().len(), 0);
+    }
+
+    #[test]
+    fn dot_block_matches_per_pair_dot_bitwise() {
+        let a = random(13, 7, 5);
+        let b = random(21, 7, 6);
+        // ragged panels around the tile size, including 1x1 and empty
+        for (ar, br) in [
+            (0..13, 0..21),
+            (2..3, 0..1),
+            (0..1, 0..21),
+            (5..13, 3..20),
+            (0..0, 0..21),
+            (0..13, 4..4),
+        ] {
+            let mut out = vec![f64::NAN; ar.len() * br.len()];
+            dot_block(&a, ar.clone(), &b, br.clone(), &mut out);
+            for (ia, i) in ar.clone().enumerate() {
+                for (jb, j) in br.clone().enumerate() {
+                    let want = dot(a.row(i), b.row(j));
+                    assert_eq!(
+                        out[ia * br.len() + jb].to_bits(),
+                        want.to_bits(),
+                        "panel ({ar:?},{br:?}) entry ({i},{j})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sqdist_from_norms_matches_difference_form() {
+        let m = random(9, 6, 9);
+        let nc = NormCache::new(&m);
+        for i in 0..9 {
+            for j in 0..9 {
+                let d = dot(m.row(i), m.row(j));
+                let got = sqdist_from_norms(nc.get(i), nc.get(j), d);
+                let want = Matrix::sqdist(m.row(i), m.row(j));
+                assert!(
+                    (got - want).abs() <= 1e-10 * want.max(1.0),
+                    "({i},{j}): {got} vs {want}"
+                );
+                assert!(got >= 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn sqdist_from_norms_identical_rows_exactly_zero() {
+        let m = random(4, 11, 13);
+        let nc = NormCache::new(&m);
+        for i in 0..4 {
+            let d = dot(m.row(i), m.row(i));
+            assert_eq!(sqdist_from_norms(nc.get(i), nc.get(i), d), 0.0);
+        }
+    }
+
+    #[test]
+    fn sqdist_from_norms_extreme_coordinates_stay_finite() {
+        // +-1e150 coordinates: ||x||^2 ~ 4e300 is representable; the
+        // grouped form never exceeds ~4x the largest norm.
+        let m = Matrix::from_rows(&[
+            vec![1e150, -1e150, 1e150, -1e150],
+            vec![-1e150, 1e150, -1e150, 1e150],
+            vec![1e150, 1e150, 1e150, 1e150],
+        ])
+        .unwrap();
+        let nc = NormCache::new(&m);
+        for i in 0..3 {
+            assert!(nc.get(i).is_finite());
+            for j in 0..3 {
+                let d = dot(m.row(i), m.row(j));
+                let s = sqdist_from_norms(nc.get(i), nc.get(j), d);
+                assert!(s.is_finite(), "({i},{j}) overflowed: {s}");
+                assert!(s >= 0.0);
+            }
+        }
+    }
+}

@@ -115,6 +115,9 @@ fn config_from_args(args: &Args) -> Result<RunConfig> {
     cfg.max_iter = args.get_usize("max-iter", cfg.max_iter)?;
     cfg.candidates_per_iter = args.get_usize("candidates", cfg.candidates_per_iter)?;
     cfg.workers = args.get_usize("workers", cfg.workers)?;
+    if args.get("shuffle-seed").is_some() {
+        cfg.shuffle_seed = Some(args.get_u64("shuffle-seed", 0)?);
+    }
     if let Some(v) = args.get("threads") {
         cfg.threads = ThreadCount::parse(v)?;
     }
@@ -132,8 +135,8 @@ fn config_from_args(args: &Args) -> Result<RunConfig> {
 fn cmd_train(args: &Args) -> Result<()> {
     args.expect_only(&[
         "config", "data", "rows", "method", "bw", "f", "sample-size", "max-iter",
-        "candidates", "workers", "threads", "seed", "out", "trace", "xla",
-        "artifacts", "addrs", "registry", "promote",
+        "candidates", "workers", "shuffle-seed", "threads", "seed", "out", "trace",
+        "xla", "artifacts", "addrs", "registry", "promote",
     ])?;
     let cfg = config_from_args(args)?;
     parallel::install(cfg.parallelism());
@@ -195,6 +198,7 @@ fn cmd_train(args: &Args) -> Result<()> {
                 workers: cfg.workers,
                 sampling: cfg.sampling(),
                 seed: cfg.seed,
+                shuffle_seed: cfg.shuffle_seed,
             };
             let out = match args.get("addrs") {
                 Some(addrs) => {

@@ -309,28 +309,56 @@ impl Default for Pool {
     }
 }
 
-/// Row-major Gram matrix `K(data, data)`: the upper triangle is
-/// computed in parallel row blocks (row `i` is one chunk, evaluating
-/// `j >= i` into `k[i*n+j]`), then the strict lower triangle is
-/// mirrored with cheap copies. Exactly the same kernel evaluations as
-/// the serial reference ([`crate::svdd::smo::DenseKernel::from_data_serial`]),
-/// in the same per-entry arithmetic, so the result is bitwise identical
-/// at any thread count — and the serial path does no redundant
-/// symmetric work.
+/// Rows per Gram panel: a pool chunk covers `GRAM_PANEL_ROWS` rows of
+/// the output, evaluated as one [`Kernel::eval_block`] panel so every
+/// `b`-row tile loaded by [`crate::linalg::dot_block`] is reused across
+/// the whole panel (single-row panels would reload the entire matrix
+/// per row and get none of the tile-blocking win).
+const GRAM_PANEL_ROWS: usize = 8;
+
+/// Row-major Gram matrix `K(data, data)` on the batched kernel-compute
+/// layer ([`crate::linalg`]): squared row norms are cached once, then
+/// the upper triangle is evaluated in parallel [`GRAM_PANEL_ROWS`]-row
+/// trapezoid panels (rows `[i0, i1)` x columns `[i0, n)` as one
+/// [`Kernel::eval_block`] rectangle), and the strict lower triangle is
+/// mirrored with cheap copies. Every entry is a pure function of its
+/// two rows — `eval_block` values do not depend on panel geometry, and
+/// the block kernel is exactly symmetric — so the result is bitwise
+/// identical at any thread count, and identical to the entries a
+/// [`crate::svdd::smo::LazyKernel`] column produces for the same pair.
+/// The scalar reference
+/// ([`crate::svdd::smo::DenseKernel::from_data_serial`]) agrees to
+/// ULP-level relative tolerance only (different summation order).
 pub fn gram(data: &Matrix, kernel: Kernel, pool: Pool) -> Vec<f64> {
     let n = data.rows();
     let mut k = vec![0.0; n * n];
     if n == 0 {
         return k;
     }
-    // triangle halves the eval count; row i costs (n - i) evals, so
-    // worker blocks are weighted to keep the split balanced
+    let norms = crate::linalg::NormCache::new(data);
+    let norms_ref = &norms;
+    // triangle halves the panel-dot count; a panel's cost is the sum of
+    // its rows' (n - i) entries, so worker blocks are weighted to keep
+    // the split balanced
     let work = n * n * data.cols().max(1) / 2;
-    pool.for_work(work).run_chunks_weighted(&mut k, n, |ci| n - ci, |start, row| {
-        let i = start / n;
-        let xi = data.row(i);
-        for (j, slot) in row.iter_mut().enumerate().skip(i) {
-            *slot = kernel.eval(xi, data.row(j));
+    let weight = |ci: usize| {
+        let r0 = ci * GRAM_PANEL_ROWS;
+        let r1 = (r0 + GRAM_PANEL_ROWS).min(n);
+        (r0..r1).map(|i| n - i).sum()
+    };
+    let chunk_len = GRAM_PANEL_ROWS * n;
+    pool.for_work(work).run_chunks_weighted(&mut k, chunk_len, weight, |start, chunk| {
+        let i0 = start / n;
+        let rows = chunk.len() / n;
+        let width = n - i0;
+        // rectangle [i0, i1) x [i0, n): the few sub-diagonal entries
+        // (j < i inside the panel) are recomputed rather than special-
+        // cased — they carry the same bits as their upper-triangle
+        // mirrors (exact symmetry) and the mirror pass overwrites them.
+        let mut panel = vec![0.0; rows * width];
+        kernel.eval_block(data, norms_ref, i0..i0 + rows, data, norms_ref, i0..n, &mut panel);
+        for (r, prow) in panel.chunks(width).enumerate() {
+            chunk[r * n + i0..(r + 1) * n].copy_from_slice(prow);
         }
     });
     for i in 1..n {
@@ -486,9 +514,11 @@ mod tests {
     }
 
     #[test]
-    fn gram_matches_serial_triangle() {
-        // 41-d rows mimic the Tennessee plant shape; compare the
-        // parallel row-block gram to an explicit triangle+mirror.
+    fn gram_matches_block_reference_and_scalar_tolerance() {
+        // 41-d rows mimic the Tennessee plant shape. The bitwise anchor
+        // is the per-pair block evaluation (1x1 panels — eval_block
+        // values are independent of panel geometry); the scalar
+        // `Kernel::eval` triangle agrees to tolerance only.
         let mut rng = crate::util::rng::Xoshiro256::new(9);
         let rows: Vec<Vec<f64>> = (0..37)
             .map(|_| (0..41).map(|_| rng.normal()).collect())
@@ -496,17 +526,28 @@ mod tests {
         let data = Matrix::from_rows(&rows).unwrap();
         let kernel = Kernel::gaussian(1.7);
         let n = data.rows();
+        let norms = crate::linalg::NormCache::new(&data);
         let mut want = vec![0.0; n * n];
         for i in 0..n {
-            for j in i..n {
-                let v = kernel.eval(data.row(i), data.row(j));
-                want[i * n + j] = v;
-                want[j * n + i] = v;
+            for j in 0..n {
+                let mut one = [0.0];
+                kernel.eval_block(&data, &norms, i..i + 1, &data, &norms, j..j + 1, &mut one);
+                want[i * n + j] = one[0];
             }
         }
         for &threads in &[1usize, 2, 8] {
             let got = gram(&data, kernel, Pool::new(threads));
             assert_eq!(got, want, "threads={threads}");
+        }
+        for i in 0..n {
+            for j in 0..n {
+                let scalar = kernel.eval(data.row(i), data.row(j));
+                assert!(
+                    (want[i * n + j] - scalar).abs() <= 1e-12,
+                    "({i},{j}): block {} vs scalar {scalar}",
+                    want[i * n + j]
+                );
+            }
         }
     }
 

@@ -560,13 +560,13 @@ mod tests {
     impl GramBackend for CountingBackend {
         fn gram(&self, data: &Matrix, kernel: Kernel) -> Option<Vec<f64>> {
             self.0.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            // one full-matrix block panel — the same per-entry values
+            // the native (lazy) path computes, so the two runs stay on
+            // identical SMO trajectories
             let n = data.rows();
+            let norms = crate::linalg::NormCache::new(data);
             let mut g = vec![0.0; n * n];
-            for i in 0..n {
-                for j in 0..n {
-                    g[i * n + j] = kernel.eval(data.row(i), data.row(j));
-                }
-            }
+            kernel.eval_block(data, &norms, 0..n, data, &norms, 0..n, &mut g);
             Some(g)
         }
     }

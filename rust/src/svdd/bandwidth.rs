@@ -6,6 +6,7 @@
 //! and a **mean-distance** variant; both are cheap and deterministic
 //! given a seed.
 
+use crate::linalg::{self, NormCache};
 use crate::util::matrix::Matrix;
 use crate::util::rng::Xoshiro256;
 
@@ -38,18 +39,33 @@ fn pairwise_stat(
     let mut rng = Xoshiro256::new(seed);
     let total_pairs = n * (n - 1) / 2;
     let mut dists = Vec::with_capacity(max_pairs.min(total_pairs));
+    // distances via the norm-cache formulation the kernel layer uses:
+    // ||a - b||^2 = (||a||^2 - a.b) + (||b||^2 - a.b)
     if total_pairs <= max_pairs {
+        // exact: every row participates, so cache all norms once and
+        // batch each row's dots against all later rows
+        let norms = NormCache::new(data);
+        let mut dots = vec![0.0; n.saturating_sub(1)];
         for i in 0..n {
-            for j in (i + 1)..n {
-                dists.push(Matrix::sqdist(data.row(i), data.row(j)).sqrt());
+            let row_dots = &mut dots[..n - i - 1];
+            linalg::dot_block(data, i..i + 1, data, i + 1..n, row_dots);
+            for (off, &d) in row_dots.iter().enumerate() {
+                let j = i + 1 + off;
+                dists.push(linalg::sqdist_from_norms(norms.get(i), norms.get(j), d).sqrt());
             }
         }
     } else {
+        // sampled: only ~2*max_pairs rows are ever touched, so an
+        // O(n*d) all-row norm pass would dominate on huge data —
+        // compute the two norms per drawn pair instead
         while dists.len() < max_pairs {
             let i = rng.index(n);
             let j = rng.index(n);
             if i != j {
-                dists.push(Matrix::sqdist(data.row(i), data.row(j)).sqrt());
+                let (ri, rj) = (data.row(i), data.row(j));
+                let d = linalg::dot(ri, rj);
+                let (ni, nj) = (linalg::dot(ri, ri), linalg::dot(rj, rj));
+                dists.push(linalg::sqdist_from_norms(ni, nj, d).sqrt());
             }
         }
     }

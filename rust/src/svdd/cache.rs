@@ -4,7 +4,11 @@
 //! the same (small) active set many times; caching columns converts the
 //! per-iteration cost from O(n·m) kernel evaluations to an O(n) copy
 //! for cached columns. The budget is expressed in bytes and evicts the
-//! least-recently-used column.
+//! least-recently-used column. On a miss the `fill` closure provided by
+//! [`crate::svdd::smo::LazyKernel`] computes the column as norm-cached
+//! [`crate::svdd::Kernel::eval_block`] panels (in parallel chunks), so
+//! cached and freshly computed columns carry identical bits regardless
+//! of thread count.
 
 use std::collections::HashMap;
 

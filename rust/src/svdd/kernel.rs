@@ -1,7 +1,22 @@
 //! Kernel functions (paper eq. (13) uses the Gaussian; linear recovers
 //! the plain hypersphere of eq. (4); polynomial is included for
 //! completeness of the substrate).
+//!
+//! Two evaluation paths:
+//! - [`Kernel::eval`] — the scalar per-pair **reference** (re-derives
+//!   `||a-b||^2` directly); kept for single-pair callers, goldens and
+//!   the serial reference Gram.
+//! - [`Kernel::eval_block`] / [`Kernel::eval_cached`] — the batched
+//!   compute path over [`crate::linalg`]: cached row norms + the
+//!   tile-blocked panel-dot microkernel (`eval_cached` is the
+//!   single-pair spelling of a panel entry, for accumulator callers).
+//!   Every hot loop (Gram, SMO columns, batch scoring) goes through
+//!   these; per-entry values are a pure function of the two rows, so
+//!   block outputs are bit-identical across panel shapes, entry points
+//!   and thread counts (and agree with the scalar reference to
+//!   ULP-level relative tolerance).
 
+use crate::linalg::{self, NormCache};
 use crate::util::matrix::Matrix;
 
 /// A positive-definite kernel K(a, b).
@@ -22,6 +37,21 @@ impl Kernel {
         Kernel::Gaussian { bw }
     }
 
+    /// Validated polynomial-kernel constructor. The exponent is applied
+    /// via `powi(degree as i32)`, so a degree above `i32::MAX` would
+    /// silently wrap to a *negative* exponent — reject it here (along
+    /// with the degenerate degree 0 and a non-finite coefficient), the
+    /// same way [`Kernel::gaussian`] rejects a non-positive bandwidth.
+    pub fn polynomial(degree: u32, coef: f64) -> Kernel {
+        assert!(degree >= 1, "polynomial degree must be >= 1, got {degree}");
+        assert!(
+            degree <= i32::MAX as u32,
+            "polynomial degree {degree} overflows the i32 exponent of powi"
+        );
+        assert!(coef.is_finite(), "polynomial coef must be finite, got {coef}");
+        Kernel::Polynomial { degree, coef }
+    }
+
     /// Evaluate K(a, b).
     #[inline]
     pub fn eval(&self, a: &[f64], b: &[f64]) -> f64 {
@@ -35,6 +65,77 @@ impl Kernel {
         }
     }
 
+    /// Batch-evaluate `K(a_i, b_j)` for `i` in `a_rows`, `j` in
+    /// `b_rows` into `out` (row-major `a_rows.len() x b_rows.len()`),
+    /// from cached squared row norms and a tile-blocked panel of dots.
+    ///
+    /// Per-entry values are a pure function of the two rows (see
+    /// [`crate::linalg`]'s determinism policy): the same pair evaluates
+    /// to the same bits in a 1x1 panel, a Gram row panel, an SMO column
+    /// chunk or a scoring batch — which is what keeps parallel outputs
+    /// bit-identical at any thread count. `eval_block(i, j)` equals
+    /// `eval_block(j, i)` exactly; it matches the scalar [`Kernel::eval`]
+    /// reference to ULP-level relative tolerance only.
+    #[allow(clippy::too_many_arguments)]
+    pub fn eval_block(
+        &self,
+        a: &Matrix,
+        a_norms: &NormCache,
+        a_rows: std::ops::Range<usize>,
+        b: &Matrix,
+        b_norms: &NormCache,
+        b_rows: std::ops::Range<usize>,
+        out: &mut [f64],
+    ) {
+        let (la, lb) = (a_rows.len(), b_rows.len());
+        debug_assert_eq!(out.len(), la * lb);
+        if la == 0 || lb == 0 {
+            return;
+        }
+        linalg::dot_block(a, a_rows.clone(), b, b_rows.clone(), out);
+        if matches!(self, Kernel::Linear) {
+            return; // linear kernel IS the dot panel
+        }
+        for (ia, row) in out.chunks_mut(lb).enumerate() {
+            let na = a_norms.get(a_rows.start + ia);
+            for (jb, slot) in row.iter_mut().enumerate() {
+                let nb = b_norms.get(b_rows.start + jb);
+                *slot = self.finish(*slot, na, nb);
+            }
+        }
+    }
+
+    /// One pair on the block path: `K(a, z)` from cached squared norms
+    /// — the scalar spelling of an [`Kernel::eval_block`] entry
+    /// (identical bits: the same [`linalg::dot`] and the same
+    /// norm-cache combination). For callers that fold kernel values
+    /// into an accumulator and must not pay a panel buffer per
+    /// observation (single-row [`crate::svdd::SvddModel::dist2`]
+    /// scoring). Not a replacement for the scalar reference
+    /// [`Kernel::eval`], which derives `||a-z||^2` without norms.
+    #[inline]
+    pub fn eval_cached(&self, a: &[f64], a_norm: f64, z: &[f64], z_norm: f64) -> f64 {
+        let d = linalg::dot(a, z);
+        match *self {
+            Kernel::Linear => d,
+            _ => self.finish(d, a_norm, z_norm),
+        }
+    }
+
+    /// Map a panel dot (+ the two cached norms) to the kernel value —
+    /// the single definition every block entry point shares.
+    #[inline]
+    fn finish(&self, d: f64, na: f64, nb: f64) -> f64 {
+        match *self {
+            Kernel::Gaussian { bw } => {
+                let d2 = linalg::sqdist_from_norms(na, nb, d);
+                (-d2 / (2.0 * bw * bw)).exp()
+            }
+            Kernel::Linear => d,
+            Kernel::Polynomial { degree, coef } => (d + coef).powi(degree as i32),
+        }
+    }
+
     /// K(x, x) without touching a second row.
     #[inline]
     pub fn diag(&self, x: &[f64]) -> f64 {
@@ -42,6 +143,23 @@ impl Kernel {
             Kernel::Gaussian { .. } => 1.0,
             Kernel::Linear => dot(x, x),
             Kernel::Polynomial { degree, coef } => (dot(x, x) + coef).powi(degree as i32),
+        }
+    }
+
+    /// K(x, x) from the cached squared norm `||x||^2` — the block-path
+    /// spelling of [`Kernel::diag`] (`dot(x, x) == ||x||^2`, so this is
+    /// `finish(n, n, n)`). Block call sites use this so their diagonal
+    /// agrees bitwise with their off-diagonal entries even for the
+    /// linear/polynomial kernels, whose diag depends on the dot's
+    /// summation order. The Gaussian diagonal is the constant 1 (like
+    /// [`Kernel::diag`]) rather than `exp(-0)` — the same bits for
+    /// every finite norm, and it keeps `K(z, z) = 1` even for a query
+    /// row whose norm overflowed to infinity.
+    #[inline]
+    pub fn diag_from_norm(&self, norm: f64) -> f64 {
+        match *self {
+            Kernel::Gaussian { .. } => 1.0,
+            _ => self.finish(norm, norm, norm),
         }
     }
 
@@ -120,6 +238,133 @@ mod tests {
         let k = Kernel::Polynomial { degree: 2, coef: 1.0 };
         assert_eq!(k.eval(&[1.0], &[2.0]), 9.0);
         assert_eq!(k.diag(&[2.0]), 25.0);
+    }
+
+    #[test]
+    fn polynomial_constructor_accepts_valid() {
+        let k = Kernel::polynomial(3, 0.5);
+        assert_eq!(k, Kernel::Polynomial { degree: 3, coef: 0.5 });
+        assert_eq!(Kernel::polynomial(i32::MAX as u32, 0.0).eval(&[1.0], &[1.0]), 1.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn polynomial_rejects_degree_zero() {
+        Kernel::polynomial(0, 1.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn polynomial_rejects_degree_overflowing_i32() {
+        // powi takes i32: degree > i32::MAX would wrap to a negative
+        // exponent and silently invert the kernel
+        Kernel::polynomial(i32::MAX as u32 + 1, 1.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn polynomial_rejects_non_finite_coef() {
+        Kernel::polynomial(2, f64::NAN);
+    }
+
+    #[test]
+    fn eval_block_matches_scalar_eval_closely() {
+        let a = Matrix::from_rows(&[
+            vec![0.3, -1.2, 0.8],
+            vec![1.0, 0.0, -0.5],
+            vec![-2.0, 0.7, 0.1],
+        ])
+        .unwrap();
+        let b = Matrix::from_rows(&[vec![0.0, 0.1, 0.2], vec![1.5, -0.4, 0.9]]).unwrap();
+        let (an, bn) = (NormCache::new(&a), NormCache::new(&b));
+        for k in [
+            Kernel::gaussian(0.7),
+            Kernel::Linear,
+            Kernel::polynomial(3, 1.0),
+        ] {
+            let mut out = vec![0.0; 6];
+            k.eval_block(&a, &an, 0..3, &b, &bn, 0..2, &mut out);
+            for i in 0..3 {
+                for j in 0..2 {
+                    let want = k.eval(a.row(i), b.row(j));
+                    let got = out[i * 2 + j];
+                    assert!(
+                        (got - want).abs() <= 1e-12 * want.abs().max(1.0),
+                        "{k} ({i},{j}): {got} vs {want}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn eval_cached_matches_eval_block_column_bitwise() {
+        let a = Matrix::from_rows(&[
+            vec![0.3, -1.2, 0.8, 2.0],
+            vec![1.0, 0.0, -0.5, -1.0],
+            vec![-2.0, 0.7, 0.1, 0.4],
+        ])
+        .unwrap();
+        let z = [0.9, -0.2, 1.1, 0.0];
+        let zm = Matrix::from_rows(&[z.to_vec()]).unwrap();
+        let (an, zn_cache) = (NormCache::new(&a), NormCache::new(&zm));
+        let zn = crate::linalg::dot(&z, &z);
+        assert_eq!(zn.to_bits(), zn_cache.get(0).to_bits());
+        for k in [
+            Kernel::gaussian(1.3),
+            Kernel::Linear,
+            Kernel::polynomial(2, 0.5),
+        ] {
+            let mut block = vec![0.0; 3];
+            k.eval_block(&a, &an, 0..3, &zm, &zn_cache, 0..1, &mut block);
+            for i in 0..3 {
+                let got = k.eval_cached(a.row(i), an.get(i), &z, zn);
+                assert_eq!(got.to_bits(), block[i].to_bits(), "{k} row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn non_finite_inputs_never_score_as_identical() {
+        // a finite row whose squared norm overflows to +inf must look
+        // astronomically FAR on the block path (K -> 0), exactly like
+        // the scalar reference — never K = 1 via a swallowed NaN
+        let k = Kernel::gaussian(1.0);
+        let huge = [1e200, -1e200];
+        let normal = [1.0, 2.0];
+        let (nh, nn) = (linalg::dot(&huge, &huge), linalg::dot(&normal, &normal));
+        assert!(nh.is_infinite());
+        let got = k.eval_cached(&huge, nh, &normal, nn);
+        assert_eq!(got, 0.0);
+        assert_eq!(got, k.eval(&huge, &normal));
+        // K(z, z) of the huge row stays 1 on the diag path (scalar
+        // semantics), so dist2 = 1 - 0 + w correctly lands outside
+        assert_eq!(k.diag_from_norm(nh), 1.0);
+        // true NaN input propagates rather than clamping to "identical"
+        let nan_row = [f64::NAN, 1.0];
+        let nnan = linalg::dot(&nan_row, &nan_row);
+        assert!(k.eval_cached(&nan_row, nnan, &normal, nn).is_nan());
+    }
+
+    #[test]
+    fn diag_from_norm_matches_block_self_eval() {
+        let a = Matrix::from_rows(&[vec![1.0, -2.0, 0.5], vec![0.0, 0.0, 0.0]]).unwrap();
+        let an = NormCache::new(&a);
+        for k in [
+            Kernel::gaussian(0.9),
+            Kernel::Linear,
+            Kernel::polynomial(4, 1.5),
+        ] {
+            for i in 0..2 {
+                let mut out = [0.0];
+                k.eval_block(&a, &an, i..i + 1, &a, &an, i..i + 1, &mut out);
+                assert_eq!(
+                    k.diag_from_norm(an.get(i)).to_bits(),
+                    out[0].to_bits(),
+                    "{k} row {i}"
+                );
+            }
+        }
     }
 
     #[test]

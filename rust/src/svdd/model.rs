@@ -3,6 +3,7 @@
 //! tracks (paper defines `a = sum_i alpha_i x_i` even under a kernel).
 
 use crate::error::{Error, Result};
+use crate::linalg::{self, NormCache};
 use crate::svdd::kernel::Kernel;
 use crate::util::hash::Fnv1a;
 use crate::util::json::{arr, num, obj, s, Json};
@@ -20,6 +21,9 @@ pub struct SvddModel {
     /// W = alpha' K(SV, SV) alpha — precomputed model constant.
     w: f64,
     center: Vec<f64>,
+    /// Cached `||sv_i||^2` for the batched scoring path (derived from
+    /// `sv`, recomputed on construction — never serialized).
+    sv_norms: NormCache,
 }
 
 impl SvddModel {
@@ -60,7 +64,8 @@ impl SvddModel {
                 *c += a * x;
             }
         }
-        Ok(SvddModel { sv, alpha, kernel, r2, w, center })
+        let sv_norms = NormCache::new(&sv);
+        Ok(SvddModel { sv, alpha, kernel, r2, w, center, sv_norms })
     }
 
     // ------------------------------------------------------- accessors
@@ -141,13 +146,21 @@ impl SvddModel {
 
     // --------------------------------------------------------- scoring
 
-    /// Kernel distance-to-center squared for a single observation.
+    /// Kernel distance-to-center squared for a single observation, on
+    /// the batched kernel layer: each `K(sv_i, z)` comes from the
+    /// cached SV norms ([`Kernel::eval_cached`], the scalar spelling of
+    /// an `eval_block` column) and is folded into the alpha-weighted
+    /// sum in SV order — no per-call buffer. Bit-identical to the
+    /// corresponding [`SvddModel::dist2_batch`] entry (same per-pair
+    /// values, same accumulation order).
     pub fn dist2(&self, z: &[f64]) -> f64 {
+        let z_norm = linalg::dot(z, z);
         let mut k_sum = 0.0;
         for (i, &a) in self.alpha.iter().enumerate() {
-            k_sum += a * self.kernel.eval(self.sv.row(i), z);
+            let k = self.kernel.eval_cached(self.sv.row(i), self.sv_norms.get(i), z, z_norm);
+            k_sum += a * k;
         }
-        self.kernel.diag(z) - 2.0 * k_sum + self.w
+        self.kernel.diag_from_norm(z_norm) - 2.0 * k_sum + self.w
     }
 
     /// `dist2(z) > R^2`.
@@ -157,10 +170,14 @@ impl SvddModel {
 
     /// Native batch scoring (the XLA-backed path lives in
     /// [`crate::scoring`]; this is the reference it is checked against).
-    /// Rows are scored in parallel chunks on the global pool when the
-    /// batch is large enough to pay for it; each row's score is an
-    /// independent [`SvddModel::dist2`], so the output is bit-identical
-    /// to the serial loop at any thread count.
+    /// The batch's squared row norms are cached once, then rows are
+    /// scored in parallel 64-row chunks on the global pool when the
+    /// batch is large enough to pay for it; each chunk evaluates one
+    /// `#SV x chunk` [`Kernel::eval_block`] panel and reduces it with
+    /// alpha weights in SV order. Per-entry kernel values and the
+    /// reduction order are independent of chunking, so the output is
+    /// bit-identical to [`SvddModel::dist2`] per row at any thread
+    /// count.
     pub fn dist2_batch(&self, zs: &Matrix) -> Vec<f64> {
         self.dist2_batch_pooled(zs, crate::parallel::global())
     }
@@ -168,11 +185,31 @@ impl SvddModel {
     /// [`SvddModel::dist2_batch`] on an explicit pool.
     pub fn dist2_batch_pooled(&self, zs: &Matrix, pool: crate::parallel::Pool) -> Vec<f64> {
         let n = zs.rows();
+        let nsv = self.sv.rows();
         let mut out = vec![0.0; n];
-        let work = n * self.num_sv() * self.sv.cols().max(1);
+        let zs_norms = NormCache::new(zs);
+        let work = n * nsv * self.sv.cols().max(1);
         pool.for_work(work).run_chunks(&mut out, 64, |start, chunk| {
+            let cols = chunk.len();
+            // K(sv, z) panel for this chunk of z rows (column-major per
+            // z row: entry (i, off) at [i * cols + off])
+            let mut panel = vec![0.0; nsv * cols];
+            self.kernel.eval_block(
+                &self.sv,
+                &self.sv_norms,
+                0..nsv,
+                zs,
+                &zs_norms,
+                start..start + cols,
+                &mut panel,
+            );
             for (off, slot) in chunk.iter_mut().enumerate() {
-                *slot = self.dist2(zs.row(start + off));
+                let mut k_sum = 0.0;
+                for (i, &a) in self.alpha.iter().enumerate() {
+                    k_sum += a * panel[i * cols + off];
+                }
+                let diag = self.kernel.diag_from_norm(zs_norms.get(start + off));
+                *slot = diag - 2.0 * k_sum + self.w;
             }
         });
         out
@@ -221,10 +258,30 @@ impl SvddModel {
                     .ok_or_else(|| Error::invalid("bw not a number"))?,
             ),
             Some("linear") => Kernel::Linear,
-            Some("polynomial") => Kernel::Polynomial {
-                degree: kj.req("degree")?.as_f64().unwrap_or(2.0) as u32,
-                coef: kj.req("coef")?.as_f64().unwrap_or(1.0),
-            },
+            Some("polynomial") => {
+                // validate here and return Err — this is untrusted file
+                // input, so the panicking constructor is out of place
+                let degree = kj
+                    .req("degree")?
+                    .as_f64()
+                    .ok_or_else(|| Error::invalid("polynomial degree not a number"))?;
+                let coef = kj
+                    .req("coef")?
+                    .as_f64()
+                    .ok_or_else(|| Error::invalid("polynomial coef not a number"))?;
+                if !(1.0..=i32::MAX as f64).contains(&degree) || degree.fract() != 0.0 {
+                    return Err(Error::invalid(format!(
+                        "polynomial degree must be an integer in [1, {}], got {degree}",
+                        i32::MAX
+                    )));
+                }
+                if !coef.is_finite() {
+                    return Err(Error::invalid(format!(
+                        "polynomial coef must be finite, got {coef}"
+                    )));
+                }
+                Kernel::polynomial(degree as u32, coef)
+            }
             other => return Err(Error::invalid(format!("bad kernel type {other:?}"))),
         };
         let r2 = v.req("r2")?.as_f64().ok_or_else(|| Error::invalid("r2"))?;
@@ -349,6 +406,30 @@ mod tests {
         )
         .unwrap();
         assert_ne!(other.content_hash(), m.content_hash());
+    }
+
+    #[test]
+    fn bad_polynomial_kernel_json_is_an_error_not_a_panic() {
+        // untrusted model files must surface Err, never abort
+        let with_degree = |degree: f64| {
+            let mut j = toy_model().to_json();
+            if let Json::Obj(fields) = &mut j {
+                fields.insert(
+                    "kernel".into(),
+                    obj(vec![
+                        ("type", s("polynomial")),
+                        ("degree", num(degree)),
+                        ("coef", num(1.0)),
+                    ]),
+                );
+            }
+            j
+        };
+        assert!(SvddModel::from_json(&with_degree(0.0)).is_err());
+        assert!(SvddModel::from_json(&with_degree(-3.0)).is_err());
+        assert!(SvddModel::from_json(&with_degree(1e12)).is_err());
+        assert!(SvddModel::from_json(&with_degree(2.5)).is_err());
+        assert!(SvddModel::from_json(&with_degree(2.0)).is_ok());
     }
 
     #[test]

@@ -19,6 +19,7 @@
 //! `g += 2 delta (K[:,i] - K[:,j])`.
 
 use crate::error::{Error, Result};
+use crate::linalg::NormCache;
 use crate::parallel::Pool;
 use crate::svdd::cache::ColumnCache;
 use crate::svdd::kernel::Kernel;
@@ -49,12 +50,16 @@ pub trait KernelProvider {
 }
 
 /// Lazily evaluated kernel over a data matrix with an LRU column cache.
-/// Column evaluation on a cache miss runs in parallel chunks on the
-/// pool (each entry is an independent `K(x_i, x_k)`, so the column is
-/// bit-identical to the serial evaluation at any thread count).
+/// Column evaluation on a cache miss runs as [`Kernel::eval_block`]
+/// panels (squared row norms cached once at construction) in parallel
+/// chunks on the pool; each entry is a pure function of its two rows,
+/// so the column is bit-identical to the serial evaluation at any
+/// thread count, and bit-identical to the corresponding
+/// [`DenseKernel::from_data`] Gram entries.
 pub struct LazyKernel<'a> {
     data: &'a Matrix,
     kernel: Kernel,
+    norms: NormCache,
     cache: ColumnCache,
     diag: Vec<f64>,
     pool: Option<Pool>,
@@ -62,10 +67,14 @@ pub struct LazyKernel<'a> {
 
 impl<'a> LazyKernel<'a> {
     pub fn new(data: &'a Matrix, kernel: Kernel, cache_bytes: usize) -> Self {
-        let diag = (0..data.rows()).map(|i| kernel.diag(data.row(i))).collect();
+        let norms = NormCache::new(data);
+        // block-path diag, so K_ii agrees bitwise with the off-diagonal
+        // entries the column panels produce
+        let diag = norms.as_slice().iter().map(|&n| kernel.diag_from_norm(n)).collect();
         LazyKernel {
             data,
             kernel,
+            norms,
             cache: ColumnCache::new(data.rows(), cache_bytes),
             diag,
             pool: None,
@@ -96,6 +105,7 @@ impl<'a> KernelProvider for LazyKernel<'a> {
     fn col_into(&mut self, i: usize, out: &mut [f64]) {
         let data = self.data;
         let kernel = self.kernel;
+        let norms = &self.norms;
         // An explicitly pinned pool (`with_pool`) is used as-is — the
         // caller took control, and the determinism tests rely on it to
         // force parallel columns on small problems. The global pool is
@@ -106,13 +116,11 @@ impl<'a> KernelProvider for LazyKernel<'a> {
         };
         let gated = self.pool.is_none();
         self.cache.get_into(i, out, |buf| {
-            let xi = data.row(i);
             let work = buf.len() * data.cols().max(1);
             let run = if gated && work < COL_PAR_MIN_WORK { Pool::serial() } else { pool };
             run.run_chunks(buf, COL_CHUNK, |start, chunk| {
-                for (off, slot) in chunk.iter_mut().enumerate() {
-                    *slot = kernel.eval(xi, data.row(start + off));
-                }
+                let end = start + chunk.len();
+                kernel.eval_block(data, norms, i..i + 1, data, norms, start..end, chunk);
             });
         });
     }
@@ -136,9 +144,12 @@ impl DenseKernel {
         Ok(DenseKernel { n, k })
     }
 
-    /// Compute the full gram matrix natively, in parallel row blocks on
-    /// the global pool. Bit-identical to [`DenseKernel::from_data_serial`]
-    /// at any thread count (kernel evaluation is exactly symmetric).
+    /// Compute the full gram matrix natively on the batched kernel
+    /// layer ([`crate::parallel::gram`]: norm-cached
+    /// [`Kernel::eval_block`] row panels), in parallel on the global
+    /// pool. Bit-identical at any thread count; agrees with the scalar
+    /// reference [`DenseKernel::from_data_serial`] to ULP-level relative
+    /// tolerance (the block path uses a different summation order).
     pub fn from_data(data: &Matrix, kernel: Kernel) -> Self {
         Self::from_data_pooled(data, kernel, crate::parallel::global())
     }
@@ -151,8 +162,10 @@ impl DenseKernel {
         }
     }
 
-    /// Single-threaded upper-triangle + mirror computation — the
-    /// reference the determinism tests compare the pooled path against.
+    /// Single-threaded upper-triangle + mirror computation via the
+    /// scalar [`Kernel::eval`] — the **scalar reference path** the
+    /// block layer is property-tested against. Not used on any hot
+    /// path; kept as the independent oracle.
     pub fn from_data_serial(data: &Matrix, kernel: Kernel) -> Self {
         let n = data.rows();
         let mut k = vec![0.0; n * n];

@@ -99,10 +99,16 @@ fn finalize(data: &Matrix, params: &SvddParams, sol: smo::SmoSolution) -> Result
     // W = alpha' K alpha over the retained SVs (recomputed exactly on
     // the reduced set rather than reusing sol.quad, so the scoring
     // identity dist2(sv_boundary) == R^2 holds for the *stored* model).
+    // K(SV, SV) comes from the same block layer the scorer uses, so the
+    // identity holds bitwise against the stored model's kernel values.
+    let nsv = sv.rows();
+    let norms = crate::linalg::NormCache::new(&sv);
+    let mut kmat = vec![0.0; nsv * nsv];
+    params.kernel.eval_block(&sv, &norms, 0..nsv, &sv, &norms, 0..nsv, &mut kmat);
     let mut w = 0.0;
     for (i, &ai) in alpha.iter().enumerate() {
         for (j, &aj) in alpha.iter().enumerate() {
-            w += ai * aj * params.kernel.eval(sv.row(i), sv.row(j));
+            w += ai * aj * kmat[i * nsv + j];
         }
     }
     SvddModel::new(sv, alpha, params.kernel, sol.r2, w)
@@ -166,14 +172,9 @@ mod tests {
         let data = ring_data(64, 4);
         let params = SvddParams::gaussian(0.7, 0.05);
         let native = train(&data, &params).unwrap();
-        // gram computed exactly as the XLA artifact would
-        let n = data.rows();
-        let mut gram = vec![0.0; n * n];
-        for i in 0..n {
-            for j in 0..n {
-                gram[i * n + j] = params.kernel.eval(data.row(i), data.row(j));
-            }
-        }
+        // gram from the same block layer the backends use (a real
+        // backend — XLA artifact or PooledGram — feeds these bytes)
+        let gram = crate::parallel::gram(&data, params.kernel, crate::parallel::Pool::serial());
         let viagram = train_with_gram(&data, gram, &params).unwrap();
         assert_eq!(native.num_sv(), viagram.num_sv());
         assert!((native.r2() - viagram.r2()).abs() < 1e-10);

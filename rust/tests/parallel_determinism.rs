@@ -3,11 +3,16 @@
 //! The pool's contract is that seeded runs are **bit-identical at any
 //! thread count**: parallel Gram rows, parallel SMO kernel columns,
 //! parallel batch scoring and multi-candidate training must all produce
-//! exactly the serial path's bytes. These tests pin that contract
-//! across thread counts {1, 2, 8}, and pin the K=1 sampling trainer to
-//! a golden re-implementation of the pre-candidate sequential loop so
-//! the per-candidate RNG stream derivation can never silently change
-//! historical seeded outputs.
+//! exactly the single-thread path's bytes. Since the batched
+//! kernel-compute layer landed, the bitwise anchor for kernel entries
+//! is the **block path at one thread** (norm-cached `eval_block`
+//! panels); the scalar `Kernel::eval` reference
+//! (`DenseKernel::from_data_serial`) agrees to ULP-level relative
+//! tolerance only — asserted here alongside the bit-identity checks.
+//! These tests pin that contract across thread counts {1, 2, 8}, and
+//! pin the K=1 sampling trainer to a golden re-implementation of the
+//! pre-candidate sequential loop so the per-candidate RNG stream
+//! derivation can never silently change seeded outputs.
 
 use fastsvdd::data::banana::Banana;
 use fastsvdd::data::tennessee::TennesseePlant;
@@ -34,29 +39,36 @@ fn parallel_gram_bit_identical_across_thread_counts() {
         (tennessee(97), 6.0),
     ] {
         let kernel = Kernel::gaussian(bw);
-        let want = DenseKernel::from_data_serial(&data, kernel);
+        // bitwise anchor: the block path at one thread
+        let want = gram(&data, kernel, Pool::serial());
         for threads in THREAD_COUNTS {
             let got = gram(&data, kernel, Pool::new(threads));
             assert_eq!(
                 got,
-                want.as_slice(),
+                want,
                 "gram diverged at {threads} threads ({}x{})",
                 data.rows(),
                 data.cols()
             );
         }
+        // the scalar reference agrees to tight tolerance (Gaussian
+        // entries live in [0, 1], so absolute == relative scale here)
+        let scalar = DenseKernel::from_data_serial(&data, kernel);
+        for (b, s) in want.iter().zip(scalar.as_slice()) {
+            assert!((b - s).abs() <= 1e-12, "block {b} vs scalar {s}");
+        }
     }
 }
 
 #[test]
-fn pooled_gram_backend_matches_serial_reference() {
+fn pooled_gram_backend_matches_single_thread_reference() {
     let data = tennessee(64);
     let kernel = Kernel::gaussian(4.0);
-    let want = DenseKernel::from_data_serial(&data, kernel);
+    let want = gram(&data, kernel, Pool::serial());
     for threads in THREAD_COUNTS {
         let be = PooledGram::with_pool(Pool::new(threads));
         let got = fastsvdd::sampling::GramBackend::gram(&be, &data, kernel).unwrap();
-        assert_eq!(got, want.as_slice());
+        assert_eq!(got, want);
     }
 }
 
@@ -77,11 +89,12 @@ fn parallel_lazy_columns_give_identical_smo_solution() {
     // An explicitly pinned pool bypasses the column work gate, so this
     // forces genuinely parallel column evaluation on a test-sized
     // problem and checks the full SMO solve is bit-identical to the
-    // dense serial solve.
+    // dense block-path solve (lazy columns and the block Gram produce
+    // the same bits per entry — both are eval_block panels).
     let data = tennessee(800);
     let kernel = Kernel::gaussian(6.0);
     let c = 1.0 / (data.rows() as f64 * 0.05);
-    let mut dense = DenseKernel::from_data_serial(&data, kernel);
+    let mut dense = DenseKernel::from_data_pooled(&data, kernel, Pool::serial());
     let want = smo::solve(&mut dense, c, &SmoOptions::default()).unwrap();
     for threads in THREAD_COUNTS {
         let mut lazy = LazyKernel::new(&data, kernel, 256 << 20).with_pool(Pool::new(threads));
@@ -198,10 +211,11 @@ fn multi_candidate_training_identical_across_thread_counts() {
 }
 
 #[test]
-fn dense_from_data_equals_serial_reference() {
-    // The default (pooled, global) constructor and the serial triangle
-    // reference must agree on an asymmetric-looking but exactly
-    // symmetric kernel evaluation.
+fn dense_from_data_deterministic_and_near_scalar_reference() {
+    // The default (pooled, global) constructor must equal the
+    // single-thread block path bitwise for every kernel variant, and
+    // sit within tight relative tolerance of the scalar triangle
+    // reference (different summation order, same mathematics).
     let data = tennessee(83);
     for kernel in [
         Kernel::gaussian(3.0),
@@ -209,7 +223,14 @@ fn dense_from_data_equals_serial_reference() {
         Kernel::Polynomial { degree: 3, coef: 0.5 },
     ] {
         let a = DenseKernel::from_data(&data, kernel);
-        let b = DenseKernel::from_data_serial(&data, kernel);
+        let b = DenseKernel::from_data_pooled(&data, kernel, Pool::serial());
         assert_eq!(a.as_slice(), b.as_slice(), "kernel {kernel}");
+        let scalar = DenseKernel::from_data_serial(&data, kernel);
+        for (x, y) in a.as_slice().iter().zip(scalar.as_slice()) {
+            assert!(
+                (x - y).abs() <= 1e-10 * y.abs().max(1.0),
+                "kernel {kernel}: block {x} vs scalar {y}"
+            );
+        }
     }
 }

@@ -62,6 +62,7 @@ fn distributed_pipeline_quality() {
         workers: 4,
         sampling: SamplingConfig { sample_size: 6, ..Default::default() },
         seed: 5,
+        shuffle_seed: None,
     };
     let dist = train_local_cluster(&data, &params, &dcfg).unwrap();
     let full = train_full(&data, &params).unwrap();

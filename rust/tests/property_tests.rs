@@ -4,6 +4,7 @@
 
 use fastsvdd::data::polygon::Polygon;
 use fastsvdd::distributed::message::Message;
+use fastsvdd::linalg::NormCache;
 use fastsvdd::registry::VersionMeta;
 use fastsvdd::sampling::{ConvergenceCriteria, ConvergenceTracker};
 use fastsvdd::scoring::F1Score;
@@ -351,6 +352,154 @@ fn prop_matrix_algebra() {
         let stacked = mat.vstack(&d1).unwrap();
         assert_eq!(stacked.rows(), mat.rows() + d1.rows());
     });
+}
+
+/// Block-path kernel evaluation (`Kernel::eval_block` over the
+/// norm-cached, tile-blocked `linalg` layer) agrees with the scalar
+/// `Kernel::eval` reference to tight relative tolerance, for all three
+/// kernel variants and arbitrary panel shapes — including the ragged
+/// ones (1x1, 1xn, panels that are no multiple of the tile size).
+#[test]
+fn prop_block_vs_scalar_kernel_agreement() {
+    forall("block vs scalar", 40, |g| {
+        let m = g.usize_in(1, 13); // feature dims around the 4-wide unroll
+        let (na, nb) = (g.usize_in(1, 30), g.usize_in(1, 30));
+        let a = random_points(g, na, m, 3.0);
+        let b = random_points(g, nb, m, 3.0);
+        let (an, bn) = (NormCache::new(&a), NormCache::new(&b));
+        let kernels = [
+            Kernel::gaussian(g.f64_in(0.3, 3.0)),
+            Kernel::Linear,
+            Kernel::polynomial(g.usize_in(1, 4) as u32, g.f64_in(0.0, 2.0)),
+        ];
+        // panel shapes: full, single pair, single row, ragged sub-panel
+        let (i0, j0) = (g.usize_in(0, na - 1), g.usize_in(0, nb - 1));
+        let panels = [
+            (0..na, 0..nb),
+            (i0..i0 + 1, j0..j0 + 1),
+            (i0..i0 + 1, 0..nb),
+            (0..na, j0..nb),
+        ];
+        for kernel in kernels {
+            for (ar, br) in panels.clone() {
+                let mut out = vec![f64::NAN; ar.len() * br.len()];
+                kernel.eval_block(&a, &an, ar.clone(), &b, &bn, br.clone(), &mut out);
+                for (ia, i) in ar.clone().enumerate() {
+                    for (jb, j) in br.clone().enumerate() {
+                        let got = out[ia * br.len() + jb];
+                        let want = kernel.eval(a.row(i), b.row(j));
+                        assert!(
+                            (got - want).abs() <= 1e-9 * want.abs().max(1.0),
+                            "{kernel} panel ({ar:?},{br:?}) entry ({i},{j}): \
+                             block {got} vs scalar {want}"
+                        );
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// Block entries are a pure function of the two rows: any sub-panel of
+/// the full block evaluation reproduces the same bits, so tiling and
+/// chunk geometry can never leak into results.
+#[test]
+fn prop_block_entries_independent_of_panel_shape() {
+    forall("block panel purity", 30, |g| {
+        let m = g.usize_in(1, 9);
+        let n = g.usize_in(2, 25);
+        let a = random_points(g, n, m, 2.0);
+        let an = NormCache::new(&a);
+        let kernel = match g.usize_in(0, 2) {
+            0 => Kernel::gaussian(g.f64_in(0.3, 2.0)),
+            1 => Kernel::Linear,
+            _ => Kernel::polynomial(g.usize_in(1, 3) as u32, 1.0),
+        };
+        let mut full = vec![0.0; n * n];
+        kernel.eval_block(&a, &an, 0..n, &a, &an, 0..n, &mut full);
+        // symmetry is exact on the block path
+        for i in 0..n {
+            for j in 0..n {
+                assert_eq!(
+                    full[i * n + j].to_bits(),
+                    full[j * n + i].to_bits(),
+                    "asymmetric at ({i},{j})"
+                );
+            }
+        }
+        // a random ragged sub-panel carries identical bits
+        let (i0, i1) = {
+            let x = g.usize_in(0, n - 1);
+            (x, g.usize_in(x + 1, n))
+        };
+        let (j0, j1) = {
+            let x = g.usize_in(0, n - 1);
+            (x, g.usize_in(x + 1, n))
+        };
+        let (li, lj) = (i1 - i0, j1 - j0);
+        let mut sub = vec![0.0; li * lj];
+        kernel.eval_block(&a, &an, i0..i1, &a, &an, j0..j1, &mut sub);
+        for ia in 0..li {
+            for jb in 0..lj {
+                assert_eq!(
+                    sub[ia * lj + jb].to_bits(),
+                    full[(i0 + ia) * n + (j0 + jb)].to_bits(),
+                    "sub-panel ({i0}..{i1},{j0}..{j1}) diverged at ({ia},{jb})"
+                );
+            }
+        }
+    });
+}
+
+/// Degenerate and extreme inputs: empty panels are no-ops, and the
+/// norm-cache formulation keeps every intermediate finite for
+/// coordinates up to +-1e150 (where `||x||^2` itself is ~1e300 but
+/// still representable) — no overflow sneaks in before the Gaussian
+/// saturates.
+#[test]
+fn block_kernel_empty_and_extreme_inputs() {
+    // empty matrices and empty ranges
+    let empty = Matrix::zeros(0, 3);
+    let en = NormCache::new(&empty);
+    assert!(en.is_empty());
+    let some = Matrix::from_rows(&[vec![1.0, 2.0, 3.0]]).unwrap();
+    let sn = NormCache::new(&some);
+    let mut out: Vec<f64> = Vec::new();
+    for kernel in [Kernel::gaussian(1.0), Kernel::Linear, Kernel::polynomial(2, 1.0)] {
+        kernel.eval_block(&empty, &en, 0..0, &some, &sn, 0..1, &mut out);
+        kernel.eval_block(&some, &sn, 0..1, &empty, &en, 0..0, &mut out);
+        kernel.eval_block(&empty, &en, 0..0, &empty, &en, 0..0, &mut out);
+        assert!(out.is_empty());
+    }
+
+    // extreme coordinates: +-1e150, mixed with moderate rows
+    let a = Matrix::from_rows(&[
+        vec![1e150, -1e150, 1e150],
+        vec![-1e150, 1e150, -1e150],
+        vec![1e150, 1e150, 1e150],
+        vec![1.0, -2.0, 0.5],
+    ])
+    .unwrap();
+    let an = NormCache::new(&a);
+    for i in 0..4 {
+        assert!(an.get(i).is_finite(), "norm {i} overflowed");
+    }
+    let kernel = Kernel::gaussian(1.0);
+    let mut k = vec![f64::NAN; 16];
+    kernel.eval_block(&a, &an, 0..4, &a, &an, 0..4, &mut k);
+    for i in 0..4 {
+        for j in 0..4 {
+            let v = k[i * 4 + j];
+            assert!(v.is_finite(), "K({i},{j}) not finite: {v}");
+            assert!((0.0..=1.0).contains(&v), "K({i},{j}) out of range: {v}");
+            // scalar reference agrees: identical rows give exactly 1,
+            // astronomically distant rows give exactly 0
+            let want = kernel.eval(a.row(i), a.row(j));
+            assert_eq!(v, want, "extreme K({i},{j})");
+        }
+    }
+    assert_eq!(k[0], 1.0);
+    assert_eq!(k[1], 0.0); // exp(-~1e300) underflows to zero exactly
 }
 
 /// Pool chunking covers every output index exactly once, for arbitrary
