@@ -1,0 +1,185 @@
+//! SMO solver-path perf: second-order working-set selection + active-set
+//! shrinking against the first-order unshrunk reference, and
+//! warm-started sampling iterations (`SamplingConfig::warm_alpha`)
+//! against cold starts.
+//!
+//! Two paper-scale workloads:
+//!
+//! - a **full SVDD solve** on Tennessee-Eastman-sized telemetry
+//!   (41-dim): pair-iteration count and wall time for
+//!   `wss=first, shrinking=off` vs the default `wss=second,
+//!   shrinking=on`, with the solutions checked to agree (both
+//!   eps-KKT, `R^2` within tolerance);
+//! - an **Algorithm-1 sampling run** on banana (the paper's headline
+//!   data set), fixed iteration budget so warm and cold do the same
+//!   number of union solves: total SMO iterations and wall time with
+//!   `warm_alpha` on vs off.
+//!
+//! Emits the usual table plus `results/BENCH_perf_smo.json` — the file
+//! the CI `bench-smoke` job gates against
+//! `ci/baselines/BENCH_perf_smo.json` (see ci/check_perf.py and
+//! ci/baselines/README.md): iteration-reduction ratios are
+//! machine-independent floors; the agreement booleans must be true.
+
+use fastsvdd::bench::{emit, emit_text, measure, scaled};
+use fastsvdd::data::banana::Banana;
+use fastsvdd::data::tennessee::TennesseePlant;
+use fastsvdd::data::Generator;
+use fastsvdd::sampling::{SamplingConfig, SamplingTrainer};
+use fastsvdd::svdd::bandwidth::median_heuristic;
+use fastsvdd::svdd::smo::{solve, LazyKernel, SmoOptions};
+use fastsvdd::svdd::{Kernel, SvddParams, Wss};
+use fastsvdd::util::json::{num, obj, s, Json};
+use fastsvdd::util::tables::{f, Table};
+
+fn main() {
+    // ---- full-solve ablation: WSS2 + shrinking vs first-order ----
+    let plant = TennesseePlant::default();
+    let rows = scaled(1_600, 400);
+    let data = plant.training(rows, 42);
+    let dim = data.cols();
+    let bw = median_heuristic(&data, 20_000, 1);
+    let kernel = Kernel::gaussian(bw);
+    let c = 1.0 / (rows as f64 * 0.05);
+
+    let first_opts = SmoOptions { wss: Wss::First, shrinking: false, ..Default::default() };
+    let fast_opts = SmoOptions::default();
+    let run_solve = |opts: &SmoOptions| {
+        let mut kp = LazyKernel::new(&data, kernel, 256 << 20);
+        solve(&mut kp, c, opts).unwrap()
+    };
+
+    let first_sol = run_solve(&first_opts);
+    let fast_sol = run_solve(&fast_opts);
+    let m_first = measure(0, 2, || run_solve(&first_opts));
+    let m_fast = measure(0, 2, || run_solve(&fast_opts));
+
+    let mut t = Table::new(
+        &format!("Perf: SMO solver paths ({rows}x{dim} tennessee full solve)"),
+        &["path", "iterations", "shrinks", "unshrinks", "mean_ms", "r2"],
+    );
+    t.row(vec![
+        "first-order, unshrunk (reference)".into(),
+        first_sol.iterations.to_string(),
+        "0".into(),
+        "0".into(),
+        f(m_first.mean * 1e3, 1),
+        f(first_sol.r2, 6),
+    ]);
+    t.row(vec![
+        "second-order + shrinking (default)".into(),
+        fast_sol.iterations.to_string(),
+        fast_sol.shrink_events.to_string(),
+        fast_sol.unshrink_events.to_string(),
+        f(m_fast.mean * 1e3, 1),
+        f(fast_sol.r2, 6),
+    ]);
+
+    let wss2_iter_reduction =
+        first_sol.iterations as f64 / fast_sol.iterations.max(1) as f64;
+    let wss2_speedup = m_first.mean / m_fast.mean.max(1e-12);
+    let r2_scale = first_sol.r2.abs().max(fast_sol.r2.abs()).max(1e-9);
+    let full_r2_rel_gap = (first_sol.r2 - fast_sol.r2).abs() / r2_scale;
+    let solutions_agree =
+        full_r2_rel_gap < 1e-3 && first_sol.gap < 1e-4 && fast_sol.gap < 1e-4;
+    assert!(
+        solutions_agree,
+        "solver paths disagree: r2 {} vs {} (rel {full_r2_rel_gap:.3e}), \
+         gaps {:.3e}/{:.3e}",
+        first_sol.r2, fast_sol.r2, first_sol.gap, fast_sol.gap
+    );
+
+    // ---- sampling: warm-started vs cold union solves ----
+    let b_rows = scaled(20_000, 4_000);
+    let bdata = Banana::default().generate(b_rows, 7);
+    let params = SvddParams::gaussian(0.35, 0.001);
+    // fixed iteration budget: warm and cold run the same number of
+    // sample + union solves, so total SMO iterations compare 1:1
+    let cold_cfg = SamplingConfig {
+        sample_size: 6,
+        max_iter: 30,
+        consecutive: 100, // unreachable: always run the full budget
+        ..Default::default()
+    };
+    let warm_cfg = SamplingConfig { warm_alpha: true, ..cold_cfg };
+    let cold_out = SamplingTrainer::new(params, cold_cfg).train(&bdata, 11).unwrap();
+    let warm_out = SamplingTrainer::new(params, warm_cfg).train(&bdata, 11).unwrap();
+    let m_cold =
+        measure(0, 2, || SamplingTrainer::new(params, cold_cfg).train(&bdata, 11).unwrap());
+    let m_warm =
+        measure(0, 2, || SamplingTrainer::new(params, warm_cfg).train(&bdata, 11).unwrap());
+
+    let mut ts = Table::new(
+        &format!("Perf: warm-started sampling ({b_rows} banana rows, 30 iterations)"),
+        &["init", "total_smo_iters", "solver_calls", "mean_ms", "r2"],
+    );
+    ts.row(vec![
+        "cold (1/n init)".into(),
+        cold_out.solver.smo_iterations.to_string(),
+        cold_out.solver_calls.to_string(),
+        f(m_cold.mean * 1e3, 1),
+        f(cold_out.model.r2(), 6),
+    ]);
+    ts.row(vec![
+        "warm (alpha carry)".into(),
+        warm_out.solver.smo_iterations.to_string(),
+        warm_out.solver_calls.to_string(),
+        f(m_warm.mean * 1e3, 1),
+        f(warm_out.model.r2(), 6),
+    ]);
+
+    let warm_iter_reduction = cold_out.solver.smo_iterations as f64
+        / warm_out.solver.smo_iterations.max(1) as f64;
+    let warm_r2_rel_gap = (warm_out.model.r2() - cold_out.model.r2()).abs()
+        / cold_out.model.r2().abs().max(1e-9);
+    let warm_matches_cold_r2 = warm_r2_rel_gap < 0.05;
+    assert!(
+        warm_matches_cold_r2,
+        "warm sampling drifted: r2 {} vs {} (rel {warm_r2_rel_gap:.3e})",
+        warm_out.model.r2(),
+        cold_out.model.r2()
+    );
+
+    emit("perf_smo", &t);
+    emit("perf_smo_sampling", &ts);
+    println!(
+        "WSS2+shrinking vs first-order: {:.2}x fewer iterations, {:.2}x wall time \
+         ({} -> {} iters; {} shrink / {} unshrink events)",
+        wss2_iter_reduction,
+        wss2_speedup,
+        first_sol.iterations,
+        fast_sol.iterations,
+        fast_sol.shrink_events,
+        fast_sol.unshrink_events
+    );
+    println!(
+        "warm vs cold sampling: {:.2}x fewer total SMO iterations ({} -> {})",
+        warm_iter_reduction, cold_out.solver.smo_iterations, warm_out.solver.smo_iterations
+    );
+
+    let json = obj(vec![
+        ("bench", s("perf_smo")),
+        ("full_rows", num(rows as f64)),
+        ("full_dim", num(dim as f64)),
+        ("first_order_iterations", num(first_sol.iterations as f64)),
+        ("wss2_iterations", num(fast_sol.iterations as f64)),
+        ("wss2_iter_reduction", num(wss2_iter_reduction)),
+        ("wss2_speedup", num(wss2_speedup)),
+        ("wss2_shrink_events", num(fast_sol.shrink_events as f64)),
+        ("wss2_unshrink_events", num(fast_sol.unshrink_events as f64)),
+        ("first_order_solve_s", num(m_first.mean)),
+        ("wss2_solve_s", num(m_fast.mean)),
+        ("full_r2_rel_gap", num(full_r2_rel_gap)),
+        ("solutions_agree", Json::Bool(solutions_agree)),
+        ("sampling_rows", num(b_rows as f64)),
+        ("cold_smo_iterations", num(cold_out.solver.smo_iterations as f64)),
+        ("warm_smo_iterations", num(warm_out.solver.smo_iterations as f64)),
+        ("warm_iter_reduction", num(warm_iter_reduction)),
+        ("cold_run_s", num(m_cold.mean)),
+        ("warm_run_s", num(m_warm.mean)),
+        ("warm_r2_rel_gap", num(warm_r2_rel_gap)),
+        ("warm_matches_cold_r2", Json::Bool(warm_matches_cold_r2)),
+    ]);
+    emit_text("BENCH_perf_smo.json", &json.to_string_pretty());
+    println!("wrote results/BENCH_perf_smo.json");
+}

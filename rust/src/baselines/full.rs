@@ -3,7 +3,7 @@
 
 use crate::error::Result;
 use crate::svdd::model::SvddModel;
-use crate::svdd::trainer::{train, SvddParams};
+use crate::svdd::trainer::{train_detailed, SolverStats, SvddParams};
 use crate::util::matrix::Matrix;
 use crate::util::timer::Stopwatch;
 
@@ -12,13 +12,15 @@ use crate::util::timer::Stopwatch;
 pub struct FullOutcome {
     pub model: SvddModel,
     pub seconds: f64,
+    /// SMO telemetry of the one big solve (`fastsvdd train -v`).
+    pub solver: SolverStats,
 }
 
 /// Train on all rows, timing the solve.
 pub fn train_full(data: &Matrix, params: &SvddParams) -> Result<FullOutcome> {
     let sw = Stopwatch::start();
-    let model = train(data, params)?;
-    Ok(FullOutcome { model, seconds: sw.elapsed_secs() })
+    let (model, solver) = train_detailed(data, params, None)?;
+    Ok(FullOutcome { model, seconds: sw.elapsed_secs(), solver })
 }
 
 #[cfg(test)]

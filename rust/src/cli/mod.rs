@@ -31,11 +31,14 @@ impl Args {
                 // --key=value or --key value or --flag
                 if let Some((k, v)) = name.split_once('=') {
                     args.opts.insert(k.to_string(), v.to_string());
-                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                } else if it.peek().map(|n| value_like(n.as_str())).unwrap_or(false) {
                     args.opts.insert(name.to_string(), it.next().unwrap().clone());
                 } else {
                     args.flags.push(name.to_string());
                 }
+            } else if short_flag(tok) {
+                // single-letter short flag (`-v`); never takes a value
+                args.flags.push(tok[1..].to_string());
             } else if args.command.is_empty() {
                 args.command = tok.clone();
             } else if args.action.is_empty() {
@@ -101,6 +104,20 @@ impl Args {
     }
 }
 
+/// A `-x` token with a single ASCII letter: a short flag. A negative
+/// number (`-1`, `-0.5`) is not — it stays consumable as an option
+/// value (`--bw -1`), while a boolean flag followed by a short flag
+/// (`--warm-alpha -v`) parses as two flags instead of silently eating
+/// `-v` as the boolean's "value".
+fn short_flag(tok: &str) -> bool {
+    tok.len() == 2 && tok.starts_with('-') && tok.as_bytes()[1].is_ascii_alphabetic()
+}
+
+/// Whether a peeked token may serve as an option value.
+fn value_like(tok: &str) -> bool {
+    !tok.starts_with("--") && !short_flag(tok)
+}
+
 /// Top-level help text for the launcher.
 pub const HELP: &str = "\
 fastsvdd — sampling-based SVDD training (Chaudhuri et al., SAS 2016)
@@ -130,6 +147,18 @@ COMMON OPTIONS (train):
     --sample-size <n>         Algorithm-1 sample size
     --candidates <k>          independent candidate samples per iteration,
                               solved concurrently; best R^2 wins (default 1)
+    --warm-alpha              carry each union solve's dual solution into
+                              the next iteration (warm-started SMO; off by
+                              default — cold init is the seeded historical
+                              reference)
+    --wss <rule>              SMO working-set selection: second (default) |
+                              first (max violating pair) | legacy (the
+                              pre-Solver loop, byte-for-byte reproducible;
+                              implies no shrinking and cold init)
+    --no-shrinking            disable SMO active-set shrinking
+    -v                        verbose training output (solver telemetry:
+                              SMO iterations, shrink/unshrink events,
+                              final gap, kernel-cache hit rate)
     --workers <p>             distributed worker count
     --shuffle-seed <s>        seeded pre-shuffle of the row order before
                               distributed sharding (for ordered datasets;
@@ -246,6 +275,27 @@ mod tests {
     fn trailing_flag_then_option() {
         let a = parse(&["train", "--xla", "--rows", "9"]);
         assert!(a.flag("xla"));
+        assert_eq!(a.get_usize("rows", 0).unwrap(), 9);
+    }
+
+    #[test]
+    fn short_flag_parses() {
+        let a = parse(&["train", "-v", "--rows", "9"]);
+        assert_eq!(a.command, "train");
+        assert!(a.flag("v"));
+        assert_eq!(a.get_usize("rows", 0).unwrap(), 9);
+        // a negative option value is still consumed as a value
+        let b = parse(&["train", "--bw", "-1"]);
+        assert_eq!(b.get_f64("bw", 0.0).unwrap(), -1.0);
+        assert!(!b.flag("1"));
+    }
+
+    #[test]
+    fn boolean_flag_does_not_eat_short_flag() {
+        let a = parse(&["train", "--warm-alpha", "-v", "--rows", "9"]);
+        assert!(a.flag("warm-alpha"), "--warm-alpha swallowed by -v");
+        assert!(a.flag("v"));
+        assert_eq!(a.get("warm-alpha"), None);
         assert_eq!(a.get_usize("rows", 0).unwrap(), 9);
     }
 }

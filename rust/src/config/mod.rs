@@ -8,7 +8,7 @@ use std::path::Path;
 use crate::error::{Error, Result};
 use crate::sampling::SamplingConfig;
 use crate::svdd::trainer::SvddParams;
-use crate::svdd::Kernel;
+use crate::svdd::{Kernel, Wss};
 use crate::util::json::Json;
 
 pub use crate::parallel::{ParallelismConfig, ThreadCount};
@@ -58,6 +58,14 @@ pub struct RunConfig {
     /// Candidate samples solved concurrently per iteration (K >= 1;
     /// 1 = the paper's sequential Algorithm 1).
     pub candidates_per_iter: usize,
+    /// Carry each union solve's dual solution into the next iteration
+    /// (warm-started SMO; off = the historical cold-init trajectory).
+    pub warm_alpha: bool,
+    /// SMO working-set selection: "second" (default), "first", or
+    /// "legacy" (the pre-Solver loop, byte-for-byte reproducible).
+    pub wss: Wss,
+    /// SMO active-set shrinking (ignored in legacy mode).
+    pub shrinking: bool,
     pub workers: usize,
     /// Seeded pre-shuffle of the row order before distributed sharding
     /// (`None` = shard rows as given; set for ordered/sorted datasets).
@@ -83,6 +91,9 @@ impl Default for RunConfig {
             eps: 1e-3,
             consecutive: 5,
             candidates_per_iter: 1,
+            warm_alpha: false,
+            wss: Wss::Second,
+            shrinking: true,
             workers: 4,
             shuffle_seed: None,
             threads: ThreadCount::Auto,
@@ -95,11 +106,14 @@ impl Default for RunConfig {
 
 impl RunConfig {
     pub fn params(&self) -> SvddParams {
-        SvddParams {
+        let mut params = SvddParams {
             kernel: Kernel::gaussian(self.bandwidth),
             outlier_fraction: self.outlier_fraction,
             ..Default::default()
-        }
+        };
+        params.smo.wss = self.wss;
+        params.smo.shrinking = self.shrinking;
+        params
     }
 
     pub fn sampling(&self) -> SamplingConfig {
@@ -110,6 +124,7 @@ impl RunConfig {
             eps_r2: self.eps,
             consecutive: self.consecutive,
             candidates_per_iter: self.candidates_per_iter,
+            warm_alpha: self.warm_alpha,
             record_trace: false,
         }
     }
@@ -146,6 +161,9 @@ impl RunConfig {
                 "candidates_per_iter" => {
                     cfg.candidates_per_iter = req_num(val, key)? as usize
                 }
+                "warm_alpha" => cfg.warm_alpha = req_bool(val, key)?,
+                "wss" => cfg.wss = Wss::parse(&req_str(val, key)?)?,
+                "shrinking" => cfg.shrinking = req_bool(val, key)?,
                 "workers" => cfg.workers = req_num(val, key)? as usize,
                 "shuffle_seed" => {
                     cfg.shuffle_seed = match val {
@@ -190,6 +208,15 @@ impl RunConfig {
         if self.threads == ThreadCount::Fixed(0) {
             return Err(Error::Config("threads must be 'auto' or >= 1".into()));
         }
+        if self.warm_alpha && self.wss == Wss::Legacy {
+            // fail here instead of mid-training: the legacy solver
+            // rejects the warm starts every union solve would pass it
+            return Err(Error::Config(
+                "warm_alpha cannot be combined with wss=legacy (the legacy \
+                 solver exists to replay cold-start trajectories)"
+                    .into(),
+            ));
+        }
         if !matches!(self.scorer.as_str(), "native" | "xla") {
             return Err(Error::Config(format!("unknown scorer '{}'", self.scorer)));
         }
@@ -206,6 +233,11 @@ fn req_str(v: &Json, key: &str) -> Result<String> {
 fn req_num(v: &Json, key: &str) -> Result<f64> {
     v.as_f64()
         .ok_or_else(|| Error::Config(format!("'{key}' must be a number")))
+}
+
+fn req_bool(v: &Json, key: &str) -> Result<bool> {
+    v.as_bool()
+        .ok_or_else(|| Error::Config(format!("'{key}' must be a boolean")))
 }
 
 #[cfg(test)]
@@ -257,6 +289,33 @@ mod tests {
         assert_eq!(cfg.shuffle_seed, Some(99));
         let cfg = RunConfig::from_json_text(r#"{"shuffle_seed": null}"#).unwrap();
         assert_eq!(cfg.shuffle_seed, None);
+    }
+
+    #[test]
+    fn solver_keys_parse_and_flow() {
+        let cfg =
+            RunConfig::from_json_text(r#"{"wss": "legacy", "shrinking": false}"#).unwrap();
+        assert_eq!(cfg.wss, Wss::Legacy);
+        assert!(!cfg.shrinking);
+        let p = cfg.params();
+        assert_eq!(p.smo.wss, Wss::Legacy);
+        assert!(!p.smo.shrinking);
+        let warm = RunConfig::from_json_text(r#"{"warm_alpha": true}"#).unwrap();
+        assert!(warm.warm_alpha);
+        assert!(warm.sampling().warm_alpha);
+        // defaults: fast path on, warm carry off
+        let d = RunConfig::default();
+        assert!(!d.warm_alpha);
+        assert_eq!(d.wss, Wss::Second);
+        assert!(d.shrinking);
+        // bad values rejected
+        assert!(RunConfig::from_json_text(r#"{"wss": "zeroth"}"#).is_err());
+        assert!(RunConfig::from_json_text(r#"{"warm_alpha": 3}"#).is_err());
+        assert!(RunConfig::from_json_text(r#"{"shrinking": "yes"}"#).is_err());
+        // legacy mode replays cold starts; warm carry contradicts it
+        assert!(
+            RunConfig::from_json_text(r#"{"warm_alpha": true, "wss": "legacy"}"#).is_err()
+        );
     }
 
     #[test]

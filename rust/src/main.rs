@@ -18,7 +18,7 @@ use fastsvdd::registry::{sync_champion, Registry, VersionId, VersionMeta};
 use fastsvdd::runtime::SharedRuntime;
 use fastsvdd::sampling::SamplingTrainer;
 use fastsvdd::scoring::{F1Score, Scorer};
-use fastsvdd::svdd::SvddModel;
+use fastsvdd::svdd::{SolverStats, SvddModel, Wss};
 use fastsvdd::util::matrix::Matrix;
 use fastsvdd::util::tables::{f, Table};
 use fastsvdd::util::timer::{fmt_duration, Stopwatch};
@@ -53,6 +53,19 @@ fn run(argv: &[String]) -> Result<()> {
         }
         other => Err(Error::Config(format!("unknown command '{other}'; try help"))),
     }
+}
+
+/// `train -v`: one line of SMO telemetry (iterations, shrink/unshrink
+/// events, final gap, kernel-cache hit rate) instead of dropping it.
+fn print_solver_stats(stats: &SolverStats) {
+    let hit = match stats.cache_hit_rate {
+        Some(r) => format!("{:.1}%", r * 100.0),
+        None => "n/a (dense gram)".into(),
+    };
+    println!(
+        "  solver: smo_iters={} shrinks={} unshrinks={} final_gap={:.3e} cache_hits={hit}",
+        stats.smo_iterations, stats.shrink_events, stats.unshrink_events, stats.gap
+    );
 }
 
 /// Install the global thread pool from a bare `--threads` flag (the
@@ -122,6 +135,15 @@ fn config_from_args(args: &Args) -> Result<RunConfig> {
         cfg.threads = ThreadCount::parse(v)?;
     }
     cfg.seed = args.get_u64("seed", cfg.seed)?;
+    if args.flag("warm-alpha") {
+        cfg.warm_alpha = true;
+    }
+    if let Some(v) = args.get("wss") {
+        cfg.wss = Wss::parse(v)?;
+    }
+    if args.flag("no-shrinking") {
+        cfg.shrinking = false;
+    }
     if args.flag("xla") {
         cfg.scorer = "xla".into();
     }
@@ -136,7 +158,8 @@ fn cmd_train(args: &Args) -> Result<()> {
     args.expect_only(&[
         "config", "data", "rows", "method", "bw", "f", "sample-size", "max-iter",
         "candidates", "workers", "shuffle-seed", "threads", "seed", "out", "trace",
-        "xla", "artifacts", "addrs", "registry", "promote",
+        "xla", "artifacts", "addrs", "registry", "promote", "warm-alpha", "wss",
+        "no-shrinking", "v",
     ])?;
     let cfg = config_from_args(args)?;
     parallel::install(cfg.parallelism());
@@ -157,6 +180,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     let (model, extra) = match cfg.method {
         Method::Full => {
             let out = train_full(&data, &params)?;
+            if args.flag("v") {
+                print_solver_stats(&out.solver);
+            }
             (out.model, format!("solve={}", fmt_duration(out.seconds)))
         }
         Method::Sampling => {
@@ -173,6 +199,15 @@ fn cmd_train(args: &Args) -> Result<()> {
                     "  candidates: {} per iteration (best-R^2 promotion)",
                     scfg.candidates_per_iter
                 );
+            }
+            if args.flag("v") {
+                println!(
+                    "  solver config: wss={} shrinking={} warm_alpha={}",
+                    params.smo.wss.as_str(),
+                    params.smo.shrinking,
+                    scfg.warm_alpha
+                );
+                print_solver_stats(&out.solver);
             }
             if let Some(path) = args.get("trace") {
                 let mut csv = String::from("iteration,r2,num_sv,center_delta\n");

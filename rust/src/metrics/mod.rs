@@ -102,6 +102,13 @@ pub struct Metrics {
     pub xla_executions: Counter,
     pub solver_calls: Counter,
     pub train_iterations: Counter,
+    /// SMO pair iterations across every solve (the inner-loop cost the
+    /// WSS2/shrinking/warm-start machinery exists to cut).
+    pub smo_iterations: Counter,
+    /// SMO shrink passes that removed variables from the working set.
+    pub smo_shrink_events: Counter,
+    /// SMO unshrink-and-recheck passes (exact gradient rebuilds).
+    pub smo_unshrink_events: Counter,
     pub score_latency: Histogram,
     /// Lifecycle: hot-swaps applied to a serving model slot.
     pub model_swaps: Counter,
@@ -118,16 +125,27 @@ impl Metrics {
         Metrics::default()
     }
 
+    /// Record one run's aggregated SMO telemetry.
+    pub fn record_solver(&self, stats: &crate::svdd::SolverStats) {
+        self.smo_iterations.add(stats.smo_iterations as u64);
+        self.smo_shrink_events.add(stats.shrink_events as u64);
+        self.smo_unshrink_events.add(stats.unshrink_events as u64);
+    }
+
     /// One-line render for logs / CLI output.
     pub fn render(&self) -> String {
         format!(
-            "batches={} rows={} xla_execs={} solves={} iters={} swaps={} \
+            "batches={} rows={} xla_execs={} solves={} iters={} smo_iters={} \
+             shrinks={} unshrinks={} swaps={} \
              retrains_warm={} retrains_cold={} score_mean={:.3}ms score_p99={:.3}ms",
             self.batches_scored.get(),
             self.rows_scored.get(),
             self.xla_executions.get(),
             self.solver_calls.get(),
             self.train_iterations.get(),
+            self.smo_iterations.get(),
+            self.smo_shrink_events.get(),
+            self.smo_unshrink_events.get(),
             self.model_swaps.get(),
             self.retrains_warm.get(),
             self.retrains_cold.get(),
@@ -187,6 +205,28 @@ mod tests {
         assert!(s.contains("rows=7"));
         assert!(s.contains("swaps=1"));
         assert!(s.contains("retrains_warm=2"));
+        assert!(s.contains("smo_iters=0"));
+    }
+
+    #[test]
+    fn record_solver_accumulates() {
+        let m = Metrics::new();
+        let stats = crate::svdd::SolverStats {
+            smo_iterations: 120,
+            shrink_events: 3,
+            unshrink_events: 1,
+            gap: 1e-7,
+            cache_hit_rate: Some(0.9),
+        };
+        m.record_solver(&stats);
+        m.record_solver(&stats);
+        assert_eq!(m.smo_iterations.get(), 240);
+        assert_eq!(m.smo_shrink_events.get(), 6);
+        assert_eq!(m.smo_unshrink_events.get(), 2);
+        let s = m.render();
+        assert!(s.contains("smo_iters=240"));
+        assert!(s.contains("shrinks=6"));
+        assert!(s.contains("unshrinks=2"));
     }
 
     #[test]

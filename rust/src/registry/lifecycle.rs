@@ -130,6 +130,11 @@ impl Lifecycle {
         } else {
             self.metrics.retrains_cold.inc();
         }
+        // solver telemetry lands next to the lifecycle counters so a
+        // serving process can see what its background retrains cost
+        self.metrics.solver_calls.add(outcome.solver_calls as u64);
+        self.metrics.train_iterations.add(outcome.iterations as u64);
+        self.metrics.record_solver(&outcome.solver);
 
         let meta = VersionMeta::from_outcome(&outcome, data, self.cfg.sample_size);
         let id = self.registry.publish(&outcome.model, meta)?;
@@ -286,6 +291,8 @@ mod tests {
         assert!(!first.warm_start, "empty registry must cold-start");
         assert_eq!(lc.registry().champion().unwrap().unwrap().id, first.id);
         assert_eq!(lc.metrics().retrains_cold.get(), 1);
+        assert!(lc.metrics().smo_iterations.get() > 0, "solver telemetry missing");
+        assert!(lc.metrics().solver_calls.get() > 0);
 
         let second = lc.retrain(&data, 13).unwrap();
         assert!(second.warm_start, "champion present must warm-start");

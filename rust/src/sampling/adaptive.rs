@@ -76,6 +76,7 @@ pub fn choose_sample_size(
             eps_r2: cfg.probe_eps,
             consecutive: 5,
             candidates_per_iter: 1,
+            warm_alpha: false,
             record_trace: false,
         };
         let sw = Stopwatch::start();

@@ -37,11 +37,15 @@ pub mod adaptive;
 pub mod convergence;
 pub mod streaming;
 
+use std::collections::HashMap;
+
 use crate::error::Result;
 use crate::parallel::Pool;
 use crate::svdd::kernel::Kernel;
 use crate::svdd::model::SvddModel;
-use crate::svdd::trainer::{train, train_with_gram, SvddParams};
+use crate::svdd::trainer::{
+    train_detailed, train_with_gram_detailed, SolverStats, SvddParams,
+};
 use crate::util::matrix::Matrix;
 use crate::util::rng::{derive_stream_seed, Xoshiro256};
 
@@ -81,6 +85,15 @@ pub struct SamplingConfig {
     /// structure directly licenses, trading parallel compute for fewer
     /// sequential iterations.
     pub candidates_per_iter: usize,
+    /// Carry the previous iteration's dual solution into the next
+    /// union solve: rows retained from `SV*` start at their previous
+    /// `alpha` (projected back onto the simplex), new sample rows at
+    /// zero mass, replacing the solver's cold `1/n` init. The union
+    /// solve then starts next to its optimum and typically needs far
+    /// fewer SMO iterations. Off by default: the cold-init trajectory
+    /// is the seeded historical reference
+    /// (`tests/parallel_determinism.rs` pins it byte-for-byte).
+    pub warm_alpha: bool,
     /// Record a per-iteration trace (Fig 7).
     pub record_trace: bool,
 }
@@ -94,6 +107,7 @@ impl Default for SamplingConfig {
             eps_r2: 3e-4,
             consecutive: 8,
             candidates_per_iter: 1,
+            warm_alpha: false,
             record_trace: false,
         }
     }
@@ -125,7 +139,54 @@ pub struct SamplingOutcome {
     /// Whether `SV*` was seeded from a previous model
     /// ([`SamplingTrainer::train_warm`]) instead of a cold sample.
     pub warm_start: bool,
+    /// Aggregated SMO telemetry across every solve of the run
+    /// (sample + union solves; `gap`/`cache_hit_rate` are from the
+    /// last solve).
+    pub solver: SolverStats,
     pub trace: Vec<TracePoint>,
+}
+
+/// Per-run work accounting threaded through every solve.
+#[derive(Clone, Copy, Debug, Default)]
+struct Counters {
+    /// SMO solves issued.
+    calls: usize,
+    /// Observations fed to solvers.
+    rows: usize,
+    /// Aggregated solver telemetry.
+    solver: SolverStats,
+}
+
+/// Initial dual guess for a union/seed solve: rows that came from
+/// `prev`'s SV set carry its `alpha`, matched **bitwise** — the same
+/// row equality [`Matrix::dedup_rows`] uses, so a sample row that
+/// duplicates a master SV picks up the master's mass. New rows start
+/// at zero; the solver's feasibility projection
+/// ([`crate::svdd::smo::solve_with_init`]) rescales the result onto
+/// the simplex `{sum = 1, 0 <= a <= C}`.
+fn carried_alpha(union: &Matrix, prev: &SvddModel) -> Vec<f64> {
+    carried_alpha_from(&sv_alpha_index(prev), union)
+}
+
+/// Bitwise row-key -> alpha index over a model's SV set. Built once
+/// and reused across the K candidate unions of one iteration.
+fn sv_alpha_index(prev: &SvddModel) -> HashMap<Vec<u64>, f64> {
+    let sv = prev.support_vectors();
+    let mut by_bits: HashMap<Vec<u64>, f64> = HashMap::with_capacity(sv.rows());
+    for i in 0..sv.rows() {
+        let key: Vec<u64> = sv.row(i).iter().map(|x| x.to_bits()).collect();
+        by_bits.insert(key, prev.alpha()[i]);
+    }
+    by_bits
+}
+
+fn carried_alpha_from(by_bits: &HashMap<Vec<u64>, f64>, union: &Matrix) -> Vec<f64> {
+    (0..union.rows())
+        .map(|i| {
+            let key: Vec<u64> = union.row(i).iter().map(|x| x.to_bits()).collect();
+            by_bits.get(&key).copied().unwrap_or(0.0)
+        })
+        .collect()
 }
 
 /// The Algorithm-1 trainer.
@@ -158,15 +219,25 @@ impl<'a> SamplingTrainer<'a> {
         self.pool.unwrap_or_else(crate::parallel::global)
     }
 
-    fn solve(&self, data: &Matrix, counters: &mut (usize, usize)) -> Result<SvddModel> {
-        counters.0 += 1;
-        counters.1 += data.rows();
+    fn solve(
+        &self,
+        data: &Matrix,
+        init: Option<&[f64]>,
+        counters: &mut Counters,
+    ) -> Result<SvddModel> {
+        counters.calls += 1;
+        counters.rows += data.rows();
         if let Some(be) = self.backend {
             if let Some(gram) = be.gram(data, self.params.kernel) {
-                return train_with_gram(data, gram, &self.params);
+                let (model, stats) =
+                    train_with_gram_detailed(data, gram, &self.params, init)?;
+                counters.solver.absorb(&stats);
+                return Ok(model);
             }
         }
-        train(data, &self.params)
+        let (model, stats) = train_detailed(data, &self.params, init)?;
+        counters.solver.absorb(&stats);
+        Ok(model)
     }
 
     /// Run Algorithm 1 on `data` from a cold start.
@@ -204,9 +275,19 @@ impl<'a> SamplingTrainer<'a> {
         seed: u64,
         warm: Option<&SvddModel>,
     ) -> Result<SamplingOutcome> {
+        // fail before the seed solve, not on the first union solve:
+        // the legacy SMO mode rejects the warm starts alpha-carry
+        // would pass it (RunConfig::validate catches the CLI spelling;
+        // this catches direct library construction)
+        if self.cfg.warm_alpha && self.params.smo.wss == crate::svdd::Wss::Legacy {
+            return Err(crate::error::Error::invalid(
+                "SamplingConfig::warm_alpha cannot be combined with the legacy SMO \
+                 mode (it exists to replay cold-start trajectories)",
+            ));
+        }
         let n = self.cfg.sample_size.max(2).min(data.rows());
         let mut rng = Xoshiro256::new(seed);
-        let mut counters = (0usize, 0usize); // (solver calls, rows touched)
+        let mut counters = Counters::default();
 
         // Step 1: S0 <- SAMPLE(T, n); SV* <- SV(delta S0).
         // Warm start: S0 is unioned with the previous model's SV set
@@ -216,7 +297,13 @@ impl<'a> SamplingTrainer<'a> {
             None => s0.dedup_rows(),
             Some(init) => s0.vstack(init.support_vectors())?.dedup_rows(),
         };
-        let mut master = self.solve(&seed_set, &mut counters)?;
+        // with warm_alpha the seed solve also starts from the previous
+        // model's dual solution, not just its SV rows
+        let init0 = match (warm, self.cfg.warm_alpha) {
+            (Some(prev), true) => Some(carried_alpha(&seed_set, prev)),
+            _ => None,
+        };
+        let mut master = self.solve(&seed_set, init0.as_deref(), &mut counters)?;
 
         // Floor the center-criterion scale at the data scale (mean SV
         // norm) so symmetric data with ||a|| ~ 0 can still converge;
@@ -257,16 +344,22 @@ impl<'a> SamplingTrainer<'a> {
                 // it was before candidates existed so seeded K=1 runs
                 // reproduce historical outputs bit-for-bit (regression
                 // test in tests/parallel_determinism.rs).
-                // 2.1 random sample + its SVDD
+                // 2.1 random sample + its SVDD (always a cold solve:
+                // there is no previous solution on a fresh sample)
                 let si = data.gather(&rng.sample_with_replacement(data.rows(), n));
-                let sv_i = self.solve(&si.dedup_rows(), &mut counters)?;
+                let sv_i = self.solve(&si.dedup_rows(), None, &mut counters)?;
                 // 2.2 union with the master SV set
                 let union = sv_i
                     .support_vectors()
                     .vstack(master.support_vectors())?
                     .dedup_rows();
-                // 2.3 SVDD of the union becomes the new master
-                self.solve(&union, &mut counters)?
+                // 2.3 SVDD of the union becomes the new master,
+                // warm-started from the master's alpha when enabled
+                let init = self
+                    .cfg
+                    .warm_alpha
+                    .then(|| carried_alpha(&union, &master));
+                self.solve(&union, init.as_deref(), &mut counters)?
             } else {
                 self.best_candidate(data, seed, i, n, &master, &mut counters)?
             };
@@ -290,9 +383,10 @@ impl<'a> SamplingTrainer<'a> {
             model: master,
             iterations,
             converged,
-            solver_calls: counters.0,
-            rows_touched: counters.1,
+            solver_calls: counters.calls,
+            rows_touched: counters.rows,
             warm_start: warm.is_some(),
+            solver: counters.solver,
             trace,
         })
     }
@@ -310,26 +404,31 @@ impl<'a> SamplingTrainer<'a> {
         iter: usize,
         n: usize,
         master: &SvddModel,
-        counters: &mut (usize, usize),
+        counters: &mut Counters,
     ) -> Result<SvddModel> {
         let k = self.cfg.candidates_per_iter;
-        let results = self.pool().map(k, |c| -> Result<(SvddModel, usize, usize)> {
+        // the alpha-carry index depends only on `master`: build it once
+        // per iteration, not once per candidate
+        let carry = self.cfg.warm_alpha.then(|| sv_alpha_index(master));
+        let results = self.pool().map(k, |c| -> Result<(SvddModel, Counters)> {
             let mut crng = Xoshiro256::new(derive_stream_seed(seed, iter as u64, c as u64));
             let si = data.gather(&crng.sample_with_replacement(data.rows(), n));
-            let mut cnt = (0usize, 0usize);
-            let sv_c = self.solve(&si.dedup_rows(), &mut cnt)?;
+            let mut cnt = Counters::default();
+            let sv_c = self.solve(&si.dedup_rows(), None, &mut cnt)?;
             let union = sv_c
                 .support_vectors()
                 .vstack(master.support_vectors())?
                 .dedup_rows();
-            let cand = self.solve(&union, &mut cnt)?;
-            Ok((cand, cnt.0, cnt.1))
+            let init = carry.as_ref().map(|idx| carried_alpha_from(idx, &union));
+            let cand = self.solve(&union, init.as_deref(), &mut cnt)?;
+            Ok((cand, cnt))
         });
         let mut best: Option<SvddModel> = None;
         for r in results {
-            let (cand, solves, rows) = r?;
-            counters.0 += solves;
-            counters.1 += rows;
+            let (cand, cnt) = r?;
+            counters.calls += cnt.calls;
+            counters.rows += cnt.rows;
+            counters.solver.absorb(&cnt.solver);
             if best.as_ref().map_or(true, |b| cand.r2() > b.r2()) {
                 best = Some(cand);
             }
@@ -554,6 +653,94 @@ mod tests {
             k4.model.r2().to_bits(),
             "K=4 replayed the K=1 stream"
         );
+    }
+
+    #[test]
+    fn warm_alpha_cuts_total_smo_iterations() {
+        // same seed => same draw schedule; pin the Algorithm-1
+        // iteration count so the two runs do the same number of union
+        // solves and only the solver init differs
+        let data = banana(5000);
+        let params = SvddParams::gaussian(0.35, 0.001);
+        let base = SamplingConfig {
+            sample_size: 6,
+            max_iter: 15,
+            consecutive: 100, // unreachable: run all 15 iterations
+            ..Default::default()
+        };
+        let warm_cfg = SamplingConfig { warm_alpha: true, ..base };
+        let cold = SamplingTrainer::new(params, base).train(&data, 7).unwrap();
+        let warm = SamplingTrainer::new(params, warm_cfg).train(&data, 7).unwrap();
+        assert_eq!(cold.solver_calls, warm.solver_calls);
+        assert!(
+            warm.solver.smo_iterations < cold.solver.smo_iterations,
+            "alpha carry did not reduce SMO work: warm={} cold={}",
+            warm.solver.smo_iterations,
+            cold.solver.smo_iterations
+        );
+        // description quality preserved
+        let rel = (warm.model.r2() - cold.model.r2()).abs() / cold.model.r2();
+        assert!(rel < 0.05, "warm/cold R^2 gap {rel}");
+    }
+
+    #[test]
+    fn warm_alpha_converges_and_composes_with_train_warm() {
+        let data = banana(4000);
+        let params = SvddParams::gaussian(0.35, 0.001);
+        let cfg = SamplingConfig { sample_size: 6, warm_alpha: true, ..Default::default() };
+        let trainer = SamplingTrainer::new(params, cfg);
+        let first = trainer.train(&data, 11).unwrap();
+        assert!(first.converged);
+        let again = trainer.train_warm(&data, 12, &first.model).unwrap();
+        assert!(again.warm_start);
+        assert!(again.converged);
+        assert!(
+            again.iterations < first.iterations,
+            "warm retrain did not converge faster: {} vs {}",
+            again.iterations,
+            first.iterations
+        );
+    }
+
+    #[test]
+    fn warm_alpha_with_legacy_mode_fails_fast() {
+        let data = banana(200);
+        let mut params = SvddParams::gaussian(0.35, 0.01);
+        params.smo.wss = crate::svdd::Wss::Legacy;
+        let cfg = SamplingConfig { sample_size: 6, warm_alpha: true, ..Default::default() };
+        let err = SamplingTrainer::new(params, cfg).train(&data, 1);
+        assert!(err.is_err(), "warm_alpha + legacy must be rejected upfront");
+        // without the carry, legacy mode trains fine
+        let ok_cfg = SamplingConfig { sample_size: 6, ..Default::default() };
+        assert!(SamplingTrainer::new(params, ok_cfg).train(&data, 1).is_ok());
+    }
+
+    #[test]
+    fn solver_telemetry_is_populated() {
+        let data = banana(2000);
+        let params = SvddParams::gaussian(0.35, 0.001);
+        let cfg = SamplingConfig { sample_size: 6, ..Default::default() };
+        let out = SamplingTrainer::new(params, cfg).train(&data, 5).unwrap();
+        assert!(out.solver.smo_iterations > 0);
+        assert!(out.solver.gap.is_finite());
+        assert!(out.solver.cache_hit_rate.is_some());
+    }
+
+    #[test]
+    fn carried_alpha_maps_master_rows_bitwise() {
+        let data = banana(300);
+        let params = SvddParams::gaussian(0.35, 0.01);
+        let cfg = SamplingConfig { sample_size: 6, ..Default::default() };
+        let model = SamplingTrainer::new(params, cfg).train(&data, 4).unwrap().model;
+        let extra = Matrix::from_rows(&[vec![9.0, 9.0], vec![-9.0, 3.0]]).unwrap();
+        let union = extra.vstack(model.support_vectors()).unwrap().dedup_rows();
+        let init = carried_alpha(&union, &model);
+        assert_eq!(init.len(), union.rows());
+        // the synthetic rows are not SVs: zero mass
+        assert_eq!(init[0], 0.0);
+        assert_eq!(init[1], 0.0);
+        // every SV row carried its alpha => full mass present
+        assert!((init.iter().sum::<f64>() - 1.0).abs() < 1e-9);
     }
 
     struct CountingBackend(std::sync::atomic::AtomicUsize);

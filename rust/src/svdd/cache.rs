@@ -9,32 +9,104 @@
 //! [`crate::svdd::Kernel::eval_block`] panels (in parallel chunks), so
 //! cached and freshly computed columns carry identical bits regardless
 //! of thread count.
+//!
+//! Recency is tracked with an intrusive doubly-linked list over the
+//! slot arena (head = MRU, tail = LRU), so a hit, a miss and an
+//! eviction are all O(1) — the eviction used to be an O(#cached)
+//! min-scan over insertion ticks, which showed up once budgets grew to
+//! thousands of columns.
 
 use std::collections::HashMap;
+
+const NIL: usize = usize::MAX;
+
+struct Slot {
+    col: usize,
+    prev: usize,
+    next: usize,
+    data: Vec<f64>,
+}
 
 /// LRU cache of `n`-length kernel columns keyed by column index.
 pub struct ColumnCache {
     n: usize,
     capacity_cols: usize,
-    map: HashMap<usize, (u64, Vec<f64>)>, // col -> (last-use tick, data)
-    tick: u64,
+    map: HashMap<usize, usize>, // col index -> slot index
+    slots: Vec<Slot>,
+    /// Most-recently-used slot (NIL when empty).
+    head: usize,
+    /// Least-recently-used slot (NIL when empty) — the eviction victim.
+    tail: usize,
     hits: u64,
     misses: u64,
 }
 
 impl ColumnCache {
-    /// `budget_bytes` is rounded down to whole columns; at least one
+    /// `budget_bytes` is rounded down to whole columns and clamped to
+    /// `n` (there are only `n` distinct columns to cache); at least one
     /// column is always cached.
     pub fn new(n: usize, budget_bytes: usize) -> Self {
         let col_bytes = (n * std::mem::size_of::<f64>()).max(1);
-        let capacity_cols = (budget_bytes / col_bytes).max(1);
+        let capacity_cols = (budget_bytes / col_bytes).clamp(1, n.max(1));
         ColumnCache {
             n,
             capacity_cols,
-            map: HashMap::with_capacity(capacity_cols.min(1 << 20)),
-            tick: 0,
+            map: HashMap::with_capacity(capacity_cols),
+            slots: Vec::with_capacity(capacity_cols),
+            head: NIL,
+            tail: NIL,
             hits: 0,
             misses: 0,
+        }
+    }
+
+    /// Unlink `slot` from the recency list.
+    fn unlink(&mut self, slot: usize) {
+        let (prev, next) = (self.slots[slot].prev, self.slots[slot].next);
+        match prev {
+            NIL => self.head = next,
+            p => self.slots[p].next = next,
+        }
+        match next {
+            NIL => self.tail = prev,
+            x => self.slots[x].prev = prev,
+        }
+    }
+
+    /// Link `slot` at the MRU end.
+    fn push_front(&mut self, slot: usize) {
+        self.slots[slot].prev = NIL;
+        self.slots[slot].next = self.head;
+        match self.head {
+            NIL => self.tail = slot,
+            h => self.slots[h].prev = slot,
+        }
+        self.head = slot;
+    }
+
+    fn touch(&mut self, slot: usize) {
+        if self.head != slot {
+            self.unlink(slot);
+            self.push_front(slot);
+        }
+    }
+
+    /// Borrow column `i` if cached, refreshing its recency. Used by
+    /// ranged column fills, which evaluate only the requested rows on a
+    /// miss instead of materializing a full column. Deliberately does
+    /// NOT touch the hit/miss counters: a single logical column fetch
+    /// over a shrunk active set arrives as one `lookup` per run of
+    /// consecutive indices, so counting here would multiply one fetch
+    /// into dozens of hits/misses and make `hit_rate()` meaningless.
+    /// `hit_rate()` keeps its historical semantics: full-column
+    /// fetches through [`ColumnCache::get_into`] only.
+    pub fn lookup(&mut self, i: usize) -> Option<&[f64]> {
+        match self.map.get(&i).copied() {
+            Some(slot) => {
+                self.touch(slot);
+                Some(&self.slots[slot].data)
+            }
+            None => None,
         }
     }
 
@@ -46,22 +118,41 @@ impl ColumnCache {
         fill: impl FnOnce(&mut [f64]),
     ) {
         debug_assert_eq!(out.len(), self.n);
-        self.tick += 1;
-        if let Some((t, col)) = self.map.get_mut(&i) {
-            *t = self.tick;
-            out.copy_from_slice(col);
+        if let Some(slot) = self.map.get(&i).copied() {
+            self.touch(slot);
+            out.copy_from_slice(&self.slots[slot].data);
             self.hits += 1;
             return;
         }
         self.misses += 1;
         fill(out);
-        if self.map.len() >= self.capacity_cols {
-            // evict LRU
-            if let Some((&lru, _)) = self.map.iter().min_by_key(|(_, (t, _))| *t) {
-                self.map.remove(&lru);
-            }
-        }
-        self.map.insert(i, (self.tick, out.to_vec()));
+        self.insert(i, out);
+    }
+
+    /// Insert a freshly computed column, evicting the LRU column when
+    /// at capacity. The evicted slot's buffer is reused in place.
+    fn insert(&mut self, i: usize, data: &[f64]) {
+        debug_assert!(!self.map.contains_key(&i));
+        let slot = if self.slots.len() >= self.capacity_cols {
+            let victim = self.tail;
+            debug_assert_ne!(victim, NIL);
+            self.unlink(victim);
+            self.map.remove(&self.slots[victim].col);
+            self.slots[victim].col = i;
+            self.slots[victim].data.clear();
+            self.slots[victim].data.extend_from_slice(data);
+            victim
+        } else {
+            self.slots.push(Slot {
+                col: i,
+                prev: NIL,
+                next: NIL,
+                data: data.to_vec(),
+            });
+            self.slots.len() - 1
+        };
+        self.push_front(slot);
+        self.map.insert(i, slot);
     }
 
     pub fn hit_rate(&self) -> f64 {
@@ -125,9 +216,80 @@ mod tests {
     }
 
     #[test]
+    fn eviction_order_is_exact_lru_over_long_sequences() {
+        // Capacity 3 (of 8 possible columns); drive a known access
+        // pattern and check the exact victim at every eviction (the
+        // O(1) list must agree with a reference recency order, not
+        // just "evicts something old").
+        let n = 8;
+        let mut c = ColumnCache::new(n, 3 * n * 8);
+        let mut buf = vec![0.0; n];
+        let mut reference: Vec<usize> = Vec::new(); // front = LRU
+        let mut accesses: Vec<usize> = Vec::new();
+        // deterministic pseudo-random walk over 8 column indices
+        let mut x = 9_usize;
+        for _ in 0..200 {
+            x = (x * 31 + 17) % 8;
+            accesses.push(x);
+        }
+        for &i in &accesses {
+            let was_cached = reference.contains(&i);
+            if was_cached {
+                c.get_into(i, &mut buf, |_| panic!("unexpected fill for {i}"));
+                reference.retain(|&k| k != i);
+            } else {
+                if reference.len() == 3 {
+                    reference.remove(0); // the LRU column must be the victim
+                }
+                let mut filled = false;
+                c.get_into(i, &mut buf, |out| {
+                    filled = true;
+                    out.iter_mut().for_each(|v| *v = i as f64);
+                });
+                assert!(filled, "expected fill for {i}");
+            }
+            reference.push(i); // MRU at the back
+            // cached set must equal the reference set at every step
+            assert_eq!(c.len(), reference.len());
+            for &k in &reference {
+                assert!(c.map.contains_key(&k), "reference col {k} missing");
+            }
+        }
+    }
+
+    #[test]
+    fn lookup_refreshes_recency_without_counting() {
+        let mut c = ColumnCache::new(2, 2 * 2 * 8);
+        let mut buf = vec![0.0; 2];
+        assert!(c.lookup(0).is_none()); // probe miss: not inserted...
+        assert_eq!(c.len(), 0);
+        assert_eq!(c.hit_rate(), 0.0); // ...and not counted
+        c.get_into(0, &mut buf, fill_with(7.0));
+        c.get_into(1, &mut buf, fill_with(8.0));
+        let rate_before = c.hit_rate();
+        // lookup(0) refreshes 0, so inserting 2 must evict 1
+        assert_eq!(c.lookup(0).unwrap(), &[7.0, 7.0]);
+        assert_eq!(c.hit_rate(), rate_before, "probe must not count");
+        c.get_into(2, &mut buf, fill_with(9.0));
+        c.get_into(0, &mut buf, |_| panic!("0 must survive (refreshed)"));
+        assert!(c.lookup(1).is_none(), "1 was LRU and must be gone");
+    }
+
+    #[test]
     fn capacity_at_least_one() {
         let c = ColumnCache::new(1_000_000, 1);
         assert_eq!(c.capacity_cols(), 1);
+    }
+
+    #[test]
+    fn single_column_capacity_replaces_in_place() {
+        let mut c = ColumnCache::new(2, 1);
+        let mut buf = vec![0.0; 2];
+        for i in 0..5 {
+            c.get_into(i, &mut buf, fill_with(i as f64));
+            assert_eq!(c.len(), 1);
+            c.get_into(i, &mut buf, |_| panic!("just-inserted column must hit"));
+        }
     }
 
     #[test]

@@ -12,5 +12,5 @@ pub mod trainer;
 
 pub use kernel::Kernel;
 pub use model::SvddModel;
-pub use smo::{KernelProvider, SmoOptions, SmoSolution};
-pub use trainer::{train, train_with_gram, SvddParams};
+pub use smo::{KernelProvider, SmoOptions, SmoSolution, Wss};
+pub use trainer::{train, train_with_gram, SolverStats, SvddParams};

@@ -5,18 +5,51 @@
 //! s.t. sum_i a_i = 1,   0 <= a_i <= C,   C = 1 / (n f)
 //! ```
 //!
-//! (The paper states the equivalent maximization.) Working-set selection
-//! is the classic maximal-violating-pair rule (LIBSVM WSS1): with
-//! gradient `g_i = 2 (K a)_i - K_ii`, the KKT conditions say there is a
+//! (The paper states the equivalent maximization.) With gradient
+//! `g_i = 2 (K a)_i - K_ii`, the KKT conditions say there is a
 //! multiplier `lambda` with `g_i >= lambda` when `a_i = 0`,
-//! `g_i <= lambda` when `a_i = C`, and `g_i = lambda` inside. The most
-//! violating pair is `i = argmin{ g_i : a_i < C }`,
-//! `j = argmax{ g_j : a_j > 0 }`; optimality gap is `g_j - g_i`.
+//! `g_i <= lambda` when `a_i = C`, and `g_i = lambda` inside; the
+//! optimality gap is `max{g_j : a_j > 0} - min{g_i : a_i < C}`.
 //!
 //! The pair sub-problem moves mass `delta` from `j` to `i`:
 //! `delta = (g_j - g_i) / (2 (K_ii + K_jj - 2 K_ij))`, clipped to the
 //! box `[0, min(C - a_i, a_j)]`, followed by a rank-1 gradient update
 //! `g += 2 delta (K[:,i] - K[:,j])`.
+//!
+//! The default path is a [`Solver`] with LIBSVM-style machinery
+//! (Fan, Chen & Lin, JMLR 2005):
+//!
+//! - **second-order working-set selection** ([`Wss::Second`]): `i` is
+//!   the maximal violator `argmin{ g_i : a_i < C }`; `j` maximizes the
+//!   quadratic objective decrease `(g_j - g_i)^2 / (2 eta_j)` with
+//!   `eta_j = 2 (K_ii + K_jj - 2 K_ij)`, using the already-fetched
+//!   column `i`. [`Wss::First`] is the classic maximal-violating-pair
+//!   rule (`j = argmax{ g_j : a_j > 0 }`), kept as the iteration-count
+//!   ablation baseline;
+//! - **active-set shrinking**: every `shrink_every` pair iterations,
+//!   variables pinned at a bound whose KKT slack exceeds the current
+//!   gap are dropped from the working index set, so the selection scan,
+//!   the rank-1 gradient update and — via the ranged
+//!   [`KernelProvider::col_into_range`] — the kernel-column evaluation
+//!   all run over the (much smaller) active set only. Gradients of
+//!   shrunk rows go stale by design; before the solver is allowed to
+//!   declare convergence it reconstructs the full gradient exactly,
+//!   re-activates everything, and re-checks the gap on the full set
+//!   (the unshrink-and-recheck pass), so the returned [`SmoSolution`]
+//!   satisfies the same `tol` as the unshrunk solver;
+//! - **warm starts** ([`solve_with_init`]): an initial `alpha` (e.g.
+//!   the previous sampling iteration's solution on the retained `SV*`
+//!   rows) is projected onto the feasible set `{sum = 1, 0 <= a <= C}`
+//!   and used instead of the cold start, which typically cuts the
+//!   iteration count hard when the initial point is near the optimum.
+//!
+//! [`Wss::Legacy`] preserves the pre-Solver loop **verbatim** (its
+//! first-order `i`-scan fused into the gradient update, gain-based `j`
+//! pick over the positive set, no shrinking, cold init): a seeded solve
+//! in legacy mode reproduces the historical trajectory byte-for-byte,
+//! which is what the golden regression tests pin.
+
+use std::ops::Range;
 
 use crate::error::{Error, Result};
 use crate::linalg::NormCache;
@@ -47,6 +80,14 @@ pub trait KernelProvider {
     fn diag(&self, i: usize) -> f64;
     /// Copy column `i` (== row `i`; kernels are symmetric) into `out`.
     fn col_into(&mut self, i: usize, out: &mut [f64]);
+    /// Copy rows `rows` of column `i` into `out`
+    /// (`out.len() == rows.len()`). The shrinking solver uses this to
+    /// evaluate kernel entries only over the active index set; entries
+    /// must carry the same bits as the corresponding [`col_into`] rows
+    /// (both sides of the contract are [`Kernel::eval_block`] panels).
+    ///
+    /// [`col_into`]: KernelProvider::col_into
+    fn col_into_range(&mut self, i: usize, rows: Range<usize>, out: &mut [f64]);
 }
 
 /// Lazily evaluated kernel over a data matrix with an LRU column cache.
@@ -91,6 +132,45 @@ impl<'a> LazyKernel<'a> {
     pub fn cache_hit_rate(&self) -> f64 {
         self.cache.hit_rate()
     }
+
+    /// The pool a fill of `rows` kernel-column entries runs on. An
+    /// explicitly pinned pool (`with_pool`) is used as-is — the caller
+    /// took control, and the determinism tests rely on it to force
+    /// parallel columns on small problems. The global pool is
+    /// cost-gated at COL_PAR_MIN_WORK.
+    fn fill_pool(&self, rows: usize) -> Pool {
+        match self.pool {
+            Some(p) => p,
+            None => {
+                let work = rows * self.data.cols().max(1);
+                if work < COL_PAR_MIN_WORK {
+                    Pool::serial()
+                } else {
+                    crate::parallel::global()
+                }
+            }
+        }
+    }
+}
+
+/// Evaluate rows `start_row..start_row + out.len()` of column `i` as
+/// block panels on `run`, in COL_CHUNK chunks. The single evaluation
+/// recipe behind both the cached full-column fill and the ranged fill
+/// (a free function so [`ColumnCache::get_into`]'s fill closure can
+/// use it without borrowing the whole `LazyKernel`).
+fn eval_col_rows(
+    data: &Matrix,
+    kernel: Kernel,
+    norms: &NormCache,
+    run: Pool,
+    i: usize,
+    start_row: usize,
+    out: &mut [f64],
+) {
+    run.run_chunks(out, COL_CHUNK, |off, chunk| {
+        let lo = start_row + off;
+        kernel.eval_block(data, norms, i..i + 1, data, norms, lo..lo + chunk.len(), chunk);
+    });
 }
 
 impl<'a> KernelProvider for LazyKernel<'a> {
@@ -103,26 +183,33 @@ impl<'a> KernelProvider for LazyKernel<'a> {
     }
 
     fn col_into(&mut self, i: usize, out: &mut [f64]) {
+        let run = self.fill_pool(out.len());
+        // borrow dance: get_into's fill closure cannot capture &self
+        // while &mut self.cache is live, so evaluate via locals
         let data = self.data;
         let kernel = self.kernel;
         let norms = &self.norms;
-        // An explicitly pinned pool (`with_pool`) is used as-is — the
-        // caller took control, and the determinism tests rely on it to
-        // force parallel columns on small problems. The global pool is
-        // cost-gated at COL_PAR_MIN_WORK.
-        let pool = match self.pool {
-            Some(p) => p,
-            None => crate::parallel::global(),
-        };
-        let gated = self.pool.is_none();
-        self.cache.get_into(i, out, |buf| {
-            let work = buf.len() * data.cols().max(1);
-            let run = if gated && work < COL_PAR_MIN_WORK { Pool::serial() } else { pool };
-            run.run_chunks(buf, COL_CHUNK, |start, chunk| {
-                let end = start + chunk.len();
-                kernel.eval_block(data, norms, i..i + 1, data, norms, start..end, chunk);
-            });
-        });
+        self.cache
+            .get_into(i, out, |buf| eval_col_rows(data, kernel, norms, run, i, 0, buf));
+    }
+
+    fn col_into_range(&mut self, i: usize, rows: Range<usize>, out: &mut [f64]) {
+        debug_assert_eq!(out.len(), rows.len());
+        if rows.is_empty() {
+            return;
+        }
+        // a full column cached earlier (by `col_into`, during the
+        // unshrunk phase) serves every sub-range as a copy
+        if let Some(col) = self.cache.lookup(i) {
+            out.copy_from_slice(&col[rows]);
+            return;
+        }
+        // evaluate just the requested rows. Partial columns are not
+        // inserted into the cache (it stores full columns only); the
+        // shrinking solver's active set is small enough that the
+        // evaluation itself is the cheap path.
+        let run = self.fill_pool(out.len());
+        eval_col_rows(self.data, self.kernel, &self.norms, run, i, rows.start, out);
     }
 }
 
@@ -197,6 +284,51 @@ impl KernelProvider for DenseKernel {
     fn col_into(&mut self, i: usize, out: &mut [f64]) {
         out.copy_from_slice(&self.k[i * self.n..(i + 1) * self.n]);
     }
+
+    fn col_into_range(&mut self, i: usize, rows: Range<usize>, out: &mut [f64]) {
+        debug_assert_eq!(out.len(), rows.len());
+        out.copy_from_slice(&self.k[i * self.n + rows.start..i * self.n + rows.end]);
+    }
+}
+
+/// Working-set selection rule.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Wss {
+    /// Maximal violating pair (LIBSVM WSS1): `j = argmax g` over the
+    /// positive set. The iteration-count baseline for ablations.
+    First,
+    /// Second-order selection (LIBSVM WSS2, Fan et al.): `j` maximizes
+    /// `(g_j - g_i)^2 / (2 eta_j)` using the cached column for `i`.
+    Second,
+    /// The pre-Solver loop, preserved verbatim: fused first-order
+    /// `i`-scan + gain-based `j` pick, no shrinking, cold init. A
+    /// seeded legacy solve is byte-for-byte identical to the
+    /// historical solver (golden-tested); warm starts are rejected and
+    /// `shrinking` is ignored in this mode.
+    Legacy,
+}
+
+impl Wss {
+    pub fn parse(s: &str) -> Result<Wss> {
+        Ok(match s {
+            "first" => Wss::First,
+            "second" => Wss::Second,
+            "legacy" => Wss::Legacy,
+            other => {
+                return Err(Error::Config(format!(
+                    "unknown working-set selection '{other}' (first | second | legacy)"
+                )))
+            }
+        })
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Wss::First => "first",
+            Wss::Second => "second",
+            Wss::Legacy => "legacy",
+        }
+    }
 }
 
 /// Solver options.
@@ -209,11 +341,35 @@ pub struct SmoOptions {
     pub max_iter: usize,
     /// alpha values below this are treated as zero when extracting SVs.
     pub sv_eps: f64,
+    /// Working-set selection rule (default: second-order).
+    pub wss: Wss,
+    /// Periodically drop bound-pinned variables from the working set
+    /// (ignored in [`Wss::Legacy`] mode, which never shrinks).
+    pub shrinking: bool,
+    /// Pair iterations between shrink passes; 0 = auto
+    /// (`min(n, 1000)`, the LIBSVM cadence).
+    pub shrink_every: usize,
 }
 
 impl Default for SmoOptions {
     fn default() -> Self {
-        SmoOptions { tol: 1e-6, max_iter: 0, sv_eps: 1e-9 }
+        SmoOptions {
+            tol: 1e-6,
+            max_iter: 0,
+            sv_eps: 1e-9,
+            wss: Wss::Second,
+            shrinking: true,
+            shrink_every: 0,
+        }
+    }
+}
+
+impl SmoOptions {
+    /// The pre-Solver configuration: legacy selection, no shrinking.
+    /// Seeded solves in this mode reproduce the historical trajectory
+    /// byte-for-byte.
+    pub fn legacy() -> SmoOptions {
+        SmoOptions { wss: Wss::Legacy, shrinking: false, ..Default::default() }
     }
 }
 
@@ -222,7 +378,9 @@ impl Default for SmoOptions {
 pub struct SmoSolution {
     /// Dual variables, length n, summing to 1.
     pub alpha: Vec<f64>,
-    /// Final gradient `g_i = 2 (K a)_i - K_ii` (used for R^2).
+    /// Final gradient `g_i = 2 (K a)_i - K_ii` (used for R^2). Always
+    /// the full, exact gradient — shrunk rows are reconstructed before
+    /// the solver returns.
     pub gradient: Vec<f64>,
     /// `a' K a` at the solution.
     pub quad: f64,
@@ -230,8 +388,13 @@ pub struct SmoSolution {
     pub r2: f64,
     /// Pair iterations executed.
     pub iterations: usize,
-    /// Final optimality gap.
+    /// Final optimality gap (over the full index set).
     pub gap: f64,
+    /// Shrink passes that actually removed variables.
+    pub shrink_events: usize,
+    /// Unshrink-and-recheck passes (gradient reconstructions forced by
+    /// apparent convergence on the shrunk set).
+    pub unshrink_events: usize,
 }
 
 impl SmoSolution {
@@ -245,6 +408,28 @@ impl SmoSolution {
 
 /// Solve the SVDD dual by SMO. `c` is the box bound `C = 1/(n f)`.
 pub fn solve(kp: &mut dyn KernelProvider, c: f64, opts: &SmoOptions) -> Result<SmoSolution> {
+    solve_with_init(kp, c, opts, None)
+}
+
+/// [`solve`] from a warm initial `alpha` (projected onto the feasible
+/// set; `None` = cold start). This is how the sampling trainer carries
+/// the previous iteration's solution into the next union solve.
+pub fn solve_with_init(
+    kp: &mut dyn KernelProvider,
+    c: f64,
+    opts: &SmoOptions,
+    init: Option<&[f64]>,
+) -> Result<SmoSolution> {
+    if opts.wss == Wss::Legacy {
+        if init.is_some() {
+            return Err(Error::Solver(
+                "legacy SMO mode does not support warm starts (it exists to \
+                 reproduce historical cold-start trajectories byte-for-byte)"
+                    .into(),
+            ));
+        }
+        return solve_legacy(kp, c, opts);
+    }
     let n = kp.n();
     if n == 0 {
         return Err(Error::invalid("SMO: empty problem"));
@@ -255,15 +440,570 @@ pub fn solve(kp: &mut dyn KernelProvider, c: f64, opts: &SmoOptions) -> Result<S
             c * n as f64
         )));
     }
-    // Feasible start. Two regimes:
-    // - small problems (the Algorithm-1 sample/union solves): uniform
-    //   alpha = 1/n starts near the solution and the O(n^2 m) gradient
-    //   init is trivial;
-    // - large problems: concentrate the mass on the first ceil(1/C)
-    //   points (the LIBSVM one-class init) so the initial gradient
-    //   needs only those columns — O(k n m) instead of O(n^2 m), which
-    //   otherwise dominates total time.
-    const UNIFORM_INIT_MAX_N: usize = 256;
+    if let Some(a0) = init {
+        if a0.len() != n {
+            return Err(Error::invalid(format!(
+                "warm-start alpha has {} entries for n={n}",
+                a0.len()
+            )));
+        }
+    }
+    Solver::new(kp, c, opts, init).run()
+}
+
+/// Cold feasible start. Two regimes:
+/// - small problems (the Algorithm-1 sample/union solves): uniform
+///   alpha = 1/n starts near the solution and the O(n^2 m) gradient
+///   init is trivial;
+/// - large problems: concentrate the mass on the first ceil(1/C)
+///   points (the LIBSVM one-class init) so the initial gradient
+///   needs only those columns — O(k n m) instead of O(n^2 m), which
+///   otherwise dominates total time.
+const UNIFORM_INIT_MAX_N: usize = 256;
+
+fn cold_init(n: usize, c: f64) -> Vec<f64> {
+    let mut alpha = vec![0.0; n];
+    if n <= UNIFORM_INIT_MAX_N {
+        for a in &mut alpha {
+            *a = 1.0 / n as f64;
+        }
+    } else {
+        let mut remaining: f64 = 1.0;
+        let mut i = 0;
+        while remaining > 0.0 && i < n {
+            let a = remaining.min(c);
+            alpha[i] = a;
+            remaining -= a;
+            i += 1;
+        }
+    }
+    alpha
+}
+
+/// Project a warm-start guess onto `{sum = 1, 0 <= a <= C}`: clamp to
+/// the box, scale down any excess mass, then distribute the remaining
+/// deficit over the box headroom. Non-finite / negative entries are
+/// zeroed; an all-zero guess falls back to the cold start.
+fn feasible_init(init: &[f64], c: f64) -> Vec<f64> {
+    let n = init.len();
+    let mut a: Vec<f64> = init
+        .iter()
+        .map(|&x| if x.is_finite() && x > 0.0 { x.min(c) } else { 0.0 })
+        .collect();
+    let mut sum: f64 = a.iter().sum();
+    if sum <= 0.0 {
+        return cold_init(n, c);
+    }
+    if sum > 1.0 {
+        // scaling down stays inside the box
+        let s = 1.0 / sum;
+        for x in &mut a {
+            *x *= s;
+        }
+        sum = a.iter().sum();
+    }
+    // distribute the deficit proportionally to headroom; geometric
+    // convergence, and n*C >= 1 guarantees enough headroom exists
+    for _ in 0..64 {
+        let deficit = 1.0 - sum;
+        if deficit.abs() <= 1e-12 {
+            break;
+        }
+        if deficit < 0.0 {
+            let s = 1.0 / sum;
+            for x in &mut a {
+                *x *= s;
+            }
+        } else {
+            let headroom: f64 = a.iter().map(|&x| c - x).sum();
+            if headroom <= 0.0 {
+                break;
+            }
+            let scale = (deficit / headroom).min(1.0);
+            for x in &mut a {
+                *x += scale * (c - *x);
+            }
+        }
+        sum = a.iter().sum();
+    }
+    a
+}
+
+/// Invoke `f` on each maximal run of consecutive indices in `sorted`
+/// (e.g. `[2,3,4,9,11,12]` -> `2..5`, `9..10`, `11..13`). The shrunk
+/// column fills batch ranged kernel evaluation over these runs.
+fn for_each_run(sorted: &[usize], mut f: impl FnMut(Range<usize>)) {
+    let mut s = 0;
+    while s < sorted.len() {
+        let mut e = s + 1;
+        while e < sorted.len() && sorted[e] == sorted[e - 1] + 1 {
+            e += 1;
+        }
+        f(sorted[s]..sorted[e - 1] + 1);
+        s = e;
+    }
+}
+
+/// The default SMO engine: second-order (or first-order) working-set
+/// selection over an actively shrunk index set, with exact
+/// unshrink-and-recheck before convergence is declared.
+struct Solver<'k> {
+    kp: &'k mut dyn KernelProvider,
+    c: f64,
+    tol: f64,
+    sv_eps: f64,
+    wss: Wss,
+    shrinking: bool,
+    shrink_every: usize,
+    max_iter: usize,
+    n: usize,
+    alpha: Vec<f64>,
+    /// Gradient; rows outside `active` go stale while shrunk and are
+    /// reconstructed exactly on unshrink / exit.
+    g: Vec<f64>,
+    /// `{ k : alpha_k > 0 }`, maintained incrementally (swap-removal),
+    /// so the j-scan is O(|positive|), not O(n). Contains shrunk rows
+    /// pinned at C too — they still carry mass.
+    pos: Vec<usize>,
+    pos_slot: Vec<usize>,
+    /// Optimization-active indices, ascending.
+    active: Vec<usize>,
+    in_active: Vec<bool>,
+    col_i: Vec<f64>,
+    col_j: Vec<f64>,
+    shrunk: bool,
+    shrink_events: usize,
+    unshrink_events: usize,
+}
+
+impl<'k> Solver<'k> {
+    fn new(
+        kp: &'k mut dyn KernelProvider,
+        c: f64,
+        opts: &SmoOptions,
+        init: Option<&[f64]>,
+    ) -> Solver<'k> {
+        let n = kp.n();
+        let mut alpha = match init {
+            Some(a0) => feasible_init(a0, c),
+            None => cold_init(n, c),
+        };
+        // Invariant the pair loop relies on: alpha is exactly 0 or
+        // > 1e-14 (the same clamp the updates apply), so membership in
+        // `pos` is unambiguous. A projected warm guess can carry
+        // sub-threshold positives; zero them (the final renormalize
+        // absorbs the <= n*1e-14 mass error).
+        for a in &mut alpha {
+            if *a <= 1e-14 {
+                *a = 0.0;
+            }
+        }
+        let max_iter = if opts.max_iter > 0 {
+            opts.max_iter
+        } else {
+            (100 * n).max(10_000)
+        };
+        let shrink_every = if opts.shrink_every > 0 {
+            opts.shrink_every
+        } else {
+            n.min(1000).max(1)
+        };
+        Solver {
+            kp,
+            c,
+            tol: opts.tol,
+            sv_eps: opts.sv_eps,
+            wss: opts.wss,
+            shrinking: opts.shrinking,
+            shrink_every,
+            max_iter,
+            n,
+            alpha,
+            g: Vec::new(),
+            pos: Vec::new(),
+            pos_slot: vec![usize::MAX; n],
+            active: (0..n).collect(),
+            in_active: vec![true; n],
+            col_i: vec![0.0; n],
+            col_j: vec![0.0; n],
+            shrunk: false,
+            shrink_events: 0,
+            unshrink_events: 0,
+        }
+    }
+
+    /// g_i = 2 (K a)_i - K_ii from the nonzero-alpha columns only (for
+    /// the uniform cold start that is every column; for the
+    /// concentrated / warm start just the carrying rows).
+    fn init_gradient(&mut self) {
+        self.g = (0..self.n).map(|i| -self.kp.diag(i)).collect();
+        let mut col = vec![0.0; self.n];
+        for j in 0..self.n {
+            if self.alpha[j] <= 0.0 {
+                continue;
+            }
+            self.kp.col_into(j, &mut col);
+            let two_aj = 2.0 * self.alpha[j];
+            for k in 0..self.n {
+                self.g[k] += two_aj * col[k];
+            }
+        }
+        self.pos = (0..self.n).filter(|&k| self.alpha[k] > 0.0).collect();
+        for (slot, &k) in self.pos.iter().enumerate() {
+            self.pos_slot[k] = slot;
+        }
+    }
+
+    /// Fill `buf` with column `i` over the active rows (full column
+    /// when unshrunk — which also keeps the LRU cache warm — ranged
+    /// runs when shrunk). Entries outside the active set are stale.
+    fn fill_col_active(
+        kp: &mut dyn KernelProvider,
+        shrunk: bool,
+        active: &[usize],
+        i: usize,
+        buf: &mut [f64],
+    ) {
+        if !shrunk {
+            kp.col_into(i, buf);
+        } else {
+            for_each_run(active, |r| {
+                let (lo, hi) = (r.start, r.end);
+                kp.col_into_range(i, r, &mut buf[lo..hi]);
+            });
+        }
+    }
+
+    /// Reconstruct the exact gradient for every inactive row:
+    /// `g_k = 2 sum_j alpha_j K_kj - K_kk`, evaluating kernel entries
+    /// only over the inactive runs of each positive column.
+    fn reconstruct_gradient(&mut self) {
+        if !self.shrunk {
+            return;
+        }
+        let inactive: Vec<usize> =
+            (0..self.n).filter(|&k| !self.in_active[k]).collect();
+        if inactive.is_empty() {
+            self.shrunk = false;
+            return;
+        }
+        for &k in &inactive {
+            self.g[k] = -self.kp.diag(k);
+        }
+        // scratch column; refilled on the next pair iteration anyway.
+        // (positive columns are few — |pos| ~ #SV — so this pass costs
+        // O(|pos| * |inactive| * m) kernel work, not O(n^2 m))
+        let mut buf = std::mem::take(&mut self.col_i);
+        let pos = self.pos.clone();
+        for j in pos {
+            let aj = self.alpha[j];
+            if aj <= 0.0 {
+                continue;
+            }
+            for_each_run(&inactive, |r| {
+                let (lo, hi) = (r.start, r.end);
+                self.kp.col_into_range(j, r, &mut buf[lo..hi]);
+            });
+            let two_aj = 2.0 * aj;
+            for &k in &inactive {
+                self.g[k] += two_aj * buf[k];
+            }
+        }
+        self.col_i = buf;
+        self.shrunk = false;
+    }
+
+    /// Re-activate every index (used by the unshrink-and-recheck pass;
+    /// call [`Solver::reconstruct_gradient`] first).
+    fn activate_all(&mut self) {
+        self.active.clear();
+        self.active.extend(0..self.n);
+        self.in_active.fill(true);
+    }
+
+    /// The unshrink-and-recheck pass, shared by every exit point of the
+    /// pair loop (gap-converged, no `j` found, stuck pair): if rows
+    /// were shrunk away, their gradients are stale and the exit verdict
+    /// is optimistic — reconstruct the exact gradient, re-activate
+    /// everything and return `true` so the loop re-checks on the full
+    /// set. Returns `false` (really converged / stuck) when nothing
+    /// was shrunk.
+    fn try_unshrink(&mut self) -> bool {
+        if !self.shrunk {
+            return false;
+        }
+        self.reconstruct_gradient();
+        self.activate_all();
+        self.unshrink_events += 1;
+        true
+    }
+
+    /// One shrink pass: drop active variables pinned at a bound whose
+    /// gradient lies strictly outside the current violation window
+    /// `[g_min, g_max]` — a zero-alpha row with `g > g_max` can never
+    /// become the receiving `i`, and a C-pinned row with `g < g_min`
+    /// can never become the giving `j`, until the window moves past
+    /// them (caught by the unshrink-and-recheck pass).
+    fn shrink_pass(&mut self, g_min: f64, g_max: f64) {
+        if !g_min.is_finite() || !g_max.is_finite() {
+            return;
+        }
+        let (c, alpha, g) = (self.c, &self.alpha, &self.g);
+        let in_active = &mut self.in_active;
+        let before = self.active.len();
+        self.active.retain(|&k| {
+            let pinned_low = alpha[k] <= 1e-14 && g[k] > g_max;
+            let pinned_high = alpha[k] >= c - 1e-14 && g[k] < g_min;
+            let keep = !(pinned_low || pinned_high);
+            if !keep {
+                in_active[k] = false;
+            }
+            keep
+        });
+        if self.active.len() < before {
+            self.shrunk = true;
+            self.shrink_events += 1;
+        }
+    }
+
+    fn run(mut self) -> Result<SmoSolution> {
+        self.init_gradient();
+        // actual pair updates, NOT loop passes: unshrink-recheck
+        // passes do no pair work and must not inflate the count (it
+        // feeds the CI-gated iteration-reduction ratios against the
+        // legacy solver, whose count equals its update count)
+        let mut iterations = 0;
+        let mut since_shrink = 0usize;
+        // set once the unshrink-and-recheck pass has fired: from then
+        // on the solver works on the full set so the convergence check
+        // below is exact (the LIBSVM "unshrink once" policy)
+        let mut final_phase = false;
+
+        for _pass in 0..self.max_iter {
+            // --- selection scan over the active set ---
+            let mut i_sel = usize::MAX;
+            let mut g_min = f64::INFINITY;
+            let mut g_max = f64::NEG_INFINITY;
+            for &k in &self.active {
+                let gk = self.g[k];
+                if self.alpha[k] < self.c - 1e-14 && gk < g_min {
+                    g_min = gk;
+                    i_sel = k;
+                }
+                if self.alpha[k] > 0.0 && gk > g_max {
+                    g_max = gk;
+                }
+            }
+            let gap = g_max - g_min;
+
+            if i_sel == usize::MAX || gap < self.tol {
+                // apparent convergence: only final once re-checked on
+                // the full, exactly-reconstructed gradient
+                if self.try_unshrink() {
+                    final_phase = true;
+                    continue;
+                }
+                break;
+            }
+
+            // --- working-set selection ---
+            Self::fill_col_active(
+                &mut *self.kp,
+                self.shrunk,
+                &self.active,
+                i_sel,
+                &mut self.col_i,
+            );
+            let diag_i = self.kp.diag(i_sel);
+            let mut j_sel = usize::MAX;
+            match self.wss {
+                Wss::Second => {
+                    // maximize the objective decrease (g_j - g_i)^2 /
+                    // (2 eta_j) over the active positive set; K[:, i]
+                    // is in col_i already.
+                    let mut best_gain = 0.0;
+                    for &k in &self.pos {
+                        if k == i_sel || !self.in_active[k] {
+                            continue;
+                        }
+                        let d = self.g[k] - g_min;
+                        if d <= 0.0 {
+                            continue;
+                        }
+                        let eta = (2.0 * (diag_i + self.kp.diag(k) - 2.0 * self.col_i[k]))
+                            .max(1e-12);
+                        let gain = d * d / eta;
+                        if gain > best_gain {
+                            best_gain = gain;
+                            j_sel = k;
+                        }
+                    }
+                }
+                Wss::First => {
+                    // maximal violating pair: j = argmax g over the
+                    // active positive set
+                    let mut best_d = 0.0;
+                    for &k in &self.pos {
+                        if k == i_sel || !self.in_active[k] {
+                            continue;
+                        }
+                        let d = self.g[k] - g_min;
+                        if d > best_d {
+                            best_d = d;
+                            j_sel = k;
+                        }
+                    }
+                }
+                Wss::Legacy => unreachable!("legacy mode dispatches to solve_legacy"),
+            }
+            if j_sel == usize::MAX {
+                if self.try_unshrink() {
+                    final_phase = true;
+                    continue;
+                }
+                break;
+            }
+
+            // --- pair sub-problem ---
+            Self::fill_col_active(
+                &mut *self.kp,
+                self.shrunk,
+                &self.active,
+                j_sel,
+                &mut self.col_j,
+            );
+            let eta =
+                (2.0 * (diag_i + self.kp.diag(j_sel) - 2.0 * self.col_i[j_sel])).max(1e-12);
+            let raw = (self.g[j_sel] - g_min) / eta;
+            let delta = raw.min(self.c - self.alpha[i_sel]).min(self.alpha[j_sel]);
+            if delta <= 0.0 {
+                // numerically stuck pair; nothing can move on this set
+                if self.try_unshrink() {
+                    final_phase = true;
+                    continue;
+                }
+                break;
+            }
+            // exact membership test (not an alpha threshold): pushing
+            // an index already in `pos` would leave a stale duplicate
+            // behind after swap-removal
+            let was_out = self.pos_slot[i_sel] == usize::MAX;
+            self.alpha[i_sel] += delta;
+            self.alpha[j_sel] -= delta;
+            // maintain the positive set
+            if was_out {
+                self.pos_slot[i_sel] = self.pos.len();
+                self.pos.push(i_sel);
+            }
+            if self.alpha[j_sel] <= 1e-14 {
+                self.alpha[j_sel] = 0.0;
+                let slot = self.pos_slot[j_sel];
+                let last = *self.pos.last().unwrap();
+                self.pos.swap_remove(slot);
+                if slot < self.pos.len() {
+                    self.pos_slot[last] = slot;
+                }
+                self.pos_slot[j_sel] = usize::MAX;
+            }
+
+            // --- rank-1 gradient update over the active rows only ---
+            let two_d = 2.0 * delta;
+            for &k in &self.active {
+                self.g[k] += two_d * (self.col_i[k] - self.col_j[k]);
+            }
+            iterations += 1;
+
+            // --- periodic shrinking ---
+            since_shrink += 1;
+            if self.shrinking && !final_phase && since_shrink >= self.shrink_every {
+                since_shrink = 0;
+                self.shrink_pass(g_min, g_max);
+            }
+        }
+
+        // max_iter can land here while shrunk: make the gradient exact
+        // before reporting anything derived from it.
+        self.reconstruct_gradient();
+        self.finish(iterations)
+    }
+
+    fn finish(self, iterations: usize) -> Result<SmoSolution> {
+        let Solver { c, sv_eps, n, mut alpha, g, kp, shrink_events, unshrink_events, .. } = self;
+
+        // Renormalize tiny drift on the equality constraint.
+        let sum: f64 = alpha.iter().sum();
+        if (sum - 1.0).abs() > 1e-9 {
+            for a in &mut alpha {
+                *a /= sum;
+            }
+        }
+
+        // final gap over the full set, from the exact gradient
+        let mut g_min = f64::INFINITY;
+        let mut g_max = f64::NEG_INFINITY;
+        for k in 0..n {
+            if alpha[k] < c - 1e-14 && g[k] < g_min {
+                g_min = g[k];
+            }
+            if alpha[k] > 0.0 && g[k] > g_max {
+                g_max = g[k];
+            }
+        }
+        let gap = g_max - g_min;
+
+        // quad = a' K a = sum_i a_i (K a)_i with (K a)_i = (g_i + K_ii)/2.
+        let quad: f64 = (0..n).map(|i| alpha[i] * (g[i] + kp.diag(i)) * 0.5).sum();
+
+        // R^2: dist^2(x_k) = K_kk - 2 (K a)_k + quad = quad - g_k.
+        // Average over boundary SVs (0 < a_k < C); fall back to all SVs.
+        let mut r2_sum = 0.0;
+        let mut r2_cnt = 0usize;
+        for k in 0..n {
+            if alpha[k] > sv_eps && alpha[k] < c - sv_eps {
+                r2_sum += quad - g[k];
+                r2_cnt += 1;
+            }
+        }
+        if r2_cnt == 0 {
+            for k in 0..n {
+                if alpha[k] > sv_eps {
+                    r2_sum += quad - g[k];
+                    r2_cnt += 1;
+                }
+            }
+        }
+        let r2 = if r2_cnt > 0 { (r2_sum / r2_cnt as f64).max(0.0) } else { 0.0 };
+
+        Ok(SmoSolution {
+            alpha,
+            gradient: g,
+            quad,
+            r2,
+            iterations,
+            gap,
+            shrink_events,
+            unshrink_events,
+        })
+    }
+}
+
+/// The pre-Solver loop, preserved **verbatim** (modulo the two
+/// telemetry zeros appended to [`SmoSolution`]): first-order `i`-scan
+/// fused into the rank-1 gradient update, gain-based `j` pick over the
+/// positive set, full-length columns, no shrinking, cold init. Golden
+/// regression tests pin its trajectory byte-for-byte — do not "improve"
+/// this function; improvements belong in [`Solver`].
+fn solve_legacy(kp: &mut dyn KernelProvider, c: f64, opts: &SmoOptions) -> Result<SmoSolution> {
+    let n = kp.n();
+    if n == 0 {
+        return Err(Error::invalid("SMO: empty problem"));
+    }
+    if c * (n as f64) < 1.0 - 1e-12 {
+        return Err(Error::Solver(format!(
+            "infeasible: n*C = {} < 1 (f > 1?)",
+            c * n as f64
+        )));
+    }
     let mut alpha = vec![0.0; n];
     if n <= UNIFORM_INIT_MAX_N {
         for a in &mut alpha {
@@ -441,7 +1181,16 @@ pub fn solve(kp: &mut dyn KernelProvider, c: f64, opts: &SmoOptions) -> Result<S
     }
     let r2 = if r2_cnt > 0 { (r2_sum / r2_cnt as f64).max(0.0) } else { 0.0 };
 
-    Ok(SmoSolution { alpha, gradient: g, quad, r2, iterations, gap })
+    Ok(SmoSolution {
+        alpha,
+        gradient: g,
+        quad,
+        r2,
+        iterations,
+        gap,
+        shrink_events: 0,
+        unshrink_events: 0,
+    })
 }
 
 #[cfg(test)]
@@ -604,6 +1353,7 @@ mod tests {
     fn infeasible_c_rejected() {
         let mut kp = gaussian_dense(&[vec![0.0], vec![1.0]], 1.0);
         assert!(solve(&mut kp, 0.2, &SmoOptions::default()).is_err());
+        assert!(solve(&mut kp, 0.2, &SmoOptions::legacy()).is_err());
     }
 
     #[test]
@@ -611,6 +1361,8 @@ mod tests {
         let m = Matrix::zeros(0, 1);
         let mut kp = DenseKernel::from_data(&m, Kernel::gaussian(1.0));
         assert!(solve(&mut kp, 1.0, &SmoOptions::default()).is_err());
+        let mut kp2 = DenseKernel::from_data(&m, Kernel::gaussian(1.0));
+        assert!(solve(&mut kp2, 1.0, &SmoOptions::legacy()).is_err());
     }
 
     #[test]
@@ -659,5 +1411,237 @@ mod tests {
         assert!((sol.alpha.iter().sum::<f64>() - 1.0).abs() < 1e-9);
         assert!(sol.alpha.iter().all(|&a| (-1e-12..=c + 1e-12).contains(&a)));
         assert!(sol.gap < 1e-5);
+    }
+
+    // ---- Solver-path specifics: WSS modes, shrinking, warm starts ----
+
+    fn wavy(n: usize) -> Vec<Vec<f64>> {
+        (0..n)
+            .map(|i| {
+                let t = i as f64 * 0.37;
+                vec![t.sin() * 2.0, (t * 1.7).cos()]
+            })
+            .collect()
+    }
+
+    #[test]
+    fn wss_modes_agree_within_tolerance() {
+        let pts = wavy(120);
+        let c = 1.0 / (120.0 * 0.1);
+        let mut a = gaussian_dense(&pts, 0.8);
+        let mut b = gaussian_dense(&pts, 0.8);
+        let mut l = gaussian_dense(&pts, 0.8);
+        let second = solve(&mut a, c, &SmoOptions::default()).unwrap();
+        let first = solve(
+            &mut b,
+            c,
+            &SmoOptions { wss: Wss::First, shrinking: false, ..Default::default() },
+        )
+        .unwrap();
+        let legacy = solve(&mut l, c, &SmoOptions::legacy()).unwrap();
+        for s in [&second, &first, &legacy] {
+            assert!(s.gap < 1e-5, "gap={}", s.gap);
+        }
+        // solutions are each eps-KKT; derived quantities agree to the
+        // KKT tolerance scale (not bitwise — the trajectories differ)
+        assert!((second.r2 - first.r2).abs() < 1e-5);
+        assert!((second.r2 - legacy.r2).abs() < 1e-5);
+        assert!((second.quad - first.quad).abs() < 1e-5);
+    }
+
+    #[test]
+    fn shrinking_matches_unshrunk_solution() {
+        let pts = wavy(300);
+        let c = 1.0 / (300.0 * 0.05);
+        // aggressive cadence so shrinking actually fires on a test-size
+        // problem
+        let shrunk_opts = SmoOptions { shrink_every: 20, ..Default::default() };
+        let plain_opts = SmoOptions { shrinking: false, ..Default::default() };
+        let mut a = gaussian_dense(&pts, 0.6);
+        let mut b = gaussian_dense(&pts, 0.6);
+        let with = solve(&mut a, c, &shrunk_opts).unwrap();
+        let without = solve(&mut b, c, &plain_opts).unwrap();
+        assert!(with.gap < 1e-5, "shrunk gap={}", with.gap);
+        assert!((with.r2 - without.r2).abs() < 1e-5, "{} vs {}", with.r2, without.r2);
+        assert!((with.quad - without.quad).abs() < 1e-5);
+        // per-index alpha comparison is deliberately absent: the wavy
+        // curve has near-duplicate rows, where eps-KKT solutions can
+        // split mass between twins differently; the SV-set agreement
+        // property lives in tests/smo_solver.rs on well-posed clouds
+    }
+
+    #[test]
+    fn shrinking_fires_and_is_reported() {
+        // big enough that the auto cadence (min(n,1000)) fires several
+        // times before convergence
+        let pts = wavy(500);
+        let c = 1.0 / (500.0 * 0.02);
+        let mut kp = gaussian_dense(&pts, 0.4);
+        let sol = solve(&mut kp, c, &SmoOptions { shrink_every: 25, ..Default::default() })
+            .unwrap();
+        assert!(sol.gap < 1e-5);
+        assert!(sol.shrink_events > 0, "expected shrinking on a 500-pt problem");
+        // apparent convergence on the shrunk set must have been
+        // re-checked at least once
+        assert!(sol.unshrink_events >= 1);
+    }
+
+    #[test]
+    fn warm_start_from_solution_converges_immediately() {
+        let pts = wavy(150);
+        let c = 1.0 / (150.0 * 0.1);
+        let mut a = gaussian_dense(&pts, 0.9);
+        let cold = solve(&mut a, c, &SmoOptions::default()).unwrap();
+        let mut b = gaussian_dense(&pts, 0.9);
+        let warm =
+            solve_with_init(&mut b, c, &SmoOptions::default(), Some(&cold.alpha[..])).unwrap();
+        assert!(
+            warm.iterations <= cold.iterations / 5 + 3,
+            "warm {} vs cold {}",
+            warm.iterations,
+            cold.iterations
+        );
+        assert!((warm.r2 - cold.r2).abs() < 1e-8);
+    }
+
+    #[test]
+    fn warm_start_infeasible_guess_is_projected() {
+        let pts = wavy(40);
+        let c = 1.0 / (40.0 * 0.2);
+        // mass 5x too large, some entries negative/NaN, some above C
+        let mut guess = vec![0.0; 40];
+        for (i, v) in guess.iter_mut().enumerate() {
+            *v = match i % 4 {
+                0 => 1.0,
+                1 => -3.0,
+                2 => f64::NAN,
+                _ => 0.01,
+            };
+        }
+        let mut kp = gaussian_dense(&pts, 0.8);
+        let sol = solve_with_init(&mut kp, c, &SmoOptions::default(), Some(&guess[..])).unwrap();
+        assert!((sol.alpha.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        assert!(sol.alpha.iter().all(|&a| (-1e-12..=c + 1e-12).contains(&a)));
+        assert!(sol.gap < 1e-5);
+    }
+
+    #[test]
+    fn warm_start_subthreshold_alpha_cannot_corrupt_pos_set() {
+        // a guess summing to 1 with one entry below the 1e-14 zero
+        // clamp: the projection keeps it, and before the entry-zeroing
+        // in Solver::new it entered `pos` while still being "zero" to
+        // the pair updates — a later re-push would leave a stale
+        // duplicate that could stall the solver. The solve must reach
+        // full tolerance.
+        let pts = wavy(25);
+        let c = 1.0 / (25.0 * 0.2);
+        let mut guess = vec![0.0; 25];
+        for g in guess.iter_mut().take(5) {
+            *g = c; // 5 * 0.2 = exactly 1.0
+        }
+        guess[10] = 1e-20; // vanishes into the sum; survives projection
+        let mut kp = gaussian_dense(&pts, 0.8);
+        let sol =
+            solve_with_init(&mut kp, c, &SmoOptions::default(), Some(&guess[..])).unwrap();
+        assert!(sol.gap < 1e-5, "gap={}", sol.gap);
+        assert!((sol.alpha.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        assert!(sol.alpha.iter().all(|&a| (-1e-12..=c + 1e-12).contains(&a)));
+    }
+
+    #[test]
+    fn warm_start_all_zero_falls_back_to_cold() {
+        let pts = wavy(30);
+        let c = 1.0 / (30.0 * 0.2);
+        let mut a = gaussian_dense(&pts, 0.8);
+        let mut b = gaussian_dense(&pts, 0.8);
+        let cold = solve(&mut a, c, &SmoOptions::default()).unwrap();
+        let zeros = vec![0.0; 30];
+        let warm =
+            solve_with_init(&mut b, c, &SmoOptions::default(), Some(&zeros[..])).unwrap();
+        // identical trajectory: the zero guess falls back to cold init
+        assert_eq!(warm.iterations, cold.iterations);
+        assert_eq!(warm.r2.to_bits(), cold.r2.to_bits());
+    }
+
+    #[test]
+    fn warm_start_wrong_length_rejected() {
+        let pts = wavy(10);
+        let mut kp = gaussian_dense(&pts, 1.0);
+        let bad = vec![0.1; 7];
+        assert!(solve_with_init(&mut kp, 1.0, &SmoOptions::default(), Some(&bad[..])).is_err());
+    }
+
+    #[test]
+    fn legacy_mode_rejects_warm_start() {
+        let pts = wavy(10);
+        let mut kp = gaussian_dense(&pts, 1.0);
+        let init = vec![0.1; 10];
+        assert!(solve_with_init(&mut kp, 1.0, &SmoOptions::legacy(), Some(&init[..])).is_err());
+    }
+
+    #[test]
+    fn single_point_problem() {
+        for opts in [SmoOptions::default(), SmoOptions::legacy()] {
+            let mut kp = gaussian_dense(&[vec![3.0, 4.0]], 1.0);
+            let sol = solve(&mut kp, 1.0, &opts).unwrap();
+            assert_eq!(sol.alpha, vec![1.0]);
+            assert!(sol.r2.abs() < 1e-12, "r2={}", sol.r2);
+        }
+    }
+
+    #[test]
+    fn ranged_col_matches_full_col() {
+        let pts = wavy(64);
+        let m = Matrix::from_rows(&pts).unwrap();
+        for kernel in [Kernel::gaussian(0.7), Kernel::Linear, Kernel::polynomial(2, 1.0)] {
+            let mut dense = DenseKernel::from_data(&m, kernel);
+            let mut lazy = LazyKernel::new(&m, kernel, 1 << 20);
+            let mut full = vec![0.0; 64];
+            let mut part = vec![0.0; 17];
+            for kp in [&mut dense as &mut dyn KernelProvider, &mut lazy] {
+                kp.col_into(5, &mut full);
+                kp.col_into_range(5, 20..37, &mut part);
+                assert_eq!(&full[20..37], &part[..], "uncached range mismatch");
+            }
+            // lazy: a second ranged read is served from the now-cached
+            // full column and must carry identical bits
+            let mut part2 = vec![0.0; 17];
+            lazy.col_into_range(5, 20..37, &mut part2);
+            assert_eq!(part, part2);
+        }
+    }
+
+    #[test]
+    fn for_each_run_batches_consecutive_indices() {
+        let mut runs: Vec<(usize, usize)> = Vec::new();
+        for_each_run(&[2, 3, 4, 9, 11, 12], |r| runs.push((r.start, r.end)));
+        assert_eq!(runs, vec![(2, 5), (9, 10), (11, 13)]);
+        runs.clear();
+        for_each_run(&[], |r| runs.push((r.start, r.end)));
+        assert!(runs.is_empty());
+        for_each_run(&[7], |r| runs.push((r.start, r.end)));
+        assert_eq!(runs, vec![(7, 8)]);
+    }
+
+    #[test]
+    fn feasible_init_handles_degenerate_guesses() {
+        // saturating guess: everything wants C
+        let a = feasible_init(&[9.0, 9.0, 9.0, 9.0], 0.3);
+        assert!((a.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        assert!(a.iter().all(|&x| x <= 0.3 + 1e-12));
+        // tiny mass gets scaled up
+        let b = feasible_init(&[1e-9, 2e-9], 1.0);
+        assert!((b.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        // all-zero falls back to cold init
+        let z = feasible_init(&[0.0; 5], 1.0);
+        assert!((z.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn wss_parse_roundtrip() {
+        for w in [Wss::First, Wss::Second, Wss::Legacy] {
+            assert_eq!(Wss::parse(w.as_str()).unwrap(), w);
+        }
+        assert!(Wss::parse("zeroth").is_err());
     }
 }

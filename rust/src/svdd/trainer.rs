@@ -66,21 +66,87 @@ impl Default for SvddParams {
     }
 }
 
+/// Per-solve solver telemetry, surfaced so the sampling trainer, the
+/// metrics registry and `fastsvdd train -v` can report what the SMO
+/// engine actually did instead of dropping it on the floor.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SolverStats {
+    /// SMO pair iterations.
+    pub smo_iterations: usize,
+    /// Shrink passes that removed at least one variable.
+    pub shrink_events: usize,
+    /// Unshrink-and-recheck passes (exact gradient reconstructions).
+    pub unshrink_events: usize,
+    /// Final optimality gap.
+    pub gap: f64,
+    /// Kernel-column LRU hit rate (`None` on the dense gram path,
+    /// which has no cache).
+    pub cache_hit_rate: Option<f64>,
+}
+
+impl SolverStats {
+    fn from_solution(sol: &smo::SmoSolution, cache_hit_rate: Option<f64>) -> SolverStats {
+        SolverStats {
+            smo_iterations: sol.iterations,
+            shrink_events: sol.shrink_events,
+            unshrink_events: sol.unshrink_events,
+            gap: sol.gap,
+            cache_hit_rate,
+        }
+    }
+
+    /// Fold another solve's telemetry into this aggregate (gap keeps
+    /// the latest value; hit rates keep the last cached path's).
+    pub fn absorb(&mut self, other: &SolverStats) {
+        self.smo_iterations += other.smo_iterations;
+        self.shrink_events += other.shrink_events;
+        self.unshrink_events += other.unshrink_events;
+        self.gap = other.gap;
+        if other.cache_hit_rate.is_some() {
+            self.cache_hit_rate = other.cache_hit_rate;
+        }
+    }
+}
+
 /// Train on `data` with natively computed kernels.
 pub fn train(data: &Matrix, params: &SvddParams) -> Result<SvddModel> {
+    Ok(train_detailed(data, params, None)?.0)
+}
+
+/// [`train`] with solver telemetry, optionally warm-started from an
+/// initial dual guess `init` (length `data.rows()`; projected onto the
+/// feasible set — see [`smo::solve_with_init`]).
+pub fn train_detailed(
+    data: &Matrix,
+    params: &SvddParams,
+    init: Option<&[f64]>,
+) -> Result<(SvddModel, SolverStats)> {
     let c = params.c_for(data.rows())?;
     let mut kp = LazyKernel::new(data, params.kernel, params.cache_bytes);
-    let sol = smo::solve(&mut kp, c, &params.smo)?;
-    finalize(data, params, sol)
+    let sol = smo::solve_with_init(&mut kp, c, &params.smo, init)?;
+    let stats = SolverStats::from_solution(&sol, Some(kp.cache_hit_rate()));
+    Ok((finalize(data, params, sol)?, stats))
 }
 
 /// Train on `data` whose gram matrix `K(data, data)` was computed
 /// elsewhere (the XLA artifact path). `gram` is row-major n*n.
 pub fn train_with_gram(data: &Matrix, gram: Vec<f64>, params: &SvddParams) -> Result<SvddModel> {
+    Ok(train_with_gram_detailed(data, gram, params, None)?.0)
+}
+
+/// [`train_with_gram`] with solver telemetry and an optional warm
+/// start.
+pub fn train_with_gram_detailed(
+    data: &Matrix,
+    gram: Vec<f64>,
+    params: &SvddParams,
+    init: Option<&[f64]>,
+) -> Result<(SvddModel, SolverStats)> {
     let c = params.c_for(data.rows())?;
     let mut kp = DenseKernel::new(gram, data.rows())?;
-    let sol = smo::solve(&mut kp, c, &params.smo)?;
-    finalize(data, params, sol)
+    let sol = smo::solve_with_init(&mut kp, c, &params.smo, init)?;
+    let stats = SolverStats::from_solution(&sol, None);
+    Ok((finalize(data, params, sol)?, stats))
 }
 
 fn finalize(data: &Matrix, params: &SvddParams, sol: smo::SmoSolution) -> Result<SvddModel> {

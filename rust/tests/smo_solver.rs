@@ -1,0 +1,447 @@
+//! Solver-path regression suite for the SMO engine:
+//!
+//! 1. a **golden byte-for-byte pin** of legacy mode ([`Wss::Legacy`]):
+//!    `golden_solve` below is a verbatim copy of the solver loop as it
+//!    existed before the `Solver` refactor (first-order `i`-scan fused
+//!    into the gradient update, gain-based `j` pick, no shrinking,
+//!    cold init). `solve` with `SmoOptions::legacy()` must reproduce
+//!    its trajectory bit-for-bit on every problem — if the legacy path
+//!    ever drifts, seeded historical runs change and this fails;
+//! 2. **property tests** that the fast path (WSS2 + shrinking) matches
+//!    the first-order unshrunk reference (objective, `R^2`, gap, SV
+//!    set) within tolerance across all three kernels, random box
+//!    bounds and degenerate inputs (duplicate rows, n=1,
+//!    all-interior).
+
+use fastsvdd::svdd::smo::{solve, solve_with_init, DenseKernel, KernelProvider, SmoOptions};
+use fastsvdd::svdd::smo::LazyKernel;
+use fastsvdd::svdd::{Kernel, Wss};
+use fastsvdd::testutil::prop::{forall, Gen};
+use fastsvdd::util::matrix::Matrix;
+
+// ---------------------------------------------------------------------
+// Golden reference: the pre-Solver loop, copied verbatim.
+// ---------------------------------------------------------------------
+
+struct GoldenSolution {
+    alpha: Vec<f64>,
+    quad: f64,
+    r2: f64,
+    iterations: usize,
+    gap: f64,
+}
+
+/// The solver exactly as it shipped before the `Solver` refactor.
+/// Do not modify — its whole purpose is to be the frozen historical
+/// trajectory.
+fn golden_solve(kp: &mut dyn KernelProvider, c: f64, opts: &SmoOptions) -> GoldenSolution {
+    let n = kp.n();
+    assert!(n > 0 && c * (n as f64) >= 1.0 - 1e-12);
+    const UNIFORM_INIT_MAX_N: usize = 256;
+    let mut alpha = vec![0.0; n];
+    if n <= UNIFORM_INIT_MAX_N {
+        for a in &mut alpha {
+            *a = 1.0 / n as f64;
+        }
+    } else {
+        let mut remaining: f64 = 1.0;
+        let mut i = 0;
+        while remaining > 0.0 && i < n {
+            let a = remaining.min(c);
+            alpha[i] = a;
+            remaining -= a;
+            i += 1;
+        }
+    }
+
+    let mut g: Vec<f64> = (0..n).map(|i| -kp.diag(i)).collect();
+    let mut col = vec![0.0; n];
+    for j in 0..n {
+        if alpha[j] <= 0.0 {
+            continue;
+        }
+        kp.col_into(j, &mut col);
+        let two_aj = 2.0 * alpha[j];
+        for k in 0..n {
+            g[k] += two_aj * col[k];
+        }
+    }
+
+    let mut pos: Vec<usize> = (0..n).filter(|&k| alpha[k] > 0.0).collect();
+    let mut pos_slot: Vec<usize> = vec![usize::MAX; n];
+    for (slot, &k) in pos.iter().enumerate() {
+        pos_slot[k] = slot;
+    }
+
+    let max_iter = if opts.max_iter > 0 {
+        opts.max_iter
+    } else {
+        (100 * n).max(10_000)
+    };
+
+    let mut col_i = vec![0.0; n];
+    let mut col_j = vec![0.0; n];
+    let mut iterations = 0;
+    let mut gap = f64::INFINITY;
+
+    let mut i_sel = usize::MAX;
+    let mut g_min = f64::INFINITY;
+    for k in 0..n {
+        if alpha[k] < c - 1e-14 && g[k] < g_min {
+            g_min = g[k];
+            i_sel = k;
+        }
+    }
+
+    for it in 0..max_iter {
+        iterations = it;
+        let mut g_max = f64::NEG_INFINITY;
+        for &k in &pos {
+            if g[k] > g_max {
+                g_max = g[k];
+            }
+        }
+        gap = g_max - g_min;
+        if i_sel == usize::MAX || pos.is_empty() || gap < opts.tol {
+            break;
+        }
+
+        kp.col_into(i_sel, &mut col_i);
+        let diag_i = kp.diag(i_sel);
+        let mut j_sel = usize::MAX;
+        let mut best_gain = 0.0;
+        for &k in &pos {
+            if k == i_sel {
+                continue;
+            }
+            let d = g[k] - g_min;
+            if d <= 0.0 {
+                continue;
+            }
+            let eta = (2.0 * (diag_i + kp.diag(k) - 2.0 * col_i[k])).max(1e-12);
+            let gain = d * d / eta;
+            if gain > best_gain {
+                best_gain = gain;
+                j_sel = k;
+            }
+        }
+        if j_sel == usize::MAX {
+            break;
+        }
+
+        kp.col_into(j_sel, &mut col_j);
+        let eta = (2.0 * (diag_i + kp.diag(j_sel) - 2.0 * col_i[j_sel])).max(1e-12);
+        let raw = (g[j_sel] - g_min) / eta;
+        let delta = raw.min(c - alpha[i_sel]).min(alpha[j_sel]);
+        if delta <= 0.0 {
+            break;
+        }
+        let was_zero = alpha[i_sel] <= 1e-14;
+        alpha[i_sel] += delta;
+        alpha[j_sel] -= delta;
+        if was_zero {
+            pos_slot[i_sel] = pos.len();
+            pos.push(i_sel);
+        }
+        if alpha[j_sel] <= 1e-14 {
+            alpha[j_sel] = 0.0;
+            let slot = pos_slot[j_sel];
+            let last = *pos.last().unwrap();
+            pos.swap_remove(slot);
+            if slot < pos.len() {
+                pos_slot[last] = slot;
+            }
+            pos_slot[j_sel] = usize::MAX;
+        }
+
+        let two_d = 2.0 * delta;
+        g_min = f64::INFINITY;
+        i_sel = usize::MAX;
+        for k in 0..n {
+            let gk = g[k] + two_d * (col_i[k] - col_j[k]);
+            g[k] = gk;
+            if gk < g_min && alpha[k] < c - 1e-14 {
+                g_min = gk;
+                i_sel = k;
+            }
+        }
+    }
+
+    let sum: f64 = alpha.iter().sum();
+    if (sum - 1.0).abs() > 1e-9 {
+        for a in &mut alpha {
+            *a /= sum;
+        }
+    }
+
+    let quad: f64 = (0..n)
+        .map(|i| alpha[i] * (g[i] + kp.diag(i)) * 0.5)
+        .sum();
+
+    let mut r2_sum = 0.0;
+    let mut r2_cnt = 0usize;
+    for k in 0..n {
+        if alpha[k] > opts.sv_eps && alpha[k] < c - opts.sv_eps {
+            r2_sum += quad - g[k];
+            r2_cnt += 1;
+        }
+    }
+    if r2_cnt == 0 {
+        for k in 0..n {
+            if alpha[k] > opts.sv_eps {
+                r2_sum += quad - g[k];
+                r2_cnt += 1;
+            }
+        }
+    }
+    let r2 = if r2_cnt > 0 { (r2_sum / r2_cnt as f64).max(0.0) } else { 0.0 };
+
+    GoldenSolution { alpha, quad, r2, iterations, gap }
+}
+
+// ---------------------------------------------------------------------
+// Shared generators / helpers
+// ---------------------------------------------------------------------
+
+fn seeded_points(seed: u64, n: usize, m: usize, scale: f64) -> Matrix {
+    let mut g = Gen::new(seed);
+    let rows: Vec<Vec<f64>> = (0..n)
+        .map(|_| (0..m).map(|_| g.normal() * scale).collect())
+        .collect();
+    Matrix::from_rows(&rows).unwrap()
+}
+
+fn objective(k: &DenseKernel, alpha: &[f64]) -> f64 {
+    let n = k.n();
+    let ks = k.as_slice();
+    let mut q = 0.0;
+    for i in 0..n {
+        for j in 0..n {
+            q += alpha[i] * alpha[j] * ks[i * n + j];
+        }
+    }
+    let lin: f64 = (0..n).map(|i| alpha[i] * k.diag(i)).sum();
+    q - lin
+}
+
+/// One of the three kernel families plus a data scale that keeps its
+/// values well-conditioned (high-degree polynomials over wide clouds
+/// push kernel entries to 1e4+, where an absolute 1e-6 gap means
+/// asymptotically slow tail convergence — a conditioning problem, not
+/// a solver property under test here).
+fn three_kernels(g: &mut Gen) -> (Kernel, f64) {
+    match g.usize_in(0, 2) {
+        0 => (Kernel::gaussian(g.f64_in(0.3, 2.0)), 1.5),
+        1 => (Kernel::Linear, 1.0),
+        _ => (Kernel::polynomial(g.usize_in(1, 3) as u32, g.f64_in(0.5, 2.0)), 0.5),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Golden byte-for-byte pin of legacy mode
+// ---------------------------------------------------------------------
+
+#[test]
+fn legacy_mode_reproduces_golden_trajectory_bitwise() {
+    // n spans both init regimes (uniform <= 256 < concentrated); the
+    // three kernels and several box bounds cover the selection logic.
+    for (seed, n, m) in [(1u64, 40, 2), (2, 120, 3), (3, 300, 2), (4, 57, 1)] {
+        let data = seeded_points(seed, n, m, 1.5);
+        for kernel in [Kernel::gaussian(0.9), Kernel::Linear, Kernel::polynomial(2, 1.0)] {
+            for f in [0.05, 0.25] {
+                let c = 1.0 / (n as f64 * f);
+                let opts = SmoOptions::legacy();
+                let mut golden_kp = DenseKernel::from_data(&data, kernel);
+                let want = golden_solve(&mut golden_kp, c, &opts);
+                let mut kp = DenseKernel::from_data(&data, kernel);
+                let got = solve(&mut kp, c, &opts).unwrap();
+                assert_eq!(got.iterations, want.iterations, "seed {seed} {kernel:?} f={f}");
+                assert_eq!(got.r2.to_bits(), want.r2.to_bits(), "seed {seed} {kernel:?} f={f}");
+                assert_eq!(got.quad.to_bits(), want.quad.to_bits());
+                assert_eq!(got.gap.to_bits(), want.gap.to_bits());
+                for (a, b) in got.alpha.iter().zip(&want.alpha) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "alpha drift: seed {seed}");
+                }
+                assert_eq!(got.shrink_events, 0, "legacy mode must never shrink");
+                assert_eq!(got.unshrink_events, 0);
+            }
+        }
+    }
+}
+
+#[test]
+fn legacy_mode_lazy_kernel_matches_golden_dense_bitwise() {
+    // lazy columns carry the same bits as the dense block gram, so the
+    // legacy trajectory is identical through either provider
+    let data = seeded_points(9, 150, 3, 1.2);
+    let kernel = Kernel::gaussian(0.8);
+    let c = 1.0 / (150.0 * 0.1);
+    let opts = SmoOptions::legacy();
+    let mut golden_kp = DenseKernel::from_data(&data, kernel);
+    let want = golden_solve(&mut golden_kp, c, &opts);
+    let mut lazy = LazyKernel::new(&data, kernel, 64 << 20);
+    let got = solve(&mut lazy, c, &opts).unwrap();
+    assert_eq!(got.iterations, want.iterations);
+    assert_eq!(got.r2.to_bits(), want.r2.to_bits());
+    for (a, b) in got.alpha.iter().zip(&want.alpha) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+}
+
+// ---------------------------------------------------------------------
+// Fast path (WSS2 + shrinking) vs first-order unshrunk reference
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_wss2_shrinking_matches_first_order_reference() {
+    forall("wss2+shrinking vs wss1 unshrunk", 30, |g| {
+        let n = g.usize_in(2, 60);
+        let m = g.usize_in(1, 4);
+        let (kernel, scale) = three_kernels(g);
+        let f = g.f64_in(0.05, 0.9);
+        let c = 1.0 / (n as f64 * f);
+        let mut data = seeded_points(g.usize_in(0, 1 << 30) as u64, n, m, scale);
+        // degenerate flavor: duplicate a block of rows exactly
+        if g.bool() && n >= 4 {
+            let k = g.usize_in(1, n / 2);
+            let dup_idx: Vec<usize> = (0..n).map(|i| if i < k { 0 } else { i }).collect();
+            data = data.gather(&dup_idx);
+        }
+        let fast_opts = SmoOptions { shrink_every: 5, ..Default::default() };
+        let ref_opts = SmoOptions { wss: Wss::First, shrinking: false, ..Default::default() };
+        let dense = DenseKernel::from_data(&data, kernel);
+        let mut a = DenseKernel::from_data(&data, kernel);
+        let mut b = DenseKernel::from_data(&data, kernel);
+        let fast = solve(&mut a, c, &fast_opts).unwrap();
+        let refr = solve(&mut b, c, &ref_opts).unwrap();
+
+        // both epsilon-KKT on the full set
+        assert!(fast.gap < 1e-4, "fast gap {}", fast.gap);
+        assert!(refr.gap < 1e-4, "reference gap {}", refr.gap);
+        // the optimal objective is unique (convex problem): both paths
+        // must land on it within solver tolerance, even when alpha
+        // itself is not unique (duplicate rows, rank-deficient kernels)
+        let (oa, ob) = (objective(&dense, &fast.alpha), objective(&dense, &refr.alpha));
+        let scale = oa.abs().max(ob.abs()).max(1e-3);
+        assert!(
+            (oa - ob).abs() <= 1e-4 * scale,
+            "objective mismatch: fast {oa} vs reference {ob}"
+        );
+        assert!(
+            (fast.r2 - refr.r2).abs() <= 1e-3 * fast.r2.abs().max(refr.r2.abs()).max(1e-3),
+            "r2 mismatch: {} vs {}",
+            fast.r2,
+            refr.r2
+        );
+        // feasibility of the fast path
+        assert!((fast.alpha.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        assert!(fast.alpha.iter().all(|&x| (-1e-12..=c + 1e-9).contains(&x)));
+    });
+}
+
+#[test]
+fn prop_sv_sets_agree_on_well_posed_problems() {
+    // Gaussian kernels over distinct points give a strictly convex dual
+    // => unique alpha; there the two paths must agree point-by-point
+    // and produce the same SV set.
+    forall("sv set equality", 20, |g| {
+        let n = g.usize_in(5, 50);
+        let data = seeded_points(g.usize_in(0, 1 << 30) as u64, n, 2, 2.0);
+        let kernel = Kernel::gaussian(g.f64_in(0.5, 1.5));
+        let f = g.f64_in(0.1, 0.5);
+        let c = 1.0 / (n as f64 * f);
+        let fast_opts = SmoOptions { shrink_every: 5, ..Default::default() };
+        let ref_opts = SmoOptions { wss: Wss::First, shrinking: false, ..Default::default() };
+        let mut a = DenseKernel::from_data(&data, kernel);
+        let mut b = DenseKernel::from_data(&data, kernel);
+        let fast = solve(&mut a, c, &fast_opts).unwrap();
+        let refr = solve(&mut b, c, &ref_opts).unwrap();
+        for i in 0..n {
+            assert!(
+                (fast.alpha[i] - refr.alpha[i]).abs() < 1e-2,
+                "alpha[{i}]: {} vs {}",
+                fast.alpha[i],
+                refr.alpha[i]
+            );
+            // membership at a firm threshold implies membership at a
+            // loose one in the other solution
+            if fast.alpha[i] > 1e-2 {
+                assert!(refr.alpha[i] > 1e-5, "SV {i} missing from reference");
+            }
+            if refr.alpha[i] > 1e-2 {
+                assert!(fast.alpha[i] > 1e-5, "SV {i} missing from fast path");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_warm_start_equivalent_to_cold() {
+    // warm-starting from an arbitrary feasible (or infeasible —
+    // projected) guess must land on the same objective as cold start
+    forall("warm start equivalence", 20, |g| {
+        let n = g.usize_in(3, 40);
+        let (kernel, scale) = three_kernels(g);
+        let data = seeded_points(g.usize_in(0, 1 << 30) as u64, n, 2, scale);
+        let f = g.f64_in(0.1, 0.6);
+        let c = 1.0 / (n as f64 * f);
+        let guess = g.vec_f64(n, 0.0, 2.0 * c.min(10.0));
+        let dense = DenseKernel::from_data(&data, kernel);
+        let mut a = DenseKernel::from_data(&data, kernel);
+        let mut b = DenseKernel::from_data(&data, kernel);
+        let cold = solve(&mut a, c, &SmoOptions::default()).unwrap();
+        let warm =
+            solve_with_init(&mut b, c, &SmoOptions::default(), Some(&guess[..])).unwrap();
+        assert!(warm.gap < 1e-4);
+        assert!((warm.alpha.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        assert!(warm.alpha.iter().all(|&x| (-1e-12..=c + 1e-9).contains(&x)));
+        let (oc, ow) = (objective(&dense, &cold.alpha), objective(&dense, &warm.alpha));
+        let scale = oc.abs().max(ow.abs()).max(1e-3);
+        assert!((oc - ow).abs() <= 1e-4 * scale, "cold {oc} vs warm {ow}");
+    });
+}
+
+// ---------------------------------------------------------------------
+// Deterministic degenerate inputs across every mode
+// ---------------------------------------------------------------------
+
+#[test]
+fn degenerate_inputs_solve_in_every_mode() {
+    let modes = [
+        SmoOptions::default(),
+        SmoOptions { wss: Wss::First, shrinking: false, ..Default::default() },
+        SmoOptions { shrink_every: 2, ..Default::default() },
+        SmoOptions::legacy(),
+    ];
+    // n = 1
+    for opts in modes {
+        let one = Matrix::from_rows(&[vec![1.0, -2.0]]).unwrap();
+        let mut kp = DenseKernel::from_data(&one, Kernel::gaussian(1.0));
+        let sol = solve(&mut kp, 1.5, &opts).unwrap();
+        assert_eq!(sol.alpha, vec![1.0]);
+        assert!(sol.r2.abs() < 1e-12);
+    }
+    // all rows identical: every feasible alpha is optimal, R^2 = 0
+    for opts in modes {
+        let same = Matrix::from_rows(&vec![vec![0.5, 0.5]; 6]).unwrap();
+        let mut kp = DenseKernel::from_data(&same, Kernel::gaussian(1.0));
+        let sol = solve(&mut kp, 0.5, &opts).unwrap();
+        assert!((sol.alpha.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        assert!(sol.r2.abs() < 1e-9, "r2={}", sol.r2);
+    }
+    // all-interior: a tight cluster with C >= 1 (box never binds); the
+    // solution exists and scores the cluster center inside
+    for opts in modes {
+        let pts: Vec<Vec<f64>> = (0..12)
+            .map(|i| {
+                let t = i as f64 * 0.524;
+                vec![t.cos() * 0.01, t.sin() * 0.01]
+            })
+            .collect();
+        let tight = Matrix::from_rows(&pts).unwrap();
+        let mut kp = DenseKernel::from_data(&tight, Kernel::gaussian(2.0));
+        let sol = solve(&mut kp, 2.0, &opts).unwrap();
+        assert!(sol.gap < 1e-4);
+        assert!(sol.r2 >= 0.0 && sol.r2 < 1e-4, "tiny cluster r2={}", sol.r2);
+    }
+}
