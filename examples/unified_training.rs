@@ -1,0 +1,54 @@
+//! Unified training engine: every method through one facade.
+//!
+//! Trains the same banana data set with every registered method —
+//! full, sampling, distributed, Luo, Kim, streaming-snapshot — via
+//! `Engine::from_config`, then prints a comparison table built from
+//! the uniform `TrainReport` fields. No per-method code anywhere:
+//! adding a trainer to `engine::trainer_for` would add a row here
+//! without touching this file.
+//!
+//! Run with: `cargo run --release --example unified_training`
+
+use fastsvdd::config::{Method, RunConfig};
+use fastsvdd::data::{banana::Banana, Generator};
+use fastsvdd::engine::Engine;
+use fastsvdd::util::tables::{f, i, Table};
+
+fn main() {
+    let rows = 6000;
+    let base = RunConfig {
+        dataset: "banana".into(),
+        rows,
+        bandwidth: 0.35,
+        outlier_fraction: 0.001,
+        sample_size: 6,
+        seed: 7,
+        ..RunConfig::default()
+    };
+    let data = Banana::default().generate(rows, base.seed);
+
+    let mut table = Table::new(
+        format!("Unified training engine: banana, {rows} rows"),
+        &["method", "time_s", "R^2", "#SV", "iters", "conv", "smo_iters", "notes"],
+    );
+    for method in Method::ALL {
+        let cfg = RunConfig { method, ..base.clone() };
+        let engine = Engine::from_config(&cfg).expect("config must validate");
+        let report = engine.train(&data).expect("training must succeed");
+        table.row(vec![
+            method.name().into(),
+            f(report.seconds, 3),
+            f(report.model.r2(), 4),
+            i(report.model.num_sv()),
+            i(report.iterations),
+            report.converged.to_string(),
+            i(report.solver.smo_iterations),
+            report.extras_line(),
+        ]);
+    }
+    println!("{}", table.render());
+    println!(
+        "All methods agree on the description up to sampling noise: \
+         the paper's point, now one trait away."
+    );
+}

@@ -1,18 +1,30 @@
 //! Ablation: the paper's method vs the two prior sampling baselines it
-//! criticizes (section III) and the full method, on the same data —
-//! time, quality, and the structural costs (scoring passes / rows
-//! touched) that motivate the paper's design.
+//! criticizes (section III), the full method, and the streaming
+//! snapshot, on the same data — time, quality, and the structural
+//! costs (scoring passes / rows touched) that motivate the paper's
+//! design. Every method runs through the unified `Engine` facade, so
+//! this harness iterates trainers generically instead of special-casing
+//! each entry point.
 //!
 //! Also ablates the paper's design choices: sampling WITHOUT the master
 //! set union (naive resampling) and convergence WITHOUT the center
 //! criterion (R^2 only).
 
-use fastsvdd::baselines::{train_full, train_kim, train_luo, KimConfig, LuoConfig};
 use fastsvdd::bench::{emit, paper, scaled};
+use fastsvdd::config::Method;
+use fastsvdd::engine::Engine;
 use fastsvdd::sampling::{SamplingConfig, SamplingTrainer};
 use fastsvdd::svdd::trainer::train;
 use fastsvdd::util::tables::{f, i, Table};
 use fastsvdd::util::timer::Stopwatch;
+
+const METHODS: [Method; 5] = [
+    Method::Full,
+    Method::Sampling,
+    Method::Luo,
+    Method::Kim,
+    Method::Streaming,
+];
 
 fn main() {
     for d in [paper::BANANA, paper::TWO_DONUT] {
@@ -24,59 +36,35 @@ fn main() {
             &["method", "time_s", "R^2", "#SV", "notes"],
         );
 
-        let sw = Stopwatch::start();
-        let full = train_full(&data, &params).unwrap();
-        t.row(vec![
-            "full".into(),
-            f(sw.elapsed_secs(), 3),
-            f(full.model.r2(), 4),
-            i(full.model.num_sv()),
-            "all rows, one solve".into(),
-        ]);
-
-        let cfg = SamplingConfig { sample_size: d.sample_size, ..Default::default() };
-        let sw = Stopwatch::start();
-        let samp = SamplingTrainer::new(params, cfg).train(&data, 7).unwrap();
-        t.row(vec![
-            "sampling (paper)".into(),
-            f(sw.elapsed_secs(), 3),
-            f(samp.model.r2(), 4),
-            i(samp.model.num_sv()),
-            format!("iters={} rows_touched={}", samp.iterations, samp.rows_touched),
-        ]);
-
-        let sw = Stopwatch::start();
-        let luo = train_luo(&data, &params, &LuoConfig::default()).unwrap();
-        t.row(vec![
-            "luo (decomp+comb)".into(),
-            f(sw.elapsed_secs(), 3),
-            f(luo.model.r2(), 4),
-            i(luo.model.num_sv()),
-            format!("{} full-data scoring passes", luo.scoring_passes),
-        ]);
-
-        let sw = Stopwatch::start();
-        let kim = train_kim(&data, &params, &KimConfig::default()).unwrap();
-        t.row(vec![
-            "kim (k-means)".into(),
-            f(sw.elapsed_secs(), 3),
-            f(kim.model.r2(), 4),
-            i(kim.model.num_sv()),
-            format!("pooled_svs={}, touches every row", kim.pooled_svs),
-        ]);
+        // one loop over every registered method — the Engine facade
+        // makes them interchangeable
+        let mut sampling_budget = rows;
+        for method in METHODS {
+            let cfg = d.run_config(method, rows, 7);
+            let report = Engine::from_config(&cfg).unwrap().train(&data).unwrap();
+            if method == Method::Sampling {
+                sampling_budget = report.rows_touched.min(rows);
+            }
+            t.row(vec![
+                method.name().into(),
+                f(report.seconds, 3),
+                f(report.model.r2(), 4),
+                i(report.model.num_sv()),
+                report.extras_line(),
+            ]);
+        }
 
         // --- ablation: no master-set union (train on one big sample of
         // equal total budget instead of iterating) ---
-        let budget = samp.rows_touched.min(rows);
         let sw = Stopwatch::start();
-        let idx: Vec<usize> = (0..budget).collect();
+        let idx: Vec<usize> = (0..sampling_budget).collect();
         let one_shot = train(&data.gather(&idx), &params).unwrap();
         t.row(vec![
             "one big sample (no iteration)".into(),
             f(sw.elapsed_secs(), 3),
             f(one_shot.r2(), 4),
             i(one_shot.num_sv()),
-            format!("single solve on {budget} rows (same row budget)"),
+            format!("single solve on {sampling_budget} rows (same row budget)"),
         ]);
 
         // --- ablation: R^2-only convergence (paper notes it often

@@ -11,7 +11,7 @@
 
 use crate::error::Result;
 use crate::svdd::model::SvddModel;
-use crate::svdd::trainer::{train, SvddParams};
+use crate::svdd::trainer::{train_detailed, SolverStats, SvddParams};
 use crate::util::matrix::Matrix;
 
 use super::kmeans::kmeans;
@@ -36,12 +36,21 @@ pub struct KimOutcome {
     pub model: SvddModel,
     /// SVs pooled from the per-cluster solves (before the final solve).
     pub pooled_svs: usize,
+    /// SMO solves issued (one per non-empty cluster + the final solve).
+    pub solver_calls: usize,
+    /// Observations fed to solvers (every row once + the pooled SVs).
+    pub rows_touched: usize,
+    /// Aggregated SMO telemetry across every solve of the run.
+    pub solver: SolverStats,
 }
 
 /// Run the Kim et al. baseline.
 pub fn train_kim(data: &Matrix, params: &SvddParams, cfg: &KimConfig) -> Result<KimOutcome> {
     let km = kmeans(data, cfg.clusters, cfg.kmeans_iters, cfg.seed);
     let k = km.centroids.rows();
+    let mut solver = SolverStats::default();
+    let mut solver_calls = 0usize;
+    let mut rows_touched = 0usize;
     let mut pooled = Matrix::zeros(0, data.cols());
     for c in 0..k {
         let idx: Vec<usize> = (0..data.rows()).filter(|&i| km.assignment[i] == c).collect();
@@ -49,13 +58,19 @@ pub fn train_kim(data: &Matrix, params: &SvddParams, cfg: &KimConfig) -> Result<
             continue;
         }
         let chunk = data.gather(&idx);
-        let model = train(&chunk, params)?;
+        let (model, stats) = train_detailed(&chunk, params, None)?;
+        solver.absorb(&stats);
+        solver_calls += 1;
+        rows_touched += chunk.rows();
         pooled = pooled.vstack(model.support_vectors())?;
     }
     let pooled = pooled.dedup_rows();
     let pooled_svs = pooled.rows();
-    let model = train(&pooled, params)?;
-    Ok(KimOutcome { model, pooled_svs })
+    let (model, stats) = train_detailed(&pooled, params, None)?;
+    solver.absorb(&stats);
+    solver_calls += 1;
+    rows_touched += pooled.rows();
+    Ok(KimOutcome { model, pooled_svs, solver_calls, rows_touched, solver })
 }
 
 #[cfg(test)]
@@ -67,18 +82,23 @@ mod tests {
     fn kim_close_to_full_on_two_donut() {
         let data = TwoDonut::default().generate(3000, 4);
         let params = SvddParams::gaussian(0.4, 0.001);
-        let full = train(&data, &params).unwrap();
+        let full = crate::svdd::train(&data, &params).unwrap();
         let kim = train_kim(&data, &params, &KimConfig::default()).unwrap();
         let rel = (kim.model.r2() - full.r2()).abs() / full.r2();
         assert!(rel < 0.1, "R^2 gap {rel}");
         assert!(kim.pooled_svs >= kim.model.num_sv());
+        // telemetry: every row fed to exactly one cluster solve, the
+        // pooled SVs to the final one
+        assert_eq!(kim.rows_touched, data.rows() + kim.pooled_svs);
+        assert!(kim.solver_calls >= 2);
+        assert!(kim.solver.smo_iterations > 0);
     }
 
     #[test]
     fn single_cluster_equals_full() {
         let data = TwoDonut::default().generate(400, 5);
         let params = SvddParams::gaussian(0.4, 0.01);
-        let full = train(&data, &params).unwrap();
+        let full = crate::svdd::train(&data, &params).unwrap();
         let cfg = KimConfig { clusters: 1, ..Default::default() };
         let kim = train_kim(&data, &params, &cfg).unwrap();
         // one cluster -> same SV pool modulo the double solve

@@ -10,7 +10,7 @@
 
 use crate::error::Result;
 use crate::svdd::model::SvddModel;
-use crate::svdd::trainer::{train, SvddParams};
+use crate::svdd::trainer::{train_detailed, SolverStats, SvddParams};
 use crate::util::matrix::Matrix;
 
 #[derive(Clone, Copy, Debug)]
@@ -39,11 +39,23 @@ pub struct LuoOutcome {
     /// Full-data scoring passes performed (== rounds; the method's
     /// structural cost).
     pub scoring_passes: usize,
+    /// Whether the combination emptied the violator set (vs hitting
+    /// `max_rounds` with violators left).
+    pub converged: bool,
+    /// SMO solves issued (decomposition chunks + combination rounds).
+    pub solver_calls: usize,
+    /// Observations fed to solvers across all solves.
+    pub rows_touched: usize,
+    /// Aggregated SMO telemetry across every solve of the run.
+    pub solver: SolverStats,
 }
 
 /// Run the Luo et al. baseline.
 pub fn train_luo(data: &Matrix, params: &SvddParams, cfg: &LuoConfig) -> Result<LuoOutcome> {
     let n = data.rows();
+    let mut solver = SolverStats::default();
+    let mut solver_calls = 0usize;
+    let mut rows_touched = 0usize;
     // --- decomposition ---
     let mut working: Vec<usize> = Vec::new();
     let mut start = 0;
@@ -51,7 +63,10 @@ pub fn train_luo(data: &Matrix, params: &SvddParams, cfg: &LuoConfig) -> Result<
         let end = (start + cfg.chunk).min(n);
         let idx: Vec<usize> = (start..end).collect();
         let chunk = data.gather(&idx);
-        let model = train(&chunk, params)?;
+        let (model, stats) = train_detailed(&chunk, params, None)?;
+        solver.absorb(&stats);
+        solver_calls += 1;
+        rows_touched += chunk.rows();
         // recover the chunk-local SV indices by re-scoring alphas: we
         // know SVs are exact rows of the chunk, so match by position.
         // (train() gathers rows in order, so match sequentially.)
@@ -71,7 +86,12 @@ pub fn train_luo(data: &Matrix, params: &SvddParams, cfg: &LuoConfig) -> Result<
 
     // --- combination ---
     let mut rounds = 0;
-    let mut model = train(&data.gather(&working), params)?;
+    let mut converged = false;
+    let ws = data.gather(&working);
+    let (mut model, stats) = train_detailed(&ws, params, None)?;
+    solver.absorb(&stats);
+    solver_calls += 1;
+    rows_touched += ws.rows();
     for _ in 0..cfg.max_rounds {
         rounds += 1;
         // the full-data scoring pass the paper's method avoids — run it
@@ -89,16 +109,30 @@ pub fn train_luo(data: &Matrix, params: &SvddParams, cfg: &LuoConfig) -> Result<
             }
         }
         if violators.is_empty() {
+            converged = true;
             break;
         }
         violators.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
         for (_, i) in violators.into_iter().take(cfg.add_per_round) {
             working.push(i);
         }
-        model = train(&data.gather(&working), params)?;
+        let ws = data.gather(&working);
+        let (m, stats) = train_detailed(&ws, params, None)?;
+        solver.absorb(&stats);
+        solver_calls += 1;
+        rows_touched += ws.rows();
+        model = m;
     }
 
-    Ok(LuoOutcome { model, rounds, scoring_passes: rounds })
+    Ok(LuoOutcome {
+        model,
+        rounds,
+        scoring_passes: rounds,
+        converged,
+        solver_calls,
+        rows_touched,
+        solver,
+    })
 }
 
 #[cfg(test)]
@@ -110,12 +144,18 @@ mod tests {
     fn luo_close_to_full_on_banana() {
         let data = Banana::default().generate(2000, 8);
         let params = SvddParams::gaussian(0.35, 0.001);
-        let full = train(&data, &params).unwrap();
+        let full = crate::svdd::train(&data, &params).unwrap();
         let luo = train_luo(&data, &params, &LuoConfig::default()).unwrap();
         let rel = (luo.model.r2() - full.r2()).abs() / full.r2();
         assert!(rel < 0.05, "R^2 gap {rel}");
         assert!(luo.rounds >= 1);
         assert_eq!(luo.rounds, luo.scoring_passes);
+        // telemetry: chunk solves + initial working-set solve + one per round
+        let chunks = (0..data.rows()).step_by(LuoConfig::default().chunk).count();
+        assert_eq!(luo.solver_calls, chunks + 1 + (luo.rounds - usize::from(luo.converged)));
+        assert!(luo.rows_touched >= data.rows());
+        assert!(luo.solver.smo_iterations > 0);
+        assert!(luo.solver.gap.is_finite());
     }
 
     #[test]

@@ -3,6 +3,7 @@
 //! baseline lands near the paper's Table I (R^2, #SV), plus the paper's
 //! reported values for side-by-side comparison in the bench output.
 
+use crate::config::{Method, RunConfig};
 use crate::data::shape_by_name;
 use crate::svdd::trainer::SvddParams;
 use crate::util::matrix::Matrix;
@@ -81,6 +82,23 @@ impl PaperDataset {
         SvddParams::gaussian(self.bw, self.f)
     }
 
+    /// A [`RunConfig`] for training this dataset with `method` — the
+    /// benches' uniform entry into [`crate::engine::Engine`], so a
+    /// harness iterates methods generically instead of calling each
+    /// method's own function.
+    pub fn run_config(&self, method: Method, rows: usize, seed: u64) -> RunConfig {
+        RunConfig {
+            dataset: self.name.into(),
+            rows,
+            bandwidth: self.bw,
+            outlier_fraction: self.f,
+            method,
+            sample_size: self.sample_size,
+            seed,
+            ..RunConfig::default()
+        }
+    }
+
     pub fn generate(&self, rows: usize, seed: u64) -> Matrix {
         shape_by_name(self.name)
             .expect("paper dataset name must resolve")
@@ -114,5 +132,17 @@ mod tests {
     fn scaled_full_rows_capped() {
         assert!(TWO_DONUT.full_rows_scaled(200_000) <= 200_000);
         assert!(BANANA.full_rows_scaled(200_000) <= 11_016);
+    }
+
+    #[test]
+    fn run_config_valid_for_every_dataset_and_method() {
+        for d in ALL {
+            for m in Method::ALL {
+                let cfg = d.run_config(m, 1000, 7);
+                cfg.validate().unwrap_or_else(|e| panic!("{}/{m}: {e}", d.name));
+                assert_eq!(cfg.method, m);
+                assert_eq!(cfg.sample_size, d.sample_size);
+            }
+        }
     }
 }

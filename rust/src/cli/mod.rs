@@ -126,7 +126,9 @@ USAGE:
     fastsvdd <COMMAND> [OPTIONS]
 
 COMMANDS:
-    train        Train a model (sampling | full | luo | kim | distributed)
+    train        Train a model (sampling | full | luo | kim | distributed |
+                 streaming) — every method runs through the unified
+                 training engine
     score        Score data against a saved model
     grid         Score a 200x200 grid, write a PGM + agreement stats
     worker       Run a TCP worker daemon for distributed training
@@ -141,7 +143,8 @@ COMMON OPTIONS (train):
     --config <file.json>      load a RunConfig (CLI overrides apply on top)
     --data <name>             banana | star | two-donut | shuttle | tennessee
     --rows <n>                training rows to generate
-    --method <m>              sampling | full | luo | kim | distributed
+    --method <m>              sampling | full | luo | kim | distributed |
+                              streaming (windowed snapshot)
     --bw <s>                  Gaussian bandwidth
     --f <frac>                expected outlier fraction
     --sample-size <n>         Algorithm-1 sample size
@@ -175,7 +178,9 @@ COMMON OPTIONS (train):
 
 score:
     --model <model.json> --data <name> --rows <n> [--xla] [--artifacts <dir>]
-    [--threads auto|n]
+    [--threads auto|n] [--config <file.json>]
+    (data/rows/seed/scorer default to the RunConfig defaults, so score
+    and train share one config file)
 
 worker:
     --listen <addr:port>

@@ -3,8 +3,10 @@
 //! overrides applied on top. This is the "real config system" the
 //! launcher (`fastsvdd` binary) consumes.
 
+use std::fmt;
 use std::path::Path;
 
+use crate::cli::Args;
 use crate::error::{Error, Result};
 use crate::sampling::SamplingConfig;
 use crate::svdd::trainer::SvddParams;
@@ -13,7 +15,10 @@ use crate::util::json::Json;
 
 pub use crate::parallel::{ParallelismConfig, ThreadCount};
 
-/// Which training algorithm to run.
+/// Which training algorithm to run. Every variant is served by a
+/// [`crate::engine::Trainer`] registered in
+/// [`crate::engine::trainer_for`], so consumers construct and run all
+/// methods uniformly through [`crate::engine::Engine`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Method {
     /// The paper's Algorithm 1.
@@ -26,9 +31,25 @@ pub enum Method {
     Luo,
     /// Kim et al. k-means baseline.
     Kim,
+    /// Streaming snapshot: feed the data through
+    /// [`crate::sampling::StreamingSvdd`] window by window and take the
+    /// final master-set model.
+    Streaming,
 }
 
 impl Method {
+    /// Every method, in the order `fastsvdd train --method` documents
+    /// them. Exhaustive by construction: adding a variant without
+    /// extending this list breaks the parse↔name round-trip test.
+    pub const ALL: [Method; 6] = [
+        Method::Sampling,
+        Method::Full,
+        Method::Distributed,
+        Method::Luo,
+        Method::Kim,
+        Method::Streaming,
+    ];
+
     pub fn parse(s: &str) -> Result<Method> {
         Ok(match s {
             "sampling" => Method::Sampling,
@@ -36,8 +57,27 @@ impl Method {
             "distributed" => Method::Distributed,
             "luo" => Method::Luo,
             "kim" => Method::Kim,
+            "streaming" => Method::Streaming,
             other => return Err(Error::Config(format!("unknown method '{other}'"))),
         })
+    }
+
+    /// The canonical config/CLI spelling ([`Method::parse`]'s inverse).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Sampling => "sampling",
+            Method::Full => "full",
+            Method::Distributed => "distributed",
+            Method::Luo => "luo",
+            Method::Kim => "kim",
+            Method::Streaming => "streaming",
+        }
+    }
+}
+
+impl fmt::Display for Method {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
     }
 }
 
@@ -138,6 +178,54 @@ impl RunConfig {
     pub fn load(path: &Path) -> Result<RunConfig> {
         let text = std::fs::read_to_string(path)?;
         Self::from_json_text(&text)
+    }
+
+    /// Load the file named by `--config` (defaults when absent) and
+    /// apply the CLI overrides on top — the shared front half of
+    /// `cmd_train`, `cmd_score` and `cmd_grid`. Options a command does
+    /// not accept are simply never present in its `args`.
+    pub fn from_args(args: &Args) -> Result<RunConfig> {
+        let mut cfg = match args.get("config") {
+            Some(path) => RunConfig::load(Path::new(path))?,
+            None => RunConfig::default(),
+        };
+        if let Some(v) = args.get("data") {
+            cfg.dataset = v.to_string();
+        }
+        if let Some(v) = args.get("method") {
+            cfg.method = Method::parse(v)?;
+        }
+        cfg.rows = args.get_usize("rows", cfg.rows)?;
+        cfg.bandwidth = args.get_f64("bw", cfg.bandwidth)?;
+        cfg.outlier_fraction = args.get_f64("f", cfg.outlier_fraction)?;
+        cfg.sample_size = args.get_usize("sample-size", cfg.sample_size)?;
+        cfg.max_iter = args.get_usize("max-iter", cfg.max_iter)?;
+        cfg.candidates_per_iter = args.get_usize("candidates", cfg.candidates_per_iter)?;
+        cfg.workers = args.get_usize("workers", cfg.workers)?;
+        if args.get("shuffle-seed").is_some() {
+            cfg.shuffle_seed = Some(args.get_u64("shuffle-seed", 0)?);
+        }
+        if let Some(v) = args.get("threads") {
+            cfg.threads = ThreadCount::parse(v)?;
+        }
+        cfg.seed = args.get_u64("seed", cfg.seed)?;
+        if args.flag("warm-alpha") {
+            cfg.warm_alpha = true;
+        }
+        if let Some(v) = args.get("wss") {
+            cfg.wss = Wss::parse(v)?;
+        }
+        if args.flag("no-shrinking") {
+            cfg.shrinking = false;
+        }
+        if args.flag("xla") {
+            cfg.scorer = "xla".into();
+        }
+        if let Some(v) = args.get("artifacts") {
+            cfg.artifact_dir = v.to_string();
+        }
+        cfg.validate()?;
+        Ok(cfg)
     }
 
     pub fn from_json_text(text: &str) -> Result<RunConfig> {
@@ -340,9 +428,53 @@ mod tests {
             ("distributed", Method::Distributed),
             ("luo", Method::Luo),
             ("kim", Method::Kim),
+            ("streaming", Method::Streaming),
         ] {
             assert_eq!(Method::parse(s).unwrap(), m);
         }
+        assert!(Method::parse("magic").is_err());
+    }
+
+    #[test]
+    fn method_name_parse_roundtrip_exhaustive() {
+        // exhaustiveness: Method::ALL and Method::name() both match on
+        // every variant, so a new variant that misses either fails to
+        // compile or fails here
+        let mut seen = Vec::new();
+        for m in Method::ALL {
+            assert_eq!(Method::parse(m.name()).unwrap(), m, "parse != name for {m:?}");
+            assert_eq!(m.to_string(), m.name(), "Display != name for {m:?}");
+            assert!(!seen.contains(&m.name()), "duplicate name '{}'", m.name());
+            seen.push(m.name());
+        }
+        assert_eq!(seen.len(), Method::ALL.len());
+    }
+
+    #[test]
+    fn from_args_applies_overrides_on_defaults() {
+        let argv: Vec<String> = [
+            "train", "--data", "star", "--method", "streaming", "--rows", "500",
+            "--bw", "0.2", "--seed", "99", "--threads", "2", "--xla",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let cfg = RunConfig::from_args(&Args::parse(&argv).unwrap()).unwrap();
+        assert_eq!(cfg.dataset, "star");
+        assert_eq!(cfg.method, Method::Streaming);
+        assert_eq!(cfg.rows, 500);
+        assert_eq!(cfg.bandwidth, 0.2);
+        assert_eq!(cfg.seed, 99);
+        assert_eq!(cfg.threads, ThreadCount::Fixed(2));
+        assert_eq!(cfg.scorer, "xla");
+        // untouched keys keep defaults
+        assert_eq!(cfg.sample_size, 6);
+        // overrides are validated like file values
+        let bad: Vec<String> = ["train", "--bw", "-1"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        assert!(RunConfig::from_args(&Args::parse(&bad).unwrap()).is_err());
     }
 
     #[test]

@@ -4,7 +4,7 @@
 use crate::error::{Error, Result};
 use crate::sampling::SamplingConfig;
 use crate::svdd::model::SvddModel;
-use crate::svdd::trainer::{train, SvddParams};
+use crate::svdd::trainer::{train_detailed, SolverStats, SvddParams};
 use crate::util::matrix::Matrix;
 use crate::util::rng::Xoshiro256;
 
@@ -51,6 +51,10 @@ pub struct DistributedOutcome {
     pub reports: Vec<WorkerReport>,
     /// Rows in the union set S' the controller solved.
     pub union_rows: usize,
+    /// SMO telemetry of the controller's final combining solve (the
+    /// worker-side solves stay on the workers; their iteration counts
+    /// travel in [`WorkerReport`]).
+    pub solver: SolverStats,
 }
 
 /// Split `data` into `p` contiguous shards of near-equal size.
@@ -96,6 +100,14 @@ pub fn combine(
     sv_sets: Vec<Matrix>,
     params: &SvddParams,
 ) -> Result<(SvddModel, usize)> {
+    combine_detailed(sv_sets, params).map(|(model, rows, _)| (model, rows))
+}
+
+/// [`combine`] with the final solve's SMO telemetry.
+pub fn combine_detailed(
+    sv_sets: Vec<Matrix>,
+    params: &SvddParams,
+) -> Result<(SvddModel, usize, SolverStats)> {
     let mut union: Option<Matrix> = None;
     for sv in sv_sets {
         union = Some(match union {
@@ -107,8 +119,8 @@ pub fn combine(
         .ok_or_else(|| Error::Distributed("no worker SV sets to combine".into()))?
         .dedup_rows();
     let rows = union.rows();
-    let model = train(&union, params)?;
-    Ok((model, rows))
+    let (model, stats) = train_detailed(&union, params, None)?;
+    Ok((model, rows, stats))
 }
 
 #[cfg(test)]

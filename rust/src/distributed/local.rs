@@ -3,15 +3,16 @@
 //! machine execution) and the reference the TCP transport is tested
 //! against.
 
+use crate::config::Method;
+use crate::engine::{self, TrainContext, Trainer};
 use crate::error::Result;
-use crate::sampling::SamplingTrainer;
 use crate::svdd::trainer::SvddParams;
 use crate::util::matrix::Matrix;
 use crate::util::rng::Xoshiro256;
 use rand_core::RngCore;
 
 use super::controller::{
-    combine, shard_with_shuffle, DistributedConfig, DistributedOutcome, WorkerReport,
+    combine_detailed, shard_with_shuffle, DistributedConfig, DistributedOutcome, WorkerReport,
 };
 
 /// Run the paper's distributed scheme with in-process workers.
@@ -30,6 +31,12 @@ pub fn train_local_cluster(
         })
         .collect();
 
+    // every worker runs the sampling method through the same Trainer
+    // registry entry all other consumers use — the shard trainer is a
+    // generic `&dyn Trainer`, so a future per-shard method swap is a
+    // registry lookup, not a new code path
+    let shard_trainer = engine::trainer_for(Method::Sampling);
+    let shard_trainer: &dyn Trainer = shard_trainer.as_ref();
     let results: Vec<Result<(Matrix, WorkerReport)>> = std::thread::scope(|scope| {
         let handles: Vec<_> = shards
             .iter()
@@ -39,7 +46,8 @@ pub fn train_local_cluster(
                 let sampling = cfg.sampling;
                 let seed = worker_seeds[i];
                 scope.spawn(move || {
-                    let out = SamplingTrainer::new(params, sampling).train(shard_data, seed)?;
+                    let ctx = TrainContext::new(params, sampling, seed);
+                    let out = shard_trainer.train(&ctx, shard_data)?;
                     let report = WorkerReport {
                         worker: i,
                         shard_rows: shard_data.rows(),
@@ -61,8 +69,8 @@ pub fn train_local_cluster(
         sv_sets.push(sv);
         reports.push(report);
     }
-    let (model, union_rows) = combine(sv_sets, params)?;
-    Ok(DistributedOutcome { model, reports, union_rows })
+    let (model, union_rows, solver) = combine_detailed(sv_sets, params)?;
+    Ok(DistributedOutcome { model, reports, union_rows, solver })
 }
 
 #[cfg(test)]

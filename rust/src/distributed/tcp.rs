@@ -16,7 +16,7 @@ use crate::util::rng::Xoshiro256;
 use rand_core::RngCore;
 
 use super::controller::{
-    combine, shard_with_shuffle, DistributedConfig, DistributedOutcome, WorkerReport,
+    combine_detailed, shard_with_shuffle, DistributedConfig, DistributedOutcome, WorkerReport,
 };
 use super::message::{negotiate, Message, PROTOCOL_VERSION};
 
@@ -195,8 +195,8 @@ pub fn train_tcp_cluster(
         sv_sets.push(sv);
         reports.push(report);
     }
-    let (model, union_rows) = combine(sv_sets, params)?;
-    Ok(DistributedOutcome { model, reports, union_rows })
+    let (model, union_rows, solver) = combine_detailed(sv_sets, params)?;
+    Ok(DistributedOutcome { model, reports, union_rows, solver })
 }
 
 #[cfg(test)]

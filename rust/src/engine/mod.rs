@@ -1,0 +1,395 @@
+//! Unified training engine: one [`Trainer`] trait + [`Engine`] facade
+//! over every training method.
+//!
+//! The paper's core claim is that iterative sampling is *one of
+//! several interchangeable ways* to obtain a data description. This
+//! module makes that interchangeability literal: every method —
+//! [`Method::Full`], [`Method::Sampling`] (including
+//! `candidates_per_iter` and `warm_alpha`), [`Method::Distributed`],
+//! [`Method::Luo`], [`Method::Kim`] and the streaming snapshot
+//! [`Method::Streaming`] — implements the same [`Trainer`] trait,
+//! consumes the same [`TrainContext`] and produces the same
+//! [`TrainReport`], so the launcher, the lifecycle driver, grid
+//! search, the bench harnesses and the distributed controller run all
+//! of them through one code path.
+//!
+//! - [`TrainContext`] carries everything a trainer may need besides
+//!   the data: kernel/solver parameters, the Algorithm-1 sampling
+//!   knobs, the RNG seed, an optional explicit [`Pool`], an optional
+//!   [`GramBackend`] for the small sample/union solves, an optional
+//!   warm-start model, a [`Metrics`] sink, and the per-method configs
+//!   (Luo, Kim, distributed, streaming). Trainers read the fields they
+//!   understand and ignore the rest, so one context drives any method.
+//! - [`TrainReport`] carries the model plus the unified telemetry:
+//!   wall time, outer iterations, convergence, SMO solve count,
+//!   rows touched, aggregated [`SolverStats`], the Fig-7 trace, and
+//!   method-specific extras as ordered key/value pairs.
+//! - [`trainer_for`] is the `Method`-keyed registry — the single
+//!   `match` over methods in the whole crate. Adding a trainer is a
+//!   one-file change: implement [`Trainer`], register it here.
+//! - [`Engine`] is the config-driven facade:
+//!   `Engine::from_config(&cfg)?.train(&data)?`.
+//!
+//! Seeded trajectories are untouched: each built-in trainer delegates
+//! to the pre-existing entry point (`SamplingTrainer`, `train_full`,
+//! `train_luo`, `train_kim`, `train_local_cluster`, `StreamingSvdd`),
+//! so `Engine` output is byte-identical to the legacy call — pinned
+//! per method by `tests/pipeline_integration.rs`, including the
+//! `--wss legacy` golden path and the K=1 sampling stream.
+
+pub mod trainers;
+
+use std::net::SocketAddr;
+
+use crate::baselines::{KimConfig, LuoConfig};
+use crate::config::{Method, RunConfig};
+use crate::error::Result;
+use crate::metrics::Metrics;
+use crate::parallel::Pool;
+use crate::sampling::{GramBackend, SamplingConfig, StreamingConfig, TracePoint};
+use crate::svdd::model::SvddModel;
+use crate::svdd::trainer::{SolverStats, SvddParams};
+use crate::util::matrix::Matrix;
+use crate::util::timer::Stopwatch;
+
+/// Everything a [`Trainer`] may need besides the data. One context
+/// drives any method: trainers read the fields they understand and
+/// ignore the rest (e.g. only the sampling trainer consults
+/// [`TrainContext::backend`]; only the distributed trainer consults
+/// [`TrainContext::workers`]).
+#[derive(Clone)]
+pub struct TrainContext<'a> {
+    /// Kernel + SMO parameters shared by every method.
+    pub params: SvddParams,
+    /// Algorithm-1 knobs (sample size, tolerances, candidates,
+    /// `warm_alpha`, trace recording). The distributed trainer hands
+    /// these to its workers; the streaming trainer samples per window.
+    pub sampling: SamplingConfig,
+    /// RNG seed for the run.
+    pub seed: u64,
+    /// Explicit pool for candidate solves (`None` = the global pool).
+    pub pool: Option<Pool>,
+    /// Gram backend for the small sample/union solves (XLA artifact or
+    /// [`crate::parallel::PooledGram`]); `None` = the lazy native path.
+    pub backend: Option<&'a dyn GramBackend>,
+    /// Warm-start model: the sampling trainer seeds `SV*` from its
+    /// support vectors ([`crate::sampling::SamplingTrainer::train_warm`]).
+    pub warm_start: Option<&'a SvddModel>,
+    /// Metrics sink: [`run`] records every report's uniform telemetry
+    /// here ([`Metrics::record_training`]).
+    pub metrics: Option<&'a Metrics>,
+    /// Luo et al. baseline knobs.
+    pub luo: LuoConfig,
+    /// Kim et al. baseline knobs. Note `KimConfig::seed` is its own
+    /// field (historically fixed, independent of [`TrainContext::seed`])
+    /// so seeded legacy runs stay byte-for-byte reproducible.
+    pub kim: KimConfig,
+    /// Distributed worker count `p`.
+    pub workers: usize,
+    /// Seeded pre-shuffle before distributed sharding.
+    pub shuffle_seed: Option<u64>,
+    /// TCP worker addresses; empty = in-process local cluster.
+    pub addrs: Vec<SocketAddr>,
+    /// Streaming-snapshot knobs (window, drift monitor).
+    pub streaming: StreamingConfig,
+}
+
+impl TrainContext<'static> {
+    /// A context with library defaults for everything but the three
+    /// universal inputs.
+    pub fn new(params: SvddParams, sampling: SamplingConfig, seed: u64) -> TrainContext<'static> {
+        TrainContext {
+            params,
+            sampling,
+            seed,
+            pool: None,
+            backend: None,
+            warm_start: None,
+            metrics: None,
+            luo: LuoConfig::default(),
+            kim: KimConfig::default(),
+            workers: 4,
+            shuffle_seed: None,
+            addrs: Vec::new(),
+            streaming: StreamingConfig { sample_size: sampling.sample_size, ..Default::default() },
+        }
+    }
+
+    /// The context a [`RunConfig`] describes (what `Engine::train`
+    /// uses). Method-specific configs without `RunConfig` keys (Luo,
+    /// Kim, streaming window) keep their historical defaults.
+    pub fn from_config(cfg: &RunConfig) -> TrainContext<'static> {
+        let mut ctx = TrainContext::new(cfg.params(), cfg.sampling(), cfg.seed);
+        ctx.workers = cfg.workers;
+        ctx.shuffle_seed = cfg.shuffle_seed;
+        ctx
+    }
+}
+
+impl<'a> TrainContext<'a> {
+    /// Route sample/union gram computations through a backend.
+    pub fn with_backend(mut self, backend: &'a dyn GramBackend) -> TrainContext<'a> {
+        self.backend = Some(backend);
+        self
+    }
+
+    /// Seed the run from a previously trained model.
+    pub fn with_warm_start(mut self, model: &'a SvddModel) -> TrainContext<'a> {
+        self.warm_start = Some(model);
+        self
+    }
+
+    /// Record the run's telemetry into a metrics registry.
+    pub fn with_metrics(mut self, metrics: &'a Metrics) -> TrainContext<'a> {
+        self.metrics = Some(metrics);
+        self
+    }
+
+    /// Solve candidates on an explicit pool instead of the global one.
+    pub fn with_pool(mut self, pool: Pool) -> TrainContext<'a> {
+        self.pool = Some(pool);
+        self
+    }
+}
+
+/// What any training method produces: the model plus uniform
+/// telemetry, so every consumer (CLI `-v` block, registry metadata,
+/// metrics, bench tables) treats all methods identically.
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    /// Which method produced this report.
+    pub method: Method,
+    pub model: SvddModel,
+    /// Wall time of the whole train call (stamped by [`run`]).
+    pub seconds: f64,
+    /// Outer iterations of the method: Algorithm-1 iterations,
+    /// Luo combination rounds, streaming window updates, worker
+    /// iteration total (distributed), 1 for one-shot methods.
+    pub iterations: usize,
+    /// Whether the method's own stopping criterion fired (one-shot
+    /// methods report `true`).
+    pub converged: bool,
+    /// SMO solves issued. For the distributed method this counts the
+    /// controller's combining solve only — worker solves stay remote.
+    pub solver_calls: usize,
+    /// Observations fed to solvers (the "fraction of the data the
+    /// method ever looks at").
+    pub rows_touched: usize,
+    /// Whether the run was seeded from a previous model.
+    pub warm_start: bool,
+    /// Algorithm-1 sample size `n` (0 when not sample-trained) — feeds
+    /// [`crate::registry::VersionMeta`].
+    pub sample_size: usize,
+    /// Aggregated SMO telemetry across every solve of the run.
+    pub solver: SolverStats,
+    /// Per-iteration trace (Fig 7) when the method records one.
+    pub trace: Vec<TracePoint>,
+    /// Method-specific extras as ordered `key=value` pairs (e.g.
+    /// `rounds` for Luo, `pooled_svs` for Kim, `union_rows` for
+    /// distributed).
+    pub extras: Vec<(String, String)>,
+    /// Free-form progress lines (per-worker reports, candidate mode),
+    /// printed indented by the CLI.
+    pub notes: Vec<String>,
+}
+
+impl TrainReport {
+    /// The extras rendered as a `k1=v1 k2=v2` line for log output.
+    pub fn extras_line(&self) -> String {
+        self.extras
+            .iter()
+            .map(|(k, v)| format!("{k}={v}"))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+
+    /// Record the uniform telemetry into a metrics registry.
+    pub fn record_to(&self, metrics: &Metrics) {
+        metrics.record_training(self.solver_calls, self.iterations, &self.solver);
+    }
+}
+
+/// A training method. Implementations are pure delegations to the
+/// method's algorithm; cross-cutting concerns (timing, metrics) live
+/// in [`run`].
+pub trait Trainer: Send + Sync {
+    /// The [`Method`] this trainer serves.
+    fn method(&self) -> Method;
+
+    /// Train a model on `data` under `ctx`.
+    fn train(&self, ctx: &TrainContext<'_>, data: &Matrix) -> Result<TrainReport>;
+}
+
+/// The `Method`-keyed trainer registry — the single per-method
+/// dispatch in the crate. To add a method: add a [`Method`] variant,
+/// implement [`Trainer`] (usually in [`trainers`]), register it here;
+/// every consumer (CLI, lifecycle, benches, grid search) picks it up
+/// without changes.
+pub fn trainer_for(method: Method) -> Box<dyn Trainer> {
+    match method {
+        Method::Sampling => Box::new(trainers::Sampling),
+        Method::Full => Box::new(trainers::Full),
+        Method::Distributed => Box::new(trainers::Distributed),
+        Method::Luo => Box::new(trainers::Luo),
+        Method::Kim => Box::new(trainers::Kim),
+        Method::Streaming => Box::new(trainers::Streaming),
+    }
+}
+
+/// Run a trainer: train, stamp the wall time, and record the report
+/// into `ctx.metrics` (when attached). [`Engine::train`] and the
+/// lifecycle driver both go through here so telemetry is recorded
+/// exactly once per run.
+pub fn run(trainer: &dyn Trainer, ctx: &TrainContext<'_>, data: &Matrix) -> Result<TrainReport> {
+    let sw = Stopwatch::start();
+    let mut report = trainer.train(ctx, data)?;
+    report.seconds = sw.elapsed_secs();
+    if let Some(metrics) = ctx.metrics {
+        report.record_to(metrics);
+    }
+    Ok(report)
+}
+
+/// Config-driven facade: `Engine::from_config(&cfg)?.train(&data)?`
+/// trains with whatever method the config names.
+pub struct Engine {
+    cfg: RunConfig,
+    trainer: Box<dyn Trainer>,
+}
+
+impl Engine {
+    /// Validate the config, install its parallelism (the process-global
+    /// thread count — `RunConfig.threads` is honored whether training
+    /// starts from the CLI or from library code; last install wins) and
+    /// look up its method's trainer.
+    pub fn from_config(cfg: &RunConfig) -> Result<Engine> {
+        cfg.validate()?;
+        crate::parallel::install(cfg.parallelism());
+        Ok(Engine { cfg: cfg.clone(), trainer: trainer_for(cfg.method) })
+    }
+
+    pub fn method(&self) -> Method {
+        self.cfg.method
+    }
+
+    pub fn trainer(&self) -> &dyn Trainer {
+        self.trainer.as_ref()
+    }
+
+    /// The context [`Engine::train`] uses — take it, customize
+    /// (backend, warm start, metrics, trace recording), and pass to
+    /// [`Engine::train_with`].
+    pub fn context(&self) -> TrainContext<'static> {
+        TrainContext::from_config(&self.cfg)
+    }
+
+    /// Train on `data` with the config's own context.
+    pub fn train(&self, data: &Matrix) -> Result<TrainReport> {
+        self.train_with(&self.context(), data)
+    }
+
+    /// Train on `data` with a customized context.
+    pub fn train_with(&self, ctx: &TrainContext<'_>, data: &Matrix) -> Result<TrainReport> {
+        run(self.trainer.as_ref(), ctx, data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{banana::Banana, Generator};
+
+    fn small_cfg(method: Method) -> RunConfig {
+        RunConfig {
+            rows: 600,
+            method,
+            sample_size: 6,
+            ..RunConfig::default()
+        }
+    }
+
+    #[test]
+    fn registry_covers_every_method() {
+        for m in Method::ALL {
+            assert_eq!(trainer_for(m).method(), m, "registry mismatch for {m}");
+        }
+    }
+
+    #[test]
+    fn engine_rejects_invalid_config() {
+        let cfg = RunConfig { bandwidth: -1.0, ..RunConfig::default() };
+        assert!(Engine::from_config(&cfg).is_err());
+    }
+
+    #[test]
+    fn engine_trains_sampling_and_reports() {
+        let cfg = small_cfg(Method::Sampling);
+        let data = Banana::default().generate(cfg.rows, cfg.seed);
+        let engine = Engine::from_config(&cfg).unwrap();
+        assert_eq!(engine.method(), Method::Sampling);
+        let report = engine.train(&data).unwrap();
+        assert_eq!(report.method, Method::Sampling);
+        assert!(report.model.r2() > 0.0);
+        assert!(report.seconds > 0.0);
+        assert!(report.iterations >= 1);
+        assert!(report.solver_calls >= 1);
+        assert_eq!(report.sample_size, cfg.sample_size);
+        assert!(report.solver.smo_iterations > 0);
+        let line = report.extras_line();
+        assert!(line.contains("iterations="), "extras line: {line}");
+    }
+
+    #[test]
+    fn metrics_sink_records_for_every_local_method() {
+        let data = Banana::default().generate(400, 3);
+        for method in [Method::Full, Method::Sampling, Method::Luo, Method::Kim] {
+            let cfg = small_cfg(method);
+            let engine = Engine::from_config(&cfg).unwrap();
+            let metrics = Metrics::new();
+            let ctx = engine.context().with_metrics(&metrics);
+            let report = engine.train_with(&ctx, &data).unwrap();
+            assert!(report.model.num_sv() >= 1, "{method}: no SVs");
+            assert_eq!(
+                metrics.solver_calls.get(),
+                report.solver_calls as u64,
+                "{method}: solver_calls not recorded"
+            );
+            assert!(metrics.smo_iterations.get() > 0, "{method}: smo telemetry missing");
+        }
+    }
+
+    #[test]
+    fn streaming_snapshot_trains_and_counts_windows() {
+        let cfg = small_cfg(Method::Streaming);
+        let data = Banana::default().generate(600, 5);
+        let engine = Engine::from_config(&cfg).unwrap();
+        let report = engine.train(&data).unwrap();
+        // default window 256: 2 full windows, 88 rows left in buffer
+        assert_eq!(report.iterations, 2);
+        assert_eq!(report.rows_touched, 512);
+        assert_eq!(report.solver_calls, 4);
+        assert!(report.solver.smo_iterations > 0);
+        assert!(report.extras_line().contains("window=256"));
+    }
+
+    #[test]
+    fn streaming_snapshot_clamps_window_to_small_data() {
+        let cfg = small_cfg(Method::Streaming);
+        let data = Banana::default().generate(40, 6);
+        let report = Engine::from_config(&cfg).unwrap().train(&data).unwrap();
+        assert_eq!(report.iterations, 1);
+        assert_eq!(report.rows_touched, 40);
+    }
+
+    #[test]
+    fn warm_start_flows_through_context() {
+        let cfg = small_cfg(Method::Sampling);
+        let data = Banana::default().generate(cfg.rows, 7);
+        let engine = Engine::from_config(&cfg).unwrap();
+        let cold = engine.train(&data).unwrap();
+        assert!(!cold.warm_start);
+        let ctx = engine.context().with_warm_start(&cold.model);
+        let warm = engine.train_with(&ctx, &data).unwrap();
+        assert!(warm.warm_start);
+    }
+}

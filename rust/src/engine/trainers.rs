@@ -1,0 +1,257 @@
+//! The built-in [`Trainer`] implementations — one unit struct per
+//! [`Method`], each a pure delegation to the method's pre-existing
+//! entry point so seeded trajectories stay byte-for-byte identical to
+//! the legacy calls (pinned by `tests/pipeline_integration.rs`).
+
+use crate::baselines::{train_full, train_kim, train_luo};
+use crate::config::Method;
+use crate::distributed::tcp::train_tcp_cluster;
+use crate::distributed::{train_local_cluster, DistributedConfig};
+use crate::error::{Error, Result};
+use crate::sampling::{SamplingTrainer, StreamingSvdd};
+use crate::util::matrix::Matrix;
+use crate::util::timer::fmt_duration;
+
+use super::{TrainContext, TrainReport, Trainer};
+
+/// [`Method::Full`]: one solve over all observations (Table I).
+pub struct Full;
+
+impl Trainer for Full {
+    fn method(&self) -> Method {
+        Method::Full
+    }
+
+    fn train(&self, ctx: &TrainContext<'_>, data: &Matrix) -> Result<TrainReport> {
+        let out = train_full(data, &ctx.params)?;
+        Ok(TrainReport {
+            method: Method::Full,
+            seconds: 0.0,
+            iterations: 1,
+            converged: true,
+            solver_calls: 1,
+            rows_touched: data.rows(),
+            warm_start: false,
+            sample_size: 0,
+            solver: out.solver,
+            trace: Vec::new(),
+            extras: vec![("solve".into(), fmt_duration(out.seconds))],
+            notes: Vec::new(),
+            model: out.model,
+        })
+    }
+}
+
+/// [`Method::Sampling`]: the paper's Algorithm 1, including
+/// multi-candidate iterations, `warm_alpha` carry, gram backends and
+/// warm starts from a previous model.
+pub struct Sampling;
+
+impl Trainer for Sampling {
+    fn method(&self) -> Method {
+        Method::Sampling
+    }
+
+    fn train(&self, ctx: &TrainContext<'_>, data: &Matrix) -> Result<TrainReport> {
+        let mut trainer = SamplingTrainer::new(ctx.params, ctx.sampling);
+        if let Some(backend) = ctx.backend {
+            trainer = trainer.with_backend(backend);
+        }
+        if let Some(pool) = ctx.pool {
+            trainer = trainer.with_pool(pool);
+        }
+        let out = match ctx.warm_start {
+            Some(prev) => trainer.train_warm(data, ctx.seed, prev)?,
+            None => trainer.train(data, ctx.seed)?,
+        };
+        let mut notes = Vec::new();
+        if ctx.sampling.candidates_per_iter > 1 {
+            notes.push(format!(
+                "candidates: {} per iteration (best-R^2 promotion)",
+                ctx.sampling.candidates_per_iter
+            ));
+        }
+        Ok(TrainReport {
+            method: Method::Sampling,
+            seconds: 0.0,
+            iterations: out.iterations,
+            converged: out.converged,
+            solver_calls: out.solver_calls,
+            rows_touched: out.rows_touched,
+            warm_start: out.warm_start,
+            sample_size: ctx.sampling.sample_size,
+            solver: out.solver,
+            trace: out.trace,
+            extras: vec![
+                ("iterations".into(), out.iterations.to_string()),
+                ("converged".into(), out.converged.to_string()),
+                ("rows_touched".into(), out.rows_touched.to_string()),
+            ],
+            notes,
+            model: out.model,
+        })
+    }
+}
+
+/// [`Method::Distributed`]: shard → per-worker Algorithm 1 → SV-set
+/// union → one combining solve (paper section III-1). In-process
+/// workers by default; TCP workers when [`TrainContext::addrs`] is
+/// non-empty.
+pub struct Distributed;
+
+impl Trainer for Distributed {
+    fn method(&self) -> Method {
+        Method::Distributed
+    }
+
+    fn train(&self, ctx: &TrainContext<'_>, data: &Matrix) -> Result<TrainReport> {
+        let dcfg = DistributedConfig {
+            workers: ctx.workers,
+            sampling: ctx.sampling,
+            seed: ctx.seed,
+            shuffle_seed: ctx.shuffle_seed,
+        };
+        let out = if ctx.addrs.is_empty() {
+            train_local_cluster(data, &ctx.params, &dcfg)?
+        } else {
+            train_tcp_cluster(data, &ctx.params, &dcfg, &ctx.addrs)?
+        };
+        let notes = out
+            .reports
+            .iter()
+            .map(|r| {
+                format!(
+                    "worker {}: shard={} svs={} iters={} converged={}",
+                    r.worker, r.shard_rows, r.sv_count, r.iterations, r.converged
+                )
+            })
+            .collect();
+        Ok(TrainReport {
+            method: Method::Distributed,
+            seconds: 0.0,
+            iterations: out.reports.iter().map(|r| r.iterations).sum(),
+            converged: out.reports.iter().all(|r| r.converged),
+            solver_calls: 1,
+            rows_touched: out.union_rows,
+            warm_start: false,
+            sample_size: ctx.sampling.sample_size,
+            solver: out.solver,
+            trace: Vec::new(),
+            extras: vec![("union_rows".into(), out.union_rows.to_string())],
+            notes,
+            model: out.model,
+        })
+    }
+}
+
+/// [`Method::Luo`]: decomposition + combination with a full-data
+/// scoring pass per round (the structural cost the paper removes).
+pub struct Luo;
+
+impl Trainer for Luo {
+    fn method(&self) -> Method {
+        Method::Luo
+    }
+
+    fn train(&self, ctx: &TrainContext<'_>, data: &Matrix) -> Result<TrainReport> {
+        let out = train_luo(data, &ctx.params, &ctx.luo)?;
+        Ok(TrainReport {
+            method: Method::Luo,
+            seconds: 0.0,
+            iterations: out.rounds,
+            converged: out.converged,
+            solver_calls: out.solver_calls,
+            rows_touched: out.rows_touched,
+            warm_start: false,
+            sample_size: 0,
+            solver: out.solver,
+            trace: Vec::new(),
+            extras: vec![
+                ("rounds".into(), out.rounds.to_string()),
+                ("scoring_passes".into(), out.scoring_passes.to_string()),
+            ],
+            notes: Vec::new(),
+            model: out.model,
+        })
+    }
+}
+
+/// [`Method::Kim`]: k-means divide-and-conquer (every observation
+/// participates).
+pub struct Kim;
+
+impl Trainer for Kim {
+    fn method(&self) -> Method {
+        Method::Kim
+    }
+
+    fn train(&self, ctx: &TrainContext<'_>, data: &Matrix) -> Result<TrainReport> {
+        let out = train_kim(data, &ctx.params, &ctx.kim)?;
+        Ok(TrainReport {
+            method: Method::Kim,
+            seconds: 0.0,
+            iterations: 1,
+            converged: true,
+            solver_calls: out.solver_calls,
+            rows_touched: out.rows_touched,
+            warm_start: false,
+            sample_size: 0,
+            solver: out.solver,
+            trace: Vec::new(),
+            extras: vec![("pooled_svs".into(), out.pooled_svs.to_string())],
+            notes: Vec::new(),
+            model: out.model,
+        })
+    }
+}
+
+/// [`Method::Streaming`]: feed the data through [`StreamingSvdd`]
+/// window by window and snapshot the final master-set model — the
+/// batch spelling of the online maintainer, so the engine can compare
+/// it against the other methods on equal footing.
+pub struct Streaming;
+
+impl Trainer for Streaming {
+    fn method(&self) -> Method {
+        Method::Streaming
+    }
+
+    fn train(&self, ctx: &TrainContext<'_>, data: &Matrix) -> Result<TrainReport> {
+        let mut cfg = ctx.streaming;
+        // clamp so small data sets still complete at least one window
+        cfg.window = cfg.window.min(data.rows()).max(1);
+        let mut stream = StreamingSvdd::new(ctx.params, cfg, ctx.seed);
+        stream.push_batch(data)?;
+        let model = match stream.model() {
+            Some(m) => m.clone(),
+            None => {
+                return Err(Error::invalid(format!(
+                    "streaming snapshot needs a full window ({} rows, got {})",
+                    cfg.window,
+                    data.rows()
+                )))
+            }
+        };
+        // the tail that never filled a window was not trained on
+        let dropped = stream.buffered();
+        Ok(TrainReport {
+            method: Method::Streaming,
+            seconds: 0.0,
+            iterations: stream.updates(),
+            converged: true,
+            solver_calls: stream.solver_calls(),
+            rows_touched: data.rows() - dropped,
+            warm_start: false,
+            sample_size: cfg.sample_size,
+            solver: *stream.solver_stats(),
+            trace: Vec::new(),
+            extras: vec![
+                ("updates".into(), stream.updates().to_string()),
+                ("window".into(), cfg.window.to_string()),
+                ("dropped_rows".into(), dropped.to_string()),
+            ],
+            notes: Vec::new(),
+            model,
+        })
+    }
+}

@@ -48,17 +48,24 @@
 //!
 //! ## Quick start
 //!
-//! ```no_run
-//! use fastsvdd::data::{banana::Banana, Generator};
-//! use fastsvdd::sampling::{SamplingConfig, SamplingTrainer};
-//! use fastsvdd::svdd::SvddParams;
+//! Every training method — the paper's sampling Algorithm 1, the full
+//! baseline, Luo, Kim, distributed, streaming-snapshot — runs through
+//! the unified [`engine`]:
 //!
-//! let data = Banana::default().generate(11_016, 42);
-//! let params = SvddParams::gaussian(0.8, 0.001);
-//! let cfg = SamplingConfig { sample_size: 6, ..Default::default() };
-//! let outcome = SamplingTrainer::new(params, cfg).train(&data, 7).unwrap();
-//! println!("R^2 = {:.4}, #SV = {}", outcome.model.r2(), outcome.model.num_sv());
+//! ```no_run
+//! use fastsvdd::config::RunConfig;
+//! use fastsvdd::data::{banana::Banana, Generator};
+//! use fastsvdd::engine::Engine;
+//!
+//! let cfg = RunConfig { rows: 11_016, sample_size: 6, ..Default::default() };
+//! let data = Banana::default().generate(cfg.rows, cfg.seed);
+//! let report = Engine::from_config(&cfg).unwrap().train(&data).unwrap();
+//! println!("R^2 = {:.4}, #SV = {}", report.model.r2(), report.model.num_sv());
 //! ```
+//!
+//! The method-specific entry points
+//! ([`sampling::SamplingTrainer`], [`baselines::train_full`], ...)
+//! remain available for direct use and produce byte-identical models.
 //!
 //! See `examples/` for end-to-end drivers and `rust/benches/` for the
 //! harnesses that regenerate every table and figure of the paper.
@@ -69,6 +76,7 @@ pub mod cli;
 pub mod config;
 pub mod data;
 pub mod distributed;
+pub mod engine;
 pub mod error;
 pub mod linalg;
 pub mod metrics;

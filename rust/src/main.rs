@@ -3,22 +3,20 @@
 
 use std::path::Path;
 
-use fastsvdd::baselines::{train_full, train_kim, train_luo, KimConfig, LuoConfig};
 use fastsvdd::cli::{Args, HELP};
-use fastsvdd::config::{Method, RunConfig};
+use fastsvdd::config::RunConfig;
 use fastsvdd::data::grid::Grid;
 use fastsvdd::data::shuttle::Shuttle;
 use fastsvdd::data::tennessee::TennesseePlant;
 use fastsvdd::data::{shape_by_name, LabeledData};
-use fastsvdd::distributed::tcp::{train_tcp_cluster, WorkerServer};
-use fastsvdd::distributed::{train_local_cluster, DistributedConfig};
+use fastsvdd::distributed::tcp::WorkerServer;
+use fastsvdd::engine::Engine;
 use fastsvdd::error::{Error, Result};
 use fastsvdd::parallel::{self, ParallelismConfig, ThreadCount};
 use fastsvdd::registry::{sync_champion, Registry, VersionId, VersionMeta};
 use fastsvdd::runtime::SharedRuntime;
-use fastsvdd::sampling::SamplingTrainer;
 use fastsvdd::scoring::{F1Score, Scorer};
-use fastsvdd::svdd::{SolverStats, SvddModel, Wss};
+use fastsvdd::svdd::{SolverStats, SvddModel};
 use fastsvdd::util::matrix::Matrix;
 use fastsvdd::util::tables::{f, Table};
 use fastsvdd::util::timer::{fmt_duration, Stopwatch};
@@ -110,50 +108,6 @@ fn scoring_data(name: &str, rows: usize, seed: u64) -> Result<LabeledData> {
     }
 }
 
-fn config_from_args(args: &Args) -> Result<RunConfig> {
-    let mut cfg = match args.get("config") {
-        Some(path) => RunConfig::load(Path::new(path))?,
-        None => RunConfig::default(),
-    };
-    if let Some(v) = args.get("data") {
-        cfg.dataset = v.to_string();
-    }
-    if let Some(v) = args.get("method") {
-        cfg.method = Method::parse(v)?;
-    }
-    cfg.rows = args.get_usize("rows", cfg.rows)?;
-    cfg.bandwidth = args.get_f64("bw", cfg.bandwidth)?;
-    cfg.outlier_fraction = args.get_f64("f", cfg.outlier_fraction)?;
-    cfg.sample_size = args.get_usize("sample-size", cfg.sample_size)?;
-    cfg.max_iter = args.get_usize("max-iter", cfg.max_iter)?;
-    cfg.candidates_per_iter = args.get_usize("candidates", cfg.candidates_per_iter)?;
-    cfg.workers = args.get_usize("workers", cfg.workers)?;
-    if args.get("shuffle-seed").is_some() {
-        cfg.shuffle_seed = Some(args.get_u64("shuffle-seed", 0)?);
-    }
-    if let Some(v) = args.get("threads") {
-        cfg.threads = ThreadCount::parse(v)?;
-    }
-    cfg.seed = args.get_u64("seed", cfg.seed)?;
-    if args.flag("warm-alpha") {
-        cfg.warm_alpha = true;
-    }
-    if let Some(v) = args.get("wss") {
-        cfg.wss = Wss::parse(v)?;
-    }
-    if args.flag("no-shrinking") {
-        cfg.shrinking = false;
-    }
-    if args.flag("xla") {
-        cfg.scorer = "xla".into();
-    }
-    if let Some(v) = args.get("artifacts") {
-        cfg.artifact_dir = v.to_string();
-    }
-    cfg.validate()?;
-    Ok(cfg)
-}
-
 fn cmd_train(args: &Args) -> Result<()> {
     args.expect_only(&[
         "config", "data", "rows", "method", "bw", "f", "sample-size", "max-iter",
@@ -161,126 +115,79 @@ fn cmd_train(args: &Args) -> Result<()> {
         "xla", "artifacts", "addrs", "registry", "promote", "warm-alpha", "wss",
         "no-shrinking", "v",
     ])?;
-    let cfg = config_from_args(args)?;
+    let cfg = RunConfig::from_args(args)?;
     parallel::install(cfg.parallelism());
     let data = training_data(&cfg.dataset, cfg.rows, cfg.seed)?;
-    let params = cfg.params();
+    let engine = Engine::from_config(&cfg)?;
     println!(
-        "training: data={} rows={} method={:?} kernel={} f={} threads={}",
+        "training: data={} rows={} method={} kernel={} f={} threads={}",
         cfg.dataset,
         data.rows(),
         cfg.method,
-        params.kernel,
+        cfg.params().kernel,
         cfg.outlier_fraction,
         parallel::global().threads(),
     );
 
-    let sw = Stopwatch::start();
-    let mut version_meta: Option<VersionMeta> = None;
-    let (model, extra) = match cfg.method {
-        Method::Full => {
-            let out = train_full(&data, &params)?;
-            if args.flag("v") {
-                print_solver_stats(&out.solver);
+    // One uniform path for every method: sample/union grams go through
+    // the shared pool (bit-identical to the lazy path; trainers that
+    // precompute no grams ignore the backend), traces are recorded when
+    // asked for, TCP worker addresses ride along for the distributed
+    // trainer.
+    let pooled = fastsvdd::parallel::PooledGram::new();
+    let mut ctx = engine.context().with_backend(&pooled);
+    ctx.sampling.record_trace = args.get("trace").is_some();
+    if let Some(addrs) = args.get("addrs") {
+        ctx.addrs = addrs
+            .split(',')
+            .map(|a| {
+                a.parse()
+                    .map_err(|_| Error::Config(format!("bad worker address '{a}'")))
+            })
+            .collect::<Result<_>>()?;
+    }
+    let report = engine.train_with(&ctx, &data)?;
+    for note in &report.notes {
+        println!("  {note}");
+    }
+    if args.flag("v") {
+        println!(
+            "  solver config: wss={} shrinking={} warm_alpha={}",
+            cfg.wss.as_str(),
+            cfg.shrinking,
+            cfg.warm_alpha
+        );
+        print_solver_stats(&report.solver);
+    }
+    if let Some(path) = args.get("trace") {
+        if report.trace.is_empty() {
+            println!("trace: method '{}' records no per-iteration trace", cfg.method);
+        } else {
+            let mut csv = String::from("iteration,r2,num_sv,center_delta\n");
+            for t in &report.trace {
+                csv.push_str(&format!(
+                    "{},{},{},{}\n",
+                    t.iteration, t.r2, t.num_sv, t.center_delta
+                ));
             }
-            (out.model, format!("solve={}", fmt_duration(out.seconds)))
+            std::fs::write(path, csv)?;
         }
-        Method::Sampling => {
-            let mut scfg = cfg.sampling();
-            scfg.record_trace = args.get("trace").is_some();
-            // sample/union grams on the shared pool (bit-identical to
-            // the lazy path; the tiny solves are cost-gated to serial)
-            let pooled = fastsvdd::parallel::PooledGram::new();
-            let out = SamplingTrainer::new(params, scfg)
-                .with_backend(&pooled)
-                .train(&data, cfg.seed)?;
-            if scfg.candidates_per_iter > 1 {
-                println!(
-                    "  candidates: {} per iteration (best-R^2 promotion)",
-                    scfg.candidates_per_iter
-                );
-            }
-            if args.flag("v") {
-                println!(
-                    "  solver config: wss={} shrinking={} warm_alpha={}",
-                    params.smo.wss.as_str(),
-                    params.smo.shrinking,
-                    scfg.warm_alpha
-                );
-                print_solver_stats(&out.solver);
-            }
-            if let Some(path) = args.get("trace") {
-                let mut csv = String::from("iteration,r2,num_sv,center_delta\n");
-                for t in &out.trace {
-                    csv.push_str(&format!(
-                        "{},{},{},{}\n",
-                        t.iteration, t.r2, t.num_sv, t.center_delta
-                    ));
-                }
-                std::fs::write(path, csv)?;
-            }
-            version_meta = Some(VersionMeta::from_outcome(&out, &data, scfg.sample_size));
-            (
-                out.model,
-                format!(
-                    "iterations={} converged={} rows_touched={}",
-                    out.iterations, out.converged, out.rows_touched
-                ),
-            )
-        }
-        Method::Distributed => {
-            let dcfg = DistributedConfig {
-                workers: cfg.workers,
-                sampling: cfg.sampling(),
-                seed: cfg.seed,
-                shuffle_seed: cfg.shuffle_seed,
-            };
-            let out = match args.get("addrs") {
-                Some(addrs) => {
-                    let parsed: Vec<std::net::SocketAddr> = addrs
-                        .split(',')
-                        .map(|a| {
-                            a.parse().map_err(|_| {
-                                Error::Config(format!("bad worker address '{a}'"))
-                            })
-                        })
-                        .collect::<Result<_>>()?;
-                    train_tcp_cluster(&data, &params, &dcfg, &parsed)?
-                }
-                None => train_local_cluster(&data, &params, &dcfg)?,
-            };
-            for r in &out.reports {
-                println!(
-                    "  worker {}: shard={} svs={} iters={} converged={}",
-                    r.worker, r.shard_rows, r.sv_count, r.iterations, r.converged
-                );
-            }
-            (out.model, format!("union_rows={}", out.union_rows))
-        }
-        Method::Luo => {
-            let out = train_luo(&data, &params, &LuoConfig::default())?;
-            (out.model, format!("rounds={} scoring_passes={}", out.rounds, out.scoring_passes))
-        }
-        Method::Kim => {
-            let out = train_kim(&data, &params, &KimConfig::default())?;
-            (out.model, format!("pooled_svs={}", out.pooled_svs))
-        }
-    };
-    let secs = sw.elapsed_secs();
+    }
     println!(
-        "done in {}: R^2={:.4} #SV={} {extra}",
-        fmt_duration(secs),
-        model.r2(),
-        model.num_sv()
+        "done in {}: R^2={:.4} #SV={} {}",
+        fmt_duration(report.seconds),
+        report.model.r2(),
+        report.model.num_sv(),
+        report.extras_line(),
     );
     if let Some(path) = args.get("out") {
-        model.save(Path::new(path))?;
+        report.model.save(Path::new(path))?;
         println!("model saved to {path}");
     }
     if let Some(dir) = args.get("registry") {
         let reg = Registry::open(dir)?;
-        let meta = version_meta.unwrap_or_else(|| VersionMeta::new(&model, &data));
-        let id = reg.publish(&model, meta)?;
+        let meta = VersionMeta::from_report(&report, &data);
+        let id = reg.publish(&report.model, meta)?;
         println!("published {id} to registry {dir}");
         if args.flag("promote") {
             reg.promote(&id)?;
@@ -292,22 +199,20 @@ fn cmd_train(args: &Args) -> Result<()> {
 
 fn cmd_score(args: &Args) -> Result<()> {
     args.expect_only(&[
-        "model", "data", "rows", "seed", "xla", "artifacts", "out", "threads",
+        "config", "model", "data", "rows", "seed", "xla", "artifacts", "out", "threads",
     ])?;
-    install_threads_arg(args)?;
+    let cfg = RunConfig::from_args(args)?;
+    parallel::install(cfg.parallelism());
     let model_path = args
         .get("model")
         .ok_or_else(|| Error::Config("--model required".into()))?;
     let model = SvddModel::load(Path::new(model_path))?;
-    let dataset = args.get_or("data", "banana");
-    let rows = args.get_usize("rows", 10_000)?;
-    let seed = args.get_u64("seed", 1)?;
-    let labeled = scoring_data(dataset, rows, seed)?;
+    let rows = cfg.rows;
+    let labeled = scoring_data(&cfg.dataset, rows, cfg.seed)?;
 
     let runtime;
-    let scorer = if args.flag("xla") {
-        let dir = args.get_or("artifacts", "artifacts");
-        runtime = SharedRuntime::new(Path::new(dir))?;
+    let scorer = if cfg.scorer == "xla" {
+        runtime = SharedRuntime::new(Path::new(&cfg.artifact_dir))?;
         Scorer::xla(&model, &runtime)
     } else {
         Scorer::native(&model)
@@ -341,9 +246,10 @@ fn cmd_score(args: &Args) -> Result<()> {
 
 fn cmd_grid(args: &Args) -> Result<()> {
     args.expect_only(&[
-        "model", "out", "xla", "artifacts", "nx", "ny", "margin", "threads",
+        "config", "model", "out", "xla", "artifacts", "nx", "ny", "margin", "threads",
     ])?;
-    install_threads_arg(args)?;
+    let cfg = RunConfig::from_args(args)?;
+    parallel::install(cfg.parallelism());
     let model_path = args
         .get("model")
         .ok_or_else(|| Error::Config("--model required".into()))?;
@@ -356,9 +262,8 @@ fn cmd_grid(args: &Args) -> Result<()> {
     let margin = args.get_f64("margin", 0.2)?;
     let grid = Grid::covering(model.support_vectors(), nx, ny, margin);
     let runtime;
-    let scorer = if args.flag("xla") {
-        let dir = args.get_or("artifacts", "artifacts");
-        runtime = SharedRuntime::new(Path::new(dir))?;
+    let scorer = if cfg.scorer == "xla" {
+        runtime = SharedRuntime::new(Path::new(&cfg.artifact_dir))?;
         Scorer::xla(&model, &runtime)
     } else {
         Scorer::native(&model)

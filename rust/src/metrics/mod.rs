@@ -132,6 +132,21 @@ impl Metrics {
         self.smo_unshrink_events.add(stats.unshrink_events as u64);
     }
 
+    /// Record one training run's uniform telemetry: SMO solve count,
+    /// outer (method) iterations, and the aggregated SMO counters. This
+    /// is the single sink every [`crate::engine::TrainReport`] lands in
+    /// regardless of method.
+    pub fn record_training(
+        &self,
+        solver_calls: usize,
+        iterations: usize,
+        stats: &crate::svdd::SolverStats,
+    ) {
+        self.solver_calls.add(solver_calls as u64);
+        self.train_iterations.add(iterations as u64);
+        self.record_solver(stats);
+    }
+
     /// One-line render for logs / CLI output.
     pub fn render(&self) -> String {
         format!(

@@ -17,19 +17,26 @@
 //! lifecycle per registry, matching the store's single-writer rule);
 //! serving stays concurrent because the slot swap is a pointer
 //! replacement.
+//!
+//! Retraining goes through the unified [`crate::engine`]: the driver
+//! holds a `Box<dyn Trainer>` (the sampling method by default, any
+//! registered trainer via [`Lifecycle::with_trainer`]) and passes the
+//! champion as [`TrainContext::warm_start`], so the warm/cold decision
+//! and the telemetry path are the same code every other consumer uses.
 
 use std::sync::Arc;
 
+use crate::config::Method;
+use crate::engine::{self, TrainContext, Trainer};
 use crate::error::{Error, Result};
 use crate::metrics::Metrics;
 use crate::registry::store::Registry;
 use crate::registry::version::{VersionId, VersionMeta};
-use crate::sampling::{DriftStatus, SamplingConfig, SamplingTrainer};
+use crate::sampling::{DriftStatus, SamplingConfig};
 use crate::scoring::batcher::ModelSlot;
 use crate::svdd::model::SvddModel;
 use crate::svdd::trainer::SvddParams;
 use crate::util::matrix::Matrix;
-use crate::util::timer::Stopwatch;
 
 /// What one lifecycle retrain produced.
 #[derive(Clone, Debug)]
@@ -55,6 +62,7 @@ pub struct Lifecycle {
     registry: Registry,
     params: SvddParams,
     cfg: SamplingConfig,
+    trainer: Box<dyn Trainer>,
     slot: Option<ModelSlot>,
     metrics: Arc<Metrics>,
 }
@@ -65,9 +73,19 @@ impl Lifecycle {
             registry,
             params,
             cfg,
+            trainer: engine::trainer_for(Method::Sampling),
             slot: None,
             metrics: Arc::new(Metrics::new()),
         }
+    }
+
+    /// Retrain with a different method: any [`Trainer`] (usually from
+    /// [`engine::trainer_for`]). The champion still flows in as
+    /// [`TrainContext::warm_start`]; trainers that cannot warm-start
+    /// ignore it.
+    pub fn with_trainer(mut self, trainer: Box<dyn Trainer>) -> Lifecycle {
+        self.trainer = trainer;
+        self
     }
 
     /// Attach the serving slot retrains should swap into (e.g.
@@ -111,41 +129,39 @@ impl Lifecycle {
                 )));
             }
         }
-        let trainer = SamplingTrainer::new(self.params, self.cfg);
         let champion = self.registry.champion_model()?;
         let warm_from = champion
             .as_ref()
             .map(|(_, m)| m)
             .filter(|m| m.dim() == data.cols());
 
-        let sw = Stopwatch::start();
-        let outcome = match warm_from {
-            Some(init) => trainer.train_warm(data, seed, init)?,
-            None => trainer.train(data, seed)?,
-        };
-        let seconds = sw.elapsed_secs();
+        // solver telemetry lands next to the lifecycle counters (via
+        // the context's metrics sink) so a serving process can see what
+        // its background retrains cost
+        let mut ctx =
+            TrainContext::new(self.params, self.cfg, seed).with_metrics(&self.metrics);
+        if let Some(init) = warm_from {
+            ctx = ctx.with_warm_start(init);
+        }
+        let report = engine::run(self.trainer.as_ref(), &ctx, data)?;
+        let seconds = report.seconds;
         self.metrics.retrain_latency.observe(seconds);
-        if outcome.warm_start {
+        if report.warm_start {
             self.metrics.retrains_warm.inc();
         } else {
             self.metrics.retrains_cold.inc();
         }
-        // solver telemetry lands next to the lifecycle counters so a
-        // serving process can see what its background retrains cost
-        self.metrics.solver_calls.add(outcome.solver_calls as u64);
-        self.metrics.train_iterations.add(outcome.iterations as u64);
-        self.metrics.record_solver(&outcome.solver);
 
-        let meta = VersionMeta::from_outcome(&outcome, data, self.cfg.sample_size);
-        let id = self.registry.publish(&outcome.model, meta)?;
+        let meta = VersionMeta::from_report(&report, data);
+        let id = self.registry.publish(&report.model, meta)?;
         self.registry.promote(&id)?;
-        let epoch = self.swap_into_slot(&outcome.model)?;
+        let epoch = self.swap_into_slot(&report.model)?;
         Ok(LifecycleReport {
             id,
-            r2: outcome.model.r2(),
-            iterations: outcome.iterations,
-            converged: outcome.converged,
-            warm_start: outcome.warm_start,
+            r2: report.model.r2(),
+            iterations: report.iterations,
+            converged: report.converged,
+            warm_start: report.warm_start,
             seconds,
             epoch,
         })
@@ -259,6 +275,7 @@ pub fn sync_champion(
 mod tests {
     use super::*;
     use crate::data::{banana::Banana, Generator};
+    use crate::sampling::SamplingTrainer;
 
     fn temp_registry(tag: &str) -> Registry {
         let dir = std::env::temp_dir().join(format!(
@@ -309,6 +326,26 @@ mod tests {
         let meta = lc.registry().get(&second.id).unwrap().meta;
         assert!(meta.warm_start);
         assert_eq!(meta.iterations, second.iterations);
+        std::fs::remove_dir_all(lc.registry().root()).ok();
+    }
+
+    #[test]
+    fn custom_trainer_retrains_with_another_method() {
+        let params = SvddParams::gaussian(0.35, 0.01);
+        let cfg = SamplingConfig { sample_size: 6, ..Default::default() };
+        let mut lc = Lifecycle::new(temp_registry("fulltrainer"), params, cfg)
+            .with_trainer(engine::trainer_for(Method::Full));
+        let data = Banana::default().generate(600, 8);
+        let first = lc.retrain(&data, 1).unwrap();
+        assert!(!first.warm_start);
+        assert!(first.converged);
+        assert!(lc.metrics().smo_iterations.get() > 0);
+        // a champion now exists, but the full trainer ignores warm
+        // starts — and the identical deterministic solve republishes
+        // the same content-addressed version
+        let again = lc.retrain(&data, 2).unwrap();
+        assert!(!again.warm_start);
+        assert_eq!(again.id, first.id);
         std::fs::remove_dir_all(lc.registry().root()).ok();
     }
 

@@ -106,7 +106,10 @@ impl VersionMeta {
         }
     }
 
-    /// Metadata for an Algorithm-1 outcome (the lifecycle path).
+    /// Metadata for an Algorithm-1 outcome (the pre-engine lifecycle
+    /// path; kept for direct [`SamplingTrainer`] users).
+    ///
+    /// [`SamplingTrainer`]: crate::sampling::SamplingTrainer
     pub fn from_outcome(
         outcome: &SamplingOutcome,
         data: &Matrix,
@@ -122,6 +125,27 @@ impl VersionMeta {
             converged: outcome.converged,
             warm_start: outcome.warm_start,
             bandwidth: outcome.model.kernel().bw(),
+            data_fingerprint: fingerprint_matrix(data),
+            created_unix: now_unix(),
+        }
+    }
+
+    /// Metadata for a unified [`TrainReport`] — any method trained
+    /// through [`crate::engine::Engine`] (the launcher + lifecycle
+    /// path).
+    ///
+    /// [`TrainReport`]: crate::engine::TrainReport
+    pub fn from_report(report: &crate::engine::TrainReport, data: &Matrix) -> VersionMeta {
+        VersionMeta {
+            r2: report.model.r2(),
+            num_sv: report.model.num_sv(),
+            dim: report.model.dim(),
+            rows: data.rows(),
+            sample_size: report.sample_size,
+            iterations: report.iterations,
+            converged: report.converged,
+            warm_start: report.warm_start,
+            bandwidth: report.model.kernel().bw(),
             data_fingerprint: fingerprint_matrix(data),
             created_unix: now_unix(),
         }

@@ -12,7 +12,7 @@
 
 use crate::error::{Error, Result};
 use crate::svdd::model::SvddModel;
-use crate::svdd::trainer::{train, SvddParams};
+use crate::svdd::trainer::{train_detailed, SolverStats, SvddParams};
 use crate::util::matrix::Matrix;
 use crate::util::rng::Xoshiro256;
 
@@ -61,6 +61,8 @@ pub struct StreamingSvdd {
     drift_streak: usize,
     updates: usize,
     rows_seen: usize,
+    solver_calls: usize,
+    solver: SolverStats,
 }
 
 impl StreamingSvdd {
@@ -74,6 +76,8 @@ impl StreamingSvdd {
             drift_streak: 0,
             updates: 0,
             rows_seen: 0,
+            solver_calls: 0,
+            solver: SolverStats::default(),
         }
     }
 
@@ -92,6 +96,16 @@ impl StreamingSvdd {
 
     pub fn buffered(&self) -> usize {
         self.buffer.len()
+    }
+
+    /// SMO solves issued so far (2 per window update).
+    pub fn solver_calls(&self) -> usize {
+        self.solver_calls
+    }
+
+    /// Aggregated SMO telemetry across every window update.
+    pub fn solver_stats(&self) -> &SolverStats {
+        &self.solver
     }
 
     /// Feed one observation; returns `Some(status)` when a window
@@ -123,7 +137,9 @@ impl StreamingSvdd {
         let n = self.cfg.sample_size.max(2).min(window.rows());
         let idx = self.rng.sample_with_replacement(window.rows(), n);
         let sample = window.gather(&idx).dedup_rows();
-        let sample_model = train(&sample, &self.params)?;
+        let (sample_model, stats) = train_detailed(&sample, &self.params, None)?;
+        self.solver.absorb(&stats);
+        self.solver_calls += 1;
 
         let prev_r2 = self.model.as_ref().map(|m| m.r2());
         let union = match &self.model {
@@ -133,7 +149,9 @@ impl StreamingSvdd {
                 .dedup_rows(),
             None => sample_model.support_vectors().clone(),
         };
-        let new_model = train(&union, &self.params)?;
+        let (new_model, stats) = train_detailed(&union, &self.params, None)?;
+        self.solver.absorb(&stats);
+        self.solver_calls += 1;
         let status = match prev_r2 {
             None => DriftStatus::Stable,
             Some(prev) => {
@@ -210,6 +228,9 @@ mod tests {
         s.push_batch(&data).unwrap();
         let model = s.model().expect("model after 32 windows");
         assert_eq!(s.updates(), 4096 / 128);
+        // telemetry: a sample + a union solve per window update
+        assert_eq!(s.solver_calls(), 2 * s.updates());
+        assert!(s.solver_stats().smo_iterations > 0);
         let batch = crate::svdd::train(&data, &params).unwrap();
         let rel = (model.r2() - batch.r2()).abs() / batch.r2();
         assert!(rel < 0.1, "stream vs batch R^2 gap {rel}");

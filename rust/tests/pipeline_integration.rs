@@ -8,11 +8,12 @@ use fastsvdd::data::grid::{agreement, Grid};
 use fastsvdd::data::polygon::Polygon;
 use fastsvdd::data::shuttle::Shuttle;
 use fastsvdd::data::tennessee::TennesseePlant;
-use fastsvdd::data::{banana::Banana, star::Star, Generator};
+use fastsvdd::data::{banana::Banana, donut::TwoDonut, star::Star, Generator};
 use fastsvdd::distributed::{train_local_cluster, DistributedConfig};
-use fastsvdd::sampling::{SamplingConfig, SamplingTrainer};
+use fastsvdd::engine::Engine;
+use fastsvdd::sampling::{SamplingConfig, SamplingTrainer, StreamingConfig, StreamingSvdd};
 use fastsvdd::scoring::{F1Score, Scorer};
-use fastsvdd::svdd::{SvddModel, SvddParams};
+use fastsvdd::svdd::{SvddModel, SvddParams, Wss};
 
 /// The paper's central claim on a full pipeline: the sampling method's
 /// grid decision map closely matches the full method's (Fig 8).
@@ -163,6 +164,179 @@ fn config_driven_training() {
         .train(&data, cfg.seed)
         .unwrap();
     assert!(out.model.r2() > 0.5);
+}
+
+// ---------------------------------------------------------------------
+// Engine ↔ legacy equivalence: for every method, training through the
+// unified `Engine::from_config` facade must be BYTE-identical to the
+// pre-refactor entry point on the same seeded data — the engine is a
+// pure re-plumbing, never a re-implementation.
+// ---------------------------------------------------------------------
+
+/// Bitwise model equality: thresholds, duals and SV rows must carry the
+/// exact same bits (f64 compare via to_bits; content_id hashes them).
+fn assert_models_identical(engine: &SvddModel, legacy: &SvddModel, what: &str) {
+    assert_eq!(
+        engine.r2().to_bits(),
+        legacy.r2().to_bits(),
+        "{what}: R^2 differs ({} vs {})",
+        engine.r2(),
+        legacy.r2()
+    );
+    assert_eq!(engine.w().to_bits(), legacy.w().to_bits(), "{what}: W differs");
+    assert_eq!(engine.num_sv(), legacy.num_sv(), "{what}: #SV differs");
+    let ea: Vec<u64> = engine.alpha().iter().map(|x| x.to_bits()).collect();
+    let la: Vec<u64> = legacy.alpha().iter().map(|x| x.to_bits()).collect();
+    assert_eq!(ea, la, "{what}: alpha differs");
+    assert_eq!(engine.support_vectors(), legacy.support_vectors(), "{what}: SV rows differ");
+    assert_eq!(engine.content_id(), legacy.content_id(), "{what}: content id differs");
+}
+
+fn banana_cfg(method: Method) -> RunConfig {
+    RunConfig {
+        dataset: "banana".into(),
+        rows: 1500,
+        bandwidth: 0.35,
+        outlier_fraction: 0.001,
+        method,
+        sample_size: 6,
+        seed: 11,
+        ..RunConfig::default()
+    }
+}
+
+#[test]
+fn engine_full_matches_legacy() {
+    let cfg = banana_cfg(Method::Full);
+    let data = Banana::default().generate(cfg.rows, cfg.seed);
+    let legacy = train_full(&data, &cfg.params()).unwrap();
+    let report = Engine::from_config(&cfg).unwrap().train(&data).unwrap();
+    assert_models_identical(&report.model, &legacy.model, "full");
+    assert_eq!(report.solver.smo_iterations, legacy.solver.smo_iterations);
+}
+
+#[test]
+fn engine_sampling_matches_legacy_k1_stream() {
+    // the seeded K=1 stream is the paper's Algorithm 1 reference
+    let cfg = banana_cfg(Method::Sampling);
+    let data = Banana::default().generate(cfg.rows, cfg.seed);
+    let legacy = SamplingTrainer::new(cfg.params(), cfg.sampling())
+        .train(&data, cfg.seed)
+        .unwrap();
+    let report = Engine::from_config(&cfg).unwrap().train(&data).unwrap();
+    assert_models_identical(&report.model, &legacy.model, "sampling K=1");
+    assert_eq!(report.iterations, legacy.iterations);
+    assert_eq!(report.converged, legacy.converged);
+    assert_eq!(report.solver_calls, legacy.solver_calls);
+    assert_eq!(report.rows_touched, legacy.rows_touched);
+    assert_eq!(report.solver.smo_iterations, legacy.solver.smo_iterations);
+}
+
+#[test]
+fn engine_sampling_matches_legacy_wss_legacy_golden() {
+    // the frozen pre-Solver SMO loop must replay identically through
+    // the engine (`--wss legacy`)
+    let mut cfg = banana_cfg(Method::Sampling);
+    cfg.wss = Wss::Legacy;
+    cfg.shrinking = false;
+    let data = Banana::default().generate(cfg.rows, cfg.seed);
+    let legacy = SamplingTrainer::new(cfg.params(), cfg.sampling())
+        .train(&data, cfg.seed)
+        .unwrap();
+    let report = Engine::from_config(&cfg).unwrap().train(&data).unwrap();
+    assert_models_identical(&report.model, &legacy.model, "sampling wss=legacy");
+    assert_eq!(report.iterations, legacy.iterations);
+}
+
+#[test]
+fn engine_sampling_matches_legacy_candidates_and_warm_alpha() {
+    let mut cfg = banana_cfg(Method::Sampling);
+    cfg.candidates_per_iter = 4;
+    cfg.warm_alpha = true;
+    let data = Banana::default().generate(cfg.rows, cfg.seed);
+    let legacy = SamplingTrainer::new(cfg.params(), cfg.sampling())
+        .train(&data, cfg.seed)
+        .unwrap();
+    let report = Engine::from_config(&cfg).unwrap().train(&data).unwrap();
+    assert_models_identical(&report.model, &legacy.model, "sampling K=4 warm_alpha");
+    assert_eq!(report.solver_calls, legacy.solver_calls);
+}
+
+#[test]
+fn engine_warm_start_matches_legacy_train_warm() {
+    let cfg = banana_cfg(Method::Sampling);
+    let data = Banana::default().generate(cfg.rows, cfg.seed);
+    let trainer = SamplingTrainer::new(cfg.params(), cfg.sampling());
+    let first = trainer.train(&data, cfg.seed).unwrap();
+    let legacy = trainer.train_warm(&data, 99, &first.model).unwrap();
+    let engine = Engine::from_config(&cfg).unwrap();
+    let mut ctx = engine.context().with_warm_start(&first.model);
+    ctx.seed = 99;
+    let report = engine.train_with(&ctx, &data).unwrap();
+    assert!(report.warm_start);
+    assert_models_identical(&report.model, &legacy.model, "sampling warm start");
+    assert_eq!(report.iterations, legacy.iterations);
+}
+
+#[test]
+fn engine_luo_matches_legacy() {
+    let mut cfg = banana_cfg(Method::Luo);
+    cfg.dataset = "two-donut".into();
+    cfg.bandwidth = 0.4;
+    let data = TwoDonut::default().generate(cfg.rows, cfg.seed);
+    let legacy = train_luo(&data, &cfg.params(), &LuoConfig::default()).unwrap();
+    let report = Engine::from_config(&cfg).unwrap().train(&data).unwrap();
+    assert_models_identical(&report.model, &legacy.model, "luo");
+    assert_eq!(report.iterations, legacy.rounds);
+    assert_eq!(report.solver_calls, legacy.solver_calls);
+}
+
+#[test]
+fn engine_kim_matches_legacy() {
+    let mut cfg = banana_cfg(Method::Kim);
+    cfg.dataset = "two-donut".into();
+    cfg.bandwidth = 0.4;
+    let data = TwoDonut::default().generate(cfg.rows, cfg.seed);
+    let legacy = train_kim(&data, &cfg.params(), &KimConfig::default()).unwrap();
+    let report = Engine::from_config(&cfg).unwrap().train(&data).unwrap();
+    assert_models_identical(&report.model, &legacy.model, "kim");
+    assert_eq!(report.extras_line(), format!("pooled_svs={}", legacy.pooled_svs));
+}
+
+#[test]
+fn engine_distributed_matches_legacy() {
+    let mut cfg = banana_cfg(Method::Distributed);
+    cfg.rows = 4000;
+    cfg.workers = 3;
+    let data = Banana::default().generate(cfg.rows, cfg.seed);
+    let dcfg = DistributedConfig {
+        workers: cfg.workers,
+        sampling: cfg.sampling(),
+        seed: cfg.seed,
+        shuffle_seed: cfg.shuffle_seed,
+    };
+    let legacy = train_local_cluster(&data, &cfg.params(), &dcfg).unwrap();
+    let report = Engine::from_config(&cfg).unwrap().train(&data).unwrap();
+    assert_models_identical(&report.model, &legacy.model, "distributed");
+    assert_eq!(report.rows_touched, legacy.union_rows);
+    assert_eq!(report.notes.len(), legacy.reports.len());
+}
+
+#[test]
+fn engine_streaming_matches_legacy_snapshot() {
+    let mut cfg = banana_cfg(Method::Streaming);
+    cfg.rows = 1024;
+    let data = Banana::default().generate(cfg.rows, cfg.seed);
+    // the manual spelling of the streaming snapshot (window 256 is the
+    // StreamingConfig default the engine clamps to the data size)
+    let scfg = StreamingConfig { sample_size: cfg.sample_size, ..Default::default() };
+    let mut stream = StreamingSvdd::new(cfg.params(), scfg, cfg.seed);
+    stream.push_batch(&data).unwrap();
+    let legacy = stream.model().unwrap();
+    let report = Engine::from_config(&cfg).unwrap().train(&data).unwrap();
+    assert_models_identical(&report.model, legacy, "streaming");
+    assert_eq!(report.iterations, stream.updates());
+    assert_eq!(report.solver_calls, stream.solver_calls());
 }
 
 /// Polygon-study pipeline: ground truth from the polygon substrate,
