@@ -27,6 +27,12 @@ use fastsvdd::util::timer::{fmt_duration, Stopwatch};
 fn main() -> fastsvdd::Result<()> {
     let plant = TennesseePlant::default();
 
+    // trace the whole run: every train iteration, SMO solve, gram
+    // panel and batch score lands in the in-process ring, rendered as
+    // a per-stage report at the end (same pipeline as
+    // `fastsvdd train --log-json` + `fastsvdd report`)
+    fastsvdd::obs::enable();
+
     // ---- train on normal operations ----
     let train_rows = 20_000;
     let train = plant.training(train_rows, 42);
@@ -116,5 +122,14 @@ fn main() -> fastsvdd::Result<()> {
         f1.precision, f1.recall, f1.f1
     );
     println!("\nmetrics: {}", metrics.render());
+
+    // ---- per-stage observability report from the traced run ----
+    fastsvdd::obs::disable();
+    let jsonl: String = fastsvdd::obs::drain()
+        .iter()
+        .map(|ev| format!("{}\n", ev.to_json()))
+        .collect();
+    let report = fastsvdd::obs::report::parse(&jsonl)?;
+    println!("\n{}", fastsvdd::obs::report::render(&report));
     Ok(())
 }

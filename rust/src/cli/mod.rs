@@ -137,6 +137,8 @@ COMMANDS:
     registry     Manage a versioned model registry
                  (list | promote | rollback | gc)
     artifacts    Inspect the AOT artifact manifest
+    report       Render per-stage timings + the R^2 convergence trace
+                 from a --log-json run log
     help         Show this help
 
 COMMON OPTIONS (train):
@@ -173,6 +175,8 @@ COMMON OPTIONS (train):
     --seed <u64>              RNG seed
     --out <model.json>        save the trained model
     --trace <csv>             write the R^2 iteration trace (Fig 7)
+    --log-json <file.jsonl>   enable tracing and stream every span/event
+                              as one JSON line (render: fastsvdd report)
     --registry <dir>          publish the trained model to a registry
     --promote                 also promote it to champion
 
@@ -194,6 +198,12 @@ serve:
     --watch-interval-ms <ms>  champion poll interval (default 1000)
     --allow-remote-swap       accept the unauthenticated v2 SwapModel
                               frame from clients (off by default)
+    The listener also answers Prometheus scrapes:
+        curl http://<addr>/metrics
+
+report:
+    --log <file.jsonl>        a train --log-json run log; prints the
+                              per-stage timing table and the R^2 trace
 
 registry (directory layout: manifest.json + models/v-<16 hex>.json,
 content-addressed; see src/registry/):
@@ -209,6 +219,8 @@ EXAMPLES:
     fastsvdd train --data tennessee --rows 20000 --registry reg/ --promote
     fastsvdd serve --registry reg/ --watch --listen 0.0.0.0:7800
     fastsvdd registry list --dir reg/
+    fastsvdd train --data banana --rows 50000 --log-json run.jsonl
+    fastsvdd report --log run.jsonl
 ";
 
 #[cfg(test)]

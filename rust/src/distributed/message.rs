@@ -13,8 +13,10 @@ use crate::util::matrix::Matrix;
 
 /// Protocol version — bumped on any frame-layout or vocabulary change.
 /// v2 added the model-lifecycle frames (`ModelInfoRequest`/`ModelInfo`/
-/// `SwapModel`/`SwapAck`); every v1 frame is encoded identically, so v2
-/// servers still speak to v1 clients (see [`negotiate`]).
+/// `SwapModel`/`SwapAck`) and the metrics frames (`StatsRequest`/
+/// `StatsReply`); every v1 frame is encoded identically, so v2 servers
+/// still speak to v1 clients (see [`negotiate`]) — a session negotiated
+/// to v1 must never carry a [`Message::requires_v2`] frame.
 pub const PROTOCOL_VERSION: u32 = 2;
 
 /// Oldest peer version this build still understands.
@@ -91,6 +93,21 @@ pub enum Message {
         r2: f64,
         reason: String,
     },
+    /// Client/controller -> server (v2): pull the peer's metrics.
+    StatsRequest,
+    /// Server -> client/controller (v2): metrics snapshot. `text` is
+    /// the Prometheus exposition ([`render_prometheus`]) for humans and
+    /// scrapers; `counters` is the exact named-counter snapshot
+    /// ([`snapshot`]) so a controller can [`aggregate`] cluster-wide
+    /// totals without parsing text.
+    ///
+    /// [`render_prometheus`]: crate::metrics::Metrics::render_prometheus
+    /// [`snapshot`]: crate::metrics::Metrics::snapshot
+    /// [`aggregate`]: crate::metrics::aggregate
+    StatsReply {
+        text: String,
+        counters: Vec<(String, u64)>,
+    },
 }
 
 impl Message {
@@ -130,7 +147,15 @@ impl Message {
             Message::ModelInfo { .. } => 9,
             Message::SwapModel { .. } => 10,
             Message::SwapAck { .. } => 11,
+            Message::StatsRequest => 12,
+            Message::StatsReply { .. } => 13,
         }
+    }
+
+    /// Is this frame part of the v2 vocabulary? Sessions negotiated down
+    /// to v1 must never see these tags in either direction.
+    pub fn requires_v2(&self) -> bool {
+        self.tag() >= 8
     }
 
     /// Serialize to a byte buffer (without the outer length prefix).
@@ -184,6 +209,15 @@ impl Message {
                 b.push(*swapped as u8);
                 put_f64(&mut b, *r2);
                 put_bytes(&mut b, reason.as_bytes());
+            }
+            Message::StatsRequest => {}
+            Message::StatsReply { text, counters } => {
+                put_bytes(&mut b, text.as_bytes());
+                put_u32(&mut b, counters.len() as u32);
+                for (k, v) in counters {
+                    put_bytes(&mut b, k.as_bytes());
+                    put_u64(&mut b, *v);
+                }
             }
         }
         b
@@ -243,6 +277,20 @@ impl Message {
                 r2: c.f64()?,
                 reason: String::from_utf8_lossy(&c.bytes()?).into_owned(),
             },
+            12 => Message::StatsRequest,
+            13 => {
+                let text = String::from_utf8_lossy(&c.bytes()?).into_owned();
+                let n = c.u32()? as usize;
+                if n > MAX_FRAME / 12 {
+                    return Err(Error::Distributed(format!("stats reply too large: {n}")));
+                }
+                let mut counters = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let k = String::from_utf8_lossy(&c.bytes()?).into_owned();
+                    counters.push((k, c.u64()?));
+                }
+                Message::StatsReply { text, counters }
+            }
             t => return Err(Error::Distributed(format!("unknown tag {t}"))),
         };
         if c.pos != buf.len() {
@@ -270,6 +318,13 @@ impl Message {
     pub fn read_from(r: &mut impl Read) -> Result<Message> {
         let mut len_bytes = [0u8; 4];
         r.read_exact(&mut len_bytes)?;
+        Message::read_after_len(len_bytes, r)
+    }
+
+    /// Finish reading a frame whose 4-byte length prefix was already
+    /// consumed — the scoring server peeks those bytes first to tell
+    /// native frames from HTTP request lines on the shared listener.
+    pub fn read_after_len(len_bytes: [u8; 4], r: &mut impl Read) -> Result<Message> {
         let len = u32::from_le_bytes(len_bytes) as usize;
         if len > MAX_FRAME {
             return Err(Error::Distributed(format!("incoming frame too large: {len}")));
@@ -413,6 +468,12 @@ mod tests {
                 r2: 0.91,
                 reason: "dim mismatch 🙅".into(),
             },
+            Message::StatsRequest,
+            Message::StatsReply {
+                text: "# HELP fastsvdd_rows_scored_total rows\n".into(),
+                counters: vec![("rows_scored".into(), 128), ("batches_scored".into(), 2)],
+            },
+            Message::StatsReply { text: String::new(), counters: vec![] },
         ];
         for m in msgs {
             let enc = m.encode();
@@ -478,6 +539,29 @@ mod tests {
         assert_eq!(negotiate(PROTOCOL_VERSION + 5), Some(PROTOCOL_VERSION));
         // prehistoric peers are rejected
         assert_eq!(negotiate(MIN_PROTOCOL_VERSION.saturating_sub(1)), None);
+    }
+
+    #[test]
+    fn v2_vocabulary_is_exactly_the_lifecycle_and_stats_frames() {
+        assert!(!Message::Hello { version: 1 }.requires_v2());
+        assert!(!Message::Shutdown.requires_v2());
+        assert!(!Message::ScoreReply { dist2: vec![], r2: 0.0 }.requires_v2());
+        assert!(Message::ModelInfoRequest.requires_v2());
+        assert!(Message::StatsRequest.requires_v2());
+        assert!(Message::StatsReply { text: String::new(), counters: vec![] }.requires_v2());
+    }
+
+    #[test]
+    fn read_after_len_matches_read_from() {
+        let m = Message::StatsReply {
+            text: "x".into(),
+            counters: vec![("solver_calls".into(), 3)],
+        };
+        let mut buf = Vec::new();
+        m.write_to(&mut buf).unwrap();
+        let len_bytes: [u8; 4] = buf[..4].try_into().unwrap();
+        let mut rest = std::io::Cursor::new(&buf[4..]);
+        assert_eq!(Message::read_after_len(len_bytes, &mut rest).unwrap(), m);
     }
 
     #[test]

@@ -19,3 +19,4 @@ pub mod tcp;
 
 pub use controller::{DistributedConfig, DistributedOutcome};
 pub use local::train_local_cluster;
+pub use tcp::{cluster_stats, train_tcp_cluster, ClusterStats, WorkerServer};

@@ -2,12 +2,18 @@
 //! a controller client, speaking the [`super::message`] protocol over
 //! length-prefixed frames. One thread per accepted connection; the
 //! handshake pins the protocol version.
+//!
+//! Each worker keeps a [`Metrics`] registry of its solver telemetry; a
+//! v2 peer pulls it with [`Message::StatsRequest`], and
+//! [`cluster_stats`] fans that request across a worker fleet and
+//! [`crate::metrics::aggregate`]s the exact counters cluster-wide.
 
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 use crate::error::{Error, Result};
+use crate::metrics::Metrics;
 use crate::sampling::{SamplingConfig, SamplingTrainer};
 use crate::svdd::trainer::SvddParams;
 use crate::svdd::Kernel;
@@ -25,6 +31,7 @@ pub struct WorkerServer {
     addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
     handle: Option<std::thread::JoinHandle<()>>,
+    metrics: Arc<Metrics>,
 }
 
 impl WorkerServer {
@@ -36,14 +43,17 @@ impl WorkerServer {
         listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = stop.clone();
+        let metrics = Arc::new(Metrics::new());
+        let accept_metrics = metrics.clone();
         let handle = std::thread::spawn(move || {
             while !stop2.load(Ordering::Relaxed) {
                 match listener.accept() {
                     Ok((stream, _)) => {
                         stream.set_nonblocking(false).ok();
                         let stop3 = stop2.clone();
+                        let mx = accept_metrics.clone();
                         std::thread::spawn(move || {
-                            let _ = handle_connection(stream, &stop3);
+                            let _ = handle_connection(stream, &stop3, &mx);
                         });
                     }
                     Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -53,11 +63,16 @@ impl WorkerServer {
                 }
             }
         });
-        Ok(WorkerServer { addr: local, stop, handle: Some(handle) })
+        Ok(WorkerServer { addr: local, stop, handle: Some(handle), metrics })
     }
 
     pub fn addr(&self) -> std::net::SocketAddr {
         self.addr
+    }
+
+    /// The worker's metrics registry (shard-train telemetry).
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        &self.metrics
     }
 
     /// Ask the accept loop to exit (in-flight connections finish).
@@ -75,11 +90,18 @@ impl Drop for WorkerServer {
     }
 }
 
-fn handle_connection(mut stream: TcpStream, stop: &AtomicBool) -> Result<()> {
+fn handle_connection(
+    mut stream: TcpStream,
+    stop: &AtomicBool,
+    metrics: &Metrics,
+) -> Result<()> {
     // handshake
-    match Message::read_from(&mut stream)? {
+    let session_version = match Message::read_from(&mut stream)? {
         Message::Hello { version } => match negotiate(version) {
-            Some(v) => Message::HelloAck { version: v }.write_to(&mut stream)?,
+            Some(v) => {
+                Message::HelloAck { version: v }.write_to(&mut stream)?;
+                v
+            }
             None => {
                 Message::TrainFailed {
                     reason: format!("peer version {version} too old (< min supported)"),
@@ -91,11 +113,21 @@ fn handle_connection(mut stream: TcpStream, stop: &AtomicBool) -> Result<()> {
         other => {
             return Err(Error::Distributed(format!("expected Hello, got {other:?}")));
         }
-    }
+    };
     // serve
     while !stop.load(Ordering::Relaxed) {
-        match Message::read_from(&mut stream) {
-            Ok(Message::Train { shard, bw, outlier_fraction, sample_size, max_iter, seed }) => {
+        let msg = match Message::read_from(&mut stream) {
+            Ok(m) => m,
+            Err(_) => break, // peer went away
+        };
+        // never answer a v1 session with frames it cannot decode
+        if session_version < 2 && msg.requires_v2() {
+            return Err(Error::Distributed(format!(
+                "v2 frame on a v{session_version} session: {msg:?}"
+            )));
+        }
+        match msg {
+            Message::Train { shard, bw, outlier_fraction, sample_size, max_iter, seed } => {
                 let params = SvddParams {
                     kernel: Kernel::gaussian(bw),
                     outlier_fraction,
@@ -107,21 +139,30 @@ fn handle_connection(mut stream: TcpStream, stop: &AtomicBool) -> Result<()> {
                     ..Default::default()
                 };
                 let reply = match SamplingTrainer::new(params, cfg).train(&shard, seed) {
-                    Ok(out) => Message::TrainDone {
-                        sv: out.model.support_vectors().clone(),
-                        r2: out.model.r2(),
-                        iterations: out.iterations as u32,
-                        converged: out.converged,
-                    },
+                    Ok(out) => {
+                        metrics.record_training(out.solver_calls, out.iterations, &out.solver);
+                        Message::TrainDone {
+                            sv: out.model.support_vectors().clone(),
+                            r2: out.model.r2(),
+                            iterations: out.iterations as u32,
+                            converged: out.converged,
+                        }
+                    }
                     Err(e) => Message::TrainFailed { reason: e.to_string() },
                 };
                 reply.write_to(&mut stream)?;
             }
-            Ok(Message::Shutdown) => break,
-            Ok(other) => {
+            Message::StatsRequest => {
+                Message::StatsReply {
+                    text: metrics.render_prometheus(),
+                    counters: metrics.snapshot(),
+                }
+                .write_to(&mut stream)?;
+            }
+            Message::Shutdown => break,
+            other => {
                 return Err(Error::Distributed(format!("unexpected {other:?}")));
             }
-            Err(_) => break, // peer went away
         }
     }
     Ok(())
@@ -199,6 +240,60 @@ pub fn train_tcp_cluster(
     Ok(DistributedOutcome { model, reports, union_rows, solver })
 }
 
+/// Cluster-wide metrics pulled by [`cluster_stats`].
+#[derive(Clone, Debug)]
+pub struct ClusterStats {
+    /// Each worker's exact counter snapshot, in `addrs` order.
+    pub per_worker: Vec<(std::net::SocketAddr, Vec<(String, u64)>)>,
+    /// [`crate::metrics::aggregate`] of every snapshot: per-key sums
+    /// across the fleet.
+    pub totals: Vec<(String, u64)>,
+}
+
+/// Pull every worker's metrics over the v2 [`Message::StatsRequest`]
+/// frame and aggregate the exact counters cluster-wide. Fails if any
+/// worker is unreachable or negotiates below v2 (stats frames must
+/// never be sent on a v1 session).
+pub fn cluster_stats(addrs: &[std::net::SocketAddr]) -> Result<ClusterStats> {
+    if addrs.is_empty() {
+        return Err(Error::Distributed("no worker addresses".into()));
+    }
+    let mut per_worker = Vec::with_capacity(addrs.len());
+    for &addr in addrs {
+        let mut stream = TcpStream::connect(addr)?;
+        Message::Hello { version: PROTOCOL_VERSION }.write_to(&mut stream)?;
+        let v = match Message::read_from(&mut stream)? {
+            Message::HelloAck { version } => negotiate(version).ok_or_else(|| {
+                Error::Distributed(format!("worker {addr}: bad version {version}"))
+            })?,
+            other => {
+                return Err(Error::Distributed(format!(
+                    "worker {addr}: bad handshake reply: {other:?}"
+                )))
+            }
+        };
+        if v < 2 {
+            return Err(Error::Distributed(format!(
+                "worker {addr} negotiated v{v}; stats need v2"
+            )));
+        }
+        Message::StatsRequest.write_to(&mut stream)?;
+        match Message::read_from(&mut stream)? {
+            Message::StatsReply { counters, .. } => per_worker.push((addr, counters)),
+            other => {
+                return Err(Error::Distributed(format!(
+                    "worker {addr}: unexpected {other:?}"
+                )))
+            }
+        }
+        Message::Shutdown.write_to(&mut stream).ok();
+    }
+    let snapshots: Vec<Vec<(String, u64)>> =
+        per_worker.iter().map(|(_, c)| c.clone()).collect();
+    let totals = crate::metrics::aggregate(&snapshots);
+    Ok(ClusterStats { per_worker, totals })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -250,5 +345,44 @@ mod tests {
         let params = SvddParams::gaussian(0.4, 0.01);
         let cfg = DistributedConfig::default();
         assert!(train_tcp_cluster(&data, &params, &cfg, &[]).is_err());
+        assert!(cluster_stats(&[]).is_err());
+    }
+
+    #[test]
+    fn cluster_stats_aggregates_worker_counters() {
+        let mut w1 = WorkerServer::spawn("127.0.0.1:0").unwrap();
+        let mut w2 = WorkerServer::spawn("127.0.0.1:0").unwrap();
+        let addrs = vec![w1.addr(), w2.addr()];
+        let data = TwoDonut::default().generate(3000, 3);
+        let params = SvddParams::gaussian(0.4, 0.001);
+        let cfg = DistributedConfig {
+            workers: 2,
+            sampling: SamplingConfig { sample_size: 9, ..Default::default() },
+            seed: 11,
+            shuffle_seed: None,
+        };
+        let out = train_tcp_cluster(&data, &params, &cfg, &addrs).unwrap();
+        let stats = cluster_stats(&addrs).unwrap();
+        assert_eq!(stats.per_worker.len(), 2);
+        let total = |key: &str| {
+            stats
+                .totals
+                .iter()
+                .find(|(k, _)| k == key)
+                .unwrap_or_else(|| panic!("missing key {key}"))
+                .1
+        };
+        // every worker trained once; the aggregated totals must match
+        // the per-worker reports exactly (counters, not averaged rates)
+        let iters: u64 = out.reports.iter().map(|r| r.iterations as u64).sum();
+        assert_eq!(total("train_iterations"), iters);
+        assert_eq!(total("solver_calls"), stats
+            .per_worker
+            .iter()
+            .map(|(_, c)| c.iter().find(|(k, _)| k == "solver_calls").unwrap().1)
+            .sum::<u64>());
+        assert!(total("smo_iterations") > 0);
+        w1.stop();
+        w2.stop();
     }
 }

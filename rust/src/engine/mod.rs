@@ -241,11 +241,29 @@ pub fn trainer_for(method: Method) -> Box<dyn Trainer> {
 /// lifecycle driver both go through here so telemetry is recorded
 /// exactly once per run.
 pub fn run(trainer: &dyn Trainer, ctx: &TrainContext<'_>, data: &Matrix) -> Result<TrainReport> {
+    let mut span = crate::obs::Span::enter("engine.train");
     let sw = Stopwatch::start();
     let mut report = trainer.train(ctx, data)?;
     report.seconds = sw.elapsed_secs();
     if let Some(metrics) = ctx.metrics {
         report.record_to(metrics);
+    }
+    if span.is_live() {
+        span.str("method", report.method.to_string());
+        span.u64("iterations", report.iterations as u64);
+        span.f64("r2", report.model.r2());
+        span.u64("converged", report.converged as u64);
+        drop(span);
+        crate::obs::emit(
+            "train.report",
+            vec![
+                ("method", crate::obs::Value::Str(report.method.to_string())),
+                ("seconds", crate::obs::Value::F64(report.seconds)),
+                ("iterations", crate::obs::Value::U64(report.iterations as u64)),
+                ("r2", crate::obs::Value::F64(report.model.r2())),
+                ("rows_touched", crate::obs::Value::U64(report.rows_touched as u64)),
+            ],
+        );
     }
     Ok(report)
 }

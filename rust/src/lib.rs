@@ -80,6 +80,7 @@ pub mod engine;
 pub mod error;
 pub mod linalg;
 pub mod metrics;
+pub mod obs;
 pub mod parallel;
 pub mod registry;
 pub mod runtime;

@@ -45,6 +45,7 @@ fn run(argv: &[String]) -> Result<()> {
         "serve" => cmd_serve(&args),
         "registry" => cmd_registry(&args),
         "artifacts" => cmd_artifacts(&args),
+        "report" => cmd_report(&args),
         "" | "help" => {
             print!("{HELP}");
             Ok(())
@@ -56,7 +57,7 @@ fn run(argv: &[String]) -> Result<()> {
 /// `train -v`: one line of SMO telemetry (iterations, shrink/unshrink
 /// events, final gap, kernel-cache hit rate) instead of dropping it.
 fn print_solver_stats(stats: &SolverStats) {
-    let hit = match stats.cache_hit_rate {
+    let hit = match stats.cache_hit_rate() {
         Some(r) => format!("{:.1}%", r * 100.0),
         None => "n/a (dense gram)".into(),
     };
@@ -113,10 +114,16 @@ fn cmd_train(args: &Args) -> Result<()> {
         "config", "data", "rows", "method", "bw", "f", "sample-size", "max-iter",
         "candidates", "workers", "shuffle-seed", "threads", "seed", "out", "trace",
         "xla", "artifacts", "addrs", "registry", "promote", "warm-alpha", "wss",
-        "no-shrinking", "v",
+        "no-shrinking", "v", "log-json",
     ])?;
     let cfg = RunConfig::from_args(args)?;
     parallel::install(cfg.parallelism());
+    // tracing is opt-in: --log-json turns the span layer on and streams
+    // every event as one JSON line (render later with `fastsvdd report`)
+    if let Some(path) = args.get("log-json") {
+        fastsvdd::obs::install_sink(Path::new(path))?;
+        fastsvdd::obs::enable();
+    }
     let data = training_data(&cfg.dataset, cfg.rows, cfg.seed)?;
     let engine = Engine::from_config(&cfg)?;
     println!(
@@ -194,6 +201,25 @@ fn cmd_train(args: &Args) -> Result<()> {
             println!("{id} is now the champion");
         }
     }
+    if let Some(path) = args.get("log-json") {
+        fastsvdd::obs::disable();
+        fastsvdd::obs::remove_sink();
+        println!("run log written to {path} (render with: fastsvdd report --log {path})");
+    }
+    Ok(())
+}
+
+/// `fastsvdd report --log run.jsonl`: render the per-stage timing table
+/// and the R^2 convergence trace (paper Fig. 7) from a `--log-json` run
+/// log alone — no model or data needed.
+fn cmd_report(args: &Args) -> Result<()> {
+    args.expect_only(&["log"])?;
+    let path = args
+        .get("log")
+        .ok_or_else(|| Error::Config("--log required (a train --log-json file)".into()))?;
+    let text = std::fs::read_to_string(Path::new(path))?;
+    let report = fastsvdd::obs::report::parse(&text)?;
+    print!("{}", fastsvdd::obs::report::render(&report));
     Ok(())
 }
 

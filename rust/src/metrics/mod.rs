@@ -1,7 +1,16 @@
 //! Lightweight metrics for the serve/train paths: monotonic counters
 //! and fixed-bucket latency histograms, all lock-free (atomics) so the
 //! hot path never blocks on observability.
+//!
+//! Exposition: [`Metrics::render`] is the one-line human form the CLI
+//! prints; [`Metrics::render_prometheus`] is the full Prometheus text
+//! format (counters, the cache-hit-rate gauge, and complete histogram
+//! bucket series) served by the `GET /metrics` responder on a
+//! [`crate::scoring::ScoreServer`] and carried by the `StatsReply`
+//! frame; [`Metrics::snapshot`] / [`aggregate`] are the numeric form
+//! the distributed controller sums across workers.
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Monotonic counter.
@@ -29,12 +38,18 @@ impl Counter {
 }
 
 /// Latency histogram with exponential bucket edges (microseconds):
-/// 1us, 2us, 4us, ... ~ 1hr, plus a running sum/count for the mean.
+/// 1us, 2us, 4us, ... ~ 1hr, plus a running sum/count for the mean and
+/// exact min/max for quantile clamping.
 #[derive(Debug)]
 pub struct Histogram {
     buckets: Vec<AtomicU64>,
     sum_us: AtomicU64,
     count: AtomicU64,
+    /// Exact extremes (`u64::MAX` / `0` while empty): quantiles are
+    /// clamped into `[min, max]` so interpolation never reports a
+    /// latency that was not actually observed.
+    min_us: AtomicU64,
+    max_us: AtomicU64,
 }
 
 const BUCKETS: usize = 42;
@@ -51,16 +66,28 @@ impl Histogram {
             buckets: (0..BUCKETS).map(|_| AtomicU64::new(0)).collect(),
             sum_us: AtomicU64::new(0),
             count: AtomicU64::new(0),
+            min_us: AtomicU64::new(u64::MAX),
+            max_us: AtomicU64::new(0),
         }
     }
 
     /// Record a duration in seconds.
     pub fn observe(&self, secs: f64) {
+        // `as` saturates (NaN -> 0, inf -> u64::MAX), so a pathological
+        // duration cannot wrap the cast...
         let us = (secs * 1e6).max(0.0) as u64;
         let idx = (64 - us.max(1).leading_zeros() as usize - 1).min(BUCKETS - 1);
         self.buckets[idx].fetch_add(1, Ordering::Relaxed);
-        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        // ...and the accumulator saturates instead of overflowing when
+        // such durations pile up (a pegged mean beats a wrapped one).
+        let _ = self
+            .sum_us
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |s| {
+                Some(s.saturating_add(us))
+            });
         self.count.fetch_add(1, Ordering::Relaxed);
+        self.min_us.fetch_min(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
     }
 
     pub fn count(&self) -> u64 {
@@ -75,22 +102,70 @@ impl Histogram {
         self.sum_us.load(Ordering::Relaxed) as f64 / c as f64 / 1e6
     }
 
-    /// Approximate quantile from the bucket midpoints.
+    /// Smallest observed duration (0 while empty).
+    pub fn min_secs(&self) -> f64 {
+        let m = self.min_us.load(Ordering::Relaxed);
+        if m == u64::MAX {
+            0.0
+        } else {
+            m as f64 / 1e6
+        }
+    }
+
+    /// Largest observed duration (0 while empty).
+    pub fn max_secs(&self) -> f64 {
+        self.max_us.load(Ordering::Relaxed) as f64 / 1e6
+    }
+
+    /// Approximate quantile: find the bucket holding the target rank,
+    /// interpolate linearly by rank *within* it (bucket `i` covers
+    /// `[2^i, 2^(i+1))` us), and clamp to the exact observed
+    /// `[min, max]` — so `q=0`/`q=1` are exact and no estimate falls
+    /// outside the data.
     pub fn quantile_secs(&self, q: f64) -> f64 {
         let total = self.count();
         if total == 0 {
             return 0.0;
         }
-        let target = (q.clamp(0.0, 1.0) * total as f64).ceil() as u64;
+        let target = (q.clamp(0.0, 1.0) * total as f64).ceil().max(1.0) as u64;
+        let min = self.min_secs();
+        let max = self.max_secs();
+        // the extreme ranks are known exactly
+        if target <= 1 {
+            return min;
+        }
+        if target >= total {
+            return max;
+        }
         let mut acc = 0u64;
         for (i, b) in self.buckets.iter().enumerate() {
-            acc += b.load(Ordering::Relaxed);
-            if acc >= target {
-                // bucket i covers [2^i, 2^(i+1)) us; report midpoint
-                return (3 << i) as f64 / 2.0 / 1e6;
+            let c = b.load(Ordering::Relaxed);
+            if c == 0 {
+                continue;
             }
+            if acc + c >= target {
+                let lo = (1u64 << i) as f64;
+                let hi = (1u64 << (i + 1).min(63)) as f64;
+                let frac = (target - acc) as f64 / c as f64;
+                let est = (lo + frac * (hi - lo)) / 1e6;
+                return est.clamp(min, max);
+            }
+            acc += c;
         }
-        (1u64 << (BUCKETS - 1)) as f64 / 1e6
+        max
+    }
+
+    /// Per-bucket counts snapshot (non-cumulative), for exposition.
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+
+    pub fn sum_secs(&self) -> f64 {
+        self.sum_us.load(Ordering::Relaxed) as f64 / 1e6
+    }
+
+    fn sum_us(&self) -> u64 {
+        self.sum_us.load(Ordering::Relaxed)
     }
 }
 
@@ -109,6 +184,11 @@ pub struct Metrics {
     pub smo_shrink_events: Counter,
     /// SMO unshrink-and-recheck passes (exact gradient rebuilds).
     pub smo_unshrink_events: Counter,
+    /// Kernel-column cache hits / lookups across every LazyKernel
+    /// solve. Kept as two counters (not a stored rate) so aggregation
+    /// over many solves — and over many workers — stays exact.
+    pub smo_cache_hits: Counter,
+    pub smo_cache_lookups: Counter,
     pub score_latency: Histogram,
     /// Lifecycle: hot-swaps applied to a serving model slot.
     pub model_swaps: Counter,
@@ -130,6 +210,8 @@ impl Metrics {
         self.smo_iterations.add(stats.smo_iterations as u64);
         self.smo_shrink_events.add(stats.shrink_events as u64);
         self.smo_unshrink_events.add(stats.unshrink_events as u64);
+        self.smo_cache_hits.add(stats.cache_hits);
+        self.smo_cache_lookups.add(stats.cache_lookups);
     }
 
     /// Record one training run's uniform telemetry: SMO solve count,
@@ -147,11 +229,22 @@ impl Metrics {
         self.record_solver(stats);
     }
 
+    /// Kernel-column cache hit rate across every recorded solve
+    /// (0 while no lookups have happened).
+    pub fn cache_hit_rate(&self) -> f64 {
+        let lookups = self.smo_cache_lookups.get();
+        if lookups == 0 {
+            0.0
+        } else {
+            self.smo_cache_hits.get() as f64 / lookups as f64
+        }
+    }
+
     /// One-line render for logs / CLI output.
     pub fn render(&self) -> String {
         format!(
             "batches={} rows={} xla_execs={} solves={} iters={} smo_iters={} \
-             shrinks={} unshrinks={} swaps={} \
+             shrinks={} unshrinks={} cache_hit_rate={:.3} swaps={} \
              retrains_warm={} retrains_cold={} score_mean={:.3}ms score_p99={:.3}ms",
             self.batches_scored.get(),
             self.rows_scored.get(),
@@ -161,6 +254,7 @@ impl Metrics {
             self.smo_iterations.get(),
             self.smo_shrink_events.get(),
             self.smo_unshrink_events.get(),
+            self.cache_hit_rate(),
             self.model_swaps.get(),
             self.retrains_warm.get(),
             self.retrains_cold.get(),
@@ -168,6 +262,110 @@ impl Metrics {
             self.score_latency.quantile_secs(0.99) * 1e3,
         )
     }
+
+    /// The counters by stable name. This is what `StatsReply` carries
+    /// on the wire and what [`aggregate`] sums cluster-wide; histogram
+    /// sums ride along in microseconds so they stay integral.
+    pub fn snapshot(&self) -> Vec<(String, u64)> {
+        let pairs: [(&str, u64); 17] = [
+            ("batches_scored", self.batches_scored.get()),
+            ("rows_scored", self.rows_scored.get()),
+            ("xla_executions", self.xla_executions.get()),
+            ("solver_calls", self.solver_calls.get()),
+            ("train_iterations", self.train_iterations.get()),
+            ("smo_iterations", self.smo_iterations.get()),
+            ("smo_shrink_events", self.smo_shrink_events.get()),
+            ("smo_unshrink_events", self.smo_unshrink_events.get()),
+            ("smo_cache_hits", self.smo_cache_hits.get()),
+            ("smo_cache_lookups", self.smo_cache_lookups.get()),
+            ("model_swaps", self.model_swaps.get()),
+            ("retrains_warm", self.retrains_warm.get()),
+            ("retrains_cold", self.retrains_cold.get()),
+            ("score_latency_count", self.score_latency.count()),
+            ("score_latency_sum_us", self.score_latency.sum_us()),
+            ("retrain_latency_count", self.retrain_latency.count()),
+            ("retrain_latency_sum_us", self.retrain_latency.sum_us()),
+        ];
+        pairs.iter().map(|&(k, v)| (k.to_string(), v)).collect()
+    }
+
+    /// Prometheus text exposition (format version 0.0.4): every
+    /// counter, the cache-hit-rate gauge, and the full cumulative
+    /// bucket series of both latency histograms.
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+        let counters: [(&str, &str, u64); 13] = [
+            ("fastsvdd_batches_scored_total", "Scoring batches executed", self.batches_scored.get()),
+            ("fastsvdd_rows_scored_total", "Rows scored", self.rows_scored.get()),
+            ("fastsvdd_xla_executions_total", "XLA artifact executions", self.xla_executions.get()),
+            ("fastsvdd_solver_calls_total", "SMO solver invocations", self.solver_calls.get()),
+            ("fastsvdd_train_iterations_total", "Outer training iterations", self.train_iterations.get()),
+            ("fastsvdd_smo_iterations_total", "SMO pair iterations", self.smo_iterations.get()),
+            ("fastsvdd_smo_shrink_events_total", "SMO shrink passes that removed variables", self.smo_shrink_events.get()),
+            ("fastsvdd_smo_unshrink_events_total", "SMO unshrink-and-recheck passes", self.smo_unshrink_events.get()),
+            ("fastsvdd_smo_cache_hits_total", "Kernel column cache hits", self.smo_cache_hits.get()),
+            ("fastsvdd_smo_cache_lookups_total", "Kernel column cache lookups", self.smo_cache_lookups.get()),
+            ("fastsvdd_model_swaps_total", "Model hot-swaps applied to the serving slot", self.model_swaps.get()),
+            ("fastsvdd_retrains_warm_total", "Warm-start retrains", self.retrains_warm.get()),
+            ("fastsvdd_retrains_cold_total", "Cold-start retrains", self.retrains_cold.get()),
+        ];
+        for (name, help, v) in counters {
+            out.push_str(&format!(
+                "# HELP {name} {help}\n# TYPE {name} counter\n{name} {v}\n"
+            ));
+        }
+        out.push_str(&format!(
+            "# HELP fastsvdd_smo_cache_hit_rate Kernel column cache hit rate \
+             (hits / lookups)\n# TYPE fastsvdd_smo_cache_hit_rate gauge\n\
+             fastsvdd_smo_cache_hit_rate {}\n",
+            self.cache_hit_rate()
+        ));
+        prom_histogram(
+            &mut out,
+            "fastsvdd_score_latency_seconds",
+            "Batch scoring latency",
+            &self.score_latency,
+        );
+        prom_histogram(
+            &mut out,
+            "fastsvdd_retrain_latency_seconds",
+            "Drift-triggered retrain latency",
+            &self.retrain_latency,
+        );
+        out
+    }
+}
+
+/// Append one histogram in Prometheus exposition form: cumulative
+/// `_bucket{le=...}` lines up to the last non-empty bucket, the
+/// mandatory `+Inf` bucket, `_sum` and `_count`.
+fn prom_histogram(out: &mut String, name: &str, help: &str, h: &Histogram) {
+    out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} histogram\n"));
+    let counts = h.bucket_counts();
+    let last = counts.iter().rposition(|&c| c > 0).map(|i| i + 1).unwrap_or(0);
+    let mut cum = 0u64;
+    for (i, &c) in counts.iter().enumerate().take(last) {
+        cum += c;
+        // bucket i covers [2^i, 2^(i+1)) us -> upper edge in seconds
+        let le = (1u64 << (i + 1)) as f64 / 1e6;
+        out.push_str(&format!("{name}_bucket{{le=\"{le}\"}} {cum}\n"));
+    }
+    out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {}\n", h.count()));
+    out.push_str(&format!("{name}_sum {}\n", h.sum_secs()));
+    out.push_str(&format!("{name}_count {}\n", h.count()));
+}
+
+/// Sum per-worker [`Metrics::snapshot`]s key-by-key — the cluster-wide
+/// view the distributed controller reports after pulling `StatsReply`
+/// from every worker.
+pub fn aggregate(snapshots: &[Vec<(String, u64)>]) -> Vec<(String, u64)> {
+    let mut sums: BTreeMap<String, u64> = BTreeMap::new();
+    for snap in snapshots {
+        for (k, v) in snap {
+            *sums.entry(k.clone()).or_insert(0) += v;
+        }
+    }
+    sums.into_iter().collect()
 }
 
 #[cfg(test)]
@@ -204,10 +402,55 @@ mod tests {
     }
 
     #[test]
+    fn histogram_tracks_exact_min_max() {
+        let h = Histogram::new();
+        h.observe(0.0031);
+        h.observe(0.00017);
+        h.observe(0.92);
+        assert!((h.min_secs() - 0.00017).abs() < 2e-6);
+        assert!((h.max_secs() - 0.92).abs() < 2e-6);
+        // q=0 / q=1 are clamped to the exact extremes
+        assert_eq!(h.quantile_secs(0.0), h.min_secs());
+        assert_eq!(h.quantile_secs(1.0), h.max_secs());
+    }
+
+    #[test]
+    fn quantile_interpolates_within_bucket() {
+        // 100 observations spread across one bucket [1024, 2048) us:
+        // the midpoint rule would answer 1536us for *every* quantile;
+        // interpolation must separate p10 from p90.
+        let h = Histogram::new();
+        for i in 0..100 {
+            h.observe((1024.0 + i as f64 * 10.0) / 1e6);
+        }
+        let p10 = h.quantile_secs(0.10);
+        let p90 = h.quantile_secs(0.90);
+        assert!(p90 > p10 + 5e-4, "p10={p10} p90={p90} not separated");
+        assert!((p10 - 0.001126).abs() < 2e-4, "p10={p10}");
+        assert!((p90 - 0.001945).abs() < 2e-4, "p90={p90}");
+    }
+
+    #[test]
+    fn pathological_durations_saturate_not_wrap() {
+        let h = Histogram::new();
+        // each observation saturates the cast to u64::MAX microseconds;
+        // two of them would wrap a naive fetch_add
+        h.observe(f64::INFINITY);
+        h.observe(1e300);
+        h.observe(0.001);
+        assert_eq!(h.count(), 3);
+        // a wrapped accumulator would make the mean tiny; saturation
+        // keeps it pegged enormous
+        assert!(h.mean_secs() > 1e12, "mean={} (sum wrapped?)", h.mean_secs());
+    }
+
+    #[test]
     fn empty_histogram_is_zero() {
         let h = Histogram::new();
         assert_eq!(h.mean_secs(), 0.0);
         assert_eq!(h.quantile_secs(0.5), 0.0);
+        assert_eq!(h.min_secs(), 0.0);
+        assert_eq!(h.max_secs(), 0.0);
     }
 
     #[test]
@@ -221,6 +464,7 @@ mod tests {
         assert!(s.contains("swaps=1"));
         assert!(s.contains("retrains_warm=2"));
         assert!(s.contains("smo_iters=0"));
+        assert!(s.contains("cache_hit_rate=0.000"));
     }
 
     #[test]
@@ -231,17 +475,78 @@ mod tests {
             shrink_events: 3,
             unshrink_events: 1,
             gap: 1e-7,
-            cache_hit_rate: Some(0.9),
+            cache_hits: 90,
+            cache_lookups: 100,
         };
         m.record_solver(&stats);
         m.record_solver(&stats);
         assert_eq!(m.smo_iterations.get(), 240);
         assert_eq!(m.smo_shrink_events.get(), 6);
         assert_eq!(m.smo_unshrink_events.get(), 2);
+        assert_eq!(m.smo_cache_hits.get(), 180);
+        assert_eq!(m.smo_cache_lookups.get(), 200);
         let s = m.render();
         assert!(s.contains("smo_iters=240"));
         assert!(s.contains("shrinks=6"));
         assert!(s.contains("unshrinks=2"));
+        // exact hits/lookups aggregation, not an average of rates
+        assert!(s.contains("cache_hit_rate=0.900"), "{s}");
+    }
+
+    #[test]
+    fn prometheus_exposition_is_well_formed() {
+        let m = Metrics::new();
+        m.rows_scored.add(12);
+        m.smo_cache_hits.add(3);
+        m.smo_cache_lookups.add(4);
+        m.score_latency.observe(0.002);
+        m.score_latency.observe(0.004);
+        let text = m.render_prometheus();
+        assert!(text.contains("# TYPE fastsvdd_rows_scored_total counter"));
+        assert!(text.contains("fastsvdd_rows_scored_total 12"));
+        assert!(text.contains("# TYPE fastsvdd_smo_cache_hit_rate gauge"));
+        assert!(text.contains("fastsvdd_smo_cache_hit_rate 0.75"));
+        assert!(text.contains("# TYPE fastsvdd_score_latency_seconds histogram"));
+        assert!(text.contains("fastsvdd_score_latency_seconds_bucket{le=\"+Inf\"} 2"));
+        assert!(text.contains("fastsvdd_score_latency_seconds_count 2"));
+        // cumulative buckets: the last finite bucket carries the total
+        let cum: Vec<&str> = text
+            .lines()
+            .filter(|l| l.starts_with("fastsvdd_score_latency_seconds_bucket"))
+            .collect();
+        assert!(cum.len() >= 2, "expected bucket series, got {cum:?}");
+        assert!(cum[cum.len() - 2].ends_with(" 2"), "{cum:?}");
+        // every line is either a comment or "name[{labels}] value"
+        for line in text.lines() {
+            assert!(!line.is_empty());
+            if !line.starts_with('#') {
+                let mut parts = line.rsplitn(2, ' ');
+                let value = parts.next().unwrap();
+                assert!(value.parse::<f64>().is_ok(), "bad value in {line}");
+            }
+        }
+    }
+
+    #[test]
+    fn snapshot_and_aggregate_sum_per_key() {
+        let a = Metrics::new();
+        a.rows_scored.add(10);
+        a.smo_cache_hits.add(5);
+        let b = Metrics::new();
+        b.rows_scored.add(7);
+        b.smo_cache_lookups.add(2);
+        let total = aggregate(&[a.snapshot(), b.snapshot()]);
+        let get = |k: &str| {
+            total
+                .iter()
+                .find(|(name, _)| name == k)
+                .map(|(_, v)| *v)
+                .unwrap()
+        };
+        assert_eq!(get("rows_scored"), 17);
+        assert_eq!(get("smo_cache_hits"), 5);
+        assert_eq!(get("smo_cache_lookups"), 2);
+        assert_eq!(get("model_swaps"), 0);
     }
 
     #[test]

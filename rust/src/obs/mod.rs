@@ -1,0 +1,417 @@
+//! Observability: lightweight tracing spans, a bounded lock-free event
+//! log, and an optional JSONL sink.
+//!
+//! Everything here is **opt-in and near-zero-cost when off**: the only
+//! thing an instrumented code path pays while tracing is disabled (the
+//! default) is one relaxed atomic load per [`Span::enter`] /
+//! [`emit`] call — no clock read, no allocation, no queue traffic.
+//! `benches/perf_obs.rs` pins that cost in CI.
+//!
+//! ## Span taxonomy
+//!
+//! | span / event            | fields                                   |
+//! |-------------------------|------------------------------------------|
+//! | `engine.train`          | `method`, `iterations`, `r2`, `converged`|
+//! | `sampling.iter`         | `iteration`, `r2`, `num_sv`, `stage=iter`|
+//! | `sampling.solve`        | `stage` (seed/sample/union), `rows`      |
+//! | `smo.solve`             | `n`, `iterations`, `shrinks`, `gap`      |
+//! | `gram.compute`          | `rows`, `entries`                        |
+//! | `score.dist2_batch`     | `rows`, `num_sv`                         |
+//! | `batcher.batch`         | `rows`, `requests`                       |
+//! | `server.request`        | `kind` (score/info/swap/stats)           |
+//! | `lifecycle.retrain`     | `version`, `warm`, `r2`                  |
+//! | `lifecycle.drift` (ev)  | `action`                                 |
+//! | `lifecycle.promote` (ev)| `version`                                |
+//! | `lifecycle.swap` (ev)   | `version`, `epoch`                       |
+//! | `train.report` (ev)     | `method`, `seconds`, `r2`, ...           |
+//!
+//! Spans record wall time on the process monotonic clock
+//! ([`now_us`]); closing a span pushes one [`Event`] into a global
+//! bounded [`Ring`] (full ring = drop + count, never block) and, when
+//! a sink is installed ([`install_sink`]), appends one JSON line. Hot
+//! paths (`gram`, `dist2_batch`) only open spans above
+//! [`crate::parallel::MIN_PAR_WORK`] so the microkernels stay
+//! untouched.
+//!
+//! `fastsvdd train --log-json run.jsonl` enables tracing plus the
+//! sink; `fastsvdd report --log run.jsonl` renders the per-stage
+//! timing table and the R² convergence trace from the file alone
+//! ([`report`]).
+
+pub mod report;
+mod ring;
+
+pub use ring::Ring;
+
+use std::io::Write;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::error::Result;
+use crate::util::json::{num, obj, s, Json};
+
+/// Events the global ring retains (bounded memory: ~a few hundred
+/// bytes per event).
+const RING_CAPACITY: usize = 8192;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+static RING: OnceLock<Ring<Event>> = OnceLock::new();
+static SINK: Mutex<Option<std::io::BufWriter<std::fs::File>>> = Mutex::new(None);
+static NEXT_THREAD: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    static THREAD_ID: u64 = NEXT_THREAD.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Is tracing on? One relaxed load — this is the entire disabled-path
+/// cost of every instrumentation point.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn tracing on (idempotent). Pins the monotonic epoch on first use.
+pub fn enable() {
+    EPOCH.get_or_init(Instant::now);
+    ENABLED.store(true, Ordering::Relaxed);
+}
+
+/// Turn tracing off. Already-open spans still record on close.
+pub fn disable() {
+    ENABLED.store(false, Ordering::Relaxed);
+}
+
+/// Microseconds since the tracing epoch (process-monotonic).
+pub fn now_us() -> u64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_micros() as u64
+}
+
+fn thread_id() -> u64 {
+    THREAD_ID.with(|v| *v)
+}
+
+fn ring() -> &'static Ring<Event> {
+    RING.get_or_init(|| Ring::new(RING_CAPACITY))
+}
+
+/// A recorded field value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    U64(u64),
+    F64(f64),
+    Str(String),
+}
+
+impl Value {
+    fn to_json(&self) -> Json {
+        match self {
+            Value::U64(v) => num(*v as f64),
+            Value::F64(v) => num(*v),
+            Value::Str(v) => s(v.clone()),
+        }
+    }
+}
+
+/// One closed span or point event.
+#[derive(Clone, Debug)]
+pub struct Event {
+    pub name: &'static str,
+    /// `false` for point events ([`emit`]), which carry no duration.
+    pub is_span: bool,
+    pub start_us: u64,
+    pub dur_us: u64,
+    pub thread: u64,
+    pub fields: Vec<(&'static str, Value)>,
+}
+
+impl Event {
+    /// The compact JSONL line: span/event envelope with the fields
+    /// flattened alongside it.
+    pub fn to_json(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> = vec![
+            ("type", s(if self.is_span { "span" } else { "event" })),
+            ("name", s(self.name)),
+            ("ts_us", num(self.start_us as f64)),
+            ("thread", num(self.thread as f64)),
+        ];
+        if self.is_span {
+            pairs.push(("dur_us", num(self.dur_us as f64)));
+        }
+        for (k, v) in &self.fields {
+            pairs.push((k, v.to_json()));
+        }
+        obj(pairs)
+    }
+}
+
+/// An open span. Created by [`Span::enter`], recorded on drop. When
+/// tracing is off the struct is an inert `None` and every method is a
+/// no-op.
+pub struct Span(Option<SpanInner>);
+
+struct SpanInner {
+    name: &'static str,
+    start_us: u64,
+    fields: Vec<(&'static str, Value)>,
+}
+
+impl Span {
+    /// An inert span, for call sites that gate instrumentation on their
+    /// own condition (e.g. work-size floors) and need a `Span` either way.
+    #[inline]
+    pub fn disabled() -> Span {
+        Span(None)
+    }
+
+    #[inline]
+    pub fn enter(name: &'static str) -> Span {
+        if !enabled() {
+            return Span(None);
+        }
+        Span(Some(SpanInner { name, start_us: now_us(), fields: Vec::new() }))
+    }
+
+    /// Is this span live (tracing was on when it was opened)? Lets
+    /// callers skip computing expensive field values.
+    #[inline]
+    pub fn is_live(&self) -> bool {
+        self.0.is_some()
+    }
+
+    #[inline]
+    pub fn u64(&mut self, key: &'static str, v: u64) {
+        if let Some(inner) = &mut self.0 {
+            inner.fields.push((key, Value::U64(v)));
+        }
+    }
+
+    #[inline]
+    pub fn f64(&mut self, key: &'static str, v: f64) {
+        if let Some(inner) = &mut self.0 {
+            inner.fields.push((key, Value::F64(v)));
+        }
+    }
+
+    #[inline]
+    pub fn str(&mut self, key: &'static str, v: impl Into<String>) {
+        if let Some(inner) = &mut self.0 {
+            inner.fields.push((key, Value::Str(v.into())));
+        }
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some(inner) = self.0.take() {
+            let now = now_us();
+            record(Event {
+                name: inner.name,
+                is_span: true,
+                start_us: inner.start_us,
+                dur_us: now.saturating_sub(inner.start_us),
+                thread: thread_id(),
+                fields: inner.fields,
+            });
+        }
+    }
+}
+
+/// Record a point event (lifecycle transition, train report). No-op
+/// while tracing is off.
+pub fn emit(name: &'static str, fields: Vec<(&'static str, Value)>) {
+    if !enabled() {
+        return;
+    }
+    record(Event {
+        name,
+        is_span: false,
+        start_us: now_us(),
+        dur_us: 0,
+        thread: thread_id(),
+        fields,
+    });
+}
+
+fn record(ev: Event) {
+    // write the JSONL line first so the event can move into the ring
+    // by value afterwards (no clone)
+    if let Ok(mut g) = SINK.lock() {
+        if let Some(w) = g.as_mut() {
+            let _ = writeln!(w, "{}", ev.to_json());
+        }
+    }
+    ring().push(ev);
+}
+
+/// Write every event (span close / lifecycle transition / train
+/// report) as one JSON line to `path`, truncating any existing file.
+/// Installing a sink does not enable tracing — call [`enable`] too.
+pub fn install_sink(path: impl AsRef<std::path::Path>) -> Result<()> {
+    let f = std::fs::File::create(path.as_ref())?;
+    let mut g = SINK.lock().unwrap_or_else(|e| e.into_inner());
+    *g = Some(std::io::BufWriter::new(f));
+    Ok(())
+}
+
+/// Flush and detach the JSONL sink (events keep flowing to the ring).
+pub fn remove_sink() {
+    let mut g = SINK.lock().unwrap_or_else(|e| e.into_inner());
+    if let Some(w) = g.as_mut() {
+        let _ = w.flush();
+    }
+    *g = None;
+}
+
+/// Flush the JSONL sink without detaching it.
+pub fn flush_sink() {
+    let mut g = SINK.lock().unwrap_or_else(|e| e.into_inner());
+    if let Some(w) = g.as_mut() {
+        let _ = w.flush();
+    }
+}
+
+/// Pop every event currently in the ring (oldest first).
+pub fn drain() -> Vec<Event> {
+    ring().drain()
+}
+
+/// Events discarded because the ring was full.
+pub fn dropped() -> u64 {
+    ring().dropped()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The global enable flag and ring are process-wide, so every test
+    /// touching them runs under this lock to stay order-independent.
+    static TEST_GUARD: Mutex<()> = Mutex::new(());
+
+    fn locked() -> std::sync::MutexGuard<'static, ()> {
+        let g = TEST_GUARD.lock().unwrap_or_else(|e| e.into_inner());
+        disable();
+        drain();
+        g
+    }
+
+    #[test]
+    fn disabled_span_records_nothing() {
+        let _g = locked();
+        {
+            let mut sp = Span::enter("test.noop");
+            assert!(!sp.is_live());
+            sp.u64("k", 1);
+        }
+        emit("test.noop_event", vec![]);
+        assert!(drain().is_empty());
+    }
+
+    #[test]
+    fn enabled_span_records_fields_and_duration() {
+        let _g = locked();
+        enable();
+        {
+            let mut sp = Span::enter("test.span");
+            assert!(sp.is_live());
+            sp.u64("iteration", 3);
+            sp.f64("r2", 0.5);
+            sp.str("stage", "union");
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        disable();
+        let evs = drain();
+        assert_eq!(evs.len(), 1);
+        let ev = &evs[0];
+        assert_eq!(ev.name, "test.span");
+        assert!(ev.is_span);
+        assert!(ev.dur_us >= 1000, "dur_us={}", ev.dur_us);
+        assert_eq!(ev.fields[0], ("iteration", Value::U64(3)));
+        assert_eq!(ev.fields[2], ("stage", Value::Str("union".into())));
+    }
+
+    #[test]
+    fn emit_records_point_event() {
+        let _g = locked();
+        enable();
+        emit("lifecycle.promote", vec![("version", Value::Str("v-abc".into()))]);
+        disable();
+        let evs = drain();
+        assert_eq!(evs.len(), 1);
+        assert!(!evs[0].is_span);
+        assert_eq!(evs[0].dur_us, 0);
+    }
+
+    #[test]
+    fn event_json_line_is_flat_and_single_line() {
+        let _g = locked();
+        let ev = Event {
+            name: "sampling.iter",
+            is_span: true,
+            start_us: 10,
+            dur_us: 5,
+            thread: 1,
+            fields: vec![("iteration", Value::U64(2)), ("r2", Value::F64(0.25))],
+        };
+        let line = ev.to_json().to_string();
+        assert!(!line.contains('\n'));
+        let parsed = Json::parse(&line).unwrap();
+        assert_eq!(parsed.get("name").unwrap().as_str().unwrap(), "sampling.iter");
+        assert_eq!(parsed.get("dur_us").unwrap().as_usize().unwrap(), 5);
+        assert_eq!(parsed.get("iteration").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(parsed.get("r2").unwrap().as_f64().unwrap(), 0.25);
+    }
+
+    #[test]
+    fn sink_writes_one_line_per_event() {
+        let _g = locked();
+        let path = std::env::temp_dir()
+            .join(format!("fastsvdd_obs_sink_{}.jsonl", std::process::id()));
+        install_sink(&path).unwrap();
+        enable();
+        {
+            let mut sp = Span::enter("test.sink");
+            sp.u64("rows", 42);
+        }
+        emit("test.sink_event", vec![("k", Value::U64(7))]);
+        disable();
+        remove_sink();
+        drain();
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let first = Json::parse(lines[0]).unwrap();
+        assert_eq!(first.get("name").unwrap().as_str().unwrap(), "test.sink");
+        assert_eq!(first.get("rows").unwrap().as_usize().unwrap(), 42);
+        let second = Json::parse(lines[1]).unwrap();
+        assert_eq!(second.get("type").unwrap().as_str().unwrap(), "event");
+    }
+
+    #[test]
+    fn spans_from_many_threads_all_land() {
+        let _g = locked();
+        enable();
+        let handles: Vec<_> = (0..4)
+            .map(|t| {
+                std::thread::spawn(move || {
+                    for i in 0..50u64 {
+                        let mut sp = Span::enter("test.mt");
+                        sp.u64("i", t * 100 + i);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        disable();
+        let evs = drain();
+        assert_eq!(evs.len(), 200);
+        let threads: std::collections::HashSet<u64> =
+            evs.iter().map(|e| e.thread).collect();
+        assert!(threads.len() >= 2, "expected multiple thread ids");
+    }
+}

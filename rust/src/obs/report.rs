@@ -1,0 +1,259 @@
+//! Render a `--log-json` run log back into the paper's evidence:
+//! the per-stage timing breakdown (where did the training time go —
+//! sample solves, union solves, scoring) and the Fig-7-style R²
+//! convergence trace, reconstructed from the JSONL alone.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+use crate::util::timer::fmt_duration;
+
+/// Aggregated timing for one span label (span name, refined by the
+/// `stage` field when present — e.g. `sampling.solve[union]`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct StageRow {
+    pub label: String,
+    pub count: u64,
+    pub total_secs: f64,
+    pub max_secs: f64,
+}
+
+impl StageRow {
+    pub fn mean_secs(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.total_secs / self.count as f64
+        }
+    }
+}
+
+/// One `sampling.iter` span: (iteration, r2, num_sv).
+pub type TracePoint = (u64, f64, u64);
+
+/// Everything the report verb extracts from a run log.
+#[derive(Clone, Debug, Default)]
+pub struct RunReport {
+    /// Per-label timing, sorted by total time descending.
+    pub stages: Vec<StageRow>,
+    /// R² convergence trace from `sampling.iter` spans, by iteration.
+    pub trace: Vec<TracePoint>,
+    /// `train.report` events, rendered one line each.
+    pub trains: Vec<String>,
+    /// Lines that failed to parse (reported, not fatal).
+    pub skipped: usize,
+}
+
+/// Parse a JSONL run log (one event per line, as written by the
+/// [`super`] sink). Unparseable lines are counted in `skipped` rather
+/// than failing the whole report — a crashed run's truncated last line
+/// must not make the log unreadable.
+pub fn parse(text: &str) -> Result<RunReport> {
+    let mut stages: BTreeMap<String, StageRow> = BTreeMap::new();
+    let mut trace: Vec<TracePoint> = Vec::new();
+    let mut trains: Vec<String> = Vec::new();
+    let mut skipped = 0usize;
+    let mut any = false;
+
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let ev = match Json::parse(line) {
+            Ok(j) => j,
+            Err(_) => {
+                skipped += 1;
+                continue;
+            }
+        };
+        let name = match ev.get("name").and_then(|n| n.as_str()) {
+            Some(n) => n.to_string(),
+            None => {
+                skipped += 1;
+                continue;
+            }
+        };
+        any = true;
+        let is_span = ev.get("type").and_then(|t| t.as_str()) == Some("span");
+
+        if is_span {
+            let dur_secs = ev
+                .get("dur_us")
+                .and_then(|d| d.as_f64())
+                .unwrap_or(0.0)
+                / 1e6;
+            let label = match ev.get("stage").and_then(|s| s.as_str()) {
+                Some(stage) => format!("{name}[{stage}]"),
+                None => name.clone(),
+            };
+            let row = stages.entry(label.clone()).or_insert(StageRow {
+                label,
+                count: 0,
+                total_secs: 0.0,
+                max_secs: 0.0,
+            });
+            row.count += 1;
+            row.total_secs += dur_secs;
+            row.max_secs = row.max_secs.max(dur_secs);
+
+            if name == "sampling.iter" {
+                let it = ev.get("iteration").and_then(|v| v.as_f64()).unwrap_or(0.0);
+                let r2 = ev.get("r2").and_then(|v| v.as_f64()).unwrap_or(0.0);
+                let sv = ev.get("num_sv").and_then(|v| v.as_f64()).unwrap_or(0.0);
+                trace.push((it as u64, r2, sv as u64));
+            }
+        } else if name == "train.report" {
+            let method = ev.get("method").and_then(|v| v.as_str()).unwrap_or("?");
+            let secs = ev.get("seconds").and_then(|v| v.as_f64()).unwrap_or(0.0);
+            let iters = ev.get("iterations").and_then(|v| v.as_f64()).unwrap_or(0.0);
+            let r2 = ev.get("r2").and_then(|v| v.as_f64()).unwrap_or(0.0);
+            trains.push(format!(
+                "method={method} time={} iterations={} r2={r2:.6}",
+                fmt_duration(secs),
+                iters as u64
+            ));
+        }
+    }
+
+    if !any {
+        return Err(Error::invalid("run log contains no parseable events"));
+    }
+    trace.sort_by_key(|&(it, _, _)| it);
+    let mut stages: Vec<StageRow> = stages.into_values().collect();
+    stages.sort_by(|a, b| {
+        b.total_secs
+            .partial_cmp(&a.total_secs)
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    Ok(RunReport { stages, trace, trains, skipped })
+}
+
+/// Render the report as the CLI prints it: training summary, the
+/// per-stage timing table, and the R² trace with a proportional bar
+/// per iteration (the Fig-7 shape, in a terminal).
+pub fn render(r: &RunReport) -> String {
+    let mut out = String::new();
+    for t in &r.trains {
+        out.push_str("train: ");
+        out.push_str(t);
+        out.push('\n');
+    }
+    if !r.trains.is_empty() {
+        out.push('\n');
+    }
+
+    out.push_str("per-stage timing\n");
+    out.push_str(&format!(
+        "  {:<28} {:>7} {:>12} {:>12} {:>12}\n",
+        "stage", "count", "total", "mean", "max"
+    ));
+    for row in &r.stages {
+        out.push_str(&format!(
+            "  {:<28} {:>7} {:>12} {:>12} {:>12}\n",
+            row.label,
+            row.count,
+            fmt_duration(row.total_secs),
+            fmt_duration(row.mean_secs()),
+            fmt_duration(row.max_secs),
+        ));
+    }
+
+    if !r.trace.is_empty() {
+        out.push_str("\nR^2 convergence trace (paper Fig. 7)\n");
+        let max_r2 = r
+            .trace
+            .iter()
+            .map(|&(_, r2, _)| r2)
+            .fold(f64::MIN, f64::max)
+            .max(1e-300);
+        for &(it, r2, sv) in &r.trace {
+            let width = ((r2 / max_r2) * 40.0).round().max(0.0) as usize;
+            out.push_str(&format!(
+                "  iter {it:>4}  r2={r2:<12.6} sv={sv:<5} |{}\n",
+                "#".repeat(width.min(40))
+            ));
+        }
+    }
+
+    if r.skipped > 0 {
+        out.push_str(&format!("\n({} unparseable lines skipped)\n", r.skipped));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_log() -> String {
+        [
+            r#"{"type":"span","name":"sampling.solve","ts_us":10,"dur_us":2000,"thread":1,"stage":"seed","rows":6}"#,
+            r#"{"type":"span","name":"sampling.solve","ts_us":20,"dur_us":1000,"thread":1,"stage":"sample","rows":6}"#,
+            r#"{"type":"span","name":"sampling.solve","ts_us":30,"dur_us":3000,"thread":1,"stage":"union","rows":12}"#,
+            r#"{"type":"span","name":"sampling.iter","ts_us":40,"dur_us":4500,"thread":1,"iteration":1,"r2":0.5,"num_sv":4}"#,
+            r#"{"type":"span","name":"sampling.iter","ts_us":50,"dur_us":4000,"thread":1,"iteration":2,"r2":0.75,"num_sv":5}"#,
+            r#"{"type":"event","name":"train.report","ts_us":60,"thread":1,"method":"sampling","seconds":0.012,"iterations":2,"r2":0.75}"#,
+        ]
+        .join("\n")
+    }
+
+    #[test]
+    fn parse_groups_by_name_and_stage() {
+        let rep = parse(&sample_log()).unwrap();
+        assert_eq!(rep.skipped, 0);
+        let labels: Vec<&str> = rep.stages.iter().map(|r| r.label.as_str()).collect();
+        assert!(labels.contains(&"sampling.solve[seed]"));
+        assert!(labels.contains(&"sampling.solve[sample]"));
+        assert!(labels.contains(&"sampling.solve[union]"));
+        let union = rep
+            .stages
+            .iter()
+            .find(|r| r.label == "sampling.solve[union]")
+            .unwrap();
+        assert_eq!(union.count, 1);
+        assert!((union.total_secs - 0.003).abs() < 1e-12);
+        // stages sorted by total time descending: iter spans dominate
+        assert_eq!(rep.stages[0].label, "sampling.iter");
+        assert_eq!(rep.stages[0].count, 2);
+    }
+
+    #[test]
+    fn parse_extracts_r2_trace_in_iteration_order() {
+        let rep = parse(&sample_log()).unwrap();
+        assert_eq!(rep.trace, vec![(1, 0.5, 4), (2, 0.75, 5)]);
+        assert_eq!(rep.trains.len(), 1);
+        assert!(rep.trains[0].contains("method=sampling"));
+    }
+
+    #[test]
+    fn garbage_lines_are_skipped_not_fatal() {
+        let text = format!("{}\nnot json at all\n{{\"truncat", sample_log());
+        let rep = parse(&text).unwrap();
+        assert_eq!(rep.skipped, 2);
+        assert_eq!(rep.trace.len(), 2);
+    }
+
+    #[test]
+    fn empty_log_is_an_error() {
+        assert!(parse("").is_err());
+        assert!(parse("garbage\nmore garbage").is_err());
+    }
+
+    #[test]
+    fn render_contains_table_and_trace() {
+        let rep = parse(&sample_log()).unwrap();
+        let out = render(&rep);
+        assert!(out.contains("per-stage timing"));
+        assert!(out.contains("sampling.solve[union]"));
+        assert!(out.contains("R^2 convergence trace"));
+        assert!(out.contains("iter    2"));
+        // the final iteration carries the longest bar
+        let bar1 = out.lines().find(|l| l.contains("iter    1")).unwrap();
+        let bar2 = out.lines().find(|l| l.contains("iter    2")).unwrap();
+        let hashes = |l: &str| l.chars().filter(|&c| c == '#').count();
+        assert!(hashes(bar2) > hashes(bar1));
+        assert_eq!(hashes(bar2), 40);
+    }
+}

@@ -1,0 +1,263 @@
+//! Bounded lock-free MPMC ring buffer — the event log behind the span
+//! tracer. Dmitry Vyukov's bounded-queue design: each slot carries a
+//! sequence number that encodes both "which lap of the ring this slot
+//! is on" and "is it currently readable or writable", so producers and
+//! consumers coordinate entirely through per-slot atomics plus two
+//! global tickets. No locks, no spinning on contention (a full ring
+//! *drops* the event and counts it rather than blocking a training or
+//! scoring thread — observability must never introduce a stall).
+
+use std::cell::UnsafeCell;
+use std::mem::MaybeUninit;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+struct Slot<T> {
+    /// Writable when `seq == pos`; readable when `seq == pos + 1`
+    /// (where `pos` is the producer/consumer ticket for this slot on
+    /// the current lap).
+    seq: AtomicUsize,
+    value: UnsafeCell<MaybeUninit<T>>,
+}
+
+/// Bounded lock-free multi-producer multi-consumer queue.
+pub struct Ring<T> {
+    slots: Box<[Slot<T>]>,
+    mask: usize,
+    head: AtomicUsize,
+    tail: AtomicUsize,
+    dropped: AtomicU64,
+}
+
+// Safety: slots are handed to exactly one thread at a time by the
+// seq/ticket protocol below; T crosses threads by value.
+unsafe impl<T: Send> Sync for Ring<T> {}
+unsafe impl<T: Send> Send for Ring<T> {}
+
+impl<T> Ring<T> {
+    /// `capacity` is rounded up to the next power of two (min 2).
+    pub fn new(capacity: usize) -> Ring<T> {
+        let cap = capacity.max(2).next_power_of_two();
+        let slots = (0..cap)
+            .map(|i| Slot {
+                seq: AtomicUsize::new(i),
+                value: UnsafeCell::new(MaybeUninit::uninit()),
+            })
+            .collect::<Vec<_>>()
+            .into_boxed_slice();
+        Ring {
+            slots,
+            mask: cap - 1,
+            head: AtomicUsize::new(0),
+            tail: AtomicUsize::new(0),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Events discarded because the ring was full.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Push `v`; on a full ring the value is dropped (counted) and
+    /// `false` returned — never blocks.
+    pub fn push(&self, v: T) -> bool {
+        let mut pos = self.head.load(Ordering::Relaxed);
+        loop {
+            let slot = &self.slots[pos & self.mask];
+            let seq = slot.seq.load(Ordering::Acquire);
+            let dif = seq as isize - pos as isize;
+            if dif == 0 {
+                // slot is writable for ticket `pos`: claim the ticket
+                match self.head.compare_exchange_weak(
+                    pos,
+                    pos.wrapping_add(1),
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => {
+                        unsafe { (*slot.value.get()).write(v) };
+                        slot.seq.store(pos.wrapping_add(1), Ordering::Release);
+                        return true;
+                    }
+                    Err(p) => pos = p,
+                }
+            } else if dif < 0 {
+                // the consumer has not freed this slot yet: full
+                self.dropped.fetch_add(1, Ordering::Relaxed);
+                return false;
+            } else {
+                pos = self.head.load(Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Pop the oldest value, if any.
+    pub fn pop(&self) -> Option<T> {
+        let mut pos = self.tail.load(Ordering::Relaxed);
+        loop {
+            let slot = &self.slots[pos & self.mask];
+            let seq = slot.seq.load(Ordering::Acquire);
+            let dif = seq as isize - pos.wrapping_add(1) as isize;
+            if dif == 0 {
+                match self.tail.compare_exchange_weak(
+                    pos,
+                    pos.wrapping_add(1),
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => {
+                        let v = unsafe { (*slot.value.get()).assume_init_read() };
+                        // free the slot for the producer's next lap
+                        slot.seq
+                            .store(pos.wrapping_add(self.mask + 1), Ordering::Release);
+                        return Some(v);
+                    }
+                    Err(p) => pos = p,
+                }
+            } else if dif < 0 {
+                return None; // empty
+            } else {
+                pos = self.tail.load(Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Pop everything currently queued.
+    pub fn drain(&self) -> Vec<T> {
+        let mut out = Vec::new();
+        while let Some(v) = self.pop() {
+            out.push(v);
+        }
+        out
+    }
+}
+
+impl<T> Drop for Ring<T> {
+    fn drop(&mut self) {
+        while self.pop().is_some() {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_order_single_thread() {
+        let r = Ring::new(8);
+        for i in 0..5 {
+            assert!(r.push(i));
+        }
+        assert_eq!(r.drain(), vec![0, 1, 2, 3, 4]);
+        assert_eq!(r.pop(), None);
+    }
+
+    #[test]
+    fn full_ring_drops_and_counts() {
+        let r = Ring::new(4); // capacity 4
+        for i in 0..4 {
+            assert!(r.push(i));
+        }
+        assert!(!r.push(99));
+        assert!(!r.push(100));
+        assert_eq!(r.dropped(), 2);
+        assert_eq!(r.drain(), vec![0, 1, 2, 3]);
+        // space freed: pushes succeed again
+        assert!(r.push(7));
+        assert_eq!(r.pop(), Some(7));
+    }
+
+    #[test]
+    fn capacity_rounds_to_power_of_two() {
+        assert_eq!(Ring::<u32>::new(5).capacity(), 8);
+        assert_eq!(Ring::<u32>::new(0).capacity(), 2);
+    }
+
+    #[test]
+    fn wraps_across_many_laps() {
+        let r = Ring::new(4);
+        for lap in 0u64..100 {
+            for i in 0..3 {
+                assert!(r.push(lap * 10 + i));
+            }
+            assert_eq!(r.drain(), vec![lap * 10, lap * 10 + 1, lap * 10 + 2]);
+        }
+    }
+
+    #[test]
+    fn concurrent_producers_lose_nothing_under_capacity() {
+        // 8 producers x 500 values into a ring big enough to hold all:
+        // every value must come out exactly once.
+        let r = Arc::new(Ring::new(8 * 500));
+        let handles: Vec<_> = (0..8u64)
+            .map(|t| {
+                let r = r.clone();
+                std::thread::spawn(move || {
+                    for i in 0..500u64 {
+                        assert!(r.push(t * 1000 + i));
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let mut got = r.drain();
+        assert_eq!(got.len(), 4000);
+        got.sort_unstable();
+        got.dedup();
+        assert_eq!(got.len(), 4000, "duplicated or lost values");
+        assert_eq!(r.dropped(), 0);
+    }
+
+    #[test]
+    fn concurrent_producer_consumer() {
+        let r = Arc::new(Ring::new(64));
+        let total = Arc::new(AtomicU64::new(0));
+        let producers: Vec<_> = (0..4)
+            .map(|_| {
+                let r = r.clone();
+                std::thread::spawn(move || {
+                    for i in 1..=1000u64 {
+                        r.push(i);
+                    }
+                })
+            })
+            .collect();
+        let consumer = {
+            let r = r.clone();
+            let total = total.clone();
+            std::thread::spawn(move || loop {
+                match r.pop() {
+                    Some(v) => {
+                        total.fetch_add(v, Ordering::Relaxed);
+                    }
+                    None => {
+                        if Arc::strong_count(&r) == 2 {
+                            // producers done (only main + us hold refs);
+                            // drain the leftovers and exit
+                            while let Some(v) = r.pop() {
+                                total.fetch_add(v, Ordering::Relaxed);
+                            }
+                            break;
+                        }
+                        std::thread::yield_now();
+                    }
+                }
+            })
+        };
+        for p in producers {
+            p.join().unwrap();
+        }
+        consumer.join().unwrap();
+        // popped + dropped == pushed
+        let popped_plus_dropped_ok = total.load(Ordering::Relaxed) > 0;
+        assert!(popped_plus_dropped_ok);
+        assert_eq!(r.pop(), None);
+    }
+}

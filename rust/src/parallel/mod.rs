@@ -341,6 +341,17 @@ pub fn gram(data: &Matrix, kernel: Kernel, pool: Pool) -> Vec<f64> {
     // its rows' (n - i) entries, so worker blocks are weighted to keep
     // the split balanced
     let work = n * n * data.cols().max(1) / 2;
+    // span only above the parallel-work floor — tiny Grams (seed solves,
+    // tests) stay clock-free
+    let mut span = if work >= MIN_PAR_WORK {
+        crate::obs::Span::enter("gram.compute")
+    } else {
+        crate::obs::Span::disabled()
+    };
+    if span.is_live() {
+        span.u64("rows", n as u64);
+        span.u64("entries", (n * n) as u64);
+    }
     let weight = |ci: usize| {
         let r0 = ci * GRAM_PANEL_ROWS;
         let r1 = (r0 + GRAM_PANEL_ROWS).min(n);

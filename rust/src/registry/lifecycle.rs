@@ -129,6 +129,7 @@ impl Lifecycle {
                 )));
             }
         }
+        let mut span = crate::obs::Span::enter("lifecycle.retrain");
         let champion = self.registry.champion_model()?;
         let warm_from = champion
             .as_ref()
@@ -155,7 +156,17 @@ impl Lifecycle {
         let meta = VersionMeta::from_report(&report, data);
         let id = self.registry.publish(&report.model, meta)?;
         self.registry.promote(&id)?;
+        crate::obs::emit(
+            "lifecycle.promote",
+            vec![("version", crate::obs::Value::Str(id.to_string()))],
+        );
         let epoch = self.swap_into_slot(&report.model)?;
+        if span.is_live() {
+            span.str("version", id.to_string());
+            span.u64("warm", report.warm_start as u64);
+            span.f64("r2", report.model.r2());
+        }
+        drop(span);
         Ok(LifecycleReport {
             id,
             r2: report.model.r2(),
@@ -176,6 +187,15 @@ impl Lifecycle {
         window: &Matrix,
         seed: u64,
     ) -> Result<Option<LifecycleReport>> {
+        let action = match status {
+            DriftStatus::Drifted => "retrain",
+            DriftStatus::Stable => "none",
+            DriftStatus::Suspect => "watch",
+        };
+        crate::obs::emit(
+            "lifecycle.drift",
+            vec![("action", crate::obs::Value::Str(action.to_string()))],
+        );
         match status {
             DriftStatus::Drifted => self.retrain(window, seed).map(Some),
             DriftStatus::Stable | DriftStatus::Suspect => Ok(None),
@@ -235,6 +255,13 @@ impl Lifecycle {
             Some(slot) => {
                 let epoch = slot.swap(model.clone())?;
                 self.metrics.model_swaps.inc();
+                crate::obs::emit(
+                    "lifecycle.swap",
+                    vec![
+                        ("version", crate::obs::Value::Str(model.content_id())),
+                        ("epoch", crate::obs::Value::U64(epoch)),
+                    ],
+                );
                 Ok(Some(epoch))
             }
             None => Ok(None),

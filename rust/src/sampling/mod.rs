@@ -140,8 +140,8 @@ pub struct SamplingOutcome {
     /// ([`SamplingTrainer::train_warm`]) instead of a cold sample.
     pub warm_start: bool,
     /// Aggregated SMO telemetry across every solve of the run
-    /// (sample + union solves; `gap`/`cache_hit_rate` are from the
-    /// last solve).
+    /// (sample + union solves; `gap` is from the last solve, cache
+    /// hits/lookups sum exactly).
     pub solver: SolverStats,
     pub trace: Vec<TracePoint>,
 }
@@ -219,14 +219,23 @@ impl<'a> SamplingTrainer<'a> {
         self.pool.unwrap_or_else(crate::parallel::global)
     }
 
+    /// One SVDD solve of Algorithm 1. `stage` labels the solve's role
+    /// (seed / sample / union) in the tracing span so `fastsvdd
+    /// report` can break a run's time down per stage.
     fn solve(
         &self,
         data: &Matrix,
         init: Option<&[f64]>,
         counters: &mut Counters,
+        stage: &'static str,
     ) -> Result<SvddModel> {
         counters.calls += 1;
         counters.rows += data.rows();
+        let mut span = crate::obs::Span::enter("sampling.solve");
+        if span.is_live() {
+            span.str("stage", stage);
+            span.u64("rows", data.rows() as u64);
+        }
         if let Some(be) = self.backend {
             if let Some(gram) = be.gram(data, self.params.kernel) {
                 let (model, stats) =
@@ -303,7 +312,7 @@ impl<'a> SamplingTrainer<'a> {
             (Some(prev), true) => Some(carried_alpha(&seed_set, prev)),
             _ => None,
         };
-        let mut master = self.solve(&seed_set, init0.as_deref(), &mut counters)?;
+        let mut master = self.solve(&seed_set, init0.as_deref(), &mut counters, "seed")?;
 
         // Floor the center-criterion scale at the data scale (mean SV
         // norm) so symmetric data with ||a|| ~ 0 can still converge;
@@ -338,6 +347,7 @@ impl<'a> SamplingTrainer<'a> {
         let mut converged = false;
         for i in 1..=self.cfg.max_iter {
             iterations = i;
+            let mut iter_span = crate::obs::Span::enter("sampling.iter");
             master = if k_cands == 1 {
                 // Single-candidate path: the paper's Algorithm 1 on one
                 // sequential RNG stream. This branch is kept exactly as
@@ -347,7 +357,7 @@ impl<'a> SamplingTrainer<'a> {
                 // 2.1 random sample + its SVDD (always a cold solve:
                 // there is no previous solution on a fresh sample)
                 let si = data.gather(&rng.sample_with_replacement(data.rows(), n));
-                let sv_i = self.solve(&si.dedup_rows(), None, &mut counters)?;
+                let sv_i = self.solve(&si.dedup_rows(), None, &mut counters, "sample")?;
                 // 2.2 union with the master SV set
                 let union = sv_i
                     .support_vectors()
@@ -359,10 +369,16 @@ impl<'a> SamplingTrainer<'a> {
                     .cfg
                     .warm_alpha
                     .then(|| carried_alpha(&union, &master));
-                self.solve(&union, init.as_deref(), &mut counters)?
+                self.solve(&union, init.as_deref(), &mut counters, "union")?
             } else {
                 self.best_candidate(data, seed, i, n, &master, &mut counters)?
             };
+            if iter_span.is_live() {
+                iter_span.u64("iteration", i as u64);
+                iter_span.f64("r2", master.r2());
+                iter_span.u64("num_sv", master.num_sv() as u64);
+            }
+            drop(iter_span);
 
             let delta = tracker.observe(master.r2(), master.center());
             if self.cfg.record_trace {
@@ -414,13 +430,13 @@ impl<'a> SamplingTrainer<'a> {
             let mut crng = Xoshiro256::new(derive_stream_seed(seed, iter as u64, c as u64));
             let si = data.gather(&crng.sample_with_replacement(data.rows(), n));
             let mut cnt = Counters::default();
-            let sv_c = self.solve(&si.dedup_rows(), None, &mut cnt)?;
+            let sv_c = self.solve(&si.dedup_rows(), None, &mut cnt, "sample")?;
             let union = sv_c
                 .support_vectors()
                 .vstack(master.support_vectors())?
                 .dedup_rows();
             let init = carry.as_ref().map(|idx| carried_alpha_from(idx, &union));
-            let cand = self.solve(&union, init.as_deref(), &mut cnt)?;
+            let cand = self.solve(&union, init.as_deref(), &mut cnt, "union")?;
             Ok((cand, cnt))
         });
         let mut best: Option<SvddModel> = None;
@@ -723,7 +739,8 @@ mod tests {
         let out = SamplingTrainer::new(params, cfg).train(&data, 5).unwrap();
         assert!(out.solver.smo_iterations > 0);
         assert!(out.solver.gap.is_finite());
-        assert!(out.solver.cache_hit_rate.is_some());
+        assert!(out.solver.cache_lookups > 0);
+        assert!(out.solver.cache_hit_rate().is_some());
     }
 
     #[test]

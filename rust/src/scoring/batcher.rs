@@ -282,8 +282,14 @@ fn dispatch_loop<F>(
             flat.extend_from_slice(&r.rows);
         }
         let zs = Matrix::from_vec(flat, total, dim).expect("batch assembly");
+        let mut span = crate::obs::Span::enter("batcher.batch");
+        if span.is_live() {
+            span.u64("rows", total as u64);
+            span.u64("requests", batch.len() as u64);
+        }
         let sw = crate::util::timer::Stopwatch::start();
         let scores = score_fn(&model, &zs).unwrap_or_else(|_| vec![f64::NAN; total]);
+        drop(span);
         metrics.score_latency.observe(sw.elapsed_secs());
         metrics.batches_scored.inc();
         metrics.rows_scored.add(total as u64);

@@ -19,6 +19,15 @@
 //! [`ScoreServer::set_remote_swap_enabled`]: run the port on a trusted
 //! network, and leave remote swap off (the `fastsvdd serve` default)
 //! unless the peers are trusted operators.
+//!
+//! The same listener also answers Prometheus scrapes: a connection
+//! whose first bytes spell an HTTP request line (`GET /metrics …`)
+//! gets the [`Metrics::render_prometheus`] exposition and is closed —
+//! no native frame starts with those bytes (`b"GET "` as a
+//! little-endian length would exceed the frame cap), so scrapers and
+//! native clients share the port without ambiguity. Native peers pull
+//! the same numbers via the v2 [`Message::StatsRequest`] frame, which
+//! additionally carries exact counters for cluster-wide aggregation.
 
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -151,6 +160,59 @@ impl Drop for ScoreServer {
     }
 }
 
+/// Does the first 4 bytes of a connection look like an HTTP request
+/// line rather than a native frame's length prefix? `b"GET "` read as a
+/// little-endian u32 is ~0x20544547 (>500 MiB), far beyond
+/// [`crate::distributed::message::MAX_FRAME`], so the two protocols
+/// cannot collide: any real frame's prefix fails this test.
+fn looks_like_http(first: &[u8; 4]) -> bool {
+    matches!(first, b"GET " | b"HEAD" | b"POST" | b"PUT " | b"DELE" | b"PATC" | b"OPTI")
+}
+
+/// Minimal `GET /metrics` responder on the scoring listener. `first` is
+/// the 4 bytes already peeked off the stream. One request per
+/// connection; always closes after responding (Prometheus scrapers
+/// reconnect per scrape).
+fn serve_http(mut stream: TcpStream, first: &[u8; 4], metrics: &Metrics) -> Result<()> {
+    use std::io::Read;
+    // slow readers must not pin a connection thread forever
+    stream.set_read_timeout(Some(std::time::Duration::from_secs(2))).ok();
+    let mut buf = first.to_vec();
+    let mut byte = [0u8; 1];
+    // read to end-of-headers (tiny request; byte reads keep this simple)
+    while !buf.ends_with(b"\r\n\r\n") && buf.len() < 8192 {
+        match stream.read(&mut byte) {
+            Ok(1) => buf.push(byte[0]),
+            _ => break,
+        }
+    }
+    let text = String::from_utf8_lossy(&buf);
+    let request_line = text.lines().next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let (method, path, version) = (parts.next(), parts.next(), parts.next());
+    let (status, body) = match (method, path, version) {
+        (Some(m), Some(p), Some(v)) if v.starts_with("HTTP/") && parts.next().is_none() => {
+            match (m, p) {
+                ("GET", "/metrics") => ("200 OK", metrics.render_prometheus()),
+                ("GET", _) => ("404 Not Found", "not found\n".to_string()),
+                _ => ("405 Method Not Allowed", "only GET is supported\n".to_string()),
+            }
+        }
+        _ => ("400 Bad Request", "malformed request line\n".to_string()),
+    };
+    let response = format!(
+        "HTTP/1.1 {status}\r\n\
+         Content-Type: text/plain; version=0.0.4; charset=utf-8\r\n\
+         Content-Length: {}\r\n\
+         Connection: close\r\n\r\n{body}",
+        body.len()
+    );
+    use std::io::Write;
+    stream.write_all(response.as_bytes())?;
+    stream.flush()?;
+    Ok(())
+}
+
 fn serve_connection(
     mut stream: TcpStream,
     handle: BatcherHandle,
@@ -158,9 +220,22 @@ fn serve_connection(
     metrics: Arc<Metrics>,
     remote_swap: Arc<AtomicBool>,
 ) -> Result<()> {
-    match Message::read_from(&mut stream)? {
+    // One listener, two protocols: peek the first 4 bytes to tell an
+    // HTTP request line from a native frame's length prefix.
+    let mut first = [0u8; 4];
+    {
+        use std::io::Read;
+        stream.read_exact(&mut first)?;
+    }
+    if looks_like_http(&first) {
+        return serve_http(stream, &first, &metrics);
+    }
+    let session_version = match Message::read_after_len(first, &mut stream)? {
         Message::Hello { version } => match negotiate(version) {
-            Some(v) => Message::HelloAck { version: v }.write_to(&mut stream)?,
+            Some(v) => {
+                Message::HelloAck { version: v }.write_to(&mut stream)?;
+                v
+            }
             None => {
                 return Err(Error::Distributed(format!(
                     "peer version {version} too old"
@@ -170,14 +245,39 @@ fn serve_connection(
         other => {
             return Err(Error::Distributed(format!("expected Hello, got {other:?}")));
         }
-    }
+    };
     loop {
-        match Message::read_from(&mut stream) {
-            Ok(Message::ScoreRequest { rows }) => {
+        let msg = match Message::read_from(&mut stream) {
+            Ok(m) => m,
+            Err(_) => return Ok(()),
+        };
+        // a session negotiated down to v1 must never carry v2 frames —
+        // drop the connection rather than answer with a frame the peer
+        // cannot decode
+        if session_version < 2 && msg.requires_v2() {
+            return Err(Error::Distributed(format!(
+                "v2 frame on a v{session_version} session: {msg:?}"
+            )));
+        }
+        let mut span = crate::obs::Span::enter("server.request");
+        if span.is_live() {
+            span.str(
+                "kind",
+                match &msg {
+                    Message::ScoreRequest { .. } => "score",
+                    Message::ModelInfoRequest => "info",
+                    Message::SwapModel { .. } => "swap",
+                    Message::StatsRequest => "stats",
+                    _ => "other",
+                },
+            );
+        }
+        match msg {
+            Message::ScoreRequest { rows } => {
                 let (dist2, r2) = handle.score_with_r2(&rows)?;
                 Message::ScoreReply { dist2, r2 }.write_to(&mut stream)?;
             }
-            Ok(Message::ModelInfoRequest) => {
+            Message::ModelInfoRequest => {
                 let m = slot.current();
                 Message::ModelInfo {
                     version: m.content_id(),
@@ -188,7 +288,7 @@ fn serve_connection(
                 }
                 .write_to(&mut stream)?;
             }
-            Ok(Message::SwapModel { model_json }) => {
+            Message::SwapModel { model_json } => {
                 let reply = if !remote_swap.load(Ordering::Relaxed) {
                     Message::SwapAck {
                         epoch: slot.epoch(),
@@ -220,8 +320,15 @@ fn serve_connection(
                 };
                 reply.write_to(&mut stream)?;
             }
-            Ok(Message::Shutdown) | Err(_) => return Ok(()),
-            Ok(other) => {
+            Message::StatsRequest => {
+                Message::StatsReply {
+                    text: metrics.render_prometheus(),
+                    counters: metrics.snapshot(),
+                }
+                .write_to(&mut stream)?;
+            }
+            Message::Shutdown => return Ok(()),
+            other => {
                 return Err(Error::Distributed(format!("unexpected {other:?}")));
             }
         }
@@ -278,6 +385,17 @@ impl ScoreClient {
                 dim: dim as usize,
                 epoch,
             }),
+            other => Err(Error::Distributed(format!("unexpected {other:?}"))),
+        }
+    }
+
+    /// Pull the server's metrics (v2): the Prometheus exposition text
+    /// plus the exact named-counter snapshot
+    /// ([`crate::metrics::Metrics::snapshot`]) for cluster aggregation.
+    pub fn stats(&mut self) -> Result<(String, Vec<(String, u64)>)> {
+        Message::StatsRequest.write_to(&mut self.stream)?;
+        match Message::read_from(&mut self.stream)? {
+            Message::StatsReply { text, counters } => Ok((text, counters)),
             other => Err(Error::Distributed(format!("unexpected {other:?}"))),
         }
     }
@@ -481,6 +599,108 @@ mod tests {
         let (after, _) = client.score(&zs).unwrap();
         assert_eq!(after, m2.dist2_batch(&zs));
         client.close();
+        server.stop();
+    }
+
+    /// Send raw bytes, read the whole response (server closes after
+    /// responding).
+    fn http_exchange(addr: std::net::SocketAddr, request: &[u8]) -> String {
+        use std::io::{Read, Write};
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(request).unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn http_get_metrics_returns_prometheus_text() {
+        let m = model();
+        let mut server = spawn_native(m.clone(), BatchPolicy::default());
+        // score something first so the latency histogram has a sample
+        let mut client = ScoreClient::connect(server.addr()).unwrap();
+        client.score(&Banana::default().generate(10, 2)).unwrap();
+        client.close();
+        let resp = http_exchange(
+            server.addr(),
+            b"GET /metrics HTTP/1.1\r\nHost: x\r\nAccept: */*\r\n\r\n",
+        );
+        assert!(resp.starts_with("HTTP/1.1 200 OK\r\n"), "{resp}");
+        assert!(resp.contains("Content-Type: text/plain; version=0.0.4"));
+        let body = resp.split("\r\n\r\n").nth(1).unwrap();
+        assert!(body.contains("# TYPE fastsvdd_rows_scored_total counter"));
+        assert!(body.contains("fastsvdd_rows_scored_total 10"));
+        assert!(body.contains("fastsvdd_score_latency_seconds_bucket"));
+        assert!(body.contains("le=\"+Inf\""));
+        // advertised length matches the body exactly
+        let len: usize = resp
+            .lines()
+            .find_map(|l| l.strip_prefix("Content-Length: "))
+            .unwrap()
+            .parse()
+            .unwrap();
+        assert_eq!(len, body.len());
+        server.stop();
+    }
+
+    #[test]
+    fn http_unknown_path_is_404_and_malformed_line_is_400() {
+        let m = model();
+        let mut server = spawn_native(m, BatchPolicy::default());
+        let resp = http_exchange(server.addr(), b"GET /nope HTTP/1.0\r\n\r\n");
+        assert!(resp.starts_with("HTTP/1.1 404"), "{resp}");
+        // request line with no HTTP version token
+        let resp = http_exchange(server.addr(), b"GET /metrics\r\n\r\n");
+        assert!(resp.starts_with("HTTP/1.1 400"), "{resp}");
+        // non-GET method
+        let resp = http_exchange(server.addr(), b"POST /metrics HTTP/1.1\r\n\r\n");
+        assert!(resp.starts_with("HTTP/1.1 405"), "{resp}");
+        // native scoring still works after the HTTP traffic
+        let mut client = ScoreClient::connect(server.addr()).unwrap();
+        client.score(&Banana::default().generate(3, 8)).unwrap();
+        client.close();
+        server.stop();
+    }
+
+    #[test]
+    fn stats_frame_returns_text_and_exact_counters() {
+        let m = model();
+        let mut server = spawn_native(m, BatchPolicy::default());
+        let mut client = ScoreClient::connect(server.addr()).unwrap();
+        client.score(&Banana::default().generate(7, 5)).unwrap();
+        let (text, counters) = client.stats().unwrap();
+        assert!(text.contains("fastsvdd_rows_scored_total 7"));
+        let get = |k: &str| {
+            counters
+                .iter()
+                .find(|(name, _)| name == k)
+                .unwrap_or_else(|| panic!("counter {k} missing"))
+                .1
+        };
+        assert_eq!(get("rows_scored"), 7);
+        assert_eq!(get("score_latency_count"), 1);
+        client.close();
+        server.stop();
+    }
+
+    #[test]
+    fn v1_session_never_sees_stats_frames() {
+        // A peer that negotiated v1 and then sends a v2 StatsRequest
+        // must get its connection dropped, not a StatsReply it cannot
+        // decode.
+        let m = model();
+        let mut server = spawn_native(m, BatchPolicy::default());
+        let mut stream = TcpStream::connect(server.addr()).unwrap();
+        Message::Hello { version: 1 }.write_to(&mut stream).unwrap();
+        match Message::read_from(&mut stream).unwrap() {
+            Message::HelloAck { version } => assert_eq!(version, 1),
+            other => panic!("unexpected {other:?}"),
+        }
+        Message::StatsRequest.write_to(&mut stream).unwrap();
+        assert!(
+            Message::read_from(&mut stream).is_err(),
+            "v1 session must be dropped on a v2 frame, not answered"
+        );
         server.stop();
     }
 

@@ -164,6 +164,18 @@ impl ColumnCache {
         }
     }
 
+    /// Full-column fetches served from the cache.
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Full-column fetches total (hits + misses) — the denominator of
+    /// [`ColumnCache::hit_rate`], exported so callers can aggregate
+    /// exact counts across solves instead of averaging rates.
+    pub fn lookups(&self) -> u64 {
+        self.hits + self.misses
+    }
+
     pub fn len(&self) -> usize {
         self.map.len()
     }

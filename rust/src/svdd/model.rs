@@ -189,6 +189,17 @@ impl SvddModel {
         let mut out = vec![0.0; n];
         let zs_norms = NormCache::new(zs);
         let work = n * nsv * self.sv.cols().max(1);
+        // span only above the parallel-work floor so small-batch scoring
+        // (the latency-sensitive path) never touches the clock
+        let mut span = if work >= crate::parallel::MIN_PAR_WORK {
+            crate::obs::Span::enter("score.dist2_batch")
+        } else {
+            crate::obs::Span::disabled()
+        };
+        if span.is_live() {
+            span.u64("rows", n as u64);
+            span.u64("num_sv", nsv as u64);
+        }
         pool.for_work(work).run_chunks(&mut out, 64, |start, chunk| {
             let cols = chunk.len();
             // K(sv, z) panel for this chunk of z rows (column-major per

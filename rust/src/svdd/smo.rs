@@ -133,6 +133,16 @@ impl<'a> LazyKernel<'a> {
         self.cache.hit_rate()
     }
 
+    /// Full-column cache hits so far.
+    pub fn cache_hits(&self) -> u64 {
+        self.cache.hits()
+    }
+
+    /// Full-column cache lookups (hits + misses) so far.
+    pub fn cache_lookups(&self) -> u64 {
+        self.cache.lookups()
+    }
+
     /// The pool a fill of `rows` kernel-column entries runs on. An
     /// explicitly pinned pool (`with_pool`) is used as-is — the caller
     /// took control, and the determinism tests rely on it to force

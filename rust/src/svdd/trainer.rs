@@ -79,32 +79,45 @@ pub struct SolverStats {
     pub unshrink_events: usize,
     /// Final optimality gap.
     pub gap: f64,
-    /// Kernel-column LRU hit rate (`None` on the dense gram path,
-    /// which has no cache).
-    pub cache_hit_rate: Option<f64>,
+    /// Kernel-column LRU cache hits / full-column lookups (both 0 on
+    /// the dense gram path, which has no cache). Carried as raw counts
+    /// — not a stored rate — so folding many solves together (and
+    /// summing across workers) stays exact instead of averaging away.
+    pub cache_hits: u64,
+    pub cache_lookups: u64,
 }
 
 impl SolverStats {
-    fn from_solution(sol: &smo::SmoSolution, cache_hit_rate: Option<f64>) -> SolverStats {
+    fn from_solution(sol: &smo::SmoSolution, cache_hits: u64, cache_lookups: u64) -> SolverStats {
         SolverStats {
             smo_iterations: sol.iterations,
             shrink_events: sol.shrink_events,
             unshrink_events: sol.unshrink_events,
             gap: sol.gap,
-            cache_hit_rate,
+            cache_hits,
+            cache_lookups,
+        }
+    }
+
+    /// Kernel-column cache hit rate over every absorbed solve (`None`
+    /// when no cached-path lookups happened, e.g. pure gram solves).
+    pub fn cache_hit_rate(&self) -> Option<f64> {
+        if self.cache_lookups == 0 {
+            None
+        } else {
+            Some(self.cache_hits as f64 / self.cache_lookups as f64)
         }
     }
 
     /// Fold another solve's telemetry into this aggregate (gap keeps
-    /// the latest value; hit rates keep the last cached path's).
+    /// the latest value; cache counts sum exactly).
     pub fn absorb(&mut self, other: &SolverStats) {
         self.smo_iterations += other.smo_iterations;
         self.shrink_events += other.shrink_events;
         self.unshrink_events += other.unshrink_events;
         self.gap = other.gap;
-        if other.cache_hit_rate.is_some() {
-            self.cache_hit_rate = other.cache_hit_rate;
-        }
+        self.cache_hits += other.cache_hits;
+        self.cache_lookups += other.cache_lookups;
     }
 }
 
@@ -123,8 +136,16 @@ pub fn train_detailed(
 ) -> Result<(SvddModel, SolverStats)> {
     let c = params.c_for(data.rows())?;
     let mut kp = LazyKernel::new(data, params.kernel, params.cache_bytes);
+    let mut span = crate::obs::Span::enter("smo.solve");
     let sol = smo::solve_with_init(&mut kp, c, &params.smo, init)?;
-    let stats = SolverStats::from_solution(&sol, Some(kp.cache_hit_rate()));
+    if span.is_live() {
+        span.u64("n", data.rows() as u64);
+        span.u64("iterations", sol.iterations as u64);
+        span.u64("shrinks", sol.shrink_events as u64);
+        span.f64("gap", sol.gap);
+    }
+    drop(span);
+    let stats = SolverStats::from_solution(&sol, kp.cache_hits(), kp.cache_lookups());
     Ok((finalize(data, params, sol)?, stats))
 }
 
@@ -144,8 +165,16 @@ pub fn train_with_gram_detailed(
 ) -> Result<(SvddModel, SolverStats)> {
     let c = params.c_for(data.rows())?;
     let mut kp = DenseKernel::new(gram, data.rows())?;
+    let mut span = crate::obs::Span::enter("smo.solve");
     let sol = smo::solve_with_init(&mut kp, c, &params.smo, init)?;
-    let stats = SolverStats::from_solution(&sol, None);
+    if span.is_live() {
+        span.u64("n", data.rows() as u64);
+        span.u64("iterations", sol.iterations as u64);
+        span.u64("shrinks", sol.shrink_events as u64);
+        span.f64("gap", sol.gap);
+    }
+    drop(span);
+    let stats = SolverStats::from_solution(&sol, 0, 0);
     Ok((finalize(data, params, sol)?, stats))
 }
 

@@ -174,3 +174,99 @@ fn lifecycle_drift_retrain_swap_and_rollback_under_load() {
     server.stop();
     std::fs::remove_dir_all(&dir).ok();
 }
+
+/// One HTTP/1.1 GET against the scoring listener; returns (head, body).
+fn http_get(addr: std::net::SocketAddr, path: &str) -> (String, String) {
+    use std::io::{Read, Write};
+    let mut s = std::net::TcpStream::connect(addr).unwrap();
+    write!(s, "GET {path} HTTP/1.1\r\nHost: test\r\nConnection: close\r\n\r\n").unwrap();
+    let mut buf = String::new();
+    s.read_to_string(&mut buf).unwrap();
+    let (head, body) = buf.split_once("\r\n\r\n").expect("no header/body separator");
+    (head.to_string(), body.to_string())
+}
+
+/// Prometheus scrapes share the listener with native scoring clients:
+/// 20 scrapes interleave with live scoring traffic and every one must
+/// return a complete, well-formed exposition while not a single score
+/// request errors.
+#[test]
+fn metrics_scrape_is_concurrent_with_scoring() {
+    let params = SvddParams::gaussian(0.35, 0.001);
+    let data = Banana::default().generate(600, 3);
+    let model = fastsvdd::svdd::train(&data, &params).unwrap();
+    let policy = BatchPolicy {
+        target_batch: 16,
+        linger: Duration::from_micros(200),
+        capacity: 1 << 12,
+    };
+    let mut server =
+        ScoreServer::spawn("127.0.0.1:0", model, policy, |m, zs| Ok(m.dist2_batch(zs)))
+            .unwrap();
+    let addr = server.addr();
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let errors = Arc::new(AtomicU64::new(0));
+    let zs = Banana::default().generate(8, 9);
+    let clients: Vec<_> = (0..2)
+        .map(|_| {
+            let stop = stop.clone();
+            let errors = errors.clone();
+            let zs = zs.clone();
+            std::thread::spawn(move || {
+                let mut replies = 0u64;
+                match ScoreClient::connect(addr) {
+                    Ok(mut client) => {
+                        while !stop.load(Ordering::Relaxed) {
+                            match client.score(&zs) {
+                                Ok((dist2, _)) => {
+                                    assert_eq!(dist2.len(), zs.rows());
+                                    replies += 1;
+                                }
+                                Err(_) => {
+                                    errors.fetch_add(1, Ordering::Relaxed);
+                                }
+                            }
+                        }
+                        client.close();
+                    }
+                    Err(_) => {
+                        errors.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                replies
+            })
+        })
+        .collect();
+
+    for _ in 0..20 {
+        let (head, body) = http_get(addr, "/metrics");
+        assert!(head.starts_with("HTTP/1.1 200 OK"), "scrape failed: {head}");
+        assert!(head.contains("text/plain"), "wrong content type: {head}");
+        assert!(body.contains("fastsvdd_rows_scored_total"));
+        assert!(body.contains("fastsvdd_score_latency_seconds_bucket{le=\"+Inf\"}"));
+        assert!(body.ends_with('\n'), "exposition must end with a newline");
+    }
+
+    stop.store(true, Ordering::Relaxed);
+    let mut total_replies = 0u64;
+    for t in clients {
+        total_replies += t.join().unwrap();
+    }
+    assert_eq!(errors.load(Ordering::Relaxed), 0, "scoring errored during scrapes");
+    assert!(total_replies > 0, "clients never scored");
+
+    // counters are bumped before replies are delivered, so a scrape
+    // after the clients joined must see every scored row
+    let (_, body) = http_get(addr, "/metrics");
+    let rows: u64 = body
+        .lines()
+        .find(|l| l.starts_with("fastsvdd_rows_scored_total"))
+        .and_then(|l| l.split_whitespace().last())
+        .unwrap()
+        .parse()
+        .unwrap();
+    assert_eq!(rows, total_replies * zs.rows() as u64);
+
+    server.stop();
+}
