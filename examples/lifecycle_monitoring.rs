@@ -78,7 +78,7 @@ fn main() -> fastsvdd::Result<()> {
             let replies = replies.clone();
             let plant = plant.clone();
             std::thread::spawn(move || {
-                let mut client = match ScoreClient::connect(addr) {
+                let client = match ScoreClient::connect(addr) {
                     Ok(cl) => cl,
                     Err(_) => {
                         errors.fetch_add(1, Ordering::Relaxed);
@@ -159,7 +159,7 @@ fn main() -> fastsvdd::Result<()> {
         errors.load(Ordering::Relaxed)
     );
 
-    let mut probe = ScoreClient::connect(addr)?;
+    let probe = ScoreClient::connect(addr)?;
     let info = probe.model_info()?;
     println!(
         "server reports model {} (epoch {}), R^2={:.4}",

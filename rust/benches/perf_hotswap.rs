@@ -48,16 +48,17 @@ fn main() {
         target_batch: 64,
         linger: Duration::from_micros(200),
         capacity: 1 << 16,
+        ..BatchPolicy::default()
     };
     let server = ScoreServer::spawn("127.0.0.1:0", cold.model.clone(), policy, |m, zs| {
         Ok(m.dist2_batch(zs))
     })
     .unwrap();
-    let mut client = ScoreClient::connect(server.addr()).unwrap();
+    let client = ScoreClient::connect(server.addr()).unwrap();
     let zs = Banana::default().generate(8, 9);
     let requests = scaled(400, 50);
 
-    let lap = |client: &mut ScoreClient, n: usize| -> Vec<f64> {
+    let lap = |client: &ScoreClient, n: usize| -> Vec<f64> {
         let mut lat = Vec::with_capacity(n);
         for _ in 0..n {
             let sw = Stopwatch::start();
@@ -67,8 +68,8 @@ fn main() {
         lat
     };
     // warm the connection + batcher, then the quiet baseline
-    lap(&mut client, requests / 10);
-    let quiet = lap(&mut client, requests);
+    lap(&client, requests / 10);
+    let quiet = lap(&client, requests);
 
     // swap storm: the slot flips models every ~500us while we measure
     let stop = Arc::new(AtomicBool::new(false));
@@ -86,7 +87,7 @@ fn main() {
             }
         })
     };
-    let storm = lap(&mut client, requests);
+    let storm = lap(&client, requests);
     stop.store(true, Ordering::Relaxed);
     swapper.join().unwrap();
     let swaps = slot.epoch();

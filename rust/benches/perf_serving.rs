@@ -1,0 +1,140 @@
+//! Serving-edge saturation bench: req/s and p99 latency for persistent
+//! native connections against one server, micro-batched readiness-loop
+//! edge vs the legacy thread-per-connection mode, at a moderate and a
+//! high connection count.
+//!
+//! Both modes feed the same dynamic batcher, so this isolates the cost
+//! of *connection handling*: one multiplexer thread vs one OS thread
+//! per client. Every reply is checked bit-identical against a local
+//! `dist2_batch`, so the speed comparison is also a correctness sweep.
+//!
+//! Emits the usual table plus `results/BENCH_perf_serving.json`
+//! (gated in CI: the edge must stay at least at parity with
+//! thread-per-connection at the high connection count, and scores must
+//! be bit-identical).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Barrier};
+
+use fastsvdd::bench::{emit, emit_text, scaled};
+use fastsvdd::data::{banana::Banana, Generator};
+use fastsvdd::sampling::{SamplingConfig, SamplingTrainer};
+use fastsvdd::scoring::{BatchPolicy, ScoreClient, ScoreServer};
+use fastsvdd::svdd::{SvddModel, SvddParams};
+use fastsvdd::util::json::{num, obj, s, Json};
+use fastsvdd::util::matrix::Matrix;
+use fastsvdd::util::stats::quantile;
+use fastsvdd::util::tables::{f, Table};
+use fastsvdd::util::timer::Stopwatch;
+
+/// Saturate one server mode: `conns` persistent clients each send
+/// `reqs` 8-row score requests. Returns (req/s, per-request latencies,
+/// all replies bit-identical).
+fn saturate(
+    edge: bool,
+    conns: usize,
+    reqs: usize,
+    model: &SvddModel,
+    zs: &Matrix,
+) -> (f64, Vec<f64>, bool) {
+    let mut server = ScoreServer::builder("127.0.0.1:0")
+        .model(model.clone())
+        .policy(BatchPolicy::default())
+        .edge(edge)
+        .max_conns(conns * 2 + 8)
+        .spawn(|m, zs| Ok(m.dist2_batch(zs)))
+        .unwrap();
+    let addr = server.addr();
+    let expected = Arc::new(model.dist2_batch(zs));
+    let identical = Arc::new(AtomicBool::new(true));
+    // connect everyone first, then start the clock on a barrier so the
+    // connect storm is not measured
+    let barrier = Arc::new(Barrier::new(conns + 1));
+    let workers: Vec<_> = (0..conns)
+        .map(|_| {
+            let zs = zs.clone();
+            let expected = expected.clone();
+            let identical = identical.clone();
+            let barrier = barrier.clone();
+            std::thread::spawn(move || {
+                let client = ScoreClient::connect(addr).unwrap();
+                barrier.wait();
+                let mut lat = Vec::with_capacity(reqs);
+                for _ in 0..reqs {
+                    let sw = Stopwatch::start();
+                    let (dist2, _) = client.score(&zs).unwrap();
+                    lat.push(sw.elapsed_secs());
+                    if dist2 != *expected {
+                        identical.store(false, Ordering::Relaxed);
+                    }
+                }
+                client.close();
+                lat
+            })
+        })
+        .collect();
+    barrier.wait();
+    let sw = Stopwatch::start();
+    let mut lat = Vec::new();
+    for w in workers {
+        lat.extend(w.join().unwrap());
+    }
+    let wall = sw.elapsed_secs();
+    server.stop();
+    let rps = (conns * reqs) as f64 / wall;
+    (rps, lat, identical.load(Ordering::Relaxed))
+}
+
+fn main() {
+    let rows = scaled(6_000, 600);
+    let data = Banana::default().generate(rows, 42);
+    let params = SvddParams::gaussian(0.35, 0.001);
+    let cfg = SamplingConfig { sample_size: 6, ..Default::default() };
+    let model = SamplingTrainer::new(params, cfg).train(&data, 7).unwrap().model;
+    let zs = Banana::default().generate(8, 9);
+
+    let conns_lo = scaled(256, 16);
+    let conns_hi = scaled(1024, 64);
+    let reqs = scaled(40, 8);
+
+    let (rps_edge_lo, lat_edge_lo, ok1) = saturate(true, conns_lo, reqs, &model, &zs);
+    let (rps_thr_lo, lat_thr_lo, ok2) = saturate(false, conns_lo, reqs, &model, &zs);
+    let (rps_edge_hi, lat_edge_hi, ok3) = saturate(true, conns_hi, reqs, &model, &zs);
+    let (rps_thr_hi, lat_thr_hi, ok4) = saturate(false, conns_hi, reqs, &model, &zs);
+    let identical = ok1 && ok2 && ok3 && ok4;
+
+    let p99 = |xs: &[f64]| quantile(xs, 0.99) * 1e6; // -> us
+    let mut t = Table::new(
+        "Perf: serving edge vs thread-per-connection",
+        &["mode", "conns", "req/s", "p99_us"],
+    );
+    for (mode, conns, rps, lat) in [
+        ("edge (micro-batched)", conns_lo, rps_edge_lo, &lat_edge_lo),
+        ("thread-per-conn", conns_lo, rps_thr_lo, &lat_thr_lo),
+        ("edge (micro-batched)", conns_hi, rps_edge_hi, &lat_edge_hi),
+        ("thread-per-conn", conns_hi, rps_thr_hi, &lat_thr_hi),
+    ] {
+        t.row(vec![mode.into(), conns.to_string(), f(rps, 0), f(p99(lat), 1)]);
+    }
+    emit("perf_serving", &t);
+
+    let json = obj(vec![
+        ("bench", s("perf_serving")),
+        ("conns_lo", num(conns_lo as f64)),
+        ("conns_hi", num(conns_hi as f64)),
+        ("requests_per_conn", num(reqs as f64)),
+        ("rps_edge_lo", num(rps_edge_lo)),
+        ("p99_edge_lo_us", num(p99(&lat_edge_lo))),
+        ("rps_threaded_lo", num(rps_thr_lo)),
+        ("p99_threaded_lo_us", num(p99(&lat_thr_lo))),
+        ("rps_edge_hi", num(rps_edge_hi)),
+        ("p99_edge_hi_us", num(p99(&lat_edge_hi))),
+        ("rps_threaded_hi", num(rps_thr_hi)),
+        ("p99_threaded_hi_us", num(p99(&lat_thr_hi))),
+        ("edge_vs_threaded_hi", num(rps_edge_hi / rps_thr_hi)),
+        ("scores_bit_identical", Json::Bool(identical)),
+    ]);
+    emit_text("BENCH_perf_serving.json", &json.to_string_pretty());
+    println!("wrote results/BENCH_perf_serving.json");
+    assert!(identical, "a served score diverged from the local engine");
+}

@@ -191,14 +191,26 @@ worker:
 
 serve:
     --model <model.json> --listen <addr:port> [--xla] [--batch <rows>]
-    [--linger-ms <ms>] [--threads auto|n]
+    [--linger-ms <ms>] [--threads auto|n] [--config <file.json>]
     --registry <dir>          serve the registry champion instead of a file
     --watch                   poll the registry; hot-swap on promote
                               (zero dropped connections)
     --watch-interval-ms <ms>  champion poll interval (default 1000)
     --allow-remote-swap       accept the unauthenticated v2 SwapModel
                               frame from clients (off by default)
-    The listener also answers Prometheus scrapes:
+    --http                    enable the POST /score HTTP/JSON ingress on
+                              the same port (off by default):
+                                curl -d '{"rows": [[0.1, 0.2]]}' \
+                                  http://<addr>/score
+    --batch-window-us <us>    micro-batch linger ceiling in microseconds
+                              (default 2000; the window adapts below it
+                              under light load; overrides --linger-ms)
+    --max-inflight <rows>     rows in flight to the batcher before the
+                              edge sheds with 503 / an Overloaded frame
+                              (default 65536)
+    --max-conns <n>           concurrent-connection cap (default 1024)
+    The listener multiplexes native frames, HTTP scoring and Prometheus
+    scrapes on one port:
         curl http://<addr>/metrics
 
 report:

@@ -116,6 +116,16 @@ pub struct RunConfig {
     /// "native" | "xla" (scoring engine).
     pub scorer: String,
     pub artifact_dir: String,
+    /// `serve`: enable the `POST /score` HTTP/JSON ingress.
+    pub http: bool,
+    /// `serve`: micro-batching linger window in microseconds (the
+    /// adaptive window's ceiling).
+    pub batch_window_us: u64,
+    /// `serve`: cap on rows in flight to the batcher before the edge
+    /// sheds new requests.
+    pub max_inflight: usize,
+    /// `serve`: concurrent-connection cap on the edge.
+    pub max_conns: usize,
 }
 
 impl Default for RunConfig {
@@ -140,6 +150,10 @@ impl Default for RunConfig {
             seed: 7,
             scorer: "native".into(),
             artifact_dir: "artifacts".into(),
+            http: false,
+            batch_window_us: 2_000,
+            max_inflight: 1 << 16,
+            max_conns: 1024,
         }
     }
 }
@@ -224,6 +238,12 @@ impl RunConfig {
         if let Some(v) = args.get("artifacts") {
             cfg.artifact_dir = v.to_string();
         }
+        if args.flag("http") {
+            cfg.http = true;
+        }
+        cfg.batch_window_us = args.get_u64("batch-window-us", cfg.batch_window_us)?;
+        cfg.max_inflight = args.get_usize("max-inflight", cfg.max_inflight)?;
+        cfg.max_conns = args.get_usize("max-conns", cfg.max_conns)?;
         cfg.validate()?;
         Ok(cfg)
     }
@@ -268,6 +288,10 @@ impl RunConfig {
                 "seed" => cfg.seed = req_num(val, key)? as u64,
                 "scorer" => cfg.scorer = req_str(val, key)?,
                 "artifact_dir" => cfg.artifact_dir = req_str(val, key)?,
+                "http" => cfg.http = req_bool(val, key)?,
+                "batch_window_us" => cfg.batch_window_us = req_num(val, key)? as u64,
+                "max_inflight" => cfg.max_inflight = req_num(val, key)? as usize,
+                "max_conns" => cfg.max_conns = req_num(val, key)? as usize,
                 other => {
                     return Err(Error::Config(format!("unknown config key '{other}'")))
                 }
@@ -307,6 +331,15 @@ impl RunConfig {
         }
         if !matches!(self.scorer.as_str(), "native" | "xla") {
             return Err(Error::Config(format!("unknown scorer '{}'", self.scorer)));
+        }
+        if self.batch_window_us == 0 {
+            return Err(Error::Config("batch_window_us must be >= 1".into()));
+        }
+        if self.max_inflight == 0 {
+            return Err(Error::Config("max_inflight must be >= 1".into()));
+        }
+        if self.max_conns == 0 {
+            return Err(Error::Config("max_conns must be >= 1".into()));
         }
         Ok(())
     }
@@ -471,6 +504,49 @@ mod tests {
         assert_eq!(cfg.sample_size, 6);
         // overrides are validated like file values
         let bad: Vec<String> = ["train", "--bw", "-1"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        assert!(RunConfig::from_args(&Args::parse(&bad).unwrap()).is_err());
+    }
+
+    #[test]
+    fn serving_keys_parse_and_flow() {
+        // defaults: HTTP ingress off, 2ms window, 64k rows, 1k conns
+        let d = RunConfig::default();
+        assert!(!d.http);
+        assert_eq!(d.batch_window_us, 2_000);
+        assert_eq!(d.max_inflight, 1 << 16);
+        assert_eq!(d.max_conns, 1024);
+        // JSON spellings round-trip
+        let cfg = RunConfig::from_json_text(
+            r#"{"http": true, "batch_window_us": 500,
+                "max_inflight": 4096, "max_conns": 64}"#,
+        )
+        .unwrap();
+        assert!(cfg.http);
+        assert_eq!(cfg.batch_window_us, 500);
+        assert_eq!(cfg.max_inflight, 4096);
+        assert_eq!(cfg.max_conns, 64);
+        // CLI spellings override on top
+        let argv: Vec<String> = [
+            "serve", "--http", "--batch-window-us", "750", "--max-inflight",
+            "128", "--max-conns", "9",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let cfg = RunConfig::from_args(&Args::parse(&argv).unwrap()).unwrap();
+        assert!(cfg.http);
+        assert_eq!(cfg.batch_window_us, 750);
+        assert_eq!(cfg.max_inflight, 128);
+        assert_eq!(cfg.max_conns, 9);
+        // degenerate values rejected, file or CLI alike
+        assert!(RunConfig::from_json_text(r#"{"batch_window_us": 0}"#).is_err());
+        assert!(RunConfig::from_json_text(r#"{"max_inflight": 0}"#).is_err());
+        assert!(RunConfig::from_json_text(r#"{"max_conns": 0}"#).is_err());
+        assert!(RunConfig::from_json_text(r#"{"http": "yes"}"#).is_err());
+        let bad: Vec<String> = ["serve", "--max-conns", "0"]
             .iter()
             .map(|s| s.to_string())
             .collect();

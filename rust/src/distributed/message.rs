@@ -14,10 +14,12 @@ use crate::util::matrix::Matrix;
 /// Protocol version — bumped on any frame-layout or vocabulary change.
 /// v2 added the model-lifecycle frames (`ModelInfoRequest`/`ModelInfo`/
 /// `SwapModel`/`SwapAck`) and the metrics frames (`StatsRequest`/
-/// `StatsReply`); every v1 frame is encoded identically, so v2 servers
-/// still speak to v1 clients (see [`negotiate`]) — a session negotiated
-/// to v1 must never carry a [`Message::requires_v2`] frame.
-pub const PROTOCOL_VERSION: u32 = 2;
+/// `StatsReply`); v3 added the serving-edge frames (`ScoreRequestV2`/
+/// `ScoreReplyV2`/`Overloaded`). Every older frame is encoded
+/// identically, so newer servers still speak to older clients (see
+/// [`negotiate`]) — a session negotiated down must never carry a frame
+/// whose [`Message::min_version`] exceeds the session version.
+pub const PROTOCOL_VERSION: u32 = 3;
 
 /// Oldest peer version this build still understands.
 pub const MIN_PROTOCOL_VERSION: u32 = 1;
@@ -108,6 +110,25 @@ pub enum Message {
         text: String,
         counters: Vec<(String, u64)>,
     },
+    /// Client -> scoring server (v3): score these observations and
+    /// reply with the full [`Message::ScoreReplyV2`] provenance. The
+    /// rows are encoded exactly like [`Message::ScoreRequest`]; only
+    /// the reply shape differs.
+    ScoreRequestV2 { rows: Matrix },
+    /// Scoring server -> client (v3): dist^2 per row plus the scoring
+    /// model's full identity — threshold, hot-swap epoch and
+    /// content-addressed id — so a reply is self-describing across
+    /// swaps (the wire form of [`crate::scoring::ScoreReply`]).
+    ScoreReplyV2 {
+        dist2: Vec<f64>,
+        r2: f64,
+        epoch: u64,
+        model_id: String,
+    },
+    /// Scoring server -> client (v3): the request was shed under load
+    /// (bounded queue / in-flight cap). The connection survives; the
+    /// client should back off and retry.
+    Overloaded { reason: String },
 }
 
 impl Message {
@@ -149,13 +170,29 @@ impl Message {
             Message::SwapAck { .. } => 11,
             Message::StatsRequest => 12,
             Message::StatsReply { .. } => 13,
+            Message::ScoreRequestV2 { .. } => 14,
+            Message::ScoreReplyV2 { .. } => 15,
+            Message::Overloaded { .. } => 16,
         }
     }
 
-    /// Is this frame part of the v2 vocabulary? Sessions negotiated down
+    /// Lowest protocol version whose vocabulary includes this frame. A
+    /// session negotiated to version `v` must never carry a frame with
+    /// `min_version() > v` in either direction — servers drop such
+    /// connections rather than answer with frames the peer cannot
+    /// decode.
+    pub fn min_version(&self) -> u32 {
+        match self.tag() {
+            0..=7 => 1,
+            8..=13 => 2,
+            _ => 3,
+        }
+    }
+
+    /// Is this frame beyond the v1 vocabulary? Sessions negotiated down
     /// to v1 must never see these tags in either direction.
     pub fn requires_v2(&self) -> bool {
-        self.tag() >= 8
+        self.min_version() >= 2
     }
 
     /// Serialize to a byte buffer (without the outer length prefix).
@@ -218,6 +255,21 @@ impl Message {
                     put_bytes(&mut b, k.as_bytes());
                     put_u64(&mut b, *v);
                 }
+            }
+            Message::ScoreRequestV2 { rows } => {
+                put_matrix(&mut b, rows);
+            }
+            Message::ScoreReplyV2 { dist2, r2, epoch, model_id } => {
+                put_u32(&mut b, dist2.len() as u32);
+                for &v in dist2 {
+                    put_f64(&mut b, v);
+                }
+                put_f64(&mut b, *r2);
+                put_u64(&mut b, *epoch);
+                put_bytes(&mut b, model_id.as_bytes());
+            }
+            Message::Overloaded { reason } => {
+                put_bytes(&mut b, reason.as_bytes());
             }
         }
         b
@@ -291,6 +343,26 @@ impl Message {
                 }
                 Message::StatsReply { text, counters }
             }
+            14 => Message::ScoreRequestV2 { rows: c.matrix()? },
+            15 => {
+                let n = c.u32()? as usize;
+                if n > MAX_FRAME / 8 {
+                    return Err(Error::Distributed(format!("reply too large: {n}")));
+                }
+                let mut dist2 = Vec::with_capacity(n);
+                for _ in 0..n {
+                    dist2.push(c.f64()?);
+                }
+                Message::ScoreReplyV2 {
+                    dist2,
+                    r2: c.f64()?,
+                    epoch: c.u64()?,
+                    model_id: String::from_utf8_lossy(&c.bytes()?).into_owned(),
+                }
+            }
+            16 => Message::Overloaded {
+                reason: String::from_utf8_lossy(&c.bytes()?).into_owned(),
+            },
             t => return Err(Error::Distributed(format!("unknown tag {t}"))),
         };
         if c.pos != buf.len() {
@@ -474,6 +546,14 @@ mod tests {
                 counters: vec![("rows_scored".into(), 128), ("batches_scored".into(), 2)],
             },
             Message::StatsReply { text: String::new(), counters: vec![] },
+            Message::ScoreRequestV2 { rows: sample_matrix() },
+            Message::ScoreReplyV2 {
+                dist2: vec![0.5, -1.25],
+                r2: 0.88,
+                epoch: 9,
+                model_id: "v-00f3a9c2deadbeef".into(),
+            },
+            Message::Overloaded { reason: "scoring queue full".into() },
         ];
         for m in msgs {
             let enc = m.encode();
@@ -549,6 +629,33 @@ mod tests {
         assert!(Message::ModelInfoRequest.requires_v2());
         assert!(Message::StatsRequest.requires_v2());
         assert!(Message::StatsReply { text: String::new(), counters: vec![] }.requires_v2());
+    }
+
+    #[test]
+    fn min_version_partitions_the_vocabulary() {
+        assert_eq!(Message::Hello { version: 1 }.min_version(), 1);
+        assert_eq!(Message::ScoreRequest { rows: sample_matrix() }.min_version(), 1);
+        assert_eq!(Message::ModelInfoRequest.min_version(), 2);
+        assert_eq!(
+            Message::StatsReply { text: String::new(), counters: vec![] }.min_version(),
+            2
+        );
+        // the serving-edge frames are v3-only: a v2 session must never
+        // carry them (older builds cannot decode tags 14-16)
+        assert_eq!(Message::ScoreRequestV2 { rows: sample_matrix() }.min_version(), 3);
+        assert_eq!(
+            Message::ScoreReplyV2 {
+                dist2: vec![],
+                r2: 0.0,
+                epoch: 0,
+                model_id: String::new()
+            }
+            .min_version(),
+            3
+        );
+        assert_eq!(Message::Overloaded { reason: String::new() }.min_version(), 3);
+        // min_version is consistent with the v2 predicate
+        assert!(Message::Overloaded { reason: String::new() }.requires_v2());
     }
 
     #[test]

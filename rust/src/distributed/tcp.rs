@@ -120,10 +120,11 @@ fn handle_connection(
             Ok(m) => m,
             Err(_) => break, // peer went away
         };
-        // never answer a v1 session with frames it cannot decode
-        if session_version < 2 && msg.requires_v2() {
+        // never accept a frame the negotiated session version cannot carry
+        if msg.min_version() > session_version {
             return Err(Error::Distributed(format!(
-                "v2 frame on a v{session_version} session: {msg:?}"
+                "v{} frame on a v{session_version} session: {msg:?}",
+                msg.min_version()
             )));
         }
         match msg {

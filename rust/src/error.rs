@@ -23,6 +23,11 @@ pub enum Error {
     /// Configuration file / CLI parsing problems.
     Config(String),
 
+    /// The serving path shed this request under load (bounded queue /
+    /// in-flight cap). Retryable: the caller should back off and retry
+    /// rather than treat the request as invalid.
+    Overloaded(String),
+
     /// JSON parse errors from the mini parser.
     Json(String),
 
@@ -43,6 +48,7 @@ impl fmt::Display for Error {
             Error::Runtime(m) => write!(f, "runtime: {m}"),
             Error::Distributed(m) => write!(f, "distributed: {m}"),
             Error::Config(m) => write!(f, "config: {m}"),
+            Error::Overloaded(m) => write!(f, "overloaded: {m}"),
             Error::Json(m) => write!(f, "json: {m}"),
             Error::Registry(m) => write!(f, "registry: {m}"),
             Error::Io(e) => write!(f, "{e}"),
@@ -90,6 +96,10 @@ mod tests {
         assert_eq!(Error::invalid("x").to_string(), "invalid input: x");
         assert_eq!(Error::Registry("gone".into()).to_string(), "registry: gone");
         assert_eq!(Error::Json("bad".into()).to_string(), "json: bad");
+        assert_eq!(
+            Error::Overloaded("queue full".into()).to_string(),
+            "overloaded: queue full"
+        );
     }
 
     #[test]

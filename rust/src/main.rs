@@ -322,9 +322,12 @@ fn cmd_worker(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     args.expect_only(&[
         "model", "listen", "xla", "artifacts", "batch", "linger-ms", "registry",
-        "watch", "watch-interval-ms", "allow-remote-swap", "threads",
+        "watch", "watch-interval-ms", "allow-remote-swap", "threads", "config",
+        "http", "batch-window-us", "max-inflight", "max-conns",
     ])?;
     install_threads_arg(args)?;
+    // serving knobs: config file < CLI overrides (RunConfig::from_args)
+    let cfg = RunConfig::from_args(args)?;
     let registry = match args.get("registry") {
         Some(dir) => Some(Registry::open(dir)?),
         None => None,
@@ -359,35 +362,47 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
     };
     let addr = args.get_or("listen", "127.0.0.1:7800");
+    // window precedence: --batch-window-us > --linger-ms (legacy
+    // spelling) > config file / default
+    let linger = if args.get("batch-window-us").is_none() && args.get("linger-ms").is_some()
+    {
+        std::time::Duration::from_millis(args.get_u64("linger-ms", 2)?)
+    } else {
+        std::time::Duration::from_micros(cfg.batch_window_us)
+    };
     let policy = fastsvdd::scoring::BatchPolicy {
         target_batch: args.get_usize("batch", 256)?,
-        linger: std::time::Duration::from_millis(args.get_u64("linger-ms", 2)?),
+        linger,
         ..Default::default()
     };
+    // the wire protocol is unauthenticated: remote SwapModel frames are
+    // refused unless the operator opts in
+    let builder = fastsvdd::scoring::ScoreServer::builder(addr)
+        .model(model.clone())
+        .policy(policy)
+        .http(cfg.http)
+        .max_conns(cfg.max_conns)
+        .max_inflight(cfg.max_inflight)
+        .remote_swap(args.flag("allow-remote-swap"));
     // engine: XLA when requested + artifacts are present, else native.
     // The closure receives the model snapshot its batch was pinned to,
     // so both engines keep scoring correctly across hot-swaps.
     let server = if args.flag("xla") {
         let dir = args.get_or("artifacts", "artifacts").to_string();
         let rt = std::sync::Arc::new(SharedRuntime::new(Path::new(&dir))?);
-        fastsvdd::scoring::ScoreServer::spawn(addr, model.clone(), policy, move |m, zs| {
-            Scorer::xla(m, &rt).dist2_batch(zs)
-        })?
+        builder.spawn(move |m, zs| Scorer::xla(m, &rt).dist2_batch(zs))?
     } else {
-        fastsvdd::scoring::ScoreServer::spawn(addr, model.clone(), policy, |m, zs| {
-            Ok(m.dist2_batch(zs))
-        })?
+        builder.spawn(|m, zs| Ok(m.dist2_batch(zs)))?
     };
-    // the wire protocol is unauthenticated: remote SwapModel frames are
-    // refused unless the operator opts in
-    server.set_remote_swap_enabled(args.flag("allow-remote-swap"));
     println!(
-        "scoring server on {} (model {}: {} SVs, R^2={:.4}; engine={}; remote swap {})",
+        "scoring server on {} (model {}: {} SVs, R^2={:.4}; engine={}; \
+         http ingress {}; remote swap {})",
         server.addr(),
         model.content_id(),
         model.num_sv(),
         model.r2(),
         if args.flag("xla") { "xla" } else { "native" },
+        if cfg.http { "enabled" } else { "disabled" },
         if args.flag("allow-remote-swap") { "enabled" } else { "disabled" }
     );
     let watch = args.flag("watch");

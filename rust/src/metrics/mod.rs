@@ -37,6 +37,27 @@ impl Counter {
     }
 }
 
+/// Last-write-wins gauge (e.g. the rows currently queued at the
+/// batcher). Relaxed atomics: the value is a point-in-time reading, not
+/// an accumulator, so torn ordering across threads is acceptable.
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub const fn new() -> Gauge {
+        Gauge(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
 /// Latency histogram with exponential bucket edges (microseconds):
 /// 1us, 2us, 4us, ... ~ 1hr, plus a running sum/count for the mean and
 /// exact min/max for quantile clamping.
@@ -74,8 +95,17 @@ impl Histogram {
     /// Record a duration in seconds.
     pub fn observe(&self, secs: f64) {
         // `as` saturates (NaN -> 0, inf -> u64::MAX), so a pathological
-        // duration cannot wrap the cast...
-        let us = (secs * 1e6).max(0.0) as u64;
+        // duration cannot wrap the cast.
+        self.observe_raw((secs * 1e6).max(0.0) as u64);
+    }
+
+    /// Record a raw integral value (same exponential buckets, but the
+    /// unit is whatever the caller says it is — e.g. *rows per batch*
+    /// for the batch-fill histogram rather than microseconds). The
+    /// seconds-based accessors divide by 1e6, so raw histograms should
+    /// be read through [`Histogram::sum_raw`] / [`Histogram::count`] /
+    /// [`Histogram::bucket_counts`] instead.
+    pub fn observe_raw(&self, us: u64) {
         let idx = (64 - us.max(1).leading_zeros() as usize - 1).min(BUCKETS - 1);
         self.buckets[idx].fetch_add(1, Ordering::Relaxed);
         // ...and the accumulator saturates instead of overflowing when
@@ -164,6 +194,12 @@ impl Histogram {
         self.sum_us.load(Ordering::Relaxed) as f64 / 1e6
     }
 
+    /// Sum of raw observed values (for [`Histogram::observe_raw`]
+    /// histograms, where the unit is not microseconds).
+    pub fn sum_raw(&self) -> u64 {
+        self.sum_us.load(Ordering::Relaxed)
+    }
+
     fn sum_us(&self) -> u64 {
         self.sum_us.load(Ordering::Relaxed)
     }
@@ -190,6 +226,24 @@ pub struct Metrics {
     pub smo_cache_hits: Counter,
     pub smo_cache_lookups: Counter,
     pub score_latency: Histogram,
+    /// Serving edge: how long each micro-batch window lingered between
+    /// the first queued request and dispatch (seconds).
+    pub window_wait: Histogram,
+    /// Serving edge: rows per dispatched micro-batch (raw-valued
+    /// histogram — read via [`Histogram::sum_raw`], not `sum_secs`).
+    pub batch_fill: Histogram,
+    /// Serving edge: rows sitting in the batcher queue (point-in-time).
+    pub queue_depth: Gauge,
+    /// Serving edge: requests shed under overload (bounded queue /
+    /// in-flight cap) with an explicit overload reply.
+    pub shed_requests: Counter,
+    /// Serving edge: HTTP requests handled on the shared listener
+    /// (scores, scrapes and error replies alike).
+    pub edge_http_requests: Counter,
+    /// Serving edge: connections accepted by the multiplexer.
+    pub edge_conns_opened: Counter,
+    /// Serving edge: connections refused at the `max_conns` cap.
+    pub edge_conns_rejected: Counter,
     /// Lifecycle: hot-swaps applied to a serving model slot.
     pub model_swaps: Counter,
     /// Lifecycle: retrains seeded from the champion's SV set.
@@ -245,7 +299,8 @@ impl Metrics {
         format!(
             "batches={} rows={} xla_execs={} solves={} iters={} smo_iters={} \
              shrinks={} unshrinks={} cache_hit_rate={:.3} swaps={} \
-             retrains_warm={} retrains_cold={} score_mean={:.3}ms score_p99={:.3}ms",
+             retrains_warm={} retrains_cold={} sheds={} \
+             score_mean={:.3}ms score_p99={:.3}ms",
             self.batches_scored.get(),
             self.rows_scored.get(),
             self.xla_executions.get(),
@@ -258,6 +313,7 @@ impl Metrics {
             self.model_swaps.get(),
             self.retrains_warm.get(),
             self.retrains_cold.get(),
+            self.shed_requests.get(),
             self.score_latency.mean_secs() * 1e3,
             self.score_latency.quantile_secs(0.99) * 1e3,
         )
@@ -267,7 +323,7 @@ impl Metrics {
     /// on the wire and what [`aggregate`] sums cluster-wide; histogram
     /// sums ride along in microseconds so they stay integral.
     pub fn snapshot(&self) -> Vec<(String, u64)> {
-        let pairs: [(&str, u64); 17] = [
+        let pairs: [(&str, u64); 26] = [
             ("batches_scored", self.batches_scored.get()),
             ("rows_scored", self.rows_scored.get()),
             ("xla_executions", self.xla_executions.get()),
@@ -285,6 +341,15 @@ impl Metrics {
             ("score_latency_sum_us", self.score_latency.sum_us()),
             ("retrain_latency_count", self.retrain_latency.count()),
             ("retrain_latency_sum_us", self.retrain_latency.sum_us()),
+            ("shed_requests", self.shed_requests.get()),
+            ("edge_http_requests", self.edge_http_requests.get()),
+            ("edge_conns_opened", self.edge_conns_opened.get()),
+            ("edge_conns_rejected", self.edge_conns_rejected.get()),
+            ("queue_depth_rows", self.queue_depth.get()),
+            ("window_wait_count", self.window_wait.count()),
+            ("window_wait_sum_us", self.window_wait.sum_us()),
+            ("batch_fill_count", self.batch_fill.count()),
+            ("batch_fill_sum_rows", self.batch_fill.sum_raw()),
         ];
         pairs.iter().map(|&(k, v)| (k.to_string(), v)).collect()
     }
@@ -294,7 +359,7 @@ impl Metrics {
     /// bucket series of both latency histograms.
     pub fn render_prometheus(&self) -> String {
         let mut out = String::new();
-        let counters: [(&str, &str, u64); 13] = [
+        let counters: [(&str, &str, u64); 17] = [
             ("fastsvdd_batches_scored_total", "Scoring batches executed", self.batches_scored.get()),
             ("fastsvdd_rows_scored_total", "Rows scored", self.rows_scored.get()),
             ("fastsvdd_xla_executions_total", "XLA artifact executions", self.xla_executions.get()),
@@ -308,6 +373,10 @@ impl Metrics {
             ("fastsvdd_model_swaps_total", "Model hot-swaps applied to the serving slot", self.model_swaps.get()),
             ("fastsvdd_retrains_warm_total", "Warm-start retrains", self.retrains_warm.get()),
             ("fastsvdd_retrains_cold_total", "Cold-start retrains", self.retrains_cold.get()),
+            ("fastsvdd_shed_requests_total", "Requests shed under overload with an explicit overload reply", self.shed_requests.get()),
+            ("fastsvdd_edge_http_requests_total", "HTTP requests handled on the serving listener", self.edge_http_requests.get()),
+            ("fastsvdd_edge_conns_opened_total", "Connections accepted by the serving edge", self.edge_conns_opened.get()),
+            ("fastsvdd_edge_conns_rejected_total", "Connections refused at the max_conns cap", self.edge_conns_rejected.get()),
         ];
         for (name, help, v) in counters {
             out.push_str(&format!(
@@ -320,11 +389,29 @@ impl Metrics {
              fastsvdd_smo_cache_hit_rate {}\n",
             self.cache_hit_rate()
         ));
+        out.push_str(&format!(
+            "# HELP fastsvdd_queue_depth_rows Rows queued at the batcher \
+             (point-in-time)\n# TYPE fastsvdd_queue_depth_rows gauge\n\
+             fastsvdd_queue_depth_rows {}\n",
+            self.queue_depth.get()
+        ));
         prom_histogram(
             &mut out,
             "fastsvdd_score_latency_seconds",
             "Batch scoring latency",
             &self.score_latency,
+        );
+        prom_histogram(
+            &mut out,
+            "fastsvdd_window_wait_seconds",
+            "Micro-batch window linger before dispatch",
+            &self.window_wait,
+        );
+        prom_histogram_raw(
+            &mut out,
+            "fastsvdd_batch_fill_rows",
+            "Rows per dispatched micro-batch",
+            &self.batch_fill,
         );
         prom_histogram(
             &mut out,
@@ -352,6 +439,25 @@ fn prom_histogram(out: &mut String, name: &str, help: &str, h: &Histogram) {
     }
     out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {}\n", h.count()));
     out.push_str(&format!("{name}_sum {}\n", h.sum_secs()));
+    out.push_str(&format!("{name}_count {}\n", h.count()));
+}
+
+/// [`prom_histogram`] for raw-valued histograms
+/// ([`Histogram::observe_raw`]): bucket edges and the sum stay in the
+/// caller's unit (e.g. rows) instead of being scaled to seconds.
+fn prom_histogram_raw(out: &mut String, name: &str, help: &str, h: &Histogram) {
+    out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} histogram\n"));
+    let counts = h.bucket_counts();
+    let last = counts.iter().rposition(|&c| c > 0).map(|i| i + 1).unwrap_or(0);
+    let mut cum = 0u64;
+    for (i, &c) in counts.iter().enumerate().take(last) {
+        cum += c;
+        // bucket i covers [2^i, 2^(i+1)) raw units -> integral upper edge
+        let le = 1u64 << (i + 1);
+        out.push_str(&format!("{name}_bucket{{le=\"{le}\"}} {cum}\n"));
+    }
+    out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {}\n", h.count()));
+    out.push_str(&format!("{name}_sum {}\n", h.sum_raw()));
     out.push_str(&format!("{name}_count {}\n", h.count()));
 }
 
@@ -547,6 +653,66 @@ mod tests {
         assert_eq!(get("smo_cache_hits"), 5);
         assert_eq!(get("smo_cache_lookups"), 2);
         assert_eq!(get("model_swaps"), 0);
+    }
+
+    #[test]
+    fn gauge_is_last_write_wins() {
+        let g = Gauge::new();
+        assert_eq!(g.get(), 0);
+        g.set(42);
+        g.set(7);
+        assert_eq!(g.get(), 7);
+    }
+
+    #[test]
+    fn raw_histogram_keeps_raw_units() {
+        let h = Histogram::new();
+        h.observe_raw(3); // rows, not microseconds
+        h.observe_raw(300);
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.sum_raw(), 303);
+        let counts = h.bucket_counts();
+        assert_eq!(counts.iter().sum::<u64>(), 2);
+        // 3 lands in bucket [2,4), 300 in [256,512)
+        assert_eq!(counts[1], 1);
+        assert_eq!(counts[8], 1);
+    }
+
+    #[test]
+    fn edge_metrics_flow_to_exposition_and_snapshot() {
+        let m = Metrics::new();
+        m.shed_requests.add(3);
+        m.edge_http_requests.add(9);
+        m.edge_conns_opened.add(5);
+        m.queue_depth.set(17);
+        m.window_wait.observe(0.0015);
+        m.batch_fill.observe_raw(128);
+        let text = m.render_prometheus();
+        assert!(text.contains("# TYPE fastsvdd_shed_requests_total counter"));
+        assert!(text.contains("fastsvdd_shed_requests_total 3"));
+        assert!(text.contains("fastsvdd_edge_http_requests_total 9"));
+        assert!(text.contains("# TYPE fastsvdd_queue_depth_rows gauge"));
+        assert!(text.contains("fastsvdd_queue_depth_rows 17"));
+        assert!(text.contains("# TYPE fastsvdd_window_wait_seconds histogram"));
+        assert!(text.contains("# TYPE fastsvdd_batch_fill_rows histogram"));
+        // raw bucket edges are integral (128 lands in [128,256) -> le=256)
+        assert!(text.contains("fastsvdd_batch_fill_rows_bucket{le=\"256\"} 1"));
+        assert!(text.contains("fastsvdd_batch_fill_rows_sum 128"));
+        let snap = m.snapshot();
+        let get = |k: &str| snap.iter().find(|(n, _)| n == k).unwrap().1;
+        assert_eq!(get("shed_requests"), 3);
+        assert_eq!(get("edge_conns_opened"), 5);
+        assert_eq!(get("queue_depth_rows"), 17);
+        assert_eq!(get("window_wait_count"), 1);
+        assert_eq!(get("batch_fill_sum_rows"), 128);
+        assert!(m.render().contains("sheds=3"));
+        // every exposition line still parses as "name value"
+        for line in text.lines() {
+            if !line.starts_with('#') {
+                let value = line.rsplitn(2, ' ').next().unwrap();
+                assert!(value.parse::<f64>().is_ok(), "bad value in {line}");
+            }
+        }
     }
 
     #[test]

@@ -18,7 +18,8 @@
 //! | `gram.compute`          | `rows`, `entries`                        |
 //! | `score.dist2_batch`     | `rows`, `num_sv`                         |
 //! | `batcher.batch`         | `rows`, `requests`                       |
-//! | `server.request`        | `kind` (score/info/swap/stats)           |
+//! | `server.request`        | `kind` (score/score_v2/info/swap/stats/  |
+//! |                         | http), `path` (http only)                |
 //! | `lifecycle.retrain`     | `version`, `warm`, `r2`                  |
 //! | `lifecycle.drift` (ev)  | `action`                                 |
 //! | `lifecycle.promote` (ev)| `version`                                |

@@ -31,6 +31,7 @@ use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
 use crate::metrics::Metrics;
+use crate::scoring::ScoreReply;
 use crate::svdd::model::SvddModel;
 use crate::util::matrix::Matrix;
 
@@ -39,10 +40,17 @@ use crate::util::matrix::Matrix;
 pub struct BatchPolicy {
     /// Dispatch as soon as this many rows are queued.
     pub target_batch: usize,
-    /// Dispatch a partial batch after this long (latency bound).
+    /// Dispatch a partial batch after this long (latency bound). With
+    /// [`BatchPolicy::adaptive`] this is the *ceiling* of the window.
     pub linger: Duration,
     /// Queue capacity in rows (backpressure: enqueue errors beyond it).
     pub capacity: usize,
+    /// Adapt the linger window to observed concurrency: a batch that
+    /// coalesced ≥ 2 requests doubles the window back toward `linger`
+    /// (waiting pays off), a solo batch halves it down to a floor of
+    /// `linger / 16` (≥ 50µs), so lone-client latency approaches the
+    /// raw scoring cost instead of always eating the full linger.
+    pub adaptive: bool,
 }
 
 impl Default for BatchPolicy {
@@ -51,7 +59,23 @@ impl Default for BatchPolicy {
             target_batch: 256,
             linger: Duration::from_millis(2),
             capacity: 1 << 16,
+            adaptive: true,
         }
+    }
+}
+
+/// Next linger window after a batch that coalesced `requests` requests.
+fn next_window(window: Duration, requests: usize, policy: &BatchPolicy) -> Duration {
+    if !policy.adaptive {
+        return policy.linger;
+    }
+    let floor = (policy.linger / 16)
+        .max(Duration::from_micros(50))
+        .min(policy.linger);
+    if requests >= 2 {
+        (window * 2).min(policy.linger)
+    } else {
+        (window / 2).max(floor)
     }
 }
 
@@ -83,6 +107,17 @@ impl ModelSlot {
     /// Snapshot of the active model.
     pub fn current(&self) -> Arc<SvddModel> {
         self.current.read().expect("model slot poisoned").clone()
+    }
+
+    /// Consistent `(model, epoch)` snapshot. [`ModelSlot::swap`] bumps
+    /// the epoch while still holding the write lock, so reading both
+    /// under the read lock can never pair a new model with the old
+    /// epoch (or vice versa).
+    pub fn snapshot(&self) -> (Arc<SvddModel>, u64) {
+        let guard = self.current.read().expect("model slot poisoned");
+        let model = guard.clone();
+        let epoch = self.epoch.load(Ordering::Acquire);
+        (model, epoch)
     }
 
     /// Replace the active model; returns the new epoch. The input
@@ -117,9 +152,14 @@ impl ModelSlot {
 struct Request {
     rows: Vec<f64>, // flattened
     n: usize,
-    /// Scores plus the R^2 of the model that produced them, so each
-    /// reply is internally consistent across a swap.
-    reply: mpsc::Sender<(Vec<f64>, f64)>,
+    /// Caller-chosen id echoed back with the reply, so many requests
+    /// can share one completion channel (the serving edge funnels every
+    /// connection's completions into a single non-blocking receiver and
+    /// demultiplexes by tag).
+    tag: u64,
+    /// The full reply is built from one model snapshot, so distances,
+    /// R^2, epoch and model id are internally consistent across swaps.
+    reply: mpsc::Sender<(u64, ScoreReply)>,
 }
 
 struct Queue {
@@ -140,6 +180,7 @@ pub struct BatcherHandle {
     shared: Arc<(Mutex<Queue>, Condvar)>,
     dim: usize,
     capacity: usize,
+    metrics: Arc<Metrics>,
 }
 
 impl Batcher {
@@ -163,13 +204,15 @@ impl Batcher {
         ));
         let shared2 = shared.clone();
         let slot2 = slot.clone();
+        let metrics2 = metrics.clone();
         let worker = std::thread::spawn(move || {
-            dispatch_loop(shared2, policy, slot2, metrics, score_fn);
+            dispatch_loop(shared2, policy, slot2, metrics2, score_fn);
         });
         let handle = BatcherHandle {
             shared: shared.clone(),
             dim,
             capacity: policy.capacity,
+            metrics,
         };
         (Batcher { shared, worker: Some(worker) }, handle)
     }
@@ -194,16 +237,61 @@ impl Drop for Batcher {
 }
 
 impl BatcherHandle {
+    /// Input dimension this batcher serves (pinned at slot creation).
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Non-blocking enqueue: `(tag, reply)` lands on `reply` once the
+    /// dispatch loop scores the batch containing these rows. This is
+    /// the edge's entry point — it never blocks the readiness loop.
+    ///
+    /// Backpressure: beyond `capacity` queued rows the request is shed
+    /// with [`Error::Overloaded`] (counted in `shed_requests`) so the
+    /// caller can send an explicit overload reply instead of stalling.
+    pub(crate) fn submit(
+        &self,
+        rows: Vec<f64>,
+        n: usize,
+        tag: u64,
+        reply: mpsc::Sender<(u64, ScoreReply)>,
+    ) -> Result<()> {
+        debug_assert_eq!(rows.len(), n * self.dim);
+        let (lock, cv) = &*self.shared;
+        let mut q = lock.lock().unwrap();
+        if q.shutdown {
+            return Err(Error::invalid("batcher is shut down"));
+        }
+        if q.queued_rows + n > self.capacity {
+            self.metrics.shed_requests.inc();
+            return Err(Error::Overloaded(format!(
+                "scoring queue full: {} rows queued + {n} new > {} capacity",
+                q.queued_rows, self.capacity
+            )));
+        }
+        q.queued_rows += n;
+        self.metrics.queue_depth.set(q.queued_rows as u64);
+        q.requests.push(Request { rows, n, tag, reply });
+        cv.notify_all();
+        Ok(())
+    }
+
     /// Score a batch of observations; blocks until the dispatch loop
     /// returns this request's scores.
     pub fn score(&self, zs: &Matrix) -> Result<Vec<f64>> {
-        self.score_with_r2(zs).map(|(dist2, _)| dist2)
+        self.score_reply(zs).map(|r| r.dist2)
     }
 
     /// Like [`BatcherHandle::score`], also returning the R^2 threshold
-    /// of the model snapshot that scored this batch (the pair a
-    /// `ScoreReply` needs to stay consistent across hot-swaps).
+    /// of the model snapshot that scored this batch.
     pub fn score_with_r2(&self, zs: &Matrix) -> Result<(Vec<f64>, f64)> {
+        self.score_reply(zs).map(|r| (r.dist2, r.r2))
+    }
+
+    /// Blocking scoring with full provenance ([`ScoreReply`]): the
+    /// distances plus the R^2 / epoch / content id of the one model
+    /// snapshot that produced them.
+    pub fn score_reply(&self, zs: &Matrix) -> Result<ScoreReply> {
         if zs.cols() != self.dim {
             return Err(Error::invalid(format!(
                 "batcher expects dim {}, got {}",
@@ -212,25 +300,16 @@ impl BatcherHandle {
             )));
         }
         let (tx, rx) = mpsc::channel();
-        {
-            let (lock, cv) = &*self.shared;
-            let mut q = lock.lock().unwrap();
-            if q.shutdown {
-                return Err(Error::invalid("batcher is shut down"));
-            }
-            if q.queued_rows + zs.rows() > self.capacity {
-                return Err(Error::invalid("scoring queue full (backpressure)"));
-            }
-            q.queued_rows += zs.rows();
-            q.requests.push(Request {
-                rows: zs.as_slice().to_vec(),
-                n: zs.rows(),
-                reply: tx,
-            });
-            cv.notify_all();
-        }
+        self.submit(zs.as_slice().to_vec(), zs.rows(), 0, tx)?;
         rx.recv()
+            .map(|(_, reply)| reply)
             .map_err(|_| Error::invalid("batcher dropped the request"))
+    }
+}
+
+impl crate::scoring::ScoreService for BatcherHandle {
+    fn score(&self, zs: &Matrix) -> Result<ScoreReply> {
+        self.score_reply(zs)
     }
 }
 
@@ -245,6 +324,7 @@ fn dispatch_loop<F>(
 {
     let dim = slot.dim();
     let (lock, cv) = &*shared;
+    let mut window = policy.linger;
     loop {
         // wait until there is work (or shutdown)
         let mut q = lock.lock().unwrap();
@@ -255,7 +335,8 @@ fn dispatch_loop<F>(
             return;
         }
         // linger for more work up to the deadline or the target batch
-        let deadline = Instant::now() + policy.linger;
+        let woke = Instant::now();
+        let deadline = woke + window;
         while q.queued_rows < policy.target_batch && !q.shutdown {
             let now = Instant::now();
             if now >= deadline {
@@ -269,14 +350,18 @@ fn dispatch_loop<F>(
         }
         let batch: Vec<Request> = std::mem::take(&mut q.requests);
         q.queued_rows = 0;
+        metrics.queue_depth.set(0);
         drop(q);
+        metrics.window_wait.observe(woke.elapsed().as_secs_f64());
+        window = next_window(window, batch.len(), &policy);
 
         // pin the model for this whole batch: a swap landing mid-score
         // takes effect from the *next* drained batch
-        let model = slot.current();
+        let (model, epoch) = slot.snapshot();
 
         // assemble one matrix for the whole batch
         let total: usize = batch.iter().map(|r| r.n).sum();
+        metrics.batch_fill.observe_raw(total as u64);
         let mut flat = Vec::with_capacity(total * dim);
         for r in &batch {
             flat.extend_from_slice(&r.rows);
@@ -294,13 +379,20 @@ fn dispatch_loop<F>(
         metrics.batches_scored.inc();
         metrics.rows_scored.add(total as u64);
 
-        // fan out
+        // fan out, with the provenance of the one snapshot that scored
         let r2 = model.r2();
+        let model_id = model.content_id();
         let mut offset = 0;
         for r in batch {
             let slice = scores[offset..offset + r.n].to_vec();
             offset += r.n;
-            let _ = r.reply.send((slice, r2)); // receiver may have gone away
+            let reply = ScoreReply {
+                dist2: slice,
+                r2,
+                epoch,
+                model_id: model_id.clone(),
+            };
+            let _ = r.reply.send((r.tag, reply)); // receiver may have gone away
         }
     }
 }
@@ -353,6 +445,7 @@ mod tests {
             target_batch: 64,
             linger: Duration::from_millis(20),
             capacity: 1 << 16,
+            adaptive: false, // timing-sensitive: keep the window fixed
         };
         let slot = ModelSlot::new(m.clone());
         let (_b, h) = spawn_native(&slot, policy, metrics.clone());
@@ -398,9 +491,10 @@ mod tests {
             target_batch: 1 << 20,              // never fills
             linger: Duration::from_millis(200), // long linger holds the queue
             capacity: 32,
+            adaptive: false, // timing-sensitive: keep the window fixed
         };
         let slot = ModelSlot::new(m);
-        let (_b, h) = spawn_native(&slot, policy, metrics);
+        let (_b, h) = spawn_native(&slot, policy, metrics.clone());
         // first request parks in the queue
         let h2 = h.clone();
         let t = std::thread::spawn(move || {
@@ -410,7 +504,12 @@ mod tests {
         std::thread::sleep(Duration::from_millis(30));
         // second request overflows the 32-row capacity while the first lingers
         let zs = Banana::default().generate(10, 4);
-        assert!(h.score(&zs).is_err(), "backpressure did not trip");
+        let err = h.score(&zs).unwrap_err();
+        assert!(
+            matches!(err, Error::Overloaded(_)),
+            "backpressure must shed with Overloaded, got: {err}"
+        );
+        assert_eq!(metrics.shed_requests.get(), 1);
         t.join().unwrap();
     }
 
@@ -466,7 +565,7 @@ mod tests {
         let policy = BatchPolicy {
             target_batch: 32,
             linger: Duration::from_micros(200),
-            capacity: 1 << 16,
+            ..BatchPolicy::default()
         };
         let slot = ModelSlot::new(m1.clone());
         let (_b, h) = spawn_native(&slot, policy, metrics);
@@ -510,5 +609,129 @@ mod tests {
         let total: u64 = clients.into_iter().map(|t| t.join().unwrap()).sum();
         assert!(total > 0, "clients never scored");
         assert_eq!(slot.epoch(), 50);
+    }
+
+    #[test]
+    fn next_window_adapts_between_floor_and_linger() {
+        let policy = BatchPolicy {
+            linger: Duration::from_millis(2),
+            ..BatchPolicy::default()
+        };
+        let floor = Duration::from_micros(125); // 2ms / 16
+        // solo batches halve down to the floor, never below
+        let mut w = policy.linger;
+        for _ in 0..10 {
+            w = next_window(w, 1, &policy);
+        }
+        assert_eq!(w, floor);
+        // a coalesced batch doubles back up, capped at linger
+        w = next_window(w, 2, &policy);
+        assert_eq!(w, floor * 2);
+        for _ in 0..10 {
+            w = next_window(w, 5, &policy);
+        }
+        assert_eq!(w, policy.linger);
+        // tiny linger: the 50µs floor is clamped to linger itself
+        let tiny = BatchPolicy {
+            linger: Duration::from_micros(20),
+            ..BatchPolicy::default()
+        };
+        assert_eq!(next_window(tiny.linger, 1, &tiny), tiny.linger);
+        // adaptive off: window is always the configured linger
+        let fixed = BatchPolicy { adaptive: false, ..BatchPolicy::default() };
+        assert_eq!(next_window(Duration::from_micros(1), 1, &fixed), fixed.linger);
+        assert_eq!(next_window(Duration::from_secs(9), 7, &fixed), fixed.linger);
+    }
+
+    #[test]
+    fn adaptive_window_shrinks_solo_latency() {
+        // A lone client pays the full linger on its first request; the
+        // window then halves per solo batch, so a short train of
+        // sequential requests finishes well under requests × linger.
+        let m = model();
+        let metrics = Arc::new(Metrics::new());
+        let policy = BatchPolicy {
+            target_batch: 1 << 20, // never fills: every batch is linger-bound
+            linger: Duration::from_millis(60),
+            capacity: 1 << 16,
+            adaptive: true,
+        };
+        let slot = ModelSlot::new(m);
+        let (_b, h) = spawn_native(&slot, policy, metrics);
+        let zs = Banana::default().generate(4, 8);
+        let sw = Instant::now();
+        for _ in 0..6 {
+            h.score(&zs).unwrap();
+        }
+        let elapsed = sw.elapsed();
+        // fixed window would take ≥ 6 × 60ms = 360ms; adaptive decay
+        // (60 + 30 + 15 + 7.5 + ...) stays near 2 × linger
+        assert!(
+            elapsed < Duration::from_millis(300),
+            "adaptive window did not shrink: 6 solo requests took {elapsed:?}"
+        );
+    }
+
+    #[test]
+    fn score_reply_carries_swap_provenance() {
+        let m1 = model();
+        let m2 = shifted_model();
+        let metrics = Arc::new(Metrics::new());
+        let slot = ModelSlot::new(m1.clone());
+        let (_b, h) = spawn_native(&slot, BatchPolicy::default(), metrics.clone());
+        let zs = Banana::default().generate(5, 9);
+
+        let before = h.score_reply(&zs).unwrap();
+        assert_eq!(before.dist2, m1.dist2_batch(&zs));
+        assert_eq!(before.r2, m1.r2());
+        assert_eq!(before.epoch, 0);
+        assert_eq!(before.model_id, m1.content_id());
+
+        slot.swap(m2.clone()).unwrap();
+        let after = h.score_reply(&zs).unwrap();
+        assert_eq!(after.dist2, m2.dist2_batch(&zs));
+        assert_eq!(after.r2, m2.r2());
+        assert_eq!(after.epoch, 1);
+        assert_eq!(after.model_id, m2.content_id());
+
+        // the new serving metrics observed both batches
+        assert_eq!(metrics.batch_fill.sum_raw(), 10);
+        assert_eq!(metrics.window_wait.count(), 2);
+        assert_eq!(metrics.queue_depth.get(), 0);
+    }
+
+    #[test]
+    fn snapshot_is_consistent_with_swap() {
+        let m1 = model();
+        let m2 = shifted_model();
+        let slot = ModelSlot::new(m1.clone());
+        let (model, epoch) = slot.snapshot();
+        assert_eq!(epoch, 0);
+        assert_eq!(model.content_id(), m1.content_id());
+        slot.swap(m2.clone()).unwrap();
+        let (model, epoch) = slot.snapshot();
+        assert_eq!(epoch, 1);
+        assert_eq!(model.content_id(), m2.content_id());
+    }
+
+    #[test]
+    fn tagged_submit_demultiplexes_on_one_channel() {
+        // Edge-style use: several requests share one completion channel
+        // and are told apart by tag.
+        let m = model();
+        let metrics = Arc::new(Metrics::new());
+        let slot = ModelSlot::new(m.clone());
+        let (_b, h) = spawn_native(&slot, BatchPolicy::default(), metrics);
+        let (tx, rx) = mpsc::channel();
+        let z1 = Banana::default().generate(3, 10);
+        let z2 = Banana::default().generate(2, 11);
+        h.submit(z1.as_slice().to_vec(), 3, 101, tx.clone()).unwrap();
+        h.submit(z2.as_slice().to_vec(), 2, 202, tx).unwrap();
+        let mut got: Vec<(u64, ScoreReply)> = vec![rx.recv().unwrap(), rx.recv().unwrap()];
+        got.sort_by_key(|(tag, _)| *tag);
+        assert_eq!(got[0].0, 101);
+        assert_eq!(got[0].1.dist2, m.dist2_batch(&z1));
+        assert_eq!(got[1].0, 202);
+        assert_eq!(got[1].1.dist2, m.dist2_batch(&z2));
     }
 }

@@ -1,0 +1,1041 @@
+//! The async serving edge: one thread, many connections.
+//!
+//! The threaded [`super::server`] path spends a thread per connection;
+//! at high fan-in (the paper's big-data process-monitoring setting)
+//! thousands of mostly-idle threads cost stacks, context switches and
+//! scheduler pressure. The edge replaces them with a single
+//! **readiness loop** over non-blocking sockets — a dependency-free
+//! `poll`-style multiplexer: every tick it accepts new connections,
+//! drains scoring completions, and advances each connection's
+//! read → parse → reply state machine, sleeping briefly only when a
+//! whole tick made no progress.
+//!
+//! Scoring itself never happens on the loop thread. Requests are handed
+//! to the shared [`Batcher`] via the non-blocking
+//! [`BatcherHandle::submit`], tagged with the connection id; the
+//! dispatch thread coalesces rows from *all* connections into one
+//! `dist2_batch` panel call per adaptive linger window and sends
+//! completions back over a channel. Replies are therefore naturally
+//! micro-batched: more concurrent clients → bigger panels → better
+//! throughput, exactly the fan-in curve `benches/perf_serving.rs`
+//! measures against the thread-per-connection baseline.
+//!
+//! Backpressure never stalls the accept loop. Three bounded stages shed
+//! explicitly instead:
+//! - connection cap (`max_conns`): excess connections get a best-effort
+//!   HTTP 503 and are closed (counted in `edge_conns_rejected`);
+//! - edge in-flight cap (`max_inflight_rows`): rows submitted but not
+//!   yet replied;
+//! - batcher queue cap (`BatchPolicy::capacity`): rows queued for the
+//!   next window.
+//!
+//! The last two shed per-request with an explicit overload reply — HTTP
+//! 503, or the v3 [`Message::Overloaded`] frame; sessions negotiated
+//! below v3 cannot decode that frame, so they are closed instead —
+//! and count into `shed_requests`.
+//!
+//! Hot-swap semantics are inherited unchanged from the batcher: every
+//! micro-batch pins one `(model, epoch)` snapshot, so in-flight batches
+//! finish on the model they started with and each reply carries the
+//! epoch/content-id that actually scored it.
+
+use std::collections::{HashMap, VecDeque};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use crate::distributed::message::{negotiate, Message, MAX_FRAME};
+use crate::error::Error;
+use crate::metrics::Metrics;
+use crate::scoring::batcher::{BatcherHandle, ModelSlot};
+use crate::scoring::http::{self, HttpParse, HttpRequest};
+use crate::scoring::server::looks_like_http;
+use crate::scoring::ScoreReply;
+use crate::svdd::model::SvddModel;
+use crate::util::json::{self, Json};
+use crate::util::matrix::Matrix;
+
+/// Edge tunables (the serve-path knobs `--max-conns`, `--max-inflight`
+/// and `--http` map onto).
+#[derive(Clone, Copy, Debug)]
+pub struct EdgeConfig {
+    /// Serve the `POST /score` JSON ingress. `GET /metrics` and
+    /// `GET /model` are always on (Prometheus scrape parity with the
+    /// threaded listener).
+    pub http_ingress: bool,
+    /// Maximum simultaneously open connections; beyond it, new
+    /// connections get a best-effort 503 and are closed immediately.
+    pub max_conns: usize,
+    /// Maximum rows submitted to the batcher and not yet replied to;
+    /// beyond it, score requests are shed with an overload reply.
+    pub max_inflight_rows: usize,
+}
+
+impl Default for EdgeConfig {
+    fn default() -> Self {
+        EdgeConfig {
+            http_ingress: true,
+            max_conns: 1024,
+            max_inflight_rows: 1 << 16,
+        }
+    }
+}
+
+/// Everything a connection needs from the edge to process a request.
+struct Ctx<'a> {
+    handle: &'a BatcherHandle,
+    slot: &'a ModelSlot,
+    metrics: &'a Metrics,
+    remote_swap: &'a AtomicBool,
+    cfg: &'a EdgeConfig,
+    done_tx: &'a mpsc::Sender<(u64, ScoreReply)>,
+    /// Rows submitted to the batcher whose completions have not been
+    /// drained yet, across all connections.
+    inflight_rows: &'a mut usize,
+}
+
+/// The readiness loop. Runs on one thread until `stop` is set; the
+/// listener must already be non-blocking.
+pub(crate) fn run_edge_loop(
+    listener: TcpListener,
+    stop: Arc<AtomicBool>,
+    handle: BatcherHandle,
+    slot: ModelSlot,
+    metrics: Arc<Metrics>,
+    remote_swap: Arc<AtomicBool>,
+    cfg: EdgeConfig,
+) {
+    let mut conns: HashMap<u64, Conn> = HashMap::new();
+    let mut next_id: u64 = 0;
+    let mut inflight_rows: usize = 0;
+    let (done_tx, done_rx) = mpsc::channel::<(u64, ScoreReply)>();
+    while !stop.load(Ordering::Relaxed) {
+        let mut progressed = false;
+
+        // 1. accept everything pending; never block, never stall
+        loop {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    progressed = true;
+                    if conns.len() >= cfg.max_conns {
+                        metrics.edge_conns_rejected.inc();
+                        shed_connection(stream);
+                        continue;
+                    }
+                    metrics.edge_conns_opened.inc();
+                    stream.set_nonblocking(true).ok();
+                    stream.set_nodelay(true).ok();
+                    next_id += 1;
+                    conns.insert(next_id, Conn::new(next_id, stream));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(_) => return, // listener died
+            }
+        }
+
+        // 2. drain scoring completions into their connections' queues
+        while let Ok((id, reply)) = done_rx.try_recv() {
+            progressed = true;
+            inflight_rows = inflight_rows.saturating_sub(reply.dist2.len());
+            if let Some(conn) = conns.get_mut(&id) {
+                conn.complete(reply);
+            } // else: connection died while its batch was in flight
+        }
+
+        // 3. advance every connection's state machine
+        let ids: Vec<u64> = conns.keys().copied().collect();
+        for id in ids {
+            let mut ctx = Ctx {
+                handle: &handle,
+                slot: &slot,
+                metrics: &metrics,
+                remote_swap: &remote_swap,
+                cfg: &cfg,
+                done_tx: &done_tx,
+                inflight_rows: &mut inflight_rows,
+            };
+            let conn = conns.get_mut(&id).expect("conn id from keys");
+            let dead = match conn.tick(&mut ctx) {
+                Ok(ticked) => {
+                    progressed |= ticked;
+                    conn.finished()
+                }
+                Err(()) => true,
+            };
+            if dead {
+                conns.remove(&id);
+            }
+        }
+
+        if !progressed {
+            std::thread::sleep(Duration::from_micros(500));
+        }
+    }
+}
+
+/// Over the connection cap: tell the peer why, best-effort, and close.
+/// An HTTP client sees a proper 503; a native client fails its
+/// handshake with "frame too large" (the status line read as a length
+/// prefix) — either way an immediate, explicit error instead of a hang.
+fn shed_connection(stream: TcpStream) {
+    use std::io::Write;
+    let mut stream = stream;
+    stream.set_nonblocking(true).ok();
+    let resp = http::json_error(
+        "503 Service Unavailable",
+        "overloaded",
+        "connection limit reached; retry later",
+        false,
+    );
+    let _ = stream.write_all(&resp);
+}
+
+/// Serialize a length-prefixed frame (the buffer form of
+/// [`Message::write_to`], for non-blocking writes).
+fn frame_bytes(msg: &Message) -> Vec<u8> {
+    let body = msg.encode();
+    let mut out = Vec::with_capacity(4 + body.len());
+    out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    out.extend_from_slice(&body);
+    out
+}
+
+/// Pop one complete frame off the front of `rbuf`, if buffered.
+/// `Err` means the stream is unrecoverable (oversized or undecodable
+/// frame) and the connection must be dropped.
+fn take_frame(rbuf: &mut Vec<u8>) -> std::result::Result<Option<Message>, ()> {
+    if rbuf.len() < 4 {
+        return Ok(None);
+    }
+    let len = u32::from_le_bytes([rbuf[0], rbuf[1], rbuf[2], rbuf[3]]) as usize;
+    if len > MAX_FRAME {
+        return Err(());
+    }
+    if rbuf.len() < 4 + len {
+        return Ok(None);
+    }
+    let msg = Message::decode(&rbuf[4..4 + len]).map_err(|_| ())?;
+    rbuf.drain(..4 + len);
+    Ok(Some(msg))
+}
+
+/// What protocol a connection turned out to speak.
+enum Proto {
+    /// Fewer than 4 bytes seen — protocol unknown.
+    Sniff,
+    /// HTTP/1.1 session (keep-alive honored).
+    Http,
+    /// Native framing, Hello not yet received.
+    NativeHello,
+    /// Native framing, handshake done at this session version.
+    Native { version: u32 },
+}
+
+/// How to serialize a batcher completion for this request.
+#[derive(Clone, Copy)]
+enum ReplyKind {
+    /// v1 `ScoreReply { dist2, r2 }` frame.
+    NativeV1,
+    /// v3 `ScoreReplyV2` frame with full provenance.
+    NativeV2,
+    /// HTTP 200 with the JSON reply body.
+    HttpScore,
+}
+
+/// One slot in a connection's FIFO reply queue. Completions arrive in
+/// submit order (single dispatch thread), so each fills the earliest
+/// `Awaiting` slot; `Ready` slots flush strictly in order, preserving
+/// per-connection reply ordering under pipelining.
+enum Pending {
+    Ready { bytes: Vec<u8>, close_after: bool },
+    Awaiting { kind: ReplyKind, close_after: bool },
+}
+
+struct Conn {
+    id: u64,
+    stream: TcpStream,
+    rbuf: Vec<u8>,
+    wbuf: Vec<u8>,
+    wpos: usize,
+    proto: Proto,
+    pending: VecDeque<Pending>,
+    /// Peer closed its write side; serve out pending replies, then close.
+    peer_eof: bool,
+    /// Stop reading/parsing; close once pending replies are flushed.
+    closing: bool,
+}
+
+impl Conn {
+    fn new(id: u64, stream: TcpStream) -> Conn {
+        Conn {
+            id,
+            stream,
+            rbuf: Vec::new(),
+            wbuf: Vec::new(),
+            wpos: 0,
+            proto: Proto::Sniff,
+            pending: VecDeque::new(),
+            peer_eof: false,
+            closing: false,
+        }
+    }
+
+    /// One scheduling quantum: read what's there, advance the protocol,
+    /// stage and flush replies. `Ok(true)` if anything moved; `Err` if
+    /// the connection must be dropped immediately.
+    fn tick(&mut self, ctx: &mut Ctx) -> std::result::Result<bool, ()> {
+        let mut progressed = false;
+        if !self.closing && !self.peer_eof {
+            progressed |= self.read_some()?;
+        }
+        if !self.closing {
+            progressed |= self.advance(ctx)?;
+        }
+        progressed |= self.fill_wbuf();
+        progressed |= self.flush()?;
+        Ok(progressed)
+    }
+
+    /// Nothing left to do: every reply flushed and no more input coming.
+    fn finished(&self) -> bool {
+        (self.closing || self.peer_eof)
+            && self.pending.is_empty()
+            && self.wpos == self.wbuf.len()
+    }
+
+    /// One bounded read (≤ 16 KiB per tick per connection, so a single
+    /// fast writer cannot monopolize the loop).
+    fn read_some(&mut self) -> std::result::Result<bool, ()> {
+        use std::io::Read;
+        let mut tmp = [0u8; 16384];
+        loop {
+            match self.stream.read(&mut tmp) {
+                Ok(0) => {
+                    self.peer_eof = true;
+                    return Ok(true);
+                }
+                Ok(n) => {
+                    self.rbuf.extend_from_slice(&tmp[..n]);
+                    return Ok(true);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return Ok(false),
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => return Err(()),
+            }
+        }
+    }
+
+    /// Parse and dispatch everything buffered so far.
+    fn advance(&mut self, ctx: &mut Ctx) -> std::result::Result<bool, ()> {
+        let mut progressed = false;
+        loop {
+            if self.closing {
+                return Ok(progressed);
+            }
+            match self.proto {
+                Proto::Sniff => {
+                    if self.rbuf.len() < 4 {
+                        return Ok(progressed);
+                    }
+                    let first = [self.rbuf[0], self.rbuf[1], self.rbuf[2], self.rbuf[3]];
+                    self.proto = if looks_like_http(&first) {
+                        Proto::Http
+                    } else {
+                        Proto::NativeHello
+                    };
+                    progressed = true;
+                }
+                Proto::NativeHello => match take_frame(&mut self.rbuf)? {
+                    None => return Ok(progressed),
+                    Some(Message::Hello { version }) => match negotiate(version) {
+                        Some(v) => {
+                            self.push_ready(
+                                frame_bytes(&Message::HelloAck { version: v }),
+                                false,
+                            );
+                            self.proto = Proto::Native { version: v };
+                            progressed = true;
+                        }
+                        None => return Err(()),
+                    },
+                    Some(_) => return Err(()),
+                },
+                Proto::Native { version } => match take_frame(&mut self.rbuf)? {
+                    None => return Ok(progressed),
+                    Some(msg) => {
+                        progressed = true;
+                        self.handle_native(msg, version, ctx)?;
+                    }
+                },
+                Proto::Http => match http::parse_request(&self.rbuf) {
+                    HttpParse::Incomplete => return Ok(progressed),
+                    HttpParse::Ready { req, consumed } => {
+                        self.rbuf.drain(..consumed);
+                        progressed = true;
+                        self.handle_http(req, ctx);
+                    }
+                    HttpParse::Bad(detail) => {
+                        self.push_ready(
+                            http::json_error("400 Bad Request", "bad_request", detail, false),
+                            true,
+                        );
+                        return Ok(true);
+                    }
+                    HttpParse::TooLarge => {
+                        self.push_ready(
+                            http::json_error(
+                                "413 Payload Too Large",
+                                "too_large",
+                                "request exceeds size limits",
+                                false,
+                            ),
+                            true,
+                        );
+                        return Ok(true);
+                    }
+                },
+            }
+        }
+    }
+
+    /// Queue an already-serialized response in FIFO order.
+    /// `close_after` marks it as the connection's last response; the
+    /// connection stops reading now and closes once it flushes.
+    fn push_ready(&mut self, bytes: Vec<u8>, close_after: bool) {
+        self.pending.push_back(Pending::Ready { bytes, close_after });
+        if close_after {
+            self.closing = true;
+        }
+    }
+
+    /// Fill the earliest awaiting reply slot with a completed score.
+    fn complete(&mut self, reply: ScoreReply) {
+        for p in self.pending.iter_mut() {
+            let (kind, close_after) = match *p {
+                Pending::Awaiting { kind, close_after } => (kind, close_after),
+                Pending::Ready { .. } => continue,
+            };
+            let bytes = match kind {
+                ReplyKind::NativeV1 => frame_bytes(&Message::ScoreReply {
+                    dist2: reply.dist2,
+                    r2: reply.r2,
+                }),
+                ReplyKind::NativeV2 => frame_bytes(&Message::ScoreReplyV2 {
+                    dist2: reply.dist2,
+                    r2: reply.r2,
+                    epoch: reply.epoch,
+                    model_id: reply.model_id,
+                }),
+                ReplyKind::HttpScore => http::response(
+                    "200 OK",
+                    "application/json",
+                    &http::score_reply_json(&reply),
+                    !close_after,
+                ),
+            };
+            *p = Pending::Ready { bytes, close_after };
+            return;
+        }
+        // no awaiting slot: the connection errored after submitting —
+        // the reply has nowhere to go (rows were already accounted)
+    }
+
+    /// Move consecutive ready replies into the write buffer.
+    fn fill_wbuf(&mut self) -> bool {
+        let mut progressed = false;
+        while let Some(Pending::Ready { .. }) = self.pending.front() {
+            if let Some(Pending::Ready { bytes, close_after }) = self.pending.pop_front() {
+                self.wbuf.extend_from_slice(&bytes);
+                progressed = true;
+                if close_after {
+                    // last response: drop anything queued behind it
+                    self.pending.clear();
+                    self.closing = true;
+                    break;
+                }
+            }
+        }
+        progressed
+    }
+
+    /// Write as much of the buffer as the socket accepts.
+    fn flush(&mut self) -> std::result::Result<bool, ()> {
+        use std::io::Write;
+        let mut progressed = false;
+        while self.wpos < self.wbuf.len() {
+            match self.stream.write(&self.wbuf[self.wpos..]) {
+                Ok(0) => return Err(()),
+                Ok(n) => {
+                    self.wpos += n;
+                    progressed = true;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => return Err(()),
+            }
+        }
+        if self.wpos == self.wbuf.len() && self.wpos > 0 {
+            self.wbuf.clear();
+            self.wpos = 0;
+        }
+        Ok(progressed)
+    }
+
+    // ------------------------------------------------- native protocol
+
+    fn handle_native(
+        &mut self,
+        msg: Message,
+        version: u32,
+        ctx: &mut Ctx,
+    ) -> std::result::Result<(), ()> {
+        // never answer with (or act on) frames beyond the negotiated
+        // vocabulary — drop the connection like the threaded server
+        if msg.min_version() > version {
+            return Err(());
+        }
+        let mut span = crate::obs::Span::enter("server.request");
+        if span.is_live() {
+            span.str(
+                "kind",
+                match &msg {
+                    Message::ScoreRequest { .. } | Message::ScoreRequestV2 { .. } => "score",
+                    Message::ModelInfoRequest => "info",
+                    Message::SwapModel { .. } => "swap",
+                    Message::StatsRequest => "stats",
+                    _ => "other",
+                },
+            );
+        }
+        match msg {
+            Message::ScoreRequest { rows } => {
+                self.submit_score(rows, ReplyKind::NativeV1, version, ctx)
+            }
+            Message::ScoreRequestV2 { rows } => {
+                self.submit_score(rows, ReplyKind::NativeV2, version, ctx)
+            }
+            Message::ModelInfoRequest => {
+                let (m, epoch) = ctx.slot.snapshot();
+                self.push_ready(
+                    frame_bytes(&Message::ModelInfo {
+                        version: m.content_id(),
+                        r2: m.r2(),
+                        num_sv: m.num_sv() as u32,
+                        dim: m.dim() as u32,
+                        epoch,
+                    }),
+                    false,
+                );
+                Ok(())
+            }
+            Message::SwapModel { model_json } => {
+                let reply = if !ctx.remote_swap.load(Ordering::Relaxed) {
+                    Message::SwapAck {
+                        epoch: ctx.slot.epoch(),
+                        swapped: false,
+                        r2: ctx.slot.current().r2(),
+                        reason: "remote model swap is disabled on this server".into(),
+                    }
+                } else {
+                    let outcome = Json::parse(&model_json)
+                        .and_then(|j| SvddModel::from_json(&j))
+                        .and_then(|m| ctx.slot.swap(m));
+                    match outcome {
+                        Ok(epoch) => {
+                            ctx.metrics.model_swaps.inc();
+                            Message::SwapAck {
+                                epoch,
+                                swapped: true,
+                                r2: ctx.slot.current().r2(),
+                                reason: String::new(),
+                            }
+                        }
+                        Err(e) => Message::SwapAck {
+                            epoch: ctx.slot.epoch(),
+                            swapped: false,
+                            r2: ctx.slot.current().r2(),
+                            reason: e.to_string(),
+                        },
+                    }
+                };
+                self.push_ready(frame_bytes(&reply), false);
+                Ok(())
+            }
+            Message::StatsRequest => {
+                self.push_ready(
+                    frame_bytes(&Message::StatsReply {
+                        text: ctx.metrics.render_prometheus(),
+                        counters: ctx.metrics.snapshot(),
+                    }),
+                    false,
+                );
+                Ok(())
+            }
+            Message::Shutdown => {
+                self.closing = true;
+                Ok(())
+            }
+            _ => Err(()),
+        }
+    }
+
+    /// Hand a native score request to the batcher, or shed it.
+    fn submit_score(
+        &mut self,
+        rows: Matrix,
+        kind: ReplyKind,
+        version: u32,
+        ctx: &mut Ctx,
+    ) -> std::result::Result<(), ()> {
+        if rows.cols() != ctx.handle.dim() {
+            return Err(()); // protocol error: drop (threaded-server parity)
+        }
+        let n = rows.rows();
+        if *ctx.inflight_rows + n > ctx.cfg.max_inflight_rows {
+            ctx.metrics.shed_requests.inc();
+            return self.shed_native(version, "serving edge at max in-flight rows");
+        }
+        match ctx
+            .handle
+            .submit(rows.as_slice().to_vec(), n, self.id, ctx.done_tx.clone())
+        {
+            Ok(()) => {
+                *ctx.inflight_rows += n;
+                self.pending.push_back(Pending::Awaiting { kind, close_after: false });
+                Ok(())
+            }
+            // the batcher queue already counted the shed
+            Err(Error::Overloaded(reason)) => self.shed_native(version, &reason),
+            Err(_) => Err(()),
+        }
+    }
+
+    /// Shed with an explicit overload reply where the protocol allows:
+    /// v3 sessions get the `Overloaded` frame; older sessions cannot
+    /// decode it, so their connection is closed instead.
+    fn shed_native(&mut self, version: u32, reason: &str) -> std::result::Result<(), ()> {
+        if version >= 3 {
+            self.push_ready(
+                frame_bytes(&Message::Overloaded { reason: reason.to_string() }),
+                false,
+            );
+            Ok(())
+        } else {
+            Err(())
+        }
+    }
+
+    // --------------------------------------------------- http protocol
+
+    fn handle_http(&mut self, req: HttpRequest, ctx: &mut Ctx) {
+        ctx.metrics.edge_http_requests.inc();
+        let mut span = crate::obs::Span::enter("server.request");
+        if span.is_live() {
+            span.str("kind", "http");
+            span.str("path", req.path.clone());
+        }
+        let keep = req.keep_alive;
+        let HttpRequest { method, path, body, .. } = req;
+        match (method.as_str(), path.as_str()) {
+            ("GET", "/metrics") => self.push_http(
+                http::response(
+                    "200 OK",
+                    "text/plain; version=0.0.4; charset=utf-8",
+                    &ctx.metrics.render_prometheus(),
+                    keep,
+                ),
+                keep,
+            ),
+            ("GET", "/model") => {
+                let (m, epoch) = ctx.slot.snapshot();
+                let body = json::obj(vec![
+                    ("model", json::s(m.content_id())),
+                    ("r2", json::num(m.r2())),
+                    ("num_sv", json::num(m.num_sv() as f64)),
+                    ("dim", json::num(m.dim() as f64)),
+                    ("epoch", json::num(epoch as f64)),
+                ])
+                .to_string();
+                self.push_http(http::response("200 OK", "application/json", &body, keep), keep)
+            }
+            ("POST", "/score") if ctx.cfg.http_ingress => self.submit_http_score(body, keep, ctx),
+            ("POST", "/score") => self.push_http(
+                http::json_error(
+                    "404 Not Found",
+                    "http_scoring_disabled",
+                    "start the server with --http to enable the JSON scoring ingress",
+                    keep,
+                ),
+                keep,
+            ),
+            ("GET", _) | ("HEAD", _) => self.push_http(
+                http::json_error("404 Not Found", "not_found", "unknown path", keep),
+                keep,
+            ),
+            _ => self.push_http(
+                http::json_error(
+                    "405 Method Not Allowed",
+                    "method_not_allowed",
+                    "supported: GET /metrics, GET /model, POST /score",
+                    keep,
+                ),
+                keep,
+            ),
+        }
+    }
+
+    fn push_http(&mut self, bytes: Vec<u8>, keep_alive: bool) {
+        self.push_ready(bytes, !keep_alive);
+    }
+
+    /// Hand an HTTP score request to the batcher, or shed it with 503.
+    fn submit_http_score(&mut self, body: Vec<u8>, keep: bool, ctx: &mut Ctx) {
+        let rows = match http::parse_score_body(&body, ctx.handle.dim()) {
+            Ok(m) => m,
+            Err(detail) => {
+                return self.push_http(
+                    http::json_error("400 Bad Request", "bad_request", &detail, keep),
+                    keep,
+                );
+            }
+        };
+        let n = rows.rows();
+        if *ctx.inflight_rows + n > ctx.cfg.max_inflight_rows {
+            ctx.metrics.shed_requests.inc();
+            return self.push_http(
+                http::json_error(
+                    "503 Service Unavailable",
+                    "overloaded",
+                    "serving edge at max in-flight rows; retry later",
+                    keep,
+                ),
+                keep,
+            );
+        }
+        match ctx
+            .handle
+            .submit(rows.as_slice().to_vec(), n, self.id, ctx.done_tx.clone())
+        {
+            Ok(()) => {
+                *ctx.inflight_rows += n;
+                self.pending.push_back(Pending::Awaiting {
+                    kind: ReplyKind::HttpScore,
+                    close_after: !keep,
+                });
+                if !keep {
+                    self.closing = true; // no further requests after this one
+                }
+            }
+            Err(Error::Overloaded(reason)) => self.push_http(
+                http::json_error("503 Service Unavailable", "overloaded", &reason, keep),
+                keep,
+            ),
+            Err(e) => self.push_http(
+                http::json_error("400 Bad Request", "bad_request", &e.to_string(), keep),
+                keep,
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{banana::Banana, Generator};
+    use crate::scoring::batcher::{BatchPolicy, Batcher};
+    use crate::svdd::{train, SvddParams};
+
+    #[test]
+    fn frame_bytes_matches_write_to() {
+        let msg = Message::ScoreReplyV2 {
+            dist2: vec![1.0, 2.5],
+            r2: 0.5,
+            epoch: 7,
+            model_id: "v-1234".into(),
+        };
+        let mut via_write = Vec::new();
+        msg.write_to(&mut via_write).unwrap();
+        assert_eq!(frame_bytes(&msg), via_write);
+    }
+
+    #[test]
+    fn take_frame_handles_fragments_and_rejects_oversized() {
+        let msg = Message::Hello { version: 3 };
+        let wire = frame_bytes(&msg);
+        // fragment: nothing until the full frame is buffered
+        let mut buf = wire[..3].to_vec();
+        assert!(matches!(take_frame(&mut buf), Ok(None)));
+        buf.extend_from_slice(&wire[3..wire.len() - 1]);
+        assert!(matches!(take_frame(&mut buf), Ok(None)));
+        buf.push(wire[wire.len() - 1]);
+        assert_eq!(take_frame(&mut buf), Ok(Some(msg)));
+        assert!(buf.is_empty(), "frame bytes must be consumed");
+        // an oversized length prefix is fatal
+        let mut huge = ((MAX_FRAME + 1) as u32).to_le_bytes().to_vec();
+        huge.extend_from_slice(&[0u8; 8]);
+        assert!(take_frame(&mut huge).is_err());
+    }
+
+    /// Spin up a bare edge loop (no ScoreServer wrapper) around a
+    /// native batcher.
+    struct TestEdge {
+        addr: std::net::SocketAddr,
+        stop: Arc<AtomicBool>,
+        thread: Option<std::thread::JoinHandle<()>>,
+        _batcher: Batcher,
+        metrics: Arc<Metrics>,
+        slot: ModelSlot,
+    }
+
+    impl TestEdge {
+        fn spawn(model: SvddModel, policy: BatchPolicy, cfg: EdgeConfig) -> TestEdge {
+            let metrics = Arc::new(Metrics::new());
+            let slot = ModelSlot::new(model);
+            let (batcher, handle) =
+                Batcher::spawn(&slot, policy, metrics.clone(), |m, zs| Ok(m.dist2_batch(zs)));
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            let addr = listener.local_addr().unwrap();
+            listener.set_nonblocking(true).unwrap();
+            let stop = Arc::new(AtomicBool::new(false));
+            let remote_swap = Arc::new(AtomicBool::new(true));
+            let thread = {
+                let stop = stop.clone();
+                let slot = slot.clone();
+                let metrics = metrics.clone();
+                std::thread::spawn(move || {
+                    run_edge_loop(listener, stop, handle, slot, metrics, remote_swap, cfg)
+                })
+            };
+            TestEdge { addr, stop, thread: Some(thread), _batcher: batcher, metrics, slot }
+        }
+    }
+
+    impl Drop for TestEdge {
+        fn drop(&mut self) {
+            self.stop.store(true, Ordering::Relaxed);
+            if let Some(t) = self.thread.take() {
+                t.join().ok();
+            }
+        }
+    }
+
+    fn model() -> SvddModel {
+        let data = Banana::default().generate(500, 1);
+        train(&data, &SvddParams::gaussian(0.35, 0.01)).unwrap()
+    }
+
+    fn http_exchange(addr: std::net::SocketAddr, request: &[u8]) -> String {
+        use std::io::{Read, Write};
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(request).unwrap();
+        s.shutdown(std::net::Shutdown::Write).unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn edge_serves_native_and_http_on_one_port() {
+        let m = model();
+        let edge = TestEdge::spawn(m.clone(), BatchPolicy::default(), EdgeConfig::default());
+
+        // native framed client (raw, v3 handshake)
+        let mut s = TcpStream::connect(edge.addr).unwrap();
+        Message::Hello { version: 3 }.write_to(&mut s).unwrap();
+        match Message::read_from(&mut s).unwrap() {
+            Message::HelloAck { version } => assert_eq!(version, 3),
+            other => panic!("unexpected {other:?}"),
+        }
+        let zs = Banana::default().generate(6, 2);
+        Message::ScoreRequestV2 { rows: zs.clone() }.write_to(&mut s).unwrap();
+        match Message::read_from(&mut s).unwrap() {
+            Message::ScoreReplyV2 { dist2, r2, epoch, model_id } => {
+                assert_eq!(dist2, m.dist2_batch(&zs));
+                assert_eq!(r2, m.r2());
+                assert_eq!(epoch, 0);
+                assert_eq!(model_id, m.content_id());
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        Message::Shutdown.write_to(&mut s).ok();
+
+        // HTTP JSON client on the same port
+        let resp = http_exchange(
+            edge.addr,
+            b"POST /score HTTP/1.1\r\nContent-Length: 27\r\n\r\n{\"rows\": [[0.25, -1.5000]]}",
+        );
+        assert!(resp.starts_with("HTTP/1.1 200 OK\r\n"), "{resp}");
+        let body = resp.split("\r\n\r\n").nth(1).unwrap();
+        let parsed = Json::parse(body).unwrap();
+        let want = m.dist2(&[0.25, -1.5]);
+        let got = parsed.get("dist2").unwrap().as_arr().unwrap()[0].as_f64().unwrap();
+        assert_eq!(got, want, "HTTP score must be bit-identical to the model");
+        assert_eq!(parsed.get("model").unwrap().as_str().unwrap(), m.content_id());
+
+        // metrics scrape still works, and counted the edge traffic
+        let resp = http_exchange(edge.addr, b"GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(resp.contains("fastsvdd_rows_scored_total 7"), "{resp}");
+        assert!(edge.metrics.edge_http_requests.get() >= 2);
+        assert_eq!(edge.metrics.edge_conns_rejected.get(), 0);
+    }
+
+    #[test]
+    fn http_errors_are_structured() {
+        let m = model();
+        let edge = TestEdge::spawn(m, BatchPolicy::default(), EdgeConfig::default());
+        // bad JSON body → 400 with a JSON error object
+        let resp = http_exchange(
+            edge.addr,
+            b"POST /score HTTP/1.1\r\nContent-Length: 8\r\n\r\nnot json",
+        );
+        assert!(resp.starts_with("HTTP/1.1 400"), "{resp}");
+        assert!(resp.contains("\"error\":\"bad_request\""), "{resp}");
+        // wrong row width → 400 naming the model dimension
+        let resp = http_exchange(
+            edge.addr,
+            b"POST /score HTTP/1.1\r\nContent-Length: 21\r\n\r\n{\"rows\": [[1, 2, 3]]}",
+        );
+        assert!(resp.starts_with("HTTP/1.1 400"), "{resp}");
+        assert!(resp.contains("model expects 2"), "{resp}");
+        // unknown path → 404
+        let resp = http_exchange(edge.addr, b"GET /nope HTTP/1.1\r\n\r\n");
+        assert!(resp.starts_with("HTTP/1.1 404"), "{resp}");
+        assert!(resp.contains("\"error\":\"not_found\""));
+        // oversized declared body → 413
+        let req = format!(
+            "POST /score HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+            http::MAX_BODY + 1
+        );
+        let resp = http_exchange(edge.addr, req.as_bytes());
+        assert!(resp.starts_with("HTTP/1.1 413"), "{resp}");
+    }
+
+    #[test]
+    fn inflight_cap_sheds_with_503_and_overloaded_frame() {
+        let m = model();
+        // max_inflight_rows = 2: the second concurrent request (1 row
+        // queued + 3 new) must be shed
+        let policy = BatchPolicy {
+            target_batch: 1 << 20,
+            linger: Duration::from_millis(150), // hold the first rows in flight
+            capacity: 1 << 16,
+            adaptive: false,
+        };
+        let cfg = EdgeConfig { max_inflight_rows: 2, ..EdgeConfig::default() };
+        let edge = TestEdge::spawn(m.clone(), policy, cfg);
+
+        // park one row in the batcher window via a native v3 client
+        let mut s = TcpStream::connect(edge.addr).unwrap();
+        Message::Hello { version: 3 }.write_to(&mut s).unwrap();
+        Message::read_from(&mut s).unwrap();
+        let one = Banana::default().generate(1, 3);
+        Message::ScoreRequestV2 { rows: one.clone() }.write_to(&mut s).unwrap();
+        std::thread::sleep(Duration::from_millis(30));
+
+        // HTTP request for 3 rows: 1 + 3 > 2 → 503
+        let resp = http_exchange(
+            edge.addr,
+            b"POST /score HTTP/1.1\r\nContent-Length: 46\r\n\r\n{\"rows\": [[0, 0], [1.0, 1.0], [2.25, -0.125]]}",
+        );
+        assert!(resp.starts_with("HTTP/1.1 503"), "{resp}");
+        assert!(resp.contains("\"error\":\"overloaded\""), "{resp}");
+
+        // native v3 request over the cap: explicit Overloaded frame,
+        // connection survives
+        Message::ScoreRequestV2 { rows: Banana::default().generate(4, 5) }
+            .write_to(&mut s)
+            .unwrap();
+        // first the original (parked) request's reply arrives, then the
+        // overload notice for the second
+        match Message::read_from(&mut s).unwrap() {
+            Message::ScoreReplyV2 { dist2, .. } => assert_eq!(dist2, m.dist2_batch(&one)),
+            other => panic!("unexpected {other:?}"),
+        }
+        match Message::read_from(&mut s).unwrap() {
+            Message::Overloaded { reason } => assert!(reason.contains("in-flight")),
+            other => panic!("unexpected {other:?}"),
+        }
+        assert!(edge.metrics.shed_requests.get() >= 2);
+        // the shed cleared with the batch: scoring works again
+        Message::ScoreRequestV2 { rows: one.clone() }.write_to(&mut s).unwrap();
+        match Message::read_from(&mut s).unwrap() {
+            Message::ScoreReplyV2 { dist2, .. } => assert_eq!(dist2, m.dist2_batch(&one)),
+            other => panic!("unexpected {other:?}"),
+        }
+        Message::Shutdown.write_to(&mut s).ok();
+    }
+
+    #[test]
+    fn conn_cap_rejects_excess_connections_without_stalling() {
+        let m = model();
+        let cfg = EdgeConfig { max_conns: 2, ..EdgeConfig::default() };
+        let edge = TestEdge::spawn(m.clone(), BatchPolicy::default(), cfg);
+
+        // two connections fill the cap
+        let mut keep: Vec<TcpStream> = Vec::new();
+        for _ in 0..2 {
+            let mut s = TcpStream::connect(edge.addr).unwrap();
+            Message::Hello { version: 3 }.write_to(&mut s).unwrap();
+            Message::read_from(&mut s).unwrap();
+            keep.push(s);
+        }
+        // the third is rejected with a best-effort 503 and closed
+        {
+            use std::io::Read;
+            let mut s = TcpStream::connect(edge.addr).unwrap();
+            let mut out = String::new();
+            s.read_to_string(&mut out).unwrap();
+            assert!(out.starts_with("HTTP/1.1 503"), "{out}");
+        }
+        assert_eq!(edge.metrics.edge_conns_rejected.get(), 1);
+        // existing connections still score
+        let zs = Banana::default().generate(2, 9);
+        let s = &mut keep[0];
+        Message::ScoreRequestV2 { rows: zs.clone() }.write_to(s).unwrap();
+        match Message::read_from(s).unwrap() {
+            Message::ScoreReplyV2 { dist2, .. } => assert_eq!(dist2, m.dist2_batch(&zs)),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn legacy_v2_session_is_closed_on_shed_not_answered() {
+        let m = model();
+        let policy = BatchPolicy {
+            target_batch: 1 << 20,
+            linger: Duration::from_millis(150),
+            capacity: 1 << 16,
+            adaptive: false,
+        };
+        let cfg = EdgeConfig { max_inflight_rows: 1, ..EdgeConfig::default() };
+        let edge = TestEdge::spawn(m, policy, cfg);
+
+        // park a row from one v2 client
+        let mut a = TcpStream::connect(edge.addr).unwrap();
+        Message::Hello { version: 2 }.write_to(&mut a).unwrap();
+        Message::read_from(&mut a).unwrap();
+        Message::ScoreRequest { rows: Banana::default().generate(1, 4) }
+            .write_to(&mut a)
+            .unwrap();
+        std::thread::sleep(Duration::from_millis(30));
+
+        // a second v2 client over the cap: no Overloaded frame exists
+        // in its vocabulary → connection is dropped
+        let mut b = TcpStream::connect(edge.addr).unwrap();
+        Message::Hello { version: 2 }.write_to(&mut b).unwrap();
+        Message::read_from(&mut b).unwrap();
+        Message::ScoreRequest { rows: Banana::default().generate(1, 5) }
+            .write_to(&mut b)
+            .unwrap();
+        assert!(
+            Message::read_from(&mut b).is_err(),
+            "legacy session must be closed on shed"
+        );
+        // the parked client still gets its reply
+        assert!(matches!(
+            Message::read_from(&mut a).unwrap(),
+            Message::ScoreReply { .. }
+        ));
+    }
+}

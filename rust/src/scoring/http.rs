@@ -1,0 +1,318 @@
+//! Minimal HTTP/1.1 support for the serving edge.
+//!
+//! The edge ([`super::edge`]) shares one listener between native frames
+//! and HTTP; this module is the HTTP half: an **incremental** request
+//! parser that works on a growing receive buffer (the edge is
+//! non-blocking, so a request may arrive in arbitrary fragments), plus
+//! response builders for the three routes the edge serves:
+//!
+//! - `GET /metrics` — Prometheus exposition (as in the threaded server);
+//! - `GET /model`   — active model identity as JSON;
+//! - `POST /score`  — JSON scoring ingress: `{"rows": [[f64, ...], ...]}`
+//!   in, `{"dist2": [...], "r2": .., "epoch": .., "model": ".."}` out.
+//!
+//! Errors are structured JSON bodies (`{"error": code, "detail": ..}`)
+//! with the status the ISSUE contract names: 400 for malformed
+//! requests/bodies, 413 for oversized heads/bodies, 503 when the
+//! batcher sheds under load.
+//!
+//! Deliberately small: no chunked transfer encoding (rejected with
+//! 400), no compression, no TLS. `Content-Length` bodies only — every
+//! mainstream HTTP client sends exactly that for small JSON POSTs.
+
+use crate::scoring::ScoreReply;
+use crate::util::json::{self, Json};
+use crate::util::matrix::Matrix;
+
+/// Cap on the request head (request line + headers).
+pub const MAX_HEAD: usize = 16 * 1024;
+/// Cap on a request body. 8 MiB of JSON is ~100k 2-d rows — far beyond
+/// a sane single scoring call; bigger clients should batch requests.
+pub const MAX_BODY: usize = 8 * 1024 * 1024;
+
+/// One parsed HTTP request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    pub body: Vec<u8>,
+    /// Whether the connection should stay open after the response
+    /// (HTTP/1.1 default yes, HTTP/1.0 default no, `Connection`
+    /// header overrides either way).
+    pub keep_alive: bool,
+}
+
+/// Outcome of trying to parse one request off the front of a buffer.
+#[derive(Debug)]
+pub enum HttpParse {
+    /// Not enough bytes yet — read more and retry.
+    Incomplete,
+    /// One full request; the first `consumed` buffer bytes are its.
+    Ready { req: HttpRequest, consumed: usize },
+    /// Unrecoverable syntax problem — answer 400 and close.
+    Bad(&'static str),
+    /// Head or declared body over the caps — answer 413 and close.
+    TooLarge,
+}
+
+/// Incrementally parse one request from the front of `buf`.
+pub fn parse_request(buf: &[u8]) -> HttpParse {
+    let head_end = match find_head_end(buf) {
+        Some(i) => i,
+        None => {
+            return if buf.len() >= MAX_HEAD {
+                HttpParse::TooLarge
+            } else {
+                HttpParse::Incomplete
+            };
+        }
+    };
+    if head_end > MAX_HEAD {
+        return HttpParse::TooLarge;
+    }
+    let head = match std::str::from_utf8(&buf[..head_end]) {
+        Ok(h) => h,
+        Err(_) => return HttpParse::Bad("non-UTF-8 request head"),
+    };
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split(' ');
+    let (method, path, version) = match (parts.next(), parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(p), Some(v), None) if !m.is_empty() && p.starts_with('/') => (m, p, v),
+        _ => return HttpParse::Bad("malformed request line"),
+    };
+    let http11 = match version {
+        "HTTP/1.1" => true,
+        "HTTP/1.0" => false,
+        _ => return HttpParse::Bad("unsupported HTTP version"),
+    };
+    let mut content_length = 0usize;
+    let mut keep_alive = http11;
+    for line in lines {
+        let Some((name, value)) = line.split_once(':') else { continue };
+        let value = value.trim();
+        if name.eq_ignore_ascii_case("content-length") {
+            content_length = match value.parse() {
+                Ok(n) => n,
+                Err(_) => return HttpParse::Bad("bad Content-Length"),
+            };
+        } else if name.eq_ignore_ascii_case("transfer-encoding") {
+            return HttpParse::Bad("chunked transfer encoding unsupported");
+        } else if name.eq_ignore_ascii_case("connection") {
+            if value.eq_ignore_ascii_case("close") {
+                keep_alive = false;
+            } else if value.eq_ignore_ascii_case("keep-alive") {
+                keep_alive = true;
+            }
+        }
+    }
+    if content_length > MAX_BODY {
+        return HttpParse::TooLarge;
+    }
+    let body_start = head_end + 4;
+    if buf.len() < body_start + content_length {
+        return HttpParse::Incomplete;
+    }
+    HttpParse::Ready {
+        req: HttpRequest {
+            method: method.to_string(),
+            path: path.to_string(),
+            body: buf[body_start..body_start + content_length].to_vec(),
+            keep_alive,
+        },
+        consumed: body_start + content_length,
+    }
+}
+
+/// Index of the `\r\n\r\n` head terminator, if present.
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+/// Serialize a complete response.
+pub fn response(status: &str, content_type: &str, body: &str, keep_alive: bool) -> Vec<u8> {
+    format!(
+        "HTTP/1.1 {status}\r\n\
+         Content-Type: {content_type}\r\n\
+         Content-Length: {}\r\n\
+         Connection: {}\r\n\r\n{body}",
+        body.len(),
+        if keep_alive { "keep-alive" } else { "close" },
+    )
+    .into_bytes()
+}
+
+/// A structured JSON error response: `{"error": code, "detail": ..}`.
+pub fn json_error(status: &str, code: &str, detail: &str, keep_alive: bool) -> Vec<u8> {
+    let body = json::obj(vec![("error", json::s(code)), ("detail", json::s(detail))]);
+    response(status, "application/json", &body.to_string(), keep_alive)
+}
+
+/// Decode a `POST /score` body — `{"rows": [[f64, ...], ...]}` with
+/// `dim`-wide rows — into a matrix. The error string is the `detail`
+/// of the resulting 400.
+pub fn parse_score_body(body: &[u8], dim: usize) -> std::result::Result<Matrix, String> {
+    let text = std::str::from_utf8(body).map_err(|_| "body is not UTF-8".to_string())?;
+    let parsed = Json::parse(text).map_err(|e| e.to_string())?;
+    let rows = parsed
+        .get("rows")
+        .and_then(|r| r.as_arr())
+        .ok_or_else(|| "expected object with a \"rows\" array".to_string())?;
+    if rows.is_empty() {
+        return Err("\"rows\" is empty".to_string());
+    }
+    let mut flat = Vec::with_capacity(rows.len() * dim);
+    for (i, row) in rows.iter().enumerate() {
+        let vals = row
+            .as_arr()
+            .ok_or_else(|| format!("row {i} is not an array"))?;
+        if vals.len() != dim {
+            return Err(format!(
+                "row {i} has {} values, model expects {dim}",
+                vals.len()
+            ));
+        }
+        for v in vals {
+            flat.push(v.as_f64().ok_or_else(|| format!("row {i} has a non-number"))?);
+        }
+    }
+    let n = rows.len();
+    Matrix::from_vec(flat, n, dim).map_err(|e| e.to_string())
+}
+
+/// Encode a [`ScoreReply`] as the `POST /score` response body.
+pub fn score_reply_json(reply: &ScoreReply) -> String {
+    json::obj(vec![
+        ("dist2", json::arr(reply.dist2.iter().map(|&d| json::num(d)).collect())),
+        ("r2", json::num(reply.r2)),
+        ("epoch", json::num(reply.epoch as f64)),
+        ("model", json::s(reply.model_id.clone())),
+    ])
+    .to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ready(buf: &[u8]) -> (HttpRequest, usize) {
+        match parse_request(buf) {
+            HttpParse::Ready { req, consumed } => (req, consumed),
+            other => panic!("expected Ready, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parses_get_and_defaults_keep_alive_by_version() {
+        let (req, used) = ready(b"GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/metrics");
+        assert!(req.body.is_empty());
+        assert!(req.keep_alive);
+        assert_eq!(used, b"GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n".len());
+
+        let (req, _) = ready(b"GET /metrics HTTP/1.0\r\n\r\n");
+        assert!(!req.keep_alive);
+        let (req, _) = ready(b"GET /m HTTP/1.1\r\nConnection: close\r\n\r\n");
+        assert!(!req.keep_alive);
+        let (req, _) = ready(b"GET /m HTTP/1.0\r\nConnection: Keep-Alive\r\n\r\n");
+        assert!(req.keep_alive);
+    }
+
+    #[test]
+    fn parses_post_body_and_reports_consumed_for_pipelining() {
+        let raw = b"POST /score HTTP/1.1\r\nContent-Length: 5\r\n\r\nhelloGET /x";
+        let (req, used) = ready(raw);
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.body, b"hello");
+        // the next pipelined request's bytes are not consumed
+        assert_eq!(&raw[used..], b"GET /x");
+    }
+
+    #[test]
+    fn incomplete_until_head_then_body_arrive() {
+        assert!(matches!(parse_request(b"POST /sco"), HttpParse::Incomplete));
+        assert!(matches!(
+            parse_request(b"POST /score HTTP/1.1\r\nContent-Length: 5\r\n\r\nhel"),
+            HttpParse::Incomplete
+        ));
+    }
+
+    #[test]
+    fn rejects_malformed_and_oversized() {
+        assert!(matches!(parse_request(b"NONSENSE\r\n\r\n"), HttpParse::Bad(_)));
+        assert!(matches!(
+            parse_request(b"GET /x HTTP/2\r\n\r\n"),
+            HttpParse::Bad(_)
+        ));
+        assert!(matches!(
+            parse_request(b"GET /x HTTP/1.1 extra\r\n\r\n"),
+            HttpParse::Bad(_)
+        ));
+        assert!(matches!(
+            parse_request(b"POST /s HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n"),
+            HttpParse::Bad(_)
+        ));
+        // declared body over the cap
+        let huge = format!("POST /s HTTP/1.1\r\nContent-Length: {}\r\n\r\n", MAX_BODY + 1);
+        assert!(matches!(parse_request(huge.as_bytes()), HttpParse::TooLarge));
+        // head that never terminates
+        let run_on = vec![b'a'; MAX_HEAD];
+        assert!(matches!(parse_request(&run_on), HttpParse::TooLarge));
+    }
+
+    #[test]
+    fn response_builder_frames_body_exactly() {
+        let bytes = response("200 OK", "application/json", "{\"x\":1}", true);
+        let text = String::from_utf8(bytes).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(text.contains("Content-Length: 7\r\n"));
+        assert!(text.contains("Connection: keep-alive\r\n"));
+        assert!(text.ends_with("\r\n\r\n{\"x\":1}"));
+        let closed = String::from_utf8(json_error("400 Bad Request", "bad_request", "no", false))
+            .unwrap();
+        assert!(closed.contains("Connection: close\r\n"));
+        assert!(closed.contains("\"error\":\"bad_request\""));
+        assert!(closed.contains("\"detail\":\"no\""));
+    }
+
+    #[test]
+    fn score_body_roundtrip_and_errors() {
+        let m = parse_score_body(br#"{"rows": [[1.0, 2.0], [3.5, -4.0]]}"#, 2).unwrap();
+        assert_eq!(m.rows(), 2);
+        assert_eq!(m.cols(), 2);
+        assert_eq!(m.row(1), &[3.5, -4.0]);
+
+        assert!(parse_score_body(b"not json", 2).is_err());
+        assert!(parse_score_body(br#"{"cols": []}"#, 2).is_err());
+        assert!(parse_score_body(br#"{"rows": []}"#, 2).is_err());
+        assert!(parse_score_body(br#"{"rows": [[1.0]]}"#, 2)
+            .unwrap_err()
+            .contains("model expects 2"));
+        assert!(parse_score_body(br#"{"rows": [[1.0, "x"]]}"#, 2).is_err());
+    }
+
+    #[test]
+    fn score_reply_json_shape() {
+        let reply = ScoreReply {
+            dist2: vec![0.5, 1.25],
+            r2: 0.75,
+            epoch: 3,
+            model_id: "v-00ff".into(),
+        };
+        let text = score_reply_json(&reply);
+        let back = Json::parse(&text).unwrap();
+        let dist2: Vec<f64> = back
+            .get("dist2")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap())
+            .collect();
+        assert_eq!(dist2, vec![0.5, 1.25]);
+        assert_eq!(back.get("r2").unwrap().as_f64().unwrap(), 0.75);
+        assert_eq!(back.get("epoch").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(back.get("model").unwrap().as_str().unwrap(), "v-00ff");
+    }
+}

@@ -11,16 +11,20 @@
 //!
 //! Integration tests cross-check the two engines on every bucket.
 //!
-//! The serve path ([`batcher`], [`server`]) runs over a hot-swappable
-//! [`ModelSlot`], so the model-lifecycle layer ([`crate::registry`])
-//! can promote a freshly retrained model into a live server with zero
-//! dropped connections.
+//! The serve path ([`batcher`], [`server`], the [`edge`] multiplexer
+//! and its [`http`] ingress) runs over a hot-swappable [`ModelSlot`],
+//! so the model-lifecycle layer ([`crate::registry`]) can promote a
+//! freshly retrained model into a live server with zero dropped
+//! connections.
 
 pub mod batcher;
+pub mod edge;
 pub mod f1;
+pub mod http;
 pub mod server;
 
 pub use batcher::{BatchPolicy, Batcher, BatcherHandle, ModelSlot};
+pub use edge::EdgeConfig;
 pub use server::{RemoteModelInfo, ScoreClient, ScoreServer};
 pub use f1::{confusion, F1Score};
 
@@ -28,6 +32,59 @@ use crate::error::Result;
 use crate::runtime::SharedRuntime;
 use crate::svdd::model::SvddModel;
 use crate::util::matrix::Matrix;
+
+/// Uniform reply from every scoring entry point: the distances, the
+/// threshold they compare against, and exactly which model produced
+/// them — so a caller can correlate replies across hot-swaps.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScoreReply {
+    /// `dist2(z)` per input row (paper eq. (18)).
+    pub dist2: Vec<f64>,
+    /// Decision threshold R^2 of the model that scored this batch.
+    pub r2: f64,
+    /// Hot-swap epoch of that model (0 = spawn-time model; in-process
+    /// scorers with no [`ModelSlot`] always report 0).
+    pub epoch: u64,
+    /// Content id of that model ([`SvddModel::content_id`]).
+    pub model_id: String,
+}
+
+impl ScoreReply {
+    /// Outlier labels for this reply (`dist2 > R^2`), guaranteed to use
+    /// the same model's threshold that produced the distances.
+    pub fn labels(&self) -> Vec<bool> {
+        self.dist2.iter().map(|&d| d > self.r2).collect()
+    }
+}
+
+/// One scoring API over all three entry points — the in-process engine
+/// ([`Scorer`]), the dynamic batcher ([`BatcherHandle`]) and the remote
+/// client ([`ScoreClient`]) — the serving mirror of the training-side
+/// `Trainer` trait. Callers generic over `S: ScoreService` can move
+/// between local, batched and remote scoring without code changes.
+///
+/// `BatcherHandle` and `ScoreClient` also keep inherent `score` methods
+/// with their historical signatures; those shadow the trait method on a
+/// concrete receiver, so reach the trait through a generic bound or
+/// `ScoreService::score(&svc, zs)`.
+pub trait ScoreService {
+    /// Score every row of `zs`, reporting which model did it.
+    fn score(&self, zs: &Matrix) -> Result<ScoreReply>;
+}
+
+impl ScoreService for Scorer<'_> {
+    /// In-process scoring. `epoch` is always 0 (no slot to swap);
+    /// `model_id` is recomputed per call — prefer
+    /// [`Scorer::dist2_batch`] on hot paths that don't need provenance.
+    fn score(&self, zs: &Matrix) -> Result<ScoreReply> {
+        Ok(ScoreReply {
+            dist2: self.dist2_batch(zs)?,
+            r2: self.model.r2(),
+            epoch: 0,
+            model_id: self.model.content_id(),
+        })
+    }
+}
 
 /// Scoring engine over a fitted model.
 pub struct Scorer<'a> {
@@ -162,5 +219,19 @@ mod tests {
         for (o, i) in out.iter().zip(&ins) {
             assert_ne!(o, i);
         }
+    }
+
+    #[test]
+    fn score_service_over_scorer_reports_provenance() {
+        let data = Banana::default().generate(300, 5);
+        let model = train(&data, &SvddParams::gaussian(0.35, 0.01)).unwrap();
+        let scorer = Scorer::native(&model);
+        let zs = Banana::default().generate(32, 6);
+        let reply = ScoreService::score(&scorer, &zs).unwrap();
+        assert_eq!(reply.dist2, model.dist2_batch(&zs));
+        assert_eq!(reply.r2, model.r2());
+        assert_eq!(reply.epoch, 0);
+        assert_eq!(reply.model_id, model.content_id());
+        assert_eq!(reply.labels(), scorer.label_batch(&zs).unwrap());
     }
 }

@@ -1,11 +1,23 @@
 //! TCP scoring service: the serve-path daemon.
 //!
-//! `fastsvdd serve --model m.json --listen addr` runs a [`ScoreServer`]:
-//! one accept loop, one connection thread per client, all connections
-//! feeding a single [`super::batcher::Batcher`] so concurrent clients'
-//! rows coalesce into bucket-sized XLA (or native) scoring executions.
-//! Protocol: framed [`Message::ScoreRequest`] / [`Message::ScoreReply`]
-//! (shared with the distributed trainer; version-negotiated handshake).
+//! `fastsvdd serve --model m.json --listen addr` runs a [`ScoreServer`]
+//! built via [`ScoreServer::builder`], in one of two modes:
+//!
+//! - **edge** (default): the single-threaded readiness-loop multiplexer
+//!   of [`super::edge`] — thousands of connections on one thread, HTTP
+//!   JSON ingress, explicit overload shedding;
+//! - **threaded** ([`ScoreServerBuilder::edge`]`(false)`, and what the
+//!   legacy [`ScoreServer::spawn`] wrapper picks): one accept loop plus
+//!   one blocking connection thread per client — simpler, and the
+//!   baseline `benches/perf_serving.rs` compares the edge against.
+//!
+//! Either way all connections feed a single
+//! [`super::batcher::Batcher`], so concurrent clients' rows coalesce
+//! into bucket-sized XLA (or native) scoring executions. Protocol:
+//! framed [`Message::ScoreRequest`] / [`Message::ScoreReply`] (shared
+//! with the distributed trainer; version-negotiated handshake), plus
+//! the v3 [`Message::ScoreRequestV2`] round trip carrying full model
+//! provenance per reply.
 //!
 //! The active model lives in a [`ModelSlot`], so it can be hot-swapped
 //! with zero downtime: [`ScoreServer::swap_model`] (local, used by the
@@ -31,12 +43,14 @@
 
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use crate::distributed::message::{negotiate, Message, PROTOCOL_VERSION};
 use crate::error::{Error, Result};
 use crate::metrics::Metrics;
 use crate::scoring::batcher::{BatchPolicy, Batcher, BatcherHandle, ModelSlot};
+use crate::scoring::edge::{run_edge_loop, EdgeConfig};
+use crate::scoring::{ScoreReply, ScoreService};
 use crate::svdd::model::SvddModel;
 use crate::util::json::Json;
 use crate::util::matrix::Matrix;
@@ -49,14 +63,187 @@ pub struct ScoreServer {
     batcher: Batcher,
     slot: ModelSlot,
     remote_swap: Arc<AtomicBool>,
+    handle: BatcherHandle,
     pub metrics: Arc<Metrics>,
 }
 
-impl ScoreServer {
+/// Where a server's initial model comes from.
+enum ModelSource {
+    Model(SvddModel),
+    Slot(ModelSlot),
+}
+
+/// Configures and spawns a [`ScoreServer`] — the one construction
+/// surface for every serve-path knob (the old positional
+/// [`ScoreServer::spawn`] survives as a thin wrapper over this).
+pub struct ScoreServerBuilder<A: ToSocketAddrs> {
+    addr: A,
+    source: Option<ModelSource>,
+    policy: BatchPolicy,
+    edge: bool,
+    http_ingress: bool,
+    max_conns: usize,
+    max_inflight_rows: usize,
+    remote_swap_enabled: bool,
+}
+
+impl<A: ToSocketAddrs> ScoreServerBuilder<A> {
+    /// Serve this model (a fresh private [`ModelSlot`] is created).
+    pub fn model(mut self, model: SvddModel) -> Self {
+        self.source = Some(ModelSource::Model(model));
+        self
+    }
+
+    /// Serve an existing slot — share it with a
+    /// [`crate::registry::Lifecycle`] so drift-triggered retrains swap
+    /// straight into the serve path.
+    pub fn slot(mut self, slot: ModelSlot) -> Self {
+        self.source = Some(ModelSource::Slot(slot));
+        self
+    }
+
+    /// Micro-batching policy (window, target batch, queue capacity).
+    pub fn policy(mut self, policy: BatchPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// `true` (default): the single-threaded readiness-loop edge.
+    /// `false`: the legacy thread-per-connection accept loop.
+    pub fn edge(mut self, edge: bool) -> Self {
+        self.edge = edge;
+        self
+    }
+
+    /// Serve the `POST /score` HTTP/JSON ingress (edge mode only;
+    /// `GET /metrics` stays on regardless). Default on.
+    pub fn http(mut self, http: bool) -> Self {
+        self.http_ingress = http;
+        self
+    }
+
+    /// Connection cap (edge mode only). Default 1024.
+    pub fn max_conns(mut self, n: usize) -> Self {
+        self.max_conns = n;
+        self
+    }
+
+    /// Cap on rows in flight to the batcher (edge mode only).
+    /// Default 65536.
+    pub fn max_inflight(mut self, n: usize) -> Self {
+        self.max_inflight_rows = n;
+        self
+    }
+
+    /// Allow the remote v2 `SwapModel` frame (default `true`; see
+    /// [`ScoreServer::set_remote_swap_enabled`] for the security
+    /// trade-off — `fastsvdd serve` passes `false` unless
+    /// `--allow-remote-swap`).
+    pub fn remote_swap(mut self, enabled: bool) -> Self {
+        self.remote_swap_enabled = enabled;
+        self
+    }
+
     /// Bind and serve. `score_fn` is the batch engine: it receives the
     /// model snapshot the batch is pinned to plus the rows (wrap
     /// `Scorer::native` or `Scorer::xla` — the latter cannot be moved
     /// across threads directly, so wrap a `SharedRuntime` call).
+    pub fn spawn<F>(self, score_fn: F) -> Result<ScoreServer>
+    where
+        F: Fn(&SvddModel, &Matrix) -> Result<Vec<f64>> + Send + 'static,
+    {
+        let slot = match self.source {
+            Some(ModelSource::Model(m)) => ModelSlot::new(m),
+            Some(ModelSource::Slot(s)) => s,
+            None => {
+                return Err(Error::invalid(
+                    "ScoreServer::builder needs .model(..) or .slot(..)",
+                ));
+            }
+        };
+        let metrics = Arc::new(Metrics::new());
+        let (batcher, handle) = Batcher::spawn(&slot, self.policy, metrics.clone(), score_fn);
+        let listener = TcpListener::bind(&self.addr)?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let remote_swap = Arc::new(AtomicBool::new(self.remote_swap_enabled));
+        let accept_thread = if self.edge {
+            let cfg = EdgeConfig {
+                http_ingress: self.http_ingress,
+                max_conns: self.max_conns,
+                max_inflight_rows: self.max_inflight_rows,
+            };
+            let stop2 = stop.clone();
+            let h = handle.clone();
+            let sl = slot.clone();
+            let mx = metrics.clone();
+            let sw = remote_swap.clone();
+            std::thread::spawn(move || run_edge_loop(listener, stop2, h, sl, mx, sw, cfg))
+        } else {
+            let stop2 = stop.clone();
+            let accept_handle = handle.clone();
+            let accept_slot = slot.clone();
+            let accept_metrics = metrics.clone();
+            let accept_swap = remote_swap.clone();
+            std::thread::spawn(move || {
+                while !stop2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            stream.set_nonblocking(false).ok();
+                            let h = accept_handle.clone();
+                            let sl = accept_slot.clone();
+                            let mx = accept_metrics.clone();
+                            let sw = accept_swap.clone();
+                            std::thread::spawn(move || {
+                                let _ = serve_connection(stream, h, sl, mx, sw);
+                            });
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(5));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })
+        };
+        Ok(ScoreServer {
+            addr: local,
+            stop,
+            accept_thread: Some(accept_thread),
+            batcher,
+            slot,
+            remote_swap,
+            handle,
+            metrics,
+        })
+    }
+}
+
+impl ScoreServer {
+    /// Start configuring a server on `addr`. Defaults: edge mode, HTTP
+    /// ingress on, 1024 connections, 65536 in-flight rows, default
+    /// [`BatchPolicy`], remote swap allowed.
+    pub fn builder<A: ToSocketAddrs>(addr: A) -> ScoreServerBuilder<A> {
+        ScoreServerBuilder {
+            addr,
+            source: None,
+            policy: BatchPolicy::default(),
+            edge: true,
+            http_ingress: true,
+            max_conns: 1024,
+            max_inflight_rows: 1 << 16,
+            remote_swap_enabled: true,
+        }
+    }
+
+    /// Bind and serve in the legacy thread-per-connection mode.
+    ///
+    /// Deprecated spelling: prefer
+    /// `ScoreServer::builder(addr).model(model).policy(policy).spawn(score_fn)`,
+    /// which also unlocks the readiness-loop edge, the HTTP ingress and
+    /// the backpressure caps. Kept as a thin wrapper so existing
+    /// callers compile unchanged.
     pub fn spawn<F>(
         addr: impl ToSocketAddrs,
         model: SvddModel,
@@ -66,47 +253,11 @@ impl ScoreServer {
     where
         F: Fn(&SvddModel, &Matrix) -> Result<Vec<f64>> + Send + 'static,
     {
-        let metrics = Arc::new(Metrics::new());
-        let slot = ModelSlot::new(model);
-        let (batcher, handle) = Batcher::spawn(&slot, policy, metrics.clone(), score_fn);
-        let listener = TcpListener::bind(addr)?;
-        let local = listener.local_addr()?;
-        listener.set_nonblocking(true)?;
-        let stop = Arc::new(AtomicBool::new(false));
-        let stop2 = stop.clone();
-        let remote_swap = Arc::new(AtomicBool::new(true));
-        let accept_swap = remote_swap.clone();
-        let accept_slot = slot.clone();
-        let accept_metrics = metrics.clone();
-        let accept_thread = std::thread::spawn(move || {
-            while !stop2.load(Ordering::Relaxed) {
-                match listener.accept() {
-                    Ok((stream, _)) => {
-                        stream.set_nonblocking(false).ok();
-                        let h = handle.clone();
-                        let sl = accept_slot.clone();
-                        let mx = accept_metrics.clone();
-                        let sw = accept_swap.clone();
-                        std::thread::spawn(move || {
-                            let _ = serve_connection(stream, h, sl, mx, sw);
-                        });
-                    }
-                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                        std::thread::sleep(std::time::Duration::from_millis(5));
-                    }
-                    Err(_) => break,
-                }
-            }
-        });
-        Ok(ScoreServer {
-            addr: local,
-            stop,
-            accept_thread: Some(accept_thread),
-            batcher,
-            slot,
-            remote_swap,
-            metrics,
-        })
+        ScoreServer::builder(addr)
+            .model(model)
+            .policy(policy)
+            .edge(false)
+            .spawn(score_fn)
     }
 
     /// Allow or refuse the remote v2 `SwapModel` frame (refused frames
@@ -160,12 +311,20 @@ impl Drop for ScoreServer {
     }
 }
 
+impl ScoreService for ScoreServer {
+    /// In-process scoring through the server's own batcher — shares the
+    /// micro-batching window (and metrics) with network clients.
+    fn score(&self, zs: &Matrix) -> Result<ScoreReply> {
+        self.handle.score_reply(zs)
+    }
+}
+
 /// Does the first 4 bytes of a connection look like an HTTP request
 /// line rather than a native frame's length prefix? `b"GET "` read as a
 /// little-endian u32 is ~0x20544547 (>500 MiB), far beyond
 /// [`crate::distributed::message::MAX_FRAME`], so the two protocols
 /// cannot collide: any real frame's prefix fails this test.
-fn looks_like_http(first: &[u8; 4]) -> bool {
+pub(crate) fn looks_like_http(first: &[u8; 4]) -> bool {
     matches!(first, b"GET " | b"HEAD" | b"POST" | b"PUT " | b"DELE" | b"PATC" | b"OPTI")
 }
 
@@ -251,12 +410,13 @@ fn serve_connection(
             Ok(m) => m,
             Err(_) => return Ok(()),
         };
-        // a session negotiated down to v1 must never carry v2 frames —
-        // drop the connection rather than answer with a frame the peer
-        // cannot decode
-        if session_version < 2 && msg.requires_v2() {
+        // a session negotiated down must never carry frames newer than
+        // it agreed to — drop the connection rather than answer with a
+        // frame the peer cannot decode
+        if msg.min_version() > session_version {
             return Err(Error::Distributed(format!(
-                "v2 frame on a v{session_version} session: {msg:?}"
+                "v{} frame on a v{session_version} session: {msg:?}",
+                msg.min_version()
             )));
         }
         let mut span = crate::obs::Span::enter("server.request");
@@ -265,6 +425,7 @@ fn serve_connection(
                 "kind",
                 match &msg {
                     Message::ScoreRequest { .. } => "score",
+                    Message::ScoreRequestV2 { .. } => "score_v2",
                     Message::ModelInfoRequest => "info",
                     Message::SwapModel { .. } => "swap",
                     Message::StatsRequest => "stats",
@@ -274,8 +435,36 @@ fn serve_connection(
         }
         match msg {
             Message::ScoreRequest { rows } => {
-                let (dist2, r2) = handle.score_with_r2(&rows)?;
-                Message::ScoreReply { dist2, r2 }.write_to(&mut stream)?;
+                match handle.score_with_r2(&rows) {
+                    Ok((dist2, r2)) => {
+                        Message::ScoreReply { dist2, r2 }.write_to(&mut stream)?;
+                    }
+                    Err(Error::Overloaded(reason)) if session_version >= 3 => {
+                        Message::Overloaded { reason }.write_to(&mut stream)?;
+                    }
+                    // pre-v3 peers can't decode an Overloaded frame;
+                    // dropping the connection is the only honest signal
+                    Err(e) => return Err(e),
+                }
+            }
+            Message::ScoreRequestV2 { rows } => {
+                match handle.score_reply(&rows) {
+                    Ok(reply) => {
+                        Message::ScoreReplyV2 {
+                            dist2: reply.dist2,
+                            r2: reply.r2,
+                            epoch: reply.epoch,
+                            model_id: reply.model_id,
+                        }
+                        .write_to(&mut stream)?;
+                    }
+                    Err(Error::Overloaded(reason)) => {
+                        // v2 score frames imply a v3 session (the gate
+                        // above), which always understands Overloaded
+                        Message::Overloaded { reason }.write_to(&mut stream)?;
+                    }
+                    Err(e) => return Err(e),
+                }
             }
             Message::ModelInfoRequest => {
                 let m = slot.current();
@@ -347,37 +536,76 @@ pub struct RemoteModelInfo {
     pub epoch: u64,
 }
 
-/// Blocking client for the scoring service.
+/// Blocking client for the scoring service. Methods take `&self` (the
+/// stream sits behind a mutex), so one client can be shared across
+/// threads; each request/reply exchange holds the lock end to end.
 pub struct ScoreClient {
-    stream: TcpStream,
+    stream: Mutex<TcpStream>,
+    /// Protocol version this session negotiated.
+    version: u32,
 }
 
 impl ScoreClient {
     pub fn connect(addr: impl ToSocketAddrs) -> Result<ScoreClient> {
         let mut stream = TcpStream::connect(addr)?;
         Message::Hello { version: PROTOCOL_VERSION }.write_to(&mut stream)?;
-        match Message::read_from(&mut stream)? {
-            Message::HelloAck { version } if negotiate(version).is_some() => {}
+        let version = match Message::read_from(&mut stream)? {
+            Message::HelloAck { version } if negotiate(version).is_some() => version,
             other => {
                 return Err(Error::Distributed(format!("bad handshake: {other:?}")));
             }
-        }
-        Ok(ScoreClient { stream })
+        };
+        Ok(ScoreClient { stream: Mutex::new(stream), version })
+    }
+
+    /// Protocol version negotiated with the server.
+    pub fn version(&self) -> u32 {
+        self.version
+    }
+
+    fn stream(&self) -> std::sync::MutexGuard<'_, TcpStream> {
+        // a poisoned lock means a panic mid-exchange; the stream is
+        // desynchronized either way, so just take it
+        self.stream.lock().unwrap_or_else(|e| e.into_inner())
     }
 
     /// Score a batch; returns (dist2 per row, model R^2).
-    pub fn score(&mut self, rows: &Matrix) -> Result<(Vec<f64>, f64)> {
-        Message::ScoreRequest { rows: rows.clone() }.write_to(&mut self.stream)?;
-        match Message::read_from(&mut self.stream)? {
+    pub fn score(&self, rows: &Matrix) -> Result<(Vec<f64>, f64)> {
+        let mut stream = self.stream();
+        Message::ScoreRequest { rows: rows.clone() }.write_to(&mut *stream)?;
+        match Message::read_from(&mut *stream)? {
             Message::ScoreReply { dist2, r2 } => Ok((dist2, r2)),
+            Message::Overloaded { reason } => Err(Error::Overloaded(reason)),
+            other => Err(Error::Distributed(format!("unexpected {other:?}"))),
+        }
+    }
+
+    /// Score a batch with full model provenance (v3): distances plus
+    /// the R^2, swap epoch and content id of the exact model that
+    /// scored it.
+    pub fn score_detailed(&self, rows: &Matrix) -> Result<ScoreReply> {
+        if self.version < 3 {
+            return Err(Error::Distributed(format!(
+                "score_detailed needs a v3 session, negotiated v{}",
+                self.version
+            )));
+        }
+        let mut stream = self.stream();
+        Message::ScoreRequestV2 { rows: rows.clone() }.write_to(&mut *stream)?;
+        match Message::read_from(&mut *stream)? {
+            Message::ScoreReplyV2 { dist2, r2, epoch, model_id } => {
+                Ok(ScoreReply { dist2, r2, epoch, model_id })
+            }
+            Message::Overloaded { reason } => Err(Error::Overloaded(reason)),
             other => Err(Error::Distributed(format!("unexpected {other:?}"))),
         }
     }
 
     /// Ask the server about its active model (v2).
-    pub fn model_info(&mut self) -> Result<RemoteModelInfo> {
-        Message::ModelInfoRequest.write_to(&mut self.stream)?;
-        match Message::read_from(&mut self.stream)? {
+    pub fn model_info(&self) -> Result<RemoteModelInfo> {
+        let mut stream = self.stream();
+        Message::ModelInfoRequest.write_to(&mut *stream)?;
+        match Message::read_from(&mut *stream)? {
             Message::ModelInfo { version, r2, num_sv, dim, epoch } => Ok(RemoteModelInfo {
                 version,
                 r2,
@@ -392,19 +620,21 @@ impl ScoreClient {
     /// Pull the server's metrics (v2): the Prometheus exposition text
     /// plus the exact named-counter snapshot
     /// ([`crate::metrics::Metrics::snapshot`]) for cluster aggregation.
-    pub fn stats(&mut self) -> Result<(String, Vec<(String, u64)>)> {
-        Message::StatsRequest.write_to(&mut self.stream)?;
-        match Message::read_from(&mut self.stream)? {
+    pub fn stats(&self) -> Result<(String, Vec<(String, u64)>)> {
+        let mut stream = self.stream();
+        Message::StatsRequest.write_to(&mut *stream)?;
+        match Message::read_from(&mut *stream)? {
             Message::StatsReply { text, counters } => Ok((text, counters)),
             other => Err(Error::Distributed(format!("unexpected {other:?}"))),
         }
     }
 
     /// Hot-swap the server's model (v2); returns the new epoch.
-    pub fn swap_model(&mut self, model: &SvddModel) -> Result<u64> {
+    pub fn swap_model(&self, model: &SvddModel) -> Result<u64> {
+        let mut stream = self.stream();
         Message::SwapModel { model_json: model.to_json().to_string() }
-            .write_to(&mut self.stream)?;
-        match Message::read_from(&mut self.stream)? {
+            .write_to(&mut *stream)?;
+        match Message::read_from(&mut *stream)? {
             Message::SwapAck { epoch, swapped: true, .. } => Ok(epoch),
             Message::SwapAck { swapped: false, reason, .. } => {
                 Err(Error::Distributed(format!("swap rejected: {reason}")))
@@ -413,8 +643,15 @@ impl ScoreClient {
         }
     }
 
-    pub fn close(mut self) {
-        Message::Shutdown.write_to(&mut self.stream).ok();
+    pub fn close(self) {
+        Message::Shutdown.write_to(&mut *self.stream()).ok();
+    }
+}
+
+impl ScoreService for ScoreClient {
+    /// Remote scoring with provenance — requires a v3 server.
+    fn score(&self, zs: &Matrix) -> Result<ScoreReply> {
+        self.score_detailed(zs)
     }
 }
 
@@ -446,7 +683,7 @@ mod tests {
     fn serve_score_roundtrip() {
         let m = model();
         let mut server = spawn_native(m.clone(), BatchPolicy::default());
-        let mut client = ScoreClient::connect(server.addr()).unwrap();
+        let client = ScoreClient::connect(server.addr()).unwrap();
         let zs = Banana::default().generate(33, 2);
         let (dist2, r2) = client.score(&zs).unwrap();
         assert_eq!(dist2, m.dist2_batch(&zs));
@@ -463,6 +700,8 @@ mod tests {
             target_batch: 64,
             linger: std::time::Duration::from_millis(20),
             capacity: 1 << 16,
+            // timing-sensitive: keep the window fixed
+            adaptive: false,
         };
         let mut server = spawn_native(m.clone(), policy);
         let addr = server.addr();
@@ -470,7 +709,7 @@ mod tests {
             .map(|i| {
                 let m = m.clone();
                 std::thread::spawn(move || {
-                    let mut c = ScoreClient::connect(addr).unwrap();
+                    let c = ScoreClient::connect(addr).unwrap();
                     let zs = Banana::default().generate(16, 50 + i);
                     let (dist2, _) = c.score(&zs).unwrap();
                     assert_eq!(dist2, m.dist2_batch(&zs), "client {i} mismatch");
@@ -494,7 +733,7 @@ mod tests {
     fn multiple_requests_per_connection() {
         let m = model();
         let mut server = spawn_native(m.clone(), BatchPolicy::default());
-        let mut client = ScoreClient::connect(server.addr()).unwrap();
+        let client = ScoreClient::connect(server.addr()).unwrap();
         for seed in 0..5 {
             let zs = Banana::default().generate(8, seed);
             let (dist2, _) = client.score(&zs).unwrap();
@@ -509,7 +748,7 @@ mod tests {
     fn model_info_reports_active_model() {
         let m = model();
         let mut server = spawn_native(m.clone(), BatchPolicy::default());
-        let mut client = ScoreClient::connect(server.addr()).unwrap();
+        let client = ScoreClient::connect(server.addr()).unwrap();
         let info = client.model_info().unwrap();
         assert_eq!(info.version, m.content_id());
         assert_eq!(info.r2, m.r2());
@@ -525,7 +764,7 @@ mod tests {
         let m1 = model();
         let m2 = shifted_model();
         let mut server = spawn_native(m1.clone(), BatchPolicy::default());
-        let mut client = ScoreClient::connect(server.addr()).unwrap();
+        let client = ScoreClient::connect(server.addr()).unwrap();
         let zs = Banana::default().generate(12, 9);
 
         let (before, r2_before) = client.score(&zs).unwrap();
@@ -533,7 +772,7 @@ mod tests {
         assert_eq!(r2_before, m1.r2());
 
         // swap over a *second* connection while the first stays open
-        let mut admin = ScoreClient::connect(server.addr()).unwrap();
+        let admin = ScoreClient::connect(server.addr()).unwrap();
         assert_eq!(admin.swap_model(&m2).unwrap(), 1);
         admin.close();
 
@@ -556,13 +795,13 @@ mod tests {
     fn bad_swap_payload_rejected_connection_survives() {
         let m = model();
         let mut server = spawn_native(m.clone(), BatchPolicy::default());
-        let mut client = ScoreClient::connect(server.addr()).unwrap();
+        let client = ScoreClient::connect(server.addr()).unwrap();
 
         // hand-roll a bogus SwapModel frame
         Message::SwapModel { model_json: "{not json".into() }
-            .write_to(&mut client.stream)
+            .write_to(&mut *client.stream())
             .unwrap();
-        match Message::read_from(&mut client.stream).unwrap() {
+        match Message::read_from(&mut *client.stream()).unwrap() {
             Message::SwapAck { swapped, epoch, .. } => {
                 assert!(!swapped);
                 assert_eq!(epoch, 0);
@@ -586,7 +825,7 @@ mod tests {
         let m2 = shifted_model();
         let mut server = spawn_native(m1.clone(), BatchPolicy::default());
         server.set_remote_swap_enabled(false);
-        let mut client = ScoreClient::connect(server.addr()).unwrap();
+        let client = ScoreClient::connect(server.addr()).unwrap();
         let err = client.swap_model(&m2).unwrap_err();
         assert!(err.to_string().contains("disabled"), "{err}");
         // the connection survives, still serving the original model,
@@ -618,7 +857,7 @@ mod tests {
         let m = model();
         let mut server = spawn_native(m.clone(), BatchPolicy::default());
         // score something first so the latency histogram has a sample
-        let mut client = ScoreClient::connect(server.addr()).unwrap();
+        let client = ScoreClient::connect(server.addr()).unwrap();
         client.score(&Banana::default().generate(10, 2)).unwrap();
         client.close();
         let resp = http_exchange(
@@ -656,7 +895,7 @@ mod tests {
         let resp = http_exchange(server.addr(), b"POST /metrics HTTP/1.1\r\n\r\n");
         assert!(resp.starts_with("HTTP/1.1 405"), "{resp}");
         // native scoring still works after the HTTP traffic
-        let mut client = ScoreClient::connect(server.addr()).unwrap();
+        let client = ScoreClient::connect(server.addr()).unwrap();
         client.score(&Banana::default().generate(3, 8)).unwrap();
         client.close();
         server.stop();
@@ -666,7 +905,7 @@ mod tests {
     fn stats_frame_returns_text_and_exact_counters() {
         let m = model();
         let mut server = spawn_native(m, BatchPolicy::default());
-        let mut client = ScoreClient::connect(server.addr()).unwrap();
+        let client = ScoreClient::connect(server.addr()).unwrap();
         client.score(&Banana::default().generate(7, 5)).unwrap();
         let (text, counters) = client.stats().unwrap();
         assert!(text.contains("fastsvdd_rows_scored_total 7"));
@@ -725,6 +964,51 @@ mod tests {
             other => panic!("unexpected {other:?}"),
         }
         Message::Shutdown.write_to(&mut stream).ok();
+        server.stop();
+    }
+
+    #[test]
+    fn builder_without_model_errors() {
+        let err = ScoreServer::builder("127.0.0.1:0")
+            .spawn(|m: &SvddModel, zs: &Matrix| Ok(m.dist2_batch(zs)))
+            .unwrap_err();
+        assert!(err.to_string().contains("builder needs"), "{err}");
+    }
+
+    #[test]
+    fn builder_edge_server_serves_native_with_provenance() {
+        let m = model();
+        let mut server = ScoreServer::builder("127.0.0.1:0")
+            .model(m.clone())
+            .spawn(|mo, zs| Ok(mo.dist2_batch(zs)))
+            .unwrap();
+        let client = ScoreClient::connect(server.addr()).unwrap();
+        assert_eq!(client.version(), 3);
+        let zs = Banana::default().generate(9, 21);
+        let reply = client.score_detailed(&zs).unwrap();
+        assert_eq!(reply.dist2, m.dist2_batch(&zs));
+        assert_eq!(reply.r2, m.r2());
+        assert_eq!(reply.epoch, 0);
+        assert_eq!(reply.model_id, m.content_id());
+        // the in-process ScoreService path shares the same batcher
+        let local = ScoreService::score(&server, &zs).unwrap();
+        assert_eq!(local.dist2, reply.dist2);
+        client.close();
+        server.stop();
+        assert_eq!(server.metrics.rows_scored.get(), 18);
+    }
+
+    #[test]
+    fn score_detailed_works_on_threaded_server() {
+        let m = model();
+        let mut server = spawn_native(m.clone(), BatchPolicy::default());
+        let client = ScoreClient::connect(server.addr()).unwrap();
+        let zs = Banana::default().generate(5, 33);
+        let reply = client.score_detailed(&zs).unwrap();
+        assert_eq!(reply.dist2, m.dist2_batch(&zs));
+        assert_eq!(reply.model_id, m.content_id());
+        assert_eq!(reply.epoch, 0);
+        client.close();
         server.stop();
     }
 }

@@ -49,6 +49,7 @@ fn lifecycle_drift_retrain_swap_and_rollback_under_load() {
         target_batch: 32,
         linger: Duration::from_micros(200),
         capacity: 1 << 16,
+        ..BatchPolicy::default()
     };
     let mut server =
         ScoreServer::spawn("127.0.0.1:0", v1.clone(), policy, |m, zs| Ok(m.dist2_batch(zs)))
@@ -71,7 +72,7 @@ fn lifecycle_drift_retrain_swap_and_rollback_under_load() {
                 let mut seen_r2 = HashSet::new();
                 let mut replies = 0u64;
                 match ScoreClient::connect(addr) {
-                    Ok(mut client) => {
+                    Ok(client) => {
                         while !stop.load(Ordering::Relaxed) {
                             match client.score(&zs) {
                                 Ok((dist2, r2)) => {
@@ -144,7 +145,7 @@ fn lifecycle_drift_retrain_swap_and_rollback_under_load() {
     );
 
     // ---- subsequent replies reflect v2 ----
-    let mut probe = ScoreClient::connect(addr).unwrap();
+    let probe = ScoreClient::connect(addr).unwrap();
     let (_, r2_now) = probe.score(&zs).unwrap();
     assert_eq!(r2_now.to_bits(), r2rep.r2.to_bits());
     let info = probe.model_info().unwrap();
@@ -199,6 +200,7 @@ fn metrics_scrape_is_concurrent_with_scoring() {
         target_batch: 16,
         linger: Duration::from_micros(200),
         capacity: 1 << 12,
+        ..BatchPolicy::default()
     };
     let mut server =
         ScoreServer::spawn("127.0.0.1:0", model, policy, |m, zs| Ok(m.dist2_batch(zs)))
@@ -216,7 +218,7 @@ fn metrics_scrape_is_concurrent_with_scoring() {
             std::thread::spawn(move || {
                 let mut replies = 0u64;
                 match ScoreClient::connect(addr) {
-                    Ok(mut client) => {
+                    Ok(client) => {
                         while !stop.load(Ordering::Relaxed) {
                             match client.score(&zs) {
                                 Ok((dist2, _)) => {

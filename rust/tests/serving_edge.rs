@@ -1,0 +1,259 @@
+//! End-to-end serving-edge test: native-protocol and HTTP/JSON clients
+//! hammer one edge server concurrently while the served model is
+//! hot-swapped back and forth. Every reply must be internally
+//! consistent — distances, threshold, epoch and content id all from the
+//! *same* model (in-flight micro-batches finish on the pre-swap model),
+//! with zero dropped connections and exact rows_scored accounting
+//! across both ingresses.
+
+use std::collections::HashSet;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use fastsvdd::data::{banana::Banana, Generator};
+use fastsvdd::scoring::{BatchPolicy, ScoreClient, ScoreServer};
+use fastsvdd::svdd::{train, SvddModel, SvddParams};
+use fastsvdd::util::json::Json;
+use fastsvdd::util::matrix::Matrix;
+
+fn model(seed: u64, shift: f64) -> SvddModel {
+    let mut data = Banana::default().generate(600, seed);
+    for i in 0..data.rows() {
+        data.row_mut(i)[0] += shift;
+    }
+    train(&data, &SvddParams::gaussian(0.35, 0.01)).unwrap()
+}
+
+/// `{"rows": [[..], ..]}` for `zs`. Rust's `{}` float formatting is
+/// shortest-roundtrip, so the server parses back the exact same f64s
+/// and its distances are bit-identical to a local `dist2_batch`.
+fn rows_json(zs: &Matrix) -> String {
+    let rows: Vec<String> = (0..zs.rows())
+        .map(|i| {
+            let vals: Vec<String> = zs.row(i).iter().map(|v| format!("{v}")).collect();
+            format!("[{}]", vals.join(", "))
+        })
+        .collect();
+    format!("{{\"rows\": [{}]}}", rows.join(", "))
+}
+
+/// One keep-alive POST /score exchange; returns (status, body JSON).
+fn http_post_score(s: &mut TcpStream, body: &str) -> (u16, Json) {
+    write!(
+        s,
+        "POST /score HTTP/1.1\r\nHost: t\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    read_response(s)
+}
+
+fn read_response(s: &mut TcpStream) -> (u16, Json) {
+    let mut head = Vec::new();
+    let mut byte = [0u8; 1];
+    while !head.ends_with(b"\r\n\r\n") {
+        s.read_exact(&mut byte).unwrap();
+        head.push(byte[0]);
+    }
+    let head = String::from_utf8(head).unwrap();
+    let status: u16 = head
+        .lines()
+        .next()
+        .unwrap()
+        .split_whitespace()
+        .nth(1)
+        .unwrap()
+        .parse()
+        .unwrap();
+    let len: usize = head
+        .lines()
+        .find_map(|l| l.strip_prefix("Content-Length: "))
+        .unwrap()
+        .parse()
+        .unwrap();
+    let mut body = vec![0u8; len];
+    s.read_exact(&mut body).unwrap();
+    (status, Json::parse(std::str::from_utf8(&body).unwrap()).unwrap())
+}
+
+/// What one client thread saw: replies, distinct epochs.
+type ClientLog = (u64, HashSet<u64>);
+
+#[test]
+fn swap_during_batch_keeps_replies_consistent_and_drops_nothing() {
+    let m1 = model(1, 0.0);
+    let m2 = model(2, 6.0);
+    assert_ne!(m1.content_id(), m2.content_id());
+    let policy = BatchPolicy {
+        target_batch: 32,
+        linger: Duration::from_millis(2),
+        ..BatchPolicy::default()
+    };
+    let mut server = ScoreServer::builder("127.0.0.1:0")
+        .model(m1.clone())
+        .policy(policy)
+        .http(true)
+        .spawn(|m, zs| Ok(m.dist2_batch(zs)))
+        .unwrap();
+    let addr = server.addr();
+
+    let zs = Banana::default().generate(8, 9);
+    let e1 = m1.dist2_batch(&zs);
+    let e2 = m2.dist2_batch(&zs);
+    let (id1, id2) = (m1.content_id(), m2.content_id());
+    let stop = Arc::new(AtomicBool::new(false));
+    let errors = Arc::new(AtomicU64::new(0));
+
+    // epochs alternate m1(even) / m2(odd): every reply's epoch must
+    // agree with the model its content id names
+    let check = {
+        let (e1, e2) = (e1.clone(), e2.clone());
+        let (id1, id2) = (id1.clone(), id2.clone());
+        let (t1, t2) = (m1.r2(), m2.r2());
+        move |dist2: &[f64], r2: f64, epoch: u64, model_id: &str| {
+            if model_id == id1 {
+                assert_eq!(dist2, e1.as_slice(), "m1 reply has foreign distances");
+                assert_eq!(r2, t1, "m1 reply with m2 threshold");
+                assert_eq!(epoch % 2, 0, "m1 reply with an m2 epoch");
+            } else if model_id == id2 {
+                assert_eq!(dist2, e2.as_slice(), "m2 reply has foreign distances");
+                assert_eq!(r2, t2, "m2 reply with m1 threshold");
+                assert_eq!(epoch % 2, 1, "m2 reply with an m1 epoch");
+            } else {
+                panic!("reply from unknown model {model_id}");
+            }
+        }
+    };
+
+    let native: Vec<_> = (0..3)
+        .map(|_| {
+            let stop = stop.clone();
+            let errors = errors.clone();
+            let zs = zs.clone();
+            let check = check.clone();
+            std::thread::spawn(move || -> ClientLog {
+                let mut epochs = HashSet::new();
+                let mut replies = 0u64;
+                let client = ScoreClient::connect(addr).unwrap();
+                while !stop.load(Ordering::Relaxed) {
+                    match client.score_detailed(&zs) {
+                        Ok(r) => {
+                            check(&r.dist2, r.r2, r.epoch, &r.model_id);
+                            epochs.insert(r.epoch);
+                            replies += 1;
+                        }
+                        Err(_) => {
+                            errors.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+                client.close();
+                (replies, epochs)
+            })
+        })
+        .collect();
+
+    let http: Vec<_> = (0..2)
+        .map(|_| {
+            let stop = stop.clone();
+            let errors = errors.clone();
+            let body = rows_json(&zs);
+            let check = check.clone();
+            std::thread::spawn(move || -> ClientLog {
+                let mut epochs = HashSet::new();
+                let mut replies = 0u64;
+                let mut s = TcpStream::connect(addr).unwrap();
+                while !stop.load(Ordering::Relaxed) {
+                    let (status, json) = http_post_score(&mut s, &body);
+                    if status != 200 {
+                        errors.fetch_add(1, Ordering::Relaxed);
+                        continue;
+                    }
+                    let dist2: Vec<f64> = json
+                        .get("dist2")
+                        .and_then(|v| v.as_arr())
+                        .unwrap()
+                        .iter()
+                        .map(|v| v.as_f64().unwrap())
+                        .collect();
+                    let r2 = json.get("r2").and_then(|v| v.as_f64()).unwrap();
+                    let epoch = json.get("epoch").and_then(|v| v.as_f64()).unwrap() as u64;
+                    let model_id = json.get("model").and_then(|v| v.as_str()).unwrap();
+                    check(&dist2, r2, epoch, model_id);
+                    epochs.insert(epoch);
+                    replies += 1;
+                }
+                (replies, epochs)
+            })
+        })
+        .collect();
+
+    // let everyone score the spawn-time model, then swap storm
+    std::thread::sleep(Duration::from_millis(40));
+    for i in 0..6u64 {
+        let next = if i % 2 == 0 { m2.clone() } else { m1.clone() };
+        assert_eq!(server.swap_model(next).unwrap(), i + 1);
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    std::thread::sleep(Duration::from_millis(40));
+    stop.store(true, Ordering::Relaxed);
+
+    let mut total_replies = 0u64;
+    let mut epochs = HashSet::new();
+    for t in native.into_iter().chain(http) {
+        let (replies, seen) = t.join().unwrap();
+        assert!(replies > 0, "a client never scored");
+        total_replies += replies;
+        epochs.extend(seen);
+    }
+    assert_eq!(errors.load(Ordering::Relaxed), 0, "a client saw an error");
+    assert!(
+        epochs.len() >= 2,
+        "replies never spanned a swap: epochs {epochs:?}"
+    );
+    server.stop();
+    // exact accounting: every scored row was counted exactly once, over
+    // both ingresses — nothing dropped, nothing double-counted
+    assert_eq!(
+        server.metrics.rows_scored.get(),
+        total_replies * zs.rows() as u64
+    );
+    assert_eq!(server.metrics.model_swaps.get(), 6);
+    assert_eq!(server.metrics.shed_requests.get(), 0);
+}
+
+#[test]
+fn http_ingress_gate_blocks_scoring_but_not_metrics() {
+    let m = model(3, 0.0);
+    let mut server = ScoreServer::builder("127.0.0.1:0")
+        .model(m.clone())
+        .http(false)
+        .spawn(|m, zs| Ok(m.dist2_batch(zs)))
+        .unwrap();
+    let zs = Banana::default().generate(4, 7);
+    let mut s = TcpStream::connect(server.addr()).unwrap();
+    let (status, json) = http_post_score(&mut s, &rows_json(&zs));
+    assert_eq!(status, 404);
+    assert_eq!(
+        json.get("error").and_then(|v| v.as_str()).unwrap(),
+        "http_scoring_disabled"
+    );
+    // observability and native scoring stay on
+    write!(s, "GET /metrics HTTP/1.1\r\nHost: t\r\n\r\n").unwrap();
+    let mut head = Vec::new();
+    let mut byte = [0u8; 1];
+    while !head.ends_with(b"\r\n\r\n") {
+        s.read_exact(&mut byte).unwrap();
+        head.push(byte[0]);
+    }
+    assert!(head.starts_with(b"HTTP/1.1 200 OK"));
+    let client = ScoreClient::connect(server.addr()).unwrap();
+    let reply = client.score_detailed(&zs).unwrap();
+    assert_eq!(reply.dist2, m.dist2_batch(&zs));
+    client.close();
+    server.stop();
+}
