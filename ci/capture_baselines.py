@@ -1,0 +1,81 @@
+#!/usr/bin/env python3
+"""Turn a green bench run's BENCH_*.json artifacts into ready-to-commit
+baseline files for ci/baselines/.
+
+The bench-smoke job runs this after its gates pass and uploads the
+output as the `baseline-candidates` artifact; re-baselining is then:
+download the artifact, copy the wanted file(s) over ci/baselines/, and
+commit with the change that justifies the new numbers. Run it locally
+the same way against `rust/results/` after `cargo bench`.
+
+Each candidate is the bench JSON verbatim plus a `_captured` stanza
+recording where the numbers came from (runner, bench scale, dispatched
+ISA arm, arch, capture time) — provenance the baseline README requires
+so a committed floor is auditable back to real hardware.
+
+Stdlib only; runs on any python3.
+"""
+
+import argparse
+import datetime
+import json
+import os
+import sys
+
+# The gates that compare absolute throughput against a committed
+# baseline (the others gate on same-machine ratios/booleans only and
+# never need a capture).
+DEFAULT_BENCHES = ["perf_kernel", "perf_parallel", "perf_serving"]
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--results", default="rust/results",
+                    help="directory holding BENCH_*.json from a bench run")
+    ap.add_argument("--out", default="baseline-candidates",
+                    help="directory to write candidate baselines into")
+    ap.add_argument("--runner", default=os.environ.get("RUNNER_NAME", "local"),
+                    help="runner label for the provenance stanza")
+    ap.add_argument("--scale",
+                    default=os.environ.get("FASTSVDD_BENCH_SCALE", "1.0"),
+                    help="FASTSVDD_BENCH_SCALE the run used")
+    ap.add_argument("--benches", default=",".join(DEFAULT_BENCHES),
+                    help="comma-separated bench names to capture")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    captured = []
+    for name in filter(None, args.benches.split(",")):
+        src = os.path.join(args.results, f"BENCH_{name}.json")
+        if not os.path.exists(src):
+            print(f"skip  {name}: {src} not found")
+            continue
+        with open(src) as fh:
+            data = json.load(fh)
+        data["_captured"] = {
+            "source": f"BENCH_{name}.json from a bench run",
+            "runner": args.runner,
+            "bench_scale": args.scale,
+            "isa": data.get("isa", "unknown"),
+            "arch": data.get("arch", "unknown"),
+            "utc": datetime.datetime.now(datetime.timezone.utc)
+                   .strftime("%Y-%m-%dT%H:%M:%SZ"),
+        }
+        dst = os.path.join(args.out, f"BENCH_{name}.json")
+        with open(dst, "w") as fh:
+            json.dump(data, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+        captured.append(dst)
+        print(f"wrote {dst} (isa={data['_captured']['isa']}, "
+              f"scale={args.scale})")
+
+    if not captured:
+        print("no bench JSON captured — did the bench run emit results?")
+        return 1
+    print(f"\n{len(captured)} baseline candidate(s) ready; to re-baseline, "
+          "copy over ci/baselines/ and commit (see ci/baselines/README.md)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

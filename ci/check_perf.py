@@ -21,6 +21,12 @@ Checks (all optional, combined):
                             ladder degenerates to [1] there
   --require-true k1,k2      current[k] must be boolean true (correctness
                             flags the bench computes, e.g. bit-identity)
+  --forbid-scalar-isa       fail when the bench JSON reports
+                            isa == "scalar" on an x86_64 runner (the
+                            SIMD dispatch silently fell back), or when
+                            the isa/arch provenance keys are missing
+                            entirely; reported as SKIP on non-x86_64
+                            arches (their best arm is their own concern)
 
 Baselines live in ci/baselines/. To re-baseline after an intentional
 perf change, copy the bench JSON from a green run's artifacts over the
@@ -56,6 +62,9 @@ def main():
                          "current['threads_mt'] > 1 (repeatable)")
     ap.add_argument("--require-true", default="",
                     help="comma-separated keys that must be true")
+    ap.add_argument("--forbid-scalar-isa", action="store_true",
+                    help="fail if the bench reports isa == 'scalar' on "
+                         "x86_64, or carries no isa/arch provenance")
     args = ap.parse_args()
 
     baseline = load(args.baseline)
@@ -103,6 +112,21 @@ def main():
     for key in filter(None, args.require_true.split(",")):
         val = current.get(key)
         report(val is True, f"{key}: expected true, got {val!r}")
+
+    if args.forbid_scalar_isa:
+        arch, isa = current.get("arch"), current.get("isa")
+        if arch is None or isa is None:
+            report(False, f"isa: provenance missing from {args.current} "
+                          f"(arch={arch!r}, isa={isa!r}; the bench must "
+                          "stamp bench::isa_provenance())")
+        elif arch != "x86_64":
+            print(f"SKIP  isa: arch '{arch}' is not x86_64 "
+                  f"(dispatched arm '{isa}')")
+        else:
+            report(isa != "scalar",
+                   f"isa: dispatched arm '{isa}' on x86_64 — SIMD dispatch "
+                   "must engage on CI runners (AVX2 is universal there); "
+                   "'scalar' means detection or dispatch silently broke")
 
     if failures:
         print(f"\nperf gate FAILED ({len(failures)} check(s)); "

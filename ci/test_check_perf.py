@@ -1,0 +1,140 @@
+#!/usr/bin/env python3
+"""Self-test for ci/check_perf.py — the perf gate the bench-smoke job
+runs. Exercises every check class with synthetic bench JSON, including
+the demonstration the ISSUE asks for: a BENCH file reporting
+`isa: "scalar"` on an x86_64 runner must FAIL the gate when
+`--forbid-scalar-isa` is on.
+
+Stdlib only; run directly (`python3 ci/test_check_perf.py`) or let the
+CI bench-smoke job run it before the real gates.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+GATE = os.path.join(HERE, "check_perf.py")
+
+
+def run_gate(baseline, current, *extra_args):
+    """Write both JSONs to temp files and run the gate; return
+    (exit_code, stdout)."""
+    with tempfile.TemporaryDirectory() as td:
+        bp = os.path.join(td, "baseline.json")
+        cp = os.path.join(td, "current.json")
+        with open(bp, "w") as fh:
+            json.dump(baseline, fh)
+        with open(cp, "w") as fh:
+            json.dump(current, fh)
+        proc = subprocess.run(
+            [sys.executable, GATE, "--baseline", bp, "--current", cp]
+            + list(extra_args),
+            capture_output=True, text=True)
+        return proc.returncode, proc.stdout + proc.stderr
+
+
+PASSED = 0
+
+
+def check(name, cond, detail=""):
+    global PASSED
+    if not cond:
+        print(f"FAIL  {name}  {detail}")
+        sys.exit(1)
+    PASSED += 1
+    print(f"ok    {name}")
+
+
+def main():
+    base = {"threads_mt": 4, "tp": 100.0}
+
+    # ---- higher-is-better vs baseline ----
+    code, out = run_gate(base, {"threads_mt": 4, "tp": 95.0},
+                         "--higher-is-better", "tp")
+    check("within tolerance passes", code == 0, out)
+
+    code, out = run_gate(base, {"threads_mt": 4, "tp": 60.0},
+                         "--higher-is-better", "tp")
+    check("20%+ regression fails", code == 1, out)
+
+    code, out = run_gate(base, {"threads_mt": 2, "tp": 10.0},
+                         "--higher-is-better", "tp")
+    check("weaker runner skips throughput comparison",
+          code == 0 and "SKIP" in out, out)
+
+    # ---- absolute floors ----
+    code, out = run_gate(base, {"threads_mt": 4, "ratio": 2.5},
+                         "--min", "ratio=2.0")
+    check("ratio above floor passes", code == 0, out)
+
+    code, out = run_gate(base, {"threads_mt": 4, "ratio": 1.5},
+                         "--min", "ratio=2.0")
+    check("ratio below floor fails", code == 1, out)
+
+    code, out = run_gate(base, {"threads_mt": 1, "speedup": 0.9},
+                         "--min-mt", "speedup=1.3")
+    check("single-core skips --min-mt floors",
+          code == 0 and "SKIP" in out, out)
+
+    # ---- correctness booleans ----
+    code, out = run_gate(base, {"threads_mt": 4, "bit_identical": True},
+                         "--require-true", "bit_identical")
+    check("true flag passes", code == 0, out)
+
+    code, out = run_gate(base, {"threads_mt": 4, "bit_identical": False},
+                         "--require-true", "bit_identical")
+    check("false flag fails", code == 1, out)
+
+    code, out = run_gate(base, {"threads_mt": 4},
+                         "--require-true", "bit_identical")
+    check("missing flag fails", code == 1, out)
+
+    # ---- --forbid-scalar-isa (the dispatch-engaged tripwire) ----
+    simd = {"threads_mt": 4, "isa": "avx2", "arch": "x86_64"}
+    code, out = run_gate(base, simd, "--forbid-scalar-isa")
+    check("avx2 on x86_64 passes", code == 0, out)
+
+    fma = dict(simd, isa="fma")
+    code, out = run_gate(base, fma, "--forbid-scalar-isa")
+    check("fma on x86_64 passes", code == 0, out)
+
+    # THE demonstration: forced-scalar run on an x86_64 runner trips the
+    # gate (what CI would see if dispatch silently fell back, or if
+    # FASTSVDD_ISA=scalar leaked into the bench job)
+    scalar = dict(simd, isa="scalar")
+    code, out = run_gate(base, scalar, "--forbid-scalar-isa")
+    check("FORCED-SCALAR ON x86_64 FAILS THE GATE",
+          code == 1 and "scalar" in out, out)
+
+    code, out = run_gate(base, {"threads_mt": 4}, "--forbid-scalar-isa")
+    check("missing isa/arch provenance fails", code == 1, out)
+
+    neon = {"threads_mt": 4, "isa": "neon", "arch": "aarch64"}
+    code, out = run_gate(base, neon, "--forbid-scalar-isa")
+    check("non-x86_64 arch skips the scalar check",
+          code == 0 and "SKIP" in out, out)
+
+    arm_scalar = {"threads_mt": 4, "isa": "scalar", "arch": "aarch64"}
+    code, out = run_gate(base, arm_scalar, "--forbid-scalar-isa")
+    check("scalar on aarch64 is not an error (skipped)",
+          code == 0 and "SKIP" in out, out)
+
+    # ---- without the flag, scalar isa is not checked at all ----
+    code, out = run_gate(base, scalar)
+    check("scalar isa passes when the flag is off", code == 0, out)
+
+    # ---- combined: one failing check fails the whole gate ----
+    cur = {"threads_mt": 4, "tp": 99.0, "ratio": 0.5,
+           "isa": "avx2", "arch": "x86_64"}
+    code, out = run_gate(base, cur, "--higher-is-better", "tp",
+                         "--min", "ratio=2.0", "--forbid-scalar-isa")
+    check("one failing check fails a combined run", code == 1, out)
+
+    print(f"\nall {PASSED} gate self-tests passed")
+
+
+if __name__ == "__main__":
+    main()

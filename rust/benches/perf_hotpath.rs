@@ -118,7 +118,7 @@ fn main() {
     emit("perf_hotpath", &t);
 
     // machine-readable summary for the CI bench-smoke artifacts
-    let json = obj(vec![
+    let mut pairs = vec![
         ("bench", s("perf_hotpath")),
         ("rows", num(rows as f64)),
         ("smo_solve_ms", num(m_solve.mean * 1e3)),
@@ -126,7 +126,9 @@ fn main() {
         ("sampling_iters", num(iters as f64)),
         ("native_score_rows_per_s", num(zs.rows() as f64 / m_score.mean)),
         ("cache_speedup", num(m_nocache.mean / m_cache.mean)),
-    ]);
+    ];
+    pairs.extend(fastsvdd::bench::isa_provenance());
+    let json = obj(pairs);
     emit_text("BENCH_perf_hotpath.json", &json.to_string_pretty());
     println!("wrote results/BENCH_perf_hotpath.json");
 }

@@ -128,7 +128,7 @@ fn main() {
     ]);
     emit("perf_hotswap", &t);
 
-    let json = obj(vec![
+    let mut pairs = vec![
         ("bench", s("perf_hotswap")),
         ("rows", num(rows as f64)),
         ("requests", num(requests as f64)),
@@ -146,7 +146,9 @@ fn main() {
         ("cold_r2", num(cold.model.r2())),
         ("warm_r2", num(warm.model.r2())),
         ("converged", Json::Bool(cold.converged && warm.converged)),
-    ]);
+    ];
+    pairs.extend(fastsvdd::bench::isa_provenance());
+    let json = obj(pairs);
     emit_text("BENCH_perf_hotswap.json", &json.to_string_pretty());
     println!("wrote results/BENCH_perf_hotswap.json");
 }

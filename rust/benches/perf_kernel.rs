@@ -9,16 +9,27 @@
 //!   auto threads, with bit-identity asserted across thread counts
 //!   {1, 2, 8} and block-vs-scalar closeness checked to tight
 //!   tolerance;
+//! - ISA arms: the same block Gram and the raw `linalg::dot_block`
+//!   panel microkernel are timed twice, once forced onto the scalar
+//!   arm and once on the host's best SIMD arm, with per-entry
+//!   **bitwise** equality asserted between the two (the fixed
+//!   summation-order contract — skipped only if `FASTSVDD_ISA=fma`
+//!   opted into fused rounding). The dot-panel ratio is the pure
+//!   microkernel speedup (target >= 4x on AVX2); the Gram ratio is
+//!   smaller because per-entry `exp` stays scalar by design;
 //! - batch scoring: `SvddModel::dist2_batch_pooled` (block panels) at 1
-//!   and auto threads, bit-identity across thread counts.
+//!   and auto threads, bit-identity across thread counts, plus the
+//!   opt-in f32 panel path (`ModelF32`) at 1 thread.
 //!
 //! Emits the usual table plus `results/BENCH_perf_kernel.json` — the
 //! file the CI `bench-smoke` job gates against
 //! `ci/baselines/BENCH_perf_kernel.json` (see ci/check_perf.py and
-//! ci/baselines/README.md for the capture procedure).
+//! ci/baselines/README.md for the capture procedure). The JSON carries
+//! `isa`/`arch` so the gate can prove dispatch engaged on the runner.
 
-use fastsvdd::bench::{emit, emit_text, measure, scaled};
+use fastsvdd::bench::{emit, emit_text, isa_provenance, measure, scaled};
 use fastsvdd::data::tennessee::TennesseePlant;
+use fastsvdd::linalg::{self, isa, Isa};
 use fastsvdd::parallel::{gram, Pool};
 use fastsvdd::svdd::bandwidth::median_heuristic;
 use fastsvdd::svdd::smo::DenseKernel;
@@ -35,9 +46,13 @@ fn main() {
     let kernel = Kernel::gaussian(bw);
     let auto = Pool::auto().threads();
     let entries = (rows * rows) as f64;
+    // the arm Auto resolves to on this host (honours FASTSVDD_ISA)
+    let best = isa::install(Isa::Auto).expect("auto is always installable");
 
     let mut t = Table::new(
-        &format!("Perf: kernel compute layer ({rows}x{dim} tennessee, {auto} cores)"),
+        &format!(
+            "Perf: kernel compute layer ({rows}x{dim} tennessee, {auto} cores, isa {best})"
+        ),
         &["path", "threads", "mean_ms", "throughput", "vs scalar 1t"],
     );
 
@@ -61,6 +76,46 @@ fn main() {
         "block path drifted from the scalar reference (max rel gap {max_gap:.3e})"
     );
 
+    // ---- per-arm: scalar arm first, then the best arm (left installed
+    // for the rest of the bench, matching the default dispatch) ----
+    let a_rows = 256usize.min(rows);
+    let mut panel = vec![0.0f64; a_rows * rows];
+    let panel_dots = (a_rows * rows) as f64;
+
+    isa::install(Isa::Scalar).expect("scalar is always available");
+    let gram_scalar_arm = gram(&data, kernel, Pool::serial());
+    let m_gram_scal = measure(1, 3, || gram(&data, kernel, Pool::serial()));
+    let gram_tp_scalar_arm = entries / m_gram_scal.mean;
+    let m_dot_scal = measure(1, 5, || {
+        linalg::dot_block(&data, 0..a_rows, &data, 0..rows, &mut panel)
+    });
+    let dot_tp_scalar = panel_dots / m_dot_scal.mean;
+    let panel_scalar_arm = panel.clone();
+
+    isa::install(best).expect("best arm came from detection");
+    let gram_simd_arm = gram(&data, kernel, Pool::serial());
+    let m_dot_simd = measure(1, 5, || {
+        linalg::dot_block(&data, 0..a_rows, &data, 0..rows, &mut panel)
+    });
+    let dot_tp_simd = panel_dots / m_dot_simd.mean;
+    let dot_speedup = dot_tp_simd / dot_tp_scalar;
+
+    // every arm except opt-in FMA honours the fixed summation order
+    // bit for bit — equality here proves dispatch preserves results
+    let gram_simd_bit_identical = if best == Isa::Fma {
+        gram_simd_arm
+            .iter()
+            .zip(&gram_scalar_arm)
+            .all(|(a, b)| (a - b).abs() <= 1e-12 * b.abs().max(1.0))
+    } else {
+        gram_simd_arm == gram_scalar_arm && panel == panel_scalar_arm
+    };
+    assert!(
+        gram_simd_bit_identical,
+        "{} arm diverged from the scalar arm",
+        best
+    );
+
     // ---- Gram throughput: scalar reference vs block, 1 thread ----
     let m_scalar = measure(1, 3, || DenseKernel::from_data_serial(&data, kernel));
     let scalar_tp = entries / m_scalar.mean;
@@ -72,16 +127,38 @@ fn main() {
         "1.00x".into(),
     ]);
 
+    t.row(vec![
+        "gram block (scalar arm)".into(),
+        "1".into(),
+        f(m_gram_scal.mean * 1e3, 1),
+        format!("{:.2}M entries/s", gram_tp_scalar_arm / 1e6),
+        format!("{:.2}x", gram_tp_scalar_arm / scalar_tp),
+    ]);
+
     let m_block1 = measure(1, 3, || gram(&data, kernel, Pool::serial()));
     let block_tp_1t = entries / m_block1.mean;
     let speedup_1t = block_tp_1t / scalar_tp;
+    let gram_arm_speedup = block_tp_1t / gram_tp_scalar_arm;
     t.row(vec![
-        "gram block (norm-cache + tiles)".into(),
+        format!("gram block ({best} arm)"),
         "1".into(),
         f(m_block1.mean * 1e3, 1),
         format!("{:.2}M entries/s", block_tp_1t / 1e6),
         format!("{speedup_1t:.2}x"),
     ]);
+
+    for (arm, m, tp) in [
+        (Isa::Scalar, &m_dot_scal, dot_tp_scalar),
+        (best, &m_dot_simd, dot_tp_simd),
+    ] {
+        t.row(vec![
+            format!("dot_block panel ({arm} arm)"),
+            "1".into(),
+            f(m.mean * 1e3, 2),
+            format!("{:.1}M dots/s", tp / 1e6),
+            format!("{:.2}x", tp / dot_tp_scalar),
+        ]);
+    }
 
     // ---- Gram throughput: block, all cores ----
     let threads_mt = auto;
@@ -89,7 +166,7 @@ fn main() {
     let m_blockmt = measure(1, 3, || gram(&data, kernel, pool_mt));
     let block_tp_mt = entries / m_blockmt.mean;
     t.row(vec![
-        "gram block (norm-cache + tiles)".into(),
+        format!("gram block ({best} arm)"),
         threads_mt.to_string(),
         f(m_blockmt.mean * 1e3, 1),
         format!("{:.2}M entries/s", block_tp_mt / 1e6),
@@ -124,29 +201,55 @@ fn main() {
         ]);
     }
 
+    // ---- opt-in f32 panel path (--precision f32) ----
+    let f32m = model.to_f32();
+    let m_f32 = measure(1, 5, || f32m.dist2_batch_pooled(&zs, Pool::serial()));
+    let score_tp_f32 = zs.rows() as f64 / m_f32.mean;
+    t.row(vec![
+        format!("scoring f32 panels ({} SVs)", model.num_sv()),
+        "1".into(),
+        f(m_f32.mean * 1e3, 2),
+        format!("{:.0}k rows/s", score_tp_f32 / 1e3),
+        format!("{:.2}x", score_tp_f32 / score_tp[0]),
+    ]);
+
     emit("perf_kernel", &t);
+    println!(
+        "dot_block panel, {best} vs scalar arm at 1 thread: {dot_speedup:.2}x \
+         (target >= 4x on AVX2; gram end-to-end {gram_arm_speedup:.2}x — \
+         per-entry exp stays scalar by design)"
+    );
     println!(
         "block vs scalar gram at 1 thread: {speedup_1t:.2}x \
          (max rel gap {max_gap:.2e}; target >= 2x)"
     );
 
-    let json = obj(vec![
+    let mut pairs = vec![
         ("bench", s("perf_kernel")),
         ("rows", num(rows as f64)),
         ("dim", num(dim as f64)),
         ("cores", num(auto as f64)),
         ("threads_mt", num(threads_mt as f64)),
         ("gram_scalar_entries_per_s_1t", num(scalar_tp)),
+        ("gram_block_entries_per_s_scalar_1t", num(gram_tp_scalar_arm)),
         ("gram_block_entries_per_s_1t", num(block_tp_1t)),
         ("gram_block_vs_scalar_1t", num(speedup_1t)),
+        ("gram_simd_vs_scalar_block_1t", num(gram_arm_speedup)),
         ("gram_block_entries_per_s_mt", num(block_tp_mt)),
         ("gram_block_identical", Json::Bool(block_identical)),
+        ("gram_simd_bit_identical", Json::Bool(gram_simd_bit_identical)),
         ("gram_block_vs_scalar_close", Json::Bool(block_vs_scalar_close)),
         ("gram_block_vs_scalar_max_rel_gap", num(max_gap)),
+        ("dot_block_dots_per_s_scalar_1t", num(dot_tp_scalar)),
+        ("dot_block_dots_per_s_simd_1t", num(dot_tp_simd)),
+        ("dot_block_simd_vs_scalar_1t", num(dot_speedup)),
         ("score_rows_per_s_1t", num(score_tp[0])),
         ("score_rows_per_s_mt", num(score_tp[1])),
+        ("score_rows_per_s_f32_1t", num(score_tp_f32)),
         ("score_bit_identical", Json::Bool(score_identical)),
-    ]);
+    ];
+    pairs.extend(isa_provenance());
+    let json = obj(pairs);
     emit_text("BENCH_perf_kernel.json", &json.to_string_pretty());
     println!("wrote results/BENCH_perf_kernel.json");
 }

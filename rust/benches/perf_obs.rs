@@ -102,7 +102,7 @@ fn main() {
     emit("perf_obs", &t);
 
     // machine-readable summary for the CI bench-smoke gate
-    let json = obj(vec![
+    let mut pairs = vec![
         ("bench", s("perf_obs")),
         ("rows", num(rows as f64)),
         ("disabled_span_ns", num(disabled_span_ns)),
@@ -111,7 +111,9 @@ fn main() {
         ("train_on_ms", num(m_on.mean * 1e3)),
         ("overhead_frac", num(overhead_frac)),
         ("overhead_lt_1pct", Json::Bool(overhead_frac < 0.01)),
-    ]);
+    ];
+    pairs.extend(fastsvdd::bench::isa_provenance());
+    let json = obj(pairs);
     emit_text("BENCH_perf_obs.json", &json.to_string_pretty());
     println!("wrote results/BENCH_perf_obs.json");
     println!("wrote {} (example run log)", log_path.display());

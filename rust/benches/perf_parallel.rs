@@ -159,6 +159,7 @@ fn main() {
         ("k1_r2", num(k1.model.r2())),
         ("k4_r2", num(k4.model.r2())),
     ]);
+    fields.extend(fastsvdd::bench::isa_provenance());
     let json = obj(fields);
     emit_text("BENCH_perf_parallel.json", &json.to_string_pretty());
     println!("wrote results/BENCH_perf_parallel.json");

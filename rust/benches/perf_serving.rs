@@ -118,7 +118,7 @@ fn main() {
     }
     emit("perf_serving", &t);
 
-    let json = obj(vec![
+    let mut pairs = vec![
         ("bench", s("perf_serving")),
         ("conns_lo", num(conns_lo as f64)),
         ("conns_hi", num(conns_hi as f64)),
@@ -133,7 +133,9 @@ fn main() {
         ("p99_threaded_hi_us", num(p99(&lat_thr_hi))),
         ("edge_vs_threaded_hi", num(rps_edge_hi / rps_thr_hi)),
         ("scores_bit_identical", Json::Bool(identical)),
-    ]);
+    ];
+    pairs.extend(fastsvdd::bench::isa_provenance());
+    let json = obj(pairs);
     emit_text("BENCH_perf_serving.json", &json.to_string_pretty());
     println!("wrote results/BENCH_perf_serving.json");
     assert!(identical, "a served score diverged from the local engine");

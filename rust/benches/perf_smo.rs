@@ -157,7 +157,7 @@ fn main() {
         warm_iter_reduction, cold_out.solver.smo_iterations, warm_out.solver.smo_iterations
     );
 
-    let json = obj(vec![
+    let mut pairs = vec![
         ("bench", s("perf_smo")),
         ("full_rows", num(rows as f64)),
         ("full_dim", num(dim as f64)),
@@ -179,7 +179,9 @@ fn main() {
         ("warm_run_s", num(m_warm.mean)),
         ("warm_r2_rel_gap", num(warm_r2_rel_gap)),
         ("warm_matches_cold_r2", Json::Bool(warm_matches_cold_r2)),
-    ]);
+    ];
+    pairs.extend(fastsvdd::bench::isa_provenance());
+    let json = obj(pairs);
     emit_text("BENCH_perf_smo.json", &json.to_string_pretty());
     println!("wrote results/BENCH_perf_smo.json");
 }

@@ -96,6 +96,18 @@ pub fn artifacts_available(dir: &Path) -> bool {
     dir.join("manifest.json").exists()
 }
 
+/// Provenance pairs every perf bench stamps into its JSON artifact: the
+/// dispatched kernel ISA arm and the build's target arch. The CI gate
+/// reads these to prove SIMD actually engaged on the runner
+/// (`ci/check_perf.py --forbid-scalar-isa`).
+pub fn isa_provenance() -> Vec<(&'static str, crate::util::json::Json)> {
+    use crate::util::json::s;
+    vec![
+        ("isa", s(crate::linalg::isa::selected_name())),
+        ("arch", s(std::env::consts::ARCH)),
+    ]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

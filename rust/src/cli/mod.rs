@@ -172,6 +172,15 @@ COMMON OPTIONS (train):
                               (Gram rows, SMO kernel columns, batch scoring;
                               default auto = all cores). Results are
                               bit-identical at any thread count.
+    --isa <arm>               kernel microkernel ISA: auto (default) |
+                              avx2 | fma | neon | scalar. auto picks the
+                              best bit-identical arm for the host (AVX2
+                              on x86-64, NEON on aarch64); avx2/neon/
+                              scalar are bit-identical to each other,
+                              fma is opt-in only (fused rounding changes
+                              low bits). FASTSVDD_ISA=<arm> sets the
+                              same knob; an explicit unavailable --isa
+                              is an error.
     --seed <u64>              RNG seed
     --out <model.json>        save the trained model
     --trace <csv>             write the R^2 iteration trace (Fig 7)
@@ -182,9 +191,16 @@ COMMON OPTIONS (train):
 
 score:
     --model <model.json> --data <name> --rows <n> [--xla] [--artifacts <dir>]
-    [--threads auto|n] [--config <file.json>]
+    [--threads auto|n] [--isa <arm>] [--precision f64|f32]
+    [--config <file.json>]
     (data/rows/seed/scorer default to the RunConfig defaults, so score
     and train share one config file)
+    --precision f32           score through the narrowed f32 panel path
+                              (same precision as the XLA boundary,
+                              without the runtime). Distances carry a
+                              documented relative-error bound vs the
+                              f64 reference; thresholding still uses
+                              the exact f64 R^2. Default f64.
 
 worker:
     --listen <addr:port>

@@ -113,6 +113,16 @@ pub struct RunConfig {
     /// Worker threads for the shared parallel pool (`"auto"` or N).
     pub threads: ThreadCount,
     pub seed: u64,
+    /// Kernel-microkernel ISA arm (`auto` resolves `FASTSVDD_ISA` then
+    /// hardware detection; the launcher installs it process-wide via
+    /// [`crate::linalg::isa::install`]). `avx2`/`neon` are bit-identical
+    /// to `scalar`; `fma` relaxes bit-identity and is never picked by
+    /// `auto`.
+    pub isa: crate::linalg::Isa,
+    /// Scoring precision: `"f64"` (reference) or `"f32"` (opt-in panel
+    /// path — the XLA boundary's precision as a native engine;
+    /// tolerance-only contract, see [`crate::svdd::ModelF32`]).
+    pub precision: String,
     /// "native" | "xla" (scoring engine).
     pub scorer: String,
     pub artifact_dir: String,
@@ -148,6 +158,8 @@ impl Default for RunConfig {
             shuffle_seed: None,
             threads: ThreadCount::Auto,
             seed: 7,
+            isa: crate::linalg::Isa::Auto,
+            precision: "f64".into(),
             scorer: "native".into(),
             artifact_dir: "artifacts".into(),
             http: false,
@@ -223,6 +235,12 @@ impl RunConfig {
             cfg.threads = ThreadCount::parse(v)?;
         }
         cfg.seed = args.get_u64("seed", cfg.seed)?;
+        if let Some(v) = args.get("isa") {
+            cfg.isa = crate::linalg::Isa::parse(v)?;
+        }
+        if let Some(v) = args.get("precision") {
+            cfg.precision = v.to_string();
+        }
         if args.flag("warm-alpha") {
             cfg.warm_alpha = true;
         }
@@ -286,6 +304,8 @@ impl RunConfig {
                     }
                 }
                 "seed" => cfg.seed = req_num(val, key)? as u64,
+                "isa" => cfg.isa = crate::linalg::Isa::parse(&req_str(val, key)?)?,
+                "precision" => cfg.precision = req_str(val, key)?,
                 "scorer" => cfg.scorer = req_str(val, key)?,
                 "artifact_dir" => cfg.artifact_dir = req_str(val, key)?,
                 "http" => cfg.http = req_bool(val, key)?,
@@ -331,6 +351,12 @@ impl RunConfig {
         }
         if !matches!(self.scorer.as_str(), "native" | "xla") {
             return Err(Error::Config(format!("unknown scorer '{}'", self.scorer)));
+        }
+        if !matches!(self.precision.as_str(), "f64" | "f32") {
+            return Err(Error::Config(format!(
+                "unknown precision '{}' (expected f64|f32)",
+                self.precision
+            )));
         }
         if self.batch_window_us == 0 {
             return Err(Error::Config("batch_window_us must be >= 1".into()));
@@ -547,6 +573,38 @@ mod tests {
         assert!(RunConfig::from_json_text(r#"{"max_conns": 0}"#).is_err());
         assert!(RunConfig::from_json_text(r#"{"http": "yes"}"#).is_err());
         let bad: Vec<String> = ["serve", "--max-conns", "0"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        assert!(RunConfig::from_args(&Args::parse(&bad).unwrap()).is_err());
+    }
+
+    #[test]
+    fn isa_and_precision_keys_parse_and_flow() {
+        use crate::linalg::Isa;
+        // defaults: auto dispatch, f64 reference precision
+        let d = RunConfig::default();
+        assert_eq!(d.isa, Isa::Auto);
+        assert_eq!(d.precision, "f64");
+        // JSON spellings
+        let cfg =
+            RunConfig::from_json_text(r#"{"isa": "scalar", "precision": "f32"}"#).unwrap();
+        assert_eq!(cfg.isa, Isa::Scalar);
+        assert_eq!(cfg.precision, "f32");
+        // CLI spellings override on top
+        let argv: Vec<String> = ["score", "--isa", "fma", "--precision", "f32"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let cfg = RunConfig::from_args(&Args::parse(&argv).unwrap()).unwrap();
+        assert_eq!(cfg.isa, Isa::Fma);
+        assert_eq!(cfg.precision, "f32");
+        // bad spellings rejected at parse/validate time (arm
+        // *availability* is checked at install, not here — a config
+        // written on an x86 box must still parse on an arm box)
+        assert!(RunConfig::from_json_text(r#"{"isa": "sse9"}"#).is_err());
+        assert!(RunConfig::from_json_text(r#"{"precision": "f16"}"#).is_err());
+        let bad: Vec<String> = ["score", "--precision", "f128"]
             .iter()
             .map(|s| s.to_string())
             .collect();

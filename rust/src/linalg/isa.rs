@@ -1,0 +1,270 @@
+//! Runtime ISA dispatch for the kernel microkernel.
+//!
+//! The block compute layer ([`crate::linalg`]) has one portable scalar
+//! implementation plus explicit-SIMD arms written against `core::arch`.
+//! Which arm runs is a **process-global** selection resolved once and
+//! cached in an atomic, so the per-[`crate::linalg::dot`] dispatch cost
+//! is a single relaxed load:
+//!
+//! | arm      | arch     | availability            | f64 bits vs scalar |
+//! |----------|----------|-------------------------|--------------------|
+//! | `scalar` | any      | always                  | reference          |
+//! | `avx2`   | x86_64   | runtime-detected        | **bit-identical**  |
+//! | `fma`    | x86_64   | runtime-detected        | differs (fused)    |
+//! | `neon`   | aarch64  | baseline (always)       | **bit-identical**  |
+//!
+//! `avx2` and `neon` keep the fixed-summation-order contract bit for bit
+//! (see [`crate::linalg::dot`]); `fma` fuses multiply-add (one rounding
+//! per term instead of two) and is therefore **never auto-selected** —
+//! it must be requested explicitly via `--isa fma` / `FASTSVDD_ISA=fma`.
+//!
+//! ## Resolution precedence
+//!
+//! 1. explicit [`install`] (CLI `--isa` / config `"isa"`), when not
+//!    `auto` — an unavailable explicit request is a hard error;
+//! 2. the `FASTSVDD_ISA` environment variable (test / CI escape hatch,
+//!    e.g. `FASTSVDD_ISA=scalar cargo test`) — an unrecognized or
+//!    unavailable value falls back to detection rather than erroring,
+//!    so a stale env var can never take a host down;
+//! 3. auto-detection: best *bit-identical* arm for the host
+//!    (x86_64 + AVX2 → `avx2`, aarch64 → `neon`, else `scalar`).
+
+use crate::error::Error;
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// A dispatchable microkernel arm (or `Auto`, the "let the library
+/// pick" request value used by config / CLI — [`selected`] never
+/// resolves to it).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Isa {
+    /// Resolve via `FASTSVDD_ISA` then hardware detection.
+    Auto,
+    /// Portable unrolled loop — the reference summation order.
+    Scalar,
+    /// x86_64 AVX2, mul+add (bit-identical to scalar).
+    Avx2,
+    /// x86_64 AVX2+FMA, fused multiply-add (opt-in, relaxes bits).
+    Fma,
+    /// aarch64 NEON, mul+add (bit-identical to scalar).
+    Neon,
+}
+
+/// All concrete (non-`Auto`) arms, in display order.
+pub const ALL: [Isa; 4] = [Isa::Scalar, Isa::Avx2, Isa::Fma, Isa::Neon];
+
+impl Isa {
+    /// Canonical lowercase name (the `--isa` / `FASTSVDD_ISA` spelling).
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Auto => "auto",
+            Isa::Scalar => "scalar",
+            Isa::Avx2 => "avx2",
+            Isa::Fma => "fma",
+            Isa::Neon => "neon",
+        }
+    }
+
+    /// Parse a `--isa` / config / env spelling.
+    pub fn parse(s: &str) -> Result<Isa, Error> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "auto" => Ok(Isa::Auto),
+            "scalar" => Ok(Isa::Scalar),
+            "avx2" => Ok(Isa::Avx2),
+            "fma" => Ok(Isa::Fma),
+            "neon" => Ok(Isa::Neon),
+            other => Err(Error::InvalidInput(format!(
+                "unknown isa '{other}' (expected auto|avx2|fma|neon|scalar)"
+            ))),
+        }
+    }
+
+    /// Can this arm run on the current host? `Auto` and `Scalar` always
+    /// can; SIMD arms require the right architecture and (on x86_64)
+    /// runtime CPU feature detection. NEON is part of the aarch64
+    /// baseline, so on aarch64 it is unconditionally available.
+    pub fn available(self) -> bool {
+        match self {
+            Isa::Auto | Isa::Scalar => true,
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx2 => is_x86_feature_detected!("avx2"),
+            #[cfg(target_arch = "x86_64")]
+            Isa::Fma => {
+                is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+            }
+            #[cfg(target_arch = "aarch64")]
+            Isa::Neon => true,
+            #[allow(unreachable_patterns)]
+            _ => false,
+        }
+    }
+}
+
+impl std::fmt::Display for Isa {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Cached selection. 0 = unresolved; otherwise `encode(arm) `.
+static SELECTED: AtomicU8 = AtomicU8::new(0);
+
+fn encode(isa: Isa) -> u8 {
+    match isa {
+        Isa::Scalar => 1,
+        Isa::Avx2 => 2,
+        Isa::Fma => 3,
+        Isa::Neon => 4,
+        Isa::Auto => 0,
+    }
+}
+
+fn decode(v: u8) -> Option<Isa> {
+    match v {
+        1 => Some(Isa::Scalar),
+        2 => Some(Isa::Avx2),
+        3 => Some(Isa::Fma),
+        4 => Some(Isa::Neon),
+        _ => None,
+    }
+}
+
+/// Best bit-identical arm for this host (never `Fma` — fused rounding
+/// must be opted into explicitly).
+pub fn detect() -> Isa {
+    detect_impl()
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detect_impl() -> Isa {
+    if Isa::Avx2.available() {
+        Isa::Avx2
+    } else {
+        Isa::Scalar
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn detect_impl() -> Isa {
+    Isa::Neon
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn detect_impl() -> Isa {
+    Isa::Scalar
+}
+
+/// `FASTSVDD_ISA`, if set to a recognized **and available** arm.
+/// Anything else (unset, unknown spelling, arm the host cannot run)
+/// yields `None` so resolution falls through to [`detect`].
+fn from_env() -> Option<Isa> {
+    let raw = std::env::var("FASTSVDD_ISA").ok()?;
+    match Isa::parse(&raw) {
+        Ok(Isa::Auto) => None,
+        Ok(isa) if isa.available() => Some(isa),
+        _ => None,
+    }
+}
+
+fn resolve_auto() -> Isa {
+    from_env().unwrap_or_else(detect)
+}
+
+/// Install the microkernel arm for this process. `Auto` re-runs the
+/// env-then-detect resolution; a concrete arm must be available on this
+/// host or the call fails with [`Error::InvalidInput`] (an explicit
+/// `--isa avx2` on a machine without AVX2 is a misconfiguration, not
+/// something to paper over). Returns the arm actually selected.
+///
+/// Benches call this repeatedly to force specific arms; production
+/// callers install once at startup ([`crate::config::RunConfig::isa`]).
+pub fn install(requested: Isa) -> Result<Isa, Error> {
+    let arm = match requested {
+        Isa::Auto => resolve_auto(),
+        isa if isa.available() => isa,
+        isa => {
+            return Err(Error::InvalidInput(format!(
+                "isa '{isa}' is not available on this host \
+                 (arch {}; use --isa auto)",
+                std::env::consts::ARCH
+            )))
+        }
+    };
+    SELECTED.store(encode(arm), Ordering::Relaxed);
+    Ok(arm)
+}
+
+/// The currently selected arm, resolving lazily on first use (so
+/// library consumers that never touch config still dispatch to the best
+/// bit-identical arm, and `FASTSVDD_ISA=scalar cargo test` covers the
+/// fallback path with zero plumbing).
+#[inline]
+pub fn selected() -> Isa {
+    match decode(SELECTED.load(Ordering::Relaxed)) {
+        Some(isa) => isa,
+        None => {
+            let isa = resolve_auto();
+            SELECTED.store(encode(isa), Ordering::Relaxed);
+            isa
+        }
+    }
+}
+
+/// [`selected`]'s canonical name — what obs spans, metrics and
+/// `BENCH_*.json` record.
+#[inline]
+pub fn selected_name() -> &'static str {
+    selected().name()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrips_all_names() {
+        for isa in ALL.iter().copied().chain([Isa::Auto]) {
+            assert_eq!(Isa::parse(isa.name()).unwrap(), isa);
+        }
+        assert_eq!(Isa::parse(" AVX2 ").unwrap(), Isa::Avx2);
+        assert!(Isa::parse("sse9").is_err());
+    }
+
+    #[test]
+    fn scalar_and_auto_always_available() {
+        assert!(Isa::Scalar.available());
+        assert!(Isa::Auto.available());
+    }
+
+    #[test]
+    fn detect_never_returns_fma_or_auto() {
+        let d = detect();
+        assert_ne!(d, Isa::Fma);
+        assert_ne!(d, Isa::Auto);
+        assert!(d.available());
+    }
+
+    #[test]
+    fn install_scalar_then_best_roundtrips() {
+        // Serialize against other tests via the global: install is
+        // process-global, so leave the best arm behind when done.
+        assert_eq!(install(Isa::Scalar).unwrap(), Isa::Scalar);
+        assert_eq!(selected(), Isa::Scalar);
+        let best = install(Isa::Auto).unwrap();
+        assert_eq!(selected(), best);
+        assert_ne!(best, Isa::Fma);
+    }
+
+    #[test]
+    fn install_unavailable_arm_is_an_error() {
+        // At least one of avx2/neon is foreign on any single host.
+        let foreign = if cfg!(target_arch = "x86_64") {
+            Isa::Neon
+        } else {
+            Isa::Avx2
+        };
+        assert!(!foreign.available());
+        assert!(install(foreign).is_err());
+        // The failed install must not clobber the selection.
+        assert!(selected().available());
+    }
+}

@@ -1,5 +1,6 @@
 //! Batched kernel-compute substrate: cached squared row norms and a
-//! tile-blocked panel-dot microkernel.
+//! tile-blocked panel-dot microkernel with runtime-dispatched
+//! explicit-SIMD arms.
 //!
 //! Every kernel the library evaluates reduces to row dot products:
 //!
@@ -14,9 +15,22 @@
 //! `||a - b||^2` with a latency-bound subtract-square-accumulate loop on
 //! every call. This module instead caches `||x||^2` per row once
 //! ([`NormCache`]) and evaluates whole panels of pairwise dots with a
-//! fixed-order unrolled kernel ([`dot_block`]) the compiler can
-//! vectorize — turning Gram construction, SMO kernel columns and batch
-//! scoring into GEMM-shaped row-panel sweeps.
+//! fixed-order microkernel ([`dot_block`]) — turning Gram construction,
+//! SMO kernel columns and batch scoring into GEMM-shaped row-panel
+//! sweeps.
+//!
+//! ## ISA dispatch
+//!
+//! [`dot`], [`dot_block`], [`NormCache`] and the f32 panel path
+//! dispatch at runtime (see [`isa`]) to one of: the portable unrolled
+//! scalar loop (the reference), an x86_64 AVX2 arm, an x86_64 AVX2+FMA
+//! arm, or an aarch64 NEON arm. The AVX2 and NEON f64 arms reproduce
+//! the scalar summation order **bit for bit** (see `simd.rs` for the
+//! lane mapping), so auto-dispatch never changes a result — only FMA
+//! (explicitly requested) relaxes bit-identity by fusing each
+//! multiply-add into one rounding. Arm-forcing entry points
+//! ([`dot_on`], [`dot_block_on`], [`dot_f32_on`]) exist so tests and
+//! benches can pin arms regardless of the global selection.
 //!
 //! ## Determinism policy
 //!
@@ -28,7 +42,7 @@
 //!   accumulators combined as `(s0+s1)+(s2+s3)`, then the tail in
 //!   order). [`dot_block`] and [`NormCache`] are defined in terms of it,
 //!   so a dot computed inside a 1x1 panel equals the same dot inside a
-//!   512-row panel, bit for bit.
+//!   512-row panel, bit for bit — on every bit-identical arm.
 //! - `dot(a, b) == dot(b, a)` exactly (per-term products commute, the
 //!   summation order is positional), and the Gaussian combination
 //!   `(na - d) + (nb - d)` is an IEEE addition of the same two values in
@@ -46,8 +60,26 @@
 //! to ~1e150 are exercised by the property tests); catastrophic
 //! cancellation for near-identical rows is clamped at zero, which the
 //! Gaussian maps to `K = 1` — the correct limit.
+//!
+//! ## Opt-in f32 panels
+//!
+//! [`dot_f32`] / [`dot_block_f32`] / [`norms_f32`] mirror the f64 API
+//! over flat `f32` buffers for the `--precision f32` scoring path and
+//! the XLA/AOT boundary (which is f32 end to end). f32 results are
+//! **never** bit-compared against f64 — the contract is a relative
+//! error bound only: for rows of length `n`, the dot error is at most
+//! `(n + 2) * 2^-24 * sum_k |a_k * b_k|` (n−1 adds + 1 product rounding
+//! per term + the f64→f32 input conversions), property-tested in
+//! `tests/simd_dispatch.rs`. Within f32, all mul+add arms (scalar
+//! 8-accumulator reference, AVX2, NEON) share one summation order and
+//! stay bit-identical to each other.
 
 use crate::util::matrix::Matrix;
+
+pub mod isa;
+pub(crate) mod simd;
+
+pub use isa::Isa;
 
 /// Rows of the `b` panel evaluated per register tile in [`dot_block`].
 /// Small enough that a tile of `TILE_J` rows x 64 features stays in L1
@@ -55,14 +87,14 @@ use crate::util::matrix::Matrix;
 /// overhead.
 pub const TILE_J: usize = 8;
 
-/// Fixed-order unrolled dot product — **the** per-pair summation order
-/// of the block compute layer. Four interleaved accumulators break the
-/// add dependency chain (the scalar bottleneck), combined as
-/// `(s0 + s1) + (s2 + s3)` plus an in-order tail; the order depends only
-/// on the row length, never on panel or tile geometry.
+/// Portable unrolled dot product — **the** per-pair summation order of
+/// the block compute layer and the reference every SIMD arm is measured
+/// against. Four interleaved accumulators break the add dependency
+/// chain (the scalar bottleneck), combined as `(s0 + s1) + (s2 + s3)`
+/// plus an in-order tail; the order depends only on the row length,
+/// never on panel or tile geometry.
 #[inline]
-pub fn dot(a: &[f64], b: &[f64]) -> f64 {
-    debug_assert_eq!(a.len(), b.len());
+pub fn dot_scalar(a: &[f64], b: &[f64]) -> f64 {
     let n = a.len().min(b.len());
     let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
     let quads = n / 4;
@@ -78,6 +110,63 @@ pub fn dot(a: &[f64], b: &[f64]) -> f64 {
         tail += a[k] * b[k];
     }
     ((s0 + s1) + (s2 + s3)) + tail
+}
+
+/// Runtime-dispatched fixed-order dot product (see [`dot_scalar`] for
+/// the summation order, [`isa`] for arm selection).
+///
+/// # Length contract
+///
+/// `a` and `b` must be the same length: mismatched rows are a caller
+/// bug and **panic in debug builds**. Release builds do not pay for the
+/// check; they truncate to the shorter row (every arm clamps its reads
+/// to `min(a.len(), b.len())`, so the release behavior is memory-safe
+/// and deterministic — but still a bug upstream).
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(
+        a.len(),
+        b.len(),
+        "linalg::dot: row length mismatch ({} vs {}); release builds truncate to the shorter row",
+        a.len(),
+        b.len()
+    );
+    match isa::selected() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: isa::selected() only returns Avx2/Fma after runtime
+        // CPU feature detection confirmed them on this host.
+        Isa::Avx2 => unsafe { simd::avx2::dot(a, b) },
+        #[cfg(target_arch = "x86_64")]
+        Isa::Fma => unsafe { simd::fma::dot(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is part of the aarch64 baseline.
+        Isa::Neon => unsafe { simd::neon::dot(a, b) },
+        _ => dot_scalar(a, b),
+    }
+}
+
+/// [`dot`] forced onto a specific arm — test/bench hook, bypassing the
+/// global selection. `Auto` means "whatever [`isa::selected`] says".
+///
+/// # Panics
+///
+/// If `which` is not available on this host ([`Isa::available`]).
+pub fn dot_on(which: Isa, a: &[f64], b: &[f64]) -> f64 {
+    assert!(
+        which.available(),
+        "isa '{which}' is not available on this host"
+    );
+    match which {
+        Isa::Scalar => dot_scalar(a, b),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: availability asserted above.
+        Isa::Avx2 => unsafe { simd::avx2::dot(a, b) },
+        #[cfg(target_arch = "x86_64")]
+        Isa::Fma => unsafe { simd::fma::dot(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { simd::neon::dot(a, b) },
+        _ => dot(a, b),
+    }
 }
 
 /// Squared distance from cached norms and a dot:
@@ -108,7 +197,8 @@ pub fn sqdist_from_norms(na: f64, nb: f64, d: f64) -> f64 {
 
 /// Cached squared euclidean norms `||x_i||^2` of every row of a matrix,
 /// computed with [`dot`] so they combine bit-consistently with
-/// [`dot_block`] panels.
+/// [`dot_block`] panels (and, because every bit-identical arm agrees
+/// with the scalar reference, identically under any dispatched arm).
 #[derive(Clone, Debug, PartialEq)]
 pub struct NormCache {
     norms: Vec<f64>,
@@ -148,10 +238,70 @@ impl NormCache {
 /// dot(a.row(a_rows.start + ia), b.row(b_rows.start + ib))`, row-major
 /// over the panel. Blocked over `b` in [`TILE_J`]-row tiles so a tile
 /// stays cache-hot while the `a` rows stream past it; per-entry values
-/// are exactly [`dot`] regardless of tiling (see the module's
-/// determinism policy). Ragged shapes (1x1, 1xn, non-multiples of the
-/// tile size, empty ranges) are all fine.
+/// are exactly [`dot`] regardless of tiling or dispatched arm (see the
+/// module's determinism policy). Ragged shapes (1x1, 1xn, non-multiples
+/// of the tile size, empty ranges) are all fine.
+///
+/// Dispatches once per panel, so the SIMD arms keep their whole inner
+/// loop inside one `#[target_feature]` region.
 pub fn dot_block(
+    a: &Matrix,
+    a_rows: std::ops::Range<usize>,
+    b: &Matrix,
+    b_rows: std::ops::Range<usize>,
+    out: &mut [f64],
+) {
+    debug_assert_eq!(a.cols(), b.cols());
+    debug_assert_eq!(out.len(), a_rows.len() * b_rows.len());
+    match isa::selected() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: isa::selected() only returns Avx2/Fma after runtime
+        // CPU feature detection confirmed them on this host.
+        Isa::Avx2 => unsafe { simd::avx2::dot_block(a, a_rows, b, b_rows, out) },
+        #[cfg(target_arch = "x86_64")]
+        Isa::Fma => unsafe { simd::fma::dot_block(a, a_rows, b, b_rows, out) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is part of the aarch64 baseline.
+        Isa::Neon => unsafe { simd::neon::dot_block(a, a_rows, b, b_rows, out) },
+        _ => dot_block_scalar(a, a_rows, b, b_rows, out),
+    }
+}
+
+/// [`dot_block`] forced onto a specific arm — test/bench hook. `Auto`
+/// means "whatever [`isa::selected`] says".
+///
+/// # Panics
+///
+/// If `which` is not available on this host ([`Isa::available`]).
+pub fn dot_block_on(
+    which: Isa,
+    a: &Matrix,
+    a_rows: std::ops::Range<usize>,
+    b: &Matrix,
+    b_rows: std::ops::Range<usize>,
+    out: &mut [f64],
+) {
+    assert!(
+        which.available(),
+        "isa '{which}' is not available on this host"
+    );
+    match which {
+        Isa::Scalar => dot_block_scalar(a, a_rows, b, b_rows, out),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: availability asserted above.
+        Isa::Avx2 => unsafe { simd::avx2::dot_block(a, a_rows, b, b_rows, out) },
+        #[cfg(target_arch = "x86_64")]
+        Isa::Fma => unsafe { simd::fma::dot_block(a, a_rows, b, b_rows, out) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { simd::neon::dot_block(a, a_rows, b, b_rows, out) },
+        _ => dot_block(a, a_rows, b, b_rows, out),
+    }
+}
+
+/// The portable panel walk (also the body of the `scalar` arm): tiles
+/// `b` in [`TILE_J`]-row blocks, evaluates each pair with
+/// [`dot_scalar`].
+fn dot_block_scalar(
     a: &Matrix,
     a_rows: std::ops::Range<usize>,
     b: &Matrix,
@@ -160,8 +310,6 @@ pub fn dot_block(
 ) {
     let (a0, la) = (a_rows.start, a_rows.len());
     let (b0, lb) = (b_rows.start, b_rows.len());
-    debug_assert_eq!(a.cols(), b.cols());
-    debug_assert_eq!(out.len(), la * lb);
     let mut jt = 0;
     while jt < lb {
         let jt_end = (jt + TILE_J).min(lb);
@@ -169,11 +317,162 @@ pub fn dot_block(
             let arow = a.row(a0 + ia);
             let row_out = &mut out[ia * lb..(ia + 1) * lb];
             for (jb, slot) in row_out.iter_mut().enumerate().take(jt_end).skip(jt) {
-                *slot = dot(arow, b.row(b0 + jb));
+                *slot = dot_scalar(arow, b.row(b0 + jb));
             }
         }
         jt = jt_end;
     }
+}
+
+// ---------------------------------------------------------------------
+// Opt-in f32 panel path (`--precision f32`; also the layout the XLA/AOT
+// boundary consumes). Tolerance-only contract vs f64 — see the module
+// docs for the error bound.
+// ---------------------------------------------------------------------
+
+/// Fixed-order f32 reference dot: eight interleaved accumulators
+/// combined `((s0+s1)+(s2+s3)) + ((s4+s5)+(s6+s7))` plus an in-order
+/// tail — the lane layout of one AVX2 `f32x8` accumulator (or two NEON
+/// `f32x4`), so the non-fused SIMD f32 arms are bit-identical to this
+/// reference.
+#[inline]
+pub fn dot_f32_scalar(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len().min(b.len());
+    let mut s = [0.0f32; 8];
+    let octs = n / 8;
+    for o in 0..octs {
+        let k = o * 8;
+        for (l, sl) in s.iter_mut().enumerate() {
+            *sl += a[k + l] * b[k + l];
+        }
+    }
+    let mut tail = 0.0f32;
+    for k in octs * 8..n {
+        tail += a[k] * b[k];
+    }
+    (((s[0] + s[1]) + (s[2] + s[3])) + ((s[4] + s[5]) + (s[6] + s[7]))) + tail
+}
+
+/// Runtime-dispatched f32 dot (same length contract as [`dot`]).
+#[inline]
+pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(
+        a.len(),
+        b.len(),
+        "linalg::dot_f32: row length mismatch ({} vs {}); release builds truncate",
+        a.len(),
+        b.len()
+    );
+    match isa::selected() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: isa::selected() only returns Avx2/Fma after runtime
+        // CPU feature detection confirmed them on this host.
+        Isa::Avx2 => unsafe { simd::avx2::dot_f32(a, b) },
+        #[cfg(target_arch = "x86_64")]
+        Isa::Fma => unsafe { simd::fma::dot_f32(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is part of the aarch64 baseline.
+        Isa::Neon => unsafe { simd::neon::dot_f32(a, b) },
+        _ => dot_f32_scalar(a, b),
+    }
+}
+
+/// [`dot_f32`] forced onto a specific arm — test/bench hook.
+///
+/// # Panics
+///
+/// If `which` is not available on this host ([`Isa::available`]).
+pub fn dot_f32_on(which: Isa, a: &[f32], b: &[f32]) -> f32 {
+    assert!(
+        which.available(),
+        "isa '{which}' is not available on this host"
+    );
+    match which {
+        Isa::Scalar => dot_f32_scalar(a, b),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: availability asserted above.
+        Isa::Avx2 => unsafe { simd::avx2::dot_f32(a, b) },
+        #[cfg(target_arch = "x86_64")]
+        Isa::Fma => unsafe { simd::fma::dot_f32(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { simd::neon::dot_f32(a, b) },
+        _ => dot_f32(a, b),
+    }
+}
+
+/// f32 panel of pairwise dots over flat row-major buffers: `a` is
+/// `ra x cols`, `b` is `rb x cols`, `out[ia * rb + ib] =
+/// dot_f32(a_row(ia), b_row(ib))`. Same tiling and per-entry purity as
+/// [`dot_block`]; dispatches once per panel.
+pub fn dot_block_f32(a: &[f32], b: &[f32], cols: usize, out: &mut [f32]) {
+    if cols == 0 {
+        debug_assert!(out.is_empty());
+        return;
+    }
+    debug_assert_eq!(a.len() % cols, 0);
+    debug_assert_eq!(b.len() % cols, 0);
+    debug_assert_eq!(out.len(), (a.len() / cols) * (b.len() / cols));
+    match isa::selected() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: isa::selected() only returns Avx2/Fma after runtime
+        // CPU feature detection confirmed them on this host.
+        Isa::Avx2 => unsafe { simd::avx2::dot_block_f32(a, b, cols, out) },
+        #[cfg(target_arch = "x86_64")]
+        Isa::Fma => unsafe { simd::fma::dot_block_f32(a, b, cols, out) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is part of the aarch64 baseline.
+        Isa::Neon => unsafe { simd::neon::dot_block_f32(a, b, cols, out) },
+        _ => dot_block_f32_scalar(a, b, cols, out),
+    }
+}
+
+/// The portable f32 panel walk (the `scalar` arm of
+/// [`dot_block_f32`]).
+fn dot_block_f32_scalar(a: &[f32], b: &[f32], cols: usize, out: &mut [f32]) {
+    let ra = a.len() / cols;
+    let rb = b.len() / cols;
+    let mut jt = 0;
+    while jt < rb {
+        let jt_end = (jt + TILE_J).min(rb);
+        for ia in 0..ra {
+            let arow = &a[ia * cols..(ia + 1) * cols];
+            let row_out = &mut out[ia * rb..(ia + 1) * rb];
+            for (j, slot) in row_out.iter_mut().enumerate().take(jt_end).skip(jt) {
+                *slot = dot_f32_scalar(arow, &b[j * cols..(j + 1) * cols]);
+            }
+        }
+        jt = jt_end;
+    }
+}
+
+/// Row norms `||x_i||^2` of a flat row-major f32 buffer, computed with
+/// [`dot_f32`] so they combine consistently with [`dot_block_f32`]
+/// panels.
+pub fn norms_f32(data: &[f32], cols: usize) -> Vec<f32> {
+    if cols == 0 {
+        return Vec::new();
+    }
+    debug_assert_eq!(data.len() % cols, 0);
+    (0..data.len() / cols)
+        .map(|i| {
+            let row = &data[i * cols..(i + 1) * cols];
+            dot_f32(row, row)
+        })
+        .collect()
+}
+
+/// f32 mirror of [`sqdist_from_norms`]: same grouping, same clamp, same
+/// NaN / `inf - inf` policy.
+#[inline]
+pub fn sqdist_from_norms_f32(na: f32, nb: f32, d: f32) -> f32 {
+    let s = (na - d) + (nb - d);
+    if s.is_nan() {
+        if na.is_nan() || nb.is_nan() || d.is_nan() {
+            return f32::NAN;
+        }
+        return f32::INFINITY;
+    }
+    s.max(0.0)
 }
 
 #[cfg(test)]
@@ -216,6 +515,45 @@ mod tests {
                     let ab = dot(m.row(i), m.row(j));
                     let ba = dot(m.row(j), m.row(i));
                     assert_eq!(ab.to_bits(), ba.to_bits(), "cols={cols} i={i} j={j}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "row length mismatch")]
+    fn dot_mismatched_lengths_panics_in_debug() {
+        let a = [1.0, 2.0, 3.0];
+        let b = [1.0, 2.0];
+        let _ = dot(&a, &b);
+    }
+
+    #[test]
+    fn dot_scalar_release_contract_truncates_to_shorter_row() {
+        // The documented release behavior of the length contract: every
+        // arm clamps reads to min(len). Exercised via the scalar
+        // reference directly (the dispatched `dot` debug-panics first
+        // in test builds, by design).
+        let a = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let b = [2.0, 2.0, 2.0];
+        assert_eq!(dot_scalar(&a, &b), 12.0);
+        assert_eq!(dot_scalar(&b, &a), 12.0);
+    }
+
+    #[test]
+    fn dispatched_dot_matches_scalar_reference_bitwise() {
+        // Whatever arm the host auto-selects (never FMA) must agree
+        // with the scalar reference bit for bit, on every length class.
+        for cols in [0usize, 1, 2, 3, 4, 5, 7, 8, 9, 41, 64, 65] {
+            let m = random(4, cols.max(1), 7 + cols as u64);
+            for i in 0..4 {
+                for j in 0..4 {
+                    let a = &m.row(i)[..cols.min(m.cols())];
+                    let b = &m.row(j)[..cols.min(m.cols())];
+                    let want = dot_scalar(a, b);
+                    let got = dot(a, b);
+                    assert_eq!(got.to_bits(), want.to_bits(), "cols={cols} ({i},{j})");
                 }
             }
         }
@@ -316,5 +654,54 @@ mod tests {
                 assert!(s >= 0.0);
             }
         }
+    }
+
+    #[test]
+    fn dot_f32_dispatch_matches_f32_reference_bitwise() {
+        let mut rng = Xoshiro256::new(42);
+        for cols in [0usize, 1, 3, 7, 8, 9, 16, 41, 65] {
+            let a: Vec<f32> = (0..cols).map(|_| rng.normal() as f32).collect();
+            let b: Vec<f32> = (0..cols).map(|_| rng.normal() as f32).collect();
+            let want = dot_f32_scalar(&a, &b);
+            let got = dot_f32(&a, &b);
+            assert_eq!(got.to_bits(), want.to_bits(), "cols={cols}");
+        }
+    }
+
+    #[test]
+    fn dot_block_f32_matches_per_pair_bitwise() {
+        let mut rng = Xoshiro256::new(43);
+        let (ra, rb, cols) = (5, 11, 9);
+        let a: Vec<f32> = (0..ra * cols).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..rb * cols).map(|_| rng.normal() as f32).collect();
+        let mut out = vec![f32::NAN; ra * rb];
+        dot_block_f32(&a, &b, cols, &mut out);
+        for i in 0..ra {
+            for j in 0..rb {
+                let want = dot_f32(&a[i * cols..(i + 1) * cols], &b[j * cols..(j + 1) * cols]);
+                assert_eq!(out[i * rb + j].to_bits(), want.to_bits(), "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn norms_f32_and_sqdist_f32_mirror_f64_semantics() {
+        let mut rng = Xoshiro256::new(44);
+        let (rows, cols) = (6, 5);
+        let data: Vec<f32> = (0..rows * cols).map(|_| rng.normal() as f32).collect();
+        let norms = norms_f32(&data, cols);
+        assert_eq!(norms.len(), rows);
+        for (i, &nrm) in norms.iter().enumerate() {
+            let row = &data[i * cols..(i + 1) * cols];
+            assert_eq!(nrm.to_bits(), dot_f32(row, row).to_bits());
+            // identical rows -> exactly zero, same clamp as f64
+            assert_eq!(sqdist_from_norms_f32(nrm, nrm, nrm), 0.0);
+        }
+        assert!(sqdist_from_norms_f32(f32::NAN, 1.0, 0.5).is_nan());
+        assert_eq!(
+            sqdist_from_norms_f32(f32::INFINITY, f32::INFINITY, f32::INFINITY),
+            f32::INFINITY
+        );
+        assert!(norms_f32(&[], 0).is_empty());
     }
 }

@@ -1,0 +1,394 @@
+//! Explicit-SIMD arms of the kernel microkernel (`core::arch`), chosen
+//! at runtime by [`super::isa`]. Everything here is `unsafe fn` gated
+//! on `#[target_feature]`; the safe dispatchers in [`super`] only call
+//! an arm after [`super::isa::Isa::available`] confirmed the host
+//! supports it.
+//!
+//! ## Bit-identity mapping (f64, mul+add arms)
+//!
+//! The scalar reference [`super::dot_scalar`] keeps four interleaved
+//! accumulators `s0..s3` (stride-4 lanes) combined `(s0+s1)+(s2+s3)`
+//! plus an in-order tail. That is exactly one AVX2 `f64x4` accumulator
+//! updated with separate `mul`/`add` per quad — lane `l` of the vector
+//! IS `s_l` — or two NEON `f64x2` accumulators (lanes `s0,s1` and
+//! `s2,s3`). Extracting lanes and combining in the same tree therefore
+//! reproduces the scalar result **bit for bit**, IEEE-exactly, for
+//! every input including NaN/±inf/±1e150 (same multiplies, same adds,
+//! same order). The FMA arm replaces mul+add with `fmadd` (one rounding
+//! instead of two) so it is *not* bit-identical — it is opt-in via
+//! `--isa fma` and never auto-selected.
+//!
+//! The f32 reference ([`super::dot_f32_scalar`]) uses eight stride-8
+//! accumulators combined `((s0+s1)+(s2+s3)) + ((s4+s5)+(s6+s7))` — one
+//! AVX2 `f32x8` accumulator or two NEON `f32x4` — so the non-fused f32
+//! arms are likewise bit-identical to their scalar reference (accuracy
+//! vs f64 is a separate, tolerance-only contract).
+//!
+//! ## Panel microkernel
+//!
+//! The x86 block arms register-block the inner loop 4 wide over `b`
+//! rows: one shared `a`-row vector load feeds four *independent*
+//! per-pair accumulators ([`dot4`] inside each arm). Blocking never
+//! mixes accumulators across pairs, so per-entry bits are exactly the
+//! single-pair `dot` of the same arm; it exists purely to cut `a`-row
+//! load traffic 4x and keep four add chains in flight.
+
+// Fused vs separate multiply-add, selected per arm at expansion time.
+// `madd_*_sep` is two roundings (bit-identical to scalar); the fused
+// variants are one rounding (FMA arm only).
+#[cfg(target_arch = "x86_64")]
+macro_rules! madd_pd_sep {
+    ($acc:expr, $va:expr, $vb:expr) => {
+        _mm256_add_pd($acc, _mm256_mul_pd($va, $vb))
+    };
+}
+#[cfg(target_arch = "x86_64")]
+macro_rules! madd_pd_fused {
+    ($acc:expr, $va:expr, $vb:expr) => {
+        _mm256_fmadd_pd($va, $vb, $acc)
+    };
+}
+#[cfg(target_arch = "x86_64")]
+macro_rules! madd_ps_sep {
+    ($acc:expr, $va:expr, $vb:expr) => {
+        _mm256_add_ps($acc, _mm256_mul_ps($va, $vb))
+    };
+}
+#[cfg(target_arch = "x86_64")]
+macro_rules! madd_ps_fused {
+    ($acc:expr, $va:expr, $vb:expr) => {
+        _mm256_fmadd_ps($va, $vb, $acc)
+    };
+}
+// Scalar-tail multiply-add, same fused/separate split (works for both
+// f32 and f64 operands).
+#[cfg(target_arch = "x86_64")]
+macro_rules! tail_sep {
+    ($t:ident, $x:expr, $y:expr) => {
+        $t += $x * $y;
+    };
+}
+#[cfg(target_arch = "x86_64")]
+macro_rules! tail_fused {
+    ($t:ident, $x:expr, $y:expr) => {
+        $t = ($x).mul_add($y, $t);
+    };
+}
+
+/// Expands to one complete x86_64 arm module (`avx2` or `fma`): the
+/// two bodies differ only in the multiply-add idiom and the enabled
+/// target features.
+#[cfg(target_arch = "x86_64")]
+macro_rules! x86_arm {
+    ($arm:ident, $feat:literal, $madd_pd:ident, $madd_ps:ident, $tail:ident) => {
+        pub(crate) mod $arm {
+            use crate::linalg::TILE_J;
+            use crate::util::matrix::Matrix;
+            use core::arch::x86_64::*;
+            use std::ops::Range;
+
+            /// Lane extract + fixed combine `(l0+l1)+(l2+l3)`.
+            #[inline]
+            #[target_feature(enable = $feat)]
+            unsafe fn hsum4(v: __m256d) -> f64 {
+                let mut l = [0.0f64; 4];
+                _mm256_storeu_pd(l.as_mut_ptr(), v);
+                (l[0] + l[1]) + (l[2] + l[3])
+            }
+
+            /// Lane extract + fixed combine
+            /// `((l0+l1)+(l2+l3)) + ((l4+l5)+(l6+l7))`.
+            #[inline]
+            #[target_feature(enable = $feat)]
+            unsafe fn hsum8(v: __m256) -> f32 {
+                let mut l = [0.0f32; 8];
+                _mm256_storeu_ps(l.as_mut_ptr(), v);
+                ((l[0] + l[1]) + (l[2] + l[3])) + ((l[4] + l[5]) + (l[6] + l[7]))
+            }
+
+            /// Single-pair dot. Safety: caller must have verified the
+            /// arm's CPU features; reads are bounded by
+            /// `min(a.len(), b.len())`, so any slice pair is fine.
+            #[target_feature(enable = $feat)]
+            pub(crate) unsafe fn dot(a: &[f64], b: &[f64]) -> f64 {
+                let n = a.len().min(b.len());
+                let quads = n / 4;
+                let (pa, pb) = (a.as_ptr(), b.as_ptr());
+                let mut acc = _mm256_setzero_pd();
+                for q in 0..quads {
+                    let k = q * 4;
+                    let va = _mm256_loadu_pd(pa.add(k));
+                    let vb = _mm256_loadu_pd(pb.add(k));
+                    acc = $madd_pd!(acc, va, vb);
+                }
+                let mut t = 0.0f64;
+                for k in quads * 4..n {
+                    $tail!(t, *a.get_unchecked(k), *b.get_unchecked(k));
+                }
+                hsum4(acc) + t
+            }
+
+            /// Four pairs sharing one `a`-row load stream; accumulator
+            /// `j` is bit-for-bit the single-pair [`dot`] of
+            /// `(a, b_j)`. Safety: features checked by caller; all four
+            /// `b` rows must be at least `a.len()` long.
+            #[target_feature(enable = $feat)]
+            unsafe fn dot4(
+                a: &[f64],
+                b0: &[f64],
+                b1: &[f64],
+                b2: &[f64],
+                b3: &[f64],
+            ) -> [f64; 4] {
+                let n = a.len();
+                let quads = n / 4;
+                let pa = a.as_ptr();
+                let (p0, p1, p2, p3) = (b0.as_ptr(), b1.as_ptr(), b2.as_ptr(), b3.as_ptr());
+                let mut a0 = _mm256_setzero_pd();
+                let mut a1 = _mm256_setzero_pd();
+                let mut a2 = _mm256_setzero_pd();
+                let mut a3 = _mm256_setzero_pd();
+                for q in 0..quads {
+                    let k = q * 4;
+                    let va = _mm256_loadu_pd(pa.add(k));
+                    a0 = $madd_pd!(a0, va, _mm256_loadu_pd(p0.add(k)));
+                    a1 = $madd_pd!(a1, va, _mm256_loadu_pd(p1.add(k)));
+                    a2 = $madd_pd!(a2, va, _mm256_loadu_pd(p2.add(k)));
+                    a3 = $madd_pd!(a3, va, _mm256_loadu_pd(p3.add(k)));
+                }
+                let (mut t0, mut t1, mut t2, mut t3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+                for k in quads * 4..n {
+                    let av = *a.get_unchecked(k);
+                    $tail!(t0, av, *b0.get_unchecked(k));
+                    $tail!(t1, av, *b1.get_unchecked(k));
+                    $tail!(t2, av, *b2.get_unchecked(k));
+                    $tail!(t3, av, *b3.get_unchecked(k));
+                }
+                [
+                    hsum4(a0) + t0,
+                    hsum4(a1) + t1,
+                    hsum4(a2) + t2,
+                    hsum4(a3) + t3,
+                ]
+            }
+
+            /// Panel kernel: the scalar path's [`TILE_J`] tiling with a
+            /// 4-wide register-blocked inner microkernel. Safety:
+            /// features checked by caller; `out` indexing is
+            /// bounds-checked, row reads are clamped to the shorter of
+            /// the two matrices' widths.
+            #[target_feature(enable = $feat)]
+            pub(crate) unsafe fn dot_block(
+                a: &Matrix,
+                a_rows: Range<usize>,
+                b: &Matrix,
+                b_rows: Range<usize>,
+                out: &mut [f64],
+            ) {
+                let (a0, la) = (a_rows.start, a_rows.len());
+                let (b0, lb) = (b_rows.start, b_rows.len());
+                let n = a.cols().min(b.cols());
+                let mut jt = 0;
+                while jt < lb {
+                    let jt_end = (jt + TILE_J).min(lb);
+                    for ia in 0..la {
+                        let arow = &a.row(a0 + ia)[..n];
+                        let row_out = &mut out[ia * lb..(ia + 1) * lb];
+                        let mut j = jt;
+                        while j + 4 <= jt_end {
+                            let d = dot4(
+                                arow,
+                                &b.row(b0 + j)[..n],
+                                &b.row(b0 + j + 1)[..n],
+                                &b.row(b0 + j + 2)[..n],
+                                &b.row(b0 + j + 3)[..n],
+                            );
+                            row_out[j..j + 4].copy_from_slice(&d);
+                            j += 4;
+                        }
+                        while j < jt_end {
+                            row_out[j] = dot(arow, &b.row(b0 + j)[..n]);
+                            j += 1;
+                        }
+                    }
+                    jt = jt_end;
+                }
+            }
+
+            /// Single-pair f32 dot (one f32x8 accumulator). Safety:
+            /// features checked by caller; reads bounded by the shorter
+            /// slice.
+            #[target_feature(enable = $feat)]
+            pub(crate) unsafe fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+                let n = a.len().min(b.len());
+                let octs = n / 8;
+                let (pa, pb) = (a.as_ptr(), b.as_ptr());
+                let mut acc = _mm256_setzero_ps();
+                for o in 0..octs {
+                    let k = o * 8;
+                    let va = _mm256_loadu_ps(pa.add(k));
+                    let vb = _mm256_loadu_ps(pb.add(k));
+                    acc = $madd_ps!(acc, va, vb);
+                }
+                let mut t = 0.0f32;
+                for k in octs * 8..n {
+                    $tail!(t, *a.get_unchecked(k), *b.get_unchecked(k));
+                }
+                hsum8(acc) + t
+            }
+
+            /// f32 panel over flat row-major buffers (`a`: `ra x cols`,
+            /// `b`: `rb x cols`, `out`: `ra x rb`). Safety: features
+            /// checked by caller; all slice access is bounds-checked.
+            #[target_feature(enable = $feat)]
+            pub(crate) unsafe fn dot_block_f32(
+                a: &[f32],
+                b: &[f32],
+                cols: usize,
+                out: &mut [f32],
+            ) {
+                if cols == 0 {
+                    return;
+                }
+                let ra = a.len() / cols;
+                let rb = b.len() / cols;
+                let mut jt = 0;
+                while jt < rb {
+                    let jt_end = (jt + TILE_J).min(rb);
+                    for ia in 0..ra {
+                        let arow = &a[ia * cols..(ia + 1) * cols];
+                        let row_out = &mut out[ia * rb..(ia + 1) * rb];
+                        for (j, slot) in
+                            row_out.iter_mut().enumerate().take(jt_end).skip(jt)
+                        {
+                            *slot = dot_f32(arow, &b[j * cols..(j + 1) * cols]);
+                        }
+                    }
+                    jt = jt_end;
+                }
+            }
+        }
+    };
+}
+
+#[cfg(target_arch = "x86_64")]
+x86_arm!(avx2, "avx2", madd_pd_sep, madd_ps_sep, tail_sep);
+#[cfg(target_arch = "x86_64")]
+x86_arm!(fma, "avx2,fma", madd_pd_fused, madd_ps_fused, tail_fused);
+
+/// aarch64 NEON arm: NEON is part of the aarch64 baseline, so this arm
+/// is unconditionally available there. Two `f64x2` accumulators carry
+/// lanes `(s0,s1)` / `(s2,s3)` — bit-identical to the scalar reference.
+#[cfg(target_arch = "aarch64")]
+pub(crate) mod neon {
+    use crate::linalg::TILE_J;
+    use crate::util::matrix::Matrix;
+    use core::arch::aarch64::*;
+    use std::ops::Range;
+
+    /// Single-pair dot. Safety: NEON is baseline on aarch64; reads are
+    /// bounded by `min(a.len(), b.len())`.
+    #[target_feature(enable = "neon")]
+    pub(crate) unsafe fn dot(a: &[f64], b: &[f64]) -> f64 {
+        let n = a.len().min(b.len());
+        let quads = n / 4;
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        let mut acc01 = vdupq_n_f64(0.0);
+        let mut acc23 = vdupq_n_f64(0.0);
+        for q in 0..quads {
+            let k = q * 4;
+            acc01 = vaddq_f64(acc01, vmulq_f64(vld1q_f64(pa.add(k)), vld1q_f64(pb.add(k))));
+            acc23 = vaddq_f64(
+                acc23,
+                vmulq_f64(vld1q_f64(pa.add(k + 2)), vld1q_f64(pb.add(k + 2))),
+            );
+        }
+        let mut t = 0.0f64;
+        for k in quads * 4..n {
+            t += *a.get_unchecked(k) * *b.get_unchecked(k);
+        }
+        let s01 = vgetq_lane_f64::<0>(acc01) + vgetq_lane_f64::<1>(acc01);
+        let s23 = vgetq_lane_f64::<0>(acc23) + vgetq_lane_f64::<1>(acc23);
+        (s01 + s23) + t
+    }
+
+    /// Panel kernel: scalar tiling, per-pair NEON dot. Safety: NEON is
+    /// baseline on aarch64; `out` indexing is bounds-checked, row reads
+    /// clamped to the shorter width.
+    #[target_feature(enable = "neon")]
+    pub(crate) unsafe fn dot_block(
+        a: &Matrix,
+        a_rows: Range<usize>,
+        b: &Matrix,
+        b_rows: Range<usize>,
+        out: &mut [f64],
+    ) {
+        let (a0, la) = (a_rows.start, a_rows.len());
+        let (b0, lb) = (b_rows.start, b_rows.len());
+        let n = a.cols().min(b.cols());
+        let mut jt = 0;
+        while jt < lb {
+            let jt_end = (jt + TILE_J).min(lb);
+            for ia in 0..la {
+                let arow = &a.row(a0 + ia)[..n];
+                let row_out = &mut out[ia * lb..(ia + 1) * lb];
+                for (j, slot) in row_out.iter_mut().enumerate().take(jt_end).skip(jt) {
+                    *slot = dot(arow, &b.row(b0 + j)[..n]);
+                }
+            }
+            jt = jt_end;
+        }
+    }
+
+    /// Single-pair f32 dot: two `f32x4` accumulators carrying lanes
+    /// `s0..s3` / `s4..s7` of the f32 reference order. Safety: NEON is
+    /// baseline on aarch64; reads bounded by the shorter slice.
+    #[target_feature(enable = "neon")]
+    pub(crate) unsafe fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len().min(b.len());
+        let octs = n / 8;
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        let mut acc03 = vdupq_n_f32(0.0);
+        let mut acc47 = vdupq_n_f32(0.0);
+        for o in 0..octs {
+            let k = o * 8;
+            acc03 = vaddq_f32(acc03, vmulq_f32(vld1q_f32(pa.add(k)), vld1q_f32(pb.add(k))));
+            acc47 = vaddq_f32(
+                acc47,
+                vmulq_f32(vld1q_f32(pa.add(k + 4)), vld1q_f32(pb.add(k + 4))),
+            );
+        }
+        let mut t = 0.0f32;
+        for k in octs * 8..n {
+            t += *a.get_unchecked(k) * *b.get_unchecked(k);
+        }
+        let s03 = (vgetq_lane_f32::<0>(acc03) + vgetq_lane_f32::<1>(acc03))
+            + (vgetq_lane_f32::<2>(acc03) + vgetq_lane_f32::<3>(acc03));
+        let s47 = (vgetq_lane_f32::<0>(acc47) + vgetq_lane_f32::<1>(acc47))
+            + (vgetq_lane_f32::<2>(acc47) + vgetq_lane_f32::<3>(acc47));
+        (s03 + s47) + t
+    }
+
+    /// f32 panel over flat row-major buffers. Safety: NEON is baseline
+    /// on aarch64; all slice access is bounds-checked.
+    #[target_feature(enable = "neon")]
+    pub(crate) unsafe fn dot_block_f32(a: &[f32], b: &[f32], cols: usize, out: &mut [f32]) {
+        if cols == 0 {
+            return;
+        }
+        let ra = a.len() / cols;
+        let rb = b.len() / cols;
+        let mut jt = 0;
+        while jt < rb {
+            let jt_end = (jt + TILE_J).min(rb);
+            for ia in 0..ra {
+                let arow = &a[ia * cols..(ia + 1) * cols];
+                let row_out = &mut out[ia * rb..(ia + 1) * rb];
+                for (j, slot) in row_out.iter_mut().enumerate().take(jt_end).skip(jt) {
+                    *slot = dot_f32(arow, &b[j * cols..(j + 1) * cols]);
+                }
+            }
+            jt = jt_end;
+        }
+    }
+}

@@ -112,12 +112,13 @@ fn scoring_data(name: &str, rows: usize, seed: u64) -> Result<LabeledData> {
 fn cmd_train(args: &Args) -> Result<()> {
     args.expect_only(&[
         "config", "data", "rows", "method", "bw", "f", "sample-size", "max-iter",
-        "candidates", "workers", "shuffle-seed", "threads", "seed", "out", "trace",
-        "xla", "artifacts", "addrs", "registry", "promote", "warm-alpha", "wss",
-        "no-shrinking", "v", "log-json",
+        "candidates", "workers", "shuffle-seed", "threads", "isa", "seed", "out",
+        "trace", "xla", "artifacts", "addrs", "registry", "promote", "warm-alpha",
+        "wss", "no-shrinking", "v", "log-json",
     ])?;
     let cfg = RunConfig::from_args(args)?;
     parallel::install(cfg.parallelism());
+    fastsvdd::linalg::isa::install(cfg.isa)?;
     // tracing is opt-in: --log-json turns the span layer on and streams
     // every event as one JSON line (render later with `fastsvdd report`)
     if let Some(path) = args.get("log-json") {
@@ -127,13 +128,14 @@ fn cmd_train(args: &Args) -> Result<()> {
     let data = training_data(&cfg.dataset, cfg.rows, cfg.seed)?;
     let engine = Engine::from_config(&cfg)?;
     println!(
-        "training: data={} rows={} method={} kernel={} f={} threads={}",
+        "training: data={} rows={} method={} kernel={} f={} threads={} isa={}",
         cfg.dataset,
         data.rows(),
         cfg.method,
         cfg.params().kernel,
         cfg.outlier_fraction,
         parallel::global().threads(),
+        fastsvdd::linalg::isa::selected_name(),
     );
 
     // One uniform path for every method: sample/union grams go through
@@ -225,10 +227,12 @@ fn cmd_report(args: &Args) -> Result<()> {
 
 fn cmd_score(args: &Args) -> Result<()> {
     args.expect_only(&[
-        "config", "model", "data", "rows", "seed", "xla", "artifacts", "out", "threads",
+        "config", "model", "data", "rows", "seed", "xla", "artifacts", "out",
+        "threads", "isa", "precision",
     ])?;
     let cfg = RunConfig::from_args(args)?;
     parallel::install(cfg.parallelism());
+    fastsvdd::linalg::isa::install(cfg.isa)?;
     let model_path = args
         .get("model")
         .ok_or_else(|| Error::Config("--model required".into()))?;
@@ -240,6 +244,8 @@ fn cmd_score(args: &Args) -> Result<()> {
     let scorer = if cfg.scorer == "xla" {
         runtime = SharedRuntime::new(Path::new(&cfg.artifact_dir))?;
         Scorer::xla(&model, &runtime)
+    } else if cfg.precision == "f32" {
+        Scorer::native_f32(&model)
     } else {
         Scorer::native(&model)
     };
@@ -249,11 +255,13 @@ fn cmd_score(args: &Args) -> Result<()> {
     let f1 = F1Score::compute(&labeled.labels, &inside);
     let outliers = inside.iter().filter(|&&i| !i).count();
     println!(
-        "scored {} rows in {} ({:.0} rows/s, engine={}): outliers={} precision={:.4} recall={:.4} F1={:.4}",
+        "scored {} rows in {} ({:.0} rows/s, engine={} precision={} isa={}): outliers={} precision={:.4} recall={:.4} F1={:.4}",
         rows,
         fmt_duration(secs),
         rows as f64 / secs,
         if scorer.is_accelerated() { "xla" } else { "native" },
+        scorer.precision(),
+        fastsvdd::linalg::isa::selected_name(),
         outliers,
         f1.precision,
         f1.recall,
@@ -272,10 +280,12 @@ fn cmd_score(args: &Args) -> Result<()> {
 
 fn cmd_grid(args: &Args) -> Result<()> {
     args.expect_only(&[
-        "config", "model", "out", "xla", "artifacts", "nx", "ny", "margin", "threads",
+        "config", "model", "out", "xla", "artifacts", "nx", "ny", "margin",
+        "threads", "isa",
     ])?;
     let cfg = RunConfig::from_args(args)?;
     parallel::install(cfg.parallelism());
+    fastsvdd::linalg::isa::install(cfg.isa)?;
     let model_path = args
         .get("model")
         .ok_or_else(|| Error::Config("--model required".into()))?;
@@ -322,12 +332,13 @@ fn cmd_worker(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     args.expect_only(&[
         "model", "listen", "xla", "artifacts", "batch", "linger-ms", "registry",
-        "watch", "watch-interval-ms", "allow-remote-swap", "threads", "config",
-        "http", "batch-window-us", "max-inflight", "max-conns",
+        "watch", "watch-interval-ms", "allow-remote-swap", "threads", "isa",
+        "config", "http", "batch-window-us", "max-inflight", "max-conns",
     ])?;
     install_threads_arg(args)?;
     // serving knobs: config file < CLI overrides (RunConfig::from_args)
     let cfg = RunConfig::from_args(args)?;
+    fastsvdd::linalg::isa::install(cfg.isa)?;
     let registry = match args.get("registry") {
         Some(dir) => Some(Registry::open(dir)?),
         None => None,

@@ -395,6 +395,14 @@ impl Metrics {
              fastsvdd_queue_depth_rows {}\n",
             self.queue_depth.get()
         ));
+        // info-style gauge: which kernel microkernel ISA this process
+        // dispatches to (the value is always 1; the label is the datum)
+        out.push_str(&format!(
+            "# HELP fastsvdd_isa_info Selected kernel microkernel ISA \
+             arm\n# TYPE fastsvdd_isa_info gauge\n\
+             fastsvdd_isa_info{{isa=\"{}\"}} 1\n",
+            crate::linalg::isa::selected_name()
+        ));
         prom_histogram(
             &mut out,
             "fastsvdd_score_latency_seconds",
@@ -612,6 +620,15 @@ mod tests {
         assert!(text.contains("fastsvdd_rows_scored_total 12"));
         assert!(text.contains("# TYPE fastsvdd_smo_cache_hit_rate gauge"));
         assert!(text.contains("fastsvdd_smo_cache_hit_rate 0.75"));
+        // the ISA info gauge always reports exactly one selected arm
+        assert!(text.contains("# TYPE fastsvdd_isa_info gauge"));
+        assert!(
+            text.contains(&format!(
+                "fastsvdd_isa_info{{isa=\"{}\"}} 1",
+                crate::linalg::isa::selected_name()
+            )),
+            "{text}"
+        );
         assert!(text.contains("# TYPE fastsvdd_score_latency_seconds histogram"));
         assert!(text.contains("fastsvdd_score_latency_seconds_bucket{le=\"+Inf\"} 2"));
         assert!(text.contains("fastsvdd_score_latency_seconds_count 2"));

@@ -15,8 +15,9 @@
 //! | `sampling.iter`         | `iteration`, `r2`, `num_sv`, `stage=iter`|
 //! | `sampling.solve`        | `stage` (seed/sample/union), `rows`      |
 //! | `smo.solve`             | `n`, `iterations`, `shrinks`, `gap`      |
-//! | `gram.compute`          | `rows`, `entries`                        |
-//! | `score.dist2_batch`     | `rows`, `num_sv`                         |
+//! | `gram.compute`          | `rows`, `entries`, `isa`                 |
+//! | `score.dist2_batch`     | `rows`, `num_sv`, `isa`, `precision`     |
+//! |                         | (`precision` only on the f32 panel path) |
 //! | `batcher.batch`         | `rows`, `requests`                       |
 //! | `server.request`        | `kind` (score/score_v2/info/swap/stats/  |
 //! |                         | http), `path` (http only)                |

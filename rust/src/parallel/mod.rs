@@ -351,6 +351,7 @@ pub fn gram(data: &Matrix, kernel: Kernel, pool: Pool) -> Vec<f64> {
     if span.is_live() {
         span.u64("rows", n as u64);
         span.u64("entries", (n * n) as u64);
+        span.str("isa", crate::linalg::isa::selected_name());
     }
     let weight = |ci: usize| {
         let r0 = ci * GRAM_PANEL_ROWS;

@@ -92,12 +92,30 @@ pub struct Scorer<'a> {
     runtime: Option<&'a SharedRuntime>,
     /// Model data padded for the XLA path (computed lazily once).
     padded: Option<(Vec<f32>, Vec<f32>, usize)>,
+    /// f32 view for the opt-in native-f32 panel path
+    /// ([`Scorer::native_f32`]; never set together with `runtime`).
+    f32_model: Option<crate::svdd::ModelF32>,
 }
 
 impl<'a> Scorer<'a> {
     /// Pure-Rust scorer.
     pub fn native(model: &'a SvddModel) -> Scorer<'a> {
-        Scorer { model, runtime: None, padded: None }
+        Scorer { model, runtime: None, padded: None, f32_model: None }
+    }
+
+    /// Pure-Rust scorer on the opt-in f32 panel path (`--precision
+    /// f32`): the model is narrowed once, batches score through
+    /// [`crate::linalg::dot_block_f32`] panels, and distances widen
+    /// back to f64 for thresholding. Same precision as the XLA/AOT
+    /// boundary, without the runtime — tolerance-only contract vs
+    /// [`Scorer::native`] (see [`crate::svdd::ModelF32`]).
+    pub fn native_f32(model: &'a SvddModel) -> Scorer<'a> {
+        Scorer {
+            model,
+            runtime: None,
+            padded: None,
+            f32_model: Some(model.to_f32()),
+        }
     }
 
     /// XLA-backed scorer (falls back to native when no bucket fits —
@@ -109,7 +127,7 @@ impl<'a> Scorer<'a> {
         } else {
             None
         };
-        Scorer { model, runtime: Some(runtime), padded }
+        Scorer { model, runtime: Some(runtime), padded, f32_model: None }
     }
 
     /// True when scores go through the PJRT executable.
@@ -117,8 +135,22 @@ impl<'a> Scorer<'a> {
         self.runtime.is_some() && self.padded.is_some()
     }
 
+    /// `"f32"` when this scorer runs the narrowed panel path (either
+    /// the native-f32 engine or the XLA artifact, which is f32 end to
+    /// end); `"f64"` for the native reference.
+    pub fn precision(&self) -> &'static str {
+        if self.f32_model.is_some() || self.is_accelerated() {
+            "f32"
+        } else {
+            "f64"
+        }
+    }
+
     /// `dist2` for every row of `zs`.
     pub fn dist2_batch(&self, zs: &Matrix) -> Result<Vec<f64>> {
+        if let Some(f32m) = &self.f32_model {
+            return Ok(f32m.dist2_batch(zs));
+        }
         match (&self.runtime, &self.padded) {
             (Some(rt), Some((sv, alpha, s))) => {
                 self.dist2_xla(rt, sv, alpha, *s, zs)
@@ -206,6 +238,32 @@ mod tests {
         let got = scorer.dist2_batch(&zs).unwrap();
         let want = model.dist2_batch(&zs);
         assert_eq!(got, want);
+    }
+
+    #[test]
+    fn native_f32_scorer_tracks_native_within_tolerance() {
+        let data = Banana::default().generate(300, 7);
+        let model = train(&data, &SvddParams::gaussian(0.35, 0.01)).unwrap();
+        let f64_scorer = Scorer::native(&model);
+        let f32_scorer = Scorer::native_f32(&model);
+        assert_eq!(f64_scorer.precision(), "f64");
+        assert_eq!(f32_scorer.precision(), "f32");
+        assert!(!f32_scorer.is_accelerated());
+        let zs = Banana::default().generate(200, 8);
+        let want = f64_scorer.dist2_batch(&zs).unwrap();
+        let got = f32_scorer.dist2_batch(&zs).unwrap();
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                (g - w).abs() <= 5e-5 * w.abs().max(1.0),
+                "row {i}: f32 {g} vs f64 {w}"
+            );
+        }
+        // labels use the exact f64 threshold on both engines
+        let lf64 = f64_scorer.label_batch(&zs).unwrap();
+        let lf32 = f32_scorer.label_batch(&zs).unwrap();
+        let disagreements = lf64.iter().zip(&lf32).filter(|(a, b)| a != b).count();
+        // only rows within f32 noise of the boundary may flip
+        assert!(disagreements <= 2, "{disagreements} label flips");
     }
 
     #[test]

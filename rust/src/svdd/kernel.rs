@@ -136,6 +136,65 @@ impl Kernel {
         }
     }
 
+    /// f32 mirror of the private `finish` combination — the opt-in
+    /// `--precision f32` panel path (same algebraic form, kernel
+    /// parameters narrowed once per call site). Tolerance-only contract
+    /// vs the f64 path; see [`crate::linalg`]'s f32 section for the
+    /// error bound.
+    #[inline]
+    pub fn finish_f32(&self, d: f32, na: f32, nb: f32) -> f32 {
+        match *self {
+            Kernel::Gaussian { bw } => {
+                let d2 = linalg::sqdist_from_norms_f32(na, nb, d);
+                let bw = bw as f32;
+                (-d2 / (2.0 * bw * bw)).exp()
+            }
+            Kernel::Linear => d,
+            Kernel::Polynomial { degree, coef } => (d + coef as f32).powi(degree as i32),
+        }
+    }
+
+    /// f32 mirror of [`Kernel::eval_block`] over flat row-major buffers
+    /// (`a`: `ra x cols`, `b`: `rb x cols`, full `ra x rb` product into
+    /// `out`): [`linalg::dot_block_f32`] panels finished with
+    /// [`Kernel::finish_f32`]. Per-entry purity (and so bit-identity
+    /// across chunk shapes and thread counts *within* f32) holds
+    /// exactly as on the f64 path.
+    pub fn eval_block_f32(
+        &self,
+        a: &[f32],
+        a_norms: &[f32],
+        b: &[f32],
+        b_norms: &[f32],
+        cols: usize,
+        out: &mut [f32],
+    ) {
+        if cols == 0 || a.is_empty() || b.is_empty() {
+            return;
+        }
+        let rb = b.len() / cols;
+        linalg::dot_block_f32(a, b, cols, out);
+        if matches!(self, Kernel::Linear) {
+            return; // linear kernel IS the dot panel
+        }
+        for (ia, row) in out.chunks_mut(rb).enumerate() {
+            let na = a_norms[ia];
+            for (jb, slot) in row.iter_mut().enumerate() {
+                *slot = self.finish_f32(*slot, na, b_norms[jb]);
+            }
+        }
+    }
+
+    /// f32 mirror of [`Kernel::diag_from_norm`] (same Gaussian
+    /// constant-1 policy).
+    #[inline]
+    pub fn diag_from_norm_f32(&self, norm: f32) -> f32 {
+        match *self {
+            Kernel::Gaussian { .. } => 1.0,
+            _ => self.finish_f32(norm, norm, norm),
+        }
+    }
+
     /// K(x, x) without touching a second row.
     #[inline]
     pub fn diag(&self, x: &[f64]) -> f64 {
@@ -363,6 +422,45 @@ mod tests {
                     out[0].to_bits(),
                     "{k} row {i}"
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn f32_block_path_tracks_f64_within_tolerance() {
+        let a = Matrix::from_rows(&[
+            vec![0.3, -1.2, 0.8, 0.1, 2.2],
+            vec![1.0, 0.0, -0.5, 0.9, -1.1],
+            vec![-2.0, 0.7, 0.1, -0.3, 0.6],
+        ])
+        .unwrap();
+        let b = Matrix::from_rows(&[
+            vec![0.0, 0.1, 0.2, -0.8, 1.4],
+            vec![1.5, -0.4, 0.9, 0.2, -0.7],
+        ])
+        .unwrap();
+        let (an, bn) = (NormCache::new(&a), NormCache::new(&b));
+        let (af, bf) = (a.to_f32(), b.to_f32());
+        let anf = linalg::norms_f32(&af, a.cols());
+        let bnf = linalg::norms_f32(&bf, b.cols());
+        for k in [
+            Kernel::gaussian(0.7),
+            Kernel::Linear,
+            Kernel::polynomial(3, 1.0),
+        ] {
+            let mut want = vec![0.0f64; 6];
+            k.eval_block(&a, &an, 0..3, &b, &bn, 0..2, &mut want);
+            let mut got = vec![0.0f32; 6];
+            k.eval_block_f32(&af, &anf, &bf, &bnf, a.cols(), &mut got);
+            for (g, w) in got.iter().zip(&want) {
+                assert!(
+                    (*g as f64 - w).abs() <= 1e-5 * w.abs().max(1.0),
+                    "{k}: {g} vs {w}"
+                );
+            }
+            // Gaussian unit diagonal survives narrowing exactly
+            if k.unit_diag() {
+                assert_eq!(k.diag_from_norm_f32(anf[0]), 1.0);
             }
         }
     }

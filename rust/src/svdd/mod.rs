@@ -11,6 +11,6 @@ pub mod smo;
 pub mod trainer;
 
 pub use kernel::Kernel;
-pub use model::SvddModel;
+pub use model::{ModelF32, SvddModel};
 pub use smo::{KernelProvider, SmoOptions, SmoSolution, Wss};
 pub use trainer::{train, train_with_gram, SolverStats, SvddParams};

@@ -199,6 +199,7 @@ impl SvddModel {
         if span.is_live() {
             span.u64("rows", n as u64);
             span.u64("num_sv", nsv as u64);
+            span.str("isa", linalg::isa::selected_name());
         }
         pool.for_work(work).run_chunks(&mut out, 64, |start, chunk| {
             let cols = chunk.len();
@@ -224,6 +225,25 @@ impl SvddModel {
             }
         });
         out
+    }
+
+    /// One-time f32 narrowing of everything batch scoring needs — the
+    /// opt-in `--precision f32` panel path (see [`ModelF32`]).
+    pub fn to_f32(&self) -> ModelF32 {
+        let sv = self.sv.to_f32();
+        // norms are recomputed IN f32 (not narrowed from the f64 cache)
+        // so they combine with the f32 dot panels the way the f64 norms
+        // combine with f64 panels — one consistent precision per path
+        let sv_norms = linalg::norms_f32(&sv, self.sv.cols());
+        ModelF32 {
+            sv,
+            cols: self.sv.cols(),
+            alpha: self.alpha.iter().map(|&a| a as f32).collect(),
+            sv_norms,
+            kernel: self.kernel,
+            w: self.w as f32,
+            r2: self.r2,
+        }
     }
 
     // --------------------------------------------------- serialization
@@ -328,6 +348,90 @@ impl SvddModel {
     }
 }
 
+/// f32 batch-scoring view of a model — the opt-in `--precision f32`
+/// panel path ([`SvddModel::to_f32`] narrows once, then every batch
+/// scores through [`crate::linalg::dot_block_f32`] panels). This is the
+/// same precision the XLA/AOT scoring boundary runs at, as a native
+/// engine.
+///
+/// Results are **not** bit-comparable to the f64 path: the contract is
+/// the relative-error bound documented in [`crate::linalg`]'s f32
+/// section (property-tested in `tests/simd_dispatch.rs`). Within f32
+/// the usual determinism policy holds — per-entry purity makes output
+/// bit-identical across chunk shapes and thread counts, on every
+/// non-fused arm. Distances are widened back to f64 at the end so
+/// thresholding (`dist2 > R^2`) uses the model's exact f64 threshold.
+#[derive(Clone, Debug)]
+pub struct ModelF32 {
+    sv: Vec<f32>,
+    cols: usize,
+    alpha: Vec<f32>,
+    sv_norms: Vec<f32>,
+    kernel: Kernel,
+    w: f32,
+    r2: f64,
+}
+
+impl ModelF32 {
+    /// Decision threshold (kept in f64 — narrowing the threshold would
+    /// move the decision boundary, narrowing distances only blurs it).
+    pub fn r2(&self) -> f64 {
+        self.r2
+    }
+
+    /// f32-path `dist2` for every row of `zs`, widened to f64.
+    pub fn dist2_batch(&self, zs: &Matrix) -> Vec<f64> {
+        self.dist2_batch_pooled(zs, crate::parallel::global())
+    }
+
+    /// [`ModelF32::dist2_batch`] on an explicit pool — the f32 mirror
+    /// of [`SvddModel::dist2_batch_pooled`]: narrow the batch once,
+    /// cache f32 row norms, then `#SV x chunk` f32 panels reduced with
+    /// f32 alpha weights in SV order.
+    pub fn dist2_batch_pooled(&self, zs: &Matrix, pool: crate::parallel::Pool) -> Vec<f64> {
+        let n = zs.rows();
+        let nsv = self.sv_norms.len();
+        let m = self.cols;
+        let mut out = vec![0.0; n];
+        let zf = zs.to_f32();
+        let z_norms = linalg::norms_f32(&zf, m);
+        let work = n * nsv * m.max(1);
+        let mut span = if work >= crate::parallel::MIN_PAR_WORK {
+            crate::obs::Span::enter("score.dist2_batch")
+        } else {
+            crate::obs::Span::disabled()
+        };
+        if span.is_live() {
+            span.u64("rows", n as u64);
+            span.u64("num_sv", nsv as u64);
+            span.str("isa", linalg::isa::selected_name());
+            span.str("precision", "f32");
+        }
+        pool.for_work(work).run_chunks(&mut out, 64, |start, chunk| {
+            let cols = chunk.len();
+            let zchunk = &zf[start * m..(start + cols) * m];
+            let mut panel = vec![0.0f32; nsv * cols];
+            self.kernel.eval_block_f32(
+                &self.sv,
+                &self.sv_norms,
+                zchunk,
+                &z_norms[start..start + cols],
+                m,
+                &mut panel,
+            );
+            for (off, slot) in chunk.iter_mut().enumerate() {
+                let mut k_sum = 0.0f32;
+                for (i, &a) in self.alpha.iter().enumerate() {
+                    k_sum += a * panel[i * cols + off];
+                }
+                let diag = self.kernel.diag_from_norm_f32(z_norms[start + off]);
+                *slot = (diag - 2.0 * k_sum + self.w) as f64;
+            }
+        });
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -381,6 +485,31 @@ mod tests {
         let batch = m.dist2_batch(&zs);
         for i in 0..zs.rows() {
             assert_eq!(batch[i], m.dist2(zs.row(i)));
+        }
+    }
+
+    #[test]
+    fn f32_view_tracks_f64_scoring_within_tolerance() {
+        let m = toy_model();
+        let rows: Vec<Vec<f64>> = (0..150)
+            .map(|i| {
+                vec![
+                    (i as f64) * 0.02 - 1.5,
+                    ((i * 7) % 13) as f64 * 0.1 - 0.6,
+                ]
+            })
+            .collect();
+        let zs = Matrix::from_rows(&rows).unwrap();
+        let f = m.to_f32();
+        assert_eq!(f.r2(), m.r2());
+        let got = f.dist2_batch(&zs);
+        let want = m.dist2_batch(&zs);
+        assert_eq!(got.len(), want.len());
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                (g - w).abs() <= 5e-5 * w.abs().max(1.0),
+                "row {i}: f32 {g} vs f64 {w}"
+            );
         }
     }
 

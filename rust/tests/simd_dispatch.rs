@@ -1,0 +1,284 @@
+//! Cross-arm contracts of the kernel microkernel layer
+//! (`linalg::isa` dispatch): every bit-identical arm must reproduce the
+//! scalar reference **bit for bit** on ragged lengths, unaligned
+//! slices and extreme magnitudes; the opt-in arms (FMA fusion, f32
+//! panels) must stay inside their documented error bounds.
+//!
+//! These tests force arms explicitly through the `*_on` hooks, so they
+//! never mutate the process-global selection and are safe under the
+//! parallel test runner (and under `FASTSVDD_ISA=scalar`, which CI runs
+//! as a second full pass).
+
+use fastsvdd::linalg::{
+    self, dot_block_f32, dot_block_on, dot_f32_on, dot_f32_scalar, dot_on, dot_scalar,
+    isa, Isa, NormCache,
+};
+use fastsvdd::util::matrix::Matrix;
+
+/// Ragged lengths around every boundary the arms care about: empty,
+/// sub-lane, one f64x4 quad, quad+tail, one f32x8 oct, tile edges.
+const LENGTHS: [usize; 11] = [0, 1, 3, 4, 7, 8, 63, 64, 65, 129, 200];
+
+/// Deterministic xorshift stream in roughly [-3, 3].
+fn stream(seed: u64) -> impl FnMut() -> f64 {
+    let mut state = seed.wrapping_mul(0x9E37_79B9_7F4A_7C15) | 1;
+    move || {
+        state ^= state << 13;
+        state ^= state >> 7;
+        state ^= state << 17;
+        (state >> 11) as f64 / (1u64 << 53) as f64 * 6.0 - 3.0
+    }
+}
+
+fn vecs(n: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+    let mut next = stream(seed);
+    ((0..n).map(|_| next()).collect(), (0..n).map(|_| next()).collect())
+}
+
+/// Every concrete arm the host can run (always includes Scalar).
+fn available_arms() -> Vec<Isa> {
+    Isa::ALL.iter().copied().filter(|a| a.available()).collect()
+}
+
+/// The arms contracted to match [`dot_scalar`] bit for bit (everything
+/// available except opt-in FMA).
+fn bit_identical_arms() -> Vec<Isa> {
+    available_arms().into_iter().filter(|&a| a != Isa::Fma).collect()
+}
+
+/// Documented f64 FMA closeness: fusing drops one rounding per madd, so
+/// the divergence is bounded by a few ulps of the term-magnitude sum.
+fn fma_tolerance(n: usize, abs_terms: f64) -> f64 {
+    (n as f64 + 2.0) * (f64::EPSILON / 2.0) * abs_terms * 4.0 + 1e-300
+}
+
+/// Documented f32 panel bound: `(n + 2) * 2^-24 * sum_k |a_k * b_k|`
+/// (times a safety margin — the bound is a worst case, not a promise of
+/// tightness the other way).
+fn f32_tolerance(n: usize, abs_terms: f64) -> f64 {
+    (n as f64 + 2.0) * (0.5f64).powi(24) * abs_terms * 4.0 + 1e-30
+}
+
+#[test]
+fn dot_bit_identity_across_arms_and_lengths() {
+    for (i, &n) in LENGTHS.iter().enumerate() {
+        let (a, b) = vecs(n, 11 + i as u64);
+        let want = dot_scalar(&a, &b);
+        for arm in bit_identical_arms() {
+            let got = dot_on(arm, &a, &b);
+            assert_eq!(
+                got.to_bits(),
+                want.to_bits(),
+                "n={n} arm={arm}: {got} != scalar {want}"
+            );
+        }
+    }
+}
+
+#[test]
+fn dot_bit_identity_on_unaligned_slices() {
+    // one oversized buffer, sliced at every sub-lane offset: loadu must
+    // make alignment irrelevant to both safety and the result bits
+    let (a, b) = vecs(96, 99);
+    for off in 0..5usize {
+        for n in [0usize, 1, 4, 7, 33, 64] {
+            let (sa, sb) = (&a[off..off + n], &b[off..off + n]);
+            let want = dot_scalar(sa, sb);
+            for arm in bit_identical_arms() {
+                assert_eq!(
+                    dot_on(arm, sa, sb).to_bits(),
+                    want.to_bits(),
+                    "off={off} n={n} arm={arm}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn dot_bit_identity_at_extreme_magnitudes() {
+    // +-1e150 coordinates: products are ~1e300 (near the f64 ceiling),
+    // so any reassociation of the sum shows up immediately
+    for n in [3usize, 8, 65] {
+        let mut next = stream(7_000 + n as u64);
+        let a: Vec<f64> = (0..n)
+            .map(|k| if k % 2 == 0 { 1e150 } else { -1e150 } * (1.0 + next().abs()))
+            .collect();
+        let b: Vec<f64> = (0..n).map(|k| if k % 3 == 0 { -1e150 } else { 1e150 }).collect();
+        let want = dot_scalar(&a, &b);
+        assert!(want.is_finite(), "test vectors overflowed: {want}");
+        for arm in bit_identical_arms() {
+            assert_eq!(
+                dot_on(arm, &a, &b).to_bits(),
+                want.to_bits(),
+                "n={n} arm={arm}"
+            );
+        }
+    }
+}
+
+#[test]
+fn dot_block_matches_per_pair_scalar_bitwise() {
+    // ragged panels crossing the j-register-block (4) and TILE_J (8)
+    // boundaries, including offset sub-ranges of both matrices
+    for (rows_a, rows_b, cols) in
+        [(1usize, 1usize, 1usize), (3, 5, 3), (7, 9, 41), (8, 8, 64), (9, 17, 5)]
+    {
+        let (flat_a, _) = vecs(rows_a * cols, 31 + cols as u64);
+        let (flat_b, _) = vecs(rows_b * cols, 77 + cols as u64);
+        let a = Matrix::from_vec(flat_a, rows_a, cols).unwrap();
+        let b = Matrix::from_vec(flat_b, rows_b, cols).unwrap();
+        let a0 = rows_a / 3;
+        let b0 = rows_b / 2;
+        let (na, nb) = (rows_a - a0, rows_b - b0);
+        let mut want = vec![0.0f64; na * nb];
+        for ia in 0..na {
+            for ib in 0..nb {
+                want[ia * nb + ib] = dot_scalar(a.row(a0 + ia), b.row(b0 + ib));
+            }
+        }
+        for arm in bit_identical_arms() {
+            let mut got = vec![0.0f64; na * nb];
+            dot_block_on(arm, &a, a0..rows_a, &b, b0..rows_b, &mut got);
+            for (k, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(
+                    g.to_bits(),
+                    w.to_bits(),
+                    "panel {rows_a}x{rows_b}x{cols} entry {k} arm={arm}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn norm_cache_is_arm_independent() {
+    let (flat, _) = vecs(9 * 41, 123);
+    let m = Matrix::from_vec(flat, 9, 41).unwrap();
+    let cache = NormCache::new(&m);
+    let arms = bit_identical_arms();
+    for i in 0..m.rows() {
+        let want = dot_scalar(m.row(i), m.row(i));
+        // every bit-identical arm agrees on each norm...
+        for &arm in &arms {
+            assert_eq!(
+                dot_on(arm, m.row(i), m.row(i)).to_bits(),
+                want.to_bits(),
+                "row {i} arm={arm}"
+            );
+        }
+        // ...so the cache (built on the ambient dispatched arm) equals
+        // the scalar reference unless FASTSVDD_ISA=fma opted out of
+        // bit identity for this process
+        if isa::selected() != Isa::Fma {
+            assert_eq!(cache.get(i).to_bits(), want.to_bits(), "row {i}");
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[test]
+fn fma_arm_stays_within_documented_closeness() {
+    if !Isa::Fma.available() {
+        return;
+    }
+    for (i, &n) in LENGTHS.iter().enumerate() {
+        let (a, b) = vecs(n, 555 + i as u64);
+        let want = dot_scalar(&a, &b);
+        let got = dot_on(Isa::Fma, &a, &b);
+        let abs_terms: f64 = a.iter().zip(&b).map(|(x, y)| (x * y).abs()).sum();
+        assert!(
+            (got - want).abs() <= fma_tolerance(n, abs_terms),
+            "n={n}: fma {got} vs scalar {want} (terms {abs_terms})"
+        );
+    }
+}
+
+#[test]
+fn f32_arms_are_mutually_bit_identical() {
+    for (i, &n) in LENGTHS.iter().enumerate() {
+        let (a64, b64) = vecs(n, 900 + i as u64);
+        let a: Vec<f32> = a64.iter().map(|&x| x as f32).collect();
+        let b: Vec<f32> = b64.iter().map(|&x| x as f32).collect();
+        let want = dot_f32_scalar(&a, &b);
+        for arm in bit_identical_arms() {
+            assert_eq!(
+                dot_f32_on(arm, &a, &b).to_bits(),
+                want.to_bits(),
+                "n={n} arm={arm}"
+            );
+        }
+    }
+}
+
+#[test]
+fn f32_dot_tracks_f64_within_analytic_bound() {
+    // property sweep: many lengths x seeds against the documented bound
+    for n in (1usize..40).chain([63, 64, 65, 127, 200, 333]) {
+        for seed in 0..4u64 {
+            let (a64, b64) = vecs(n, 40_000 + n as u64 * 7 + seed);
+            let a: Vec<f32> = a64.iter().map(|&x| x as f32).collect();
+            let b: Vec<f32> = b64.iter().map(|&x| x as f32).collect();
+            // reference: exact f64 dot of the *narrowed* inputs (the
+            // bound covers summation error, not input narrowing)
+            let aw: Vec<f64> = a.iter().map(|&x| x as f64).collect();
+            let bw: Vec<f64> = b.iter().map(|&x| x as f64).collect();
+            let want = dot_scalar(&aw, &bw);
+            let abs_terms: f64 = aw.iter().zip(&bw).map(|(x, y)| (x * y).abs()).sum();
+            let tol = f32_tolerance(n, abs_terms);
+            for arm in available_arms() {
+                let got = dot_f32_on(arm, &a, &b) as f64;
+                assert!(
+                    (got - want).abs() <= tol,
+                    "n={n} seed={seed} arm={arm}: f32 {got} vs f64 {want} (tol {tol:.3e})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn f32_block_matches_per_pair_f32_bitwise() {
+    for (rows_a, rows_b, cols) in [(1usize, 1usize, 1usize), (3, 5, 7), (9, 17, 41)] {
+        let (fa, _) = vecs(rows_a * cols, 61);
+        let (fb, _) = vecs(rows_b * cols, 62);
+        let a: Vec<f32> = fa.iter().map(|&x| x as f32).collect();
+        let b: Vec<f32> = fb.iter().map(|&x| x as f32).collect();
+        let mut out = vec![0.0f32; rows_a * rows_b];
+        dot_block_f32(&a, &b, cols, &mut out);
+        if isa::selected() == Isa::Fma {
+            continue; // explicit fused opt-in relaxes bit identity
+        }
+        for ia in 0..rows_a {
+            for ib in 0..rows_b {
+                let want =
+                    dot_f32_scalar(&a[ia * cols..(ia + 1) * cols], &b[ib * cols..(ib + 1) * cols]);
+                assert_eq!(
+                    out[ia * rows_b + ib].to_bits(),
+                    want.to_bits(),
+                    "panel {rows_a}x{rows_b}x{cols} ({ia},{ib})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn norms_and_sqdist_f32_follow_f64_semantics() {
+    let (flat, _) = vecs(6 * 5, 321);
+    let m = Matrix::from_vec(flat, 6, 5).unwrap();
+    let f = m.to_f32();
+    let norms = linalg::norms_f32(&f, 5);
+    let cache = NormCache::new(&m);
+    for i in 0..6 {
+        let gap = (norms[i] as f64 - cache.get(i)).abs();
+        assert!(gap <= f32_tolerance(5, cache.get(i).abs()), "row {i}");
+    }
+    // NaN/inf policy mirrors the f64 helper
+    assert!(linalg::sqdist_from_norms_f32(f32::NAN, 1.0, 0.5).is_nan());
+    assert_eq!(
+        linalg::sqdist_from_norms_f32(f32::INFINITY, 1.0, f32::INFINITY),
+        f32::INFINITY
+    );
+    assert_eq!(linalg::sqdist_from_norms_f32(1.0, 1.0, 1.0), 0.0);
+}
