@@ -23,7 +23,7 @@ fn main() -> fastsvdd::Result<()> {
         workers: 4,
         sampling: SamplingConfig { sample_size: 11, ..Default::default() },
         seed: 7,
-        shuffle_seed: None,
+        ..Default::default()
     };
 
     // ---- real TCP workers on loopback ----

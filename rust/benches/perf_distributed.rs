@@ -1,0 +1,157 @@
+//! Distributed-training bench: shard-count ladder, flat vs tree
+//! combine, the wall-clock cost of surviving a worker fault, and a
+//! large-row scaling row.
+//!
+//! The correctness flags ride along with the timings: tree combine
+//! must land within 5% relative R^2 of flat (gated in CI), and the
+//! faulted TCP run must recover to the exact clean-run model — retries
+//! are free of model drift by construction (shard-keyed results,
+//! per-shard seeds), so the bench proves the fault path pays only in
+//! wall-clock, never in accuracy.
+//!
+//! Emits the usual table plus `results/BENCH_perf_distributed.json`.
+
+use std::time::Duration;
+
+use fastsvdd::bench::{emit, emit_text, scaled};
+use fastsvdd::data::{donut::TwoDonut, Generator};
+use fastsvdd::distributed::{
+    train_local_cluster, train_tcp_cluster, CombineMode, DistributedConfig, DistributedOutcome,
+    FaultPlan, WorkerServer,
+};
+use fastsvdd::sampling::SamplingConfig;
+use fastsvdd::svdd::SvddParams;
+use fastsvdd::util::json::{num, obj, s, Json};
+use fastsvdd::util::matrix::Matrix;
+use fastsvdd::util::tables::{f, Table};
+use fastsvdd::util::timer::Stopwatch;
+
+fn cfg(workers: usize, combine: CombineMode) -> DistributedConfig {
+    DistributedConfig {
+        workers,
+        sampling: SamplingConfig { sample_size: 10, ..Default::default() },
+        seed: 7,
+        combine,
+        worker_timeout: Duration::from_secs(2),
+        ..Default::default()
+    }
+}
+
+fn timed_local(
+    data: &Matrix,
+    params: &SvddParams,
+    c: &DistributedConfig,
+) -> (DistributedOutcome, f64) {
+    let sw = Stopwatch::start();
+    let out = train_local_cluster(data, params, c).unwrap();
+    (out, sw.elapsed_secs() * 1e3)
+}
+
+/// One TCP run against a single worker carrying `plan`, timed.
+fn timed_tcp(
+    data: &Matrix,
+    params: &SvddParams,
+    c: &DistributedConfig,
+    plan: Option<FaultPlan>,
+) -> (DistributedOutcome, f64) {
+    let mut w = WorkerServer::spawn_with_faults("127.0.0.1:0", plan).unwrap();
+    let sw = Stopwatch::start();
+    let out = train_tcp_cluster(data, params, c, &[w.addr()]).unwrap();
+    let ms = sw.elapsed_secs() * 1e3;
+    w.stop();
+    (out, ms)
+}
+
+fn main() {
+    let rows = scaled(24_000, 2_400);
+    let data = TwoDonut::default().generate(rows, 42);
+    let params = SvddParams::gaussian(0.4, 0.001);
+
+    let mut t = Table::new(
+        "Perf: distributed training (local transport unless noted)",
+        &["case", "shards", "wall_ms", "R^2"],
+    );
+
+    // ---- shard-count ladder (flat combine) ----
+    let mut ladder = Vec::new();
+    for p in [2usize, 4, 8] {
+        let (out, ms) = timed_local(&data, &params, &cfg(p, CombineMode::Flat));
+        t.row(vec![format!("ladder p={p}"), p.to_string(), f(ms, 1), f(out.model.r2(), 4)]);
+        ladder.push((p, ms));
+    }
+
+    // ---- flat vs tree combine at a wide shard count ----
+    let wide = 16usize;
+    let (flat, flat_ms) = timed_local(&data, &params, &cfg(wide, CombineMode::Flat));
+    let tree_mode = CombineMode::Tree { fanout: 4 };
+    let (tree, tree_ms) = timed_local(&data, &params, &cfg(wide, tree_mode));
+    let rel = (tree.model.r2() - flat.model.r2()).abs() / flat.model.r2();
+    let tree_matches_flat = rel < 0.05;
+    t.row(vec!["combine flat".into(), wide.to_string(), f(flat_ms, 1), f(flat.model.r2(), 4)]);
+    t.row(vec![
+        format!("combine {tree_mode} ({} solves)", tree.combine_solves),
+        wide.to_string(),
+        f(tree_ms, 1),
+        f(tree.model.r2(), 4),
+    ]);
+
+    // ---- fault-recovery overhead (TCP, deterministic corrupt reply) ----
+    let small = TwoDonut::default().generate(scaled(6_000, 600), 43);
+    let c2 = cfg(2, CombineMode::Flat);
+    let (clean, clean_ms) = timed_tcp(&small, &params, &c2, None);
+    let plan = FaultPlan::parse("corrupt_at=1").unwrap();
+    let (faulted, faulted_ms) = timed_tcp(&small, &params, &c2, Some(plan));
+    let retries_recovered = faulted.retry.shard_retries >= 1
+        && (faulted.model.r2() - clean.model.r2()).abs() < 1e-9;
+    t.row(vec!["tcp clean".into(), "2".into(), f(clean_ms, 1), f(clean.model.r2(), 4)]);
+    t.row(vec![
+        format!("tcp corrupt_at=1 ({} retry)", faulted.retry.shard_retries),
+        "2".into(),
+        f(faulted_ms, 1),
+        f(faulted.model.r2(), 4),
+    ]);
+
+    // ---- large-row scaling row ----
+    let large_rows = scaled(60_000, 6_000);
+    let large = TwoDonut::default().generate(large_rows, 44);
+    let (lout, large_ms) = timed_local(&large, &params, &cfg(8, CombineMode::Flat));
+    let large_rows_per_s = large_rows as f64 / (large_ms / 1e3);
+    t.row(vec![
+        format!("large {large_rows} rows"),
+        "8".into(),
+        f(large_ms, 1),
+        f(lout.model.r2(), 4),
+    ]);
+
+    emit("perf_distributed", &t);
+
+    let mut pairs = vec![
+        ("bench", s("perf_distributed")),
+        ("rows", num(rows as f64)),
+        ("wall_p2_ms", num(ladder[0].1)),
+        ("wall_p4_ms", num(ladder[1].1)),
+        ("wall_p8_ms", num(ladder[2].1)),
+        ("flat_wall_ms", num(flat_ms)),
+        ("tree_wall_ms", num(tree_ms)),
+        ("tree_fanout", num(4.0)),
+        ("tree_combine_solves", num(tree.combine_solves as f64)),
+        ("r2_flat", num(flat.model.r2())),
+        ("r2_tree", num(tree.model.r2())),
+        ("tree_vs_flat_rel_diff", num(rel)),
+        ("tree_matches_flat_r2", Json::Bool(tree_matches_flat)),
+        ("retry_clean_wall_ms", num(clean_ms)),
+        ("retry_faulted_wall_ms", num(faulted_ms)),
+        ("retry_overhead_ratio", num(faulted_ms / clean_ms)),
+        ("shard_retries", num(faulted.retry.shard_retries as f64)),
+        ("retries_recovered", Json::Bool(retries_recovered)),
+        ("large_rows", num(large_rows as f64)),
+        ("large_wall_ms", num(large_ms)),
+        ("large_rows_per_s", num(large_rows_per_s)),
+    ];
+    pairs.extend(fastsvdd::bench::isa_provenance());
+    let json = obj(pairs);
+    emit_text("BENCH_perf_distributed.json", &json.to_string_pretty());
+    println!("wrote results/BENCH_perf_distributed.json");
+    assert!(tree_matches_flat, "tree combine drifted {rel} relative R^2 from flat");
+    assert!(retries_recovered, "faulted run did not recover the clean model");
+}

@@ -168,6 +168,24 @@ COMMON OPTIONS (train):
     --shuffle-seed <s>        seeded pre-shuffle of the row order before
                               distributed sharding (for ordered datasets;
                               default: shard rows as given)
+    --addrs <a:p,a:p,...>     TCP worker addresses for distributed
+                              training (default: in-process workers)
+    --combine <mode>          distributed SV-set combine: flat (one union
+                              solve, the paper's scheme; default) | tree |
+                              tree:<fanout> (hierarchical solves; same
+                              description within tolerance, smaller root
+                              solve)
+    --max-retries <n>         extra attempts a failed shard is granted
+                              before the run fails (default 2)
+    --worker-timeout-ms <ms>  per-attempt socket deadline and heartbeat
+                              probe window for TCP workers (default 30000)
+    --min-workers <n>         degrade to in-controller training when fewer
+                              than this many TCP workers remain alive
+                              (default 1; zero live workers always fails)
+    --stream-chunk <rows>     with --method distributed + --addrs and a
+                              CSV --data: stream the file to workers in
+                              chunks of this many rows (one chunk = one
+                              shard) instead of materialising it (0 = off)
     --threads <auto|n>        worker threads for the shared parallel pool
                               (Gram rows, SMO kernel columns, batch scoring;
                               default auto = all cores). Results are
@@ -204,6 +222,11 @@ score:
 
 worker:
     --listen <addr:port>
+    --faults <spec>           deterministic fault injection for chaos
+                              tests: comma-separated kill_after=<n>,
+                              delay_ms=<ms>, corrupt_at=<n>, drop_at=<n>
+                              (n counts Train replies; also readable from
+                              FASTSVDD_FAULTS)
 
 serve:
     --model <model.json> --listen <addr:port> [--xla] [--batch <rows>]

@@ -7,6 +7,7 @@ use std::fmt;
 use std::path::Path;
 
 use crate::cli::Args;
+use crate::distributed::{CombineMode, DistributedConfig};
 use crate::error::{Error, Result};
 use crate::sampling::SamplingConfig;
 use crate::svdd::trainer::SvddParams;
@@ -110,6 +111,24 @@ pub struct RunConfig {
     /// Seeded pre-shuffle of the row order before distributed sharding
     /// (`None` = shard rows as given; set for ordered/sorted datasets).
     pub shuffle_seed: Option<u64>,
+    /// Distributed SV-set combine: `"flat"` (one union solve, the
+    /// paper's scheme and the default) or `"tree"`/`"tree:N"`
+    /// (hierarchical solves with fanout N).
+    pub combine: CombineMode,
+    /// Distributed: extra attempts a failed shard is granted before the
+    /// run fails (0 = fail on the first error).
+    pub max_retries: usize,
+    /// Distributed: per-attempt socket deadline in milliseconds
+    /// (connect/read/write and heartbeat probes).
+    pub worker_timeout_ms: u64,
+    /// Distributed: when fewer than this many TCP workers remain alive
+    /// (but at least one), remaining shards train locally in the
+    /// controller instead of failing the run.
+    pub min_workers: usize,
+    /// Distributed: stream a CSV dataset to workers in chunks of this
+    /// many rows instead of materialising it in the controller
+    /// (0 = off, read the whole file).
+    pub stream_chunk: usize,
     /// Worker threads for the shared parallel pool (`"auto"` or N).
     pub threads: ThreadCount,
     pub seed: u64,
@@ -156,6 +175,11 @@ impl Default for RunConfig {
             shrinking: true,
             workers: 4,
             shuffle_seed: None,
+            combine: CombineMode::Flat,
+            max_retries: 2,
+            worker_timeout_ms: 30_000,
+            min_workers: 1,
+            stream_chunk: 0,
             threads: ThreadCount::Auto,
             seed: 7,
             isa: crate::linalg::Isa::Auto,
@@ -200,6 +224,20 @@ impl RunConfig {
         ParallelismConfig { threads: self.threads }
     }
 
+    /// The distributed-controller configuration this run describes.
+    pub fn distributed(&self) -> DistributedConfig {
+        DistributedConfig {
+            workers: self.workers,
+            sampling: self.sampling(),
+            seed: self.seed,
+            shuffle_seed: self.shuffle_seed,
+            max_retries: self.max_retries,
+            worker_timeout: std::time::Duration::from_millis(self.worker_timeout_ms),
+            min_workers: self.min_workers,
+            combine: self.combine,
+        }
+    }
+
     /// Load from a JSON file; unknown keys are rejected (typo guard).
     pub fn load(path: &Path) -> Result<RunConfig> {
         let text = std::fs::read_to_string(path)?;
@@ -231,6 +269,13 @@ impl RunConfig {
         if args.get("shuffle-seed").is_some() {
             cfg.shuffle_seed = Some(args.get_u64("shuffle-seed", 0)?);
         }
+        if let Some(v) = args.get("combine") {
+            cfg.combine = CombineMode::parse(v)?;
+        }
+        cfg.max_retries = args.get_usize("max-retries", cfg.max_retries)?;
+        cfg.worker_timeout_ms = args.get_u64("worker-timeout-ms", cfg.worker_timeout_ms)?;
+        cfg.min_workers = args.get_usize("min-workers", cfg.min_workers)?;
+        cfg.stream_chunk = args.get_usize("stream-chunk", cfg.stream_chunk)?;
         if let Some(v) = args.get("threads") {
             cfg.threads = ThreadCount::parse(v)?;
         }
@@ -291,6 +336,11 @@ impl RunConfig {
                 "wss" => cfg.wss = Wss::parse(&req_str(val, key)?)?,
                 "shrinking" => cfg.shrinking = req_bool(val, key)?,
                 "workers" => cfg.workers = req_num(val, key)? as usize,
+                "combine" => cfg.combine = CombineMode::parse(&req_str(val, key)?)?,
+                "max_retries" => cfg.max_retries = req_num(val, key)? as usize,
+                "worker_timeout_ms" => cfg.worker_timeout_ms = req_num(val, key)? as u64,
+                "min_workers" => cfg.min_workers = req_num(val, key)? as usize,
+                "stream_chunk" => cfg.stream_chunk = req_num(val, key)? as usize,
                 "shuffle_seed" => {
                     cfg.shuffle_seed = match val {
                         Json::Null => None,
@@ -357,6 +407,12 @@ impl RunConfig {
                 "unknown precision '{}' (expected f64|f32)",
                 self.precision
             )));
+        }
+        if self.worker_timeout_ms == 0 {
+            return Err(Error::Config("worker_timeout_ms must be >= 1".into()));
+        }
+        if self.min_workers == 0 {
+            return Err(Error::Config("min_workers must be >= 1".into()));
         }
         if self.batch_window_us == 0 {
             return Err(Error::Config("batch_window_us must be >= 1".into()));
@@ -605,6 +661,55 @@ mod tests {
         assert!(RunConfig::from_json_text(r#"{"isa": "sse9"}"#).is_err());
         assert!(RunConfig::from_json_text(r#"{"precision": "f16"}"#).is_err());
         let bad: Vec<String> = ["score", "--precision", "f128"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        assert!(RunConfig::from_args(&Args::parse(&bad).unwrap()).is_err());
+    }
+
+    #[test]
+    fn fault_tolerance_keys_parse_and_flow() {
+        // defaults: flat combine, 2 retries, 30s deadline, no
+        // degradation threshold, streaming off
+        let d = RunConfig::default();
+        assert_eq!(d.combine, CombineMode::Flat);
+        assert_eq!(d.max_retries, 2);
+        assert_eq!(d.worker_timeout_ms, 30_000);
+        assert_eq!(d.min_workers, 1);
+        assert_eq!(d.stream_chunk, 0);
+        // JSON spellings flow into the controller config
+        let cfg = RunConfig::from_json_text(
+            r#"{"combine": "tree:8", "max_retries": 5, "worker_timeout_ms": 1000,
+                "min_workers": 2, "stream_chunk": 256}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.combine, CombineMode::Tree { fanout: 8 });
+        assert_eq!(cfg.stream_chunk, 256);
+        let dcfg = cfg.distributed();
+        assert_eq!(dcfg.max_retries, 5);
+        assert_eq!(dcfg.worker_timeout, std::time::Duration::from_millis(1000));
+        assert_eq!(dcfg.min_workers, 2);
+        assert_eq!(dcfg.combine, CombineMode::Tree { fanout: 8 });
+        // CLI spellings override on top
+        let argv: Vec<String> = [
+            "train", "--combine", "tree", "--max-retries", "0", "--worker-timeout-ms",
+            "500", "--min-workers", "3", "--stream-chunk", "64",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let cfg = RunConfig::from_args(&Args::parse(&argv).unwrap()).unwrap();
+        assert_eq!(cfg.combine, CombineMode::Tree { fanout: 4 });
+        assert_eq!(cfg.max_retries, 0);
+        assert_eq!(cfg.worker_timeout_ms, 500);
+        assert_eq!(cfg.min_workers, 3);
+        assert_eq!(cfg.stream_chunk, 64);
+        // degenerate values rejected, file or CLI alike
+        assert!(RunConfig::from_json_text(r#"{"combine": "ring"}"#).is_err());
+        assert!(RunConfig::from_json_text(r#"{"combine": "tree:1"}"#).is_err());
+        assert!(RunConfig::from_json_text(r#"{"worker_timeout_ms": 0}"#).is_err());
+        assert!(RunConfig::from_json_text(r#"{"min_workers": 0}"#).is_err());
+        let bad: Vec<String> = ["train", "--min-workers", "0"]
             .iter()
             .map(|s| s.to_string())
             .collect();

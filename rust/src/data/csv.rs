@@ -6,7 +6,7 @@
 
 use crate::error::{Error, Result};
 use crate::util::matrix::Matrix;
-use std::io::Write;
+use std::io::{BufRead, Write};
 use std::path::Path;
 
 /// Write `data` as CSV with the given header row.
@@ -58,6 +58,79 @@ pub fn read_matrix(path: &Path, has_header: bool) -> Result<(Matrix, Vec<String>
         return Err(Error::invalid("csv has no data rows"));
     }
     Ok((Matrix::from_rows(&rows)?, headers))
+}
+
+/// Bounded streaming CSV reader: yields the numeric rows in chunks of
+/// at most `chunk_rows`, so the distributed controller can ship shards
+/// to workers without materialising the full dataset in memory. Blank
+/// lines are skipped; cells parse exactly like [`read_matrix`], and a
+/// row whose column count diverges from the first row's is rejected
+/// (the whole-file reader catches that in `Matrix::from_rows`).
+pub struct CsvChunks {
+    lines: std::io::Lines<std::io::BufReader<std::fs::File>>,
+    chunk_rows: usize,
+    cols: Option<usize>,
+    line_no: usize,
+}
+
+impl CsvChunks {
+    /// Open `path`; `has_header` consumes the first non-blank line.
+    pub fn open(path: &Path, has_header: bool, chunk_rows: usize) -> Result<CsvChunks> {
+        if chunk_rows == 0 {
+            return Err(Error::invalid("chunk_rows must be >= 1"));
+        }
+        let mut lines = std::io::BufReader::new(std::fs::File::open(path)?).lines();
+        let mut line_no = 0;
+        if has_header {
+            loop {
+                line_no += 1;
+                match lines.next() {
+                    Some(l) => {
+                        if !l?.trim().is_empty() {
+                            break;
+                        }
+                    }
+                    None => return Err(Error::invalid("empty csv")),
+                }
+            }
+        }
+        Ok(CsvChunks { lines, chunk_rows, cols: None, line_no })
+    }
+
+    /// The next chunk of at most `chunk_rows` rows; `None` once the
+    /// file is drained.
+    pub fn next_chunk(&mut self) -> Result<Option<Matrix>> {
+        let mut rows: Vec<Vec<f64>> = Vec::new();
+        while rows.len() < self.chunk_rows {
+            let line = match self.lines.next() {
+                Some(l) => l?,
+                None => break,
+            };
+            self.line_no += 1;
+            if line.trim().is_empty() {
+                continue;
+            }
+            let mut row = Vec::new();
+            for cell in split_line(&line) {
+                row.push(cell.trim().parse::<f64>().map_err(|_| {
+                    Error::invalid(format!("line {}: bad number '{cell}'", self.line_no))
+                })?);
+            }
+            if *self.cols.get_or_insert(row.len()) != row.len() {
+                return Err(Error::invalid(format!(
+                    "line {}: {} columns, expected {}",
+                    self.line_no,
+                    row.len(),
+                    self.cols.unwrap_or(0)
+                )));
+            }
+            rows.push(row);
+        }
+        if rows.is_empty() {
+            return Ok(None);
+        }
+        Ok(Some(Matrix::from_rows(&rows)?))
+    }
 }
 
 fn split_line(line: &str) -> Vec<String> {
@@ -139,5 +212,51 @@ mod tests {
         let p = tmp("f.csv");
         std::fs::write(&p, "\n\n").unwrap();
         assert!(read_matrix(&p, false).is_err());
+    }
+
+    #[test]
+    fn chunked_read_matches_whole_file_read() {
+        let rows: Vec<Vec<f64>> = (0..23).map(|i| vec![i as f64, -0.5 * i as f64]).collect();
+        let m = Matrix::from_rows(&rows).unwrap();
+        let p = tmp("g.csv");
+        write_matrix(&p, &["x", "y"], &m).unwrap();
+
+        let mut chunks = CsvChunks::open(&p, true, 5).unwrap();
+        let mut sizes = Vec::new();
+        let mut all: Vec<Vec<f64>> = Vec::new();
+        while let Some(c) = chunks.next_chunk().unwrap() {
+            sizes.push(c.rows());
+            for i in 0..c.rows() {
+                all.push(c.row(i).to_vec());
+            }
+        }
+        assert_eq!(sizes, vec![5, 5, 5, 5, 3], "bounded chunks of at most chunk_rows");
+        assert_eq!(Matrix::from_rows(&all).unwrap(), m);
+        // drained: stays None
+        assert!(chunks.next_chunk().unwrap().is_none());
+    }
+
+    #[test]
+    fn chunked_read_skips_blank_lines_and_header() {
+        let p = tmp("h.csv");
+        std::fs::write(&p, "x,y\n\n1,2\n\n3,4\n").unwrap();
+        let mut chunks = CsvChunks::open(&p, true, 10).unwrap();
+        let c = chunks.next_chunk().unwrap().unwrap();
+        assert_eq!(c.rows(), 2);
+        assert_eq!(c.row(1), &[3.0, 4.0]);
+        assert!(chunks.next_chunk().unwrap().is_none());
+    }
+
+    #[test]
+    fn chunked_read_rejects_bad_input() {
+        assert!(CsvChunks::open(&tmp("g.csv"), true, 0).is_err(), "zero chunk size");
+        let p = tmp("i.csv");
+        std::fs::write(&p, "1,2\n3,oops\n").unwrap();
+        let mut chunks = CsvChunks::open(&p, false, 10).unwrap();
+        assert!(chunks.next_chunk().is_err(), "bad number surfaces");
+        let p = tmp("j.csv");
+        std::fs::write(&p, "1,2\n3\n").unwrap();
+        let mut chunks = CsvChunks::open(&p, false, 10).unwrap();
+        assert!(chunks.next_chunk().is_err(), "ragged row surfaces");
     }
 }

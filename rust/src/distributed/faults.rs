@@ -1,0 +1,218 @@
+//! Deterministic fault injection for distributed workers.
+//!
+//! A [`FaultPlan`] describes *when* a worker misbehaves in terms of
+//! counted protocol events — "die after serving 1 shard", "corrupt the
+//! 2nd training reply" — never in terms of wall-clock time or
+//! randomness, so a chaos test replays the exact same failure sequence
+//! on every run. Plans are parsed from a compact `key=value` spec
+//! (worker `--faults` flag or the [`FAULTS_ENV`] environment variable)
+//! and enforced worker-side by a [`FaultInjector`] shared across all of
+//! that worker's connections.
+//!
+//! Supported faults:
+//!
+//! | spec key       | effect                                                     |
+//! |----------------|------------------------------------------------------------|
+//! | `kill_after=K` | after K training replies the worker plays dead: every      |
+//! |                | connection (including heartbeats) is dropped on sight;     |
+//! |                | `kill_after=0` is dead-on-arrival                          |
+//! | `delay_ms=D`   | sleep D ms before every training reply                     |
+//! | `corrupt_at=N` | the Nth training reply (1-based) is sent as a garbage      |
+//! |                | frame the controller cannot decode                         |
+//! | `drop_at=N`    | the Nth training reply (1-based) is never sent — the       |
+//! |                | connection is dropped instead                              |
+//!
+//! When `drop_at` and `corrupt_at` land on the same reply, the drop
+//! wins. Faults only target the training path: handshake and stats
+//! frames are left intact so liveness itself stays observable until the
+//! kill threshold trips.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+
+/// Environment variable the worker binary reads a fault spec from when
+/// no `--faults` flag is given.
+pub const FAULTS_ENV: &str = "FASTSVDD_FAULTS";
+
+/// A deterministic, count-based worker misbehaviour schedule.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Play dead after this many training replies (0 = dead on arrival).
+    pub kill_after: Option<u64>,
+    /// Delay every training reply by this many milliseconds.
+    pub delay_ms: u64,
+    /// Corrupt the Nth training reply (1-based).
+    pub corrupt_at: Option<u64>,
+    /// Drop the connection instead of sending the Nth reply (1-based).
+    pub drop_at: Option<u64>,
+}
+
+impl FaultPlan {
+    /// Parse a `key=value[,key=value...]` spec. Unknown keys and
+    /// malformed numbers are rejected; an empty spec is rejected too (a
+    /// plan that does nothing is almost certainly a typo).
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        let mut any = false;
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (key, value) = part
+                .split_once('=')
+                .ok_or_else(|| Error::invalid(format!("fault spec '{part}': expected key=value")))?;
+            let n: u64 = value
+                .trim()
+                .parse()
+                .map_err(|_| Error::invalid(format!("fault spec '{part}': bad number")))?;
+            match key.trim() {
+                "kill_after" => plan.kill_after = Some(n),
+                "delay_ms" => plan.delay_ms = n,
+                "corrupt_at" => plan.corrupt_at = Some(n),
+                "drop_at" => plan.drop_at = Some(n),
+                k => return Err(Error::invalid(format!("fault spec: unknown key '{k}'"))),
+            }
+            any = true;
+        }
+        if !any {
+            return Err(Error::invalid("fault spec is empty"));
+        }
+        Ok(plan)
+    }
+
+    /// Read a plan from [`FAULTS_ENV`]; `Ok(None)` when unset or blank.
+    pub fn from_env() -> Result<Option<FaultPlan>> {
+        match std::env::var(FAULTS_ENV) {
+            Ok(spec) if !spec.trim().is_empty() => FaultPlan::parse(&spec).map(Some),
+            _ => Ok(None),
+        }
+    }
+}
+
+/// What the worker should do with one training reply.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReplyFault {
+    /// Send the reply normally (after `delay`).
+    Send { delay: Duration },
+    /// Send a garbage frame instead (after `delay`).
+    Corrupt { delay: Duration },
+    /// Drop the connection without replying.
+    Drop,
+}
+
+/// Shared, thread-safe enforcement of one worker's [`FaultPlan`] —
+/// every connection consults the same reply counter, so the schedule is
+/// global to the worker no matter how the controller spreads shards
+/// over connections.
+#[derive(Debug)]
+pub struct FaultInjector {
+    plan: FaultPlan,
+    replies: AtomicU64,
+    killed: AtomicBool,
+}
+
+impl FaultInjector {
+    pub fn new(plan: FaultPlan) -> FaultInjector {
+        FaultInjector {
+            plan,
+            replies: AtomicU64::new(0),
+            killed: AtomicBool::new(plan.kill_after == Some(0)),
+        }
+    }
+
+    /// An injector that never fires — the no-fault fast path.
+    pub fn none() -> FaultInjector {
+        FaultInjector::new(FaultPlan::default())
+    }
+
+    /// Has the kill threshold tripped? Dead workers drop every
+    /// connection (heartbeats included) without a byte in response.
+    pub fn killed(&self) -> bool {
+        self.killed.load(Ordering::SeqCst)
+    }
+
+    /// Account one training reply (1-based sequence across all of the
+    /// worker's connections) and return the fault to apply to it. Trips
+    /// the kill switch once `kill_after` replies have been accounted —
+    /// dropped and corrupted replies count, mirroring "kill worker k
+    /// after shard j" over the shards the worker *attempted*.
+    pub fn on_train_reply(&self) -> ReplyFault {
+        let n = self.replies.fetch_add(1, Ordering::SeqCst) + 1;
+        if let Some(k) = self.plan.kill_after {
+            if n >= k {
+                self.killed.store(true, Ordering::SeqCst);
+            }
+        }
+        let delay = Duration::from_millis(self.plan.delay_ms);
+        if self.plan.drop_at == Some(n) {
+            ReplyFault::Drop
+        } else if self.plan.corrupt_at == Some(n) {
+            ReplyFault::Corrupt { delay }
+        } else {
+            ReplyFault::Send { delay }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_spec() {
+        let plan = FaultPlan::parse("kill_after=2, delay_ms=50, corrupt_at=1, drop_at=3").unwrap();
+        assert_eq!(
+            plan,
+            FaultPlan {
+                kill_after: Some(2),
+                delay_ms: 50,
+                corrupt_at: Some(1),
+                drop_at: Some(3),
+            }
+        );
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(FaultPlan::parse("").is_err());
+        assert!(FaultPlan::parse("kill_after").is_err());
+        assert!(FaultPlan::parse("kill_after=soon").is_err());
+        assert!(FaultPlan::parse("explode=1").is_err());
+    }
+
+    #[test]
+    fn injector_is_deterministic() {
+        let plan = FaultPlan::parse("kill_after=3,corrupt_at=2,drop_at=1,delay_ms=7").unwrap();
+        let run = |inj: FaultInjector| {
+            let mut seq = Vec::new();
+            for _ in 0..4 {
+                seq.push((inj.on_train_reply(), inj.killed()));
+            }
+            seq
+        };
+        let a = run(FaultInjector::new(plan));
+        let b = run(FaultInjector::new(plan));
+        assert_eq!(a, b);
+        // and the schedule is exactly what the spec says
+        let d = Duration::from_millis(7);
+        assert_eq!(a[0].0, ReplyFault::Drop);
+        assert_eq!(a[1].0, ReplyFault::Corrupt { delay: d });
+        assert_eq!(a[2].0, ReplyFault::Send { delay: d });
+        assert!(!a[1].1, "alive before the kill threshold");
+        assert!(a[2].1, "dead once kill_after replies served");
+    }
+
+    #[test]
+    fn kill_after_zero_is_dead_on_arrival() {
+        let inj = FaultInjector::new(FaultPlan::parse("kill_after=0").unwrap());
+        assert!(inj.killed());
+    }
+
+    #[test]
+    fn noop_injector_never_fires() {
+        let inj = FaultInjector::none();
+        for _ in 0..10 {
+            assert_eq!(inj.on_train_reply(), ReplyFault::Send { delay: Duration::ZERO });
+        }
+        assert!(!inj.killed());
+    }
+}

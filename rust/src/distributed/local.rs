@@ -5,14 +5,15 @@
 
 use crate::config::Method;
 use crate::engine::{self, TrainContext, Trainer};
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::svdd::trainer::SvddParams;
 use crate::util::matrix::Matrix;
 use crate::util::rng::Xoshiro256;
 use rand_core::RngCore;
 
 use super::controller::{
-    combine_detailed, shard_with_shuffle, DistributedConfig, DistributedOutcome, WorkerReport,
+    combine_with_mode, shard_with_shuffle, DistributedConfig, DistributedOutcome, RetryStats,
+    WorkerReport,
 };
 
 /// Run the paper's distributed scheme with in-process workers.
@@ -59,7 +60,23 @@ pub fn train_local_cluster(
                 })
             })
             .collect();
-        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+        handles
+            .into_iter()
+            .map(|h| {
+                // surface a worker panic as a training error instead of
+                // tearing down the whole process
+                h.join().unwrap_or_else(|p| {
+                    let msg = if let Some(s) = p.downcast_ref::<&str>() {
+                        (*s).to_string()
+                    } else if let Some(s) = p.downcast_ref::<String>() {
+                        s.clone()
+                    } else {
+                        "unknown panic payload".to_string()
+                    };
+                    Err(Error::Distributed(format!("worker thread panicked: {msg}")))
+                })
+            })
+            .collect()
     });
 
     let mut sv_sets = Vec::with_capacity(results.len());
@@ -69,8 +86,16 @@ pub fn train_local_cluster(
         sv_sets.push(sv);
         reports.push(report);
     }
-    let (model, union_rows, solver) = combine_detailed(sv_sets, params)?;
-    Ok(DistributedOutcome { model, reports, union_rows, solver })
+    let (model, union_rows, solver, combine_solves) =
+        combine_with_mode(sv_sets, params, cfg.combine)?;
+    Ok(DistributedOutcome {
+        model,
+        reports,
+        union_rows,
+        solver,
+        combine_solves,
+        retry: RetryStats::default(),
+    })
 }
 
 #[cfg(test)]
@@ -88,7 +113,7 @@ mod tests {
             workers: 4,
             sampling: SamplingConfig { sample_size: 11, ..Default::default() },
             seed: 3,
-            shuffle_seed: None,
+            ..Default::default()
         };
         let dist = train_local_cluster(&data, &params, &cfg).unwrap();
         assert_eq!(dist.reports.len(), 4);
@@ -106,7 +131,7 @@ mod tests {
             workers: 1,
             sampling: SamplingConfig { sample_size: 11, ..Default::default() },
             seed: 4,
-            shuffle_seed: None,
+            ..Default::default()
         };
         let out = train_local_cluster(&data, &params, &cfg).unwrap();
         assert_eq!(out.reports.len(), 1);
@@ -121,7 +146,7 @@ mod tests {
             workers: 3,
             sampling: SamplingConfig { sample_size: 8, ..Default::default() },
             seed: 11,
-            shuffle_seed: None,
+            ..Default::default()
         };
         let a = train_local_cluster(&data, &params, &cfg).unwrap();
         let b = train_local_cluster(&data, &params, &cfg).unwrap();

@@ -15,11 +15,13 @@ use crate::util::matrix::Matrix;
 /// v2 added the model-lifecycle frames (`ModelInfoRequest`/`ModelInfo`/
 /// `SwapModel`/`SwapAck`) and the metrics frames (`StatsRequest`/
 /// `StatsReply`); v3 added the serving-edge frames (`ScoreRequestV2`/
-/// `ScoreReplyV2`/`Overloaded`). Every older frame is encoded
-/// identically, so newer servers still speak to older clients (see
-/// [`negotiate`]) — a session negotiated down must never carry a frame
-/// whose [`Message::min_version`] exceeds the session version.
-pub const PROTOCOL_VERSION: u32 = 3;
+/// `ScoreReplyV2`/`Overloaded`); v4 added the liveness frames
+/// (`Heartbeat`/`HeartbeatAck`) used by the fault-tolerant controller.
+/// Every older frame is encoded identically, so newer servers still
+/// speak to older clients (see [`negotiate`]) — a session negotiated
+/// down must never carry a frame whose [`Message::min_version`] exceeds
+/// the session version.
+pub const PROTOCOL_VERSION: u32 = 4;
 
 /// Oldest peer version this build still understands.
 pub const MIN_PROTOCOL_VERSION: u32 = 1;
@@ -129,6 +131,13 @@ pub enum Message {
     /// (bounded queue / in-flight cap). The connection survives; the
     /// client should back off and retry.
     Overloaded { reason: String },
+    /// Controller -> worker (v4): liveness probe. Sent on a fresh
+    /// short-timeout connection while a training connection is quiet,
+    /// so the controller can tell "still computing" from "dead".
+    Heartbeat,
+    /// Worker -> controller (v4): liveness ack. A worker that has been
+    /// fault-injected dead drops the connection instead of acking.
+    HeartbeatAck,
 }
 
 impl Message {
@@ -173,6 +182,8 @@ impl Message {
             Message::ScoreRequestV2 { .. } => 14,
             Message::ScoreReplyV2 { .. } => 15,
             Message::Overloaded { .. } => 16,
+            Message::Heartbeat => 17,
+            Message::HeartbeatAck => 18,
         }
     }
 
@@ -185,7 +196,8 @@ impl Message {
         match self.tag() {
             0..=7 => 1,
             8..=13 => 2,
-            _ => 3,
+            14..=16 => 3,
+            _ => 4,
         }
     }
 
@@ -271,6 +283,8 @@ impl Message {
             Message::Overloaded { reason } => {
                 put_bytes(&mut b, reason.as_bytes());
             }
+            Message::Heartbeat => {}
+            Message::HeartbeatAck => {}
         }
         b
     }
@@ -363,6 +377,8 @@ impl Message {
             16 => Message::Overloaded {
                 reason: String::from_utf8_lossy(&c.bytes()?).into_owned(),
             },
+            17 => Message::Heartbeat,
+            18 => Message::HeartbeatAck,
             t => return Err(Error::Distributed(format!("unknown tag {t}"))),
         };
         if c.pos != buf.len() {
@@ -554,6 +570,8 @@ mod tests {
                 model_id: "v-00f3a9c2deadbeef".into(),
             },
             Message::Overloaded { reason: "scoring queue full".into() },
+            Message::Heartbeat,
+            Message::HeartbeatAck,
         ];
         for m in msgs {
             let enc = m.encode();
@@ -654,8 +672,13 @@ mod tests {
             3
         );
         assert_eq!(Message::Overloaded { reason: String::new() }.min_version(), 3);
+        // the liveness frames are v4-only: a v3 session must never
+        // carry them (older builds cannot decode tags 17-18)
+        assert_eq!(Message::Heartbeat.min_version(), 4);
+        assert_eq!(Message::HeartbeatAck.min_version(), 4);
         // min_version is consistent with the v2 predicate
         assert!(Message::Overloaded { reason: String::new() }.requires_v2());
+        assert!(Message::Heartbeat.requires_v2());
     }
 
     #[test]

@@ -11,12 +11,25 @@
 //! - [`tcp`] — a length-prefixed binary protocol over TCP for actual
 //!   multi-process clusters (no tokio in the vendored crate set, so
 //!   std::net + a thread per connection).
+//!
+//! The TCP transport is fault tolerant: per-attempt socket deadlines,
+//! `Heartbeat` liveness probes, a healthy → suspect → dead worker state
+//! machine, bounded shard retry with exponential backoff + jitter and
+//! reassignment to surviving workers, and graceful degradation to local
+//! execution when the live set shrinks below `min_workers` (see
+//! [`tcp`]). Worker misbehaviour is reproducible on demand through the
+//! deterministic fault-injection layer in [`faults`].
 
 pub mod controller;
+pub mod faults;
 pub mod local;
 pub mod message;
 pub mod tcp;
 
-pub use controller::{DistributedConfig, DistributedOutcome};
+pub use controller::{CombineMode, DistributedConfig, DistributedOutcome, RetryStats};
+pub use faults::{FaultInjector, FaultPlan};
 pub use local::train_local_cluster;
-pub use tcp::{cluster_stats, train_tcp_cluster, ClusterStats, WorkerServer};
+pub use tcp::{
+    cluster_stats, cluster_stats_with_timeout, train_tcp_cluster, train_tcp_cluster_stream,
+    ClusterStats, WorkerServer, WorkerState,
+};

@@ -1,19 +1,50 @@
 //! TCP transport: a worker daemon (`fastsvdd worker --listen ...`) and
-//! a controller client, speaking the [`super::message`] protocol over
-//! length-prefixed frames. One thread per accepted connection; the
-//! handshake pins the protocol version.
+//! a fault-tolerant controller client, speaking the [`super::message`]
+//! protocol over length-prefixed frames. One thread per accepted
+//! connection; the handshake pins the protocol version.
+//!
+//! Controller fault tolerance:
+//! - every socket carries `connect`/`read`/`write` deadlines
+//!   ([`DistributedConfig::worker_timeout`]), so a hung peer can never
+//!   block the run;
+//! - when a training reply is late, liveness is probed with a
+//!   [`Message::Heartbeat`] on a fresh connection — "still solving" and
+//!   "dead" are different facts, and only the latter fails the attempt;
+//! - each worker address runs through a [`WorkerState`] machine
+//!   (healthy → suspect → dead); a dead worker's controller thread
+//!   exits and its shards are reassigned to survivors;
+//! - failed shards re-enter a shared work queue with exponential
+//!   backoff + deterministic jitter ([`RetrySchedule`]), bounded by
+//!   [`DistributedConfig::max_retries`] attempts beyond the first;
+//! - when fewer than [`DistributedConfig::min_workers`] workers remain
+//!   alive (but at least one), remaining shards are trained locally in
+//!   the controller; zero live workers fails the run with
+//!   [`Error::Distributed`].
+//!
+//! Results are keyed by shard index and combined in shard order, so the
+//! final model is independent of which worker trained which shard and
+//! of retry timing — a clean run and a run that survived failures
+//! produce bit-identical models.
 //!
 //! Each worker keeps a [`Metrics`] registry of its solver telemetry; a
 //! v2 peer pulls it with [`Message::StatsRequest`], and
 //! [`cluster_stats`] fans that request across a worker fleet and
 //! [`crate::metrics::aggregate`]s the exact counters cluster-wide.
+//! Worker misbehaviour for chaos testing is injected with a
+//! deterministic [`FaultPlan`] (see [`super::faults`]).
 
-use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::collections::BTreeMap;
+use std::io::{ErrorKind, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::path::Path;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
+use crate::data::csv::CsvChunks;
 use crate::error::{Error, Result};
 use crate::metrics::Metrics;
+use crate::obs;
 use crate::sampling::{SamplingConfig, SamplingTrainer};
 use crate::svdd::trainer::SvddParams;
 use crate::svdd::Kernel;
@@ -22,13 +53,26 @@ use crate::util::rng::Xoshiro256;
 use rand_core::RngCore;
 
 use super::controller::{
-    combine_detailed, shard_with_shuffle, DistributedConfig, DistributedOutcome, WorkerReport,
+    combine_with_mode, shard_with_shuffle, DistributedConfig, DistributedOutcome, RetryStats,
+    WorkerReport,
 };
+use super::faults::{FaultInjector, FaultPlan, ReplyFault};
 use super::message::{negotiate, Message, PROTOCOL_VERSION};
+
+/// Deadline for [`cluster_stats`] sockets (the config-driven paths use
+/// [`DistributedConfig::worker_timeout`] instead).
+pub const DEFAULT_CLUSTER_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// How many times a quiet-but-heartbeating worker is granted another
+/// `worker_timeout` of waiting before the attempt is failed anyway. The
+/// cap keeps a live-but-stuck worker from blocking the run forever
+/// (worst case one attempt waits `(MAX_GRACE_PROBES + 1) ×
+/// worker_timeout`).
+const MAX_GRACE_PROBES: u32 = 64;
 
 /// A running worker server (owns its listener thread).
 pub struct WorkerServer {
-    addr: std::net::SocketAddr,
+    addr: SocketAddr,
     stop: Arc<AtomicBool>,
     handle: Option<std::thread::JoinHandle<()>>,
     metrics: Arc<Metrics>,
@@ -38,6 +82,16 @@ impl WorkerServer {
     /// Bind `addr` (e.g. "127.0.0.1:0") and serve train requests until
     /// [`WorkerServer::stop`] or process exit.
     pub fn spawn(addr: impl ToSocketAddrs) -> Result<WorkerServer> {
+        WorkerServer::spawn_with_faults(addr, None)
+    }
+
+    /// [`WorkerServer::spawn`] with a deterministic misbehaviour
+    /// schedule (chaos testing; see [`super::faults`]). `None` serves
+    /// faithfully.
+    pub fn spawn_with_faults(
+        addr: impl ToSocketAddrs,
+        plan: Option<FaultPlan>,
+    ) -> Result<WorkerServer> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;
@@ -45,6 +99,10 @@ impl WorkerServer {
         let stop2 = stop.clone();
         let metrics = Arc::new(Metrics::new());
         let accept_metrics = metrics.clone();
+        let injector = Arc::new(match plan {
+            Some(p) => FaultInjector::new(p),
+            None => FaultInjector::none(),
+        });
         let handle = std::thread::spawn(move || {
             while !stop2.load(Ordering::Relaxed) {
                 match listener.accept() {
@@ -52,12 +110,13 @@ impl WorkerServer {
                         stream.set_nonblocking(false).ok();
                         let stop3 = stop2.clone();
                         let mx = accept_metrics.clone();
+                        let inj = injector.clone();
                         std::thread::spawn(move || {
-                            let _ = handle_connection(stream, &stop3, &mx);
+                            let _ = handle_connection(stream, &stop3, &mx, &inj);
                         });
                     }
-                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                        std::thread::sleep(std::time::Duration::from_millis(10));
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(10));
                     }
                     Err(_) => break,
                 }
@@ -66,7 +125,7 @@ impl WorkerServer {
         Ok(WorkerServer { addr: local, stop, handle: Some(handle), metrics })
     }
 
-    pub fn addr(&self) -> std::net::SocketAddr {
+    pub fn addr(&self) -> SocketAddr {
         self.addr
     }
 
@@ -94,7 +153,12 @@ fn handle_connection(
     mut stream: TcpStream,
     stop: &AtomicBool,
     metrics: &Metrics,
+    faults: &FaultInjector,
 ) -> Result<()> {
+    // a fault-killed worker plays dead: drop without a byte
+    if faults.killed() {
+        return Err(Error::Distributed("fault injection: worker is dead".into()));
+    }
     // handshake
     let session_version = match Message::read_from(&mut stream)? {
         Message::Hello { version } => match negotiate(version) {
@@ -120,6 +184,9 @@ fn handle_connection(
             Ok(m) => m,
             Err(_) => break, // peer went away
         };
+        if faults.killed() {
+            return Err(Error::Distributed("fault injection: worker is dead".into()));
+        }
         // never accept a frame the negotiated session version cannot carry
         if msg.min_version() > session_version {
             return Err(Error::Distributed(format!(
@@ -151,7 +218,27 @@ fn handle_connection(
                     }
                     Err(e) => Message::TrainFailed { reason: e.to_string() },
                 };
-                reply.write_to(&mut stream)?;
+                match faults.on_train_reply() {
+                    ReplyFault::Drop => {
+                        return Err(Error::Distributed("fault injection: dropped reply".into()));
+                    }
+                    ReplyFault::Corrupt { delay } => {
+                        if !delay.is_zero() {
+                            std::thread::sleep(delay);
+                        }
+                        write_corrupted(&reply, &mut stream)?;
+                    }
+                    ReplyFault::Send { delay } => {
+                        if !delay.is_zero() {
+                            std::thread::sleep(delay);
+                        }
+                        reply.write_to(&mut stream)?;
+                    }
+                }
+            }
+            Message::Heartbeat => {
+                metrics.heartbeats_served.inc();
+                Message::HeartbeatAck.write_to(&mut stream)?;
             }
             Message::StatsRequest => {
                 Message::StatsReply {
@@ -169,110 +256,574 @@ fn handle_connection(
     Ok(())
 }
 
-/// Controller over TCP workers: shard the data, send one Train per
-/// worker (round-robin over addresses), gather SV sets, combine.
+/// Write `msg` as a correctly-framed but garbage-bodied message (every
+/// body byte XORed), so the peer's decode fails without desyncing the
+/// length-prefixed stream — the fault-injection shape of "a worker sent
+/// us garbage".
+fn write_corrupted(msg: &Message, w: &mut impl Write) -> Result<()> {
+    let mut body = msg.encode();
+    for b in &mut body {
+        *b ^= 0xA5;
+    }
+    w.write_all(&(body.len() as u32).to_le_bytes())?;
+    w.write_all(&body)?;
+    w.flush()?;
+    Ok(())
+}
+
+// ------------------------------------------------- controller: health
+
+/// Controller-side liveness verdict for one worker address.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WorkerState {
+    /// Serving normally.
+    Healthy,
+    /// One failed attempt, but the worker still acks heartbeats — the
+    /// failure may have been shard- or connection-specific.
+    Suspect,
+    /// Two consecutive failures, or any failure with no heartbeat ack.
+    /// Dead workers get no more work; their shards are reassigned.
+    Dead,
+}
+
+/// The healthy → suspect → dead state machine. Any successful attempt
+/// resets to healthy; a failure whose liveness probe goes unanswered is
+/// immediately dead (the worker is gone, not struggling).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WorkerHealth {
+    state: Option<WorkerState>,
+}
+
+impl WorkerHealth {
+    pub fn state(&self) -> WorkerState {
+        self.state.unwrap_or(WorkerState::Healthy)
+    }
+
+    pub fn on_success(&mut self) {
+        self.state = Some(WorkerState::Healthy);
+    }
+
+    /// Record a failed attempt; `probe_acked` says whether the worker
+    /// answered a heartbeat afterwards.
+    pub fn on_failure(&mut self, probe_acked: bool) {
+        self.state = Some(match (self.state(), probe_acked) {
+            (_, false) => WorkerState::Dead,
+            (WorkerState::Healthy, true) => WorkerState::Suspect,
+            (WorkerState::Suspect | WorkerState::Dead, true) => WorkerState::Dead,
+        });
+    }
+}
+
+// ------------------------------------------------ controller: backoff
+
+/// Exponential backoff with deterministic jitter for shard retries:
+/// `base · 2^attempt + jitter`, capped at `cap`. The jitter is drawn
+/// from a [`Xoshiro256`] stream keyed on (run seed, shard index,
+/// attempt) — no wall clock, no global RNG — so a given run retries on
+/// an exactly reproducible schedule.
+#[derive(Clone, Copy, Debug)]
+pub struct RetrySchedule {
+    pub base: Duration,
+    pub cap: Duration,
+}
+
+impl RetrySchedule {
+    /// Derive from the per-attempt socket deadline: backoff starts at
+    /// an eighth of it (at least 10ms) and never exceeds it.
+    pub fn from_timeout(worker_timeout: Duration) -> RetrySchedule {
+        let base = (worker_timeout / 8).max(Duration::from_millis(10));
+        RetrySchedule { base, cap: worker_timeout.max(base) }
+    }
+
+    /// Delay before retrying a shard whose 0-based `attempt` just
+    /// failed. Jitter is uniform in `[0, base/2)`.
+    pub fn delay(&self, attempt: usize, seed: u64, shard: u64) -> Duration {
+        let exp = self.base.saturating_mul(1u32 << attempt.min(16) as u32);
+        let half_us = (self.base / 2).as_micros() as u64;
+        let jitter_us = if half_us == 0 {
+            0
+        } else {
+            let mut rng = Xoshiro256::new(seed ^ 0x9E37_79B9_7F4A_7C15).stream(shard);
+            let mut j = 0;
+            for _ in 0..=attempt {
+                j = rng.next_u64();
+            }
+            j % half_us
+        };
+        (exp + Duration::from_micros(jitter_us)).min(self.cap)
+    }
+}
+
+// -------------------------------------------- controller: work queue
+
+/// Where shards come from: pre-sharded in memory, or streamed out of a
+/// CSV in bounded chunks (each chunk is one shard) so the controller
+/// never materialises the full dataset.
+enum ShardSource {
+    Memory(std::vec::IntoIter<Matrix>),
+    Csv(Box<CsvChunks>),
+}
+
+impl ShardSource {
+    fn next_shard(&mut self) -> Result<Option<Matrix>> {
+        match self {
+            ShardSource::Memory(it) => Ok(it.next()),
+            ShardSource::Csv(chunks) => chunks.next_chunk(),
+        }
+    }
+}
+
+struct Task {
+    shard: usize,
+    seed: u64,
+    data: Matrix,
+    /// 0-based attempts already consumed before this one.
+    attempt: usize,
+    not_before: Instant,
+    last_worker: Option<usize>,
+}
+
+struct CtrlState {
+    source: ShardSource,
+    next_shard: usize,
+    source_done: bool,
+    retry: Vec<Task>,
+    done: BTreeMap<usize, (Matrix, WorkerReport)>,
+    in_flight: usize,
+    alive: usize,
+    fatal: Option<String>,
+    stats: RetryStats,
+}
+
+struct Shared {
+    state: Mutex<CtrlState>,
+    cv: Condvar,
+    params: SvddParams,
+    sampling: SamplingConfig,
+    seed: u64,
+    timeout: Duration,
+    max_retries: usize,
+    min_workers: usize,
+    backoff: RetrySchedule,
+}
+
+/// Pull the next task for controller thread `w`: an eligible retry
+/// first (counting cross-worker reassignment), else a fresh shard from
+/// the source. Returns the task plus whether the run has degraded below
+/// `min_workers` (train locally). `None` means this thread is done —
+/// every shard has a result, or the run failed.
+fn acquire(shared: &Shared, w: usize) -> Option<(Task, bool)> {
+    let mut st = shared.state.lock().unwrap();
+    loop {
+        if st.fatal.is_some() {
+            return None;
+        }
+        let now = Instant::now();
+        if let Some(pos) = st.retry.iter().position(|t| t.not_before <= now) {
+            let task = st.retry.swap_remove(pos);
+            if task.last_worker.is_some_and(|lw| lw != w) {
+                st.stats.shards_reassigned += 1;
+            }
+            st.in_flight += 1;
+            let degraded = st.alive < shared.min_workers;
+            return Some((task, degraded));
+        }
+        if !st.source_done {
+            match st.source.next_shard() {
+                Ok(Some(data)) => {
+                    let shard = st.next_shard;
+                    st.next_shard += 1;
+                    st.in_flight += 1;
+                    let seed = Xoshiro256::new(shared.seed).stream(shard as u64).next_u64();
+                    let degraded = st.alive < shared.min_workers;
+                    let task = Task {
+                        shard,
+                        seed,
+                        data,
+                        attempt: 0,
+                        not_before: now,
+                        last_worker: None,
+                    };
+                    return Some((task, degraded));
+                }
+                Ok(None) => {
+                    st.source_done = true;
+                    continue;
+                }
+                Err(e) => {
+                    st.fatal = Some(format!("shard source: {e}"));
+                    shared.cv.notify_all();
+                    return None;
+                }
+            }
+        }
+        if st.retry.is_empty() && st.in_flight == 0 {
+            return None; // drained: every shard has a result
+        }
+        // a retry may become eligible or an in-flight attempt may
+        // requeue work; short timed waits keep this race-free without
+        // tracking exact wake deadlines
+        let (guard, _) = shared.cv.wait_timeout(st, Duration::from_millis(25)).unwrap();
+        st = guard;
+    }
+}
+
+/// One controller thread per worker address: pull tasks, execute
+/// remotely (or locally once degraded), feed the state machine, requeue
+/// failures with backoff. Exits when its worker is declared dead or the
+/// queue is drained.
+fn worker_loop(shared: &Shared, w: usize, addr: SocketAddr) {
+    let mut health = WorkerHealth::default();
+    while let Some((task, degraded)) = acquire(shared, w) {
+        let mut span = obs::Span::enter("distributed.shard");
+        // panic-capture: one poisoned attempt surfaces as a failed
+        // attempt (retried like any other), never an aborted process
+        let attempt_res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            if degraded {
+                train_shard_inprocess(&task, shared)
+            } else {
+                run_shard_remote(addr, &task, shared)
+            }
+        }))
+        .unwrap_or_else(|p| {
+            Err(Error::Distributed(format!(
+                "shard {} controller thread panicked: {}",
+                task.shard,
+                panic_message(p.as_ref())
+            )))
+        });
+        if span.is_live() {
+            span.u64("shard", task.shard as u64);
+            span.u64("attempt", task.attempt as u64 + 1);
+            span.u64("worker", w as u64);
+            span.u64("local", u64::from(degraded));
+            span.u64("ok", u64::from(attempt_res.is_ok()));
+        }
+        drop(span);
+        match attempt_res {
+            Ok((sv, iterations, converged)) => {
+                let mut st = shared.state.lock().unwrap();
+                st.in_flight -= 1;
+                if degraded {
+                    st.stats.shards_local_fallback += 1;
+                } else {
+                    health.on_success();
+                }
+                let report = WorkerReport {
+                    worker: task.shard,
+                    shard_rows: task.data.rows(),
+                    sv_count: sv.rows(),
+                    iterations: iterations as usize,
+                    converged,
+                };
+                st.done.insert(task.shard, (sv, report));
+                shared.cv.notify_all();
+            }
+            Err(e) => {
+                // probe liveness on a fresh connection: "this shard
+                // attempt failed" and "the worker is gone" are
+                // different facts with different consequences
+                let probe_acked = !degraded && heartbeat_probe(addr, shared.timeout);
+                if !degraded {
+                    health.on_failure(probe_acked);
+                }
+                let mut st = shared.state.lock().unwrap();
+                st.in_flight -= 1;
+                st.stats.worker_failures += 1;
+                if degraded {
+                    // local execution failing is a training error, not
+                    // a transport fault — retrying cannot help
+                    st.fatal = Some(format!("local fallback for shard {}: {e}", task.shard));
+                } else if task.attempt >= shared.max_retries {
+                    st.fatal = Some(format!(
+                        "shard {} failed after {} attempts (last worker {addr}): {e}",
+                        task.shard,
+                        task.attempt + 1
+                    ));
+                } else {
+                    let delay = shared.backoff.delay(task.attempt, shared.seed, task.shard as u64);
+                    obs::emit(
+                        "distributed.retry",
+                        vec![
+                            ("shard", obs::Value::U64(task.shard as u64)),
+                            ("attempt", obs::Value::U64(task.attempt as u64 + 1)),
+                            ("delay_us", obs::Value::U64(delay.as_micros() as u64)),
+                        ],
+                    );
+                    st.stats.shard_retries += 1;
+                    st.retry.push(Task {
+                        attempt: task.attempt + 1,
+                        not_before: Instant::now() + delay,
+                        last_worker: Some(w),
+                        ..task
+                    });
+                }
+                if !degraded && health.state() == WorkerState::Dead {
+                    st.stats.workers_lost += 1;
+                    st.alive -= 1;
+                    obs::emit(
+                        "distributed.worker_dead",
+                        vec![("worker", obs::Value::U64(w as u64))],
+                    );
+                    shared.cv.notify_all();
+                    return;
+                }
+                shared.cv.notify_all();
+            }
+        }
+    }
+}
+
+/// One remote training attempt over a fresh deadline-guarded
+/// connection. While the reply is late but the worker still acks
+/// heartbeats, the wait is extended (a long solve is not a failure) up
+/// to [`MAX_GRACE_PROBES`] times.
+fn run_shard_remote(
+    addr: SocketAddr,
+    task: &Task,
+    shared: &Shared,
+) -> Result<(Matrix, u32, bool)> {
+    let mut stream = connect(addr, shared.timeout)?;
+    handshake(&mut stream, addr)?;
+    Message::train(task.data.clone(), &shared.params, &shared.sampling, task.seed)
+        .write_to(&mut stream)?;
+    // wait via peek so a timeout never consumes partial frame bytes
+    let mut probes = 0u32;
+    loop {
+        let mut first = [0u8; 1];
+        match stream.peek(&mut first) {
+            Ok(0) => {
+                return Err(Error::Distributed(format!("worker {addr}: connection closed")));
+            }
+            Ok(_) => break,
+            Err(e) if is_timeout(&e) => {
+                probes += 1;
+                if probes > MAX_GRACE_PROBES || !heartbeat_probe(addr, shared.timeout) {
+                    return Err(Error::Distributed(format!(
+                        "worker {addr}: no reply within {:?} and no heartbeat",
+                        shared.timeout
+                    )));
+                }
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    match Message::read_from(&mut stream)? {
+        Message::TrainDone { sv, iterations, converged, .. } => {
+            Message::Shutdown.write_to(&mut stream).ok();
+            Ok((sv, iterations, converged))
+        }
+        Message::TrainFailed { reason } => {
+            Err(Error::Distributed(format!("worker {addr}: {reason}")))
+        }
+        other => Err(Error::Distributed(format!("worker {addr}: unexpected {other:?}"))),
+    }
+}
+
+/// Degraded-mode execution: the same computation a worker would run,
+/// in-process — bit-identical to the remote result for the same
+/// (shard, seed).
+fn train_shard_inprocess(task: &Task, shared: &Shared) -> Result<(Matrix, u32, bool)> {
+    let out = SamplingTrainer::new(shared.params, shared.sampling).train(&task.data, task.seed)?;
+    Ok((out.model.support_vectors().clone(), out.iterations as u32, out.converged))
+}
+
+/// Is the worker alive? Fresh short-deadline connection, handshake,
+/// `Heartbeat` → `HeartbeatAck`. A pre-v4 worker that answers the
+/// handshake counts as alive (it cannot ack but it is clearly serving).
+fn heartbeat_probe(addr: SocketAddr, timeout: Duration) -> bool {
+    let attempt = || -> Result<bool> {
+        let mut stream = connect(addr, timeout)?;
+        let v = handshake(&mut stream, addr)?;
+        if v < 4 {
+            return Ok(true);
+        }
+        Message::Heartbeat.write_to(&mut stream)?;
+        Ok(matches!(Message::read_from(&mut stream)?, Message::HeartbeatAck))
+    };
+    attempt().unwrap_or(false)
+}
+
+fn connect(addr: SocketAddr, timeout: Duration) -> Result<TcpStream> {
+    let stream = TcpStream::connect_timeout(&addr, timeout)?;
+    stream.set_read_timeout(Some(timeout))?;
+    stream.set_write_timeout(Some(timeout))?;
+    Ok(stream)
+}
+
+fn handshake(stream: &mut TcpStream, addr: SocketAddr) -> Result<u32> {
+    Message::Hello { version: PROTOCOL_VERSION }.write_to(stream)?;
+    match Message::read_from(stream)? {
+        Message::HelloAck { version } => negotiate(version)
+            .ok_or_else(|| Error::Distributed(format!("worker {addr}: bad version {version}"))),
+        other => Err(Error::Distributed(format!("worker {addr}: bad handshake reply: {other:?}"))),
+    }
+}
+
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut)
+}
+
+fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "unknown panic payload".to_string()
+    }
+}
+
+// --------------------------------------------- controller: entry points
+
+/// Controller over TCP workers: shard the data, fan the shards over the
+/// worker addresses through the fault-tolerant work queue, gather SV
+/// sets, combine (per [`DistributedConfig::combine`]).
 pub fn train_tcp_cluster(
     data: &Matrix,
     params: &SvddParams,
     cfg: &DistributedConfig,
-    addrs: &[std::net::SocketAddr],
+    addrs: &[SocketAddr],
+) -> Result<DistributedOutcome> {
+    let shards = shard_with_shuffle(data, cfg.workers, cfg.shuffle_seed);
+    run_cluster(ShardSource::Memory(shards.into_iter()), params, cfg, addrs)
+}
+
+/// [`train_tcp_cluster`] over a CSV streamed in bounded chunks of
+/// `chunk_rows` rows — each chunk becomes one shard, shipped to a
+/// worker as soon as a controller thread is free, so the controller
+/// holds at most (live workers + retry queue) chunks in memory instead
+/// of the whole dataset. `cfg.workers` is ignored (the shard count is
+/// the chunk count) and `cfg.shuffle_seed` is rejected: a pre-shuffle
+/// needs the full dataset, which streaming exists to avoid.
+pub fn train_tcp_cluster_stream(
+    path: &Path,
+    has_header: bool,
+    chunk_rows: usize,
+    params: &SvddParams,
+    cfg: &DistributedConfig,
+    addrs: &[SocketAddr],
+) -> Result<DistributedOutcome> {
+    if cfg.shuffle_seed.is_some() {
+        return Err(Error::Config(
+            "shuffle_seed needs the in-memory path; streamed shards are chunk-ordered".into(),
+        ));
+    }
+    let chunks = CsvChunks::open(path, has_header, chunk_rows)?;
+    run_cluster(ShardSource::Csv(Box::new(chunks)), params, cfg, addrs)
+}
+
+fn run_cluster(
+    source: ShardSource,
+    params: &SvddParams,
+    cfg: &DistributedConfig,
+    addrs: &[SocketAddr],
 ) -> Result<DistributedOutcome> {
     if addrs.is_empty() {
         return Err(Error::Distributed("no worker addresses".into()));
     }
-    let shards = shard_with_shuffle(data, cfg.workers, cfg.shuffle_seed);
-    let base = Xoshiro256::new(cfg.seed);
-
-    let results: Vec<Result<(Matrix, WorkerReport)>> = std::thread::scope(|scope| {
-        let handles: Vec<_> = shards
-            .into_iter()
+    let shared = Shared {
+        state: Mutex::new(CtrlState {
+            source,
+            next_shard: 0,
+            source_done: false,
+            retry: Vec::new(),
+            done: BTreeMap::new(),
+            in_flight: 0,
+            alive: addrs.len(),
+            fatal: None,
+            stats: RetryStats::default(),
+        }),
+        cv: Condvar::new(),
+        params: *params,
+        sampling: cfg.sampling,
+        seed: cfg.seed,
+        timeout: cfg.worker_timeout,
+        max_retries: cfg.max_retries,
+        min_workers: cfg.min_workers,
+        backoff: RetrySchedule::from_timeout(cfg.worker_timeout),
+    };
+    let panics: Vec<String> = std::thread::scope(|scope| {
+        let handles: Vec<_> = addrs
+            .iter()
             .enumerate()
-            .map(|(i, shard_data)| {
-                let addr = addrs[i % addrs.len()];
-                let params = *params;
-                let sampling = cfg.sampling;
-                let mut rng = base.stream(i as u64);
-                let seed = rng.next_u64();
-                scope.spawn(move || -> Result<(Matrix, WorkerReport)> {
-                    let mut stream = TcpStream::connect(addr)?;
-                    Message::Hello { version: PROTOCOL_VERSION }.write_to(&mut stream)?;
-                    match Message::read_from(&mut stream)? {
-                        Message::HelloAck { version } if negotiate(version).is_some() => {}
-                        other => {
-                            return Err(Error::Distributed(format!(
-                                "bad handshake reply: {other:?}"
-                            )))
-                        }
-                    }
-                    let rows = shard_data.rows();
-                    Message::train(shard_data, &params, &sampling, seed)
-                        .write_to(&mut stream)?;
-                    match Message::read_from(&mut stream)? {
-                        Message::TrainDone { sv, iterations, converged, .. } => {
-                            let report = WorkerReport {
-                                worker: i,
-                                shard_rows: rows,
-                                sv_count: sv.rows(),
-                                iterations: iterations as usize,
-                                converged,
-                            };
-                            Message::Shutdown.write_to(&mut stream).ok();
-                            Ok((sv, report))
-                        }
-                        Message::TrainFailed { reason } => {
-                            Err(Error::Distributed(format!("worker {i}: {reason}")))
-                        }
-                        other => Err(Error::Distributed(format!("unexpected {other:?}"))),
-                    }
-                })
+            .map(|(w, &addr)| {
+                let shared = &shared;
+                scope.spawn(move || worker_loop(shared, w, addr))
             })
             .collect();
-        handles.into_iter().map(|h| h.join().expect("controller thread panicked")).collect()
+        handles
+            .into_iter()
+            .filter_map(|h| h.join().err().map(|p| panic_message(p.as_ref())))
+            .collect()
     });
-
-    let mut sv_sets = Vec::new();
-    let mut reports = Vec::new();
-    for r in results {
-        let (sv, report) = r?;
+    let mut st = shared
+        .state
+        .into_inner()
+        .map_err(|_| Error::Distributed("controller state poisoned by a panicked thread".into()))?;
+    if let Some(p) = panics.first() {
+        return Err(Error::Distributed(format!("controller thread panicked: {p}")));
+    }
+    if let Some(f) = st.fatal.take() {
+        return Err(Error::Distributed(f));
+    }
+    if !st.retry.is_empty() || !st.source_done {
+        return Err(Error::Distributed(format!(
+            "all {} worker(s) dead; {} queued shard(s) unfinished",
+            addrs.len(),
+            st.retry.len().max(1)
+        )));
+    }
+    let mut sv_sets = Vec::with_capacity(st.done.len());
+    let mut reports = Vec::with_capacity(st.done.len());
+    for (_, (sv, report)) in st.done {
         sv_sets.push(sv);
         reports.push(report);
     }
-    let (model, union_rows, solver) = combine_detailed(sv_sets, params)?;
-    Ok(DistributedOutcome { model, reports, union_rows, solver })
+    let (model, union_rows, solver, combine_solves) =
+        combine_with_mode(sv_sets, params, cfg.combine)?;
+    Ok(DistributedOutcome {
+        model,
+        reports,
+        union_rows,
+        solver,
+        combine_solves,
+        retry: st.stats,
+    })
 }
 
 /// Cluster-wide metrics pulled by [`cluster_stats`].
 #[derive(Clone, Debug)]
 pub struct ClusterStats {
     /// Each worker's exact counter snapshot, in `addrs` order.
-    pub per_worker: Vec<(std::net::SocketAddr, Vec<(String, u64)>)>,
+    pub per_worker: Vec<(SocketAddr, Vec<(String, u64)>)>,
     /// [`crate::metrics::aggregate`] of every snapshot: per-key sums
     /// across the fleet.
     pub totals: Vec<(String, u64)>,
 }
 
 /// Pull every worker's metrics over the v2 [`Message::StatsRequest`]
-/// frame and aggregate the exact counters cluster-wide. Fails if any
+/// frame and aggregate the exact counters cluster-wide, with
+/// [`DEFAULT_CLUSTER_TIMEOUT`] deadlines on every socket. Fails if any
 /// worker is unreachable or negotiates below v2 (stats frames must
 /// never be sent on a v1 session).
-pub fn cluster_stats(addrs: &[std::net::SocketAddr]) -> Result<ClusterStats> {
+pub fn cluster_stats(addrs: &[SocketAddr]) -> Result<ClusterStats> {
+    cluster_stats_with_timeout(addrs, DEFAULT_CLUSTER_TIMEOUT)
+}
+
+/// [`cluster_stats`] with an explicit per-socket deadline (wire it to
+/// the run's `worker_timeout` when scraping a training cluster).
+pub fn cluster_stats_with_timeout(
+    addrs: &[SocketAddr],
+    timeout: Duration,
+) -> Result<ClusterStats> {
     if addrs.is_empty() {
         return Err(Error::Distributed("no worker addresses".into()));
     }
     let mut per_worker = Vec::with_capacity(addrs.len());
     for &addr in addrs {
-        let mut stream = TcpStream::connect(addr)?;
-        Message::Hello { version: PROTOCOL_VERSION }.write_to(&mut stream)?;
-        let v = match Message::read_from(&mut stream)? {
-            Message::HelloAck { version } => negotiate(version).ok_or_else(|| {
-                Error::Distributed(format!("worker {addr}: bad version {version}"))
-            })?,
-            other => {
-                return Err(Error::Distributed(format!(
-                    "worker {addr}: bad handshake reply: {other:?}"
-                )))
-            }
-        };
+        let mut stream = connect(addr, timeout)?;
+        let v = handshake(&mut stream, addr)?;
         if v < 2 {
             return Err(Error::Distributed(format!(
                 "worker {addr} negotiated v{v}; stats need v2"
@@ -282,15 +833,12 @@ pub fn cluster_stats(addrs: &[std::net::SocketAddr]) -> Result<ClusterStats> {
         match Message::read_from(&mut stream)? {
             Message::StatsReply { counters, .. } => per_worker.push((addr, counters)),
             other => {
-                return Err(Error::Distributed(format!(
-                    "worker {addr}: unexpected {other:?}"
-                )))
+                return Err(Error::Distributed(format!("worker {addr}: unexpected {other:?}")))
             }
         }
         Message::Shutdown.write_to(&mut stream).ok();
     }
-    let snapshots: Vec<Vec<(String, u64)>> =
-        per_worker.iter().map(|(_, c)| c.clone()).collect();
+    let snapshots: Vec<Vec<(String, u64)>> = per_worker.iter().map(|(_, c)| c.clone()).collect();
     let totals = crate::metrics::aggregate(&snapshots);
     Ok(ClusterStats { per_worker, totals })
 }
@@ -309,14 +857,17 @@ mod tests {
         let data = TwoDonut::default().generate(4000, 8);
         let params = SvddParams::gaussian(0.4, 0.001);
         let cfg = DistributedConfig {
-            workers: 4, // 4 shards over 2 workers (round robin)
+            workers: 4, // 4 shards over 2 workers
             sampling: SamplingConfig { sample_size: 11, ..Default::default() },
             seed: 5,
-            shuffle_seed: None,
+            ..Default::default()
         };
         let out = train_tcp_cluster(&data, &params, &cfg, &addrs).unwrap();
         assert_eq!(out.reports.len(), 4);
         assert!(out.model.r2() > 0.5);
+        // clean run: no failures, no retries, one flat combine solve
+        assert_eq!(out.retry, RetryStats::default());
+        assert_eq!(out.combine_solves, 1);
         w1.stop();
         w2.stop();
     }
@@ -330,7 +881,7 @@ mod tests {
             workers: 2,
             sampling: SamplingConfig { sample_size: 8, ..Default::default() },
             seed: 21,
-            shuffle_seed: None,
+            ..Default::default()
         };
         let tcp = train_tcp_cluster(&data, &params, &cfg, &[w.addr()]).unwrap();
         let local = super::super::local::train_local_cluster(&data, &params, &cfg).unwrap();
@@ -360,7 +911,7 @@ mod tests {
             workers: 2,
             sampling: SamplingConfig { sample_size: 9, ..Default::default() },
             seed: 11,
-            shuffle_seed: None,
+            ..Default::default()
         };
         let out = train_tcp_cluster(&data, &params, &cfg, &addrs).unwrap();
         let stats = cluster_stats(&addrs).unwrap();
@@ -385,5 +936,67 @@ mod tests {
         assert!(total("smo_iterations") > 0);
         w1.stop();
         w2.stop();
+    }
+
+    #[test]
+    fn heartbeat_probe_reflects_liveness() {
+        let mut w = WorkerServer::spawn("127.0.0.1:0").unwrap();
+        let timeout = Duration::from_secs(5);
+        assert!(heartbeat_probe(w.addr(), timeout));
+        assert_eq!(w.metrics().heartbeats_served.get(), 1);
+        // a fault-killed worker accepts and immediately drops: no ack
+        let dead = WorkerServer::spawn_with_faults(
+            "127.0.0.1:0",
+            Some(FaultPlan::parse("kill_after=0").unwrap()),
+        )
+        .unwrap();
+        assert!(!heartbeat_probe(dead.addr(), Duration::from_millis(500)));
+        w.stop();
+    }
+
+    #[test]
+    fn worker_state_machine_transitions() {
+        let mut h = WorkerHealth::default();
+        assert_eq!(h.state(), WorkerState::Healthy);
+        // failure with a live heartbeat: benefit of the doubt
+        h.on_failure(true);
+        assert_eq!(h.state(), WorkerState::Suspect);
+        // success resets
+        h.on_success();
+        assert_eq!(h.state(), WorkerState::Healthy);
+        // two consecutive acked failures: dead
+        h.on_failure(true);
+        h.on_failure(true);
+        assert_eq!(h.state(), WorkerState::Dead);
+        // an unacked failure is immediately dead, from any state
+        let mut h2 = WorkerHealth::default();
+        h2.on_failure(false);
+        assert_eq!(h2.state(), WorkerState::Dead);
+    }
+
+    #[test]
+    fn retry_schedule_deterministic_growing_capped() {
+        let sched = RetrySchedule::from_timeout(Duration::from_secs(8));
+        assert_eq!(sched.base, Duration::from_secs(1));
+        // deterministic: same (attempt, seed, shard) -> same delay
+        for attempt in 0..5 {
+            assert_eq!(sched.delay(attempt, 7, 3), sched.delay(attempt, 7, 3));
+        }
+        // exponential growth until the cap
+        assert!(sched.delay(1, 7, 3) > sched.delay(0, 7, 3));
+        assert!(sched.delay(2, 7, 3) > sched.delay(1, 7, 3));
+        // capped at the worker timeout
+        assert_eq!(sched.delay(30, 7, 3), Duration::from_secs(8));
+        // jitter stays within [0, base/2)
+        let d0 = sched.delay(0, 7, 3);
+        assert!(d0 >= sched.base && d0 < sched.base + sched.base / 2, "{d0:?}");
+        // different shards get different jitter (decorrelated retries)
+        let spread: std::collections::BTreeSet<Duration> =
+            (0..16).map(|s| sched.delay(0, 7, s)).collect();
+        assert!(spread.len() > 1, "jitter collapsed: {spread:?}");
+        // tiny timeouts still get a sane floor
+        let tiny = RetrySchedule::from_timeout(Duration::from_millis(1));
+        assert_eq!(tiny.base, Duration::from_millis(10));
+        assert!(tiny.delay(0, 1, 1) >= tiny.base.min(tiny.cap));
     }
 }

@@ -43,6 +43,7 @@ use std::net::SocketAddr;
 
 use crate::baselines::{KimConfig, LuoConfig};
 use crate::config::{Method, RunConfig};
+use crate::distributed::{CombineMode, DistributedConfig};
 use crate::error::Result;
 use crate::metrics::Metrics;
 use crate::parallel::Pool;
@@ -88,6 +89,16 @@ pub struct TrainContext<'a> {
     pub workers: usize,
     /// Seeded pre-shuffle before distributed sharding.
     pub shuffle_seed: Option<u64>,
+    /// Distributed SV-set combine strategy (flat or tree).
+    pub combine: CombineMode,
+    /// Distributed: extra attempts a failed shard is granted.
+    pub max_retries: usize,
+    /// Distributed: per-attempt socket deadline (connect/read/write and
+    /// heartbeat probes).
+    pub worker_timeout: std::time::Duration,
+    /// Distributed: degrade to in-controller training when fewer than
+    /// this many TCP workers remain alive.
+    pub min_workers: usize,
     /// TCP worker addresses; empty = in-process local cluster.
     pub addrs: Vec<SocketAddr>,
     /// Streaming-snapshot knobs (window, drift monitor).
@@ -98,6 +109,7 @@ impl TrainContext<'static> {
     /// A context with library defaults for everything but the three
     /// universal inputs.
     pub fn new(params: SvddParams, sampling: SamplingConfig, seed: u64) -> TrainContext<'static> {
+        let dist = DistributedConfig::default();
         TrainContext {
             params,
             sampling,
@@ -110,6 +122,10 @@ impl TrainContext<'static> {
             kim: KimConfig::default(),
             workers: 4,
             shuffle_seed: None,
+            combine: dist.combine,
+            max_retries: dist.max_retries,
+            worker_timeout: dist.worker_timeout,
+            min_workers: dist.min_workers,
             addrs: Vec::new(),
             streaming: StreamingConfig { sample_size: sampling.sample_size, ..Default::default() },
         }
@@ -122,6 +138,10 @@ impl TrainContext<'static> {
         let mut ctx = TrainContext::new(cfg.params(), cfg.sampling(), cfg.seed);
         ctx.workers = cfg.workers;
         ctx.shuffle_seed = cfg.shuffle_seed;
+        ctx.combine = cfg.combine;
+        ctx.max_retries = cfg.max_retries;
+        ctx.worker_timeout = std::time::Duration::from_millis(cfg.worker_timeout_ms);
+        ctx.min_workers = cfg.min_workers;
         ctx
     }
 }

@@ -110,12 +110,23 @@ impl Trainer for Distributed {
             sampling: ctx.sampling,
             seed: ctx.seed,
             shuffle_seed: ctx.shuffle_seed,
+            combine: ctx.combine,
+            max_retries: ctx.max_retries,
+            worker_timeout: ctx.worker_timeout,
+            min_workers: ctx.min_workers,
         };
         let out = if ctx.addrs.is_empty() {
             train_local_cluster(data, &ctx.params, &dcfg)?
         } else {
             train_tcp_cluster(data, &ctx.params, &dcfg, &ctx.addrs)?
         };
+        if let Some(metrics) = ctx.metrics {
+            metrics.shard_retries.add(out.retry.shard_retries);
+            metrics.shards_reassigned.add(out.retry.shards_reassigned);
+            metrics.worker_failures.add(out.retry.worker_failures);
+            metrics.workers_lost.add(out.retry.workers_lost);
+            metrics.shards_local_fallback.add(out.retry.shards_local_fallback);
+        }
         let notes = out
             .reports
             .iter()
@@ -126,18 +137,31 @@ impl Trainer for Distributed {
                 )
             })
             .collect();
+        let mut extras = vec![
+            ("union_rows".into(), out.union_rows.to_string()),
+            ("combine".into(), dcfg.combine.to_string()),
+            ("combine_solves".into(), out.combine_solves.to_string()),
+        ];
+        if out.retry != crate::distributed::RetryStats::default() {
+            extras.push(("shard_retries".into(), out.retry.shard_retries.to_string()));
+            extras.push(("workers_lost".into(), out.retry.workers_lost.to_string()));
+            extras.push((
+                "shards_local_fallback".into(),
+                out.retry.shards_local_fallback.to_string(),
+            ));
+        }
         Ok(TrainReport {
             method: Method::Distributed,
             seconds: 0.0,
             iterations: out.reports.iter().map(|r| r.iterations).sum(),
             converged: out.reports.iter().all(|r| r.converged),
-            solver_calls: 1,
+            solver_calls: out.combine_solves,
             rows_touched: out.union_rows,
             warm_start: false,
             sample_size: ctx.sampling.sample_size,
             solver: out.solver,
             trace: Vec::new(),
-            extras: vec![("union_rows".into(), out.union_rows.to_string())],
+            extras,
             notes,
             model: out.model,
         })

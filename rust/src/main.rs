@@ -109,12 +109,23 @@ fn scoring_data(name: &str, rows: usize, seed: u64) -> Result<LabeledData> {
     }
 }
 
+/// Parse a comma-separated `--addrs` list of worker socket addresses.
+fn parse_addrs(spec: &str) -> Result<Vec<std::net::SocketAddr>> {
+    spec.split(',')
+        .map(|a| {
+            a.parse()
+                .map_err(|_| Error::Config(format!("bad worker address '{a}'")))
+        })
+        .collect()
+}
+
 fn cmd_train(args: &Args) -> Result<()> {
     args.expect_only(&[
         "config", "data", "rows", "method", "bw", "f", "sample-size", "max-iter",
         "candidates", "workers", "shuffle-seed", "threads", "isa", "seed", "out",
         "trace", "xla", "artifacts", "addrs", "registry", "promote", "warm-alpha",
-        "wss", "no-shrinking", "v", "log-json",
+        "wss", "no-shrinking", "v", "log-json", "combine", "max-retries",
+        "worker-timeout-ms", "min-workers", "stream-chunk",
     ])?;
     let cfg = RunConfig::from_args(args)?;
     parallel::install(cfg.parallelism());
@@ -124,6 +135,15 @@ fn cmd_train(args: &Args) -> Result<()> {
     if let Some(path) = args.get("log-json") {
         fastsvdd::obs::install_sink(Path::new(path))?;
         fastsvdd::obs::enable();
+    }
+    if cfg.stream_chunk > 0 {
+        let result = train_streaming_distributed(args, &cfg);
+        if let Some(path) = args.get("log-json") {
+            fastsvdd::obs::disable();
+            fastsvdd::obs::remove_sink();
+            println!("run log written to {path} (render with: fastsvdd report --log {path})");
+        }
+        return result;
     }
     let data = training_data(&cfg.dataset, cfg.rows, cfg.seed)?;
     let engine = Engine::from_config(&cfg)?;
@@ -147,13 +167,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let mut ctx = engine.context().with_backend(&pooled);
     ctx.sampling.record_trace = args.get("trace").is_some();
     if let Some(addrs) = args.get("addrs") {
-        ctx.addrs = addrs
-            .split(',')
-            .map(|a| {
-                a.parse()
-                    .map_err(|_| Error::Config(format!("bad worker address '{a}'")))
-            })
-            .collect::<Result<_>>()?;
+        ctx.addrs = parse_addrs(addrs)?;
     }
     let report = engine.train_with(&ctx, &data)?;
     for note in &report.notes {
@@ -207,6 +221,59 @@ fn cmd_train(args: &Args) -> Result<()> {
         fastsvdd::obs::disable();
         fastsvdd::obs::remove_sink();
         println!("run log written to {path} (render with: fastsvdd report --log {path})");
+    }
+    Ok(())
+}
+
+/// `train --method distributed --addrs ... --stream-chunk N` on a CSV
+/// dataset: the controller reads the file in bounded chunks and ships
+/// each chunk to a worker as one shard, so the dataset is never fully
+/// resident in the controller.
+fn train_streaming_distributed(args: &Args, cfg: &RunConfig) -> Result<()> {
+    if cfg.method != fastsvdd::config::Method::Distributed {
+        return Err(Error::Config("--stream-chunk requires --method distributed".into()));
+    }
+    let addrs = parse_addrs(args.get("addrs").ok_or_else(|| {
+        Error::Config("--stream-chunk requires --addrs (TCP workers)".into())
+    })?)?;
+    let path = Path::new(&cfg.dataset);
+    if !path.exists() {
+        return Err(Error::Config(format!(
+            "--stream-chunk needs a CSV dataset path, got '{}'",
+            cfg.dataset
+        )));
+    }
+    let sw = Stopwatch::start();
+    let out = fastsvdd::distributed::train_tcp_cluster_stream(
+        path,
+        true,
+        cfg.stream_chunk,
+        &cfg.params(),
+        &cfg.distributed(),
+        &addrs,
+    )?;
+    for r in &out.reports {
+        println!(
+            "  worker {}: shard={} svs={} iters={} converged={}",
+            r.worker, r.shard_rows, r.sv_count, r.iterations, r.converged
+        );
+    }
+    println!(
+        "done in {}: R^2={:.4} #SV={} shards={} union_rows={} combine={} \
+         combine_solves={} shard_retries={} workers_lost={}",
+        fmt_duration(sw.elapsed_secs()),
+        out.model.r2(),
+        out.model.num_sv(),
+        out.reports.len(),
+        out.union_rows,
+        cfg.combine,
+        out.combine_solves,
+        out.retry.shard_retries,
+        out.retry.workers_lost,
+    );
+    if let Some(path) = args.get("out") {
+        out.model.save(Path::new(path))?;
+        println!("model saved to {path}");
     }
     Ok(())
 }
@@ -319,9 +386,18 @@ fn cmd_grid(args: &Args) -> Result<()> {
 }
 
 fn cmd_worker(args: &Args) -> Result<()> {
-    args.expect_only(&["listen"])?;
+    args.expect_only(&["listen", "faults"])?;
     let addr = args.get_or("listen", "127.0.0.1:7700");
-    let server = WorkerServer::spawn(addr)?;
+    // deterministic misbehaviour for chaos tests: --faults beats the
+    // FASTSVDD_FAULTS environment variable
+    let plan = match args.get("faults") {
+        Some(spec) => Some(fastsvdd::distributed::FaultPlan::parse(spec)?),
+        None => fastsvdd::distributed::FaultPlan::from_env()?,
+    };
+    if let Some(p) = plan {
+        println!("fault injection active: {p:?}");
+    }
+    let server = WorkerServer::spawn_with_faults(addr, plan)?;
     println!("worker listening on {} (ctrl-c to stop)", server.addr());
     // park forever; the accept loop runs on its own thread
     loop {

@@ -252,6 +252,23 @@ pub struct Metrics {
     pub retrains_cold: Counter,
     /// Lifecycle: wall time of each drift-triggered retrain.
     pub retrain_latency: Histogram,
+    /// Distributed controller: shard attempts that failed and
+    /// re-entered the work queue (bounded by `max_retries` per shard).
+    pub shard_retries: Counter,
+    /// Distributed controller: retried shards that ran on a different
+    /// worker than the attempt that failed.
+    pub shards_reassigned: Counter,
+    /// Distributed controller: individual worker-attempt failures
+    /// (timeouts, dropped connections, corrupt frames, TrainFailed).
+    pub worker_failures: Counter,
+    /// Distributed controller: workers declared dead by the
+    /// healthy -> suspect -> dead state machine.
+    pub workers_lost: Counter,
+    /// Distributed controller: shards trained locally after the live
+    /// worker set fell below `min_workers`.
+    pub shards_local_fallback: Counter,
+    /// Distributed worker: heartbeat probes answered.
+    pub heartbeats_served: Counter,
 }
 
 impl Metrics {
@@ -323,7 +340,7 @@ impl Metrics {
     /// on the wire and what [`aggregate`] sums cluster-wide; histogram
     /// sums ride along in microseconds so they stay integral.
     pub fn snapshot(&self) -> Vec<(String, u64)> {
-        let pairs: [(&str, u64); 26] = [
+        let pairs: [(&str, u64); 32] = [
             ("batches_scored", self.batches_scored.get()),
             ("rows_scored", self.rows_scored.get()),
             ("xla_executions", self.xla_executions.get()),
@@ -350,6 +367,12 @@ impl Metrics {
             ("window_wait_sum_us", self.window_wait.sum_us()),
             ("batch_fill_count", self.batch_fill.count()),
             ("batch_fill_sum_rows", self.batch_fill.sum_raw()),
+            ("shard_retries", self.shard_retries.get()),
+            ("shards_reassigned", self.shards_reassigned.get()),
+            ("worker_failures", self.worker_failures.get()),
+            ("workers_lost", self.workers_lost.get()),
+            ("shards_local_fallback", self.shards_local_fallback.get()),
+            ("heartbeats_served", self.heartbeats_served.get()),
         ];
         pairs.iter().map(|&(k, v)| (k.to_string(), v)).collect()
     }
@@ -359,7 +382,7 @@ impl Metrics {
     /// bucket series of both latency histograms.
     pub fn render_prometheus(&self) -> String {
         let mut out = String::new();
-        let counters: [(&str, &str, u64); 17] = [
+        let counters: [(&str, &str, u64); 23] = [
             ("fastsvdd_batches_scored_total", "Scoring batches executed", self.batches_scored.get()),
             ("fastsvdd_rows_scored_total", "Rows scored", self.rows_scored.get()),
             ("fastsvdd_xla_executions_total", "XLA artifact executions", self.xla_executions.get()),
@@ -377,6 +400,12 @@ impl Metrics {
             ("fastsvdd_edge_http_requests_total", "HTTP requests handled on the serving listener", self.edge_http_requests.get()),
             ("fastsvdd_edge_conns_opened_total", "Connections accepted by the serving edge", self.edge_conns_opened.get()),
             ("fastsvdd_edge_conns_rejected_total", "Connections refused at the max_conns cap", self.edge_conns_rejected.get()),
+            ("fastsvdd_shard_retries_total", "Distributed shard attempts that re-entered the work queue", self.shard_retries.get()),
+            ("fastsvdd_shards_reassigned_total", "Retried shards moved to a different worker", self.shards_reassigned.get()),
+            ("fastsvdd_worker_failures_total", "Distributed worker-attempt failures", self.worker_failures.get()),
+            ("fastsvdd_workers_lost_total", "Workers declared dead by the controller", self.workers_lost.get()),
+            ("fastsvdd_shards_local_fallback_total", "Shards trained locally below min_workers", self.shards_local_fallback.get()),
+            ("fastsvdd_heartbeats_served_total", "Heartbeat probes answered by this worker", self.heartbeats_served.get()),
         ];
         for (name, help, v) in counters {
             out.push_str(&format!(
@@ -730,6 +759,38 @@ mod tests {
                 assert!(value.parse::<f64>().is_ok(), "bad value in {line}");
             }
         }
+    }
+
+    #[test]
+    fn fault_tolerance_metrics_flow_to_exposition_and_snapshot() {
+        let m = Metrics::new();
+        m.shard_retries.add(2);
+        m.shards_reassigned.inc();
+        m.worker_failures.add(3);
+        m.workers_lost.inc();
+        m.shards_local_fallback.add(4);
+        m.heartbeats_served.add(5);
+        let text = m.render_prometheus();
+        assert!(text.contains("# TYPE fastsvdd_shard_retries_total counter"));
+        assert!(text.contains("fastsvdd_shard_retries_total 2"));
+        assert!(text.contains("fastsvdd_shards_reassigned_total 1"));
+        assert!(text.contains("fastsvdd_worker_failures_total 3"));
+        assert!(text.contains("fastsvdd_workers_lost_total 1"));
+        assert!(text.contains("fastsvdd_shards_local_fallback_total 4"));
+        assert!(text.contains("fastsvdd_heartbeats_served_total 5"));
+        let snap = m.snapshot();
+        let get = |k: &str| snap.iter().find(|(n, _)| n == k).unwrap().1;
+        assert_eq!(get("shard_retries"), 2);
+        assert_eq!(get("shards_reassigned"), 1);
+        assert_eq!(get("worker_failures"), 3);
+        assert_eq!(get("workers_lost"), 1);
+        assert_eq!(get("shards_local_fallback"), 4);
+        assert_eq!(get("heartbeats_served"), 5);
+        // the new counters aggregate cluster-wide like every other key
+        let total = aggregate(&[m.snapshot(), m.snapshot()]);
+        let t = |k: &str| total.iter().find(|(n, _)| n == k).unwrap().1;
+        assert_eq!(t("shard_retries"), 4);
+        assert_eq!(t("heartbeats_served"), 10);
     }
 
     #[test]

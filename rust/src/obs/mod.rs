@@ -21,6 +21,11 @@
 //! | `batcher.batch`         | `rows`, `requests`                       |
 //! | `server.request`        | `kind` (score/score_v2/info/swap/stats/  |
 //! |                         | http), `path` (http only)                |
+//! | `distributed.shard`     | `shard`, `attempt`, `worker`, `local`,   |
+//! |                         | `ok` (one span per training attempt)     |
+//! | `distributed.combine`   | `mode`, `sets`, `union_rows`, `solves`   |
+//! | `distributed.retry` (ev)| `shard`, `attempt`, `delay_us`           |
+//! | `distributed.worker_dead` (ev) | `worker`                          |
 //! | `lifecycle.retrain`     | `version`, `warm`, `r2`                  |
 //! | `lifecycle.drift` (ev)  | `action`                                 |
 //! | `lifecycle.promote` (ev)| `version`                                |

@@ -1,0 +1,349 @@
+//! Chaos tests for the fault-tolerant distributed controller: every
+//! scenario runs real TCP workers on loopback with a deterministic
+//! [`FaultPlan`] and a hard wall-clock deadline, so a regression that
+//! reintroduces an unbounded wait fails the suite instead of hanging
+//! CI. The load-bearing property throughout: retries and reassignment
+//! never change the model — results are keyed by shard index with
+//! per-shard seeds, so a run that survives failures is bit-identical
+//! to a clean run of the same configuration.
+
+use std::time::{Duration, Instant};
+
+use fastsvdd::data::{donut::TwoDonut, Generator};
+use fastsvdd::distributed::{
+    train_local_cluster, train_tcp_cluster, train_tcp_cluster_stream, CombineMode,
+    DistributedConfig, FaultPlan, RetryStats, WorkerServer,
+};
+use fastsvdd::sampling::SamplingConfig;
+use fastsvdd::svdd::SvddParams;
+use fastsvdd::Error;
+
+/// Run `f` on a helper thread and panic if it exceeds `secs` — the
+/// explicit no-hang deadline every chaos scenario must meet.
+fn with_deadline<T: Send + 'static>(secs: u64, f: impl FnOnce() -> T + Send + 'static) -> T {
+    use std::sync::mpsc::RecvTimeoutError;
+    let (tx, rx) = std::sync::mpsc::channel();
+    let handle = std::thread::spawn(move || {
+        let _ = tx.send(f());
+    });
+    match rx.recv_timeout(Duration::from_secs(secs)) {
+        Ok(v) => {
+            handle.join().expect("deadline thread panicked");
+            v
+        }
+        Err(RecvTimeoutError::Timeout) => {
+            panic!("distributed call exceeded the {secs}s deadline (hang)")
+        }
+        Err(RecvTimeoutError::Disconnected) => {
+            // the closure panicked before sending; propagate its message
+            handle.join().expect("deadline thread panicked");
+            unreachable!("sender dropped without sending or panicking")
+        }
+    }
+}
+
+fn spawn_workers(n: usize, plans: &[(usize, &str)]) -> Vec<WorkerServer> {
+    (0..n)
+        .map(|i| {
+            let plan = plans
+                .iter()
+                .find(|(w, _)| *w == i)
+                .map(|(_, spec)| FaultPlan::parse(spec).unwrap());
+            WorkerServer::spawn_with_faults("127.0.0.1:0", plan).unwrap()
+        })
+        .collect()
+}
+
+fn stop_all(workers: &mut [WorkerServer]) {
+    for w in workers {
+        w.stop();
+    }
+}
+
+/// Kill 1 of 3 workers after its first shard: the controller must
+/// detect the death, requeue the lost shard on a surviving worker, and
+/// converge to the exact model a clean run produces.
+#[test]
+fn killed_worker_is_detected_and_its_shard_reassigned() {
+    let data = TwoDonut::default().generate(6000, 17);
+    let params = SvddParams::gaussian(0.4, 0.001);
+    let cfg = DistributedConfig {
+        workers: 8,
+        sampling: SamplingConfig { sample_size: 10, ..Default::default() },
+        seed: 13,
+        max_retries: 3,
+        worker_timeout: Duration::from_secs(2),
+        ..Default::default()
+    };
+
+    let mut workers = spawn_workers(3, &[(0, "kill_after=1")]);
+    let addrs: Vec<_> = workers.iter().map(|w| w.addr()).collect();
+    let d = data.clone();
+    let out = with_deadline(60, move || train_tcp_cluster(&d, &params, &cfg, &addrs)).unwrap();
+    stop_all(&mut workers);
+
+    assert_eq!(out.reports.len(), 8, "every shard accounted for");
+    assert_eq!(
+        out.retry,
+        RetryStats {
+            shard_retries: 1,
+            shards_reassigned: 1,
+            worker_failures: 1,
+            workers_lost: 1,
+            shards_local_fallback: 0,
+        },
+        "exactly one shard lost with the killed worker and re-run elsewhere"
+    );
+
+    // failure-surviving run == clean run, bit for bit
+    let clean = train_local_cluster(&data, &params, &cfg).unwrap();
+    assert_eq!(out.union_rows, clean.union_rows);
+    assert!((out.model.r2() - clean.model.r2()).abs() < 1e-12);
+}
+
+/// Every worker dead on arrival: the run must fail with a clean
+/// [`Error::Distributed`] in bounded time — never hang.
+#[test]
+fn all_workers_dead_fails_fast_with_distributed_error() {
+    let data = TwoDonut::default().generate(800, 3);
+    let params = SvddParams::gaussian(0.4, 0.001);
+    let cfg = DistributedConfig {
+        workers: 4,
+        sampling: SamplingConfig { sample_size: 8, ..Default::default() },
+        seed: 2,
+        max_retries: 2,
+        worker_timeout: Duration::from_millis(500),
+        ..Default::default()
+    };
+
+    let mut workers =
+        spawn_workers(3, &[(0, "kill_after=0"), (1, "kill_after=0"), (2, "kill_after=0")]);
+    let addrs: Vec<_> = workers.iter().map(|w| w.addr()).collect();
+    let started = Instant::now();
+    let err = with_deadline(30, move || train_tcp_cluster(&data, &params, &cfg, &addrs))
+        .expect_err("all workers dead must fail the run");
+    let elapsed = started.elapsed();
+    stop_all(&mut workers);
+
+    match &err {
+        Error::Distributed(msg) => {
+            assert!(msg.contains("dead"), "error should name the cause: {msg}")
+        }
+        other => panic!("expected Error::Distributed, got {other:?}"),
+    }
+    // dead sockets answer with EOF, not silence: detection is far
+    // faster than the per-attempt deadline, let alone the test deadline
+    assert!(elapsed < Duration::from_secs(10), "took {elapsed:?}");
+}
+
+/// A corrupted training reply is indistinguishable from line noise;
+/// the controller must fail the attempt, keep the worker (it still
+/// answers heartbeats), and recover the shard by retrying.
+#[test]
+fn corrupt_reply_is_retried_to_success() {
+    let data = TwoDonut::default().generate(2400, 29);
+    let params = SvddParams::gaussian(0.4, 0.001);
+    let cfg = DistributedConfig {
+        workers: 2,
+        sampling: SamplingConfig { sample_size: 9, ..Default::default() },
+        seed: 31,
+        max_retries: 2,
+        worker_timeout: Duration::from_secs(2),
+        ..Default::default()
+    };
+
+    let mut workers = spawn_workers(1, &[(0, "corrupt_at=1")]);
+    let addrs: Vec<_> = workers.iter().map(|w| w.addr()).collect();
+    let d = data.clone();
+    let out = with_deadline(60, move || train_tcp_cluster(&d, &params, &cfg, &addrs)).unwrap();
+    stop_all(&mut workers);
+
+    assert_eq!(out.retry.shard_retries, 1);
+    assert_eq!(out.retry.worker_failures, 1);
+    assert_eq!(out.retry.workers_lost, 0, "a heartbeat-answering worker stays in the pool");
+    let clean = train_local_cluster(&data, &params, &cfg).unwrap();
+    assert!((out.model.r2() - clean.model.r2()).abs() < 1e-12);
+}
+
+/// A dropped connection mid-reply is recovered the same way.
+#[test]
+fn dropped_reply_is_retried_to_success() {
+    let data = TwoDonut::default().generate(2400, 41);
+    let params = SvddParams::gaussian(0.4, 0.001);
+    let cfg = DistributedConfig {
+        workers: 2,
+        sampling: SamplingConfig { sample_size: 9, ..Default::default() },
+        seed: 43,
+        max_retries: 2,
+        worker_timeout: Duration::from_secs(2),
+        ..Default::default()
+    };
+
+    let mut workers = spawn_workers(1, &[(0, "drop_at=1")]);
+    let addrs: Vec<_> = workers.iter().map(|w| w.addr()).collect();
+    let d = data.clone();
+    let out = with_deadline(60, move || train_tcp_cluster(&d, &params, &cfg, &addrs)).unwrap();
+    stop_all(&mut workers);
+
+    assert_eq!(out.retry.shard_retries, 1);
+    assert_eq!(out.retry.workers_lost, 0);
+    let clean = train_local_cluster(&data, &params, &cfg).unwrap();
+    assert!((out.model.r2() - clean.model.r2()).abs() < 1e-12);
+}
+
+/// A worker slower than the socket deadline but still alive must not
+/// be declared dead: the heartbeat grace loop extends the wait as long
+/// as liveness probes are answered, so the run finishes with zero
+/// retries.
+#[test]
+fn slow_worker_survives_via_heartbeat_grace() {
+    let data = TwoDonut::default().generate(1600, 53);
+    let params = SvddParams::gaussian(0.4, 0.001);
+    let cfg = DistributedConfig {
+        workers: 2,
+        sampling: SamplingConfig { sample_size: 8, ..Default::default() },
+        seed: 59,
+        max_retries: 1,
+        worker_timeout: Duration::from_millis(250),
+        ..Default::default()
+    };
+
+    // every training reply arrives ~3 socket deadlines late
+    let mut workers = spawn_workers(1, &[(0, "delay_ms=700")]);
+    let addrs: Vec<_> = workers.iter().map(|w| w.addr()).collect();
+    let d = data.clone();
+    let out = with_deadline(60, move || train_tcp_cluster(&d, &params, &cfg, &addrs)).unwrap();
+    stop_all(&mut workers);
+
+    assert_eq!(out.retry, RetryStats::default(), "slow is not dead");
+    let clean = train_local_cluster(&data, &params, &cfg).unwrap();
+    assert!((out.model.r2() - clean.model.r2()).abs() < 1e-12);
+}
+
+/// Once the live worker pool falls below `min_workers` the controller
+/// degrades to in-process execution — which runs the identical
+/// per-shard algorithm, so the model is still bit-identical.
+#[test]
+fn min_workers_degradation_falls_back_to_local() {
+    let data = TwoDonut::default().generate(2000, 61);
+    let params = SvddParams::gaussian(0.4, 0.001);
+    let cfg = DistributedConfig {
+        workers: 3,
+        sampling: SamplingConfig { sample_size: 8, ..Default::default() },
+        seed: 67,
+        min_workers: 2, // one live worker < 2 -> degraded from the start
+        worker_timeout: Duration::from_secs(2),
+        ..Default::default()
+    };
+
+    let mut workers = spawn_workers(1, &[]);
+    let addrs: Vec<_> = workers.iter().map(|w| w.addr()).collect();
+    let d = data.clone();
+    let out = with_deadline(60, move || train_tcp_cluster(&d, &params, &cfg, &addrs)).unwrap();
+    stop_all(&mut workers);
+
+    assert_eq!(out.retry.shards_local_fallback, 3, "every shard ran locally");
+    assert_eq!(out.retry.shard_retries, 0);
+    let clean = train_local_cluster(&data, &params, &cfg).unwrap();
+    assert!((out.model.r2() - clean.model.r2()).abs() < 1e-12);
+}
+
+/// Tree combine is deterministic and tolerance-equivalent to flat: the
+/// paper's decision boundary survives hierarchical combining, it just
+/// trades one large solve for several bounded ones.
+#[test]
+fn tree_combine_matches_flat_within_tolerance() {
+    let data = TwoDonut::default().generate(6000, 71);
+    let params = SvddParams::gaussian(0.4, 0.001);
+    let flat_cfg = DistributedConfig {
+        workers: 8,
+        sampling: SamplingConfig { sample_size: 10, ..Default::default() },
+        seed: 73,
+        ..Default::default()
+    };
+    let tree_cfg = DistributedConfig { combine: CombineMode::Tree { fanout: 2 }, ..flat_cfg };
+
+    let flat = train_local_cluster(&data, &params, &flat_cfg).unwrap();
+    let tree = train_local_cluster(&data, &params, &tree_cfg).unwrap();
+    let tree2 = train_local_cluster(&data, &params, &tree_cfg).unwrap();
+
+    assert_eq!(flat.combine_solves, 1);
+    assert_eq!(tree.combine_solves, 7, "8 leaves at fanout 2: 4 + 2 + 1 solves");
+    let rel = (tree.model.r2() - flat.model.r2()).abs() / flat.model.r2();
+    assert!(rel < 0.05, "tree vs flat relative R^2 gap {rel} too large");
+    assert!(
+        (tree.model.r2() - tree2.model.r2()).abs() < 1e-15,
+        "tree combine must be deterministic"
+    );
+}
+
+/// Fault plans are deterministic end to end: replaying the same chaos
+/// scenario yields the same model and the same failure accounting.
+#[test]
+fn fault_plan_replays_identically() {
+    let data = TwoDonut::default().generate(3000, 83);
+    let params = SvddParams::gaussian(0.4, 0.001);
+    let cfg = DistributedConfig {
+        workers: 6,
+        sampling: SamplingConfig { sample_size: 9, ..Default::default() },
+        seed: 89,
+        max_retries: 3,
+        worker_timeout: Duration::from_secs(2),
+        ..Default::default()
+    };
+
+    let run = |data: &fastsvdd::util::matrix::Matrix| {
+        let mut workers = spawn_workers(2, &[(0, "kill_after=1")]);
+        let addrs: Vec<_> = workers.iter().map(|w| w.addr()).collect();
+        let d = data.clone();
+        let out = with_deadline(60, move || train_tcp_cluster(&d, &params, &cfg, &addrs)).unwrap();
+        stop_all(&mut workers);
+        out
+    };
+    let a = run(&data);
+    let b = run(&data);
+    assert_eq!(a.retry, b.retry, "failure accounting must replay identically");
+    assert_eq!(a.union_rows, b.union_rows);
+    assert!((a.model.r2() - b.model.r2()).abs() < 1e-15);
+}
+
+/// Streaming ingestion: chunks of exactly `rows / p` rows reproduce
+/// the in-memory sharding bit for bit, without the controller ever
+/// materializing the dataset.
+#[test]
+fn streamed_csv_matches_in_memory_sharding() {
+    let data = TwoDonut::default().generate(1000, 97);
+    let params = SvddParams::gaussian(0.4, 0.001);
+    let cfg = DistributedConfig {
+        workers: 4, // 4 shards of 250 rows == 4 streamed chunks of 250
+        sampling: SamplingConfig { sample_size: 8, ..Default::default() },
+        seed: 101,
+        ..Default::default()
+    };
+
+    let dir = std::env::temp_dir().join("fastsvdd_stream_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("stream.csv");
+    fastsvdd::data::csv::write_matrix(&path, &["x", "y"], &data).unwrap();
+
+    let mut workers = spawn_workers(2, &[]);
+    let addrs: Vec<_> = workers.iter().map(|w| w.addr()).collect();
+    let p = path.clone();
+    let a2 = addrs.clone();
+    let streamed = with_deadline(60, move || {
+        train_tcp_cluster_stream(&p, true, 250, &params, &cfg, &a2)
+    })
+    .unwrap();
+    let in_memory = train_tcp_cluster(&data, &params, &cfg, &addrs).unwrap();
+    stop_all(&mut workers);
+
+    assert_eq!(streamed.reports.len(), 4);
+    assert_eq!(streamed.union_rows, in_memory.union_rows);
+    assert!((streamed.model.r2() - in_memory.model.r2()).abs() < 1e-12);
+
+    // streaming cannot honor a pre-shuffle: it never sees the full data
+    let shuffled = DistributedConfig { shuffle_seed: Some(1), ..cfg };
+    let err = train_tcp_cluster_stream(&path, true, 250, &params, &shuffled, &addrs);
+    assert!(matches!(err, Err(Error::Config(_))));
+    std::fs::remove_file(&path).ok();
+}

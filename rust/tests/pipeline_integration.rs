@@ -63,7 +63,7 @@ fn distributed_pipeline_quality() {
         workers: 4,
         sampling: SamplingConfig { sample_size: 6, ..Default::default() },
         seed: 5,
-        shuffle_seed: None,
+        ..Default::default()
     };
     let dist = train_local_cluster(&data, &params, &dcfg).unwrap();
     let full = train_full(&data, &params).unwrap();
@@ -314,12 +314,38 @@ fn engine_distributed_matches_legacy() {
         sampling: cfg.sampling(),
         seed: cfg.seed,
         shuffle_seed: cfg.shuffle_seed,
+        ..Default::default()
     };
     let legacy = train_local_cluster(&data, &cfg.params(), &dcfg).unwrap();
     let report = Engine::from_config(&cfg).unwrap().train(&data).unwrap();
     assert_models_identical(&report.model, &legacy.model, "distributed");
     assert_eq!(report.rows_touched, legacy.union_rows);
     assert_eq!(report.notes.len(), legacy.reports.len());
+}
+
+/// The default combine mode stays the paper's flat union solve, and an
+/// explicit `--combine flat` is byte-identical to it — the pre-existing
+/// seeded distributed trajectory is pinned across the fault-tolerance
+/// rework.
+#[test]
+fn flat_combine_is_the_default_and_pinned() {
+    use fastsvdd::distributed::CombineMode;
+    let data = Banana::default().generate(4000, 5);
+    let params = SvddParams::gaussian(0.35, 0.001);
+    let dcfg = DistributedConfig {
+        workers: 3,
+        sampling: SamplingConfig { sample_size: 6, ..Default::default() },
+        seed: 5,
+        ..Default::default()
+    };
+    assert_eq!(dcfg.combine, CombineMode::Flat);
+    let default_run = train_local_cluster(&data, &params, &dcfg).unwrap();
+    let explicit = DistributedConfig { combine: CombineMode::Flat, ..dcfg };
+    let explicit_run = train_local_cluster(&data, &params, &explicit).unwrap();
+    assert_models_identical(&default_run.model, &explicit_run.model, "flat combine");
+    assert_eq!(default_run.combine_solves, 1);
+    // in-process workers cannot fail: the retry ledger stays zero
+    assert_eq!(default_run.retry, fastsvdd::distributed::RetryStats::default());
 }
 
 #[test]
