@@ -109,6 +109,7 @@ fn main() -> fastsvdd::Result<()> {
         sample_size: DIM + 1,
         drift_threshold: 0.05,
         drift_patience: 2,
+        ..Default::default()
     };
     let mut monitor = StreamingSvdd::new(params, monitor_cfg, 11);
     let _ = monitor.push_batch(&plant.simulate(1_024, None, 77))?;

@@ -1,11 +1,13 @@
 //! Unified training engine: every method through one facade.
 //!
 //! Trains the same banana data set with every registered method —
-//! full, sampling, distributed, Luo, Kim, streaming-snapshot — via
-//! `Engine::from_config`, then prints a comparison table built from
-//! the uniform `TrainReport` fields. No per-method code anywhere:
+//! full, sampling, distributed, Luo, Kim, streaming-snapshot, exact
+//! incremental (online add/remove), boundary-preserving reduction —
+//! via `Engine::from_config`, then prints one comparison table built
+//! from the uniform `TrainReport` fields. No per-method code anywhere:
 //! adding a trainer to `engine::trainer_for` would add a row here
-//! without touching this file.
+//! without touching this file (the two online-learning methods did
+//! exactly that).
 //!
 //! Run with: `cargo run --release --example unified_training`
 
@@ -32,7 +34,13 @@ fn main() {
         &["method", "time_s", "R^2", "#SV", "iters", "conv", "smo_iters", "notes"],
     );
     for method in Method::ALL {
-        let cfg = RunConfig { method, ..base.clone() };
+        let mut cfg = RunConfig { method, ..base.clone() };
+        if method == Method::Incremental {
+            // demo pacing: at 6000 rows a 64-update staleness budget
+            // would re-solve the active set every 32 slides; spread the
+            // forced resyncs out and let divergence checks drive the rest
+            cfg.stale_budget = 1024;
+        }
         let engine = Engine::from_config(&cfg).expect("config must validate");
         let report = engine.train(&data).expect("training must succeed");
         table.row(vec![

@@ -1,0 +1,171 @@
+//! Online-learning bench: the cost of keeping the model fresh after
+//! every new observation, incremental state machine vs snapshot
+//! retrain of the sliding window.
+//!
+//! The gated number is `incremental_speedup_vs_retrain`: per-event
+//! wall-clock of one exact add/remove slide (including the amortized
+//! staleness resyncs) against one full SMO solve on the same-width
+//! window — the snapshot spelling of "model fresh after each event".
+//! Both paths run back to back on the same machine and the same seeded
+//! drift stream, so the ratio is machine-independent and gated as an
+//! absolute floor in CI (>= 10x).
+//!
+//! The correctness flags ride along: `incremental_matches_batch`
+//! (after the whole drift stream, the incremental model's R^2 agrees
+//! with a batch solve on the final window within 1%) and
+//! `add_remove_roundtrip` (adding a point and removing it again
+//! restores the optimum) — the machine must be *exact*, not a decay
+//! approximation, or the speedup is meaningless.
+//!
+//! Emits the usual table plus `results/BENCH_perf_incremental.json`.
+
+use std::collections::VecDeque;
+
+use fastsvdd::bench::{emit, emit_text, scaled};
+use fastsvdd::data::{banana::Banana, Generator};
+use fastsvdd::incremental::{IncrementalConfig, IncrementalSvdd};
+use fastsvdd::sampling::{DriftStatus, StreamingConfig, StreamingSvdd};
+use fastsvdd::svdd::{train, SvddParams};
+use fastsvdd::util::json::{num, obj, s, Json};
+use fastsvdd::util::matrix::Matrix;
+use fastsvdd::util::tables::{f, Table};
+use fastsvdd::util::timer::Stopwatch;
+
+const WINDOW: usize = 256;
+
+/// The drifted regime: the same banana translated in x, so the shift
+/// is invisible to the per-point scale but moves the whole description.
+fn shifted_banana(n: usize, seed: u64) -> Matrix {
+    let mut m = Banana::default().generate(n, seed);
+    for i in 0..m.rows() {
+        m.row_mut(i)[0] += 8.0;
+    }
+    m
+}
+
+fn main() {
+    let params = SvddParams::gaussian(0.35, 0.001);
+    let events = scaled(2048, 512);
+    let regime_a = Banana::default().generate(WINDOW, 42);
+    let regime_b = shifted_banana(events, 43);
+
+    let mut t = Table::new(
+        "Perf: online learning (per-event model freshness)",
+        &["case", "events", "wall_ms", "per_event_us"],
+    );
+
+    // ---- incremental: seed the window, then slide per event ----
+    // stale_budget 512 spreads the forced full re-solves ~256 slides
+    // apart (each slide is add+remove = 2 updates); divergence resyncs
+    // stay at their default and fire whenever exactness demands one.
+    let scfg = StreamingConfig {
+        window: WINDOW,
+        sample_size: 6,
+        drift_threshold: 0.02,
+        drift_patience: 1,
+        incremental: true,
+        stale_budget: 512,
+    };
+    let mut stream = StreamingSvdd::new(params, scfg, 7);
+    let sw = Stopwatch::start();
+    stream.push_batch(&regime_a).unwrap();
+    let seed_ms = sw.elapsed_secs() * 1e3;
+    let mut saw_drift = false;
+    let sw = Stopwatch::start();
+    for i in 0..regime_b.rows() {
+        if let Some(DriftStatus::Drifted) = stream.push(regime_b.row(i)).unwrap() {
+            saw_drift = true;
+        }
+    }
+    let inc_ms = sw.elapsed_secs() * 1e3;
+    let inc_per_event_us = inc_ms * 1e3 / events as f64;
+    let inc = stream.incremental_state().expect("seeded");
+    let inc_resyncs = inc.resyncs();
+    t.row(vec!["seed window solve".into(), "1".into(), f(seed_ms, 1), f(seed_ms * 1e3, 1)]);
+    t.row(vec![
+        format!("incremental slide ({inc_resyncs} resyncs)"),
+        events.to_string(),
+        f(inc_ms, 1),
+        f(inc_per_event_us, 1),
+    ]);
+
+    // ---- exactness: the slid model vs a batch solve on the final window ----
+    let tail: Vec<Vec<f64>> = (regime_b.rows() - WINDOW..regime_b.rows())
+        .map(|i| regime_b.row(i).to_vec())
+        .collect();
+    let final_window = Matrix::from_rows(&tail).unwrap();
+    let batch = train(&final_window, &params).unwrap();
+    let batch_rel = (inc.r2() - batch.r2()).abs() / batch.r2();
+    let incremental_matches_batch = batch_rel < 0.01;
+
+    // ---- snapshot alternative: full solve on the window per event ----
+    // (a subset of events is enough — the per-event cost is flat)
+    let snap_events = scaled(64, 16).min(events);
+    let mut window: VecDeque<Vec<f64>> =
+        (0..WINDOW).map(|i| regime_a.row(i).to_vec()).collect();
+    let sw = Stopwatch::start();
+    let mut snap_r2 = 0.0;
+    for i in 0..snap_events {
+        window.pop_front();
+        window.push_back(regime_b.row(i).to_vec());
+        let rows: Vec<Vec<f64>> = window.iter().cloned().collect();
+        let m = train(&Matrix::from_rows(&rows).unwrap(), &params).unwrap();
+        snap_r2 = m.r2();
+    }
+    let snap_ms = sw.elapsed_secs() * 1e3;
+    let snap_per_event_us = snap_ms * 1e3 / snap_events as f64;
+    let speedup = snap_per_event_us / inc_per_event_us;
+    t.row(vec![
+        "snapshot retrain".into(),
+        snap_events.to_string(),
+        f(snap_ms, 1),
+        f(snap_per_event_us, 1),
+    ]);
+    t.row(vec![format!("speedup {:.1}x", speedup), "".into(), "".into(), "".into()]);
+
+    // ---- roundtrip: add a probe, remove it, land back on the optimum ----
+    let icfg = IncrementalConfig { stale_budget: 0, ..Default::default() };
+    let mut rt = IncrementalSvdd::with_data(params, icfg, &regime_a).unwrap();
+    let before = rt.r2();
+    rt.add_point(&[9.0, -9.0]).unwrap();
+    let slot = rt.len() - 1;
+    rt.remove_point(slot).unwrap();
+    let roundtrip_rel = (rt.r2() - before).abs() / before;
+    let add_remove_roundtrip = roundtrip_rel < 1e-4;
+
+    emit("perf_incremental", &t);
+
+    let mut pairs = vec![
+        ("bench", s("perf_incremental")),
+        ("window", num(WINDOW as f64)),
+        ("events", num(events as f64)),
+        ("seed_wall_ms", num(seed_ms)),
+        ("inc_wall_ms", num(inc_ms)),
+        ("inc_per_event_us", num(inc_per_event_us)),
+        ("inc_resyncs", num(inc_resyncs as f64)),
+        ("snap_events", num(snap_events as f64)),
+        ("snap_wall_ms", num(snap_ms)),
+        ("snap_per_event_us", num(snap_per_event_us)),
+        ("incremental_speedup_vs_retrain", num(speedup)),
+        ("r2_incremental", num(inc.r2())),
+        ("r2_batch_final_window", num(batch.r2())),
+        ("r2_snapshot_last", num(snap_r2)),
+        ("batch_rel_diff", num(batch_rel)),
+        ("incremental_matches_batch", Json::Bool(incremental_matches_batch)),
+        ("roundtrip_rel_diff", num(roundtrip_rel)),
+        ("add_remove_roundtrip", Json::Bool(add_remove_roundtrip)),
+        ("saw_drift", Json::Bool(saw_drift)),
+    ];
+    pairs.extend(fastsvdd::bench::isa_provenance());
+    let json = obj(pairs);
+    emit_text("BENCH_perf_incremental.json", &json.to_string_pretty());
+    println!("wrote results/BENCH_perf_incremental.json");
+    assert!(
+        incremental_matches_batch,
+        "incremental drifted {batch_rel} relative R^2 from the batch solve"
+    );
+    assert!(
+        add_remove_roundtrip,
+        "add/remove roundtrip moved R^2 by {roundtrip_rel}"
+    );
+}

@@ -127,8 +127,8 @@ USAGE:
 
 COMMANDS:
     train        Train a model (sampling | full | luo | kim | distributed |
-                 streaming) — every method runs through the unified
-                 training engine
+                 streaming | incremental | reduction) — every method runs
+                 through the unified training engine
     score        Score data against a saved model
     grid         Score a 200x200 grid, write a PGM + agreement stats
     worker       Run a TCP worker daemon for distributed training
@@ -146,8 +146,28 @@ COMMON OPTIONS (train):
     --data <name>             banana | star | two-donut | shuttle | tennessee
     --rows <n>                training rows to generate
     --method <m>              sampling | full | luo | kim | distributed |
-                              streaming (windowed snapshot)
+                              streaming (windowed snapshot) |
+                              incremental (exact online add/remove) |
+                              reduction (boundary-preserving sample
+                              reduction, then one solve on the kept rows)
     --bw <s>                  Gaussian bandwidth
+    --bandwidth <v>           a number sets the bandwidth directly;
+                              auto:mean | auto:median resolve it from the
+                              training data with the closed-form
+                              mean/median pairwise-distance criterion
+    --stale-budget <n>        incremental: add/remove updates tolerated
+                              before a full re-solve resync of the active
+                              set (default 64; 0 = resync only on
+                              divergence)
+    --divergence <tol>        incremental: KKT gap that forces an early
+                              resync when the adjust loop stalls above it
+                              (default 1e-3)
+    --reduction-target <n>    reduction: rows kept for the final solve
+                              (default 0 = auto, max(50, n/10))
+    --stream-incremental      streaming: slide the window with per-point
+                              incremental updates instead of snapshot
+                              retrains (drift judged at window-sized
+                              checkpoints)
     --f <frac>                expected outlier fraction
     --sample-size <n>         Algorithm-1 sample size
     --candidates <k>          independent candidate samples per iteration,

@@ -9,7 +9,9 @@ use std::path::Path;
 use crate::cli::Args;
 use crate::distributed::{CombineMode, DistributedConfig};
 use crate::error::{Error, Result};
+use crate::incremental::{IncrementalConfig, ReductionConfig};
 use crate::sampling::SamplingConfig;
+use crate::svdd::bandwidth::AutoBandwidth;
 use crate::svdd::trainer::SvddParams;
 use crate::svdd::{Kernel, Wss};
 use crate::util::json::Json;
@@ -36,19 +38,29 @@ pub enum Method {
     /// [`crate::sampling::StreamingSvdd`] window by window and take the
     /// final master-set model.
     Streaming,
+    /// Online learning: per-point exact add/remove updates through
+    /// [`crate::incremental::IncrementalSvdd`] (sliding active set,
+    /// staleness-budgeted resyncs).
+    Incremental,
+    /// Boundary-preserving sample reduction
+    /// ([`crate::incremental::reduction`]): keep the rows nearest a
+    /// pilot model's decision boundary, then solve on the kept set.
+    Reduction,
 }
 
 impl Method {
     /// Every method, in the order `fastsvdd train --method` documents
     /// them. Exhaustive by construction: adding a variant without
     /// extending this list breaks the parse↔name round-trip test.
-    pub const ALL: [Method; 6] = [
+    pub const ALL: [Method; 8] = [
         Method::Sampling,
         Method::Full,
         Method::Distributed,
         Method::Luo,
         Method::Kim,
         Method::Streaming,
+        Method::Incremental,
+        Method::Reduction,
     ];
 
     pub fn parse(s: &str) -> Result<Method> {
@@ -59,6 +71,8 @@ impl Method {
             "luo" => Method::Luo,
             "kim" => Method::Kim,
             "streaming" => Method::Streaming,
+            "incremental" => Method::Incremental,
+            "reduction" => Method::Reduction,
             other => return Err(Error::Config(format!("unknown method '{other}'"))),
         })
     }
@@ -72,6 +86,8 @@ impl Method {
             Method::Luo => "luo",
             Method::Kim => "kim",
             Method::Streaming => "streaming",
+            Method::Incremental => "incremental",
+            Method::Reduction => "reduction",
         }
     }
 }
@@ -90,6 +106,12 @@ pub struct RunConfig {
     pub dataset: String,
     pub rows: usize,
     pub bandwidth: f64,
+    /// Hands-off kernel bandwidth: when set, the launcher resolves
+    /// `bandwidth` from the training data with the closed-form
+    /// mean/median criterion ([`crate::svdd::bandwidth`]) before
+    /// training. CLI spelling: `--bandwidth auto:mean|auto:median`
+    /// (a plain number sets `bandwidth` directly).
+    pub bandwidth_auto: Option<AutoBandwidth>,
     pub outlier_fraction: f64,
     pub method: Method,
     pub sample_size: usize,
@@ -155,6 +177,18 @@ pub struct RunConfig {
     pub max_inflight: usize,
     /// `serve`: concurrent-connection cap on the edge.
     pub max_conns: usize,
+    /// Online learning: full re-solve (resync) after this many
+    /// incremental add/remove updates (0 = only on divergence).
+    pub stale_budget: usize,
+    /// Online learning: duality gap above which an exhausted
+    /// migration loop counts as diverged and forces a resync.
+    pub divergence: f64,
+    /// `method=reduction`: rows to keep (0 = auto: `max(50, n/10)`).
+    pub reduction_target: usize,
+    /// Streaming: drive the sliding window with per-point incremental
+    /// updates instead of window-snapshot retrains (opt-in; off keeps
+    /// the historical snapshot trajectories byte-identical).
+    pub stream_incremental: bool,
 }
 
 impl Default for RunConfig {
@@ -163,6 +197,7 @@ impl Default for RunConfig {
             dataset: "banana".into(),
             rows: 11_016,
             bandwidth: 0.35,
+            bandwidth_auto: None,
             outlier_fraction: 0.001,
             method: Method::Sampling,
             sample_size: 6,
@@ -190,6 +225,10 @@ impl Default for RunConfig {
             batch_window_us: 2_000,
             max_inflight: 1 << 16,
             max_conns: 1024,
+            stale_budget: 64,
+            divergence: 1e-3,
+            reduction_target: 0,
+            stream_incremental: false,
         }
     }
 }
@@ -217,6 +256,21 @@ impl RunConfig {
             warm_alpha: self.warm_alpha,
             record_trace: false,
         }
+    }
+
+    /// Online-learning knobs this run describes (the trainer's
+    /// active-set bound keeps its subsystem default).
+    pub fn incremental(&self) -> IncrementalConfig {
+        IncrementalConfig {
+            stale_budget: self.stale_budget,
+            divergence_tol: self.divergence,
+            ..Default::default()
+        }
+    }
+
+    /// Reduction knobs this run describes.
+    pub fn reduction(&self) -> ReductionConfig {
+        ReductionConfig { target: self.reduction_target, ..Default::default() }
     }
 
     /// The pool configuration the launcher installs process-wide.
@@ -261,6 +315,18 @@ impl RunConfig {
         }
         cfg.rows = args.get_usize("rows", cfg.rows)?;
         cfg.bandwidth = args.get_f64("bw", cfg.bandwidth)?;
+        if let Some(v) = args.get("bandwidth") {
+            if let Some(crit) = v.strip_prefix("auto:") {
+                cfg.bandwidth_auto = Some(AutoBandwidth::parse(crit)?);
+            } else {
+                cfg.bandwidth_auto = None;
+                cfg.bandwidth = v.parse::<f64>().map_err(|_| {
+                    Error::Config(format!(
+                        "--bandwidth expects a number or auto:mean|auto:median, got '{v}'"
+                    ))
+                })?;
+            }
+        }
         cfg.outlier_fraction = args.get_f64("f", cfg.outlier_fraction)?;
         cfg.sample_size = args.get_usize("sample-size", cfg.sample_size)?;
         cfg.max_iter = args.get_usize("max-iter", cfg.max_iter)?;
@@ -307,6 +373,12 @@ impl RunConfig {
         cfg.batch_window_us = args.get_u64("batch-window-us", cfg.batch_window_us)?;
         cfg.max_inflight = args.get_usize("max-inflight", cfg.max_inflight)?;
         cfg.max_conns = args.get_usize("max-conns", cfg.max_conns)?;
+        cfg.stale_budget = args.get_usize("stale-budget", cfg.stale_budget)?;
+        cfg.divergence = args.get_f64("divergence", cfg.divergence)?;
+        cfg.reduction_target = args.get_usize("reduction-target", cfg.reduction_target)?;
+        if args.flag("stream-incremental") {
+            cfg.stream_incremental = true;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -362,6 +434,16 @@ impl RunConfig {
                 "batch_window_us" => cfg.batch_window_us = req_num(val, key)? as u64,
                 "max_inflight" => cfg.max_inflight = req_num(val, key)? as usize,
                 "max_conns" => cfg.max_conns = req_num(val, key)? as usize,
+                "bandwidth_auto" => {
+                    cfg.bandwidth_auto = match val {
+                        Json::Null => None,
+                        _ => Some(AutoBandwidth::parse(&req_str(val, key)?)?),
+                    }
+                }
+                "stale_budget" => cfg.stale_budget = req_num(val, key)? as usize,
+                "divergence" => cfg.divergence = req_num(val, key)?,
+                "reduction_target" => cfg.reduction_target = req_num(val, key)? as usize,
+                "stream_incremental" => cfg.stream_incremental = req_bool(val, key)?,
                 other => {
                     return Err(Error::Config(format!("unknown config key '{other}'")))
                 }
@@ -422,6 +504,9 @@ impl RunConfig {
         }
         if self.max_conns == 0 {
             return Err(Error::Config("max_conns must be >= 1".into()));
+        }
+        if self.divergence <= 0.0 {
+            return Err(Error::Config("divergence must be > 0".into()));
         }
         Ok(())
     }
@@ -544,6 +629,8 @@ mod tests {
             ("luo", Method::Luo),
             ("kim", Method::Kim),
             ("streaming", Method::Streaming),
+            ("incremental", Method::Incremental),
+            ("reduction", Method::Reduction),
         ] {
             assert_eq!(Method::parse(s).unwrap(), m);
         }
@@ -710,6 +797,67 @@ mod tests {
         assert!(RunConfig::from_json_text(r#"{"worker_timeout_ms": 0}"#).is_err());
         assert!(RunConfig::from_json_text(r#"{"min_workers": 0}"#).is_err());
         let bad: Vec<String> = ["train", "--min-workers", "0"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        assert!(RunConfig::from_args(&Args::parse(&bad).unwrap()).is_err());
+    }
+
+    #[test]
+    fn online_learning_keys_parse_and_flow() {
+        // defaults: 64-update budget, 1e-3 divergence, auto reduction
+        // target, snapshot streaming, fixed bandwidth
+        let d = RunConfig::default();
+        assert_eq!(d.stale_budget, 64);
+        assert_eq!(d.divergence, 1e-3);
+        assert_eq!(d.reduction_target, 0);
+        assert!(!d.stream_incremental);
+        assert_eq!(d.bandwidth_auto, None);
+        // JSON spellings flow into the subsystem configs
+        let cfg = RunConfig::from_json_text(
+            r#"{"method": "incremental", "stale_budget": 16, "divergence": 0.01,
+                "reduction_target": 200, "stream_incremental": true,
+                "bandwidth_auto": "median"}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.method, Method::Incremental);
+        assert_eq!(cfg.bandwidth_auto, Some(AutoBandwidth::Median));
+        let icfg = cfg.incremental();
+        assert_eq!(icfg.stale_budget, 16);
+        assert_eq!(icfg.divergence_tol, 0.01);
+        assert_eq!(cfg.reduction().target, 200);
+        assert!(cfg.stream_incremental);
+        // "off"/null both mean fixed bandwidth
+        let cfg = RunConfig::from_json_text(r#"{"bandwidth_auto": null}"#).unwrap();
+        assert_eq!(cfg.bandwidth_auto, None);
+        // CLI spellings override on top; --bandwidth does double duty
+        let argv: Vec<String> = [
+            "train", "--method", "reduction", "--stale-budget", "8",
+            "--divergence", "0.5", "--reduction-target", "99",
+            "--stream-incremental", "--bandwidth", "auto:mean",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let cfg = RunConfig::from_args(&Args::parse(&argv).unwrap()).unwrap();
+        assert_eq!(cfg.method, Method::Reduction);
+        assert_eq!(cfg.stale_budget, 8);
+        assert_eq!(cfg.divergence, 0.5);
+        assert_eq!(cfg.reduction_target, 99);
+        assert!(cfg.stream_incremental);
+        assert_eq!(cfg.bandwidth_auto, Some(AutoBandwidth::Mean));
+        // a numeric --bandwidth sets sigma and clears the auto mode
+        let argv: Vec<String> = ["train", "--bandwidth", "0.7"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let cfg = RunConfig::from_args(&Args::parse(&argv).unwrap()).unwrap();
+        assert_eq!(cfg.bandwidth, 0.7);
+        assert_eq!(cfg.bandwidth_auto, None);
+        // degenerate values rejected, file or CLI alike
+        assert!(RunConfig::from_json_text(r#"{"divergence": 0}"#).is_err());
+        assert!(RunConfig::from_json_text(r#"{"bandwidth_auto": "magic"}"#).is_err());
+        let bad: Vec<String> = ["train", "--bandwidth", "auto:mode"]
             .iter()
             .map(|s| s.to_string())
             .collect();

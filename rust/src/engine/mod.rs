@@ -6,8 +6,10 @@
 //! module makes that interchangeability literal: every method —
 //! [`Method::Full`], [`Method::Sampling`] (including
 //! `candidates_per_iter` and `warm_alpha`), [`Method::Distributed`],
-//! [`Method::Luo`], [`Method::Kim`] and the streaming snapshot
-//! [`Method::Streaming`] — implements the same [`Trainer`] trait,
+//! [`Method::Luo`], [`Method::Kim`], the streaming snapshot
+//! [`Method::Streaming`], the online state machine
+//! [`Method::Incremental`] and the boundary-preserving
+//! [`Method::Reduction`] — implements the same [`Trainer`] trait,
 //! consumes the same [`TrainContext`] and produces the same
 //! [`TrainReport`], so the launcher, the lifecycle driver, grid
 //! search, the bench harnesses and the distributed controller run all
@@ -45,6 +47,7 @@ use crate::baselines::{KimConfig, LuoConfig};
 use crate::config::{Method, RunConfig};
 use crate::distributed::{CombineMode, DistributedConfig};
 use crate::error::Result;
+use crate::incremental::{IncrementalConfig, ReductionConfig};
 use crate::metrics::Metrics;
 use crate::parallel::Pool;
 use crate::sampling::{GramBackend, SamplingConfig, StreamingConfig, TracePoint};
@@ -101,8 +104,14 @@ pub struct TrainContext<'a> {
     pub min_workers: usize,
     /// TCP worker addresses; empty = in-process local cluster.
     pub addrs: Vec<SocketAddr>,
-    /// Streaming-snapshot knobs (window, drift monitor).
+    /// Streaming-snapshot knobs (window, drift monitor, per-point
+    /// incremental mode).
     pub streaming: StreamingConfig,
+    /// Online-update knobs (staleness budget, divergence tolerance,
+    /// active-set cap) for [`Method::Incremental`].
+    pub incremental: IncrementalConfig,
+    /// Boundary-preserving reduction knobs for [`Method::Reduction`].
+    pub reduction: ReductionConfig,
 }
 
 impl TrainContext<'static> {
@@ -128,6 +137,8 @@ impl TrainContext<'static> {
             min_workers: dist.min_workers,
             addrs: Vec::new(),
             streaming: StreamingConfig { sample_size: sampling.sample_size, ..Default::default() },
+            incremental: IncrementalConfig::default(),
+            reduction: ReductionConfig::default(),
         }
     }
 
@@ -142,6 +153,10 @@ impl TrainContext<'static> {
         ctx.max_retries = cfg.max_retries;
         ctx.worker_timeout = std::time::Duration::from_millis(cfg.worker_timeout_ms);
         ctx.min_workers = cfg.min_workers;
+        ctx.streaming.incremental = cfg.stream_incremental;
+        ctx.streaming.stale_budget = cfg.stale_budget;
+        ctx.incremental = cfg.incremental();
+        ctx.reduction = cfg.reduction();
         ctx
     }
 }
@@ -253,6 +268,8 @@ pub fn trainer_for(method: Method) -> Box<dyn Trainer> {
         Method::Luo => Box::new(trainers::Luo),
         Method::Kim => Box::new(trainers::Kim),
         Method::Streaming => Box::new(trainers::Streaming),
+        Method::Incremental => Box::new(trainers::Incremental),
+        Method::Reduction => Box::new(trainers::Reduction),
     }
 }
 
@@ -380,7 +397,8 @@ mod tests {
     #[test]
     fn metrics_sink_records_for_every_local_method() {
         let data = Banana::default().generate(400, 3);
-        for method in [Method::Full, Method::Sampling, Method::Luo, Method::Kim] {
+        for method in [Method::Full, Method::Sampling, Method::Luo, Method::Kim, Method::Reduction]
+        {
             let cfg = small_cfg(method);
             let engine = Engine::from_config(&cfg).unwrap();
             let metrics = Metrics::new();
@@ -417,6 +435,59 @@ mod tests {
         let report = Engine::from_config(&cfg).unwrap().train(&data).unwrap();
         assert_eq!(report.iterations, 1);
         assert_eq!(report.rows_touched, 40);
+    }
+
+    #[test]
+    fn engine_trains_incremental_and_reports_updates() {
+        let cfg = RunConfig { rows: 200, method: Method::Incremental, ..RunConfig::default() };
+        let data = Banana::default().generate(cfg.rows, cfg.seed);
+        let report = Engine::from_config(&cfg).unwrap().train(&data).unwrap();
+        assert_eq!(report.method, Method::Incremental);
+        // 64 seeded + 136 per-point adds
+        assert_eq!(report.iterations, 136);
+        assert_eq!(report.sample_size, 64);
+        assert!(report.solver_calls >= 1, "at least the seed resync");
+        assert!(report.model.r2() > 0.0);
+        assert!(report.extras_line().contains("resyncs="));
+    }
+
+    #[test]
+    fn engine_incremental_caps_active_set() {
+        let cfg = RunConfig {
+            rows: 300,
+            method: Method::Incremental,
+            // stale_budget flows into IncrementalConfig via cfg.incremental()
+            stale_budget: 32,
+            ..RunConfig::default()
+        };
+        let data = Banana::default().generate(cfg.rows, cfg.seed);
+        let engine = Engine::from_config(&cfg).unwrap();
+        let mut ctx = engine.context();
+        ctx.incremental.max_points = 128;
+        let report = engine.train_with(&ctx, &data).unwrap();
+        // adds past the cap evict FIFO: active set pinned at max_points
+        let line = report.extras_line();
+        assert!(line.contains("active=128"), "extras: {line}");
+        // 236 adds + 172 evictions
+        assert_eq!(report.iterations, 236 + (300 - 128));
+        assert!(report.solver_calls >= 2, "staleness budget must trip");
+    }
+
+    #[test]
+    fn engine_trains_reduction_and_reports_kept_rows() {
+        let cfg = RunConfig {
+            rows: 500,
+            method: Method::Reduction,
+            reduction_target: 100,
+            ..RunConfig::default()
+        };
+        let data = Banana::default().generate(cfg.rows, cfg.seed);
+        let report = Engine::from_config(&cfg).unwrap().train(&data).unwrap();
+        assert_eq!(report.method, Method::Reduction);
+        assert_eq!(report.sample_size, 100);
+        assert_eq!(report.solver_calls, 2);
+        assert!(report.model.r2() > 0.0);
+        assert!(report.extras_line().contains("kept=100"));
     }
 
     #[test]

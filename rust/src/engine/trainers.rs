@@ -8,6 +8,7 @@ use crate::config::Method;
 use crate::distributed::tcp::train_tcp_cluster;
 use crate::distributed::{train_local_cluster, DistributedConfig};
 use crate::error::{Error, Result};
+use crate::incremental::{reduce_and_train, IncrementalSvdd, InsertionOrder};
 use crate::sampling::{SamplingTrainer, StreamingSvdd};
 use crate::util::matrix::Matrix;
 use crate::util::timer::fmt_duration;
@@ -273,6 +274,101 @@ impl Trainer for Streaming {
                 ("updates".into(), stream.updates().to_string()),
                 ("window".into(), cfg.window.to_string()),
                 ("dropped_rows".into(), dropped.to_string()),
+            ],
+            notes: Vec::new(),
+            model,
+        })
+    }
+}
+
+/// [`Method::Incremental`]: seed the exact online state machine
+/// ([`IncrementalSvdd`]) from the first rows, then feed the rest one
+/// `add_point` at a time — the batch spelling of per-event online
+/// learning, so the engine can compare it against the other methods.
+/// When the active set exceeds [`crate::incremental::IncrementalConfig::max_points`]
+/// the oldest point is evicted FIFO, bounding the maintained Gram.
+pub struct Incremental;
+
+impl Trainer for Incremental {
+    fn method(&self) -> Method {
+        Method::Incremental
+    }
+
+    fn train(&self, ctx: &TrainContext<'_>, data: &Matrix) -> Result<TrainReport> {
+        if data.rows() == 0 {
+            return Err(Error::invalid("incremental: empty training set"));
+        }
+        let cfg = ctx.incremental;
+        let seed_n = data.rows().min(64);
+        let seed_rows: Vec<usize> = (0..seed_n).collect();
+        let mut inc = IncrementalSvdd::with_data(ctx.params, cfg, &data.gather(&seed_rows))?;
+        let mut order = InsertionOrder::new();
+        for i in 0..seed_n {
+            order.record_add(i);
+        }
+        for i in seed_n..data.rows() {
+            inc.add_point(data.row(i))?;
+            order.record_add(inc.len() - 1);
+            if cfg.max_points > 0 && inc.len() > cfg.max_points {
+                let oldest = order.oldest().expect("non-empty ledger");
+                let last = inc.len() - 1;
+                inc.remove_point(oldest)?;
+                order.record_swap_remove(oldest, last);
+            }
+        }
+        let model = inc.model()?;
+        Ok(TrainReport {
+            method: Method::Incremental,
+            seconds: 0.0,
+            iterations: inc.updates() as usize,
+            converged: inc.gap() <= ctx.params.smo.tol,
+            solver_calls: inc.resyncs() as usize,
+            rows_touched: data.rows(),
+            warm_start: false,
+            sample_size: seed_n,
+            solver: *inc.solver_stats(),
+            trace: Vec::new(),
+            extras: vec![
+                ("updates".into(), inc.updates().to_string()),
+                ("resyncs".into(), inc.resyncs().to_string()),
+                ("migrations".into(), inc.migrations().to_string()),
+                ("active".into(), inc.len().to_string()),
+                ("gap".into(), format!("{:.3e}", inc.gap())),
+            ],
+            notes: Vec::new(),
+            model,
+        })
+    }
+}
+
+/// [`Method::Reduction`]: boundary-preserving sample reduction — a
+/// pilot model ranks every row by distance to the decision boundary,
+/// only the nearest `target` rows reach the final solver.
+pub struct Reduction;
+
+impl Trainer for Reduction {
+    fn method(&self) -> Method {
+        Method::Reduction
+    }
+
+    fn train(&self, ctx: &TrainContext<'_>, data: &Matrix) -> Result<TrainReport> {
+        let (model, solver, out) = reduce_and_train(data, &ctx.params, &ctx.reduction, ctx.seed)?;
+        let solver_calls = if out.pilot_size > 0 { 2 } else { 1 };
+        Ok(TrainReport {
+            method: Method::Reduction,
+            seconds: 0.0,
+            iterations: 1,
+            converged: true,
+            solver_calls,
+            rows_touched: out.pilot_size + out.kept.len(),
+            warm_start: false,
+            sample_size: out.kept.len(),
+            solver,
+            trace: Vec::new(),
+            extras: vec![
+                ("kept".into(), out.kept.len().to_string()),
+                ("pilot".into(), out.pilot_size.to_string()),
+                ("shell".into(), format!("{:.3e}", out.shell_width)),
             ],
             notes: Vec::new(),
             model,

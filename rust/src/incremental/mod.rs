@@ -1,0 +1,158 @@
+//! Online-learning subsystem: exact incremental SVDD and
+//! boundary-preserving sample reduction.
+//!
+//! Two complementary answers to "the data moved, now what?":
+//!
+//! - [`IncrementalSvdd`] — a Jiang & Wang-style (arXiv 1709.00139)
+//!   state machine that keeps the dual solution *exactly* optimal
+//!   under per-point `add_point` / `remove_point` updates. The Gram
+//!   matrix, dual vector and KKT gradient of the active set are
+//!   maintained in place; each update costs O(k·d) kernel work plus a
+//!   short maximal-violating-pair migration loop that walks variables
+//!   between the interior / boundary-SV / bound-SV sets until the
+//!   duality gap closes. A full warm-started re-solve ("resync") runs
+//!   when the migration loop diverges or a configurable staleness
+//!   budget is spent, bounding numerical drift.
+//! - [`reduction`] — an Englhardt et al.-style (arXiv 2009.13853)
+//!   boundary-preserving sample reduction: a pilot model estimates the
+//!   decision boundary, every row is scored on the norm-cached block
+//!   path, and only the rows nearest the boundary are kept for the
+//!   final solve. A principled rival to the paper's uniform sampling
+//!   when a one-shot reduced training set is wanted.
+//!
+//! Both are wired into the unified engine as
+//! [`Method::Incremental`](crate::config::Method) and
+//! [`Method::Reduction`](crate::config::Method), and the incremental
+//! path additionally drives [`crate::sampling::StreamingSvdd`] (opt-in
+//! per-point window mode) and
+//! [`crate::registry::Lifecycle::respond`] (drift response without a
+//! full retrain).
+
+pub mod online;
+pub mod reduction;
+
+pub use online::{IncrementalSvdd, KktSet};
+pub use reduction::{reduce, reduce_and_train, ReductionOutcome};
+
+use std::collections::VecDeque;
+
+/// Knobs for [`IncrementalSvdd`].
+#[derive(Clone, Copy, Debug)]
+pub struct IncrementalConfig {
+    /// Force a full re-solve of the active set after this many
+    /// add/remove updates (0 = resync only on divergence or by hand).
+    /// The budget bounds floating-point drift in the maintained
+    /// gradient: between resyncs every update is exact up to the
+    /// migration-loop tolerance, and the resync re-derives the
+    /// gradient from scratch.
+    pub stale_budget: usize,
+    /// Duality gap above which an exhausted migration loop counts as
+    /// diverged and triggers an immediate resync.
+    pub divergence_tol: f64,
+    /// Migration-step cap per update (0 = auto: 64 x active points).
+    pub adjust_iters: usize,
+    /// Active-set bound honored by the `Method::Incremental` trainer's
+    /// sliding ingestion (0 = unbounded). The state machine itself
+    /// never evicts — callers decide what leaves the window.
+    pub max_points: usize,
+}
+
+impl Default for IncrementalConfig {
+    fn default() -> Self {
+        IncrementalConfig {
+            stale_budget: 64,
+            divergence_tol: 1e-3,
+            adjust_iters: 0,
+            max_points: 2048,
+        }
+    }
+}
+
+/// Knobs for the boundary-preserving [`reduction`] pass.
+#[derive(Clone, Copy, Debug)]
+pub struct ReductionConfig {
+    /// Rows to keep (0 = auto: `max(50, n/10)`).
+    pub target: usize,
+    /// Pilot subsample size for the boundary estimate (0 = auto:
+    /// `max(target, 128)`, capped at `n`).
+    pub pilot: usize,
+}
+
+impl Default for ReductionConfig {
+    fn default() -> Self {
+        ReductionConfig { target: 0, pilot: 0 }
+    }
+}
+
+/// Insertion-order view over [`IncrementalSvdd`]'s swap-remove index
+/// space, for callers sliding a FIFO window: `remove_point(i)` moves
+/// the last point into slot `i`, and this ledger keeps "which slot is
+/// oldest" correct across that swap.
+#[derive(Clone, Debug, Default)]
+pub struct InsertionOrder {
+    order: VecDeque<usize>,
+}
+
+impl InsertionOrder {
+    pub fn new() -> InsertionOrder {
+        InsertionOrder { order: VecDeque::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.order.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.order.is_empty()
+    }
+
+    /// Note that a point was added at slot `idx` (always the current
+    /// set size at add time).
+    pub fn record_add(&mut self, idx: usize) {
+        self.order.push_back(idx);
+    }
+
+    /// Slot of the oldest surviving point.
+    pub fn oldest(&self) -> Option<usize> {
+        self.order.front().copied()
+    }
+
+    /// Note a swap-removal: the point at `removed` left the set and
+    /// the point previously at slot `last` now lives at `removed`.
+    pub fn record_swap_remove(&mut self, removed: usize, last: usize) {
+        if let Some(pos) = self.order.iter().position(|&v| v == removed) {
+            self.order.remove(pos);
+        }
+        if removed != last {
+            for v in self.order.iter_mut() {
+                if *v == last {
+                    *v = removed;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insertion_order_tracks_swap_removes() {
+        let mut w = InsertionOrder::new();
+        for i in 0..4 {
+            w.record_add(i); // slots 0..4, oldest = 0
+        }
+        assert_eq!(w.oldest(), Some(0));
+        // remove slot 0: point from slot 3 moves into 0
+        w.record_swap_remove(0, 3);
+        assert_eq!(w.len(), 3);
+        assert_eq!(w.oldest(), Some(1));
+        // the newest point (added last) must now be known as slot 0
+        assert_eq!(*w.order.back().unwrap(), 0);
+        // remove the new oldest (slot 1); the point at slot 2 moves in
+        w.record_swap_remove(1, 2);
+        assert_eq!(w.oldest(), Some(1));
+        assert_eq!(w.len(), 2);
+    }
+}

@@ -1,0 +1,768 @@
+//! Exact incremental SVDD: per-point add/remove updates that keep the
+//! dual solution at KKT optimality without a cold re-solve.
+//!
+//! The state machine maintains, for the current active set of `k`
+//! points:
+//!
+//! - the Gaussian Gram matrix (stride-`cap` storage so adds and
+//!   swap-removes touch O(k) entries, never a full O(k²) rebuild),
+//! - the dual vector `a` (simplex-constrained: `sum a = 1`,
+//!   `0 <= a_i <= C` with `C = 1/(k f)`), and
+//! - the KKT gradient `g_i = 2 (K a)_i - K_ii` (so `dist²(x_i) =
+//!   quad - g_i`, the same identity the batch solver uses).
+//!
+//! An **add** appends a zero-mass variable (one O(k·d) kernel column,
+//! gradients untouched); a **remove** retires the departing mass from
+//! every gradient entry and hands it back to the remaining variables.
+//! Either way the box bound `C = 1/(k f)` moved, so an *adjust* pass
+//! re-clamps, repairs the simplex sum, then runs maximal-violating-pair
+//! migration steps — the Jiang & Wang (arXiv 1709.00139) set walks
+//! between interior / boundary-SV / bound-SV — until the duality gap
+//! closes to the solver tolerance. Every step is an exact coordinate
+//! update on the maintained Gram, so between resyncs the solution is
+//! optimal up to that tolerance, not an approximation.
+//!
+//! A **resync** (full warm-started SMO solve over the active set's
+//! Gram) re-derives the gradient from scratch; it fires when the
+//! migration loop diverges past [`IncrementalConfig::divergence_tol`]
+//! or the [`IncrementalConfig::stale_budget`] is spent, bounding
+//! floating-point drift over long update streams.
+
+use crate::error::{Error, Result};
+use crate::obs::Value;
+use crate::svdd::smo::{self, DenseKernel};
+use crate::svdd::trainer::{SolverStats, SvddParams};
+use crate::svdd::SvddModel;
+use crate::util::matrix::Matrix;
+
+use super::IncrementalConfig;
+
+/// Which KKT set a dual variable sits in.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KktSet {
+    /// `a = 0`: strictly inside the ball (non-SV).
+    Interior,
+    /// `0 < a < C`: boundary support vector.
+    Boundary,
+    /// `a = C`: bound support vector (described outlier).
+    Outlier,
+}
+
+fn classify(a: f64, c: f64, eps: f64) -> KktSet {
+    if a <= eps {
+        KktSet::Interior
+    } else if a >= c - eps {
+        KktSet::Outlier
+    } else {
+        KktSet::Boundary
+    }
+}
+
+/// Online SVDD over a mutable active set. See the module docs for the
+/// maintained invariants.
+#[derive(Clone, Debug)]
+pub struct IncrementalSvdd {
+    params: SvddParams,
+    cfg: IncrementalConfig,
+    points: Vec<Vec<f64>>,
+    norms: Vec<f64>,
+    /// Gram over the active set, entry `(i, j)` at `i * cap + j`. The
+    /// stride is the allocation capacity, so adds write one row/col
+    /// and swap-removes move one row/col.
+    gram: Vec<f64>,
+    cap: usize,
+    alpha: Vec<f64>,
+    g: Vec<f64>,
+    last_gap: f64,
+    updates: u64,
+    resyncs: u64,
+    migrations: u64,
+    since_resync: usize,
+    solver: SolverStats,
+}
+
+impl IncrementalSvdd {
+    /// Empty state machine; feed it with [`IncrementalSvdd::add_point`].
+    pub fn new(params: SvddParams, cfg: IncrementalConfig) -> IncrementalSvdd {
+        IncrementalSvdd {
+            params,
+            cfg,
+            points: Vec::new(),
+            norms: Vec::new(),
+            gram: Vec::new(),
+            cap: 0,
+            alpha: Vec::new(),
+            g: Vec::new(),
+            last_gap: 0.0,
+            updates: 0,
+            resyncs: 0,
+            migrations: 0,
+            since_resync: 0,
+            solver: SolverStats::default(),
+        }
+    }
+
+    /// Seed from a batch: builds the Gram and runs one cold solve (the
+    /// seed counts as a resync in the stats). The seed solution is the
+    /// same cold SMO solve a batch gram train would produce.
+    pub fn with_data(
+        params: SvddParams,
+        cfg: IncrementalConfig,
+        data: &Matrix,
+    ) -> Result<IncrementalSvdd> {
+        if data.rows() == 0 {
+            return Err(Error::invalid("incremental seed needs at least one row"));
+        }
+        let mut inc = IncrementalSvdd::new(params, cfg);
+        let n = data.rows();
+        inc.ensure_cap(n);
+        for i in 0..n {
+            let row = data.row(i);
+            inc.points.push(row.to_vec());
+            inc.norms.push(crate::linalg::dot(row, row));
+        }
+        for i in 0..n {
+            for j in 0..=i {
+                let v = if i == j {
+                    params.kernel.diag_from_norm(inc.norms[i])
+                } else {
+                    params.kernel.eval_cached(
+                        &inc.points[i],
+                        inc.norms[i],
+                        &inc.points[j],
+                        inc.norms[j],
+                    )
+                };
+                inc.gram[i * inc.cap + j] = v;
+                inc.gram[j * inc.cap + i] = v;
+            }
+        }
+        inc.alpha = vec![0.0; n];
+        inc.g = vec![0.0; n];
+        inc.solve_active(None, "seed")?;
+        Ok(inc)
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// Dimensionality of the active points (None while empty).
+    pub fn dim(&self) -> Option<usize> {
+        self.points.first().map(|p| p.len())
+    }
+
+    /// Add/remove updates applied so far.
+    pub fn updates(&self) -> u64 {
+        self.updates
+    }
+
+    /// Full re-solves (seed, staleness, divergence, manual).
+    pub fn resyncs(&self) -> u64 {
+        self.resyncs
+    }
+
+    /// KKT set-membership changes observed across migration steps.
+    pub fn migrations(&self) -> u64 {
+        self.migrations
+    }
+
+    /// Updates since the last full re-solve.
+    pub fn since_resync(&self) -> usize {
+        self.since_resync
+    }
+
+    /// `true` once the staleness budget is spent (callers that want to
+    /// handle resync themselves — e.g. a Lifecycle full retrain —
+    /// construct with `stale_budget: 0` and poll this via
+    /// [`IncrementalSvdd::since_resync`]).
+    pub fn is_stale(&self) -> bool {
+        self.cfg.stale_budget > 0 && self.since_resync >= self.cfg.stale_budget
+    }
+
+    /// Duality gap after the most recent update/resync.
+    pub fn gap(&self) -> f64 {
+        self.last_gap
+    }
+
+    pub fn solver_stats(&self) -> &SolverStats {
+        &self.solver
+    }
+
+    pub fn params(&self) -> &SvddParams {
+        &self.params
+    }
+
+    pub fn config(&self) -> &IncrementalConfig {
+        &self.cfg
+    }
+
+    /// Add one point. Costs one O(k·d) kernel column plus the
+    /// migration loop; existing gradients are untouched by the append
+    /// itself because the new variable starts at zero mass.
+    pub fn add_point(&mut self, x: &[f64]) -> Result<()> {
+        if let Some(d) = self.dim() {
+            if x.len() != d {
+                return Err(Error::invalid(format!(
+                    "incremental add: dim {} vs active dim {d}",
+                    x.len()
+                )));
+            }
+        }
+        if x.is_empty() || x.iter().any(|v| !v.is_finite()) {
+            return Err(Error::invalid("incremental add: empty or non-finite point"));
+        }
+        let n = self.points.len();
+        self.ensure_cap(n + 1);
+        let nx = crate::linalg::dot(x, x);
+        let mut ka = 0.0;
+        for i in 0..n {
+            let v = self
+                .params
+                .kernel
+                .eval_cached(&self.points[i], self.norms[i], x, nx);
+            self.gram[n * self.cap + i] = v;
+            self.gram[i * self.cap + n] = v;
+            ka += self.alpha[i] * v;
+        }
+        let d = self.params.kernel.diag_from_norm(nx);
+        self.gram[n * self.cap + n] = d;
+        self.points.push(x.to_vec());
+        self.norms.push(nx);
+        self.alpha.push(0.0);
+        self.g.push(2.0 * ka - d);
+        self.updates += 1;
+        self.since_resync += 1;
+        let steps = self.adjust()?;
+        self.emit_update("add", steps);
+        Ok(())
+    }
+
+    /// Remove the point at slot `i`. The last point is swapped into
+    /// slot `i` (O(k) bookkeeping); use
+    /// [`super::InsertionOrder`] to keep a FIFO view across swaps. The
+    /// departing dual mass is handed back to the remaining variables
+    /// and the migration loop restores optimality.
+    pub fn remove_point(&mut self, i: usize) -> Result<()> {
+        let n = self.points.len();
+        if i >= n {
+            return Err(Error::invalid(format!(
+                "incremental remove: index {i} out of range (n={n})"
+            )));
+        }
+        let freed = self.alpha[i];
+        if freed != 0.0 {
+            for k in 0..n {
+                self.g[k] -= 2.0 * freed * self.gram[k * self.cap + i];
+            }
+        }
+        let last = n - 1;
+        if i != last {
+            // move row `last` into row `i`, then column `last` into
+            // column `i`; the row move already placed K(last,last) at
+            // (i, last), so the column move lands the diagonal right.
+            for k in 0..n {
+                self.gram[i * self.cap + k] = self.gram[last * self.cap + k];
+            }
+            for k in 0..n {
+                self.gram[k * self.cap + i] = self.gram[k * self.cap + last];
+            }
+        }
+        self.points.swap_remove(i);
+        self.norms.swap_remove(i);
+        self.alpha.swap_remove(i);
+        self.g.swap_remove(i);
+        self.updates += 1;
+        self.since_resync += 1;
+        if self.points.is_empty() {
+            self.last_gap = 0.0;
+            self.emit_update("remove", 0);
+            return Ok(());
+        }
+        if freed > 0.0 {
+            self.redistribute(freed)?;
+        }
+        let steps = self.adjust()?;
+        self.emit_update("remove", steps);
+        Ok(())
+    }
+
+    /// Hand `mass` to the variables with box headroom, largest alphas
+    /// (current SVs) first, index as tie-break — deterministic, and the
+    /// migration loop re-optimizes the placement anyway. Total
+    /// headroom always suffices: `k C = 1/f >= 1`.
+    fn redistribute(&mut self, mut mass: f64) -> Result<()> {
+        let n = self.points.len();
+        let c = self.params.c_for(n)?;
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by(|&a, &b| {
+            self.alpha[b]
+                .partial_cmp(&self.alpha[a])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        for j in order {
+            if mass <= 0.0 {
+                break;
+            }
+            let room = (c - self.alpha[j]).max(0.0);
+            if room <= 0.0 {
+                continue;
+            }
+            let d = room.min(mass);
+            self.bump(j, d);
+            mass -= d;
+        }
+        Ok(())
+    }
+
+    /// Drain `mass` from the smallest positive variables first (used
+    /// only for numerical sum repair; structurally the sum never
+    /// overshoots 1).
+    fn drain(&mut self, mut mass: f64) {
+        let n = self.points.len();
+        let mut order: Vec<usize> = (0..n).filter(|&j| self.alpha[j] > 0.0).collect();
+        order.sort_by(|&a, &b| {
+            self.alpha[a]
+                .partial_cmp(&self.alpha[b])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        for j in order {
+            if mass <= 0.0 {
+                break;
+            }
+            let d = self.alpha[j].min(mass);
+            self.bump(j, -d);
+            mass -= d;
+        }
+    }
+
+    /// `alpha[j] += delta` with the matching O(k) gradient update.
+    fn bump(&mut self, j: usize, delta: f64) {
+        self.alpha[j] += delta;
+        let n = self.points.len();
+        for k in 0..n {
+            self.g[k] += 2.0 * delta * self.gram[k * self.cap + j];
+        }
+    }
+
+    /// Restore KKT optimality after a structural change: re-clamp to
+    /// the current box (C depends on k), repair the simplex sum, then
+    /// run maximal-violating-pair migration steps until the gap closes.
+    /// Returns the number of migration steps taken; triggers a resync
+    /// when the loop diverges or the staleness budget is spent.
+    fn adjust(&mut self) -> Result<usize> {
+        let n = self.points.len();
+        let c = self.params.c_for(n)?;
+        let eps = self.params.smo.sv_eps;
+        for j in 0..n {
+            if self.alpha[j] > c {
+                let d = c - self.alpha[j];
+                self.bump(j, d);
+            }
+        }
+        let s: f64 = self.alpha.iter().sum();
+        if s < 1.0 - 1e-12 {
+            self.redistribute(1.0 - s)?;
+        } else if s > 1.0 + 1e-12 {
+            self.drain(s - 1.0);
+        }
+        let tol = self.params.smo.tol;
+        let cap_steps = if self.cfg.adjust_iters > 0 {
+            self.cfg.adjust_iters
+        } else {
+            64 * n.max(8)
+        };
+        let mut steps = 0usize;
+        loop {
+            let mut up = usize::MAX;
+            let mut g_up = f64::INFINITY;
+            let mut dn = usize::MAX;
+            let mut g_dn = f64::NEG_INFINITY;
+            for k in 0..n {
+                if self.alpha[k] < c - eps && self.g[k] < g_up {
+                    g_up = self.g[k];
+                    up = k;
+                }
+                if self.alpha[k] > eps && self.g[k] > g_dn {
+                    g_dn = self.g[k];
+                    dn = k;
+                }
+            }
+            if up == usize::MAX || dn == usize::MAX || up == dn {
+                self.last_gap = 0.0;
+                break;
+            }
+            let gap = g_dn - g_up;
+            self.last_gap = gap;
+            if gap <= tol || steps >= cap_steps {
+                break;
+            }
+            let kij = self.gram[up * self.cap + dn];
+            let eta = (2.0
+                * (self.gram[up * self.cap + up] + self.gram[dn * self.cap + dn] - 2.0 * kij))
+                .max(1e-12);
+            let t = (gap / eta)
+                .min(c - self.alpha[up])
+                .min(self.alpha[dn]);
+            if t <= 0.0 {
+                break;
+            }
+            let was_up = classify(self.alpha[up], c, eps);
+            let was_dn = classify(self.alpha[dn], c, eps);
+            self.alpha[up] += t;
+            self.alpha[dn] -= t;
+            for k in 0..n {
+                self.g[k] +=
+                    2.0 * t * (self.gram[k * self.cap + up] - self.gram[k * self.cap + dn]);
+            }
+            if classify(self.alpha[up], c, eps) != was_up {
+                self.migrations += 1;
+            }
+            if classify(self.alpha[dn], c, eps) != was_dn {
+                self.migrations += 1;
+            }
+            steps += 1;
+        }
+        if self.last_gap > self.cfg.divergence_tol && steps >= cap_steps {
+            self.solve_active(Some("carry"), "divergence")?;
+        } else if self.cfg.stale_budget > 0 && self.since_resync >= self.cfg.stale_budget {
+            self.solve_active(Some("carry"), "stale")?;
+        }
+        Ok(steps)
+    }
+
+    /// Force a full warm-started re-solve of the active set now.
+    pub fn resync(&mut self) -> Result<()> {
+        self.solve_active(Some("carry"), "manual")
+    }
+
+    /// Full SMO solve over the active set's Gram. `init` of `Some`
+    /// warm-starts from the maintained alpha ("carry"); `None` is a
+    /// cold seed solve. Re-derives the gradient exactly.
+    fn solve_active(&mut self, init: Option<&'static str>, reason: &'static str) -> Result<()> {
+        let n = self.points.len();
+        if n == 0 {
+            return Ok(());
+        }
+        let c = self.params.c_for(n)?;
+        let mut dense = vec![0.0; n * n];
+        for i in 0..n {
+            dense[i * n..(i + 1) * n]
+                .copy_from_slice(&self.gram[i * self.cap..i * self.cap + n]);
+        }
+        let mut kp = DenseKernel::new(dense, n)?;
+        let warm = init.map(|_| self.alpha.clone());
+        let sol = smo::solve_with_init(&mut kp, c, &self.params.smo, warm.as_deref())?;
+        self.solver.absorb(&SolverStats::from_solution(&sol, 0, 0));
+        self.alpha = sol.alpha;
+        self.g = sol.gradient;
+        self.last_gap = sol.gap;
+        self.resyncs += 1;
+        self.since_resync = 0;
+        if crate::obs::enabled() {
+            crate::obs::emit(
+                "incremental.resync",
+                vec![
+                    ("reason", Value::Str(reason.to_string())),
+                    ("points", Value::U64(n as u64)),
+                    ("iterations", Value::U64(sol.iterations as u64)),
+                ],
+            );
+        }
+        Ok(())
+    }
+
+    fn emit_update(&self, op: &'static str, steps: usize) {
+        if crate::obs::enabled() {
+            crate::obs::emit(
+                "incremental.update",
+                vec![
+                    ("op", Value::Str(op.to_string())),
+                    ("points", Value::U64(self.points.len() as u64)),
+                    ("steps", Value::U64(steps as u64)),
+                    ("gap", Value::F64(self.last_gap)),
+                ],
+            );
+        }
+    }
+
+    /// `a' K a` at the current solution (via the gradient identity
+    /// `(K a)_i = (g_i + K_ii) / 2`, same as the batch solver).
+    pub fn quad(&self) -> f64 {
+        let n = self.points.len();
+        (0..n)
+            .map(|i| self.alpha[i] * (self.g[i] + self.gram[i * self.cap + i]) * 0.5)
+            .sum()
+    }
+
+    /// Squared threshold radius: mean of `quad - g_k` over boundary
+    /// SVs, falling back to all SVs — the batch solver's estimator on
+    /// the maintained state.
+    pub fn r2(&self) -> f64 {
+        let n = self.points.len();
+        if n == 0 {
+            return 0.0;
+        }
+        let c = match self.params.c_for(n) {
+            Ok(c) => c,
+            Err(_) => return 0.0,
+        };
+        let eps = self.params.smo.sv_eps;
+        let quad = self.quad();
+        let mut sum = 0.0;
+        let mut cnt = 0usize;
+        for k in 0..n {
+            if self.alpha[k] > eps && self.alpha[k] < c - eps {
+                sum += quad - self.g[k];
+                cnt += 1;
+            }
+        }
+        if cnt == 0 {
+            for k in 0..n {
+                if self.alpha[k] > eps {
+                    sum += quad - self.g[k];
+                    cnt += 1;
+                }
+            }
+        }
+        if cnt > 0 {
+            (sum / cnt as f64).max(0.0)
+        } else {
+            0.0
+        }
+    }
+
+    /// KKT set sizes `(interior, boundary, outlier)` of the active set.
+    pub fn set_sizes(&self) -> (usize, usize, usize) {
+        let n = self.points.len();
+        let c = match self.params.c_for(n) {
+            Ok(c) => c,
+            Err(_) => return (0, 0, 0),
+        };
+        let eps = self.params.smo.sv_eps;
+        let mut sizes = (0usize, 0usize, 0usize);
+        for k in 0..n {
+            match classify(self.alpha[k], c, eps) {
+                KktSet::Interior => sizes.0 += 1,
+                KktSet::Boundary => sizes.1 += 1,
+                KktSet::Outlier => sizes.2 += 1,
+            }
+        }
+        sizes
+    }
+
+    /// Materialize the current solution as a scoring model, with the
+    /// batch trainer's finalize recipe: keep `alpha > sv_eps`,
+    /// renormalize to sum exactly 1, recompute `W = a' K a` over the
+    /// retained SVs from the maintained Gram.
+    pub fn model(&self) -> Result<SvddModel> {
+        let n = self.points.len();
+        if n == 0 {
+            return Err(Error::invalid("incremental model: empty active set"));
+        }
+        let eps = self.params.smo.sv_eps;
+        let idx: Vec<usize> = (0..n).filter(|&i| self.alpha[i] > eps).collect();
+        if idx.is_empty() {
+            return Err(Error::Solver("no support vectors extracted".into()));
+        }
+        let rows: Vec<Vec<f64>> = idx.iter().map(|&i| self.points[i].clone()).collect();
+        let sv = Matrix::from_rows(&rows)?;
+        let mut alpha: Vec<f64> = idx.iter().map(|&i| self.alpha[i]).collect();
+        let total: f64 = alpha.iter().sum();
+        for a in &mut alpha {
+            *a /= total;
+        }
+        let mut w = 0.0;
+        for (ii, &i) in idx.iter().enumerate() {
+            for (jj, &j) in idx.iter().enumerate() {
+                w += alpha[ii] * alpha[jj] * self.gram[i * self.cap + j];
+            }
+        }
+        SvddModel::new(sv, alpha, self.params.kernel, self.r2(), w)
+    }
+
+    /// Grow the stride-`cap` Gram allocation (geometric, so long
+    /// streams amortize to O(k) per add).
+    fn ensure_cap(&mut self, need: usize) {
+        if need <= self.cap {
+            return;
+        }
+        let ncap = need.next_power_of_two().max(64);
+        let mut ng = vec![0.0; ncap * ncap];
+        let n = self.points.len();
+        for i in 0..n {
+            ng[i * ncap..i * ncap + n].copy_from_slice(&self.gram[i * self.cap..i * self.cap + n]);
+        }
+        self.gram = ng;
+        self.cap = ncap;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::svdd::trainer::train;
+    use crate::util::rng::Xoshiro256;
+
+    fn ring(n: usize, seed: u64) -> Matrix {
+        let mut rng = Xoshiro256::new(seed);
+        let rows: Vec<Vec<f64>> = (0..n)
+            .map(|_| {
+                let th = rng.range(0.0, std::f64::consts::TAU);
+                let r = rng.range(0.8, 1.2);
+                vec![r * th.cos(), r * th.sin()]
+            })
+            .collect();
+        Matrix::from_rows(&rows).unwrap()
+    }
+
+    fn params() -> SvddParams {
+        SvddParams::gaussian(0.6, 0.05)
+    }
+
+    fn no_resync() -> IncrementalConfig {
+        IncrementalConfig { stale_budget: 0, ..Default::default() }
+    }
+
+    #[test]
+    fn seed_matches_batch_solve() {
+        let data = ring(120, 1);
+        let inc = IncrementalSvdd::with_data(params(), no_resync(), &data).unwrap();
+        let batch = train(&data, &params()).unwrap();
+        let rel = (inc.r2() - batch.r2()).abs() / batch.r2();
+        assert!(rel < 1e-6, "seed r2 {} vs batch {}", inc.r2(), batch.r2());
+        assert_eq!(inc.resyncs(), 1);
+    }
+
+    #[test]
+    fn sequential_adds_match_batch_within_tolerance() {
+        // Property: n sequential add_point calls agree with one batch
+        // solve on the same rows within the documented 1% tolerance.
+        let data = ring(150, 2);
+        let mut inc = IncrementalSvdd::new(params(), no_resync());
+        for i in 0..data.rows() {
+            inc.add_point(data.row(i)).unwrap();
+        }
+        assert_eq!(inc.updates(), 150);
+        let batch = train(&data, &params()).unwrap();
+        let rel = (inc.r2() - batch.r2()).abs() / batch.r2();
+        assert!(rel < 0.01, "incremental r2 {} vs batch {} (rel {rel})", inc.r2(), batch.r2());
+        assert!(inc.gap() <= inc.params().smo.tol * 10.0, "gap {}", inc.gap());
+    }
+
+    #[test]
+    fn add_then_remove_roundtrip_restores_model() {
+        // Property: adding a point and removing it again returns the
+        // solution to the original optimum within tolerance.
+        let data = ring(100, 3);
+        let mut inc = IncrementalSvdd::with_data(params(), no_resync(), &data).unwrap();
+        let before = inc.model().unwrap();
+        inc.add_point(&[3.0, -3.0]).unwrap();
+        let slot = inc.len() - 1;
+        inc.remove_point(slot).unwrap();
+        let after = inc.model().unwrap();
+        let rel = (after.r2() - before.r2()).abs() / before.r2();
+        assert!(rel < 1e-4, "roundtrip drifted: {} -> {}", before.r2(), after.r2());
+        let dsv = (after.num_sv() as i64 - before.num_sv() as i64).abs();
+        assert!(dsv <= 2, "SV count moved {} -> {}", before.num_sv(), after.num_sv());
+        assert_eq!(inc.len(), 100);
+    }
+
+    #[test]
+    fn remove_point_swaps_last_into_slot() {
+        let data = ring(10, 4);
+        let mut inc = IncrementalSvdd::with_data(params(), no_resync(), &data).unwrap();
+        let last_row = inc.points[9].clone();
+        inc.remove_point(3).unwrap();
+        assert_eq!(inc.len(), 9);
+        assert_eq!(inc.points[3], last_row);
+        // gram row 3 must describe the moved point: diag is K(x,x)=1
+        let k35 = inc.params.kernel.eval_cached(
+            &inc.points[3],
+            inc.norms[3],
+            &inc.points[5],
+            inc.norms[5],
+        );
+        assert!((inc.gram[3 * inc.cap + 5] - k35).abs() < 1e-15);
+        assert!((inc.gram[5 * inc.cap + 3] - k35).abs() < 1e-15);
+        assert!((inc.gram[3 * inc.cap + 3] - 1.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn maintained_gradient_stays_exact_under_updates() {
+        let data = ring(60, 5);
+        let mut inc = IncrementalSvdd::with_data(params(), no_resync(), &data).unwrap();
+        let mut rng = Xoshiro256::new(9);
+        for _ in 0..30 {
+            let th = rng.range(0.0, std::f64::consts::TAU);
+            inc.add_point(&[th.cos(), th.sin()]).unwrap();
+            inc.remove_point(rng.index(inc.len())).unwrap();
+        }
+        // recompute g from scratch and compare with the maintained one
+        let n = inc.len();
+        for k in 0..n {
+            let ka: f64 = (0..n).map(|j| inc.alpha[j] * inc.gram[k * inc.cap + j]).sum();
+            let fresh = 2.0 * ka - inc.gram[k * inc.cap + k];
+            assert!(
+                (fresh - inc.g[k]).abs() < 1e-9,
+                "gradient drifted at {k}: {} vs {fresh}",
+                inc.g[k]
+            );
+        }
+        let s: f64 = inc.alpha.iter().sum();
+        assert!((s - 1.0).abs() < 1e-9, "sum(alpha) = {s}");
+    }
+
+    #[test]
+    fn staleness_budget_forces_resyncs() {
+        let data = ring(50, 6);
+        let cfg = IncrementalConfig { stale_budget: 10, ..Default::default() };
+        let mut inc = IncrementalSvdd::with_data(params(), cfg, &data).unwrap();
+        let mut rng = Xoshiro256::new(10);
+        for _ in 0..25 {
+            let th = rng.range(0.0, std::f64::consts::TAU);
+            inc.add_point(&[1.1 * th.cos(), 1.1 * th.sin()]).unwrap();
+        }
+        // seed + two budget-triggered resyncs over 25 updates
+        assert!(inc.resyncs() >= 3, "resyncs = {}", inc.resyncs());
+        assert!(inc.since_resync() < 10);
+        assert!(!inc.is_stale());
+    }
+
+    #[test]
+    fn empty_and_single_point_edges() {
+        let mut inc = IncrementalSvdd::new(params(), no_resync());
+        assert!(inc.is_empty());
+        assert!(inc.model().is_err());
+        inc.add_point(&[0.5, 0.5]).unwrap();
+        let m = inc.model().unwrap();
+        assert_eq!(m.num_sv(), 1);
+        assert!(m.dist2(&[0.5, 0.5]).abs() < 1e-12);
+        inc.remove_point(0).unwrap();
+        assert!(inc.is_empty());
+        assert!(inc.remove_point(0).is_err());
+    }
+
+    #[test]
+    fn dimension_mismatch_rejected() {
+        let mut inc = IncrementalSvdd::new(params(), no_resync());
+        inc.add_point(&[0.0, 0.0]).unwrap();
+        assert!(inc.add_point(&[1.0]).is_err());
+        assert!(inc.add_point(&[f64::NAN, 0.0]).is_err());
+    }
+
+    #[test]
+    fn set_sizes_partition_the_active_set() {
+        let data = ring(80, 7);
+        let inc = IncrementalSvdd::with_data(params(), no_resync(), &data).unwrap();
+        let (int, bnd, out) = inc.set_sizes();
+        assert_eq!(int + bnd + out, 80);
+        assert!(bnd > 0, "no boundary SVs");
+    }
+}

@@ -1,0 +1,176 @@
+//! Boundary-preserving sample reduction (Englhardt et al., arXiv
+//! 2009.13853 flavor): keep the rows that *shape* the decision
+//! boundary, drop the deep-interior mass that only slows the solver.
+//!
+//! A pilot model trained on a uniform subsample estimates the
+//! boundary; every row is then scored on the norm-cached block path
+//! ([`SvddModel::dist2_batch`]) and ranked by `|dist² - R²|` — its
+//! distance to the pilot boundary shell. The `target` nearest rows are
+//! kept and handed to the ordinary batch solver. Compared to the
+//! paper's uniform sampling this buys a much smaller training set at
+//! equal boundary fidelity, at the price of one pilot solve plus one
+//! full scoring pass.
+
+use crate::error::{Error, Result};
+use crate::svdd::trainer::{train_detailed, SolverStats, SvddParams};
+use crate::svdd::SvddModel;
+use crate::util::matrix::Matrix;
+use crate::util::rng::Xoshiro256;
+
+use super::ReductionConfig;
+
+/// What the reduction pass decided.
+#[derive(Clone, Debug)]
+pub struct ReductionOutcome {
+    /// Kept row indices into the original data, ascending (original
+    /// row order is preserved for the final solve).
+    pub kept: Vec<usize>,
+    /// Rows the pilot model was trained on (0 when reduction was a
+    /// no-op because `target >= n`).
+    pub pilot_size: usize,
+    /// `|dist² - R²|` of the farthest kept row — the half-width of the
+    /// boundary shell the kept set spans.
+    pub shell_width: f64,
+    /// Pilot solve telemetry.
+    pub pilot_solver: SolverStats,
+}
+
+fn effective_target(cfg: &ReductionConfig, n: usize) -> usize {
+    if cfg.target > 0 {
+        cfg.target.min(n)
+    } else {
+        (n / 10).max(50).min(n)
+    }
+}
+
+/// Pick the boundary-preserving subset. Deterministic given `seed`.
+pub fn reduce(
+    data: &Matrix,
+    params: &SvddParams,
+    cfg: &ReductionConfig,
+    seed: u64,
+) -> Result<ReductionOutcome> {
+    let n = data.rows();
+    if n == 0 {
+        return Err(Error::invalid("reduction: empty training set"));
+    }
+    let target = effective_target(cfg, n);
+    if target >= n {
+        return Ok(ReductionOutcome {
+            kept: (0..n).collect(),
+            pilot_size: 0,
+            shell_width: 0.0,
+            pilot_solver: SolverStats::default(),
+        });
+    }
+    let pilot_n = if cfg.pilot > 0 { cfg.pilot.min(n) } else { target.max(128).min(n) };
+    let mut rng = Xoshiro256::new(seed);
+    let mut idx = rng.sample_with_replacement(n, pilot_n);
+    idx.sort_unstable();
+    idx.dedup();
+    let pilot_data = data.gather(&idx).dedup_rows();
+    let (pilot, pilot_solver) = train_detailed(&pilot_data, params, None)?;
+    let d2 = pilot.dist2_batch(data);
+    let r2 = pilot.r2();
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| {
+        let sa = (d2[a] - r2).abs();
+        let sb = (d2[b] - r2).abs();
+        sa.partial_cmp(&sb).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+    });
+    let shell_width = (d2[order[target - 1]] - r2).abs();
+    let mut kept = order[..target].to_vec();
+    kept.sort_unstable();
+    Ok(ReductionOutcome {
+        kept,
+        pilot_size: pilot_data.rows(),
+        shell_width,
+        pilot_solver,
+    })
+}
+
+/// [`reduce`], then solve on the kept rows. The returned stats fold
+/// the pilot and final solves together.
+pub fn reduce_and_train(
+    data: &Matrix,
+    params: &SvddParams,
+    cfg: &ReductionConfig,
+    seed: u64,
+) -> Result<(SvddModel, SolverStats, ReductionOutcome)> {
+    let outcome = reduce(data, params, cfg, seed)?;
+    let reduced = data.gather(&outcome.kept);
+    let (model, final_stats) = train_detailed(&reduced, params, None)?;
+    let mut stats = outcome.pilot_solver;
+    stats.absorb(&final_stats);
+    Ok((model, stats, outcome))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn ring(n: usize, seed: u64) -> Matrix {
+        let mut rng = Xoshiro256::new(seed);
+        let rows: Vec<Vec<f64>> = (0..n)
+            .map(|_| {
+                let th = rng.range(0.0, std::f64::consts::TAU);
+                let r = rng.range(0.8, 1.2);
+                vec![r * th.cos(), r * th.sin()]
+            })
+            .collect();
+        Matrix::from_rows(&rows).unwrap()
+    }
+
+    #[test]
+    fn reduction_keeps_target_rows_in_order() {
+        let data = ring(400, 1);
+        let params = SvddParams::gaussian(0.6, 0.05);
+        let cfg = ReductionConfig { target: 80, pilot: 100 };
+        let out = reduce(&data, &params, &cfg, 7).unwrap();
+        assert_eq!(out.kept.len(), 80);
+        assert!(out.kept.windows(2).all(|w| w[0] < w[1]), "kept not ascending");
+        assert!(*out.kept.last().unwrap() < 400);
+        assert!(out.pilot_size > 0);
+        assert!(out.shell_width.is_finite());
+    }
+
+    #[test]
+    fn reduction_is_noop_when_target_covers_everything() {
+        let data = ring(40, 2);
+        let params = SvddParams::gaussian(0.6, 0.05);
+        let cfg = ReductionConfig { target: 100, pilot: 0 };
+        let out = reduce(&data, &params, &cfg, 7).unwrap();
+        assert_eq!(out.kept.len(), 40);
+        assert_eq!(out.pilot_size, 0);
+    }
+
+    #[test]
+    fn reduced_model_tracks_full_model_boundary() {
+        let data = ring(500, 3);
+        let params = SvddParams::gaussian(0.6, 0.02);
+        let full = crate::svdd::trainer::train(&data, &params).unwrap();
+        let cfg = ReductionConfig { target: 120, pilot: 150 };
+        let (reduced, _, out) = reduce_and_train(&data, &params, &cfg, 11).unwrap();
+        assert_eq!(out.kept.len(), 120);
+        let rel = (reduced.r2() - full.r2()).abs() / full.r2();
+        assert!(rel < 0.25, "reduced r2 {} vs full {}", reduced.r2(), full.r2());
+        // the reduced boundary must agree with the full one on test
+        // points: inside stays inside, far outside stays outside
+        assert_eq!(reduced.is_outlier(&[5.0, 5.0]), true);
+        assert_eq!(full.is_outlier(&[5.0, 5.0]), true);
+        assert_eq!(reduced.is_outlier(&[1.0, 0.0]), false);
+    }
+
+    #[test]
+    fn reduction_deterministic_given_seed() {
+        let data = ring(300, 4);
+        let params = SvddParams::gaussian(0.6, 0.05);
+        let cfg = ReductionConfig { target: 60, pilot: 0 };
+        let a = reduce(&data, &params, &cfg, 5).unwrap();
+        let b = reduce(&data, &params, &cfg, 5).unwrap();
+        assert_eq!(a.kept, b.kept);
+        let c = reduce(&data, &params, &cfg, 6).unwrap();
+        assert!(a.kept != c.kept || a.pilot_size != c.pilot_size);
+    }
+}

@@ -78,6 +78,7 @@ pub mod data;
 pub mod distributed;
 pub mod engine;
 pub mod error;
+pub mod incremental;
 pub mod linalg;
 pub mod metrics;
 pub mod obs;

@@ -125,9 +125,10 @@ fn cmd_train(args: &Args) -> Result<()> {
         "candidates", "workers", "shuffle-seed", "threads", "isa", "seed", "out",
         "trace", "xla", "artifacts", "addrs", "registry", "promote", "warm-alpha",
         "wss", "no-shrinking", "v", "log-json", "combine", "max-retries",
-        "worker-timeout-ms", "min-workers", "stream-chunk",
+        "worker-timeout-ms", "min-workers", "stream-chunk", "bandwidth",
+        "stale-budget", "divergence", "reduction-target", "stream-incremental",
     ])?;
-    let cfg = RunConfig::from_args(args)?;
+    let mut cfg = RunConfig::from_args(args)?;
     parallel::install(cfg.parallelism());
     fastsvdd::linalg::isa::install(cfg.isa)?;
     // tracing is opt-in: --log-json turns the span layer on and streams
@@ -146,6 +147,12 @@ fn cmd_train(args: &Args) -> Result<()> {
         return result;
     }
     let data = training_data(&cfg.dataset, cfg.rows, cfg.seed)?;
+    // --bandwidth auto:mean|auto:median: resolve sigma from the data
+    // with the closed-form criterion before the engine is built
+    if let Some(crit) = cfg.bandwidth_auto {
+        cfg.bandwidth = crit.resolve(&data);
+        println!("bandwidth auto:{} resolved to s={:.6}", crit.name(), cfg.bandwidth);
+    }
     let engine = Engine::from_config(&cfg)?;
     println!(
         "training: data={} rows={} method={} kernel={} f={} threads={} isa={}",

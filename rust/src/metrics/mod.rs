@@ -252,6 +252,13 @@ pub struct Metrics {
     pub retrains_cold: Counter,
     /// Lifecycle: wall time of each drift-triggered retrain.
     pub retrain_latency: Histogram,
+    /// Incremental path: per-point add/remove updates applied to an
+    /// online state machine (lifecycle drift responses and streaming
+    /// window slides alike).
+    pub incremental_updates: Counter,
+    /// Incremental path: full re-solves of the online active set
+    /// (seeds/reseeds, staleness-budget trips, divergence recoveries).
+    pub incremental_resyncs: Counter,
     /// Distributed controller: shard attempts that failed and
     /// re-entered the work queue (bounded by `max_retries` per shard).
     pub shard_retries: Counter,
@@ -340,7 +347,7 @@ impl Metrics {
     /// on the wire and what [`aggregate`] sums cluster-wide; histogram
     /// sums ride along in microseconds so they stay integral.
     pub fn snapshot(&self) -> Vec<(String, u64)> {
-        let pairs: [(&str, u64); 32] = [
+        let pairs: [(&str, u64); 34] = [
             ("batches_scored", self.batches_scored.get()),
             ("rows_scored", self.rows_scored.get()),
             ("xla_executions", self.xla_executions.get()),
@@ -373,6 +380,8 @@ impl Metrics {
             ("workers_lost", self.workers_lost.get()),
             ("shards_local_fallback", self.shards_local_fallback.get()),
             ("heartbeats_served", self.heartbeats_served.get()),
+            ("incremental_updates", self.incremental_updates.get()),
+            ("incremental_resyncs", self.incremental_resyncs.get()),
         ];
         pairs.iter().map(|&(k, v)| (k.to_string(), v)).collect()
     }
@@ -382,7 +391,7 @@ impl Metrics {
     /// bucket series of both latency histograms.
     pub fn render_prometheus(&self) -> String {
         let mut out = String::new();
-        let counters: [(&str, &str, u64); 23] = [
+        let counters: [(&str, &str, u64); 25] = [
             ("fastsvdd_batches_scored_total", "Scoring batches executed", self.batches_scored.get()),
             ("fastsvdd_rows_scored_total", "Rows scored", self.rows_scored.get()),
             ("fastsvdd_xla_executions_total", "XLA artifact executions", self.xla_executions.get()),
@@ -406,6 +415,8 @@ impl Metrics {
             ("fastsvdd_workers_lost_total", "Workers declared dead by the controller", self.workers_lost.get()),
             ("fastsvdd_shards_local_fallback_total", "Shards trained locally below min_workers", self.shards_local_fallback.get()),
             ("fastsvdd_heartbeats_served_total", "Heartbeat probes answered by this worker", self.heartbeats_served.get()),
+            ("fastsvdd_incremental_updates_total", "Per-point add/remove updates on online state machines", self.incremental_updates.get()),
+            ("fastsvdd_incremental_resyncs_total", "Full re-solves of online active sets", self.incremental_resyncs.get()),
         ];
         for (name, help, v) in counters {
             out.push_str(&format!(
@@ -791,6 +802,24 @@ mod tests {
         let t = |k: &str| total.iter().find(|(n, _)| n == k).unwrap().1;
         assert_eq!(t("shard_retries"), 4);
         assert_eq!(t("heartbeats_served"), 10);
+    }
+
+    #[test]
+    fn incremental_metrics_flow_to_exposition_and_snapshot() {
+        let m = Metrics::new();
+        m.incremental_updates.add(512);
+        m.incremental_resyncs.add(3);
+        let text = m.render_prometheus();
+        assert!(text.contains("# TYPE fastsvdd_incremental_updates_total counter"));
+        assert!(text.contains("fastsvdd_incremental_updates_total 512"));
+        assert!(text.contains("fastsvdd_incremental_resyncs_total 3"));
+        let snap = m.snapshot();
+        let get = |k: &str| snap.iter().find(|(n, _)| n == k).unwrap().1;
+        assert_eq!(get("incremental_updates"), 512);
+        assert_eq!(get("incremental_resyncs"), 3);
+        let total = aggregate(&[m.snapshot(), m.snapshot()]);
+        let t = |k: &str| total.iter().find(|(n, _)| n == k).unwrap().1;
+        assert_eq!(t("incremental_updates"), 1024);
     }
 
     #[test]

@@ -27,9 +27,15 @@
 //! | `distributed.retry` (ev)| `shard`, `attempt`, `delay_us`           |
 //! | `distributed.worker_dead` (ev) | `worker`                          |
 //! | `lifecycle.retrain`     | `version`, `warm`, `r2`                  |
-//! | `lifecycle.drift` (ev)  | `action`                                 |
+//! | `lifecycle.respond`     | `version`, `slides`, `r2` (incremental   |
+//! |                         | drift response)                          |
+//! | `lifecycle.drift` (ev)  | `action` (retrain/incremental/watch/none)|
 //! | `lifecycle.promote` (ev)| `version`                                |
 //! | `lifecycle.swap` (ev)   | `version`, `epoch`                       |
+//! | `incremental.update` (ev)| `op` (add/remove), `points`, `steps`,   |
+//! |                         | `gap`                                    |
+//! | `incremental.resync` (ev)| `reason` (seed/stale/divergence/manual),|
+//! |                         | `points`, `iterations`                   |
 //! | `train.report` (ev)     | `method`, `seconds`, `r2`, ...           |
 //!
 //! Spans record wall time on the process monotonic clock

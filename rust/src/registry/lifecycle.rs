@@ -23,12 +23,21 @@
 //! registered trainer via [`Lifecycle::with_trainer`]) and passes the
 //! champion as [`TrainContext::warm_start`], so the warm/cold decision
 //! and the telemetry path are the same code every other consumer uses.
+//!
+//! With [`Lifecycle::with_online`] the drift response gets a cheaper
+//! first line: drifted windows slide point-by-point through an exact
+//! [`IncrementalSvdd`] and the refreshed model is promoted directly
+//! ([`Lifecycle::respond`]); a full retrain runs only when the
+//! staleness budget is spent or the state machine diverges — the
+//! "retrain continuously" loop without paying a solver cold start per
+//! drift event.
 
 use std::sync::Arc;
 
 use crate::config::Method;
 use crate::engine::{self, TrainContext, Trainer};
 use crate::error::{Error, Result};
+use crate::incremental::{IncrementalConfig, IncrementalSvdd, InsertionOrder};
 use crate::metrics::Metrics;
 use crate::registry::store::Registry;
 use crate::registry::version::{VersionId, VersionMeta};
@@ -37,6 +46,7 @@ use crate::scoring::batcher::ModelSlot;
 use crate::svdd::model::SvddModel;
 use crate::svdd::trainer::SvddParams;
 use crate::util::matrix::Matrix;
+use crate::util::timer::Stopwatch;
 
 /// What one lifecycle retrain produced.
 #[derive(Clone, Debug)]
@@ -56,6 +66,17 @@ pub struct LifecycleReport {
     pub epoch: Option<u64>,
 }
 
+/// The incremental drift-response state ([`Lifecycle::with_online`]).
+struct OnlineState {
+    /// User-facing knobs; `stale_budget` is enforced *here* (a spent
+    /// budget means a full retrain + reseed), so the state machine
+    /// itself runs with its internal staleness resync disabled.
+    cfg: IncrementalConfig,
+    inc: Option<IncrementalSvdd>,
+    /// FIFO view over the state machine's swap-remove slots.
+    order: InsertionOrder,
+}
+
 /// Drift-to-swap driver over one registry and (optionally) one serving
 /// slot.
 pub struct Lifecycle {
@@ -65,6 +86,7 @@ pub struct Lifecycle {
     trainer: Box<dyn Trainer>,
     slot: Option<ModelSlot>,
     metrics: Arc<Metrics>,
+    online: Option<OnlineState>,
 }
 
 impl Lifecycle {
@@ -76,7 +98,19 @@ impl Lifecycle {
             trainer: engine::trainer_for(Method::Sampling),
             slot: None,
             metrics: Arc::new(Metrics::new()),
+            online: None,
         }
+    }
+
+    /// Route drift responses through the exact incremental path: with
+    /// this set, [`Lifecycle::respond`] slides drifted windows through
+    /// an [`IncrementalSvdd`] and promotes the refreshed model without
+    /// a retrain. `cfg.stale_budget` bounds how many incremental
+    /// updates may accumulate before the next drift forces a full
+    /// retrain (plus state-machine reseed); 0 means never force one.
+    pub fn with_online(mut self, cfg: IncrementalConfig) -> Lifecycle {
+        self.online = Some(OnlineState { cfg, inc: None, order: InsertionOrder::new() });
+        self
     }
 
     /// Retrain with a different method: any [`Trainer`] (usually from
@@ -200,6 +234,119 @@ impl Lifecycle {
             DriftStatus::Drifted => self.retrain(window, seed).map(Some),
             DriftStatus::Stable | DriftStatus::Suspect => Ok(None),
         }
+    }
+
+    /// React to a drift verdict like [`Lifecycle::observe`], but route
+    /// [`DriftStatus::Drifted`] through the incremental path when
+    /// [`Lifecycle::with_online`] is configured: the drift window
+    /// slides point-by-point through the maintained state machine (the
+    /// active set stays one window wide) and the refreshed model is
+    /// published, promoted and hot-swapped — no retrain. A full
+    /// [`Lifecycle::retrain`] (followed by a state-machine reseed from
+    /// the window) runs only when the staleness budget is spent, the
+    /// stream dimension changed, or no state machine exists yet.
+    /// Without online configuration this is exactly `observe`.
+    pub fn respond(
+        &mut self,
+        status: DriftStatus,
+        window: &Matrix,
+        seed: u64,
+    ) -> Result<Option<LifecycleReport>> {
+        if self.online.is_none() {
+            return self.observe(status, window, seed);
+        }
+        if status != DriftStatus::Drifted {
+            let action = if status == DriftStatus::Suspect { "watch" } else { "none" };
+            crate::obs::emit(
+                "lifecycle.drift",
+                vec![("action", crate::obs::Value::Str(action.to_string()))],
+            );
+            return Ok(None);
+        }
+        let needs_full = {
+            let st = self.online.as_ref().expect("checked above");
+            match &st.inc {
+                None => true,
+                Some(inc) => {
+                    (st.cfg.stale_budget > 0 && inc.since_resync() >= st.cfg.stale_budget)
+                        || inc.dim() != Some(window.cols())
+                }
+            }
+        };
+        if needs_full {
+            crate::obs::emit(
+                "lifecycle.drift",
+                vec![("action", crate::obs::Value::Str("retrain".to_string()))],
+            );
+            let report = self.retrain(window, seed)?;
+            // reseed the state machine from the drift window; staleness
+            // is budgeted by this driver, so the machine itself only
+            // resyncs on divergence
+            let icfg = IncrementalConfig {
+                stale_budget: 0,
+                ..self.online.as_ref().expect("checked above").cfg
+            };
+            let inc = IncrementalSvdd::with_data(self.params, icfg, window)?;
+            self.metrics.incremental_resyncs.inc();
+            let st = self.online.as_mut().expect("checked above");
+            st.order = InsertionOrder::new();
+            for i in 0..window.rows() {
+                st.order.record_add(i);
+            }
+            st.inc = Some(inc);
+            return Ok(Some(report));
+        }
+        crate::obs::emit(
+            "lifecycle.drift",
+            vec![("action", crate::obs::Value::Str("incremental".to_string()))],
+        );
+        let mut span = crate::obs::Span::enter("lifecycle.respond");
+        let sw = Stopwatch::start();
+        let st = self.online.as_mut().expect("checked above");
+        let inc = st.inc.as_mut().expect("checked above");
+        let before_updates = inc.updates();
+        let before_resyncs = inc.resyncs();
+        for i in 0..window.rows() {
+            inc.add_point(window.row(i))?;
+            st.order.record_add(inc.len() - 1);
+            let oldest = st.order.oldest().expect("seeded window is non-empty");
+            let last = inc.len() - 1;
+            inc.remove_point(oldest)?;
+            st.order.record_swap_remove(oldest, last);
+        }
+        let slides = ((inc.updates() - before_updates) / 2) as usize;
+        let resyncs = inc.resyncs() - before_resyncs;
+        let converged = inc.gap() <= self.params.smo.tol;
+        let model = inc.model()?;
+        self.metrics.incremental_updates.add(inc.updates() - before_updates);
+        self.metrics.incremental_resyncs.add(resyncs);
+        self.check_servable(&model)?;
+        let mut meta = VersionMeta::new(&model, window);
+        meta.iterations = slides;
+        meta.converged = converged;
+        meta.warm_start = true;
+        let id = self.registry.publish(&model, meta)?;
+        self.registry.promote(&id)?;
+        crate::obs::emit(
+            "lifecycle.promote",
+            vec![("version", crate::obs::Value::Str(id.to_string()))],
+        );
+        let epoch = self.swap_into_slot(&model)?;
+        if span.is_live() {
+            span.str("version", id.to_string());
+            span.u64("slides", slides as u64);
+            span.f64("r2", model.r2());
+        }
+        drop(span);
+        Ok(Some(LifecycleReport {
+            id,
+            r2: model.r2(),
+            iterations: slides,
+            converged,
+            warm_start: true,
+            seconds: sw.elapsed_secs(),
+            epoch,
+        }))
     }
 
     /// Promote an already published version and swap it into the slot.
@@ -385,6 +532,75 @@ mod tests {
         assert!(lc.registry().list().unwrap().is_empty());
         let rep = lc.observe(DriftStatus::Drifted, &data, 3).unwrap().unwrap();
         assert_eq!(lc.registry().champion().unwrap().unwrap().id, rep.id);
+        std::fs::remove_dir_all(lc.registry().root()).ok();
+    }
+
+    #[test]
+    fn respond_routes_drift_through_incremental_path() {
+        let mut lc = lifecycle("online").with_online(IncrementalConfig {
+            stale_budget: 10_000, // never trips in this test
+            ..Default::default()
+        });
+        let a = Banana::default().generate(256, 2);
+        // first drift: no state machine yet -> full (cold) retrain + reseed
+        let first = lc.respond(DriftStatus::Drifted, &a, 3).unwrap().unwrap();
+        assert!(!first.warm_start);
+        assert_eq!(lc.metrics().retrains_cold.get(), 1);
+        assert!(lc.metrics().incremental_resyncs.get() >= 1, "reseed must count");
+        // second drift: slides through the state machine, no retrain
+        let b = shifted(256, 4);
+        let second = lc.respond(DriftStatus::Drifted, &b, 5).unwrap().unwrap();
+        assert!(second.warm_start, "incremental response continues the model");
+        assert_ne!(first.id, second.id);
+        assert_eq!(second.iterations, 256, "one slide per window row");
+        assert_eq!(
+            lc.metrics().incremental_updates.get(),
+            512,
+            "add + remove per slid row"
+        );
+        assert_eq!(
+            lc.metrics().retrains_cold.get() + lc.metrics().retrains_warm.get(),
+            1,
+            "no retrain on the incremental path"
+        );
+        assert_eq!(lc.registry().champion().unwrap().unwrap().id, second.id);
+        // non-drift statuses remain no-ops
+        assert!(lc.respond(DriftStatus::Stable, &b, 6).unwrap().is_none());
+        assert!(lc.respond(DriftStatus::Suspect, &b, 7).unwrap().is_none());
+        std::fs::remove_dir_all(lc.registry().root()).ok();
+    }
+
+    #[test]
+    fn respond_full_retrain_when_stale_budget_spent() {
+        let mut lc = lifecycle("onlinestale").with_online(IncrementalConfig {
+            stale_budget: 64,
+            // keep since_resync deterministic: no divergence resyncs
+            divergence_tol: 1e9,
+            ..Default::default()
+        });
+        let a = Banana::default().generate(128, 6);
+        lc.respond(DriftStatus::Drifted, &a, 1).unwrap().unwrap(); // seed (cold)
+        let b = shifted(128, 7);
+        lc.respond(DriftStatus::Drifted, &b, 2).unwrap().unwrap(); // incremental
+        // 256 updates accumulated > budget 64: next drift retrains warm
+        let third = lc.respond(DriftStatus::Drifted, &shifted(128, 8), 3).unwrap().unwrap();
+        assert!(third.warm_start, "stale budget must trip a warm full retrain");
+        assert_eq!(lc.metrics().retrains_warm.get(), 1);
+        assert_eq!(lc.metrics().retrains_cold.get(), 1);
+        // the reseeded machine takes the next drift incrementally again
+        lc.respond(DriftStatus::Drifted, &shifted(128, 9), 4).unwrap().unwrap();
+        assert_eq!(lc.metrics().retrains_warm.get(), 1, "reseed reset the budget");
+        std::fs::remove_dir_all(lc.registry().root()).ok();
+    }
+
+    #[test]
+    fn respond_without_online_is_observe() {
+        let mut lc = lifecycle("respondobserve");
+        let data = Banana::default().generate(1500, 2);
+        assert!(lc.respond(DriftStatus::Stable, &data, 1).unwrap().is_none());
+        let rep = lc.respond(DriftStatus::Drifted, &data, 3).unwrap().unwrap();
+        assert_eq!(lc.registry().champion().unwrap().unwrap().id, rep.id);
+        assert_eq!(lc.metrics().incremental_updates.get(), 0);
         std::fs::remove_dir_all(lc.registry().root()).ok();
     }
 

@@ -9,8 +9,19 @@
 //! shift beyond the drift threshold reports [`DriftStatus::Drifted`] so
 //! operators can trigger a full retrain (the paper's "separate operating
 //! mode" scenario).
+//!
+//! With [`StreamingConfig::incremental`] set, the window drives the
+//! exact online state machine instead: once the first window seeds an
+//! [`IncrementalSvdd`], every subsequent observation slides the window
+//! by one point (`add_point` + `remove_point` of the oldest) and the
+//! model is refreshed per event — no snapshot retrain per window, at
+//! the cost of bounded resyncs governed by
+//! [`StreamingConfig::stale_budget`]. Drift is judged at window-sized
+//! checkpoints on the same relative-R^2 rule, so both modes report
+//! through one [`DriftStatus`] contract.
 
 use crate::error::{Error, Result};
+use crate::incremental::{IncrementalConfig, IncrementalSvdd, InsertionOrder};
 use crate::svdd::model::SvddModel;
 use crate::svdd::trainer::{train_detailed, SolverStats, SvddParams};
 use crate::util::matrix::Matrix;
@@ -27,6 +38,13 @@ pub struct StreamingConfig {
     pub drift_threshold: f64,
     /// Consecutive drift-evidence updates before `Drifted` is reported.
     pub drift_patience: usize,
+    /// Drive the window through per-point [`IncrementalSvdd`] updates
+    /// instead of per-window snapshot retrains.
+    pub incremental: bool,
+    /// Staleness budget handed to the incremental state machine
+    /// (updates between forced resyncs; 0 = never resync on staleness).
+    /// Ignored in snapshot mode.
+    pub stale_budget: usize,
 }
 
 impl Default for StreamingConfig {
@@ -36,6 +54,8 @@ impl Default for StreamingConfig {
             sample_size: 10,
             drift_threshold: 0.05,
             drift_patience: 3,
+            incremental: false,
+            stale_budget: 64,
         }
     }
 }
@@ -63,6 +83,15 @@ pub struct StreamingSvdd {
     rows_seen: usize,
     solver_calls: usize,
     solver: SolverStats,
+    /// Incremental mode: the exact online state machine, seeded by the
+    /// first full window.
+    inc: Option<IncrementalSvdd>,
+    /// FIFO view over the state machine's swap-remove slots.
+    order: InsertionOrder,
+    /// Slides since the last drift checkpoint (incremental mode).
+    pushes_since_check: usize,
+    /// R^2 at the last drift checkpoint (incremental mode).
+    check_r2: Option<f64>,
 }
 
 impl StreamingSvdd {
@@ -78,6 +107,10 @@ impl StreamingSvdd {
             rows_seen: 0,
             solver_calls: 0,
             solver: SolverStats::default(),
+            inc: None,
+            order: InsertionOrder::new(),
+            pushes_since_check: 0,
+            check_r2: None,
         }
     }
 
@@ -98,9 +131,15 @@ impl StreamingSvdd {
         self.buffer.len()
     }
 
-    /// SMO solves issued so far (2 per window update).
+    /// SMO solves issued so far (2 per window update in snapshot mode;
+    /// the seed solve plus resyncs in incremental mode).
     pub fn solver_calls(&self) -> usize {
         self.solver_calls
+    }
+
+    /// The online state machine, once seeded (incremental mode only).
+    pub fn incremental_state(&self) -> Option<&IncrementalSvdd> {
+        self.inc.as_ref()
     }
 
     /// Aggregated SMO telemetry across every window update.
@@ -109,8 +148,13 @@ impl StreamingSvdd {
     }
 
     /// Feed one observation; returns `Some(status)` when a window
-    /// completed and the model was updated.
+    /// completed and the model was updated (snapshot mode), or at
+    /// window-sized drift checkpoints (incremental mode — the model
+    /// itself refreshes on every push once seeded).
     pub fn push(&mut self, x: &[f64]) -> Result<Option<DriftStatus>> {
+        if self.cfg.incremental {
+            return self.push_incremental(x);
+        }
         self.rows_seen += 1;
         self.buffer.push(x.to_vec());
         if self.buffer.len() < self.cfg.window {
@@ -118,6 +162,66 @@ impl StreamingSvdd {
         }
         let window = Matrix::from_rows(&std::mem::take(&mut self.buffer))?;
         let status = self.update(&window)?;
+        Ok(Some(status))
+    }
+
+    /// One per-point slide of the incremental window: buffer until the
+    /// first window seeds the state machine, then newest in, oldest
+    /// out — the active set stays exactly one window wide.
+    fn push_incremental(&mut self, x: &[f64]) -> Result<Option<DriftStatus>> {
+        self.rows_seen += 1;
+        if self.inc.is_none() {
+            self.buffer.push(x.to_vec());
+            if self.buffer.len() < self.cfg.window {
+                return Ok(None);
+            }
+            let window = Matrix::from_rows(&std::mem::take(&mut self.buffer))?;
+            let icfg = IncrementalConfig {
+                stale_budget: self.cfg.stale_budget,
+                ..IncrementalConfig::default()
+            };
+            let inc = IncrementalSvdd::with_data(self.params, icfg, &window)?;
+            for i in 0..window.rows() {
+                self.order.record_add(i);
+            }
+            self.model = Some(inc.model()?);
+            self.check_r2 = Some(inc.r2());
+            self.solver = *inc.solver_stats();
+            self.solver_calls = inc.resyncs() as usize;
+            self.inc = Some(inc);
+            return Ok(Some(DriftStatus::Stable));
+        }
+        let inc = self.inc.as_mut().expect("checked above");
+        inc.add_point(x)?;
+        self.order.record_add(inc.len() - 1);
+        let oldest = self.order.oldest().expect("seeded window is non-empty");
+        let last = inc.len() - 1;
+        inc.remove_point(oldest)?;
+        self.order.record_swap_remove(oldest, last);
+        self.updates += 1;
+        self.pushes_since_check += 1;
+        self.model = Some(inc.model()?);
+        self.solver = *inc.solver_stats();
+        self.solver_calls = inc.resyncs() as usize;
+        if self.pushes_since_check < self.cfg.window {
+            return Ok(None);
+        }
+        self.pushes_since_check = 0;
+        let r2 = inc.r2();
+        let prev = self.check_r2.replace(r2).unwrap_or(r2);
+        let shift = (r2 - prev).abs() / prev.abs().max(1e-12);
+        if shift > self.cfg.drift_threshold {
+            self.drift_streak += 1;
+        } else {
+            self.drift_streak = 0;
+        }
+        let status = if self.drift_streak >= self.cfg.drift_patience {
+            DriftStatus::Drifted
+        } else if self.drift_streak > 0 {
+            DriftStatus::Suspect
+        } else {
+            DriftStatus::Stable
+        };
         Ok(Some(status))
     }
 
@@ -176,10 +280,15 @@ impl StreamingSvdd {
     }
 
     /// Drop the learned description (e.g. after an operator-confirmed
-    /// regime change) but keep the buffer.
+    /// regime change) but keep the buffer. In incremental mode the
+    /// state machine is dropped too; the next window re-seeds it.
     pub fn reset_model(&mut self) {
         self.model = None;
         self.drift_streak = 0;
+        self.inc = None;
+        self.order = InsertionOrder::new();
+        self.pushes_since_check = 0;
+        self.check_r2 = None;
     }
 
     /// Adopt an externally retrained description (the lifecycle driver
@@ -205,6 +314,7 @@ impl StreamingSvdd {
                 )));
             }
         }
+        self.check_r2 = Some(model.r2());
         self.model = Some(model);
         self.drift_streak = 0;
         Ok(())
@@ -275,6 +385,7 @@ mod tests {
                 sample_size: 6,
                 drift_threshold: 0.02,
                 drift_patience: 1,
+                ..Default::default()
             },
             9,
         );
@@ -308,6 +419,7 @@ mod tests {
                 sample_size: 6,
                 drift_threshold: 0.02,
                 drift_patience: 1,
+                ..Default::default()
             },
             4,
         );
@@ -341,6 +453,55 @@ mod tests {
         };
         let status = s.push_batch(&more).unwrap();
         assert!(status.is_some(), "window update must fire");
+    }
+
+    #[test]
+    fn incremental_window_matches_snapshot_retrain_on_drift() {
+        // Property: after a banana regime shift, the per-point
+        // incremental window's model agrees with a snapshot retrain on
+        // the same (final) window rows within 5% relative R^2.
+        let params = SvddParams::gaussian(0.35, 0.001);
+        let window = 128;
+        let mut s = StreamingSvdd::new(
+            params,
+            StreamingConfig {
+                window,
+                sample_size: 6,
+                drift_threshold: 0.02,
+                drift_patience: 1,
+                incremental: true,
+                stale_budget: 64,
+            },
+            7,
+        );
+        // 448 regime-A rows so a drift checkpoint (every 128 slides)
+        // lands on a mixed A/B window mid-transition
+        let a = Banana::default().generate(448, 1);
+        s.push_batch(&a).unwrap();
+        assert!(s.model().is_some(), "seeded after the first window");
+        let mut b = Banana::default().generate(512, 2);
+        for i in 0..b.rows() {
+            b.row_mut(i)[0] += 8.0;
+        }
+        let mut saw_drift = false;
+        for i in 0..b.rows() {
+            if let Some(DriftStatus::Drifted) = s.push(b.row(i)).unwrap() {
+                saw_drift = true;
+            }
+        }
+        assert!(saw_drift, "regime shift must surface at a drift checkpoint");
+        // per-point slides: every push after the seeding window
+        assert_eq!(s.updates(), 448 + 512 - window);
+        let inc = s.incremental_state().unwrap();
+        assert_eq!(inc.len(), window, "active set stays one window wide");
+        // snapshot retrain on the same rows the window currently holds:
+        // the last `window` observations, all in regime B
+        let last_rows: Vec<Vec<f64>> =
+            (b.rows() - window..b.rows()).map(|i| b.row(i).to_vec()).collect();
+        let snapshot = crate::svdd::train(&Matrix::from_rows(&last_rows).unwrap(), &params).unwrap();
+        let stream_r2 = s.model().unwrap().r2();
+        let rel = (stream_r2 - snapshot.r2()).abs() / snapshot.r2();
+        assert!(rel < 0.05, "incremental {} vs snapshot retrain {} (rel {rel})", stream_r2, snapshot.r2());
     }
 
     #[test]

@@ -5,10 +5,124 @@
 //! the **median heuristic** (median pairwise distance of a subsample)
 //! and a **mean-distance** variant; both are cheap and deterministic
 //! given a seed.
+//!
+//! On top of the pair-sampling heuristics, [`mean_criterion`] and
+//! [`median_criterion`] are the *closed-form* mean/median criteria of
+//! Chaudhuri et al. (arXiv 1708.05106): over iid pairs `(a, b)`,
+//! `E||a-b||^2 = 2 * sum_j var_j` exactly, so the mean-distance scale
+//! needs only one pass over column moments — no pairs, no seed. The
+//! median variant approximates the median of `||a-b||^2` (a
+//! variance-weighted chi-square sum) with the Wilson–Hilferty cube.
+//! These are the hands-off `--bandwidth auto:mean|auto:median` modes:
+//! deterministic, O(n·d), and cheap enough to re-run at every
+//! incremental resync.
 
+use crate::error::{Error, Result};
 use crate::linalg::{self, NormCache};
 use crate::util::matrix::Matrix;
 use crate::util::rng::Xoshiro256;
+
+/// Which closed-form criterion resolves the bandwidth.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AutoBandwidth {
+    /// Closed-form mean criterion: `sqrt(sum_j var_j)`.
+    Mean,
+    /// Wilson–Hilferty approximation of the median pairwise distance.
+    Median,
+}
+
+impl AutoBandwidth {
+    pub fn parse(s: &str) -> Result<AutoBandwidth> {
+        Ok(match s {
+            "mean" => AutoBandwidth::Mean,
+            "median" => AutoBandwidth::Median,
+            other => {
+                return Err(Error::Config(format!(
+                    "unknown bandwidth criterion '{other}' (expected mean|median)"
+                )))
+            }
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AutoBandwidth::Mean => "mean",
+            AutoBandwidth::Median => "median",
+        }
+    }
+
+    /// Resolve a bandwidth from `data` with this criterion.
+    pub fn resolve(&self, data: &Matrix) -> f64 {
+        match self {
+            AutoBandwidth::Mean => mean_criterion(data),
+            AutoBandwidth::Median => median_criterion(data),
+        }
+    }
+}
+
+/// Per-column population variances, one pass over the rows.
+fn column_variances(data: &Matrix) -> Vec<f64> {
+    let (n, d) = (data.rows(), data.cols());
+    let mut mean = vec![0.0; d];
+    for i in 0..n {
+        for (m, &x) in mean.iter_mut().zip(data.row(i)) {
+            *m += x;
+        }
+    }
+    for m in &mut mean {
+        *m /= n as f64;
+    }
+    let mut var = vec![0.0; d];
+    for i in 0..n {
+        for j in 0..d {
+            let c = data.row(i)[j] - mean[j];
+            var[j] += c * c;
+        }
+    }
+    for v in &mut var {
+        *v /= n as f64;
+    }
+    var
+}
+
+/// Closed-form mean criterion (Chaudhuri et al., arXiv 1708.05106):
+/// `E||a-b||^2 = 2 * sum_j var_j` exactly for iid pairs, so the
+/// RMS-distance/sqrt(2) scale of [`mean_heuristic`] collapses to
+/// `sqrt(sum_j var_j)` — no pair sampling, no seed.
+pub fn mean_criterion(data: &Matrix) -> f64 {
+    let s1: f64 = column_variances(data).iter().sum();
+    if s1 > 0.0 && s1.is_finite() {
+        s1.sqrt()
+    } else {
+        1.0 // degenerate data (all points identical): any bw works
+    }
+}
+
+/// Closed-form median criterion: `||a-b||^2 = sum_j 2 var_j z_j^2`
+/// with `z_j` standard-normal-ish, a variance-weighted chi-square sum
+/// with mean `mu = 2 s1` and effective degrees of freedom
+/// `k = s1^2 / s2` (`s1 = sum var_j`, `s2 = sum var_j^2`). The
+/// Wilson–Hilferty cube approximates its median as
+/// `mu * (1 - 2/(9k))^3`; the returned bandwidth is the matching
+/// median *distance*, `sqrt(median of ||a-b||^2)` — the same scale
+/// [`median_heuristic`] estimates by sampling.
+pub fn median_criterion(data: &Matrix) -> f64 {
+    let var = column_variances(data);
+    let s1: f64 = var.iter().sum();
+    let s2: f64 = var.iter().map(|v| v * v).sum();
+    if !(s1 > 0.0) || !s1.is_finite() || !(s2 > 0.0) {
+        return 1.0;
+    }
+    // k >= 1 always (Cauchy–Schwarz on nonnegative variances), so the
+    // cube's base 1 - 2/(9k) stays positive.
+    let k = s1 * s1 / s2;
+    let med_sq = 2.0 * s1 * (1.0 - 2.0 / (9.0 * k)).powi(3);
+    if med_sq > 0.0 {
+        med_sq.sqrt()
+    } else {
+        1.0
+    }
+}
 
 /// Median pairwise euclidean distance over at most `max_pairs` sampled
 /// pairs. The classic kernel-method default.
@@ -125,5 +239,57 @@ mod tests {
             median_heuristic(&data, 1000, 42),
             median_heuristic(&data, 1000, 42)
         );
+    }
+
+    #[test]
+    fn mean_criterion_matches_exact_pair_statistic() {
+        // closed form vs the exhaustive-pair estimate of the same
+        // quantity: E||a-b||^2 = 2 sum var_j is exact only over iid
+        // pairs *with* replacement; the all-distinct-pairs estimator
+        // differs by the n/(n-1) bias factor, so compare loosely.
+        let data = cloud(1.0, 400);
+        let closed = mean_criterion(&data);
+        let sampled = mean_heuristic(&data, usize::MAX, 1);
+        let rel = (closed - sampled).abs() / sampled;
+        assert!(rel < 0.02, "closed={closed} sampled={sampled}");
+    }
+
+    #[test]
+    fn median_criterion_tracks_sampled_median() {
+        // Wilson–Hilferty is an approximation; on a gaussian cloud it
+        // should land within ~10% of the sampled median heuristic.
+        let data = cloud(2.0, 400);
+        let closed = median_criterion(&data);
+        let sampled = median_heuristic(&data, usize::MAX, 1);
+        let rel = (closed - sampled).abs() / sampled;
+        assert!(rel < 0.10, "closed={closed} sampled={sampled}");
+    }
+
+    #[test]
+    fn criteria_scale_with_data_and_need_no_seed() {
+        let small = mean_criterion(&cloud(1.0, 300));
+        let big = mean_criterion(&cloud(10.0, 300));
+        assert!((big / small - 10.0).abs() < 1.0, "small={small} big={big}");
+        // same data, same answer — no sampling anywhere
+        assert_eq!(median_criterion(&cloud(1.0, 300)), median_criterion(&cloud(1.0, 300)));
+    }
+
+    #[test]
+    fn criteria_degenerate_fallback() {
+        let data = Matrix::from_rows(&vec![vec![3.0, -1.0]; 8]).unwrap();
+        assert_eq!(mean_criterion(&data), 1.0);
+        assert_eq!(median_criterion(&data), 1.0);
+    }
+
+    #[test]
+    fn auto_bandwidth_parse_and_resolve() {
+        assert_eq!(AutoBandwidth::parse("mean").unwrap(), AutoBandwidth::Mean);
+        assert_eq!(AutoBandwidth::parse("median").unwrap(), AutoBandwidth::Median);
+        assert!(AutoBandwidth::parse("mode").is_err());
+        for w in [AutoBandwidth::Mean, AutoBandwidth::Median] {
+            assert_eq!(AutoBandwidth::parse(w.name()).unwrap(), w);
+            let bw = w.resolve(&cloud(1.0, 100));
+            assert!(bw > 0.0 && bw.is_finite());
+        }
     }
 }

@@ -15,6 +15,15 @@
 //! eviction are all O(1) — the eviction used to be an O(#cached)
 //! min-scan over insertion ticks, which showed up once budgets grew to
 //! thousands of columns.
+//!
+//! Mutable training sets (the online path in [`crate::incremental`])
+//! remove and overwrite rows, which silently stales every cached column
+//! that contains the touched row and the column keyed by it. Callers
+//! that mutate rows must call [`ColumnCache::invalidate`] (single
+//! column) or [`ColumnCache::invalidate_all`] (any row edit, since a
+//! row change dirties one *entry* of every cached column); invalidated
+//! slots park on a free list and are reused before any eviction, so
+//! the arena never grows past the byte budget.
 
 use std::collections::HashMap;
 
@@ -37,6 +46,8 @@ pub struct ColumnCache {
     head: usize,
     /// Least-recently-used slot (NIL when empty) — the eviction victim.
     tail: usize,
+    /// Slots parked by `invalidate*`, reused before any eviction.
+    free: Vec<usize>,
     hits: u64,
     misses: u64,
 }
@@ -55,6 +66,7 @@ impl ColumnCache {
             slots: Vec::with_capacity(capacity_cols),
             head: NIL,
             tail: NIL,
+            free: Vec::new(),
             hits: 0,
             misses: 0,
         }
@@ -129,11 +141,50 @@ impl ColumnCache {
         self.insert(i, out);
     }
 
-    /// Insert a freshly computed column, evicting the LRU column when
-    /// at capacity. The evicted slot's buffer is reused in place.
+    /// Drop column `i` from the cache (e.g. the row it is keyed by was
+    /// removed or overwritten). The slot parks on the free list and is
+    /// reused by the next insert, so no allocation churn. Returns
+    /// whether the column was cached.
+    pub fn invalidate(&mut self, i: usize) -> bool {
+        match self.map.remove(&i) {
+            Some(slot) => {
+                self.unlink(slot);
+                self.slots[slot].data.clear();
+                self.free.push(slot);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Drop every cached column. Required after any in-place row edit:
+    /// row `j` contributes entry `j` of *every* column, so no cached
+    /// column survives a row update exactly. Hit/miss counters keep
+    /// their history (the columns were served correctly at the time).
+    pub fn invalidate_all(&mut self) {
+        self.map.clear();
+        self.free.clear();
+        for (slot, s) in self.slots.iter_mut().enumerate() {
+            s.data.clear();
+            s.prev = NIL;
+            s.next = NIL;
+            self.free.push(slot);
+        }
+        self.head = NIL;
+        self.tail = NIL;
+    }
+
+    /// Insert a freshly computed column, reusing a freed slot when one
+    /// is parked, else evicting the LRU column when at capacity. The
+    /// evicted slot's buffer is reused in place.
     fn insert(&mut self, i: usize, data: &[f64]) {
         debug_assert!(!self.map.contains_key(&i));
-        let slot = if self.slots.len() >= self.capacity_cols {
+        let slot = if let Some(slot) = self.free.pop() {
+            self.slots[slot].col = i;
+            self.slots[slot].data.clear();
+            self.slots[slot].data.extend_from_slice(data);
+            slot
+        } else if self.slots.len() >= self.capacity_cols {
             let victim = self.tail;
             debug_assert_ne!(victim, NIL);
             self.unlink(victim);
@@ -302,6 +353,99 @@ mod tests {
             assert_eq!(c.len(), 1);
             c.get_into(i, &mut buf, |_| panic!("just-inserted column must hit"));
         }
+    }
+
+    #[test]
+    fn invalidate_evicts_on_remove_exactly() {
+        // A mutated training row must never be served from a stale
+        // column: after invalidate, the next fetch re-fills fresh bits.
+        let mut c = ColumnCache::new(2, 2 * 2 * 8);
+        let mut buf = vec![0.0; 2];
+        c.get_into(0, &mut buf, fill_with(1.0));
+        c.get_into(1, &mut buf, fill_with(2.0));
+        assert!(c.invalidate(0), "column 0 was cached");
+        assert!(!c.invalidate(0), "already gone");
+        assert_eq!(c.len(), 1);
+        let mut filled = false;
+        c.get_into(0, &mut buf, |out| {
+            filled = true;
+            out.iter_mut().for_each(|x| *x = 7.0);
+        });
+        assert!(filled, "invalidated column must be recomputed");
+        assert_eq!(buf, vec![7.0; 2]);
+        // the survivor was untouched and still hits
+        c.get_into(1, &mut buf, |_| panic!("1 must still be cached"));
+        assert_eq!(buf, vec![2.0; 2]);
+    }
+
+    #[test]
+    fn invalidate_frees_slot_for_reuse_within_budget() {
+        // capacity 2: invalidate one, insert two — the freed slot is
+        // reused (no arena growth) and the survivor is the LRU victim.
+        let mut c = ColumnCache::new(2, 2 * 2 * 8);
+        let mut buf = vec![0.0; 2];
+        c.get_into(0, &mut buf, fill_with(0.0));
+        c.get_into(1, &mut buf, fill_with(1.0));
+        assert!(c.invalidate(0));
+        c.get_into(2, &mut buf, fill_with(2.0)); // reuses the freed slot
+        assert_eq!(c.slots.len(), 2, "arena must not grow past capacity");
+        assert_eq!(c.len(), 2);
+        c.get_into(3, &mut buf, fill_with(3.0)); // now a real eviction: victim is 1 (LRU)
+        assert!(c.lookup(1).is_none(), "1 was LRU and must be evicted");
+        c.get_into(2, &mut buf, |_| panic!("2 must survive"));
+        c.get_into(3, &mut buf, |_| panic!("3 must survive"));
+        assert_eq!(c.slots.len(), 2);
+    }
+
+    #[test]
+    fn invalidate_all_then_refill_keeps_lru_chain_intact() {
+        let n = 4;
+        let mut c = ColumnCache::new(n, 3 * n * 8);
+        let mut buf = vec![0.0; n];
+        for i in 0..3 {
+            c.get_into(i, &mut buf, fill_with(i as f64));
+        }
+        c.invalidate_all();
+        assert!(c.is_empty());
+        // every prior column must re-fill...
+        for i in 0..3 {
+            let mut filled = false;
+            c.get_into(i, &mut buf, |out| {
+                filled = true;
+                out.iter_mut().for_each(|x| *x = 10.0 + i as f64);
+            });
+            assert!(filled, "column {i} must be recomputed after invalidate_all");
+            assert_eq!(buf, vec![10.0 + i as f64; n]);
+        }
+        // ...and the rebuilt chain still evicts exact LRU
+        c.get_into(0, &mut buf, |_| panic!("0 cached")); // refresh 0
+        c.get_into(3, &mut buf, fill_with(3.0)); // evicts 1 (LRU)
+        assert!(c.lookup(1).is_none(), "1 must be the eviction victim");
+        c.get_into(0, &mut buf, |_| panic!("0 must survive"));
+        c.get_into(2, &mut buf, |_| panic!("2 must survive"));
+    }
+
+    #[test]
+    fn invalidate_head_and_tail_relink_correctly() {
+        // remove the MRU then the LRU of a 3-chain; the middle node
+        // must become both head and tail and keep working.
+        let n = 2;
+        let mut c = ColumnCache::new(n, 3 * n * 8);
+        let mut buf = vec![0.0; n];
+        c.get_into(0, &mut buf, fill_with(0.0)); // LRU
+        c.get_into(1, &mut buf, fill_with(1.0));
+        c.get_into(2, &mut buf, fill_with(2.0)); // MRU
+        assert!(c.invalidate(2)); // drop head
+        assert!(c.invalidate(0)); // drop tail
+        assert_eq!(c.len(), 1);
+        c.get_into(1, &mut buf, |_| panic!("middle column must survive"));
+        // refill to capacity through the free list and evict once more
+        c.get_into(3, &mut buf, fill_with(3.0));
+        c.get_into(4, &mut buf, fill_with(4.0));
+        assert_eq!(c.slots.len(), 3);
+        c.get_into(5, &mut buf, fill_with(5.0)); // evicts 1 (LRU)
+        assert!(c.lookup(1).is_none());
+        c.get_into(3, &mut buf, |_| panic!("3 must survive"));
     }
 
     #[test]

@@ -88,7 +88,11 @@ pub struct SolverStats {
 }
 
 impl SolverStats {
-    fn from_solution(sol: &smo::SmoSolution, cache_hits: u64, cache_lookups: u64) -> SolverStats {
+    pub(crate) fn from_solution(
+        sol: &smo::SmoSolution,
+        cache_hits: u64,
+        cache_lookups: u64,
+    ) -> SolverStats {
         SolverStats {
             smo_iterations: sol.iterations,
             shrink_events: sol.shrink_events,

@@ -102,6 +102,7 @@ fn lifecycle_drift_retrain_swap_and_rollback_under_load() {
         sample_size: 6,
         drift_threshold: 0.02,
         drift_patience: 1,
+        ..Default::default()
     };
     let mut monitor = StreamingSvdd::new(params, monitor_cfg, 11);
     let warmup = regime_a.gather(&(0..512).collect::<Vec<_>>());

@@ -11,6 +11,7 @@ use fastsvdd::data::tennessee::TennesseePlant;
 use fastsvdd::data::{banana::Banana, donut::TwoDonut, star::Star, Generator};
 use fastsvdd::distributed::{train_local_cluster, DistributedConfig};
 use fastsvdd::engine::Engine;
+use fastsvdd::incremental::{reduce_and_train, IncrementalSvdd};
 use fastsvdd::sampling::{SamplingConfig, SamplingTrainer, StreamingConfig, StreamingSvdd};
 use fastsvdd::scoring::{F1Score, Scorer};
 use fastsvdd::svdd::{SvddModel, SvddParams, Wss};
@@ -363,6 +364,72 @@ fn engine_streaming_matches_legacy_snapshot() {
     assert_models_identical(&report.model, legacy, "streaming");
     assert_eq!(report.iterations, stream.updates());
     assert_eq!(report.solver_calls, stream.solver_calls());
+}
+
+#[test]
+fn engine_incremental_matches_legacy() {
+    // the engine's Incremental trainer is a fixed seed-64-then-add
+    // schedule over the online state machine; spelling that schedule
+    // out by hand against `IncrementalSvdd` directly must carry the
+    // exact same bits through every migration and resync
+    let mut cfg = banana_cfg(Method::Incremental);
+    cfg.rows = 400; // smaller than the streaming cases: per-point updates in debug tests
+    let data = Banana::default().generate(cfg.rows, cfg.seed);
+    let seed_n = data.rows().min(64);
+    let seed_rows: Vec<usize> = (0..seed_n).collect();
+    let mut inc =
+        IncrementalSvdd::with_data(cfg.params(), cfg.incremental(), &data.gather(&seed_rows))
+            .unwrap();
+    for i in seed_n..data.rows() {
+        inc.add_point(data.row(i)).unwrap();
+    }
+    let legacy = inc.model().unwrap();
+    let report = Engine::from_config(&cfg).unwrap().train(&data).unwrap();
+    assert_models_identical(&report.model, &legacy, "incremental");
+    assert_eq!(report.iterations, inc.updates() as usize);
+    assert_eq!(report.solver_calls, inc.resyncs() as usize);
+    assert_eq!(report.sample_size, seed_n);
+}
+
+#[test]
+fn engine_reduction_matches_legacy() {
+    let mut cfg = banana_cfg(Method::Reduction);
+    cfg.reduction_target = 120;
+    let data = Banana::default().generate(cfg.rows, cfg.seed);
+    let (legacy, _, out) =
+        reduce_and_train(&data, &cfg.params(), &cfg.reduction(), cfg.seed).unwrap();
+    let report = Engine::from_config(&cfg).unwrap().train(&data).unwrap();
+    assert_models_identical(&report.model, &legacy, "reduction");
+    assert_eq!(report.sample_size, out.kept.len());
+    assert_eq!(out.kept.len(), 120);
+    assert_eq!(report.rows_touched, out.pilot_size + out.kept.len());
+}
+
+/// Every method in `Method::ALL` — now including the two online-
+/// learning entries — round-trips through config text and trains a
+/// sane model via the unified engine facade.
+#[test]
+fn engine_trains_every_method_from_config_text() {
+    for method in Method::ALL {
+        let json = format!(
+            r#"{{"dataset": "banana", "rows": 400, "bandwidth": 0.35,
+                "outlier_fraction": 0.001, "method": "{}",
+                "sample_size": 6, "workers": 2, "seed": 11,
+                "reduction_target": 80}}"#,
+            method.name()
+        );
+        let cfg = RunConfig::from_json_text(&json).unwrap();
+        assert_eq!(cfg.method, method, "config round-trip for {method}");
+        let data = Banana::default().generate(cfg.rows, cfg.seed);
+        let report = Engine::from_config(&cfg).unwrap().train(&data).unwrap();
+        assert_eq!(report.method, method);
+        assert!(
+            report.model.r2() > 0.0 && report.model.num_sv() > 0,
+            "{method}: degenerate model (R^2={}, #SV={})",
+            report.model.r2(),
+            report.model.num_sv()
+        );
+    }
 }
 
 /// Polygon-study pipeline: ground truth from the polygon substrate,
